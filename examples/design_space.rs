@@ -1,0 +1,56 @@
+//! Design-space exploration: the Algorithm-1 ILP swept over DSP budgets,
+//! boards, and the ow_par packing ablation — the tooling a user would run
+//! before committing to a board.
+//!
+//! ```bash
+//! cargo run --release --example design_space [-- model]
+//! ```
+
+use anyhow::Result;
+use resnet_hls::eval::figures::ilp_sweep;
+use resnet_hls::hls::boards::BOARDS;
+use resnet_hls::hls::resources::fit_to_board;
+use resnet_hls::ilp::loads_from_arch;
+use resnet_hls::models::{arch_by_name, build_optimized_graph, default_exps};
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "resnet20".into());
+    let arch = arch_by_name(&model).expect("resnet8 | resnet20");
+
+    println!("== {model}: throughput vs DSP budget (Alg. 1) ==");
+    println!("{:>8} {:>14} {:>10} | {:>14} {:>10}", "budget", "fps/MHz(x2)", "DSPs", "fps/MHz(x1)", "DSPs");
+    let budgets: Vec<u64> = (0..12).map(|i| 72 << i).take_while(|&b| b <= 4096).collect();
+    let packed = ilp_sweep(&model, &budgets, 2);
+    let unpacked = ilp_sweep(&model, &budgets, 1);
+    for (p, u) in packed.iter().zip(&unpacked) {
+        println!(
+            "{:>8} {:>14.4} {:>10} | {:>14.4} {:>10}",
+            p.0, p.1, p.2, u.1, u.2
+        );
+    }
+    println!("(x2 = DSP-packed ow_par=2; x1 = unpacked baseline — Section III-C)");
+
+    println!("\n== {model}: closed designs per board ==");
+    let (act, w) = default_exps(&arch);
+    let g = build_optimized_graph(&arch, &act, &w);
+    let loads = loads_from_arch(&arch, 2);
+    for board in BOARDS {
+        let (alloc, cfg, report) = fit_to_board(&arch.name, &g, &loads, board, 2)?;
+        println!(
+            "{:<8} {:>8.0} FPS  {:>7.0} Gops/s  {:>5} DSP | {}",
+            board.name,
+            cfg.fps(),
+            alloc.gops(board.clock_mhz, arch.total_macs()),
+            alloc.dsps_used,
+            report.utilization(board)
+        );
+    }
+
+    println!("\n== {model}: per-layer allocation on KV260 ==");
+    let (alloc, _, _) = fit_to_board(&arch.name, &g, &loads, &resnet_hls::hls::KV260, 2)?;
+    println!("{:<10} {:>8} {:>8} {:>8} {:>10}", "layer", "och_par", "cp", "DSPs", "cycles");
+    for l in &alloc.layers {
+        println!("{:<10} {:>8} {:>8} {:>8} {:>10}", l.name, l.och_par, l.cp, l.dsps, l.cycles);
+    }
+    Ok(())
+}

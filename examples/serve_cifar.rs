@@ -1,0 +1,69 @@
+//! End-to-end serving driver (DESIGN.md experiment E7).
+//!
+//! Loads the AOT-compiled ResNet8/20, starts the inference coordinator
+//! (dynamic batcher + executor thread), streams a synthetic CIFAR-10 test
+//! set through it at several request patterns, and reports accuracy,
+//! throughput and latency percentiles.  Results are recorded in
+//! EXPERIMENTS.md §E7.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_cifar [-- frames]
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+use resnet_hls::coordinator::{BatcherConfig, InferenceServer};
+use resnet_hls::data::{synth_batch, IMG_ELEMS, TEST_SEED};
+use resnet_hls::paths::artifacts_dir;
+
+fn main() -> Result<()> {
+    let frames: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let (input, labels) = synth_batch(0, frames, TEST_SEED);
+
+    for arch in ["resnet8", "resnet20"] {
+        println!("== serving {arch} ({frames} frames) ==");
+        let server = InferenceServer::start(artifacts_dir(), arch, BatcherConfig::default())?;
+
+        // Pattern A: open-loop burst (throughput-oriented).
+        let t0 = Instant::now();
+        let pending: Vec<_> = (0..frames)
+            .map(|i| server.submit(input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].to_vec()))
+            .collect::<Result<_>>()?;
+        let mut correct = 0usize;
+        for (rx, &label) in pending.iter().zip(&labels) {
+            let resp = rx.recv()??;
+            if resp.class == label as usize {
+                correct += 1;
+            }
+        }
+        let dt = t0.elapsed();
+        println!(
+            "  burst:  {:.0} FPS ({} frames in {:.1} ms), accuracy {:.3}",
+            frames as f64 / dt.as_secs_f64(),
+            frames,
+            dt.as_secs_f64() * 1e3,
+            correct as f64 / frames as f64
+        );
+        println!("  burst metrics: {}", server.metrics.snapshot());
+
+        // Pattern B: closed-loop single-stream (latency-oriented).
+        let probe = frames.min(64);
+        let t0 = Instant::now();
+        let mut lat_us = Vec::with_capacity(probe);
+        for i in 0..probe {
+            let s = Instant::now();
+            let _ = server.infer(input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].to_vec())?;
+            lat_us.push(s.elapsed().as_micros() as u64);
+        }
+        lat_us.sort_unstable();
+        println!(
+            "  single-stream: {:.0} FPS, latency p50 {} us  p90 {} us  max {} us",
+            probe as f64 / t0.elapsed().as_secs_f64(),
+            lat_us[probe / 2],
+            lat_us[probe * 9 / 10],
+            lat_us[probe - 1]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,204 @@
+"""AOT export: lower the quantized ResNets to HLO text + weight blobs.
+
+This is the single build-time Python entry point (`make artifacts`).  It
+emits, under `artifacts/`:
+
+* `<arch>_b<batch>.hlo.txt` — one HLO-text module per model variant with
+  the integer weights baked in as constants.  HLO *text* (not
+  `.serialize()`): the `xla` crate's xla_extension 0.5.1 rejects jax>=0.5
+  serialized protos (64-bit instruction ids); the text parser reassigns
+  ids and round-trips cleanly (see /opt/xla-example/README.md).
+* `weights_<arch>.bin` — flat little-endian weight/bias blob for the Rust
+  golden model (`sim::golden`), layout described in the manifest.
+* `probe_input.bin` / `probe_labels.bin` / `probe_logits_<arch>.bin` — a
+  16-image probe batch and its oracle logits: the cross-language
+  correctness anchor (Rust asserts synthetic-dataset bit-equality, golden
+  bit-equality, and PJRT-execution bit-equality against these).
+* `manifest.json` — ties it all together (shapes, exponents, offsets).
+
+Batch variants are compiled separately (batch baked into the HLO) so the
+Rust dynamic batcher can pick an executable per batch bucket — one
+compiled executable per model variant, as the runtime design requires.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import arch as A
+from . import data as D
+from . import model as M
+from . import params as P
+from .kernels import vmem_footprint_bytes
+
+BATCHES = {"resnet8": (1, 8, 64), "resnet20": (1, 8)}
+PROBE_N = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    `print_large_constants=True` is load-bearing: the default printer
+    elides big literals as `constant({...})`, which silently drops the
+    baked weights from the interchange — the Rust probe-check caught this
+    as a PJRT-vs-oracle mismatch.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The xla crate's 0.5.1-era parser rejects newer metadata attributes
+    # (source_end_line etc.) — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def export_weights(arch: A.ArchSpec, params: dict, w_exps: dict, act_exps: dict, out_dir: str):
+    """Write weights_<arch>.bin and return the manifest tensor records."""
+    producer = P._producer_map(arch)
+    records, blob = [], bytearray()
+    for name in arch.param_names():
+        w = np.asarray(params[name]["w"], dtype=np.int64)
+        b = np.asarray(params[name]["b"], dtype=np.int64)
+        acc_exp = act_exps[producer[name]] + w_exps[name]
+        for kind, arr, dtype in (("w", w, np.int8), ("b", b, np.int16)):
+            data = arr.astype(dtype).tobytes()
+            records.append(
+                {
+                    "name": name,
+                    "kind": kind,
+                    "shape": list(arr.shape),
+                    "exp": w_exps[name] if kind == "w" else acc_exp,
+                    "dtype": "i8" if dtype is np.int8 else "i16",
+                    "offset": len(blob),
+                    "bytes": len(data),
+                }
+            )
+            blob.extend(data)
+    fname = f"weights_{arch.name}.bin"
+    with open(os.path.join(out_dir, fname), "wb") as f:
+        f.write(bytes(blob))
+    return fname, records
+
+
+def export_probe(out_dir: str, archs: dict) -> dict:
+    """Probe batch + oracle logits for every arch."""
+    imgs, labels = D.eval_batch(0, PROBE_N)
+    with open(os.path.join(out_dir, "probe_input.bin"), "wb") as f:
+        f.write(imgs.astype(np.int8).tobytes())
+    with open(os.path.join(out_dir, "probe_labels.bin"), "wb") as f:
+        f.write(labels.astype(np.uint8).tobytes())
+    entry = {
+        "input": "probe_input.bin",
+        "labels": "probe_labels.bin",
+        "count": PROBE_N,
+        "logits": {},
+    }
+    for arch_name, (arch, params, act_exps, w_exps) in archs.items():
+        jp = {k: {"w": jnp.asarray(v["w"]), "b": jnp.asarray(v["b"])} for k, v in params.items()}
+        logits = np.asarray(M.ref_forward(arch, jp, act_exps, w_exps, jnp.asarray(imgs)))
+        fname = f"probe_logits_{arch_name}.bin"
+        with open(os.path.join(out_dir, fname), "wb") as f:
+            f.write(logits.astype("<i4").tobytes())
+        entry["logits"][arch_name] = fname
+    return entry
+
+
+def lower_variant(arch, params, act_exps, w_exps, batch: int) -> str:
+    jp = {k: {"w": jnp.asarray(v["w"]), "b": jnp.asarray(v["b"])} for k, v in params.items()}
+
+    def fn(x):
+        return (M.forward(arch, jp, act_exps, w_exps, x),)
+
+    spec = jax.ShapeDtypeStruct((batch, arch.in_h, arch.in_w, arch.in_c), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def vmem_report(arch: A.ArchSpec) -> list:
+    """L1 perf deliverable: per-conv VMEM footprint of the Pallas BlockSpec
+    schedule (interpret mode gives no wallclock — structure is the metric)."""
+    rows = []
+    for c in arch.conv_layers():
+        fp = vmem_footprint_bytes(c.in_h, c.in_w, c.cin, c.k, c.k, c.cout, pad=c.pad)
+        rows.append({"layer": c.name, **fp})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir (or stamp path inside it)")
+    ap.add_argument("--archs", nargs="*", default=["resnet8", "resnet20"])
+    ap.add_argument("--report", action="store_true", help="print VMEM footprint report only")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    if out_dir.endswith((".txt", ".stamp")):
+        out_dir = os.path.dirname(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    if args.report:
+        for name in args.archs:
+            arch = A.ARCHS[name]()
+            print(f"== {name} VMEM footprints (bytes/grid-step)")
+            for r in vmem_report(arch):
+                print(
+                    f"  {r['layer']:8s} x_slab={r['x_slab']:8d} rolling_min={r['x_rolling_min']:7d} "
+                    f"w={r['weights']:7d} acc={r['acc']:6d} total={r['total']:8d}"
+                )
+        return
+
+    manifest = {"version": 1, "models": [], "archs": {}, "generated_unix": int(time.time())}
+    loaded = {}
+    for name in args.archs:
+        arch = A.ARCHS[name]()
+        params, act_exps, w_exps, source = P.get_params(arch)
+        loaded[name] = (arch, params, act_exps, w_exps)
+        wfile, records = export_weights(arch, params, w_exps, act_exps, out_dir)
+        manifest["archs"][name] = {
+            "act_exps": act_exps,
+            "w_exps": w_exps,
+            "weights_file": wfile,
+            "weights": records,
+            "source": source,
+            "vmem_report": vmem_report(arch),
+        }
+        for batch in BATCHES[name]:
+            t0 = time.time()
+            hlo = lower_variant(arch, params, act_exps, w_exps, batch)
+            fname = f"{name}_b{batch}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            manifest["models"].append(
+                {
+                    "name": f"{name}_b{batch}",
+                    "arch": name,
+                    "batch": batch,
+                    "hlo": fname,
+                    "input_shape": [batch, arch.in_h, arch.in_w, arch.in_c],
+                    "input_exp": act_exps["input"],
+                    "output_shape": [batch, arch.num_classes],
+                }
+            )
+            print(f"lowered {fname}  ({len(hlo)/1e6:.1f} MB, {time.time()-t0:.1f}s)", flush=True)
+
+    manifest["probe"] = export_probe(out_dir, loaded)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # Stamp for make's freshness check.
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write(str(manifest["generated_unix"]))
+    print(f"artifacts written to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

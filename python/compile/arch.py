@@ -1,0 +1,156 @@
+"""Architecture specs for the CIFAR-10 residual networks of the paper.
+
+ResNet20 is the classic CIFAR ResNet of He et al. [9] (3 stages x 3 basic
+blocks, widths 16/32/64); ResNet8 is the MLPerf-Tiny-style variant used by
+the paper's FINN / Vitis-AI comparison [30] (3 stages x 1 block).  Both end
+in an 8x8 global average pool (64 = 2^6, so the divide is a shift) and a
+64->10 classifier.
+
+This module is the *single source of truth* for layer geometry and
+quantization exponents on the Python side; `rust/src/models/resnet.rs`
+builds the same graphs and the JSON manifest emitted by `aot.py` carries
+the per-tensor exponents across, so the two sides can never drift.
+
+Residual blocks are already in their *optimized* form (paper Section III-G,
+Fig. 14): the downsample 1x1 convolution is loop-merged with conv0's input
+(both read the same stream), and the add node is fused into conv1's
+accumulator initialization.  The un-optimized graph only exists in the Rust
+`graph/` IR, where the optimization passes transform it and must arrive at
+exactly these dataflows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# Default power-of-two exponents (overridden by trained checkpoints).
+INPUT_EXP = -7  # input pixels in [-1, 1): q = round(x * 128)
+ACT_EXP = -5  # hidden activations
+WEIGHT_EXP = -8  # weights in (-0.5, 0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One convolution layer (a paper 'computation task')."""
+
+    name: str
+    cin: int
+    cout: int
+    k: int  # filter size (fh = fw = k)
+    stride: int
+    pad: int
+    relu: bool
+    in_h: int
+    in_w: int
+
+    @property
+    def out_h(self) -> int:
+        return (self.in_h + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.in_w + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def macs(self) -> int:
+        """Eq. 8: c_i = oh*ow*och*ich*fh*fw."""
+        return self.out_h * self.out_w * self.cout * self.cin * self.k * self.k
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """A residual block: conv0 -> conv1, skip = identity | downsample."""
+
+    name: str
+    conv0: ConvSpec
+    conv1: ConvSpec
+    downsample: Optional[ConvSpec]  # 1x1 conv on the skip branch, or None
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    stem: ConvSpec
+    blocks: tuple
+    fc_in: int
+    fc_out: int
+    num_classes: int = 10
+    in_h: int = 32
+    in_w: int = 32
+    in_c: int = 3
+
+    def conv_layers(self):
+        """All convolution layers in execution order (for the ILP, Eq. 13)."""
+        out = [self.stem]
+        for b in self.blocks:
+            if b.downsample is not None:
+                out.append(b.downsample)
+            out.append(b.conv0)
+            out.append(b.conv1)
+        return out
+
+    def total_macs(self) -> int:
+        return sum(c.macs for c in self.conv_layers()) + self.fc_in * self.fc_out
+
+    def param_names(self):
+        return [c.name for c in self.conv_layers()] + ["fc"]
+
+
+def _make_blocks(arch: str, stages, blocks_per_stage: int):
+    """Build the residual block list for a CIFAR ResNet."""
+    blocks = []
+    h = w = 32
+    cin = 16
+    for si, cout in enumerate(stages):
+        for bi in range(blocks_per_stage):
+            first = bi == 0
+            stride = 2 if (first and si > 0) else 1
+            bname = f"s{si}b{bi}"
+            conv0 = ConvSpec(
+                name=f"{bname}c0", cin=cin, cout=cout, k=3, stride=stride,
+                pad=1, relu=True, in_h=h, in_w=w,
+            )
+            oh, ow = conv0.out_h, conv0.out_w
+            conv1 = ConvSpec(
+                name=f"{bname}c1", cin=cout, cout=cout, k=3, stride=1,
+                pad=1, relu=True, in_h=oh, in_w=ow,
+            )
+            ds = None
+            if first and si > 0:
+                ds = ConvSpec(
+                    name=f"{bname}ds", cin=cin, cout=cout, k=1, stride=stride,
+                    pad=0, relu=False, in_h=h, in_w=w,
+                )
+            blocks.append(BlockSpec(name=bname, conv0=conv0, conv1=conv1, downsample=ds))
+            cin, h, w = cout, oh, ow
+    return tuple(blocks)
+
+
+def resnet20() -> ArchSpec:
+    stem = ConvSpec("stem", 3, 16, 3, 1, 1, True, 32, 32)
+    return ArchSpec("resnet20", stem, _make_blocks("resnet20", (16, 32, 64), 3), 64, 10)
+
+
+def resnet8() -> ArchSpec:
+    stem = ConvSpec("stem", 3, 16, 3, 1, 1, True, 32, 32)
+    return ArchSpec("resnet8", stem, _make_blocks("resnet8", (16, 32, 64), 1), 64, 10)
+
+
+ARCHS = {"resnet8": resnet8, "resnet20": resnet20}
+
+
+def default_act_exps(arch: ArchSpec) -> dict:
+    """Per-tensor activation exponents: tensor name -> exponent.
+
+    Tensor names: 'input', '<conv name>' for each conv output, 'pool'.
+    Trained checkpoints override this table via the manifest.
+    """
+    exps = {"input": INPUT_EXP, "pool": ACT_EXP}
+    for c in arch.conv_layers():
+        exps[c.name] = ACT_EXP
+    return exps
+
+
+def default_weight_exps(arch: ArchSpec) -> dict:
+    return {n: WEIGHT_EXP for n in arch.param_names()}

@@ -1,0 +1,120 @@
+"""Deterministic synthetic CIFAR-10 (the paper's dataset substitute).
+
+The paper trains/evaluates on CIFAR-10.  That dataset is not available in
+this environment, so we substitute a *bit-exactly reproducible* synthetic
+set with the same geometry (32x32x3 int8 images, 10 classes) — see
+DESIGN.md §Substitutions.  The generator is defined entirely over integer
+arithmetic so that `rust/src/data/cifar.rs` can reproduce the exact same
+bytes (asserted via the probe batch exported by aot.py):
+
+* label(i) = i mod 10
+* class pattern: a class-dependent integer lattice function (conv-learnable
+  structure, not linearly trivial);
+* noise: a 64-bit LCG (MMIX constants) seeded per sample, one step per
+  element in (y, x, ch) depth-last order; amplitude +-24.
+
+pixel(i, y, x, ch) = clip(pattern + noise, -128, 127), int8 @ 2**-7.
+
+If a real CIFAR-10 binary batch (data_batch_*.bin) is placed under
+python/cifar10/ the loaders pick it up instead — the substitution is a
+fallback, not a fork of the code path.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+LCG_A = np.uint64(6364136223846793005)
+LCG_C = np.uint64(1442695040888963407)
+SEED_MIX = np.uint64(2654435761)
+TRAIN_SEED = np.uint64(0x5EED_0001)
+TEST_SEED = np.uint64(0x5EED_0002)
+IMG_ELEMS = 32 * 32 * 3
+
+
+def _pattern(label: int) -> np.ndarray:
+    """Class-dependent base image, shape (32, 32, 3), range [-96, 96]."""
+    c = label
+    y = np.arange(32).reshape(32, 1, 1)
+    x = np.arange(32).reshape(1, 32, 1)
+    ch = np.arange(3).reshape(1, 1, 3)
+    v = (x * (3 + 2 * c) + y * (5 + 3 * c) + ch * (7 + 5 * c) + 11 * c * c) % 97
+    return (v * 2 - 96).astype(np.int32)
+
+
+_JUMP_MULT = None
+_JUMP_ADD = None
+
+
+def _jump_tables():
+    """Vectorized LCG: state_k = A^k * s0 + B_k for k in [0, IMG_ELEMS)."""
+    global _JUMP_MULT, _JUMP_ADD
+    if _JUMP_MULT is None:
+        mult = np.empty(IMG_ELEMS, dtype=np.uint64)
+        add = np.empty(IMG_ELEMS, dtype=np.uint64)
+        m, a = np.uint64(1), np.uint64(0)
+        with np.errstate(over="ignore"):
+            for k in range(IMG_ELEMS):
+                # state after k+1 steps from s0: m*s0 + a
+                m = m * LCG_A
+                a = a * LCG_A + LCG_C
+                mult[k] = m
+                add[k] = a
+        _JUMP_MULT, _JUMP_ADD = mult, add
+    return _JUMP_MULT, _JUMP_ADD
+
+
+def sample(index: int, split_seed: np.uint64):
+    """One synthetic sample: (image int8-valued int32 (32,32,3), label)."""
+    label = index % 10
+    s0 = (np.uint64(index) * SEED_MIX + split_seed).astype(np.uint64)
+    mult, add = _jump_tables()
+    with np.errstate(over="ignore"):
+        states = mult * s0 + add
+    noise = ((states >> np.uint64(33)) & np.uint64(0xFF)).astype(np.int32) % 49 - 24
+    img = _pattern(label) + noise.reshape(32, 32, 3)
+    return np.clip(img, -128, 127), label
+
+
+def batch(start: int, n: int, split: str = "train"):
+    """(images (n,32,32,3) int32, labels (n,) int32)."""
+    seed = TRAIN_SEED if split == "train" else TEST_SEED
+    imgs = np.empty((n, 32, 32, 3), dtype=np.int32)
+    labels = np.empty((n,), dtype=np.int32)
+    for j in range(n):
+        imgs[j], labels[j] = sample(start + j, seed)
+    return imgs, labels
+
+
+def _real_cifar_dir() -> str | None:
+    d = os.path.join(os.path.dirname(__file__), "..", "cifar10")
+    return d if os.path.isdir(d) and any(
+        f.endswith(".bin") for f in os.listdir(d)
+    ) else None
+
+
+def load_real_batch(path: str, n: int | None = None):
+    """CIFAR-10 binary format: per record 1 label byte + 3072 RGB bytes
+    (channel-planar).  Returns NHWC int8-valued int32 @ 2**-7 (x - 128)."""
+    raw = np.fromfile(path, dtype=np.uint8)
+    rec = 3073
+    m = len(raw) // rec
+    if n is not None:
+        m = min(m, n)
+    raw = raw[: m * rec].reshape(m, rec)
+    labels = raw[:, 0].astype(np.int32)
+    imgs = raw[:, 1:].reshape(m, 3, 32, 32).transpose(0, 2, 3, 1).astype(np.int32) - 128
+    return imgs, labels
+
+
+def eval_batch(start: int, n: int):
+    """Test-split batch: real CIFAR-10 if provided, synthetic otherwise."""
+    d = _real_cifar_dir()
+    if d is not None:
+        path = os.path.join(d, "test_batch.bin")
+        if os.path.exists(path):
+            imgs, labels = load_real_batch(path)
+            return imgs[start : start + n], labels[start : start + n]
+    return batch(start, n, split="test")

@@ -1,0 +1,12 @@
+"""L1 kernel library: Pallas compute kernels + pure-jnp oracle.
+
+Import surface used by the L2 model (`compile.model`):
+
+    from compile.kernels import conv2d, linear, maxpool2d, avgpool_global
+"""
+
+from .conv2d import conv2d, vmem_footprint_bytes  # noqa: F401
+from .linear import linear  # noqa: F401
+from .pool import avgpool_global, maxpool2d  # noqa: F401
+from . import quantize  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,304 @@
+"""Pallas int8 convolution kernel — the accelerator's compute hot-spot.
+
+Maps the paper's convolution *computation task* (Section III-C, Fig. 4) to
+a Pallas kernel:
+
+* **Output stationary**: the grid iterates over (batch, output row); each
+  kernel instance owns one full output row's accumulators (OW x COUT in
+  registers/VMEM) and accumulates all ich*fh*fw contributions into them
+  before writing once — exactly the paper's dataflow, where partial sums
+  stay in the PE pipeline and data is written "after all input channels
+  have been processed".
+* **och-parallel**: the dot over (CIN) x (CIN, COUT) computes all output
+  channels of a row position in parallel — the TPU/MXU analogue of the
+  paper's och_par unroll (horizontal PE replication in Fig. 5).
+* **ow-parallel**: one grid step produces a whole OW row, the analogue of
+  ow_par weight reuse (each loaded filter tap multiplies every output
+  column — the DSP-packing insight that one parameter feeds two MACs).
+* **Fused skip initialization**: the optional `skip` operand initializes
+  the accumulator (paper Fig. 13 — the residual add node is deleted and
+  its value becomes the accumulation register's initial state).
+* **Fused ReLU + power-of-two requantization** on the int32 accumulator.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the BlockSpec streams one
+padded input slab per (n, oh) grid step into VMEM; filter weights are
+resident across the whole grid (weight-stationary in VMEM, like the
+paper's on-chip parameter arrays).  `interpret=True` everywhere — the CPU
+PJRT plugin cannot run Mosaic custom-calls; real-TPU viability is assessed
+via the VMEM footprint model in `aot.py --report`.
+
+All payloads are int32 arrays *holding* int8/int16-range values: the
+quantization contract lives in the values, not the dtypes, which keeps the
+HLO interface uniform for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quantize as qz
+
+
+def _conv_kernel(
+    x_ref,
+    w_ref,
+    b_ref,
+    o_ref,
+    *,
+    kh: int,
+    kw: int,
+    stride: int,
+    ow: int,
+    acc_exp: int,
+    out_exp: int,
+    relu: bool,
+):
+    """One output row: acc[ow, cout] = bias + sum_{dy,dx} X[dy,dx] @ W[dy,dx]."""
+    oh_idx = pl.program_id(1)
+    cout = o_ref.shape[-1]
+    acc = jnp.broadcast_to(b_ref[...][None, :], (ow, cout)).astype(jnp.int32)
+    for dy in range(kh):
+        # Input row feeding output row `oh_idx` for filter tap row dy.
+        row = pl.load(
+            x_ref,
+            (pl.dslice(0, 1), pl.dslice(oh_idx * stride + dy, 1), slice(None), slice(None)),
+        )[0, 0]  # (WP, CIN)
+        for dx in range(kw):
+            # ow_par analogue: every output column consumes this tap's
+            # weights simultaneously (weight reuse across the row).
+            slab = jax.lax.slice(row, (dx, 0), (dx + (ow - 1) * stride + 1, row.shape[1]))
+            slab = slab[::stride] if stride > 1 else slab  # (OW, CIN)
+            acc = acc + jax.lax.dot_general(
+                slab,
+                w_ref[dy, dx],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    shifted = qz.round_shift(acc, out_exp - acc_exp)
+    o_ref[0, 0] = qz.clip_int8(shifted).astype(jnp.int32)
+
+
+def _conv_kernel_skip(
+    x_ref,
+    w_ref,
+    b_ref,
+    s_ref,
+    o_ref,
+    *,
+    kh: int,
+    kw: int,
+    stride: int,
+    ow: int,
+    acc_exp: int,
+    out_exp: int,
+    relu: bool,
+    skip_shift: int,
+):
+    """Same as _conv_kernel but the accumulator is initialized with the
+    aligned skip-connection row (paper Fig. 13: add node removed)."""
+    oh_idx = pl.program_id(1)
+    cout = o_ref.shape[-1]
+    acc = jnp.broadcast_to(b_ref[...][None, :], (ow, cout)).astype(jnp.int32)
+    acc = acc + (s_ref[0, 0].astype(jnp.int32) << skip_shift)
+    for dy in range(kh):
+        row = pl.load(
+            x_ref,
+            (pl.dslice(0, 1), pl.dslice(oh_idx * stride + dy, 1), slice(None), slice(None)),
+        )[0, 0]
+        for dx in range(kw):
+            slab = jax.lax.slice(row, (dx, 0), (dx + (ow - 1) * stride + 1, row.shape[1]))
+            slab = slab[::stride] if stride > 1 else slab
+            acc = acc + jax.lax.dot_general(
+                slab,
+                w_ref[dy, dx],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    shifted = qz.round_shift(acc, out_exp - acc_exp)
+    o_ref[0, 0] = qz.clip_int8(shifted).astype(jnp.int32)
+
+
+def _conv_kernel_slab(
+    x_ref,
+    w_ref,
+    b_ref,
+    *refs,  # [skip_ref,] o_ref — outputs follow all inputs in pallas
+    kh: int,
+    kw: int,
+    stride: int,
+    oh: int,
+    ow: int,
+    acc_exp: int,
+    out_exp: int,
+    relu: bool,
+    skip_shift: int = 0,
+):
+    """Grid-free 'slab' schedule — the deployment-optimized variant
+    (EXPERIMENTS.md §Perf L2).
+
+    One straight-line program: per filter tap, a single big dot over
+    (N*OH*OW, CIN) x (CIN, COUT).  The dots run in **f32, which is exact
+    here**: |x*w| <= 128*127 and the contraction length is CIN <= 1024,
+    so every partial sum stays below 2^24 and f32 represents it exactly;
+    the int32 accumulation across taps (and the bias/skip initialization,
+    ReLU, and power-of-two requantization) happen in integer arithmetic,
+    preserving bit-exactness against ref.conv2d_ref while letting XLA CPU
+    use its vectorized SGEMM path (~30x over int32 dots in a grid loop).
+    """
+    (skip_ref, o_ref) = refs if len(refs) == 2 else (None, refs[0])
+    n = o_ref.shape[0]
+    cout = o_ref.shape[-1]
+    cin = x_ref.shape[-1]
+    assert cin * 128 * 127 < (1 << 24), "f32 tap-dot exactness bound"
+    acc = jnp.broadcast_to(b_ref[...][None, None, None, :], (n, oh, ow, cout)).astype(jnp.int32)
+    if skip_ref is not None:
+        acc = acc + (skip_ref[...].astype(jnp.int32) << skip_shift)
+    xv = x_ref[...].astype(jnp.float32)
+    wv = w_ref[...].astype(jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            slab = jax.lax.slice(
+                xv,
+                (0, dy, dx, 0),
+                (n, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1, cin),
+            )
+            slab = slab[:, ::stride, ::stride] if stride > 1 else slab
+            part = jax.lax.dot_general(
+                slab, wv[dy, dx], (((3,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            acc = acc + part.astype(jnp.int32)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    o_ref[...] = qz.clip_int8(qz.round_shift(acc, out_exp - acc_exp)).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "pad", "acc_exp", "out_exp", "relu", "skip_exp", "schedule"),
+)
+def conv2d(
+    x: jnp.ndarray,  # (N, H, W, CIN) int8-valued int32
+    w: jnp.ndarray,  # (KH, KW, CIN, COUT)
+    bias: jnp.ndarray,  # (COUT,) int16-valued int32, at acc exponent
+    stride: int = 1,
+    pad: int = 1,
+    acc_exp: int = -14,
+    out_exp: int = -7,
+    relu: bool = True,
+    skip: jnp.ndarray | None = None,  # (N, OH, OW, COUT) int8-valued
+    skip_exp: int = 0,
+    schedule: str = "slab",
+):
+    """Fused quantized convolution via pallas_call (interpret mode).
+
+    Two schedules, both bit-exact against `ref.conv2d_ref` (asserted by
+    pytest and, through the exported HLO, by the Rust golden-vs-PJRT
+    integration test):
+
+    * ``"slab"`` (default, deployed): grid-free straight-line program with
+      exact f32 tap-dots — the CPU-PJRT-optimized form (§Perf L2);
+    * ``"rows"``: grid over (batch, output row) with a BlockSpec-windowed
+      input slab — the TPU-structured form whose VMEM footprint
+      `vmem_footprint_bytes` models (one output row resident per step).
+    """
+    n, h, wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wd + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    hp, wp = h + 2 * pad, wd + 2 * pad
+
+    if schedule == "slab":
+        out_shape = jax.ShapeDtypeStruct((n, oh, ow, cout), jnp.int32)
+        kw_args = dict(
+            kh=kh, kw=kw, stride=stride, oh=oh, ow=ow,
+            acc_exp=acc_exp, out_exp=out_exp, relu=relu,
+        )
+        if skip is None:
+            kernel = functools.partial(_conv_kernel_slab, **kw_args)
+            return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(xp, w, bias)
+        skip_shift = skip_exp - acc_exp
+        assert skip_shift >= 0, "skip exponent must sit above the accumulator"
+        kernel = functools.partial(_conv_kernel_slab, skip_shift=skip_shift, **kw_args)
+        return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(xp, w, bias, skip)
+
+    assert schedule == "rows", f"unknown schedule {schedule}"
+    grid = (n, oh)
+    x_spec = pl.BlockSpec((1, hp, wp, cin), lambda b, i: (b, 0, 0, 0))
+    w_spec = pl.BlockSpec((kh, kw, cin, cout), lambda b, i: (0, 0, 0, 0))
+    b_spec = pl.BlockSpec((cout,), lambda b, i: (0,))
+    o_spec = pl.BlockSpec((1, 1, ow, cout), lambda b, i: (b, i, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((n, oh, ow, cout), jnp.int32)
+
+    if skip is None:
+        kernel = functools.partial(
+            _conv_kernel,
+            kh=kh,
+            kw=kw,
+            stride=stride,
+            ow=ow,
+            acc_exp=acc_exp,
+            out_exp=out_exp,
+            relu=relu,
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[x_spec, w_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(xp, w, bias)
+
+    skip_shift = skip_exp - acc_exp
+    assert skip_shift >= 0, "skip exponent must sit above the accumulator"
+    s_spec = pl.BlockSpec((1, 1, ow, cout), lambda b, i: (b, i, 0, 0))
+    kernel = functools.partial(
+        _conv_kernel_skip,
+        kh=kh,
+        kw=kw,
+        stride=stride,
+        ow=ow,
+        acc_exp=acc_exp,
+        out_exp=out_exp,
+        relu=relu,
+        skip_shift=skip_shift,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, w_spec, b_spec, s_spec],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        interpret=True,
+    )(xp, w, bias, skip)
+
+
+def vmem_footprint_bytes(h, w, cin, kh, kw, cout, pad=1, elem_bytes=4) -> dict:
+    """Static VMEM footprint estimate for one grid step (DESIGN.md L1 perf).
+
+    The paper sizes line buffers by Eq. 16; on TPU the analogous constraint
+    is the per-step VMEM residency of the BlockSpec slabs.
+    """
+    hp, wp = h + 2 * pad, w + 2 * pad
+    ow = wp - kw + 1
+    x_bytes = hp * wp * cin * elem_bytes  # full padded slab (current spec)
+    x_rows_bytes = kh * wp * cin * elem_bytes  # minimal rolling window
+    w_bytes = kh * kw * cin * cout * elem_bytes
+    acc_bytes = ow * cout * 4
+    return {
+        "x_slab": x_bytes,
+        "x_rolling_min": x_rows_bytes,
+        "weights": w_bytes,
+        "acc": acc_bytes,
+        "total": x_bytes + w_bytes + acc_bytes,
+        "total_rolling": x_rows_bytes + w_bytes + acc_bytes,
+    }

@@ -1,0 +1,40 @@
+"""Pallas fully-connected (linear) kernel — the classifier head.
+
+Returns raw int32 logits (argmax is scale invariant; the hardware also
+skips the final requantization, see ref.linear_ref).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref):
+    acc = jax.lax.dot_general(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] = acc + b_ref[...][None, :]
+
+
+@jax.jit
+def linear(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """(N, CIN) x (CIN, COUT) + bias -> int32 logits."""
+    n, cin = x.shape
+    cin_w, cout = w.shape
+    assert cin == cin_w
+    return pl.pallas_call(
+        _linear_kernel,
+        in_specs=[
+            pl.BlockSpec((n, cin), lambda: (0, 0)),
+            pl.BlockSpec((cin, cout), lambda: (0, 0)),
+            pl.BlockSpec((cout,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, cout), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, cout), jnp.int32),
+        interpret=True,
+    )(x, w, bias)

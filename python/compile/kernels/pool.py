@@ -1,0 +1,67 @@
+"""Pallas pooling kernels (the paper's pooling *computation tasks*).
+
+The CIFAR ResNets only need the global average pool before the classifier,
+but the layer library (Section V lists max/average pooling as supported
+operations) ships both, mirroring the templated C++ process library.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quantize as qz
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k: int, stride: int, oh: int, ow: int):
+    x = x_ref[0]  # (H, W, C)
+    c = x.shape[-1]
+    out = jnp.full((oh, ow, c), -(2**31), dtype=jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            slab = x[dy : dy + (oh - 1) * stride + 1 : stride,
+                     dx : dx + (ow - 1) * stride + 1 : stride, :]
+            out = jnp.maximum(out, slab.astype(jnp.int32))
+    o_ref[0] = out
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride"))
+def maxpool2d(x: jnp.ndarray, k: int = 2, stride: int = 2) -> jnp.ndarray:
+    """Max pool over int8-valued activations. Exponent passes through."""
+    n, h, w, c = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, k=k, stride=stride, oh=oh, ow=ow),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda b: (b, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow, c), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, c), jnp.int32),
+        interpret=True,
+    )(x)
+
+
+def _avgpool_kernel(x_ref, o_ref, *, shift: int):
+    x = x_ref[0]  # (H, W, C)
+    acc = jnp.sum(x.astype(jnp.int32), axis=(0, 1))
+    o_ref[0] = qz.clip_int8(qz.round_shift(acc, shift)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("in_exp", "out_exp"))
+def avgpool_global(x: jnp.ndarray, in_exp: int, out_exp: int) -> jnp.ndarray:
+    """Global average pool; power-of-two window so the divide is a shift."""
+    n, h, w, c = x.shape
+    hw = h * w
+    assert hw & (hw - 1) == 0, "global pool window must be a power of two"
+    shift = out_exp - in_exp + (hw.bit_length() - 1)
+    return pl.pallas_call(
+        functools.partial(_avgpool_kernel, shift=shift),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda b: (b, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.int32),
+        interpret=True,
+    )(x)

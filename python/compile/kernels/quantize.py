@@ -1,0 +1,129 @@
+"""Power-of-two quantization primitives (paper Eqs. 1-3).
+
+The paper quantizes weights/activations to int8, biases to int16, and
+accumulates in int32, with *power-of-two scaling factors* so that every
+scale alignment is a bit shift (Section III-A).  This module is the single
+source of truth for that arithmetic on the Python side; `rust/src/quant/`
+mirrors it bit-exactly (same floor/arithmetic-shift semantics), which is
+what lets `cargo test` assert Rust-golden == PJRT-executed-HLO equality.
+
+Conventions
+-----------
+A quantized tensor is an integer array ``q`` plus an integer exponent ``e``
+such that the represented real value is ``q * 2**e`` (``e`` is usually
+negative).  This matches the paper's ``a = clip(round(b * 2^{bw-s})) * 2^s``
+with ``e = s - bw`` folded into a single signed exponent.
+
+All rounding in the requantization path is *round-half-up in the shifted
+domain*: ``floor((acc + 2^(k-1)) / 2^k)`` for a right shift by ``k > 0``.
+Arithmetic (sign-preserving) shifts everywhere; int32 ``>>`` in numpy/jax
+and Rust both implement floor division by a power of two, so the two
+implementations agree on negative values too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MIN, INT8_MAX = -128, 127
+INT16_MIN, INT16_MAX = -(2**15), 2**15 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """An integer tensor with a power-of-two scale: real = q * 2**exp."""
+
+    q: jnp.ndarray  # int8 / int16 / int32 payload
+    exp: int  # power-of-two exponent of the scale
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def dequantize(self) -> jnp.ndarray:
+        return self.q.astype(jnp.float32) * np.float32(2.0**self.exp)
+
+
+def pow2_exponent(max_abs: float, bits: int = 8) -> int:
+    """Smallest power-of-two exponent e with max_abs <= (2^(bits-1)-1) * 2^e.
+
+    This is how both the QAT calibrator and the export path pick scales:
+    the tightest power-of-two scale that covers the observed dynamic range
+    (paper Section III-A: "scaling factors are set to powers of two").
+    """
+    limit = float(2 ** (bits - 1) - 1)
+    if max_abs <= 0.0 or not np.isfinite(max_abs):
+        return -(bits - 1)
+    return int(np.ceil(np.log2(max_abs / limit)))
+
+
+def quantize_pow2(x: jnp.ndarray, exp: int, bits: int = 8) -> jnp.ndarray:
+    """Quantize float -> int with scale 2**exp (paper Eq. 1, zero-point 0).
+
+    round-half-away-from-zero like torch.round? No: we use round-half-even
+    via jnp.round for float->int conversion (training-time only); the
+    *integer* requantization path (round_shift) is the one that must match
+    Rust bit-exactly, and it does.
+    """
+    lo = -(2 ** (bits - 1))
+    hi = 2 ** (bits - 1) - 1
+    scaled = jnp.round(x * np.float32(2.0**-exp))
+    return jnp.clip(scaled, lo, hi).astype(jnp.int32)
+
+
+def fake_quant(x: jnp.ndarray, exp: int, bits: int = 8) -> jnp.ndarray:
+    """Straight-through fake quantization for QAT (train.py)."""
+    import jax
+
+    q = quantize_pow2(x, exp, bits).astype(jnp.float32) * np.float32(2.0**exp)
+    # STE: forward quantized value, gradient of identity.
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def round_shift(acc, shift: int):
+    """Requantize an int32 accumulator by an arithmetic shift.
+
+    shift > 0: right shift with round-half-up  floor((acc + 2^(s-1)) / 2^s)
+    shift <= 0: exact left shift.
+
+    Must stay bit-identical to rust `quant::round_shift`.
+    Works on jnp or np int32 arrays.
+    """
+    if shift <= 0:
+        return acc << (-shift)
+    half = 1 << (shift - 1)
+    return (acc + half) >> shift
+
+
+def clip_int8(x):
+    return jnp.clip(x, INT8_MIN, INT8_MAX)
+
+
+def requantize(acc, acc_exp: int, out_exp: int, relu: bool):
+    """int32 accumulator @ 2**acc_exp  ->  int8 @ 2**out_exp.
+
+    ReLU (when fused, Section III-A: ReLU merged into conv) is applied on
+    the accumulator *before* the shift, exactly as the generated HLS code
+    does it on the 32-bit register.
+    """
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    shifted = round_shift(acc, out_exp - acc_exp)
+    return clip_int8(shifted).astype(jnp.int32)
+
+
+def align_skip(skip_q, skip_exp: int, acc_exp: int):
+    """Align a skip-connection int8 tensor to the accumulator exponent.
+
+    Paper Fig. 13: the residual add is optimized away by initializing the
+    accumulation register of the long branch's second convolution with the
+    skip value.  The skip exponent is >= the accumulator exponent (the
+    accumulator sits at e_x + e_w, far below activation scales), so this is
+    an exact left shift in int32.
+    """
+    shift = skip_exp - acc_exp
+    assert shift >= 0, f"skip exp {skip_exp} below acc exp {acc_exp}"
+    return skip_q.astype(jnp.int32) << shift

@@ -1,0 +1,119 @@
+"""Pure-jnp oracle for every L1 kernel.
+
+This is the correctness contract: the Pallas kernels in this package and
+the Rust golden model (`rust/src/sim/golden.rs`) must both reproduce these
+functions *bit-exactly* on integer inputs.  Everything is plain jnp int32
+arithmetic — no pallas, no lax.conv — so it doubles as readable
+documentation of the accelerator's numerics.
+
+Layout conventions (match the accelerator's depth-first streaming order,
+paper Section III-F): activations are NHWC, weights are (KH, KW, CIN, COUT).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import quantize as qz
+
+
+def conv2d_int_ref(
+    x: jnp.ndarray,  # (N, H, W, CIN) int32-valued int8 data
+    w: jnp.ndarray,  # (KH, KW, CIN, COUT)
+    bias: jnp.ndarray,  # (COUT,) int32-valued int16 data, at acc exponent
+    stride: int,
+    pad: int,
+) -> jnp.ndarray:
+    """Integer convolution, int32 accumulation. Returns raw accumulators.
+
+    Output-stationary like the paper's compute pipeline (Fig. 4): each
+    output element accumulates och*ich*fh*fw products (Eq. 4) plus the
+    bias, which initializes the accumulator (first pipeline stage input).
+    """
+    n, h, wd, cin = x.shape
+    kh, kw, cin_w, cout = w.shape
+    assert cin == cin_w, (cin, cin_w)
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wd + 2 * pad - kw) // stride + 1
+    acc = jnp.broadcast_to(
+        bias.astype(jnp.int32)[None, None, None, :], (n, oh, ow, cout)
+    )
+    x32 = xp.astype(jnp.int32)
+    w32 = w.astype(jnp.int32)
+    for dy in range(kh):
+        for dx in range(kw):
+            # Strided slab covering every output position for this tap.
+            slab = x32[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride, :]
+            acc = acc + jnp.einsum(
+                "nhwc,co->nhwo", slab, w32[dy, dx], preferred_element_type=jnp.int32
+            )
+    return acc
+
+
+def conv2d_ref(
+    x,
+    w,
+    bias,
+    stride: int,
+    pad: int,
+    acc_exp: int,
+    out_exp: int,
+    relu: bool,
+    skip=None,
+    skip_exp: int = 0,
+):
+    """Full fused conv: accumulate + optional skip-init + ReLU + requantize.
+
+    `skip` is the paper's Fig. 13 optimization: instead of a separate add
+    node, the skip tensor (int8 @ 2**skip_exp) initializes the accumulator.
+    """
+    acc = conv2d_int_ref(x, w, bias, stride, pad)
+    if skip is not None:
+        acc = acc + qz.align_skip(skip, skip_exp, acc_exp)
+    return qz.requantize(acc, acc_exp, out_exp, relu)
+
+
+def maxpool2d_ref(x: jnp.ndarray, k: int, stride: int) -> jnp.ndarray:
+    """Max pooling on int8 data (returns same dtype/exponent)."""
+    n, h, w, c = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    out = jnp.full((n, oh, ow, c), -(2**31), dtype=jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            slab = x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride, :]
+            out = jnp.maximum(out, slab.astype(jnp.int32))
+    return out
+
+
+def avgpool_global_ref(x: jnp.ndarray, in_exp: int, out_exp: int) -> jnp.ndarray:
+    """Global average pool with power-of-two divisor handling.
+
+    CIFAR ResNets end with an 8x8 global average pool; 64 = 2^6 so the
+    divide is folded into the requantization shift (exact, hardware
+    friendly — the paper's pooling task does the same).
+    """
+    n, h, w, c = x.shape
+    hw = h * w
+    assert hw & (hw - 1) == 0, "global pool window must be a power of two"
+    log_hw = hw.bit_length() - 1
+    acc = jnp.sum(x.astype(jnp.int32), axis=(1, 2))
+    # sum @ 2**in_exp ; real avg = sum * 2**(in_exp - log_hw)
+    shifted = qz.round_shift(acc, out_exp - in_exp + log_hw)
+    return qz.clip_int8(shifted).astype(jnp.int32)
+
+
+def linear_ref(
+    x: jnp.ndarray,  # (N, CIN)
+    w: jnp.ndarray,  # (CIN, COUT)
+    bias: jnp.ndarray,  # (COUT,) at acc exponent
+) -> jnp.ndarray:
+    """Fully connected layer; returns raw int32 accumulators (logits).
+
+    The classifier head's outputs are consumed as int32 logits — argmax is
+    scale-invariant so no requantization is needed (and the hardware skips
+    it too).
+    """
+    acc = x.astype(jnp.int32) @ w.astype(jnp.int32) + bias.astype(jnp.int32)[None, :]
+    return acc

@@ -1,0 +1,141 @@
+"""Parameter containers: deterministic init, checkpoint save/load, and
+conversion from float QAT checkpoints to the integer inference format.
+
+Integer param dict layout (consumed by model.forward and exported by
+aot.py):
+
+    params[name] = {"w": int32 array (int8-valued), "b": int32 (int16-valued)}
+
+with conv weights shaped (KH, KW, CIN, COUT) and fc weights (CIN, COUT).
+Biases are stored *at the accumulator exponent* (in_exp + w_exp), which is
+how the hardware consumes them (bias initializes the 32-bit accumulator,
+paper Section III-C) — int16 range per the paper's bias quantization.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from . import arch as A
+from .kernels import quantize as qz
+
+CHECKPOINT_DIR = os.path.join(os.path.dirname(__file__), "..", "checkpoints")
+
+
+def _conv_shape(arch: A.ArchSpec, name: str):
+    for c in arch.conv_layers():
+        if c.name == name:
+            return (c.k, c.k, c.cin, c.cout)
+    if name == "fc":
+        return (arch.fc_in, arch.fc_out)
+    raise KeyError(name)
+
+
+def random_int_params(arch: A.ArchSpec, seed: int = 1234):
+    """Deterministic random int8 weights (used when no checkpoint exists).
+
+    He-style scale: std ~ sqrt(2 / fan_in) mapped into the int8 grid at the
+    default weight exponent, so activations neither explode nor die and the
+    artifact path is numerically representative even untrained.
+    """
+    w_exps = A.default_weight_exps(arch)
+    act_exps = A.default_act_exps(arch)
+    params = {}
+    rng = np.random.default_rng(seed)
+    for c in arch.conv_layers():
+        fan_in = c.k * c.k * c.cin
+        std_real = np.sqrt(2.0 / fan_in)
+        std_q = std_real / 2.0 ** w_exps[c.name]
+        w = np.clip(np.round(rng.normal(0.0, std_q, (c.k, c.k, c.cin, c.cout))), -127, 127)
+        b = np.zeros((c.cout,), dtype=np.int64)
+        params[c.name] = {"w": w.astype(np.int32), "b": b.astype(np.int32)}
+    fan_in = arch.fc_in
+    std_q = np.sqrt(2.0 / fan_in) / 2.0 ** w_exps["fc"]
+    w = np.clip(np.round(rng.normal(0.0, std_q, (arch.fc_in, arch.fc_out))), -127, 127)
+    params["fc"] = {
+        "w": w.astype(np.int32),
+        "b": np.zeros((arch.fc_out,), dtype=np.int32),
+    }
+    return params, act_exps, w_exps
+
+
+def quantize_checkpoint(arch: A.ArchSpec, float_params: dict, act_exps: dict):
+    """float QAT checkpoint -> integer params + weight exponents.
+
+    Per-layer weight exponent = tightest power of two covering max|w|
+    (Section III-A); bias is quantized to int16 at the accumulator
+    exponent acc = in_exp + w_exp.
+    """
+    int_params, w_exps = {}, {}
+    producer_of = _producer_map(arch)
+    for name, p in float_params.items():
+        w = np.asarray(p["w"], dtype=np.float64)
+        e_w = qz.pow2_exponent(float(np.abs(w).max()), bits=8)
+        q_w = np.clip(np.round(w / 2.0**e_w), -127, 127).astype(np.int32)
+        in_exp = act_exps[producer_of[name]]
+        acc_exp = in_exp + e_w
+        b = np.asarray(p["b"], dtype=np.float64)
+        q_b = np.clip(np.round(b / 2.0**acc_exp), qz.INT16_MIN, qz.INT16_MAX).astype(np.int32)
+        int_params[name] = {"w": q_w, "b": q_b}
+        w_exps[name] = e_w
+    return int_params, w_exps
+
+
+def _producer_map(arch: A.ArchSpec) -> dict:
+    """conv/fc name -> name of the tensor it reads (for exponent lookup)."""
+    producer = {"stem": "input"}
+    prev = "stem"
+    for blk in arch.blocks:
+        if blk.downsample is not None:
+            producer[blk.downsample.name] = prev
+        producer[blk.conv0.name] = prev
+        producer[blk.conv1.name] = blk.conv0.name
+        prev = blk.conv1.name
+    producer["fc"] = "pool"
+    return producer
+
+
+def checkpoint_path(arch_name: str) -> str:
+    return os.path.join(CHECKPOINT_DIR, f"{arch_name}_qat.npz")
+
+
+def save_checkpoint(arch_name: str, int_params: dict, act_exps: dict, w_exps: dict, meta: dict):
+    os.makedirs(CHECKPOINT_DIR, exist_ok=True)
+    arrays = {}
+    for name, p in int_params.items():
+        arrays[f"{name}.w"] = p["w"]
+        arrays[f"{name}.b"] = p["b"]
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps({"act_exps": act_exps, "w_exps": w_exps, **meta}).encode(), dtype=np.uint8
+    )
+    np.savez(checkpoint_path(arch_name), **arrays)
+
+
+def load_checkpoint(arch: A.ArchSpec):
+    """Returns (int_params, act_exps, w_exps, meta) or None if absent."""
+    path = checkpoint_path(arch.name)
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    meta = json.loads(bytes(z["__meta__"]).decode())
+    params = {}
+    for name in arch.param_names():
+        params[name] = {"w": z[f"{name}.w"].astype(np.int32), "b": z[f"{name}.b"].astype(np.int32)}
+    act_exps = {k: int(v) for k, v in meta.pop("act_exps").items()}
+    w_exps = {k: int(v) for k, v in meta.pop("w_exps").items()}
+    return params, act_exps, w_exps, meta
+
+
+def get_params(arch: A.ArchSpec, allow_random: bool = True):
+    """Checkpoint if trained, deterministic random otherwise."""
+    ckpt = load_checkpoint(arch)
+    if ckpt is not None:
+        p, a, w, _ = ckpt
+        return p, a, w, "checkpoint"
+    if not allow_random:
+        raise FileNotFoundError(f"no checkpoint for {arch.name}")
+    p, a, w = random_int_params(arch)
+    return p, a, w, "random"

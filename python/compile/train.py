@@ -1,0 +1,334 @@
+"""Quantization-aware training (the paper's Brevitas flow, in JAX).
+
+Two-phase recipe, exactly as Section III-A describes:
+
+1. **Float + BatchNorm** — train the residual network with per-channel
+   BN (batch statistics + running averages), SGD momentum, cosine LR.
+2. **Fold + QAT fine-tune** — fold the BN scale/shift into the conv
+   weights/biases ("the batch normalization layers are merged with the
+   quantized convolution layers"), calibrate power-of-two exponents from
+   running maxima, then fine-tune with fake quantization (straight-through
+   estimator) "to calibrate and tune the quantization parameters".
+
+The final integer checkpoint feeds aot.py (HLO export), the Rust golden
+model, and the dataflow simulator's accuracy claims.
+
+Usage:  python -m compile.train --arch resnet8 --steps 400
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import arch as A
+from . import data as D
+from . import model as M
+from . import params as P
+from .kernels import quantize as qz
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ----------------------------------------------------------- float model
+
+
+def _conv_f(x, w, stride, pad):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def init_params(arch: A.ArchSpec, seed: int = 0):
+    """Float parameters: conv weights + BN (gamma, beta) per conv."""
+    rng = np.random.default_rng(seed)
+    fp = {}
+    for c in arch.conv_layers():
+        fan_in = c.k * c.k * c.cin
+        fp[c.name] = {
+            "w": jnp.asarray(rng.normal(0, np.sqrt(2.0 / fan_in), (c.k, c.k, c.cin, c.cout)), jnp.float32),
+            "gamma": jnp.ones((c.cout,), jnp.float32),
+            "beta": jnp.zeros((c.cout,), jnp.float32),
+        }
+    fp["fc"] = {
+        "w": jnp.asarray(rng.normal(0, np.sqrt(1.0 / arch.fc_in), (arch.fc_in, arch.fc_out)), jnp.float32),
+        "b": jnp.zeros((arch.fc_out,), jnp.float32),
+    }
+    return fp
+
+
+def init_bn_state(arch: A.ArchSpec):
+    return {
+        c.name: {"mean": jnp.zeros((c.cout,), jnp.float32), "var": jnp.ones((c.cout,), jnp.float32)}
+        for c in arch.conv_layers()
+    }
+
+
+def float_forward(arch, fp, bn_state, x, train: bool):
+    """Float forward with BN; returns (logits, new_bn_state)."""
+    new_state = {}
+
+    def spec(name):
+        return next(c for c in arch.conv_layers() if c.name == name)
+
+    def conv_bn(name, t, relu, skip=None):
+        s = spec(name)
+        y = _conv_f(t, fp[name]["w"], s.stride, s.pad)
+        if train:
+            mean = jnp.mean(y, axis=(0, 1, 2))
+            var = jnp.var(y, axis=(0, 1, 2))
+            new_state[name] = {
+                "mean": BN_MOMENTUM * bn_state[name]["mean"] + (1 - BN_MOMENTUM) * mean,
+                "var": BN_MOMENTUM * bn_state[name]["var"] + (1 - BN_MOMENTUM) * var,
+            }
+        else:
+            mean, var = bn_state[name]["mean"], bn_state[name]["var"]
+            new_state[name] = bn_state[name]
+        y = (y - mean) / jnp.sqrt(var + BN_EPS) * fp[name]["gamma"] + fp[name]["beta"]
+        if skip is not None:
+            y = y + skip
+        return jax.nn.relu(y) if relu else y
+
+    a = conv_bn("stem", x, relu=True)
+    for blk in arch.blocks:
+        xin = a
+        skip = conv_bn(blk.downsample.name, xin, relu=False) if blk.downsample else xin
+        h = conv_bn(blk.conv0.name, xin, relu=True)
+        a = conv_bn(blk.conv1.name, h, relu=True, skip=skip)
+    pooled = jnp.mean(a, axis=(1, 2))
+    return pooled @ fp["fc"]["w"] + fp["fc"]["b"][None, :], new_state
+
+
+# ----------------------------------------------------- fold + fake-quant
+
+
+def fold_bn(arch, fp, bn_state):
+    """BN fold (paper Sec. III-A / [35]): W' = W*g/std, b' = beta - mean*g/std."""
+    folded = {}
+    for c in arch.conv_layers():
+        p = fp[c.name]
+        std = jnp.sqrt(bn_state[c.name]["var"] + BN_EPS)
+        scale = p["gamma"] / std
+        folded[c.name] = {
+            "w": p["w"] * scale[None, None, None, :],
+            "b": p["beta"] - bn_state[c.name]["mean"] * scale,
+        }
+    folded["fc"] = {"w": fp["fc"]["w"], "b": fp["fc"]["b"]}
+    return folded
+
+
+def qat_forward(arch, fp, act_exps, w_exps, x):
+    """Fake-quantized folded forward, mirroring the integer dataflow."""
+
+    def spec(name):
+        return next(c for c in arch.conv_layers() if c.name == name)
+
+    def conv(name, t, relu, skip=None):
+        s = spec(name)
+        w = qz.fake_quant(fp[name]["w"], w_exps[name], bits=8)
+        y = _conv_f(t, w, s.stride, s.pad) + fp[name]["b"][None, None, None, :]
+        if skip is not None:
+            y = y + skip
+        if relu:
+            y = jax.nn.relu(y)
+        return qz.fake_quant(y, act_exps[name], bits=8)
+
+    a = conv("stem", qz.fake_quant(x, act_exps["input"], bits=8), relu=True)
+    for blk in arch.blocks:
+        xin = a
+        skip = conv(blk.downsample.name, xin, relu=False) if blk.downsample else xin
+        h = conv(blk.conv0.name, xin, relu=True)
+        a = conv(blk.conv1.name, h, relu=True, skip=skip)
+    pooled = qz.fake_quant(jnp.mean(a, axis=(1, 2)), act_exps["pool"], bits=8)
+    w = qz.fake_quant(fp["fc"]["w"], w_exps["fc"], bits=8)
+    return pooled @ w + fp["fc"]["b"][None, :]
+
+
+def calibrate(arch, folded, x):
+    """Per-tensor maxima of the folded float graph -> pow2 exponents."""
+    maxima = {"input": 1.0, "pool": 0.0}
+
+    def spec(name):
+        return next(c for c in arch.conv_layers() if c.name == name)
+
+    def conv(name, t, relu, skip=None):
+        s = spec(name)
+        y = _conv_f(t, folded[name]["w"], s.stride, s.pad) + folded[name]["b"][None, None, None, :]
+        if skip is not None:
+            y = y + skip
+        if relu:
+            y = jax.nn.relu(y)
+        maxima[name] = float(jnp.abs(y).max())
+        return y
+
+    a = conv("stem", x, relu=True)
+    for blk in arch.blocks:
+        xin = a
+        skip = conv(blk.downsample.name, xin, relu=False) if blk.downsample else xin
+        h = conv(blk.conv0.name, xin, relu=True)
+        a = conv(blk.conv1.name, h, relu=True, skip=skip)
+    maxima["pool"] = float(jnp.abs(jnp.mean(a, axis=(1, 2))).max())
+
+    act_exps = {k: qz.pow2_exponent(v, bits=8) for k, v in maxima.items()}
+    act_exps["input"] = A.INPUT_EXP
+    w_exps = {
+        n: qz.pow2_exponent(float(jnp.abs(folded[n]["w"]).max()), bits=8)
+        for n in arch.param_names()
+    }
+    return act_exps, w_exps
+
+
+# ----------------------------------------------------------------- train
+
+
+def _sgd_step(loss_fn):
+    @jax.jit
+    def step(fp, mom, x, y, lr):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(fp, x, y)
+        # Global-norm gradient clipping keeps the norm-free fine-tune stable.
+        gnorm = jnp.sqrt(sum(jnp.sum(g**2) for g in jax.tree.leaves(grads)) + 1e-12)
+        clip = jnp.minimum(1.0, 5.0 / gnorm)
+        mom = jax.tree.map(lambda m, g: 0.9 * m + g * clip, mom, grads)
+        fp = jax.tree.map(lambda p, m: p - lr * m, fp, mom)
+        return fp, mom, loss, aux
+
+    return step
+
+
+def train(arch_name: str, steps: int, batch: int, lr0: float, qat_frac: float = 0.3):
+    arch = A.ARCHS[arch_name]()
+    t0 = time.time()
+    fp = init_params(arch)
+    bn_state = init_bn_state(arch)
+    history = []
+
+    # ---- Phase 1: float + BN -------------------------------------------
+    phase1 = max(1, int(steps * (1.0 - qat_frac)))
+
+    def loss1(params, x, y):
+        logits, new_state = float_forward(arch, params, bn_state, x, train=True)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+        acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return loss, (acc, new_state)
+
+    step1 = _sgd_step(loss1)
+    mom = jax.tree.map(jnp.zeros_like, fp)
+    for i in range(phase1):
+        imgs, labels = D.batch(i * batch, batch)
+        x = jnp.asarray(imgs, jnp.float32) * np.float32(2.0**A.INPUT_EXP)
+        y = jnp.asarray(labels)
+        lr = lr0 * 0.5 * (1.0 + np.cos(np.pi * i / phase1))
+        fp, mom, loss, (acc, new_state) = step1(fp, mom, x, y, jnp.float32(lr))
+        bn_state = jax.tree.map(lambda v: v, new_state)
+        if i % 25 == 0 or i == phase1 - 1:
+            print(f"[float] step {i:4d}  loss {float(loss):.4f}  acc {float(acc):.3f}", flush=True)
+            history.append({"phase": "float", "step": i, "loss": float(loss), "acc": float(acc)})
+
+    # ---- Fold BN + calibrate -------------------------------------------
+    folded = fold_bn(arch, fp, bn_state)
+    imgs, _ = D.batch(0, batch)
+    x0 = jnp.asarray(imgs, jnp.float32) * np.float32(2.0**A.INPUT_EXP)
+    act_exps, w_exps = calibrate(arch, folded, x0)
+    print(f"folded BN; act exps: {sorted(set(act_exps.values()))}")
+
+    # ---- Phase 2: QAT fine-tune ----------------------------------------
+    phase2 = steps - phase1
+
+    def loss2(params, x, y):
+        logits = qat_forward(arch, params, act_exps, w_exps, x)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+        acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return loss, acc
+
+    step2 = _sgd_step(loss2)
+    mom = jax.tree.map(jnp.zeros_like, folded)
+    lr_q = lr0 * 0.05
+    for i in range(phase2):
+        imgs, labels = D.batch((phase1 + i) * batch, batch)
+        x = jnp.asarray(imgs, jnp.float32) * np.float32(2.0**A.INPUT_EXP)
+        y = jnp.asarray(labels)
+        lr = lr_q * 0.5 * (1.0 + np.cos(np.pi * i / max(1, phase2)))
+        folded, mom, loss, acc = step2(folded, mom, x, y, jnp.float32(lr))
+        if i % 25 == 0 or i == phase2 - 1:
+            print(f"[qat]   step {i:4d}  loss {float(loss):.4f}  acc {float(acc):.3f}", flush=True)
+            history.append({"phase": "qat", "step": i, "loss": float(loss), "acc": float(acc)})
+
+    # ---- Export integer checkpoint --------------------------------------
+    float_np = {n: {"w": np.asarray(p["w"]), "b": np.asarray(p["b"])} for n, p in folded.items()}
+    int_params, w_exps_final = P.quantize_checkpoint(arch, float_np, act_exps)
+    int_acc = evaluate_int(arch, int_params, act_exps, w_exps_final, n=512)
+    float_acc = evaluate_float(arch, folded, n=512)
+    print(
+        f"{arch_name}: float(folded) acc {float_acc:.3f} -> int8 acc {int_acc:.3f}"
+        f"  ({time.time()-t0:.0f}s)"
+    )
+    P.save_checkpoint(
+        arch.name, int_params, act_exps, w_exps_final,
+        {"steps": steps, "batch": batch, "int8_accuracy": int_acc,
+         "float_accuracy": float_acc, "history": history},
+    )
+    return int_acc
+
+
+def evaluate_int(arch, int_params, act_exps, w_exps, n=512, bs=128):
+    jp = {k: {"w": jnp.asarray(v["w"]), "b": jnp.asarray(v["b"])} for k, v in int_params.items()}
+    correct = 0
+    for s in range(0, n, bs):
+        imgs, labels = D.eval_batch(s, min(bs, n - s))
+        logits = M.ref_forward(arch, jp, act_exps, w_exps, jnp.asarray(imgs))
+        correct += int(np.sum(np.argmax(np.asarray(logits), axis=1) == labels))
+    return correct / n
+
+
+def evaluate_float(arch, folded, n=512, bs=128):
+    def fwd(x):
+        def spec(name):
+            return next(c for c in arch.conv_layers() if c.name == name)
+
+        def conv(name, t, relu, skip=None):
+            s = spec(name)
+            y = _conv_f(t, folded[name]["w"], s.stride, s.pad) + folded[name]["b"][None, None, None, :]
+            if skip is not None:
+                y = y + skip
+            return jax.nn.relu(y) if relu else y
+
+        a = conv("stem", x, relu=True)
+        for blk in arch.blocks:
+            xin = a
+            skip = conv(blk.downsample.name, xin, relu=False) if blk.downsample else xin
+            h = conv(blk.conv0.name, xin, relu=True)
+            a = conv(blk.conv1.name, h, relu=True, skip=skip)
+        return jnp.mean(a, axis=(1, 2)) @ folded["fc"]["w"] + folded["fc"]["b"][None, :]
+
+    correct = 0
+    for s in range(0, n, bs):
+        imgs, labels = D.eval_batch(s, min(bs, n - s))
+        x = jnp.asarray(imgs, jnp.float32) * np.float32(2.0**A.INPUT_EXP)
+        logits = np.asarray(fwd(x))
+        correct += int(np.sum(np.argmax(logits, axis=1) == labels))
+    return correct / n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="resnet8", choices=sorted(A.ARCHS))
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.02)
+    args = ap.parse_args()
+    train(args.arch, args.steps, args.batch, args.lr)
+
+
+if __name__ == "__main__":
+    main()

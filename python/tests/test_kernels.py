@@ -1,0 +1,130 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, bit-exact.
+
+Hypothesis sweeps shapes, strides, channel counts and exponents — the
+kernel must agree with ref.py on every integer output.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import avgpool_global, conv2d, linear, maxpool2d, ref
+from compile.kernels import quantize as qz
+
+RNG = np.random.default_rng(0)
+
+
+def rand_i(shape, lo=-128, hi=127):
+    return jnp.asarray(RNG.integers(lo, hi + 1, shape), jnp.int32)
+
+
+conv_cases = st.tuples(
+    st.sampled_from([1, 2]),  # batch
+    st.sampled_from([4, 6, 8]),  # H = W
+    st.sampled_from([1, 3, 8]),  # cin
+    st.sampled_from([4, 16]),  # cout
+    st.sampled_from([(1, 0), (3, 1), (3, 0)]),  # (k, pad)
+    st.sampled_from([1, 2]),  # stride
+    st.booleans(),  # relu
+    st.integers(min_value=-8, max_value=-4),  # out_exp - acc_exp control
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(conv_cases)
+def test_conv2d_matches_ref(case):
+    n, h, cin, cout, (k, pad), stride, relu, shift = case
+    if h + 2 * pad < k:
+        return
+    x = rand_i((n, h, h, cin))
+    w = rand_i((k, k, cin, cout))
+    b = rand_i((cout,), -(2**15), 2**15 - 1)
+    acc_exp = -14
+    out_exp = acc_exp - shift + 8  # a plausible positive shift
+    got = conv2d(x, w, b, stride=stride, pad=pad, acc_exp=acc_exp, out_exp=out_exp, relu=relu)
+    want = ref.conv2d_ref(x, w, b, stride, pad, acc_exp, out_exp, relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from([4, 8]),
+    st.sampled_from([4, 8, 16]),
+    st.integers(min_value=-9, max_value=-3),
+)
+def test_conv2d_skip_init_matches_ref(h, cout, skip_exp):
+    """The fused residual accumulator-init path (paper Fig. 13)."""
+    x = rand_i((2, h, h, 4))
+    w = rand_i((3, 3, 4, cout))
+    b = rand_i((cout,), -(2**15), 2**15 - 1)
+    skip = rand_i((2, h, h, cout))
+    acc_exp = -14
+    got = conv2d(x, w, b, stride=1, pad=1, acc_exp=acc_exp, out_exp=-6, relu=True,
+                 skip=skip, skip_exp=skip_exp)
+    want = ref.conv2d_ref(x, w, b, 1, 1, acc_exp, -6, True, skip=skip, skip_exp=skip_exp)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([2, 4]), st.sampled_from([4, 8, 16]), st.sampled_from([(2, 2), (3, 1)]))
+def test_maxpool_matches_ref(n, c, ks):
+    k, stride = ks
+    x = rand_i((n, 8, 8, c))
+    got = maxpool2d(x, k, stride)
+    want = ref.maxpool2d_ref(x, k, stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([2, 4, 8]), st.integers(min_value=-8, max_value=-4))
+def test_avgpool_matches_ref(hw, out_exp):
+    x = rand_i((2, hw, hw, 16))
+    got = avgpool_global(x, -6, out_exp)
+    want = ref.avgpool_global_ref(x, -6, out_exp)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_linear_matches_ref():
+    x = rand_i((4, 64))
+    w = rand_i((64, 10))
+    b = rand_i((10,), -(2**15), 2**15 - 1)
+    np.testing.assert_array_equal(
+        np.asarray(linear(x, w, b)), np.asarray(ref.linear_ref(x, w, b))
+    )
+
+
+# ------------------------------------------------------------ quant laws
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=-(2**30), max_value=2**30), st.integers(min_value=1, max_value=20))
+def test_round_shift_is_floor_half_up(acc, shift):
+    got = int(qz.round_shift(np.int32(acc), shift))
+    want = (acc + (1 << (shift - 1))) >> shift
+    assert got == want
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=-(2**30), max_value=2**30))
+def test_relu_commutes_with_requantize(acc):
+    a = jnp.asarray([acc], jnp.int32)
+    fused = ref.qz.requantize(a, -14, -6, True) if False else qz.requantize(a, -14, -6, True)
+    separate = jnp.maximum(qz.requantize(a, -14, -6, False), 0)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(separate))
+
+
+def test_acc_width_paper_eq7():
+    # Eq. 6/7: worst ResNet8/20 layer accumulates 9216 products -> 30 bits.
+    n_acc = 32 * 32 * 3 * 3
+    bits = int(np.ceil(np.log2(n_acc))) + 16
+    assert bits == 30
+
+
+def test_pow2_exponent_covers():
+    assert qz.pow2_exponent(127.0, 8) == 0
+    assert qz.pow2_exponent(1.0, 8) == -6
+    for m in [0.3, 1.7, 12.0, 100.0]:
+        e = qz.pow2_exponent(m, 8)
+        assert 127.0 * 2.0**e >= m
+        assert 127.0 * 2.0 ** (e - 1) < m

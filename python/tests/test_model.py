@@ -1,0 +1,127 @@
+"""L2 correctness: the quantized ResNet graphs.
+
+* pallas forward == jnp ref forward (bit-exact) for both architectures;
+* optimized (fused) dataflow == naive explicit-add dataflow;
+* shape and exponent bookkeeping;
+* dataset generator self-checks (the Rust side re-validates byte equality
+  against the exported probe).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import arch as A
+from compile import data as D
+from compile import model as M
+from compile import params as P
+
+
+def _setup(name):
+    arch = A.ARCHS[name]()
+    params, act_exps, w_exps, _ = P.get_params(arch)
+    jp = {k: {"w": jnp.asarray(v["w"]), "b": jnp.asarray(v["b"])} for k, v in params.items()}
+    return arch, jp, act_exps, w_exps
+
+
+@pytest.mark.parametrize("name", ["resnet8", "resnet20"])
+def test_pallas_forward_matches_ref(name):
+    arch, jp, act_exps, w_exps = _setup(name)
+    imgs, _ = D.eval_batch(0, 4)
+    x = jnp.asarray(imgs)
+    got = M.forward(arch, jp, act_exps, w_exps, x)
+    want = M.ref_forward(arch, jp, act_exps, w_exps, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == (4, 10)
+
+
+@pytest.mark.parametrize("name", ["resnet8", "resnet20"])
+def test_fused_equals_explicit_add(name):
+    """Paper Section III-G: the graph optimizations preserve numerics."""
+    arch, jp, act_exps, w_exps = _setup(name)
+    imgs, _ = D.eval_batch(8, 4)
+    x = jnp.asarray(imgs)
+    fused = M.ref_forward(arch, jp, act_exps, w_exps, x)
+    naive = M.unoptimized_ref_forward(arch, jp, act_exps, w_exps, x)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(naive))
+
+
+def test_arch_geometry():
+    r8, r20 = A.resnet8(), A.resnet20()
+    assert len(r8.blocks) == 3 and len(r20.blocks) == 9
+    assert len(r8.conv_layers()) == 9 and len(r20.conv_layers()) == 21
+    # MAC counts in the published ballpark.
+    assert 11e6 < r8.total_macs() < 14e6
+    assert 40e6 < r20.total_macs() < 42e6
+    # Downsample blocks are exactly the stage transitions.
+    assert sum(1 for b in r8.blocks if b.downsample) == 2
+    assert sum(1 for b in r20.blocks if b.downsample) == 2
+
+
+def test_param_shapes_follow_arch():
+    arch = A.resnet8()
+    params, _, _ = P.random_int_params(arch)
+    for c in arch.conv_layers():
+        assert params[c.name]["w"].shape == (c.k, c.k, c.cin, c.cout)
+        assert params[c.name]["b"].shape == (c.cout,)
+    assert params["fc"]["w"].shape == (64, 10)
+
+
+def test_logits_depend_on_input_and_weights():
+    arch, jp, act_exps, w_exps = _setup("resnet8")
+    a, _ = D.eval_batch(0, 1)
+    b, _ = D.eval_batch(1, 1)
+    la = np.asarray(M.ref_forward(arch, jp, act_exps, w_exps, jnp.asarray(a)))
+    lb = np.asarray(M.ref_forward(arch, jp, act_exps, w_exps, jnp.asarray(b)))
+    assert not np.array_equal(la, lb)
+
+
+# ------------------------------------------------------------- dataset
+
+
+def test_dataset_deterministic_and_classful():
+    x1, y1 = D.batch(0, 20, "test")
+    x2, y2 = D.batch(0, 20, "test")
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, np.arange(20) % 10)
+    assert x1.min() >= -128 and x1.max() <= 127
+    # Different classes differ far beyond the noise floor.
+    mad = np.abs(x1[0].astype(np.int64) - x1[1].astype(np.int64)).mean()
+    assert mad > 24
+
+
+def test_dataset_split_seeds_differ():
+    a, _ = D.batch(0, 4, "train")
+    b, _ = D.batch(0, 4, "test")
+    assert not np.array_equal(a, b)
+
+
+def test_lcg_matches_spec_constants():
+    """Pin the LCG recurrence so the Rust mirror can never drift."""
+    s = np.uint64(0)
+    with np.errstate(over="ignore"):
+        s = s * D.LCG_A + D.LCG_C
+    assert int(s) == 1442695040888963407
+    assert int(D.LCG_A) == 6364136223846793005
+
+
+def test_quantize_checkpoint_bias_at_acc_exponent():
+    arch = A.resnet8()
+    rng = np.random.default_rng(0)
+    fp = {}
+    for c in arch.conv_layers():
+        fp[c.name] = {
+            "w": rng.normal(0, 0.1, (c.k, c.k, c.cin, c.cout)),
+            "b": rng.normal(0, 0.1, (c.cout,)),
+        }
+    fp["fc"] = {"w": rng.normal(0, 0.1, (64, 10)), "b": np.zeros(10)}
+    act_exps = A.default_act_exps(arch)
+    int_params, w_exps = P.quantize_checkpoint(arch, fp, act_exps)
+    producer = P._producer_map(arch)
+    for name, p in int_params.items():
+        assert p["w"].min() >= -127 and p["w"].max() <= 127
+        assert p["b"].min() >= -(2**15) and p["b"].max() < 2**15
+        # Weight exponent tight for max|w|.
+        maxw = np.abs(fp[name]["w"]).max()
+        assert 127 * 2.0 ** w_exps[name] >= maxw * 0.999
+        _ = producer[name]

@@ -1,0 +1,60 @@
+//! Bench: Fig. 5 — the DSP packing pipelines.
+//!
+//! Prints the chain structure for the paper's filter sizes and
+//! micro-benchmarks the bit-exact packing model against scalar MACs
+//! (the model itself is software; the figure data is the chain plan).
+//!
+//! Run: `cargo bench --bench fig_packing`
+
+use resnet_hls::eval::figures::packing_figure;
+use resnet_hls::hls::packing::{decode_lanes, dsp_stage, packed_chain, MAX_CHAIN};
+use resnet_hls::util::bench::black_box;
+use resnet_hls::util::{Bencher, Lcg64};
+
+fn main() {
+    println!("== Fig. 5: packed compute pipelines ==");
+    for (taps, och_par) in [(9usize, 1usize), (9, 8), (1, 8), (25, 4)] {
+        let f = packing_figure(taps, och_par);
+        println!(
+            "filter {taps:>2} taps x och_par {och_par}: chains {:?} (+{} adders), \
+             {:>3} DSPs, {:>3} MACs/cy packed vs {:>3} unpacked",
+            f.chains, f.extra_adders, f.dsps, f.macs_per_cycle_packed, f.macs_per_cycle_unpacked
+        );
+        assert!(f.chains.iter().all(|&c| c <= MAX_CHAIN));
+        assert_eq!(f.macs_per_cycle_packed, 2 * f.macs_per_cycle_unpacked);
+    }
+
+    // Verify once more at scale: random chains, bit-exact lanes.
+    let mut rng = Lcg64::new(42);
+    let mut checked = 0u64;
+    for _ in 0..100_000 {
+        let n = 1 + (rng.below(MAX_CHAIN as u64)) as usize;
+        let taps: Vec<(i8, i8, i8)> = (0..n)
+            .map(|_| {
+                (
+                    rng.range_i64(-128, 127) as i8,
+                    rng.range_i64(-128, 127) as i8,
+                    rng.range_i64(-128, 127) as i8,
+                )
+            })
+            .collect();
+        let (u, v) = packed_chain(&taps);
+        let su: i32 = taps.iter().map(|&(_, d, b)| d as i32 * b as i32).sum();
+        let sv: i32 = taps.iter().map(|&(a, _, b)| a as i32 * b as i32).sum();
+        assert_eq!((u, v), (su, sv));
+        checked += 1;
+    }
+    println!("packing model: {checked} random chains bit-exact");
+
+    let mut b = Bencher::new();
+    let taps: Vec<(i8, i8, i8)> = (0..7).map(|i| (i as i8, -(i as i8), 3)).collect();
+    b.bench_items("packed_chain(7)", 14.0, &mut || {
+        black_box(packed_chain(black_box(&taps)));
+    });
+    b.bench_items("dsp_stage", 2.0, &mut || {
+        black_box(dsp_stage(black_box(12345), 7, -9, 55));
+    });
+    b.bench("decode_lanes", || {
+        black_box(decode_lanes(black_box(123456789)));
+    });
+}

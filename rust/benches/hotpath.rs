@@ -1,0 +1,65 @@
+//! Bench: the L3 hot paths — the instrument for the performance pass
+//! (EXPERIMENTS.md §Perf).  Each entry is one optimization target.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use resnet_hls::coordinator::{Batcher, BatcherConfig};
+use resnet_hls::data::{synth_batch, TEST_SEED};
+use resnet_hls::hls::config::configure;
+use resnet_hls::hls::ULTRA96;
+use resnet_hls::ilp::{loads_from_arch, solve};
+use resnet_hls::models::{arch_by_name, build_optimized_graph, default_exps, synthetic_weights};
+use resnet_hls::sim::{build_network, golden, SimOptions};
+use resnet_hls::util::bench::black_box;
+use resnet_hls::util::{Bencher, Json};
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // 1. Golden int8 conv (the numerics hot loop).
+    let arch = arch_by_name("resnet8").unwrap();
+    let weights = synthetic_weights(&arch, 5);
+    let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let (input1, _) = synth_batch(0, 1, TEST_SEED);
+    let macs = arch.total_macs() as f64;
+    b.bench_items("golden resnet8 1 frame (MACs/s)", macs, &mut || {
+        black_box(golden::run(&g, &weights, &input1).unwrap());
+    });
+
+    // 2. Simulator engine (task-steps/s over a full resnet20 frame).
+    let arch20 = arch_by_name("resnet20").unwrap();
+    let (act, w) = default_exps(&arch20);
+    let g20 = build_optimized_graph(&arch20, &act, &w);
+    let loads = loads_from_arch(&arch20, 2);
+    let alloc = solve(&loads, 1248).unwrap();
+    let cfg = configure(&arch20.name, &g20, &alloc, &ULTRA96, 2).unwrap();
+    b.bench("sim resnet20 3 frames", || {
+        let mut net =
+            build_network(&g20, &cfg, &SimOptions { frames: 3, ..Default::default() }).unwrap();
+        let rep = net.run(3);
+        assert!(!rep.deadlocked);
+    });
+
+    // 3. Batcher planning (request-path, must be ~ns).
+    let batcher = Batcher::new(BatcherConfig::default());
+    b.bench("batcher plan(70)", || {
+        black_box(batcher.plan(black_box(70)));
+    });
+
+    // 4. Manifest JSON parse (startup path).
+    let manifest = std::fs::read_to_string(resnet_hls::paths::artifacts_dir().join("manifest.json"))
+        .unwrap_or_else(|_| "{\"models\":[]}".into());
+    b.bench("manifest json parse", || {
+        black_box(Json::parse(black_box(&manifest)).unwrap());
+    });
+
+    // 5. Full design flow (tooling path).
+    b.bench("fit_to_board resnet20@Ultra96", || {
+        resnet_hls::hls::resources::fit_to_board(&arch20.name, &g20, &loads, &ULTRA96, 2).unwrap();
+    });
+
+    // 6. ILP solve.
+    b.bench("ilp solve resnet20@1248", || {
+        black_box(solve(black_box(&loads), 1248));
+    });
+}

@@ -1,0 +1,41 @@
+//! Bench: Algorithm 1 — throughput vs DSP budget sweep + solver timing.
+//!
+//! Run: `cargo bench --bench ilp_sweep`
+
+use resnet_hls::eval::figures::ilp_sweep;
+use resnet_hls::ilp::{loads_from_arch, solve};
+use resnet_hls::models::arch_by_name;
+use resnet_hls::util::bench::black_box;
+use resnet_hls::util::Bencher;
+
+fn main() {
+    for model in ["resnet8", "resnet20"] {
+        println!("== {model}: Alg. 1 throughput vs N_PAR ==");
+        println!("{:>8} {:>14} {:>8} {:>12}", "N_PAR", "frames/Mcycle", "DSPs", "FPS@274MHz");
+        let budgets: Vec<u64> = vec![72, 96, 128, 180, 256, 360, 512, 724, 1024, 1248, 2048];
+        let pts = ilp_sweep(model, &budgets, 2);
+        for (b, fpm, dsps) in &pts {
+            println!("{b:>8} {fpm:>14.4} {dsps:>8} {:>12.0}", fpm * 274.0);
+        }
+        // Monotone in budget.
+        for w in pts.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-12);
+        }
+        // Diminishing returns: och caps flatten the top end.
+        if pts.len() >= 3 {
+            let (_, first, _) = pts[0];
+            let (_, last, _) = pts[pts.len() - 1];
+            assert!(last > first, "more budget must help somewhere");
+        }
+    }
+
+    let mut b = Bencher::new();
+    let arch = arch_by_name("resnet20").unwrap();
+    let loads = loads_from_arch(&arch, 2);
+    b.bench("ilp solve resnet20 @1248", || {
+        black_box(solve(black_box(&loads), 1248));
+    });
+    b.bench("ilp solve resnet20 @360", || {
+        black_box(solve(black_box(&loads), 360));
+    });
+}

@@ -1,0 +1,52 @@
+//! Bench: the real request path — PJRT inference throughput per batch
+//! bucket and end-to-end served throughput (DESIGN.md E7).
+//!
+//! Requires `make artifacts`.  Run: `cargo bench --bench runtime_e2e`
+
+use resnet_hls::coordinator::{BatcherConfig, InferenceServer};
+use resnet_hls::data::{synth_batch, IMG_ELEMS, TEST_SEED};
+use resnet_hls::paths::artifacts_dir;
+use resnet_hls::runtime::Engine;
+use resnet_hls::util::Bencher;
+
+fn main() {
+    let dir = artifacts_dir();
+    let engine = match Engine::load(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping runtime_e2e: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+    println!("pjrt platform: {}", engine.platform());
+
+    let mut b = Bencher::new();
+    for arch in ["resnet8", "resnet20"] {
+        for bucket in engine.buckets(arch) {
+            let (input, _) = synth_batch(0, bucket, TEST_SEED);
+            let model = engine.model(&format!("{arch}_b{bucket}")).unwrap();
+            b.bench_items(&format!("pjrt {arch} b{bucket}"), bucket as f64, &mut || {
+                model.infer(&input).unwrap();
+            });
+        }
+    }
+
+    // Served throughput through the coordinator (batcher + channels).
+    for arch in ["resnet8"] {
+        let server = InferenceServer::start(dir.clone(), arch, BatcherConfig::default()).unwrap();
+        let (input, _) = synth_batch(0, 64, TEST_SEED);
+        b.bench_items(&format!("served {arch} 64-frame burst"), 64.0, &mut || {
+            let pending: Vec<_> = (0..64)
+                .map(|i| {
+                    server
+                        .submit(input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].to_vec())
+                        .unwrap()
+                })
+                .collect();
+            for rx in pending {
+                rx.recv().unwrap().unwrap();
+            }
+        });
+        println!("  metrics: {}", server.metrics.snapshot());
+    }
+}

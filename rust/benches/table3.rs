@@ -1,0 +1,53 @@
+//! Bench: regenerate paper Table 3 (performance rows, modeled vs paper)
+//! and time the full design flow per row.
+//!
+//! Run: `cargo bench --bench table3`
+
+use resnet_hls::eval::tables::{print_table3, table3};
+use resnet_hls::hls::boards::{KV260, ULTRA96};
+use resnet_hls::util::Bencher;
+
+fn main() {
+    let rows = table3().expect("table3");
+    print_table3(&rows);
+
+    // Shape assertions (the reproduction criteria of DESIGN.md E1/E8).
+    let get = |label: &str, board: &str| {
+        rows.iter()
+            .find(|r| r.label.contains(label) && r.board == board)
+            .unwrap_or_else(|| panic!("row {label}@{board}"))
+    };
+    let our8kv = get("resnet8 CNN", "KV260");
+    let our20kv = get("resnet20 CNN", "KV260");
+    let our8u96 = get("resnet8 CNN", "Ultra96");
+    let our20u96 = get("resnet20 CNN", "Ultra96");
+    let overlay = get("overlay", "KV260");
+    let finn = get("FINN", "KV260");
+    let adder = get("AdderNet", "KV260");
+
+    println!("\n== shape checks (who wins, by roughly what factor) ==");
+    let checks: Vec<(String, f64, f64, f64)> = vec![
+        ("resnet8 > resnet20 FPS (paper 3.97x)".into(), our8kv.fps / our20kv.fps, 2.0, 6.0),
+        ("KV260 > Ultra96 resnet8 (paper 2.32x)".into(), our8kv.fps / our8u96.fps, 1.3, 4.0),
+        ("KV260 > Ultra96 resnet20 (paper 2.34x)".into(), our20kv.fps / our20u96.fps, 1.3, 4.0),
+        ("our latency << overlay (paper 28x)".into(), overlay.latency_ms / our8kv.latency_ms, 8.0, 100.0),
+        ("our FPS > FINN 4-bit (paper 2.2x)".into(), our8kv.fps / finn.fps, 1.2, 6.0),
+        ("our Gops > AdderNet (paper 1.9x)".into(), our20kv.gops / adder.gops, 1.2, 4.0),
+    ];
+    let mut ok = true;
+    for (name, val, lo, hi) in checks {
+        let pass = (lo..=hi).contains(&val);
+        ok &= pass;
+        println!("  [{}] {name}: {val:.2} (band {lo}-{hi})", if pass { "ok" } else { "FAIL" });
+    }
+    assert!(ok, "table 3 shape checks failed");
+
+    // Timing: the full design flow per (model, board).
+    let mut b = Bencher::new();
+    b.bench("flow: resnet8@KV260 (passes+ILP+closure+sim)", || {
+        resnet_hls::eval::tables::our_design("resnet8", &KV260).unwrap();
+    });
+    b.bench("flow: resnet20@Ultra96", || {
+        resnet_hls::eval::tables::our_design("resnet20", &ULTRA96).unwrap();
+    });
+}

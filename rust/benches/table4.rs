@@ -1,0 +1,57 @@
+//! Bench: regenerate paper Table 4 (resource utilization, modeled vs
+//! paper) and check the utilization *shape*.
+//!
+//! Run: `cargo bench --bench table4`
+
+use resnet_hls::eval::tables::{print_table4, table4};
+use resnet_hls::hls::boards::{KV260, ULTRA96};
+
+fn main() {
+    let rows = table4().expect("table4");
+    print_table4(&rows);
+
+    println!("\n== shape checks ==");
+    let get = |label: &str, board: &str| {
+        rows.iter()
+            .find(|r| r.label.contains(label) && r.board == board)
+            .unwrap_or_else(|| panic!("row {label}@{board}"))
+    };
+    let mut ok = true;
+    let mut check = |name: &str, cond: bool| {
+        ok &= cond;
+        println!("  [{}] {name}", if cond { "ok" } else { "FAIL" });
+    };
+
+    // Every modeled design fits its board.
+    for r in &rows {
+        let board = if r.board == "KV260" { &KV260 } else { &ULTRA96 };
+        check(&format!("{} fits {}", r.label, r.board), r.report.fits(board));
+    }
+    // KV260 designs park parameters in URAM, Ultra96 in BRAM (Sec. III-D).
+    check("KV260 uses URAM", get("resnet20", "KV260").report.urams > 0);
+    check("Ultra96 uses no URAM", get("resnet20", "Ultra96").report.urams == 0);
+    // LUTs bind before DSPs on KV260/resnet20 (paper: 69.4% LUT @ 50% DSP).
+    let r = get("resnet20", "KV260");
+    check(
+        "resnet20@KV260 is LUT-bound",
+        (r.report.luts as f64 / KV260.luts as f64) > (r.report.dsps as f64 / KV260.dsps as f64),
+    );
+    // Within a loose band of the paper's absolute numbers where reported.
+    for r in &rows {
+        if let Some(p) = r.paper {
+            let lut_ratio = (r.report.luts as f64 / 1e3) / p.kluts;
+            check(
+                &format!("{}@{} kLUT within band (x{:.2})", r.label, r.board, lut_ratio),
+                (0.35..=2.5).contains(&lut_ratio),
+            );
+            if p.dsps > 0 {
+                let dsp_ratio = r.report.dsps as f64 / p.dsps as f64;
+                check(
+                    &format!("{}@{} DSP within band (x{:.2})", r.label, r.board, dsp_ratio),
+                    (0.2..=2.0).contains(&dsp_ratio),
+                );
+            }
+        }
+    }
+    assert!(ok, "table 4 shape checks failed");
+}

@@ -1,0 +1,178 @@
+//! Dynamic batching policy (pure logic — unit-testable without PJRT).
+//!
+//! The AOT artifacts bake one executable per batch size (e.g. 1/8/64), so
+//! the batcher's job is to map a run of queued single-frame requests onto
+//! the cheapest sequence of bucket executions, trading latency (wait for
+//! more frames) against throughput (bigger buckets amortize dispatch).
+
+use std::time::Duration;
+
+/// Policy parameters.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Available bucket sizes, ascending (from the artifacts manifest).
+    pub buckets: Vec<usize>,
+    /// Max time the oldest request may wait before a forced flush.
+    pub max_wait: Duration,
+    /// Flush immediately once this many frames are queued.
+    pub max_queue: usize,
+    /// Largest bucket the policy will dispatch.  Measured on this CPU
+    /// PJRT backend, per-frame throughput peaks at b8 and *degrades* at
+    /// b64 (cache residency), so the default caps there — see
+    /// EXPERIMENTS.md §Perf (coordinator entry).
+    pub max_bucket: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            buckets: vec![1, 8, 64],
+            max_wait: Duration::from_millis(2),
+            max_queue: 64,
+            max_bucket: 8,
+        }
+    }
+}
+
+/// A planned execution: run bucket `bucket` on `take` real frames
+/// (bucket - take frames are zero padding).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub bucket: usize,
+    pub take: usize,
+}
+
+/// The batching policy.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+}
+
+impl Batcher {
+    pub fn new(mut cfg: BatcherConfig) -> Self {
+        cfg.buckets.sort_unstable();
+        cfg.buckets.dedup();
+        let cap = cfg.max_bucket.max(*cfg.buckets.first().unwrap_or(&1));
+        cfg.buckets.retain(|&b| b <= cap);
+        assert!(!cfg.buckets.is_empty(), "need at least one bucket");
+        Batcher { cfg }
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Should we flush now, given `queued` frames and the oldest request's
+    /// age?  (The server calls this on every queue event / tick.)
+    pub fn should_flush(&self, queued: usize, oldest_age: Duration) -> bool {
+        queued > 0 && (queued >= self.cfg.max_queue || oldest_age >= self.cfg.max_wait)
+    }
+
+    /// Plan bucket executions for `queued` frames.
+    ///
+    /// At each step, compare (a) greedy largest-fit decomposition of the
+    /// remainder against (b) padding the whole remainder into the smallest
+    /// covering bucket, under a cost of `bucket + DISPATCH_OVERHEAD` frames
+    /// per execution — padding 5 frames into a bucket of 8 beats five
+    /// single-frame dispatches, but 9 frames still split into 8 + 1.
+    pub fn plan(&self, queued: usize) -> Vec<BatchPlan> {
+        const DISPATCH_OVERHEAD: usize = 4; // frames-equivalent per dispatch
+        let mut plans = Vec::new();
+        let mut left = queued;
+        while left > 0 {
+            // Option A: greedy decomposition cost of `left`.
+            let mut greedy_cost = 0usize;
+            let mut l = left;
+            let mut first_greedy = None;
+            while l > 0 {
+                let b = self
+                    .cfg
+                    .buckets
+                    .iter()
+                    .rev()
+                    .find(|&&b| b <= l)
+                    .copied()
+                    .unwrap_or(*self.cfg.buckets.first().unwrap());
+                if first_greedy.is_none() {
+                    first_greedy = Some(b);
+                }
+                greedy_cost += b + DISPATCH_OVERHEAD;
+                l -= b.min(l);
+            }
+            // Option B: pad into the smallest covering bucket.
+            let pad = self.cfg.buckets.iter().find(|&&b| b >= left).copied();
+            match pad {
+                Some(b) if b + DISPATCH_OVERHEAD < greedy_cost => {
+                    plans.push(BatchPlan { bucket: b, take: left });
+                    left = 0;
+                }
+                _ => {
+                    let b = first_greedy.unwrap();
+                    let take = b.min(left);
+                    plans.push(BatchPlan { bucket: b, take });
+                    left -= take;
+                }
+            }
+        }
+        plans
+    }
+
+    /// Padding efficiency of a plan: real frames / executed frames.
+    pub fn efficiency(plans: &[BatchPlan]) -> f64 {
+        let real: usize = plans.iter().map(|p| p.take).sum();
+        let exec: usize = plans.iter().map(|p| p.bucket).sum();
+        if exec == 0 {
+            1.0
+        } else {
+            real as f64 / exec as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher() -> Batcher {
+        Batcher::new(BatcherConfig { buckets: vec![1, 8, 64], max_bucket: 64, ..Default::default() })
+    }
+
+    #[test]
+    fn plans_greedy_largest_fit() {
+        let b = batcher();
+        assert_eq!(
+            b.plan(70),
+            vec![BatchPlan { bucket: 64, take: 64 }, BatchPlan { bucket: 8, take: 6 }]
+        );
+        assert_eq!(b.plan(8), vec![BatchPlan { bucket: 8, take: 8 }]);
+        assert_eq!(b.plan(1), vec![BatchPlan { bucket: 1, take: 1 }]);
+    }
+
+    #[test]
+    fn pads_remainder_into_next_bucket() {
+        let b = batcher();
+        let plans = b.plan(5);
+        assert_eq!(plans, vec![BatchPlan { bucket: 8, take: 5 }]);
+        assert!((Batcher::efficiency(&plans) - 5.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flush_on_age_or_size() {
+        let b = batcher();
+        assert!(!b.should_flush(0, Duration::from_secs(1)));
+        assert!(b.should_flush(64, Duration::ZERO));
+        assert!(b.should_flush(1, Duration::from_millis(3)));
+        assert!(!b.should_flush(1, Duration::from_micros(100)));
+    }
+
+    #[test]
+    fn covers_every_queue_size() {
+        let b = batcher();
+        for q in 1..200 {
+            let plans = b.plan(q);
+            let total: usize = plans.iter().map(|p| p.take).sum();
+            assert_eq!(total, q, "queue {q}");
+            assert!(Batcher::efficiency(&plans) > 0.1);
+        }
+    }
+}

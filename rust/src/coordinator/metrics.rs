@@ -1,0 +1,137 @@
+//! Serving metrics: counters and a fixed-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Histogram bucket upper bounds in microseconds.
+const BOUNDS_US: [u64; 12] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, u64::MAX];
+
+/// Thread-safe serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub frames: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_frames: AtomicU64,
+    pub errors: AtomicU64,
+    latency: Mutex<Hist>,
+}
+
+#[derive(Debug, Default)]
+struct Hist {
+    counts: [u64; 12],
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, real: usize, executed: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.frames.fetch_add(real as u64, Ordering::Relaxed);
+        self.padded_frames
+            .fetch_add((executed - real) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let mut h = self.latency.lock().unwrap();
+        let idx = BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(BOUNDS_US.len() - 1);
+        h.counts[idx] += 1;
+        h.sum_us += us;
+        h.max_us = h.max_us.max(us);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let h = self.latency.lock().unwrap();
+        let total: u64 = h.counts.iter().sum();
+        let pct = |p: f64| -> u64 {
+            if total == 0 {
+                return 0;
+            }
+            let target = (total as f64 * p).ceil() as u64;
+            let mut acc = 0;
+            for (i, &c) in h.counts.iter().enumerate() {
+                acc += c;
+                if acc >= target {
+                    return BOUNDS_US[i];
+                }
+            }
+            u64::MAX
+        };
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_frames: self.padded_frames.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_latency_us: if total > 0 { h.sum_us / total } else { 0 },
+            p50_le_us: pct(0.50),
+            p99_le_us: pct(0.99),
+            max_latency_us: h.max_us,
+        }
+    }
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub frames: u64,
+    pub batches: u64,
+    pub padded_frames: u64,
+    pub errors: u64,
+    pub mean_latency_us: u64,
+    /// Latency percentiles as histogram-bucket upper bounds.
+    pub p50_le_us: u64,
+    pub p99_le_us: u64,
+    pub max_latency_us: u64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let b = |v: u64| {
+            if v == u64::MAX { ">100ms".to_string() } else { format!("<={v}us") }
+        };
+        write!(
+            f,
+            "req {}  frames {}  batches {}  padded {}  err {}  lat mean {}us p50{} p99{} max {}us",
+            self.requests, self.frames, self.batches, self.padded_frames, self.errors,
+            self.mean_latency_us, b(self.p50_le_us), b(self.p99_le_us), self.max_latency_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let m = Metrics::new();
+        for us in [40u64, 90, 90, 200, 200, 200, 400, 900, 2_000, 80_000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.p50_le_us, 250);
+        assert_eq!(s.p99_le_us, 100_000);
+        assert_eq!(s.max_latency_us, 80_000);
+        assert!(s.mean_latency_us > 0);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(5, 8);
+        m.record_batch(64, 64);
+        let s = m.snapshot();
+        assert_eq!(s.frames, 69);
+        assert_eq!(s.padded_frames, 3);
+        assert_eq!(s.batches, 2);
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 inference coordinator: the request-path runtime around the compiled
+//! accelerator models.
+//!
+//! The paper's deployment story is a free-running, data-driven accelerator
+//! (`ap_ctrl_none`): frames stream in, results stream out, no per-frame
+//! control handshake.  The software analogue here is a dedicated executor
+//! thread per architecture that drains a request queue through a dynamic
+//! batcher (one compiled executable per batch bucket — batch sizes are
+//! baked into the AOT artifacts) and streams responses back over channels.
+//! Python is never involved.
+
+mod batcher;
+mod metrics;
+mod server;
+
+pub use batcher::{BatchPlan, Batcher, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{InferenceServer, Request, Response};

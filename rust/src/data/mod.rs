@@ -1,0 +1,9 @@
+//! Datasets: the deterministic synthetic CIFAR-10 substitute and a loader
+//! for the real CIFAR-10 binary format (used automatically if present).
+
+mod cifar;
+
+pub use cifar::{
+    load_real_batch, sample, synth_batch, SynthSample, IMG_C, IMG_ELEMS, IMG_H, IMG_W,
+    NUM_CLASSES, TEST_SEED, TRAIN_SEED,
+};

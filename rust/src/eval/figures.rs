@@ -1,0 +1,105 @@
+//! Figure reproductions: the data series behind the paper's figures.
+//!
+//! * Fig. 5  — DSP packing pipelines (chain structure, MACs/DSP);
+//! * Fig. 7/9 — window-buffer partitioning (slice sizes per ow_par);
+//! * Fig. 11/14 + Eq. 23 — skip-connection buffering, naive vs optimized,
+//!   per residual block of each network;
+//! * Alg. 1 — throughput vs DSP-budget sweep.
+
+use crate::hls::packing::{chain_plan, macs_per_cycle};
+use crate::hls::window::{
+    skip_buffer_naive, skip_buffer_optimized, slice_plan,
+};
+use crate::ilp::{loads_from_arch, solve};
+use crate::models::{arch_by_name, ArchSpec};
+
+/// Eq. 23 series: per residual block, (name, B_sc naive, B_sc optimized, R_sc).
+pub fn skip_buffering_series(arch: &ArchSpec) -> Vec<(String, usize, usize, f64)> {
+    arch.blocks
+        .iter()
+        .map(|b| {
+            let c0 = &b.conv0;
+            let c1 = &b.conv1;
+            let naive = skip_buffer_naive(c0.k, c0.k, c0.in_w, c0.cin, c1.k, c1.k);
+            let opt = skip_buffer_optimized(c1.k, c1.k, c1.in_w, c1.cin);
+            (b.name.clone(), naive, opt, opt as f64 / naive as f64)
+        })
+        .collect()
+}
+
+/// Fig. 5 data: for a filter size, the packed pipeline structure.
+pub struct PackingFigure {
+    pub taps: usize,
+    pub chains: Vec<usize>,
+    pub extra_adders: usize,
+    pub macs_per_cycle_packed: usize,
+    pub macs_per_cycle_unpacked: usize,
+    pub dsps: usize,
+}
+
+pub fn packing_figure(taps: usize, och_par: usize) -> PackingFigure {
+    let plan = chain_plan(taps);
+    PackingFigure {
+        taps,
+        chains: plan.chains.clone(),
+        extra_adders: plan.extra_adders * och_par,
+        macs_per_cycle_packed: macs_per_cycle(och_par, taps, 2),
+        macs_per_cycle_unpacked: macs_per_cycle(och_par, taps, 1),
+        dsps: och_par * taps,
+    }
+}
+
+/// Fig. 7/9 data: slice sizes of a window buffer.
+pub fn window_figure(k: usize, iw: usize, ich: usize, ow_par: usize) -> Vec<usize> {
+    slice_plan(k, k, iw, ich, ow_par).sizes
+}
+
+/// Alg. 1 sweep: (budget, fps_per_mhz, dsps_used) for a range of budgets.
+pub fn ilp_sweep(arch_name: &str, budgets: &[u64], ow_par: usize) -> Vec<(u64, f64, u64)> {
+    let arch = arch_by_name(arch_name).expect("arch");
+    let loads = loads_from_arch(&arch, ow_par);
+    budgets
+        .iter()
+        .filter_map(|&b| {
+            solve(&loads, b).map(|a| (b, 1e6 / a.cycles_per_frame as f64, a.dsps_used))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{resnet20, resnet8};
+
+    #[test]
+    fn eq23_holds_for_every_block_of_both_nets() {
+        for arch in [resnet8(), resnet20()] {
+            for (name, naive, opt, r) in skip_buffering_series(&arch) {
+                // Paper Eq. 23 reports R_sc = 0.5 (exactly 0.511 for the
+                // 32-wide blocks, up to 0.522 at the 8-wide final stage).
+                assert!(
+                    (0.47..=0.53).contains(&r),
+                    "{}/{name}: R_sc = {r} ({opt}/{naive})",
+                    arch.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packing_doubles_throughput() {
+        let f = packing_figure(9, 8);
+        assert_eq!(f.chains, vec![7, 2]);
+        assert_eq!(f.macs_per_cycle_packed, 2 * f.macs_per_cycle_unpacked);
+        assert_eq!(f.dsps, 72);
+    }
+
+    #[test]
+    fn ilp_sweep_is_monotone() {
+        let pts = ilp_sweep("resnet8", &[64, 128, 256, 512, 1024], 2);
+        assert!(pts.len() >= 4);
+        for w in pts.windows(2) {
+            assert!(w[1].1 >= w[0].1, "throughput decreased with budget");
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Experiment harnesses: regenerate every table and figure of the paper's
+//! evaluation section (paper-vs-measured, shape comparison).
+
+pub mod figures;
+pub mod tables;
+
+pub use tables::{table3, table4, Table3Row, Table4Row};

@@ -1,0 +1,334 @@
+//! Graph data structures.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Node identifier (index into `Graph::nodes`).
+pub type NodeId = usize;
+
+/// An edge endpoint: output `port` of node `node`.
+///
+/// Multi-output nodes exist only after graph optimization: a convolution
+/// that *forwards* its input (temporal reuse) or computes a *merged*
+/// downsample (loop merge) exposes the secondary stream on port 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Edge {
+    pub node: NodeId,
+    pub port: u8,
+}
+
+impl Edge {
+    pub fn new(node: NodeId, port: u8) -> Self {
+        Edge { node, port }
+    }
+}
+
+/// Role of an input edge on a consumer node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputRole {
+    /// Ordinary activation stream.
+    Data,
+    /// Skip-connection stream that initializes the accumulator
+    /// (paper Fig. 13, produced by the add-fusion pass).
+    SkipInit,
+}
+
+/// A pointwise downsample convolution absorbed into another conv's task by
+/// the loop-merge pass (paper Fig. 12b).  Reads the same input stream as
+/// the host conv; its output appears on the host's port 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MergedDownsample {
+    /// Original layer name (weights are looked up under this name).
+    pub name: String,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub w_exp: i32,
+    pub out_exp: i32,
+}
+
+/// Convolution attributes (geometry + quantization exponents).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvAttrs {
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// ReLU fused into the accumulator path (set by the relu-merge pass or
+    /// directly by the optimized builder).
+    pub relu: bool,
+    /// Weight exponent (power-of-two scale).
+    pub w_exp: i32,
+    /// Output activation exponent.
+    pub out_exp: i32,
+    /// Loop merge (paper Fig. 12b): this conv also computes a pointwise
+    /// downsample convolution over the same input inside the same task.
+    pub merged_downsample: Option<MergedDownsample>,
+    /// Temporal reuse (paper Fig. 12a): this conv re-emits its input
+    /// activations on output port 1 once its window buffer has fully used
+    /// them, so the skip branch needs no second buffer.
+    pub forwards_input: bool,
+    /// Emit raw int32 accumulators (no requantize/clip) — the naive
+    /// residual dataflow streams 32-bit partials into the Add node so the
+    /// merge is exact; add fusion clears this when it absorbs the Add.
+    pub raw_output: bool,
+}
+
+/// BatchNorm attributes (float; exists only pre-fold, as in the paper where
+/// BN is merged into the quantized convolutions after training).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchNormAttrs {
+    pub channels: usize,
+    pub scale: Vec<f32>,
+    pub shift: Vec<f32>,
+}
+
+/// Operation kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Network input (DMA stream from off-chip memory).
+    Input { h: usize, w: usize, c: usize, exp: i32 },
+    Conv(ConvAttrs),
+    BatchNorm(BatchNormAttrs),
+    Relu,
+    /// Residual merge node (pre-optimization only; removed by add fusion).
+    Add { out_exp: i32 },
+    MaxPool { k: usize, stride: usize },
+    /// Global average pool (power-of-two window -> shift divide).
+    GlobalAvgPool { out_exp: i32 },
+    Linear { cin: usize, cout: usize, w_exp: i32 },
+}
+
+impl Op {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Conv(_) => "conv",
+            Op::BatchNorm(_) => "batchnorm",
+            Op::Relu => "relu",
+            Op::Add { .. } => "add",
+            Op::MaxPool { .. } => "maxpool",
+            Op::GlobalAvgPool { .. } => "gap",
+            Op::Linear { .. } => "linear",
+        }
+    }
+}
+
+/// A graph node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    /// Input edges with roles, in positional order.
+    pub inputs: Vec<(Edge, InputRole)>,
+    /// Logically deleted (passes mark-and-sweep; `compact` drops these).
+    pub dead: bool,
+}
+
+/// The network graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    pub fn add(&mut self, name: impl Into<String>, op: Op, inputs: Vec<(Edge, InputRole)>) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, name: name.into(), op, inputs, dead: false });
+        id
+    }
+
+    pub fn add_simple(&mut self, name: impl Into<String>, op: Op, inputs: &[Edge]) -> NodeId {
+        self.add(name, op, inputs.iter().map(|&e| (e, InputRole::Data)).collect())
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id]
+    }
+
+    /// Live nodes in id order (ids are already topological: nodes can only
+    /// reference earlier nodes, enforced by `add`'s usage pattern and
+    /// checked by `validate`).
+    pub fn live(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| !n.dead)
+    }
+
+    /// All live consumers of `edge`.
+    pub fn consumers(&self, edge: Edge) -> Vec<NodeId> {
+        self.live()
+            .filter(|n| n.inputs.iter().any(|(e, _)| *e == edge))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Find a live node by name.
+    pub fn find(&self, name: &str) -> Option<NodeId> {
+        self.live().find(|n| n.name == name).map(|n| n.id)
+    }
+
+    /// Number of live nodes.
+    pub fn len_live(&self) -> usize {
+        self.live().count()
+    }
+
+    /// The unique live node with no live consumers (the network output).
+    pub fn output(&self) -> Option<NodeId> {
+        let mut sinks: Vec<NodeId> = self
+            .live()
+            .filter(|n| {
+                !self
+                    .live()
+                    .any(|m| m.inputs.iter().any(|(e, _)| e.node == n.id))
+            })
+            .map(|n| n.id)
+            .collect();
+        if sinks.len() == 1 {
+            sinks.pop()
+        } else {
+            None
+        }
+    }
+
+    /// Structural validation: edges reference earlier live nodes, ports are
+    /// in range, input arities match op kinds.
+    pub fn validate(&self) -> Result<(), String> {
+        for n in self.live() {
+            for (e, _) in &n.inputs {
+                if e.node >= n.id {
+                    return Err(format!("node {} ({}) has non-topological input {}", n.id, n.name, e.node));
+                }
+                let src = &self.nodes[e.node];
+                if src.dead {
+                    return Err(format!("node {} reads dead node {}", n.name, src.name));
+                }
+                let max_port = match &src.op {
+                    Op::Conv(c) if c.forwards_input || c.merged_downsample.is_some() => 1,
+                    _ => 0,
+                };
+                if e.port as usize > max_port {
+                    return Err(format!("node {} reads port {} of {}", n.name, e.port, src.name));
+                }
+            }
+            let arity = n.inputs.len();
+            let ok = match &n.op {
+                Op::Input { .. } => arity == 0,
+                Op::Conv(_) => (1..=2).contains(&arity),
+                Op::BatchNorm(_) | Op::Relu | Op::MaxPool { .. } | Op::GlobalAvgPool { .. } => arity == 1,
+                Op::Add { .. } => arity == 2,
+                Op::Linear { .. } => arity == 1,
+            };
+            if !ok {
+                return Err(format!("node {} ({}) has arity {}", n.name, n.op.kind(), arity));
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove dead nodes, remapping ids (returns old->new id map).
+    pub fn compact(&mut self) -> BTreeMap<NodeId, NodeId> {
+        let mut map = BTreeMap::new();
+        let mut new_nodes = Vec::new();
+        for n in self.nodes.drain(..) {
+            if n.dead {
+                continue;
+            }
+            let new_id = new_nodes.len();
+            map.insert(n.id, new_id);
+            new_nodes.push(Node { id: new_id, ..n });
+        }
+        for n in &mut new_nodes {
+            for (e, _) in &mut n.inputs {
+                e.node = map[&e.node];
+            }
+        }
+        self.nodes = new_nodes;
+        map
+    }
+
+    /// Count live nodes of a given kind.
+    pub fn count_kind(&self, kind: &str) -> usize {
+        self.live().filter(|n| n.op.kind() == kind).count()
+    }
+}
+
+impl fmt::Display for Graph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for n in self.live() {
+            let ins: Vec<String> = n
+                .inputs
+                .iter()
+                .map(|(e, r)| {
+                    let tag = if *r == InputRole::SkipInit { ":skip" } else { "" };
+                    if e.port == 0 {
+                        format!("{}{}", self.nodes[e.node].name, tag)
+                    } else {
+                        format!("{}.{}{}", self.nodes[e.node].name, e.port, tag)
+                    }
+                })
+                .collect();
+            writeln!(f, "{:>3} {:<10} {:<9} <- [{}]", n.id, n.name, n.op.kind(), ins.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new();
+        let i = g.add_simple("input", Op::Input { h: 8, w: 8, c: 3, exp: -7 }, &[]);
+        let c = g.add_simple(
+            "conv",
+            Op::Conv(ConvAttrs {
+                cin: 3, cout: 4, k: 3, stride: 1, pad: 1, relu: false,
+                w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false, raw_output: false,
+            }),
+            &[Edge::new(i, 0)],
+        );
+        g.add_simple("relu", Op::Relu, &[Edge::new(c, 0)]);
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.output(), g.find("relu"));
+        assert_eq!(g.consumers(Edge::new(g.find("conv").unwrap(), 0)).len(), 1);
+    }
+
+    #[test]
+    fn compact_remaps() {
+        let mut g = tiny();
+        let relu = g.find("relu").unwrap();
+        let conv = g.find("conv").unwrap();
+        // kill relu, rewire nothing (conv becomes sink)
+        g.node_mut(relu).dead = true;
+        let map = g.compact();
+        assert_eq!(g.nodes.len(), 2);
+        assert!(g.validate().is_ok());
+        assert_eq!(map[&conv], 1);
+        assert_eq!(g.output(), Some(1));
+    }
+
+    #[test]
+    fn validate_catches_bad_arity() {
+        let mut g = tiny();
+        let relu = g.find("relu").unwrap();
+        g.node_mut(relu).inputs.clear();
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! QONNX-like network graph IR (paper Fig. 2: the parsed model description
+//! the code-generation step works on).
+//!
+//! The IR deliberately models the paper's *pre-optimization* graphs too —
+//! explicit BatchNorm, ReLU and Add nodes — so the `passes` module can
+//! perform the published transformations (BN/ReLU merging, loop merge,
+//! temporal reuse, add fusion) and tests can verify they arrive at the
+//! optimized dataflow that `models::resnet` builds directly.
+
+mod ir;
+pub mod qonnx;
+mod shapes;
+
+pub use ir::*;
+pub use shapes::{infer_shapes, output_shape, ShapeError, TensorShape};

@@ -1,0 +1,270 @@
+//! QONNX-style graph interchange (paper Fig. 2: the flow consumes the
+//! quantized network as a QONNX graph — "an easy-to-parse description of
+//! the network, including information such as layer type, input and output
+//! quantization, and layer connections").
+//!
+//! We serialize the IR to a QONNX-flavored JSON document: a `graph` with
+//! `nodes` (op_type, name, inputs, attributes) — structurally the ONNX
+//! protobuf schema rendered as JSON, restricted to the ops this flow
+//! supports.  `import` accepts both our exports and hand-written files;
+//! exponents ride in `quant` attributes the way QONNX carries its
+//! Quant-node metadata.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::Json;
+
+use super::ir::{BatchNormAttrs, ConvAttrs, Edge, Graph, InputRole, MergedDownsample, Op};
+
+/// Serialize a graph to QONNX-flavored JSON.
+pub fn export(g: &Graph) -> Json {
+    let mut nodes = Vec::new();
+    for n in g.live() {
+        let mut node = BTreeMap::new();
+        node.insert("name".into(), Json::Str(n.name.clone()));
+        node.insert("op_type".into(), Json::Str(op_type(&n.op).into()));
+        let inputs: Vec<Json> = n
+            .inputs
+            .iter()
+            .map(|(e, r)| {
+                let mut o = BTreeMap::new();
+                o.insert("node".into(), Json::Str(g.node(e.node).name.clone()));
+                o.insert("port".into(), Json::Int(e.port as i64));
+                if *r == InputRole::SkipInit {
+                    o.insert("role".into(), Json::Str("skip_init".into()));
+                }
+                Json::Object(o)
+            })
+            .collect();
+        node.insert("inputs".into(), Json::Array(inputs));
+        node.insert("attributes".into(), attributes(&n.op));
+        nodes.push(Json::Object(node));
+    }
+    let mut graph = BTreeMap::new();
+    graph.insert("nodes".into(), Json::Array(nodes));
+    let mut doc = BTreeMap::new();
+    doc.insert("format".into(), Json::Str("qonnx-json".into()));
+    doc.insert("ir_version".into(), Json::Int(1));
+    doc.insert("graph".into(), Json::Object(graph));
+    Json::Object(doc)
+}
+
+fn op_type(op: &Op) -> &'static str {
+    match op {
+        Op::Input { .. } => "Input",
+        Op::Conv(_) => "QConv",
+        Op::BatchNorm(_) => "BatchNormalization",
+        Op::Relu => "Relu",
+        Op::Add { .. } => "Add",
+        Op::MaxPool { .. } => "MaxPool",
+        Op::GlobalAvgPool { .. } => "GlobalAveragePool",
+        Op::Linear { .. } => "QGemm",
+    }
+}
+
+fn attributes(op: &Op) -> Json {
+    let mut a = BTreeMap::new();
+    let mut put = |k: &str, v: i64| {
+        a.insert(k.to_string(), Json::Int(v));
+    };
+    match op {
+        Op::Input { h, w, c, exp } => {
+            put("height", *h as i64);
+            put("width", *w as i64);
+            put("channels", *c as i64);
+            put("quant_exp", *exp as i64);
+        }
+        Op::Conv(c) => {
+            put("cin", c.cin as i64);
+            put("cout", c.cout as i64);
+            put("kernel", c.k as i64);
+            put("stride", c.stride as i64);
+            put("pad", c.pad as i64);
+            put("relu", c.relu as i64);
+            put("weight_exp", c.w_exp as i64);
+            put("out_exp", c.out_exp as i64);
+            put("forwards_input", c.forwards_input as i64);
+            put("raw_output", c.raw_output as i64);
+            if let Some(m) = &c.merged_downsample {
+                a.insert(
+                    "merged_downsample".into(),
+                    Json::Object(BTreeMap::from([
+                        ("name".to_string(), Json::Str(m.name.clone())),
+                        ("cout".to_string(), Json::Int(m.cout as i64)),
+                        ("kernel".to_string(), Json::Int(m.k as i64)),
+                        ("stride".to_string(), Json::Int(m.stride as i64)),
+                        ("pad".to_string(), Json::Int(m.pad as i64)),
+                        ("weight_exp".to_string(), Json::Int(m.w_exp as i64)),
+                        ("out_exp".to_string(), Json::Int(m.out_exp as i64)),
+                    ])),
+                );
+            }
+        }
+        Op::BatchNorm(b) => {
+            put("channels", b.channels as i64);
+            a.insert(
+                "scale".into(),
+                Json::Array(b.scale.iter().map(|&v| Json::Float(v as f64)).collect()),
+            );
+            a.insert(
+                "shift".into(),
+                Json::Array(b.shift.iter().map(|&v| Json::Float(v as f64)).collect()),
+            );
+        }
+        Op::Relu => {}
+        Op::Add { out_exp } => put("out_exp", *out_exp as i64),
+        Op::MaxPool { k, stride } => {
+            put("kernel", *k as i64);
+            put("stride", *stride as i64);
+        }
+        Op::GlobalAvgPool { out_exp } => put("out_exp", *out_exp as i64),
+        Op::Linear { cin, cout, w_exp } => {
+            put("cin", *cin as i64);
+            put("cout", *cout as i64);
+            put("weight_exp", *w_exp as i64);
+        }
+    }
+    Json::Object(a)
+}
+
+/// Parse a QONNX-flavored JSON document back into a graph.
+pub fn import(doc: &Json) -> Result<Graph> {
+    let nodes = doc
+        .at("graph/nodes")
+        .and_then(|j| j.as_array())
+        .ok_or_else(|| anyhow!("missing graph/nodes"))?;
+    let mut g = Graph::new();
+    let mut by_name: BTreeMap<String, usize> = BTreeMap::new();
+    for n in nodes {
+        let name = n
+            .get("name")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow!("node missing name"))?
+            .to_string();
+        let op_type = n.get("op_type").and_then(|j| j.as_str()).unwrap_or_default();
+        let attrs = n.get("attributes").cloned().unwrap_or(Json::Object(BTreeMap::new()));
+        let geti = |k: &str| -> i64 { attrs.get(k).and_then(|j| j.as_i64()).unwrap_or(0) };
+        let op = match op_type {
+            "Input" => Op::Input {
+                h: geti("height") as usize,
+                w: geti("width") as usize,
+                c: geti("channels") as usize,
+                exp: geti("quant_exp") as i32,
+            },
+            "QConv" => Op::Conv(ConvAttrs {
+                cin: geti("cin") as usize,
+                cout: geti("cout") as usize,
+                k: geti("kernel") as usize,
+                stride: geti("stride") as usize,
+                pad: geti("pad") as usize,
+                relu: geti("relu") != 0,
+                w_exp: geti("weight_exp") as i32,
+                out_exp: geti("out_exp") as i32,
+                forwards_input: geti("forwards_input") != 0,
+                raw_output: geti("raw_output") != 0,
+                merged_downsample: attrs.get("merged_downsample").map(|m| {
+                    let gi = |k: &str| m.get(k).and_then(|j| j.as_i64()).unwrap_or(0);
+                    MergedDownsample {
+                        name: m.get("name").and_then(|j| j.as_str()).unwrap_or_default().into(),
+                        cout: gi("cout") as usize,
+                        k: gi("kernel") as usize,
+                        stride: gi("stride") as usize,
+                        pad: gi("pad") as usize,
+                        w_exp: gi("weight_exp") as i32,
+                        out_exp: gi("out_exp") as i32,
+                    }
+                }),
+            }),
+            "BatchNormalization" => {
+                let getv = |k: &str| -> Vec<f32> {
+                    attrs
+                        .get(k)
+                        .and_then(|j| j.as_array())
+                        .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|x| x as f32).collect())
+                        .unwrap_or_default()
+                };
+                Op::BatchNorm(BatchNormAttrs {
+                    channels: geti("channels") as usize,
+                    scale: getv("scale"),
+                    shift: getv("shift"),
+                })
+            }
+            "Relu" => Op::Relu,
+            "Add" => Op::Add { out_exp: geti("out_exp") as i32 },
+            "MaxPool" => Op::MaxPool { k: geti("kernel") as usize, stride: geti("stride") as usize },
+            "GlobalAveragePool" => Op::GlobalAvgPool { out_exp: geti("out_exp") as i32 },
+            "QGemm" => Op::Linear {
+                cin: geti("cin") as usize,
+                cout: geti("cout") as usize,
+                w_exp: geti("weight_exp") as i32,
+            },
+            other => bail!("unsupported op_type {other}"),
+        };
+        let mut inputs = Vec::new();
+        if let Some(arr) = n.get("inputs").and_then(|j| j.as_array()) {
+            for i in arr {
+                let src = i.get("node").and_then(|j| j.as_str()).unwrap_or_default();
+                let port = i.get("port").and_then(|j| j.as_i64()).unwrap_or(0) as u8;
+                let role = match i.get("role").and_then(|j| j.as_str()) {
+                    Some("skip_init") => InputRole::SkipInit,
+                    _ => InputRole::Data,
+                };
+                let src_id = *by_name
+                    .get(src)
+                    .ok_or_else(|| anyhow!("{name}: unknown input node {src}"))?;
+                inputs.push((Edge::new(src_id, port), role));
+            }
+        }
+        let id = g.add(name.clone(), op, inputs);
+        by_name.insert(name, id);
+    }
+    g.validate().map_err(|e| anyhow!("{e}"))?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{
+        build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8,
+    };
+    use crate::passes::equivalent;
+
+    #[test]
+    fn roundtrip_both_forms_both_archs() {
+        for arch in [resnet8(), resnet20()] {
+            let (act, w) = default_exps(&arch);
+            for g in [
+                build_unoptimized_graph(&arch, &act, &w),
+                build_optimized_graph(&arch, &act, &w),
+            ] {
+                let doc = export(&g);
+                let text = doc.to_string();
+                let parsed = Json::parse(&text).unwrap();
+                let g2 = import(&parsed).unwrap();
+                assert!(equivalent(&g, &g2), "{} roundtrip", arch.name);
+            }
+        }
+    }
+
+    #[test]
+    fn import_rejects_unknown_ops() {
+        let doc = Json::parse(
+            r#"{"graph":{"nodes":[{"name":"x","op_type":"Softmax","inputs":[],"attributes":{}}]}}"#,
+        )
+        .unwrap();
+        assert!(import(&doc).is_err());
+    }
+
+    #[test]
+    fn import_rejects_dangling_edges() {
+        let doc = Json::parse(
+            r#"{"graph":{"nodes":[{"name":"r","op_type":"Relu",
+                "inputs":[{"node":"ghost","port":0}],"attributes":{}}]}}"#,
+        )
+        .unwrap();
+        assert!(import(&doc).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Shape inference over the graph IR.
+//!
+//! Shapes are per-edge (node, port); the optimization passes must preserve
+//! every live edge's shape — a property test in `rust/tests/props.rs`
+//! asserts exactly that.
+
+use std::collections::BTreeMap;
+
+use super::ir::{Edge, Graph, Op};
+
+/// An activation tensor shape (H, W, C) with its quantization exponent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub exp: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ShapeError(pub String);
+
+impl std::fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shape error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ShapeError {}
+
+/// Infer the shape of every live output edge.
+pub fn infer_shapes(g: &Graph) -> Result<BTreeMap<Edge, TensorShape>, ShapeError> {
+    let mut shapes: BTreeMap<Edge, TensorShape> = BTreeMap::new();
+    for n in g.live() {
+        let input_shape = |i: usize| -> Result<TensorShape, ShapeError> {
+            let (e, _) = n
+                .inputs
+                .get(i)
+                .ok_or_else(|| ShapeError(format!("{} missing input {i}", n.name)))?;
+            shapes
+                .get(e)
+                .copied()
+                .ok_or_else(|| ShapeError(format!("{} reads unshaped edge {:?}", n.name, e)))
+        };
+        match &n.op {
+            Op::Input { h, w, c, exp } => {
+                shapes.insert(Edge::new(n.id, 0), TensorShape { h: *h, w: *w, c: *c, exp: *exp });
+            }
+            Op::Conv(a) => {
+                let s = input_shape(0)?;
+                if s.c != a.cin {
+                    return Err(ShapeError(format!(
+                        "{}: cin {} but input has {} channels", n.name, a.cin, s.c
+                    )));
+                }
+                let oh = (s.h + 2 * a.pad - a.k) / a.stride + 1;
+                let ow = (s.w + 2 * a.pad - a.k) / a.stride + 1;
+                // Raw-output convs stream int32 accumulators at the
+                // accumulator exponent (input exp + weight exp).
+                let exp = if a.raw_output { s.exp + a.w_exp } else { a.out_exp };
+                shapes.insert(
+                    Edge::new(n.id, 0),
+                    TensorShape { h: oh, w: ow, c: a.cout, exp },
+                );
+                if a.forwards_input {
+                    // Port 1 re-emits the input tensor (temporal reuse).
+                    shapes.insert(Edge::new(n.id, 1), s);
+                } else if let Some(ds) = &a.merged_downsample {
+                    // Port 1 carries the merged downsample conv's output.
+                    let dh = (s.h + 2 * ds.pad - ds.k) / ds.stride + 1;
+                    let dw = (s.w + 2 * ds.pad - ds.k) / ds.stride + 1;
+                    shapes.insert(
+                        Edge::new(n.id, 1),
+                        TensorShape { h: dh, w: dw, c: ds.cout, exp: ds.out_exp },
+                    );
+                }
+            }
+            Op::BatchNorm(b) => {
+                let s = input_shape(0)?;
+                if s.c != b.channels {
+                    return Err(ShapeError(format!("{}: bn channels mismatch", n.name)));
+                }
+                shapes.insert(Edge::new(n.id, 0), s);
+            }
+            Op::Relu => {
+                let s = input_shape(0)?;
+                shapes.insert(Edge::new(n.id, 0), s);
+            }
+            Op::Add { out_exp } => {
+                let a = input_shape(0)?;
+                let b = input_shape(1)?;
+                if (a.h, a.w, a.c) != (b.h, b.w, b.c) {
+                    return Err(ShapeError(format!(
+                        "{}: add operands {:?} vs {:?}", n.name, (a.h, a.w, a.c), (b.h, b.w, b.c)
+                    )));
+                }
+                shapes.insert(Edge::new(n.id, 0), TensorShape { exp: *out_exp, ..a });
+            }
+            Op::MaxPool { k, stride } => {
+                let s = input_shape(0)?;
+                shapes.insert(
+                    Edge::new(n.id, 0),
+                    TensorShape { h: (s.h - k) / stride + 1, w: (s.w - k) / stride + 1, ..s },
+                );
+            }
+            Op::GlobalAvgPool { out_exp } => {
+                let s = input_shape(0)?;
+                shapes.insert(Edge::new(n.id, 0), TensorShape { h: 1, w: 1, c: s.c, exp: *out_exp });
+            }
+            Op::Linear { cin, cout, .. } => {
+                let s = input_shape(0)?;
+                if s.h * s.w * s.c != *cin {
+                    return Err(ShapeError(format!(
+                        "{}: linear cin {} vs input {}x{}x{}", n.name, cin, s.h, s.w, s.c
+                    )));
+                }
+                // Logits are int32 at an implementation-defined exponent; use
+                // the accumulator exponent (input exp + weight exp).
+                shapes.insert(Edge::new(n.id, 0), TensorShape { h: 1, w: 1, c: *cout, exp: 0 });
+            }
+        }
+    }
+    Ok(shapes)
+}
+
+/// Shape of a node's primary output.
+pub fn output_shape(g: &Graph, node: usize) -> Result<TensorShape, ShapeError> {
+    let shapes = infer_shapes(g)?;
+    shapes
+        .get(&Edge::new(node, 0))
+        .copied()
+        .ok_or_else(|| ShapeError(format!("no shape for node {node}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ir::{ConvAttrs, Graph, Op};
+
+    #[test]
+    fn conv_shapes() {
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 32, w: 32, c: 3, exp: -7 }, &[]);
+        let c = g.add_simple(
+            "c",
+            Op::Conv(ConvAttrs {
+                cin: 3, cout: 16, k: 3, stride: 2, pad: 1, relu: true,
+                w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false, raw_output: false,
+            }),
+            &[Edge::new(i, 0)],
+        );
+        let shapes = infer_shapes(&g).unwrap();
+        let s = shapes[&Edge::new(c, 0)];
+        assert_eq!((s.h, s.w, s.c), (16, 16, 16));
+    }
+
+    #[test]
+    fn mismatched_cin_rejected() {
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 3, exp: -7 }, &[]);
+        g.add_simple(
+            "c",
+            Op::Conv(ConvAttrs {
+                cin: 4, cout: 8, k: 3, stride: 1, pad: 1, relu: false,
+                w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false, raw_output: false,
+            }),
+            &[Edge::new(i, 0)],
+        );
+        assert!(infer_shapes(&g).is_err());
+    }
+}

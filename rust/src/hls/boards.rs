@@ -1,0 +1,93 @@
+//! Target platforms (paper Table 2).
+//!
+//! Note: the paper's Table 2 swaps the LUT and FF columns (the xczu3eg has
+//! 70,560 LUTs / 141,120 FFs, not the reverse — and Table 4's own
+//! percentages confirm it: 46.4 kLUT at 65.8% ⇒ ≈70.5k total).  We store
+//! the corrected values and document the fix here.
+
+/// An FPGA target board.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Board {
+    pub name: &'static str,
+    pub part: &'static str,
+    pub luts: u32,
+    pub ffs: u32,
+    /// BRAM36 blocks (36 Kib = 4 KiB usable each, paper Section III-D).
+    pub bram36: u32,
+    pub dsps: u32,
+    /// UltraRAM blocks (288 Kib = 32 KiB each); 0 when absent.
+    pub urams: u32,
+    /// Achieved fabric clock for our design, MHz (paper Table 3).
+    pub clock_mhz: f64,
+}
+
+impl Board {
+    /// N_PAR for the ILP: the paper sets it to the DSP count (Eq. 13,
+    /// "during hardware generation, N_PAR is set to the number of DSPs").
+    pub fn n_par(&self) -> u32 {
+        self.dsps
+    }
+
+    /// Whether parameters live in URAM (KV260) or BRAM (Ultra96),
+    /// paper Section III-D.
+    pub fn uses_uram(&self) -> bool {
+        self.urams > 0
+    }
+}
+
+/// Avnet Ultra96-V2 (Zynq UltraScale+ ZU3EG).
+pub const ULTRA96: Board = Board {
+    name: "Ultra96",
+    part: "xczu3eg",
+    luts: 70_560,
+    ffs: 141_120,
+    bram36: 216,
+    dsps: 360,
+    urams: 0,
+    clock_mhz: 214.0,
+};
+
+/// AMD/Xilinx Kria KV260 (Zynq UltraScale+ ZU5EV fabric).
+pub const KV260: Board = Board {
+    name: "KV260",
+    part: "xczu5ev",
+    luts: 117_120,
+    ffs: 234_240,
+    bram36: 144,
+    dsps: 1_248,
+    urams: 64,
+    clock_mhz: 274.0,
+};
+
+/// All boards the paper evaluates.
+pub const BOARDS: [&Board; 2] = [&ULTRA96, &KV260];
+
+pub fn board_by_name(name: &str) -> Option<&'static Board> {
+    match name.to_ascii_lowercase().as_str() {
+        "ultra96" | "ultra96-v2" => Some(&ULTRA96),
+        "kv260" | "kria" | "kria-kv260" => Some(&KV260),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_dsp_counts() {
+        // Eq. 13 discussion: "360 and 1248 DSPs, respectively".
+        assert_eq!(ULTRA96.n_par(), 360);
+        assert_eq!(KV260.n_par(), 1248);
+    }
+
+    #[test]
+    fn table4_percentages_back_out_lut_totals() {
+        // ResNet8/Ultra96: 46.4 kLUT reported as 65.8 %.
+        let frac = 46_400.0 / ULTRA96.luts as f64;
+        assert!((frac - 0.658).abs() < 0.01, "got {frac}");
+        // ResNet20/KV260: 81.2 kLUT reported as 69.4 %.
+        let frac = 81_200.0 / KV260.luts as f64;
+        assert!((frac - 0.694).abs() < 0.01, "got {frac}");
+    }
+}

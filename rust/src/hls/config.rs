@@ -1,0 +1,321 @@
+//! Accelerator configuration: per-task template parameters derived from
+//! the (optimized or naive) graph, the ILP allocation, and the board.
+//!
+//! This is the Rust equivalent of the paper's configuration Python script:
+//! it decides every template parameter of the C++ task library (unrolls,
+//! stream depths, buffer partitions) and feeds the simulator, the resource
+//! estimator and the code generator.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::{infer_shapes, Edge, Graph, InputRole, Op, TensorShape};
+use crate::ilp::Allocation;
+
+use super::boards::Board;
+use super::packing::{chain_plan, ChainPlan};
+use super::streams::{output_stream, parameter_stream, skip_stream, StreamSpec};
+use super::window::{buffer_size, skip_buffer_naive, slice_plan, SlicePlan};
+
+/// Per-convolution task configuration.
+#[derive(Debug, Clone)]
+pub struct LayerConfig {
+    pub name: String,
+    pub node: usize,
+    // Geometry.
+    pub ich: usize,
+    pub och: usize,
+    pub ih: usize,
+    pub iw: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+    // Parallelism.
+    pub och_par: usize,
+    pub ow_par: usize,
+    // Derived.
+    pub och_groups: usize,
+    /// Weights consumed per cycle (`cw_i = och_par * fh * fw`, Sec. III-D).
+    pub cw: usize,
+    pub macs: u64,
+    pub cycles: u64,
+    pub dsps: u64,
+    pub chain: ChainPlan,
+    pub window: SlicePlan,
+    pub window_capacity: usize,
+    pub param_stream: StreamSpec,
+    pub out_stream: StreamSpec,
+    /// Skip stream feeding this conv's accumulator init (optimized form).
+    pub skip_in: Option<StreamSpec>,
+    /// This task also computes a merged pointwise downsample (loop merge).
+    pub merged_ds: Option<MergedDsConfig>,
+    /// This task forwards its input on port 1 (temporal reuse).
+    pub forwards_input: bool,
+    /// Parameter storage bytes (int8 weights + int16 bias).
+    pub param_bytes: usize,
+}
+
+/// Configuration of a loop-merged downsample sub-task.
+#[derive(Debug, Clone)]
+pub struct MergedDsConfig {
+    pub name: String,
+    pub och: usize,
+    pub och_par: usize,
+    pub cw: usize,
+    pub dsps: u64,
+    pub param_bytes: usize,
+    pub out_stream: StreamSpec,
+}
+
+/// Residual-add task configuration (exists only in the *naive* dataflow;
+/// the optimized graph fuses it away).
+#[derive(Debug, Clone)]
+pub struct AddConfig {
+    pub name: String,
+    pub node: usize,
+    /// Skip FIFO capacity required to avoid deadlock (Eq. 21's
+    /// receptive-field bound in the naive dataflow).
+    pub skip_fifo: usize,
+    pub elems: usize,
+}
+
+/// Whole-accelerator configuration.
+#[derive(Debug, Clone)]
+pub struct AcceleratorConfig {
+    pub arch_name: String,
+    pub board: Board,
+    pub ow_par: usize,
+    pub convs: BTreeMap<usize, LayerConfig>,
+    pub adds: BTreeMap<usize, AddConfig>,
+    /// Steady-state cycles per frame (bottleneck task).
+    pub cycles_per_frame: u64,
+    pub dsps_used: u64,
+}
+
+impl AcceleratorConfig {
+    /// FPS at the board clock.
+    pub fn fps(&self) -> f64 {
+        self.board.clock_mhz * 1e6 / self.cycles_per_frame as f64
+    }
+
+    /// Single-frame latency estimate in cycles: the dataflow pipeline's
+    /// fill time — the sum over the longest path of each task's time to
+    /// first output (window-buffer fill) plus the bottleneck interval.
+    pub fn latency_cycles(&self) -> u64 {
+        // Fill: each conv must buffer B_i activations before producing;
+        // producers emit och per cycle-group.  A close analytic bound is
+        // Σ_i (B_i / och_prev_rate) + cycles_per_frame; the simulator
+        // measures it exactly, this is the quick estimate.
+        let fill: u64 = self
+            .convs
+            .values()
+            .map(|c| (c.window_capacity / c.ich.max(1)) as u64)
+            .sum();
+        fill + self.cycles_per_frame
+    }
+
+    /// Total skip-connection buffering in activations.
+    pub fn skip_buffer_total(&self) -> usize {
+        let fused: usize = self
+            .convs
+            .values()
+            .filter_map(|c| c.skip_in.as_ref().map(|s| s.capacity()))
+            .sum();
+        let naive: usize = self.adds.values().map(|a| a.skip_fifo).sum();
+        fused + naive
+    }
+
+    /// Total parameter bytes.
+    pub fn param_bytes(&self) -> usize {
+        self.convs
+            .values()
+            .map(|c| c.param_bytes + c.merged_ds.as_ref().map_or(0, |m| m.param_bytes))
+            .sum()
+    }
+}
+
+/// Build the configuration for a graph + allocation on a board.
+///
+/// The allocation is keyed by layer *name* and must cover every conv in
+/// the graph (including merged downsamples, which the ILP sees as layers).
+pub fn configure(
+    arch_name: &str,
+    g: &Graph,
+    alloc: &Allocation,
+    board: &Board,
+    ow_par: usize,
+) -> Result<AcceleratorConfig> {
+    let shapes = infer_shapes(g).map_err(|e| anyhow!("{e}"))?;
+    let mut convs = BTreeMap::new();
+    let mut adds = BTreeMap::new();
+    let mut dsps_used = 0u64;
+    let mut bottleneck = 0u64;
+
+    for n in g.live() {
+        match &n.op {
+            Op::Conv(a) => {
+                let in_shape = shapes[&n.inputs[0].0];
+                let out_shape = shapes[&Edge::new(n.id, 0)];
+                let la = alloc
+                    .layer(&n.name)
+                    .ok_or_else(|| anyhow!("no allocation for layer {}", n.name))?;
+                let taps = a.k * a.k;
+                let macs = (out_shape.h * out_shape.w * a.cout * a.cin * taps) as u64;
+                let cycles = macs.div_ceil(la.cp);
+                let param_bytes = taps * a.cin * a.cout + 2 * a.cout;
+                let skip_in = n
+                    .inputs
+                    .iter()
+                    .find(|(_, r)| *r == InputRole::SkipInit)
+                    .map(|_| skip_stream(buffer_size(a.k, a.k, in_shape.w, a.cin, 1)));
+                let host_groups = a.cout.div_ceil(la.och_par);
+                let merged_ds = a.merged_downsample.as_ref().map(|m| {
+                    // The merged loop iterates the host's och_groups; the
+                    // downsample must finish its channels within that
+                    // shadow, so its unroll is at least ceil(och_ds /
+                    // host_groups) — usually more than the ILP's isolated
+                    // choice (its c_i is tiny), never less.
+                    let ilp_p = alloc.layer(&m.name).map_or(1, |l| l.och_par);
+                    let ds_och_par = ilp_p.max(m.cout.div_ceil(host_groups));
+                    let ds_taps = m.k * m.k;
+                    MergedDsConfig {
+                        name: m.name.clone(),
+                        och: m.cout,
+                        och_par: ds_och_par,
+                        cw: ds_och_par * ds_taps,
+                        dsps: (ds_taps * ds_och_par) as u64,
+                        param_bytes: ds_taps * a.cin * m.cout + 2 * m.cout,
+                        out_stream: output_stream(m.cout, ds_och_par, ow_par),
+                    }
+                });
+                dsps_used += la.dsps + merged_ds.as_ref().map_or(0, |m| m.dsps);
+                bottleneck = bottleneck.max(cycles);
+                convs.insert(
+                    n.id,
+                    LayerConfig {
+                        name: n.name.clone(),
+                        node: n.id,
+                        ich: a.cin,
+                        och: a.cout,
+                        ih: in_shape.h,
+                        iw: in_shape.w,
+                        oh: out_shape.h,
+                        ow: out_shape.w,
+                        k: a.k,
+                        stride: a.stride,
+                        pad: a.pad,
+                        relu: a.relu,
+                        och_par: la.och_par,
+                        ow_par,
+                        och_groups: a.cout.div_ceil(la.och_par),
+                        cw: la.och_par * taps,
+                        macs,
+                        cycles,
+                        dsps: la.dsps,
+                        chain: chain_plan(taps),
+                        window: slice_plan(a.k, a.k, in_shape.w, a.cin, ow_par),
+                        window_capacity: buffer_size(a.k, a.k, in_shape.w, a.cin, ow_par),
+                        param_stream: parameter_stream(la.och_par, taps),
+                        out_stream: output_stream(a.cout, la.och_par, ow_par),
+                        skip_in,
+                        merged_ds,
+                        forwards_input: a.forwards_input,
+                        param_bytes,
+                    },
+                );
+            }
+            Op::Add { .. } => {
+                // Naive dataflow: size the skip FIFO by the receptive-field
+                // bound (Eq. 21) using the producing/consuming conv pair.
+                let skip_edge = n.inputs[1].0;
+                let long_edge = n.inputs[0].0;
+                let conv1 = g.node(long_edge.node);
+                let (c1k, _c1pad) = match &conv1.op {
+                    Op::Conv(a) => (a.k, a.pad),
+                    _ => (3, 1),
+                };
+                let conv0 = g.node(conv1.inputs[0].0.node);
+                let (c0k, c0_in) = match &conv0.op {
+                    Op::Conv(a) => (a.k, shapes[&conv0.inputs[0].0]),
+                    _ => (3, shapes[&skip_edge]),
+                };
+                let skip_fifo = skip_buffer_naive(c0k, c0k, c0_in.w, c0_in.c, c1k, c1k);
+                let s: TensorShape = shapes[&Edge::new(n.id, 0)];
+                adds.insert(
+                    n.id,
+                    AddConfig {
+                        name: n.name.clone(),
+                        node: n.id,
+                        skip_fifo,
+                        elems: s.h * s.w * s.c,
+                    },
+                );
+            }
+            _ => {}
+        }
+    }
+
+    Ok(AcceleratorConfig {
+        arch_name: arch_name.to_string(),
+        board: board.clone(),
+        ow_par,
+        convs,
+        adds,
+        cycles_per_frame: bottleneck,
+        dsps_used,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::boards::{KV260, ULTRA96};
+    use crate::ilp::{loads_from_arch, solve};
+    use crate::models::{build_optimized_graph, build_unoptimized_graph, default_exps, resnet8};
+
+    fn cfg_for(board: &Board, optimized: bool) -> AcceleratorConfig {
+        let arch = resnet8();
+        let (act, w) = default_exps(&arch);
+        let g = if optimized {
+            build_optimized_graph(&arch, &act, &w)
+        } else {
+            build_unoptimized_graph(&arch, &act, &w)
+        };
+        let alloc = solve(&loads_from_arch(&arch, 2), board.n_par() as u64).unwrap();
+        configure(&arch.name, &g, &alloc, board, 2).unwrap()
+    }
+
+    #[test]
+    fn optimized_config_has_no_add_tasks() {
+        let c = cfg_for(&ULTRA96, true);
+        assert!(c.adds.is_empty());
+        assert_eq!(c.convs.len(), 7, "9 convs - 2 merged downsamples");
+        let merged = c.convs.values().filter(|l| l.merged_ds.is_some()).count();
+        assert_eq!(merged, 2);
+        assert!(c.fps() > 1000.0);
+    }
+
+    #[test]
+    fn naive_config_skip_buffers_double() {
+        let opt = cfg_for(&KV260, true);
+        let naive = cfg_for(&KV260, false);
+        let r = opt.skip_buffer_total() as f64 / naive.skip_buffer_total() as f64;
+        // Paper Eq. 23: R_sc = 0.5 for every block.
+        assert!((r - 0.5).abs() < 0.05, "R_sc = {r}");
+    }
+
+    #[test]
+    fn parameter_bandwidth_matches_unroll() {
+        let c = cfg_for(&ULTRA96, true);
+        for l in c.convs.values() {
+            assert_eq!(l.cw, l.och_par * l.k * l.k);
+            assert_eq!(l.param_stream.token, l.cw);
+            assert_eq!(l.och_groups, l.och.div_ceil(l.och_par));
+            assert!(l.och_groups * l.och_par >= l.och);
+        }
+    }
+}

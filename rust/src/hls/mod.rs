@@ -1,0 +1,23 @@
+//! HLS-style design layer: everything the paper's Python configuration
+//! script + templated C++ library decide at code-generation time.
+//!
+//! * [`boards`] — target platforms (Table 2);
+//! * [`window`] — window-buffer geometry and skip buffering (Eqs. 16–23);
+//! * [`packing`] — the WP487 DSP packing model, bit-exact (Section III-C);
+//! * [`streams`] — inter-task FIFO sizing (Section III-E);
+//! * [`config`] — per-task template parameters for a full accelerator;
+//! * [`resources`] — LUT/FF/DSP/BRAM/URAM estimation + resource closure;
+//! * [`codegen`] — the generated C++ top function (Section III-B).
+
+pub mod boards;
+pub mod codegen;
+pub mod config;
+pub mod packing;
+pub mod power;
+pub mod resources;
+pub mod streams;
+pub mod window;
+
+pub use boards::{board_by_name, Board, BOARDS, KV260, ULTRA96};
+pub use config::{AcceleratorConfig, LayerConfig};
+pub use resources::{fit_to_board, ResourceReport};

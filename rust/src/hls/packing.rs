@@ -1,0 +1,194 @@
+//! DSP packing model (paper Section III-C, after Xilinx WP487 [38]).
+//!
+//! One DSP48E2 multiplies a 27-bit and an 18-bit operand and accumulates
+//! into a 48-bit register.  Packing two int8 activations `a`, `d` into the
+//! 27-bit port (`d` in the upper half, 18 bits apart) against one int8
+//! weight `b` yields
+//!
+//! ```text
+//!   M = (d*2^18 + a) * b = (d*b)*2^18 + (a*b)
+//! ```
+//!
+//! i.e. two MACs per DSP per cycle — the paper's `ow_par = 2`.  Chained
+//! accumulation keeps both products in 18-bit lanes of the 48-bit partial;
+//! the lower lane's sign bleeds a borrow into the upper lane, which the
+//! paper's per-stage correction (`- p_v[17]`) and final *restore* stage
+//! undo.  Algebraically the running 48-bit value is exactly
+//! `U*2^18 + V` with `U = Σ d_j b_j`, `V = Σ a_j b_j`; this module models
+//! that arithmetic bit-exactly and enforces the paper's chain-length limit.
+//!
+//! Because of the 2 guard bits and the 1-bit restore headroom, at most
+//! **7** packed DSPs can be chained (Section III-C); a 3x3 filter's 9 taps
+//! therefore split into two chains (7 + 2) plus one combining adder.
+
+/// Maximum packed-DSP chain length for 8-bit operands (paper: 7).
+pub const MAX_CHAIN: usize = 7;
+
+/// The 18-bit lane mask of the 48-bit accumulator.
+const LANE_MASK: i64 = (1 << 18) - 1;
+
+/// Pack two int8 activations into the 27-bit multiplier port.
+/// Returns the signed integer value `d*2^18 + a` (fits in 27 bits).
+#[inline]
+pub fn pack_operands(a: i8, d: i8) -> i64 {
+    ((d as i64) << 18) + (a as i64)
+}
+
+/// One packed-DSP stage: multiply the packed activations by weight `b` and
+/// add to the previous 48-bit partial.  Panics (debug) on 48-bit overflow —
+/// which cannot happen within [`MAX_CHAIN`].
+#[inline]
+pub fn dsp_stage(p_prev: i64, a: i8, d: i8, b: i8) -> i64 {
+    let m = pack_operands(a, d) * (b as i64); // 27x18 multiply
+    let p = p_prev + m; // 48-bit accumulate
+    debug_assert!(
+        p.abs() < (1i64 << 47),
+        "48-bit accumulator overflow: {p}"
+    );
+    p
+}
+
+/// Decode the two lanes of a 48-bit partial: `(sum_d_b, sum_a_b)`.
+///
+/// This is the paper's *restore* stage: the lower lane is sign-extended
+/// from 18 bits and the borrow it imposed on the upper lane is undone
+/// (adding back `p_v[17]`).
+#[inline]
+pub fn decode_lanes(p: i64) -> (i32, i32) {
+    let v_raw = p & LANE_MASK;
+    // Sign-extend 18-bit lane.
+    let v = if v_raw & (1 << 17) != 0 { v_raw - (1 << 18) } else { v_raw };
+    let u = (p - v) >> 18;
+    (u as i32, v as i32)
+}
+
+/// Run a full packed chain over up to [`MAX_CHAIN`] taps.
+/// `taps[j] = (a_j, d_j, b_j)`; returns `(Σ d·b, Σ a·b)`.
+pub fn packed_chain(taps: &[(i8, i8, i8)]) -> (i32, i32) {
+    assert!(
+        taps.len() <= MAX_CHAIN,
+        "chain length {} exceeds the paper's limit {MAX_CHAIN}",
+        taps.len()
+    );
+    let mut p = 0i64;
+    for &(a, d, b) in taps {
+        p = dsp_stage(p, a, d, b);
+    }
+    decode_lanes(p)
+}
+
+/// Chain plan for a filter with `taps` MACs: chain lengths + adders needed.
+///
+/// The paper splits 9 taps into two chains respecting the max length and
+/// combines the partials in an additional stage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainPlan {
+    pub chains: Vec<usize>,
+    /// Combining adder stages (chains - 1).
+    pub extra_adders: usize,
+    /// Total pipeline depth in stages (chains run in parallel; depth is the
+    /// longest chain plus the adder tree).
+    pub pipeline_depth: usize,
+}
+
+pub fn chain_plan(taps: usize) -> ChainPlan {
+    let n_chains = taps.div_ceil(MAX_CHAIN);
+    let mut chains = Vec::with_capacity(n_chains);
+    let mut remaining = taps;
+    for i in 0..n_chains {
+        let len = remaining.div_ceil(n_chains - i).min(MAX_CHAIN).min(remaining);
+        // Fill greedily (paper: 9 -> 7 + 2).
+        let len = if i == 0 { remaining.min(MAX_CHAIN) } else { len };
+        chains.push(len);
+        remaining -= len;
+    }
+    // Redistribute leftovers if the greedy fill missed (taps > 7*n_chains
+    // cannot happen by construction).
+    assert_eq!(chains.iter().sum::<usize>(), taps);
+    let extra_adders = n_chains - 1;
+    let depth = chains.iter().copied().max().unwrap_or(0) + extra_adders;
+    ChainPlan { chains, extra_adders, pipeline_depth: depth }
+}
+
+/// DSPs needed by one processing-element group computing `och_par` output
+/// channels of a `taps`-tap filter (Eq. 9 context):
+/// one DSP per tap per channel — independent of `ow_par` (that is the
+/// whole point of packing: `ow_par = 2` doubles MACs/cycle at equal DSPs).
+pub fn dsps_for(och_par: usize, taps: usize) -> usize {
+    och_par * taps
+}
+
+/// MACs per cycle delivered by that group (paper Eq. 9):
+/// `cp = k * och_par * ow_par`.
+pub fn macs_per_cycle(och_par: usize, taps: usize, ow_par: usize) -> usize {
+    och_par * taps * ow_par
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn single_stage_decodes_two_macs() {
+        let (u, v) = packed_chain(&[(3, -5, 7)]);
+        assert_eq!(v, 21); // a*b
+        assert_eq!(u, -35); // d*b
+    }
+
+    #[test]
+    fn chain_of_seven_is_exact() {
+        forall("7-chain lanes == scalar sums", 2000, |rng| {
+            let n = rng.range_i64(1, MAX_CHAIN as i64) as usize;
+            let taps: Vec<(i8, i8, i8)> = (0..n)
+                .map(|_| {
+                    (
+                        rng.range_i64(-128, 127) as i8,
+                        rng.range_i64(-128, 127) as i8,
+                        rng.range_i64(-128, 127) as i8,
+                    )
+                })
+                .collect();
+            let (u, v) = packed_chain(&taps);
+            let su: i32 = taps.iter().map(|&(_, d, b)| d as i32 * b as i32).sum();
+            let sv: i32 = taps.iter().map(|&(a, _, b)| a as i32 * b as i32).sum();
+            assert_eq!(u, su);
+            assert_eq!(v, sv);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the paper's limit")]
+    fn chain_of_eight_rejected() {
+        let taps = vec![(1i8, 1i8, 1i8); 8];
+        packed_chain(&taps);
+    }
+
+    #[test]
+    fn paper_3x3_split() {
+        // 9 taps -> chains of 7 + 2, one combining adder (Fig. 5 bottom).
+        let plan = chain_plan(9);
+        assert_eq!(plan.chains, vec![7, 2]);
+        assert_eq!(plan.extra_adders, 1);
+        // 1x1 filter: single 1-stage chain, no adder.
+        let plan = chain_plan(1);
+        assert_eq!(plan.chains, vec![1]);
+        assert_eq!(plan.extra_adders, 0);
+    }
+
+    #[test]
+    fn packing_doubles_throughput_at_equal_dsps() {
+        let dsps = dsps_for(8, 9);
+        assert_eq!(dsps, 72);
+        assert_eq!(macs_per_cycle(8, 9, 2), 2 * macs_per_cycle(8, 9, 1));
+    }
+
+    #[test]
+    fn lane_decode_handles_negative_lower_lane() {
+        // Single stage with a*b < 0: upper lane must not absorb the borrow.
+        let p = dsp_stage(0, -128, 127, 127);
+        let (u, v) = decode_lanes(p);
+        assert_eq!(v, -16256);
+        assert_eq!(u, 16129);
+    }
+}

@@ -1,0 +1,243 @@
+//! FPGA resource estimation and resource closure (paper Table 4).
+//!
+//! DSP and memory counts are *structural* (derived from the configuration:
+//! one DSP per tap per parallel channel, BRAM/URAM from buffer bytes and
+//! port bandwidth).  LUT/FF counts use a linear regression calibrated on
+//! the paper's own Table 4 rows (documented below) — the standard way to
+//! predict HLS resource usage pre-synthesis.
+//!
+//! `fit_to_board` is the *resource closure loop*: Algorithm 1 alone only
+//! constrains DSPs, but the paper's KV260/ResNet20 design stops at 50% DSP
+//! because LUTs saturate first (69.4% at 626 DSPs, Table 4).  We model
+//! that by shrinking the DSP budget until the whole estimate fits.
+
+use anyhow::Result;
+
+use crate::graph::Graph;
+use crate::ilp::{solve, Allocation, LayerLoad};
+
+use super::boards::Board;
+use super::config::{configure, AcceleratorConfig};
+
+/// LUT/FF regression constants, least-squares fit to all four of the
+/// paper's Table 4 rows (see DESIGN.md §Resources):
+///   LUT = A_L * DSPs + B_L * conv_tasks  (+ LUTRAM, computed structurally)
+/// residuals < 8% on every row.
+const LUT_PER_DSP: f64 = 85.0;
+const LUT_PER_TASK: f64 = 1330.0;
+const LUT_BASE: f64 = 0.0;
+/// FFs track LUTs closely in the paper's rows (0.95–1.06x).
+const FF_PER_LUT: f64 = 1.03;
+
+/// BRAM36 usable bytes (paper Section III-D: "up to 4 KB each").
+const BRAM_BYTES: usize = 4096;
+/// URAM usable bytes ("32 KB of data each").
+const URAM_BYTES: usize = 32 * 1024;
+/// Distributed-RAM threshold: FIFOs at or below this depth map to LUTRAM.
+const LUTRAM_MAX_DEPTH: usize = 1024;
+/// LUTs per byte of distributed RAM (SRL/LUTRAM packing, 64 bits per LUT
+/// in RAM64 mode, halved for addressing overhead).
+const LUTS_PER_LUTRAM_BYTE: f64 = 0.25;
+
+/// A resource utilization report (Table 4 row).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResourceReport {
+    pub dsps: u64,
+    pub bram36: u64,
+    pub urams: u64,
+    pub luts: u64,
+    pub ffs: u64,
+    /// LUTs spent as distributed RAM (subset of `luts`).
+    pub lutram_luts: u64,
+}
+
+/// Routing/timing headroom: designs above ~80% LUT utilization do not
+/// close timing at the paper's 274/214 MHz clocks (the paper's own
+/// largest designs sit at 69-77% LUT plus 15-21% LUTRAM).
+pub const LUT_CLOSURE_FRAC: f64 = 0.83;
+
+impl ResourceReport {
+    pub fn fits(&self, b: &Board) -> bool {
+        self.dsps <= b.dsps as u64
+            && self.bram36 <= b.bram36 as u64
+            && self.urams <= b.urams as u64
+            && (self.luts as f64) <= b.luts as f64 * LUT_CLOSURE_FRAC
+            && self.ffs <= b.ffs as u64
+    }
+
+    pub fn utilization(&self, b: &Board) -> String {
+        format!(
+            "LUT {:.1}k ({:.1}%)  FF {:.1}k ({:.1}%)  DSP {} ({:.1}%)  BRAM {} ({:.1}%)  URAM {} ({:.1}%)",
+            self.luts as f64 / 1e3,
+            100.0 * self.luts as f64 / b.luts as f64,
+            self.ffs as f64 / 1e3,
+            100.0 * self.ffs as f64 / b.ffs as f64,
+            self.dsps,
+            100.0 * self.dsps as f64 / b.dsps as f64,
+            self.bram36,
+            100.0 * self.bram36 as f64 / b.bram36 as f64,
+            self.urams,
+            if b.urams > 0 { 100.0 * self.urams as f64 / b.urams as f64 } else { 0.0 },
+        )
+    }
+}
+
+/// Estimate resources for a configured accelerator.
+pub fn estimate(cfg: &AcceleratorConfig) -> ResourceReport {
+    let board = &cfg.board;
+    let mut r = ResourceReport::default();
+    let mut lutram_bytes = 0usize;
+    let mut conv_tasks = 0usize;
+
+    for l in cfg.convs.values() {
+        conv_tasks += 1;
+        r.dsps += l.dsps + l.merged_ds.as_ref().map_or(0, |m| m.dsps);
+
+        // Parameter storage: URAM on boards that have it (Sec. III-D), with
+        // enough banks for both capacity and the cw bytes/cycle bandwidth.
+        // Both memories are dual-ported (URAM: 2x72-bit = 16 B/cycle,
+        // BRAM36: 2x36-bit = 8 B/cycle); the parameter tasks replay from
+        // their first-iteration cache (Sec. III-D), so both ports serve
+        // reads in steady state.
+        let pb = l.param_bytes + l.merged_ds.as_ref().map_or(0, |m| m.param_bytes);
+        let bw = l.cw + l.merged_ds.as_ref().map_or(0, |m| m.cw);
+        if board.uses_uram() {
+            r.urams += (pb.div_ceil(URAM_BYTES)).max(bw.div_ceil(16)) as u64;
+        } else {
+            r.bram36 += (pb.div_ceil(BRAM_BYTES)).max(bw.div_ceil(8)) as u64;
+        }
+
+        // Window buffer slices: deep slices (the S2 row gaps) go to BRAM,
+        // shallow ones (S1 = ich) to LUTRAM.
+        for &d in &l.window.sizes {
+            if d > LUTRAM_MAX_DEPTH {
+                r.bram36 += d.div_ceil(BRAM_BYTES).max(1) as u64;
+            } else {
+                lutram_bytes += d;
+            }
+        }
+
+        // Output stream FIFOs.
+        let oc = l.out_stream.capacity();
+        if oc > LUTRAM_MAX_DEPTH {
+            r.bram36 += oc.div_ceil(BRAM_BYTES).max(1) as u64;
+        } else {
+            lutram_bytes += oc;
+        }
+
+        // Skip stream (optimized form): conv1's window-sized FIFO.
+        if let Some(s) = &l.skip_in {
+            let c = s.capacity();
+            if c > LUTRAM_MAX_DEPTH {
+                r.bram36 += c.div_ceil(BRAM_BYTES).max(1) as u64;
+            } else {
+                lutram_bytes += c;
+            }
+        }
+    }
+
+    // Naive-dataflow Add tasks: their (much larger) skip FIFOs.
+    for a in cfg.adds.values() {
+        r.bram36 += a.skip_fifo.div_ceil(BRAM_BYTES).max(1) as u64;
+        conv_tasks += 1; // an extra concurrent task with control logic
+    }
+
+    r.lutram_luts = (lutram_bytes as f64 * LUTS_PER_LUTRAM_BYTE) as u64;
+    r.luts = (LUT_PER_DSP * r.dsps as f64 + LUT_PER_TASK * conv_tasks as f64 + LUT_BASE) as u64
+        + r.lutram_luts;
+    r.ffs = (r.luts as f64 * FF_PER_LUT) as u64;
+    r
+}
+
+/// Resource closure: find the largest DSP budget whose full design fits
+/// the board, then return (allocation, config, report).
+///
+/// Shrinks the budget geometrically (3% steps) — the allocation space is
+/// quantized by the divisor constraint so fine steps are pointless.
+pub fn fit_to_board(
+    arch_name: &str,
+    g: &Graph,
+    loads: &[LayerLoad],
+    board: &Board,
+    ow_par: usize,
+) -> Result<(Allocation, AcceleratorConfig, ResourceReport)> {
+    let mut budget = board.n_par() as u64;
+    let mut last_err = None;
+    while budget >= loads.len() as u64 {
+        match solve(loads, budget) {
+            Some(alloc) => {
+                let cfg = configure(arch_name, g, &alloc, board, ow_par)?;
+                let rep = estimate(&cfg);
+                if rep.fits(board) {
+                    return Ok((alloc, cfg, rep));
+                }
+                last_err = Some(format!(
+                    "budget {budget}: {}",
+                    rep.utilization(board)
+                ));
+            }
+            None => break,
+        }
+        budget = (budget as f64 * 0.97) as u64;
+        if budget == 0 {
+            break;
+        }
+    }
+    anyhow::bail!(
+        "no feasible design for {arch_name} on {} (last: {:?})",
+        board.name,
+        last_err
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::boards::{KV260, ULTRA96};
+    use crate::ilp::loads_from_arch;
+    use crate::models::{build_optimized_graph, default_exps, resnet20, resnet8};
+
+    fn fit(arch_name: &str, board: &Board) -> (Allocation, AcceleratorConfig, ResourceReport) {
+        let arch = if arch_name == "resnet8" { resnet8() } else { resnet20() };
+        let (act, w) = default_exps(&arch);
+        let g = build_optimized_graph(&arch, &act, &w);
+        let loads = loads_from_arch(&arch, 2);
+        fit_to_board(&arch.name, &g, &loads, board, 2).unwrap()
+    }
+
+    #[test]
+    fn all_four_designs_fit() {
+        for arch in ["resnet8", "resnet20"] {
+            for board in [&ULTRA96, &KV260] {
+                let (_, cfg, rep) = fit(arch, board);
+                assert!(rep.fits(board), "{arch}@{}: {}", board.name, rep.utilization(board));
+                assert!(cfg.fps() > 500.0, "{arch}@{}: {} fps", board.name, cfg.fps());
+            }
+        }
+    }
+
+    #[test]
+    fn table4_shape_resnet20_kv260_is_lut_bound() {
+        // The paper's ResNet20/KV260 design uses only ~50% of DSPs because
+        // LUTs close first; our closure must reproduce that *shape*.
+        let (_, _, rep) = fit("resnet20", &KV260);
+        let dsp_frac = rep.dsps as f64 / KV260.dsps as f64;
+        let lut_frac = rep.luts as f64 / KV260.luts as f64;
+        assert!(dsp_frac < 0.9, "dsp {dsp_frac}");
+        assert!(lut_frac > dsp_frac, "LUTs should bind before DSPs: lut {lut_frac} dsp {dsp_frac}");
+    }
+
+    #[test]
+    fn resnet8_ultra96_matches_paper_fps_band() {
+        // Paper Table 3: ResNet8/Ultra96 = 12 971 FPS at 214 MHz.  Our
+        // balanced divisor-quantized allocation reaches the same FPS with
+        // fewer DSPs than the paper's 100% (their design spends extra DSPs
+        // on adder trees/pool/fc that we model in LUTs) — the throughput,
+        // not the DSP count, is the reproduction target.
+        let (_, cfg, rep) = fit("resnet8", &ULTRA96);
+        let ratio = cfg.fps() / 12_971.0;
+        assert!((0.6..=1.6).contains(&ratio), "fps {} ratio {ratio}", cfg.fps());
+        let dsp_frac = rep.dsps as f64 / ULTRA96.dsps as f64;
+        assert!(dsp_frac > 0.3, "dsp {dsp_frac}");
+    }
+}

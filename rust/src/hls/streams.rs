@@ -1,0 +1,100 @@
+//! Inter-task stream (FIFO) sizing — paper Section III-E.
+//!
+//! "To avoid stalling, all streams are sized appropriately by our
+//! configuration Python script based on their type": parameter streams at
+//! depth 2 (producer and consumer move one token per cycle), window-buffer
+//! slices at their stream-distance sizes, and computation-task output
+//! streams split into `ow_par` channels of depth `och_groups` to absorb
+//! the burst of `och * ow_par` activations written per window position.
+
+/// Kinds of streams in the generated design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamKind {
+    /// parameter task -> computation task (weights), token = och_par values.
+    Parameter,
+    /// window buffer slice (FIFO between window tasks).
+    WindowSlice,
+    /// computation task output (activations), split into ow_par channels.
+    Output,
+    /// skip-connection stream into a fused conv1 (SkipInit input).
+    Skip,
+    /// top-level DMA in/out.
+    Dma,
+}
+
+/// A sized stream instance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamSpec {
+    pub kind: StreamKind,
+    /// Depth in tokens.
+    pub depth: usize,
+    /// Token width in activations (elements moved per push).
+    pub token: usize,
+    /// Parallel channels (ow_par for Output).
+    pub channels: usize,
+}
+
+impl StreamSpec {
+    /// Total buffered activations across channels.
+    pub fn capacity(&self) -> usize {
+        self.depth * self.token * self.channels
+    }
+}
+
+/// Parameter stream: "since the producer and consumer write and read one
+/// token per clock cycle, the stream size is 2."
+pub fn parameter_stream(och_par: usize, taps: usize) -> StreamSpec {
+    StreamSpec { kind: StreamKind::Parameter, depth: 2, token: och_par * taps, channels: 1 }
+}
+
+/// Computation-task output stream: `ow_par` channels, each a FIFO of
+/// `och_groups = ceil(och / och_par)` tokens of `och_par` activations, so
+/// a full burst (`och * ow_par` values) fits without stalling the pipeline
+/// (the last group may be partially filled).
+pub fn output_stream(och: usize, och_par: usize, ow_par: usize) -> StreamSpec {
+    StreamSpec {
+        kind: StreamKind::Output,
+        depth: och.div_ceil(och_par),
+        token: och_par,
+        channels: ow_par,
+    }
+}
+
+/// Skip stream into a fused conv1: depth = the optimized B_sc (Eq. 22),
+/// i.e. conv1's own window-buffer size — producer (conv0) and consumer
+/// (conv1) advance at the same rate after the graph optimization.
+pub fn skip_stream(b_sc: usize) -> StreamSpec {
+    StreamSpec { kind: StreamKind::Skip, depth: b_sc, token: 1, channels: 1 }
+}
+
+/// DMA stream (network input/output): double-buffered row of pixels.
+pub fn dma_stream(row_elems: usize) -> StreamSpec {
+    StreamSpec { kind: StreamKind::Dma, depth: 2, token: row_elems, channels: 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_streams_are_depth_two() {
+        let s = parameter_stream(8, 9);
+        assert_eq!(s.depth, 2);
+        assert_eq!(s.token, 72);
+    }
+
+    #[test]
+    fn output_stream_holds_full_burst() {
+        let s = output_stream(64, 8, 2);
+        assert_eq!(s.depth, 8); // och_groups
+        assert_eq!(s.capacity(), 64 * 2);
+    }
+
+    #[test]
+    fn partial_last_group_rounds_up() {
+        // och = 64, och_par = 7 -> 10 groups, last one partially filled.
+        let s = output_stream(64, 7, 2);
+        assert_eq!(s.depth, 10);
+        assert!(s.capacity() >= 64 * 2);
+    }
+}

@@ -1,0 +1,237 @@
+//! Window-buffer geometry (paper Section III-F) and skip-connection
+//! buffering (Section III-G) — Eqs. 16–23.
+//!
+//! The window buffer (line buffer) retains just enough of the depth-first
+//! input stream to emit one `fh x fw` window per cycle; it is physically a
+//! chain of FIFO slices (Figs. 7/9) whose sizes are the stream distances
+//! between window elements.
+
+/// Window buffer size in activations for `ow_par = 1` (Eq. 16):
+/// `B_i = [(fh-1)*iw + fw - 1] * ich`.
+pub fn buffer_size_owpar1(fh: usize, fw: usize, iw: usize, ich: usize) -> usize {
+    ((fh - 1) * iw + fw - 1) * ich
+}
+
+/// Window buffer size for `ow_par = 2` (Eq. 17):
+/// `B_i = [(fh-1)*iw + fw] * ich` — one extra column ("the overhead with
+/// respect to (16) is minimal").
+pub fn buffer_size_owpar2(fh: usize, fw: usize, iw: usize, ich: usize) -> usize {
+    ((fh - 1) * iw + fw) * ich
+}
+
+/// Window buffer size for the configured `ow_par`.
+pub fn buffer_size(fh: usize, fw: usize, iw: usize, ich: usize, ow_par: usize) -> usize {
+    match ow_par {
+        1 => buffer_size_owpar1(fh, fw, iw, ich),
+        2 => buffer_size_owpar2(fh, fw, iw, ich),
+        n => ((fh - 1) * iw + fw + n - 2) * ich, // natural generalization
+    }
+}
+
+/// FIFO slice plan for the partitioned window buffer (Figs. 7/9).
+///
+/// The buffer must be split so that all `(fw + ow_par - 1) * fh` window
+/// elements can be read each cycle with single-ported FIFOs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlicePlan {
+    /// Sizes of the FIFO slices in stream order.
+    pub sizes: Vec<usize>,
+    /// Forwarding stride: task T_i feeds slice i + stride (1 for ow_par=1,
+    /// 2 for ow_par=2 — Fig. 9's activation-reuse wiring).
+    pub forward_stride: usize,
+}
+
+impl SlicePlan {
+    pub fn slices(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+}
+
+/// Build the slice plan.  Distances in the depth-first stream:
+/// within a window row, successive taps are `S1 = ich` apart; across rows
+/// the gap is `S2 = (iw - fw_eff + 1) * ich` where `fw_eff = fw + ow_par-1`
+/// is the widened window (Fig. 8 keeps `ow_par` computation windows).
+pub fn slice_plan(fh: usize, fw: usize, iw: usize, ich: usize, ow_par: usize) -> SlicePlan {
+    let fw_eff = fw + ow_par - 1;
+    let s1 = ich;
+    let s2 = (iw - fw_eff + 1) * ich;
+    let mut sizes = Vec::new();
+    for row in 0..fh {
+        if row > 0 {
+            sizes.push(s2);
+        }
+        for _ in 1..fw_eff {
+            sizes.push(s1);
+        }
+    }
+    // The first slice in stream order holds the newest activation; sizes
+    // listed oldest-to-newest here.  One extra head slot per plan keeps the
+    // in-flight element (implementation detail of the task chain).
+    SlicePlan { sizes, forward_stride: ow_par }
+}
+
+/// Rate-aware window-buffer partitioning — the paper's stated future work
+/// (Section III-F: "Optimizing the window buffer to reduce the required
+/// partitioning in cases that allow a lower window generation rate is left
+/// for future work").
+///
+/// The full `fh*fw_eff - 1`-way split exists only to read every window
+/// element in a single cycle.  A layer whose computation task consumes one
+/// window every `interval = ich * och_groups` cycles can time-multiplex up
+/// to `interval` reads per physical FIFO, so adjacent slices merge until
+/// each merged group still satisfies `reads_per_window <= interval`.
+/// Fewer slices = fewer FIFOs = less control logic and LUTRAM
+/// fragmentation, at zero throughput cost — quantified by the
+/// `fig_buffering` bench ablation.
+pub fn slice_plan_rate_aware(
+    fh: usize,
+    fw: usize,
+    iw: usize,
+    ich: usize,
+    ow_par: usize,
+    window_interval_cycles: usize,
+) -> SlicePlan {
+    let full = slice_plan(fh, fw, iw, ich, ow_par);
+    let interval = window_interval_cycles.max(1);
+    if interval == 1 {
+        return full;
+    }
+    // Merge up to `interval` adjacent slices per physical FIFO: the window
+    // task then performs `group_len` sequential reads per window, which
+    // still completes within the consumption interval.
+    let mut sizes = Vec::new();
+    let mut acc = 0usize;
+    let mut count = 0usize;
+    for &s in &full.sizes {
+        acc += s;
+        count += 1;
+        if count == interval {
+            sizes.push(acc);
+            acc = 0;
+            count = 0;
+        }
+    }
+    if count > 0 {
+        sizes.push(acc);
+    }
+    SlicePlan { sizes, forward_stride: full.forward_stride }
+}
+
+/// Receptive-field height/width of conv1's window back-projected through
+/// conv0 (Eqs. 18–19, stride 1 as in the paper's derivation).
+pub fn receptive_field(fh0: usize, fw0: usize, fh1: usize, fw1: usize) -> (usize, usize) {
+    (fh1 + fh0 - 1, fw1 + fw0 - 1)
+}
+
+/// Skip-connection buffering of the *unoptimized* dataflow (Eq. 21): the
+/// bypass branch must hold every activation whose receptive field overlaps
+/// conv1's first window, i.e. `B_sc = [iw0*(rh0 - 1) + rw0] * ich0`.
+pub fn skip_buffer_naive(
+    fh0: usize,
+    fw0: usize,
+    iw0: usize,
+    ich0: usize,
+    fh1: usize,
+    fw1: usize,
+) -> usize {
+    let (rh0, rw0) = receptive_field(fh0, fw0, fh1, fw1);
+    (iw0 * (rh0 - 1) + rw0) * ich0
+}
+
+/// Skip-connection buffering of the *optimized* dataflow (Eq. 22): after
+/// loop merge / temporal reuse + add fusion, producer and consumer run in
+/// lockstep and the skip stream only needs conv1's window-buffer depth:
+/// `B_sc = [(fh1-1)*iw1 + fw1 - 1] * ich1`.
+pub fn skip_buffer_optimized(fh1: usize, fw1: usize, iw1: usize, ich1: usize) -> usize {
+    buffer_size_owpar1(fh1, fw1, iw1, ich1)
+}
+
+/// The buffering reduction ratio R_sc (Eq. 23).
+#[allow(clippy::too_many_arguments)]
+pub fn skip_reduction_ratio(
+    fh0: usize, fw0: usize, iw0: usize, ich0: usize,
+    fh1: usize, fw1: usize, iw1: usize, ich1: usize,
+) -> f64 {
+    skip_buffer_optimized(fh1, fw1, iw1, ich1) as f64
+        / skip_buffer_naive(fh0, fw0, iw0, ich0, fh1, fw1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn eq16_example() {
+        // 3x3 filter over a 32-wide, 16-channel tensor.
+        assert_eq!(buffer_size_owpar1(3, 3, 32, 16), ((2 * 32) + 2) * 16);
+    }
+
+    #[test]
+    fn slice_plan_sums_to_buffer_size() {
+        // The chain of slice distances spans first-to-last window element:
+        // exactly B_i (minus nothing — Eq. 16 counts the same span).
+        forall("slice plan total == B_i span", 300, |rng| {
+            let fh = rng.range_i64(1, 5) as usize;
+            let fw = rng.range_i64(1, 5) as usize;
+            let ow_par = rng.range_i64(1, 2) as usize;
+            let iw = rng.range_i64((fw + ow_par) as i64, 64) as usize;
+            let ich = rng.range_i64(1, 64) as usize;
+            let plan = slice_plan(fh, fw, iw, ich, ow_par);
+            // Span of distances = ((fh-1)*iw + fw_eff - 1) * ich, which is
+            // exactly the Eq. 16/17 buffer size for the widened window.
+            let fw_eff = fw + ow_par - 1;
+            let span = ((fh - 1) * iw + fw_eff - 1) * ich;
+            assert_eq!(plan.total(), span);
+            assert_eq!(plan.total(), buffer_size(fh, fw, iw, ich, ow_par));
+            // One slice per window-element transition: fh*(fw_eff-1) within
+            // rows + (fh-1) across rows.
+            assert_eq!(plan.slices(), fh * (fw_eff - 1) + (fh - 1));
+        });
+    }
+
+    #[test]
+    fn paper_eq23_resnet20_first_blocks() {
+        // Without downsample: iw0=iw1=32, ich0=ich1=16, 3x3 filters.
+        let r = skip_reduction_ratio(3, 3, 32, 16, 3, 3, 32, 16);
+        assert!((r - 0.5).abs() < 0.02, "R_sc = {r}, paper says 0.5");
+        // With downsample: iw0=32, iw1=16, ich0=16, ich1=32.
+        let r = skip_reduction_ratio(3, 3, 32, 16, 3, 3, 16, 32);
+        assert!((r - 0.5).abs() < 0.02, "R_sc = {r}, paper says 0.5");
+    }
+
+    #[test]
+    fn rate_aware_partitioning_reduces_slices_without_losing_capacity() {
+        forall("rate-aware merge preserves capacity", 300, |rng| {
+            let fh = rng.range_i64(2, 4) as usize;
+            let iw = rng.range_i64(8, 40) as usize;
+            let ich = rng.range_i64(1, 32) as usize;
+            let interval = rng.range_i64(1, 12) as usize;
+            let full = slice_plan(fh, fh, iw, ich, 2);
+            let merged = slice_plan_rate_aware(fh, fh, iw, ich, 2, interval);
+            assert_eq!(full.total(), merged.total(), "capacity preserved");
+            assert_eq!(merged.slices(), full.slices().div_ceil(interval));
+            assert!(merged.slices() <= full.slices());
+        });
+        // Unit rate (one window per cycle) must keep the full split.
+        let full = slice_plan(3, 3, 32, 16, 2);
+        let same = slice_plan_rate_aware(3, 3, 32, 16, 2, 1);
+        assert_eq!(full, same);
+    }
+
+    #[test]
+    fn naive_exceeds_optimized_everywhere() {
+        forall("B_sc naive > optimized", 300, |rng| {
+            let fh = rng.range_i64(2, 5) as usize;
+            let iw = rng.range_i64(8, 64) as usize;
+            let ich = rng.range_i64(1, 64) as usize;
+            let naive = skip_buffer_naive(fh, fh, iw, ich, fh, fh);
+            let opt = skip_buffer_optimized(fh, fh, iw, ich);
+            assert!(naive > opt, "naive {naive} <= opt {opt}");
+        });
+    }
+}

@@ -1,0 +1,276 @@
+//! The Algorithm-1 solver and a brute-force reference.
+
+/// Per-layer optimization input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerLoad {
+    pub name: String,
+    /// Computations per frame, Eq. 8: `c_i = oh*ow*och*ich*fh*fw`.
+    pub macs: u64,
+    /// Filter taps `k_i = fh*fw` (Eq. 10).
+    pub taps: usize,
+    /// Output channels (upper bound and divisor constraint for och_par).
+    pub och: usize,
+    /// Output-width unroll (2 with DSP packing at 8 bits, else 1).
+    pub ow_par: usize,
+}
+
+impl LayerLoad {
+    /// Feasible unroll factors: one per distinct group count
+    /// `och_groups = ceil(och / och_par)` — `p = ceil(och/g)` is the
+    /// cheapest unroll achieving `g` groups (the last group may be
+    /// partially filled, as the generated HLS allows).
+    pub fn candidates(&self) -> Vec<usize> {
+        let mut c: Vec<usize> = (1..=self.och).map(|g| self.och.div_ceil(g)).collect();
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    /// Peak MACs per cycle at a given unroll (Eq. 9).
+    pub fn cp(&self, och_par: usize) -> u64 {
+        (self.taps * och_par * self.ow_par) as u64
+    }
+
+    /// DSPs consumed at a given unroll: one DSP per tap per output channel
+    /// (packing makes this independent of ow_par, Section III-C).
+    pub fn dsps(&self, och_par: usize) -> u64 {
+        (self.taps * och_par) as u64
+    }
+
+    /// Cycles per frame at a given unroll: the main loop iterates over
+    /// `oh*ow/ow_par` window positions x `ich` x `och_groups`, i.e.
+    /// `(c_i / och) * ceil(och / p) / ow_par` (Eq. 11 generalized to
+    /// partial groups).
+    pub fn cycles(&self, och_par: usize) -> u64 {
+        let per_group = self.macs / self.och as u64 / self.taps as u64;
+        (per_group * self.och.div_ceil(och_par) as u64).div_ceil(self.ow_par as u64)
+    }
+}
+
+/// One layer's solved configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerAlloc {
+    pub name: String,
+    pub och_par: usize,
+    pub cp: u64,
+    pub dsps: u64,
+    pub cycles: u64,
+}
+
+/// A solved allocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub layers: Vec<LayerAlloc>,
+    /// Steady-state initiation interval = max layer cycles (the slowest
+    /// concurrent process limits throughput, Section III-B).
+    pub cycles_per_frame: u64,
+    pub dsps_used: u64,
+    pub dsp_budget: u64,
+}
+
+impl Allocation {
+    /// Frames per second at a fabric clock.
+    pub fn fps(&self, clock_mhz: f64) -> f64 {
+        clock_mhz * 1e6 / self.cycles_per_frame as f64
+    }
+
+    /// Effective Gops/s (2 ops per MAC) for a model with `total_macs`.
+    pub fn gops(&self, clock_mhz: f64, total_macs: u64) -> f64 {
+        2.0 * total_macs as f64 * self.fps(clock_mhz) / 1e9
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerAlloc> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+/// Algorithm 1: maximize the network throughput `Th` subject to
+/// `Σ cp_i ≤ N_PAR` (expressed in DSPs; packing halves the DSP cost of a
+/// MAC/cycle).
+///
+/// The paper phrases the objective through the bottleneck layer `i_max`
+/// (Eq. 12) and balances every other layer to its rate (Eq. 14).  With the
+/// divisor-quantized unroll candidates, the bottleneck that binds may also
+/// be a layer whose maximum unroll caps out (e.g. the 16-channel stem on
+/// large budgets); so we enumerate every *achievable throughput level* —
+/// the union of all layers' `cp(p)/c` values — and for each level give
+/// every layer its cheapest unroll meeting the level.  The best feasible
+/// level is optimal: throughput is the min over layers, each layer's cost
+/// is monotone in its rate, so any optimum is reproduced at its own
+/// effective level.  `brute_force` cross-checks this in tests.
+///
+/// Returns `None` only if even the all-minimal allocation exceeds the
+/// budget (no feasible design).
+pub fn solve(loads: &[LayerLoad], dsp_budget: u64) -> Option<Allocation> {
+    assert!(!loads.is_empty());
+    // Candidate cycle targets: every cycles-per-frame value any layer can
+    // realize.  The optimum's bottleneck cycles is one of these.
+    let mut levels: Vec<u64> = loads
+        .iter()
+        .flat_map(|l| l.candidates().into_iter().map(|p| l.cycles(p)))
+        .collect();
+    levels.sort_unstable();
+    levels.dedup();
+
+    let mut best: Option<Allocation> = None;
+    for &target in &levels {
+        let Some(layers) = allocate_for_target(loads, target) else { continue };
+        let dsps_used: u64 = layers.iter().map(|l| l.dsps).sum();
+        if dsps_used > dsp_budget {
+            continue;
+        }
+        let cycles = layers.iter().map(|l| l.cycles).max().unwrap();
+        let a = Allocation { layers, cycles_per_frame: cycles, dsps_used, dsp_budget };
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                a.cycles_per_frame < b.cycles_per_frame
+                    || (a.cycles_per_frame == b.cycles_per_frame && a.dsps_used < b.dsps_used)
+            }
+        };
+        if better {
+            best = Some(a);
+        }
+    }
+    best
+}
+
+/// Give every layer its cheapest unroll with `cycles_i(p) <= target`
+/// (Eq. 14's balancing).  Returns None if some layer cannot reach the
+/// target even fully unrolled (that target is unachievable).
+fn allocate_for_target(loads: &[LayerLoad], target: u64) -> Option<Vec<LayerAlloc>> {
+    let mut out = Vec::with_capacity(loads.len());
+    for l in loads {
+        let och_par = l.candidates().into_iter().find(|&p| l.cycles(p) <= target)?;
+        out.push(LayerAlloc {
+            name: l.name.clone(),
+            och_par,
+            cp: l.cp(och_par),
+            dsps: l.dsps(och_par),
+            cycles: l.cycles(och_par),
+        });
+    }
+    Some(out)
+}
+
+/// Exhaustive reference solver (exponential; tests only, <= ~5 layers).
+/// Maximizes throughput (min cycles), then minimizes DSPs.
+pub fn brute_force(loads: &[LayerLoad], dsp_budget: u64) -> Option<Allocation> {
+    let cand: Vec<Vec<usize>> = loads.iter().map(|l| l.candidates()).collect();
+    let mut idx = vec![0usize; loads.len()];
+    let mut best: Option<Allocation> = None;
+    loop {
+        let layers: Vec<LayerAlloc> = loads
+            .iter()
+            .zip(&idx)
+            .zip(&cand)
+            .map(|((l, &j), c)| {
+                let p = c[j];
+                LayerAlloc { name: l.name.clone(), och_par: p, cp: l.cp(p), dsps: l.dsps(p), cycles: l.cycles(p) }
+            })
+            .collect();
+        let dsps_used: u64 = layers.iter().map(|l| l.dsps).sum();
+        if dsps_used <= dsp_budget {
+            let cycles = layers.iter().map(|l| l.cycles).max().unwrap();
+            let a = Allocation { layers, cycles_per_frame: cycles, dsps_used, dsp_budget };
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    a.cycles_per_frame < b.cycles_per_frame
+                        || (a.cycles_per_frame == b.cycles_per_frame && a.dsps_used < b.dsps_used)
+                }
+            };
+            if better {
+                best = Some(a);
+            }
+        }
+        // Odometer increment.
+        let mut k = 0;
+        loop {
+            if k == idx.len() {
+                return best;
+            }
+            idx[k] += 1;
+            if idx[k] < cand[k].len() {
+                break;
+            }
+            idx[k] = 0;
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn load(name: &str, macs: u64, taps: usize, och: usize) -> LayerLoad {
+        LayerLoad { name: name.into(), macs, taps, och, ow_par: 2 }
+    }
+
+    #[test]
+    fn balances_two_layers() {
+        // Layer b has 2x the work; it should get ~2x the parallelism.
+        let loads = vec![load("a", 1_000_000, 9, 32), load("b", 2_000_000, 9, 32)];
+        let a = solve(&loads, 500).unwrap();
+        let pa = a.layer("a").unwrap().och_par;
+        let pb = a.layer("b").unwrap().och_par;
+        assert!(pb >= 2 * pa, "a={pa} b={pb}");
+        assert!(a.dsps_used <= 500);
+    }
+
+    #[test]
+    fn matches_brute_force_throughput() {
+        forall("solve == brute force (throughput)", 60, |rng| {
+            let n = rng.range_i64(1, 4) as usize;
+            let loads: Vec<LayerLoad> = (0..n)
+                .map(|i| {
+                    let och = [4usize, 8, 16][rng.below(3) as usize];
+                    let taps = [1usize, 9][rng.below(2) as usize];
+                    load(&format!("l{i}"), rng.range_i64(10_000, 2_000_000) as u64, taps, och)
+                })
+                .collect();
+            let budget = rng.range_i64(16, 600) as u64;
+            let s = solve(&loads, budget);
+            let b = brute_force(&loads, budget);
+            match (s, b) {
+                (None, None) => {}
+                (Some(s), Some(b)) => {
+                    assert_eq!(
+                        s.cycles_per_frame, b.cycles_per_frame,
+                        "solve {} vs brute {}",
+                        s.cycles_per_frame, b.cycles_per_frame
+                    );
+                    assert!(s.dsps_used <= budget);
+                }
+                (s, b) => panic!("feasibility mismatch: {s:?} vs {b:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn infeasible_when_budget_below_minimum() {
+        // Minimal config needs taps DSPs per layer.
+        let loads = vec![load("a", 1000, 9, 8), load("b", 1000, 9, 8)];
+        assert!(solve(&loads, 17).is_none()); // needs >= 18
+        assert!(solve(&loads, 18).is_some());
+    }
+
+    #[test]
+    fn throughput_monotone_in_budget() {
+        let loads = vec![
+            load("a", 500_000, 9, 64),
+            load("b", 2_000_000, 9, 64),
+            load("c", 1_000_000, 1, 64),
+        ];
+        let mut prev = u64::MAX;
+        for budget in [64u64, 128, 256, 512, 1024, 2048] {
+            if let Some(a) = solve(&loads, budget) {
+                assert!(a.cycles_per_frame <= prev, "budget {budget}");
+                prev = a.cycles_per_frame;
+            }
+        }
+        assert!(prev < u64::MAX);
+    }
+}

@@ -1,0 +1,52 @@
+//! # resnet-hls — Residual NN accelerators for low-power FPGAs, reproduced
+//!
+//! Rust implementation of the systems described in *"Design and Optimization
+//! of Residual Neural Network Accelerators for Low-Power FPGAs Using
+//! High-Level Synthesis"* (Minnella, Urso, Lazarescu, Lavagno, 2023).
+//!
+//! The paper's testbed is physical FPGA hardware; here the hardware substrate
+//! is **simulated** (see `DESIGN.md` §Substitutions) while the numerics run
+//! for real through an AOT-compiled JAX/Pallas model executed via PJRT.
+//!
+//! Layer map (three-layer architecture):
+//! * **L3 (this crate)** — the paper's flow and substrates: graph IR and the
+//!   residual-block optimizations (`graph`, `passes`), ILP throughput
+//!   balancing (`ilp`), HLS-style configuration/codegen/resource model
+//!   (`hls`), a cycle-approximate dataflow simulator (`sim`), the PJRT
+//!   runtime (`runtime`) and an inference coordinator (`coordinator`).
+//! * **L2/L1 (python/, build-time only)** — quantized ResNet8/20 in JAX,
+//!   compute hot-spots as Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
+//!
+//! Nothing in this crate imports Python at runtime; the `artifacts/`
+//! directory fully decouples the two worlds.
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod graph;
+pub mod hls;
+pub mod ilp;
+pub mod models;
+pub mod passes;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Repository-relative path helpers used by tests, benches and examples.
+pub mod paths {
+    use std::path::PathBuf;
+
+    /// Root of the repository (directory containing `Cargo.toml`).
+    pub fn repo_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    }
+
+    /// The artifacts directory produced by `make artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("REPRO_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        repo_root().join("artifacts")
+    }
+}

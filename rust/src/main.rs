@@ -1,0 +1,308 @@
+//! `repro` — CLI for the ResNet-HLS reproduction.
+//!
+//! Subcommands:
+//!   info                         artifacts + design summary
+//!   optimize   --model M --board B [--ow-par N]   run Algorithm 1 + closure
+//!   simulate   --model M --board B [--naive] [--skip-factor F] [--frames N]
+//!   codegen    --model M --board B [--out FILE]   emit the HLS C++ top
+//!   eval-tables                  Table 3 + Table 4 (modeled vs paper)
+//!   golden-eval [--model M] [--n N]               golden accuracy on synthetic test set
+//!   probe-check                  cross-language bit-equality (golden vs oracle vs PJRT)
+//!   serve      [--model M] [--frames N]           run the inference server on synthetic frames
+//!   buffers    [--model M]       Eq. 21/22/23 per residual block
+
+use anyhow::Result;
+
+use resnet_hls::coordinator::{BatcherConfig, InferenceServer};
+use resnet_hls::data::{synth_batch, TEST_SEED};
+use resnet_hls::eval::figures::skip_buffering_series;
+use resnet_hls::eval::tables::{print_table3, print_table4, table3, table4};
+use resnet_hls::hls::{board_by_name, codegen, config::configure, resources::fit_to_board, ULTRA96};
+use resnet_hls::ilp::loads_from_arch;
+use resnet_hls::models::{arch_by_name, build_optimized_graph, default_exps, ModelWeights};
+use resnet_hls::paths::artifacts_dir;
+use resnet_hls::runtime::{Artifacts, Engine};
+use resnet_hls::sim::{build_network, golden, SimOptions};
+use resnet_hls::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["model", "board", "frames", "n", "out", "skip-factor", "ow-par", "budget"],
+    );
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("optimize") => cmd_optimize(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("codegen") => cmd_codegen(&args),
+        Some("eval-tables") => cmd_eval_tables(),
+        Some("golden-eval") => cmd_golden_eval(&args),
+        Some("probe-check") => cmd_probe_check(),
+        Some("serve") => cmd_serve(&args),
+        Some("buffers") => cmd_buffers(&args),
+        _ => {
+            eprintln!(
+                "usage: repro <info|optimize|simulate|codegen|eval-tables|golden-eval|probe-check|serve|buffers> [options]"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn arch_of(args: &Args) -> Result<resnet_hls::models::ArchSpec> {
+    let name = args.opt_or("model", "resnet8");
+    arch_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))
+}
+
+fn board_of(args: &Args) -> &'static resnet_hls::hls::Board {
+    board_by_name(args.opt_or("board", "kv260")).unwrap_or(&ULTRA96)
+}
+
+fn cmd_info() -> Result<()> {
+    println!("resnet-hls repro — paper: Minnella et al., 2023 (FPGA ResNet HLS)");
+    let dir = artifacts_dir();
+    match Artifacts::load(&dir) {
+        Ok(a) => {
+            println!("artifacts: {} ({} model variants)", dir.display(), a.models.len());
+            for m in &a.models {
+                println!(
+                    "  {} arch={} batch={} input={:?} ({})",
+                    m.name,
+                    m.arch,
+                    m.batch,
+                    m.input_shape,
+                    m.hlo_path.file_name().unwrap_or_default().to_string_lossy()
+                );
+            }
+            for arch in a.arch_names() {
+                let w = ModelWeights::load(&dir, &arch)?;
+                println!(
+                    "  weights[{arch}]: {} layers, {} bytes, source={}",
+                    w.layers.len(),
+                    w.param_bytes(),
+                    w.source
+                );
+            }
+        }
+        Err(e) => println!("artifacts: not available ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let arch = arch_of(args)?;
+    let board = board_of(args);
+    let ow_par = args.opt_usize("ow-par", 2);
+    let (act, w) = default_exps(&arch);
+    let g = build_optimized_graph(&arch, &act, &w);
+    let loads = loads_from_arch(&arch, ow_par);
+    let (alloc, cfg, report) = fit_to_board(&arch.name, &g, &loads, board, ow_par)?;
+    println!(
+        "== {} on {} (ow_par={ow_par}, N_PAR={}) ==",
+        arch.name,
+        board.name,
+        board.n_par()
+    );
+    println!(
+        "{:<10} {:>8} {:>8} {:>6} {:>10} {:>10}",
+        "layer", "och_par", "cp", "DSPs", "cycles", "macs"
+    );
+    for l in &alloc.layers {
+        println!(
+            "{:<10} {:>8} {:>8} {:>6} {:>10} {:>10}",
+            l.name, l.och_par, l.cp, l.dsps, l.cycles,
+            loads.iter().find(|x| x.name == l.name).map(|x| x.macs).unwrap_or(0)
+        );
+    }
+    println!(
+        "bottleneck {} cycles/frame -> {:.0} FPS @ {:.0} MHz ({:.0} Gops/s)",
+        alloc.cycles_per_frame,
+        alloc.fps(board.clock_mhz),
+        board.clock_mhz,
+        alloc.gops(board.clock_mhz, arch.total_macs())
+    );
+    println!("resources: {}", report.utilization(board));
+    println!("skip buffering total: {} activations", cfg.skip_buffer_total());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let arch = arch_of(args)?;
+    let board = board_of(args);
+    let naive = args.has_flag("naive");
+    let frames = args.opt_usize("frames", 4) as u32;
+    let skip_factor = args.opt_f64("skip-factor", 1.0);
+    let (act, w) = default_exps(&arch);
+    let g = if naive {
+        resnet_hls::models::build_unoptimized_graph(&arch, &act, &w)
+    } else {
+        build_optimized_graph(&arch, &act, &w)
+    };
+    let loads = loads_from_arch(&arch, 2);
+    let alloc = resnet_hls::ilp::solve(&loads, board.n_par() as u64)
+        .ok_or_else(|| anyhow::anyhow!("infeasible"))?;
+    let cfg = configure(&arch.name, &g, &alloc, board, 2)?;
+    let opts = SimOptions { frames, skip_factor, ..Default::default() };
+    let mut net = build_network(&g, &cfg, &opts)?;
+    let rep = net.run(frames);
+    println!(
+        "== simulate {} on {} ({}, skip_factor={skip_factor}, {frames} frames) ==",
+        arch.name,
+        board.name,
+        if naive { "naive dataflow" } else { "optimized dataflow" }
+    );
+    if rep.deadlocked {
+        println!(
+            "DEADLOCK after {} cycles (frames completed: {})",
+            rep.total_cycles,
+            rep.frame_done.len()
+        );
+    } else {
+        println!(
+            "latency {} cycles ({:.3} ms), steady-state II {} cycles -> {:.0} FPS",
+            rep.latency_cycles,
+            rep.latency_ms(board.clock_mhz),
+            rep.ii_cycles,
+            rep.fps(board.clock_mhz)
+        );
+    }
+    if args.has_flag("verbose") {
+        for f in &rep.fifo_stats {
+            println!("  fifo {:<42} cap {:>7} peak {:>7}", f.name, f.capacity, f.max_occupancy);
+        }
+        for t in &rep.task_stats {
+            println!("  task {:<12} busy {:>10} stall {:>10}", t.name, t.busy_cycles, t.stall_cycles);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args) -> Result<()> {
+    let arch = arch_of(args)?;
+    let board = board_of(args);
+    let (act, w) = default_exps(&arch);
+    let g = build_optimized_graph(&arch, &act, &w);
+    let loads = loads_from_arch(&arch, 2);
+    let (_, cfg, _) = fit_to_board(&arch.name, &g, &loads, board, 2)?;
+    let cpp = codegen::emit_top(&cfg);
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &cpp)?;
+            println!("wrote {} bytes to {path}", cpp.len());
+        }
+        None => print!("{cpp}"),
+    }
+    Ok(())
+}
+
+fn cmd_eval_tables() -> Result<()> {
+    print_table3(&table3()?);
+    println!();
+    print_table4(&table4()?);
+    Ok(())
+}
+
+fn cmd_golden_eval(args: &Args) -> Result<()> {
+    let arch = arch_of(args)?;
+    let n = args.opt_usize("n", 256);
+    let dir = artifacts_dir();
+    let weights = ModelWeights::load(&dir, &arch.name)?;
+    let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let mut correct = 0usize;
+    let bs = 64;
+    for start in (0..n).step_by(bs) {
+        let take = bs.min(n - start);
+        let (input, labels) = synth_batch(start as u64, take, TEST_SEED);
+        let logits = golden::run(&g, &weights, &input)?;
+        for (pred, &label) in golden::argmax_classes(&logits).iter().zip(&labels) {
+            if *pred == label as usize {
+                correct += 1;
+            }
+        }
+    }
+    println!(
+        "golden {}: accuracy {:.3} on {} synthetic test frames (weights: {})",
+        arch.name,
+        correct as f64 / n as f64,
+        n,
+        weights.source
+    );
+    Ok(())
+}
+
+fn cmd_probe_check() -> Result<()> {
+    let dir = artifacts_dir();
+    let artifacts = Artifacts::load(&dir)?;
+    let probe = artifacts.probe()?;
+    println!("probe: {} frames", probe.input.shape.n);
+
+    // 1. Synthetic dataset generator bit-equality (Rust vs Python).
+    let (local, _) = synth_batch(0, probe.input.shape.n as u64 as usize, TEST_SEED);
+    anyhow::ensure!(local.data == probe.input.data, "synthetic dataset mismatch");
+    println!("  dataset: rust == python  OK");
+
+    // 2. Golden model vs jnp oracle.
+    for (arch_name, oracle) in &probe.logits {
+        let arch = arch_by_name(arch_name).unwrap();
+        let weights = ModelWeights::load(&dir, arch_name)?;
+        let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let logits = golden::run(&g, &weights, &probe.input)?;
+        anyhow::ensure!(&logits.data == oracle, "golden mismatch for {arch_name}");
+        println!("  golden[{arch_name}]: rust == jnp oracle  OK");
+    }
+
+    // 3. PJRT-executed HLO vs oracle.
+    let engine = Engine::from_artifacts(&artifacts)?;
+    println!("  pjrt platform: {}", engine.platform());
+    for (arch_name, oracle) in &probe.logits {
+        let logits = engine.infer_any(arch_name, &probe.input)?;
+        anyhow::ensure!(&logits.data == oracle, "PJRT mismatch for {arch_name}");
+        println!("  pjrt[{arch_name}]: HLO == jnp oracle  OK");
+    }
+    println!("probe-check: ALL BIT-EXACT");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let arch = arch_of(args)?;
+    let frames = args.opt_usize("frames", 256);
+    let server = InferenceServer::start(artifacts_dir(), &arch.name, BatcherConfig::default())?;
+    let (input, labels) = synth_batch(0, frames, TEST_SEED);
+    let frame_elems = 32 * 32 * 3;
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..frames {
+        let pixels = input.data[i * frame_elems..(i + 1) * frame_elems].to_vec();
+        pending.push(server.submit(pixels)?);
+    }
+    let mut correct = 0usize;
+    for (rx, &label) in pending.iter().zip(&labels) {
+        let resp = rx.recv()??;
+        if resp.class == label as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "served {frames} frames in {:.1} ms -> {:.0} FPS; accuracy {:.3}",
+        dt.as_secs_f64() * 1e3,
+        frames as f64 / dt.as_secs_f64(),
+        correct as f64 / frames as f64
+    );
+    println!("metrics: {}", server.metrics.snapshot());
+    Ok(())
+}
+
+fn cmd_buffers(args: &Args) -> Result<()> {
+    let arch = arch_of(args)?;
+    println!("== skip-connection buffering, {} (Eqs. 21-23) ==", arch.name);
+    println!("{:<8} {:>10} {:>10} {:>8}", "block", "naive", "optimized", "R_sc");
+    for (name, naive, opt, r) in skip_buffering_series(&arch) {
+        println!("{name:<8} {naive:>10} {opt:>10} {r:>8.3}");
+    }
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Model zoo: the paper's ResNet8 and ResNet20 (CIFAR-10 geometry), as
+//! architecture specs, graph builders (pre- and post-optimization forms),
+//! and the loader for the weights exported by `python/compile/aot.py`.
+
+mod resnet;
+mod weights;
+
+pub use resnet::{
+    build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8, ActExps,
+    ArchSpec, BlockSpec, ConvSpec, WExps,
+};
+pub use weights::{synthetic_weights, ConvWeights, ModelWeights, WeightTensor};
+
+/// Look up an architecture by name.
+pub fn arch_by_name(name: &str) -> Option<ArchSpec> {
+    match name {
+        "resnet8" => Some(resnet8()),
+        "resnet20" => Some(resnet20()),
+        _ => None,
+    }
+}

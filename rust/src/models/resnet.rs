@@ -1,0 +1,383 @@
+//! ResNet8 / ResNet20 architecture specs and graph builders.
+//!
+//! Mirrors `python/compile/arch.py` exactly (layer names included) — the
+//! manifest's exponent tables are keyed by these names.
+
+use crate::graph::{ConvAttrs, Edge, Graph, InputRole, Op};
+
+/// One convolution layer (geometry only; exponents come from the manifest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+    pub in_h: usize,
+    pub in_w: usize,
+}
+
+impl ConvSpec {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Paper Eq. 8: number of MACs per frame for this layer.
+    pub fn macs(&self) -> u64 {
+        (self.out_h() * self.out_w() * self.cout * self.cin * self.k * self.k) as u64
+    }
+
+    /// Filter taps `k_i = fh*fw` (paper Eq. 10).
+    pub fn taps(&self) -> usize {
+        self.k * self.k
+    }
+}
+
+/// A residual block: conv0 -> conv1, skip = identity or 1x1 downsample.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockSpec {
+    pub name: String,
+    pub conv0: ConvSpec,
+    pub conv1: ConvSpec,
+    pub downsample: Option<ConvSpec>,
+}
+
+/// A full network architecture.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArchSpec {
+    pub name: String,
+    pub stem: ConvSpec,
+    pub blocks: Vec<BlockSpec>,
+    pub fc_in: usize,
+    pub fc_out: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+}
+
+impl ArchSpec {
+    /// All conv layers in execution order (ILP optimizes over these).
+    pub fn conv_layers(&self) -> Vec<&ConvSpec> {
+        let mut out = vec![&self.stem];
+        for b in &self.blocks {
+            if let Some(ds) = &b.downsample {
+                out.push(ds);
+            }
+            out.push(&b.conv0);
+            out.push(&b.conv1);
+        }
+        out
+    }
+
+    pub fn find_conv(&self, name: &str) -> Option<&ConvSpec> {
+        self.conv_layers().into_iter().find(|c| c.name == name)
+    }
+
+    /// Total multiply-accumulates per frame (conv + fc), for Gops/s.
+    pub fn total_macs(&self) -> u64 {
+        self.conv_layers().iter().map(|c| c.macs()).sum::<u64>() + (self.fc_in * self.fc_out) as u64
+    }
+
+    pub fn param_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.conv_layers().iter().map(|c| c.name.clone()).collect();
+        v.push("fc".into());
+        v
+    }
+}
+
+fn make_blocks(stages: &[usize], blocks_per_stage: usize) -> Vec<BlockSpec> {
+    let mut blocks = Vec::new();
+    let (mut h, mut w, mut cin) = (32usize, 32usize, 16usize);
+    for (si, &cout) in stages.iter().enumerate() {
+        for bi in 0..blocks_per_stage {
+            let first = bi == 0;
+            let stride = if first && si > 0 { 2 } else { 1 };
+            let bname = format!("s{si}b{bi}");
+            let conv0 = ConvSpec {
+                name: format!("{bname}c0"), cin, cout, k: 3, stride, pad: 1, relu: true,
+                in_h: h, in_w: w,
+            };
+            let (oh, ow) = (conv0.out_h(), conv0.out_w());
+            let conv1 = ConvSpec {
+                name: format!("{bname}c1"), cin: cout, cout, k: 3, stride: 1, pad: 1,
+                relu: true, in_h: oh, in_w: ow,
+            };
+            let downsample = (first && si > 0).then(|| ConvSpec {
+                name: format!("{bname}ds"), cin, cout, k: 1, stride, pad: 0, relu: false,
+                in_h: h, in_w: w,
+            });
+            blocks.push(BlockSpec { name: bname, conv0, conv1, downsample });
+            cin = cout;
+            h = oh;
+            w = ow;
+        }
+    }
+    blocks
+}
+
+/// The classic CIFAR ResNet20 of He et al. (3 stages x 3 blocks).
+pub fn resnet20() -> ArchSpec {
+    ArchSpec {
+        name: "resnet20".into(),
+        stem: ConvSpec {
+            name: "stem".into(), cin: 3, cout: 16, k: 3, stride: 1, pad: 1, relu: true,
+            in_h: 32, in_w: 32,
+        },
+        blocks: make_blocks(&[16, 32, 64], 3),
+        fc_in: 64,
+        fc_out: 10,
+        in_h: 32,
+        in_w: 32,
+        in_c: 3,
+    }
+}
+
+/// The MLPerf-Tiny-style ResNet8 (3 stages x 1 block).
+pub fn resnet8() -> ArchSpec {
+    ArchSpec {
+        name: "resnet8".into(),
+        stem: ConvSpec {
+            name: "stem".into(), cin: 3, cout: 16, k: 3, stride: 1, pad: 1, relu: true,
+            in_h: 32, in_w: 32,
+        },
+        blocks: make_blocks(&[16, 32, 64], 1),
+        fc_in: 64,
+        fc_out: 10,
+        in_h: 32,
+        in_w: 32,
+        in_c: 3,
+    }
+}
+
+/// Exponent lookup: tensor-name -> activation exponent (from the manifest,
+/// or defaults matching `arch.py` when absent).
+pub type ActExps = std::collections::BTreeMap<String, i32>;
+pub type WExps = std::collections::BTreeMap<String, i32>;
+
+fn conv_attrs(spec: &ConvSpec, relu: bool, w_exps: &WExps, act_exps: &ActExps) -> ConvAttrs {
+    ConvAttrs {
+        cin: spec.cin,
+        cout: spec.cout,
+        k: spec.k,
+        stride: spec.stride,
+        pad: spec.pad,
+        relu,
+        w_exp: w_exps[&spec.name],
+        out_exp: act_exps[&spec.name],
+        merged_downsample: None,
+        forwards_input: false, raw_output: false,
+    }
+}
+
+/// Build the *pre-optimization* graph: explicit Add nodes for the residual
+/// merges, no loop merging, no input forwarding, ReLU folded into convs but
+/// the post-add ReLU explicit (paper Fig. 10 topology).  This is the input
+/// to the `passes` pipeline.
+pub fn build_unoptimized_graph(arch: &ArchSpec, act_exps: &ActExps, w_exps: &WExps) -> Graph {
+    let mut g = Graph::new();
+    let input = g.add_simple(
+        "input",
+        Op::Input { h: arch.in_h, w: arch.in_w, c: arch.in_c, exp: act_exps["input"] },
+        &[],
+    );
+    let stem = g.add_simple(
+        "stem",
+        Op::Conv(conv_attrs(&arch.stem, true, w_exps, act_exps)),
+        &[Edge::new(input, 0)],
+    );
+    let mut prev = stem;
+    for blk in &arch.blocks {
+        let xin = prev;
+        let skip = match &blk.downsample {
+            Some(ds) => g.add_simple(
+                &ds.name,
+                Op::Conv(conv_attrs(ds, false, w_exps, act_exps)),
+                &[Edge::new(xin, 0)],
+            ),
+            None => xin,
+        };
+        let c0 = g.add_simple(
+            &blk.conv0.name,
+            Op::Conv(conv_attrs(&blk.conv0, true, w_exps, act_exps)),
+            &[Edge::new(xin, 0)],
+        );
+        // conv1 *without* fused relu, streaming raw int32 accumulators:
+        // the pre-optimization dataflow performs the residual merge at
+        // accumulator precision and applies ReLU after the add (Fig. 10).
+        let c1 = g.add_simple(
+            &blk.conv1.name,
+            Op::Conv(ConvAttrs {
+                relu: false,
+                raw_output: true,
+                ..conv_attrs(&blk.conv1, false, w_exps, act_exps)
+            }),
+            &[Edge::new(c0, 0)],
+        );
+        let add = g.add_simple(
+            format!("{}_add", blk.name),
+            Op::Add { out_exp: act_exps[&blk.conv1.name] },
+            &[Edge::new(c1, 0), Edge::new(skip, 0)],
+        );
+        prev = g.add_simple(format!("{}_relu", blk.name), Op::Relu, &[Edge::new(add, 0)]);
+    }
+    let pool = g.add_simple("pool", Op::GlobalAvgPool { out_exp: act_exps["pool"] }, &[Edge::new(prev, 0)]);
+    g.add_simple(
+        "fc",
+        Op::Linear { cin: arch.fc_in, cout: arch.fc_out, w_exp: w_exps["fc"] },
+        &[Edge::new(pool, 0)],
+    );
+    g
+}
+
+/// Build the *optimized* graph directly (paper Fig. 14): loop-merged
+/// downsamples, input forwarding on identity skips, adds fused into conv1
+/// accumulator initialization.  The passes pipeline must transform the
+/// unoptimized graph into exactly this dataflow (asserted in tests).
+pub fn build_optimized_graph(arch: &ArchSpec, act_exps: &ActExps, w_exps: &WExps) -> Graph {
+    let mut g = Graph::new();
+    let input = g.add_simple(
+        "input",
+        Op::Input { h: arch.in_h, w: arch.in_w, c: arch.in_c, exp: act_exps["input"] },
+        &[],
+    );
+    let stem = g.add_simple(
+        "stem",
+        Op::Conv(conv_attrs(&arch.stem, true, w_exps, act_exps)),
+        &[Edge::new(input, 0)],
+    );
+    let mut prev = stem;
+    for blk in &arch.blocks {
+        let xin = prev;
+        let (c0, skip_edge) = match &blk.downsample {
+            Some(ds) => {
+                // Loop merge: the downsample conv is computed inside conv0's
+                // task; its result appears on conv0's port 1.
+                let mut a0 = conv_attrs(&blk.conv0, true, w_exps, act_exps);
+                a0.merged_downsample = Some(crate::graph::MergedDownsample {
+                    name: ds.name.clone(),
+                    cout: ds.cout,
+                    k: ds.k,
+                    stride: ds.stride,
+                    pad: ds.pad,
+                    w_exp: w_exps[&ds.name],
+                    out_exp: act_exps[&ds.name],
+                });
+                let c0 = g.add_simple(&blk.conv0.name, Op::Conv(a0), &[Edge::new(xin, 0)]);
+                (c0, Edge::new(c0, 1))
+            }
+            None => {
+                // Temporal reuse: conv0 forwards its input on port 1.
+                let mut a0 = conv_attrs(&blk.conv0, true, w_exps, act_exps);
+                a0.forwards_input = true;
+                let c0 = g.add_simple(&blk.conv0.name, Op::Conv(a0), &[Edge::new(xin, 0)]);
+                (c0, Edge::new(c0, 1))
+            }
+        };
+        // Add fusion: conv1 takes the skip stream as a SkipInit input and
+        // fuses the post-add ReLU.
+        let c1 = g.add(
+            &blk.conv1.name,
+            Op::Conv(conv_attrs(&blk.conv1, true, w_exps, act_exps)),
+            vec![(Edge::new(c0, 0), InputRole::Data), (skip_edge, InputRole::SkipInit)],
+        );
+        prev = c1;
+    }
+    let pool = g.add_simple("pool", Op::GlobalAvgPool { out_exp: act_exps["pool"] }, &[Edge::new(prev, 0)]);
+    g.add_simple(
+        "fc",
+        Op::Linear { cin: arch.fc_in, cout: arch.fc_out, w_exp: w_exps["fc"] },
+        &[Edge::new(pool, 0)],
+    );
+    g
+}
+
+/// Default exponent tables matching `python/compile/arch.py` (used by tests
+/// and tooling when no manifest is loaded).
+pub fn default_exps(arch: &ArchSpec) -> (ActExps, WExps) {
+    let mut act = ActExps::new();
+    act.insert("input".into(), -7);
+    act.insert("pool".into(), -5);
+    for c in arch.conv_layers() {
+        act.insert(c.name.clone(), -5);
+    }
+    let mut w = WExps::new();
+    for n in arch.param_names() {
+        w.insert(n, -8);
+    }
+    (act, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+
+    #[test]
+    fn resnet20_has_expected_structure() {
+        let a = resnet20();
+        assert_eq!(a.blocks.len(), 9);
+        // 1 stem + 9*2 block convs + 2 downsamples = 21 convs
+        assert_eq!(a.conv_layers().len(), 21);
+        // ~40.5M MACs (He et al. report ~41M for CIFAR ResNet20)
+        let m = a.total_macs();
+        assert!((40_000_000..42_000_000).contains(&m), "macs = {m}");
+    }
+
+    #[test]
+    fn resnet8_has_expected_structure() {
+        let a = resnet8();
+        assert_eq!(a.blocks.len(), 3);
+        assert_eq!(a.conv_layers().len(), 9);
+        // ~12.5M MACs (MLPerf Tiny ResNet8 class)
+        let m = a.total_macs();
+        assert!((11_000_000..14_000_000).contains(&m), "macs = {m}");
+    }
+
+    #[test]
+    fn both_graph_forms_validate_and_shape() {
+        for arch in [resnet8(), resnet20()] {
+            let (act, w) = default_exps(&arch);
+            for g in [
+                build_unoptimized_graph(&arch, &act, &w),
+                build_optimized_graph(&arch, &act, &w),
+            ] {
+                g.validate().unwrap_or_else(|e| panic!("{}: {e}", arch.name));
+                let shapes = infer_shapes(&g).unwrap();
+                // Final logits: 10 channels.
+                let out = g.output().unwrap();
+                let s = shapes[&crate::graph::Edge::new(out, 0)];
+                assert_eq!(s.c, 10);
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_graph_has_no_add_nodes() {
+        let arch = resnet20();
+        let (act, w) = default_exps(&arch);
+        let g = build_optimized_graph(&arch, &act, &w);
+        assert_eq!(g.count_kind("add"), 0);
+        assert_eq!(g.count_kind("relu"), 0);
+        // 9 conv1 nodes carry SkipInit inputs.
+        let skips = g
+            .live()
+            .filter(|n| n.inputs.iter().any(|(_, r)| *r == crate::graph::InputRole::SkipInit))
+            .count();
+        assert_eq!(skips, 9);
+    }
+
+    #[test]
+    fn unoptimized_graph_has_explicit_adds() {
+        let arch = resnet8();
+        let (act, w) = default_exps(&arch);
+        let g = build_unoptimized_graph(&arch, &act, &w);
+        assert_eq!(g.count_kind("add"), 3);
+        assert_eq!(g.count_kind("relu"), 3);
+    }
+}

@@ -1,0 +1,251 @@
+//! Loader for the weight blobs exported by `python/compile/aot.py`.
+//!
+//! The manifest (`artifacts/manifest.json`) describes, per architecture, a
+//! flat little-endian binary (`weights_<arch>.bin`) of int8 weight tensors
+//! and int16 bias tensors plus their power-of-two exponents.  This feeds
+//! the Rust golden model (`sim::golden`) — the same integer values the
+//! AOT-lowered HLO has baked in as constants, which is what makes the
+//! golden-vs-PJRT bit-equality test meaningful.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// One tensor record from the manifest.
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub name: String,
+    pub kind: String, // "w" | "b"
+    pub shape: Vec<usize>,
+    pub exp: i32,
+    pub data: Vec<i32>,
+}
+
+/// A convolution's (or the fc layer's) parameters.
+#[derive(Debug, Clone)]
+pub struct ConvWeights {
+    /// Weights: conv (KH, KW, CIN, COUT) or fc (CIN, COUT), int8-valued.
+    pub w: WeightTensor,
+    /// Bias at the accumulator exponent, int16-valued.
+    pub b: WeightTensor,
+}
+
+impl ConvWeights {
+    /// Weight exponent.
+    pub fn w_exp(&self) -> i32 {
+        self.w.exp
+    }
+
+    /// Accumulator exponent (= bias exponent by construction).
+    pub fn acc_exp(&self) -> i32 {
+        self.b.exp
+    }
+}
+
+/// All parameters + exponent tables for one architecture.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub arch: String,
+    pub layers: BTreeMap<String, ConvWeights>,
+    pub act_exps: BTreeMap<String, i32>,
+    pub w_exps: BTreeMap<String, i32>,
+    /// "checkpoint" (trained) or "random" (deterministic init).
+    pub source: String,
+}
+
+impl ModelWeights {
+    /// Load from an artifacts directory for the given arch name.
+    pub fn load(artifacts: &Path, arch: &str) -> Result<ModelWeights> {
+        let manifest_path = artifacts.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_manifest(&manifest, artifacts, arch)
+    }
+
+    pub fn from_manifest(manifest: &Json, artifacts: &Path, arch: &str) -> Result<ModelWeights> {
+        let entry = manifest
+            .at(&format!("archs/{arch}"))
+            .ok_or_else(|| anyhow!("arch {arch} not in manifest"))?;
+        let wfile = entry
+            .get("weights_file")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow!("missing weights_file"))?;
+        let blob = std::fs::read(artifacts.join(wfile))
+            .with_context(|| format!("reading {wfile}"))?;
+
+        let exps = |key: &str| -> Result<BTreeMap<String, i32>> {
+            let obj = entry
+                .get(key)
+                .and_then(|j| j.as_object())
+                .ok_or_else(|| anyhow!("missing {key}"))?;
+            obj.iter()
+                .map(|(k, v)| {
+                    v.as_i64()
+                        .map(|x| (k.clone(), x as i32))
+                        .ok_or_else(|| anyhow!("bad exp for {k}"))
+                })
+                .collect()
+        };
+        let act_exps = exps("act_exps")?;
+        let w_exps = exps("w_exps")?;
+
+        let records = entry
+            .get("weights")
+            .and_then(|j| j.as_array())
+            .ok_or_else(|| anyhow!("missing weights records"))?;
+        let mut tensors: BTreeMap<(String, String), WeightTensor> = BTreeMap::new();
+        for rec in records {
+            let name = rec.get("name").and_then(|j| j.as_str()).unwrap_or_default().to_string();
+            let kind = rec.get("kind").and_then(|j| j.as_str()).unwrap_or_default().to_string();
+            let dtype = rec.get("dtype").and_then(|j| j.as_str()).unwrap_or_default();
+            let offset = rec.get("offset").and_then(|j| j.as_i64()).unwrap_or(-1) as usize;
+            let bytes = rec.get("bytes").and_then(|j| j.as_i64()).unwrap_or(-1) as usize;
+            let shape: Vec<usize> = rec
+                .get("shape")
+                .and_then(|j| j.as_array())
+                .map(|a| a.iter().filter_map(|v| v.as_i64()).map(|x| x as usize).collect())
+                .unwrap_or_default();
+            let exp = rec.get("exp").and_then(|j| j.as_i64()).unwrap_or(0) as i32;
+            if offset + bytes > blob.len() {
+                bail!("tensor {name}.{kind} overruns blob ({} + {} > {})", offset, bytes, blob.len());
+            }
+            let raw = &blob[offset..offset + bytes];
+            let data: Vec<i32> = match dtype {
+                "i8" => raw.iter().map(|&b| b as i8 as i32).collect(),
+                "i16" => raw
+                    .chunks_exact(2)
+                    .map(|c| i16::from_le_bytes([c[0], c[1]]) as i32)
+                    .collect(),
+                other => bail!("unknown dtype {other} for {name}.{kind}"),
+            };
+            let elems: usize = shape.iter().product();
+            if elems != data.len() {
+                bail!("tensor {name}.{kind}: shape {:?} but {} elems", shape, data.len());
+            }
+            tensors.insert((name.clone(), kind.clone()), WeightTensor { name, kind, shape, exp, data });
+        }
+
+        let names: Vec<String> = tensors.keys().map(|(n, _)| n.clone()).collect();
+        let mut layers = BTreeMap::new();
+        for name in names {
+            if layers.contains_key(&name) {
+                continue;
+            }
+            let w = tensors
+                .get(&(name.clone(), "w".into()))
+                .cloned()
+                .ok_or_else(|| anyhow!("missing weights for {name}"))?;
+            let b = tensors
+                .get(&(name.clone(), "b".into()))
+                .cloned()
+                .ok_or_else(|| anyhow!("missing bias for {name}"))?;
+            layers.insert(name, ConvWeights { w, b });
+        }
+
+        Ok(ModelWeights {
+            arch: arch.to_string(),
+            layers,
+            act_exps,
+            w_exps,
+            source: entry.get("source").and_then(|j| j.as_str()).unwrap_or("?").to_string(),
+        })
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&ConvWeights> {
+        self.layers.get(name).ok_or_else(|| anyhow!("no weights for layer {name}"))
+    }
+
+    /// Activation exponent for a named tensor.
+    pub fn act_exp(&self, tensor: &str) -> Result<i32> {
+        self.act_exps
+            .get(tensor)
+            .copied()
+            .ok_or_else(|| anyhow!("no activation exponent for {tensor}"))
+    }
+
+    /// Total parameter bytes (int8 weights + int16 biases) — feeds the
+    /// BRAM/URAM resource model.
+    pub fn param_bytes(&self) -> usize {
+        self.layers
+            .values()
+            .map(|c| c.w.data.len() + 2 * c.b.data.len())
+            .sum()
+    }
+}
+
+/// Synthesize deterministic weights for tests that must run without
+/// artifacts (mirrors `params.random_int_params` loosely; NOT bit-identical
+/// to the Python init — artifact-based tests use the real blobs).
+pub fn synthetic_weights(
+    arch: &crate::models::ArchSpec,
+    seed: u64,
+) -> ModelWeights {
+    use crate::util::Lcg64;
+    let (act_exps, w_exps) = crate::models::resnet::default_exps(arch);
+    let mut rng = Lcg64::new(seed);
+    let mut layers = BTreeMap::new();
+    for c in arch.conv_layers() {
+        let n = c.k * c.k * c.cin * c.cout;
+        let w_data: Vec<i32> = (0..n).map(|_| rng.range_i64(-64, 64) as i32).collect();
+        let b_data: Vec<i32> = (0..c.cout).map(|_| rng.range_i64(-512, 512) as i32).collect();
+        let in_exp = act_exps.get(&c.name).copied().unwrap_or(-5);
+        layers.insert(
+            c.name.clone(),
+            ConvWeights {
+                w: WeightTensor {
+                    name: c.name.clone(), kind: "w".into(),
+                    shape: vec![c.k, c.k, c.cin, c.cout], exp: w_exps[&c.name], data: w_data,
+                },
+                b: WeightTensor {
+                    name: c.name.clone(), kind: "b".into(),
+                    shape: vec![c.cout], exp: in_exp + w_exps[&c.name] - 2, data: b_data,
+                },
+            },
+        );
+    }
+    let n = arch.fc_in * arch.fc_out;
+    layers.insert(
+        "fc".into(),
+        ConvWeights {
+            w: WeightTensor {
+                name: "fc".into(), kind: "w".into(),
+                shape: vec![arch.fc_in, arch.fc_out], exp: w_exps["fc"],
+                data: (0..n).map(|_| rng.range_i64(-64, 64) as i32).collect(),
+            },
+            b: WeightTensor {
+                name: "fc".into(), kind: "b".into(), shape: vec![arch.fc_out],
+                exp: act_exps["pool"] + w_exps["fc"],
+                data: (0..arch.fc_out).map(|_| rng.range_i64(-512, 512) as i32).collect(),
+            },
+        },
+    );
+    ModelWeights {
+        arch: arch.name.clone(),
+        layers,
+        act_exps,
+        w_exps,
+        source: "synthetic".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::resnet8;
+
+    #[test]
+    fn synthetic_weights_cover_all_layers() {
+        let arch = resnet8();
+        let w = synthetic_weights(&arch, 1);
+        for name in arch.param_names() {
+            let l = w.layer(&name).unwrap();
+            assert!(!l.w.data.is_empty());
+            assert_eq!(l.b.data.len(), *l.b.shape.last().unwrap());
+        }
+        assert!(w.param_bytes() > 70_000, "resnet8 ~78k params");
+    }
+}

@@ -1,0 +1,144 @@
+//! Add fusion (paper Fig. 13): remove the residual Add node by routing the
+//! skip stream into the long branch's second convolution, where it
+//! initializes the accumulation register.
+//!
+//! Pattern (after loop merge / temporal reuse have run, but also matching
+//! the raw form):
+//!
+//! ```text
+//!   conv1 ──┐
+//!           ├─> add ──> (relu) ──> consumers
+//!   skip  ──┘
+//! ```
+//!
+//! becomes
+//!
+//! ```text
+//!   skip ──(SkipInit)──> conv1{relu fused} ──> consumers
+//! ```
+//!
+//! Numerics: the skip value (int8 @ skip_exp) is left-shifted to the
+//! accumulator exponent and added before the MAC chain runs — identical,
+//! bit for bit, to requantizing conv1's accumulator, adding at the output
+//! scale, and re-clipping *only because* the fused form ReLUs/clips once
+//! at the very end; the pure-int equivalence of the two dataflows is
+//! asserted against the Python oracle (`unoptimized_ref_forward`) through
+//! the probe artifacts, and locally by `sim::golden` tests.
+
+use crate::graph::{Graph, InputRole, Op};
+
+use super::relu_merge::rewire;
+
+/// Apply the pass; returns the number of Add nodes fused away.
+pub fn add_fusion(g: &mut Graph) -> usize {
+    let mut fused = 0;
+    let ids: Vec<usize> = g.live().map(|n| n.id).collect();
+    for add_id in ids {
+        let (long_edge, skip_edge, add_out_exp) = {
+            let n = g.node(add_id);
+            if n.dead {
+                continue;
+            }
+            let out_exp = match n.op {
+                Op::Add { out_exp } => out_exp,
+                _ => continue,
+            };
+            (n.inputs[0].0, n.inputs[1].0, out_exp)
+        };
+        // The long-branch producer must be a conv with a single consumer
+        // (the add) so the fusion is safe.
+        let conv1 = long_edge.node;
+        if long_edge.port != 0 || !matches!(g.node(conv1).op, Op::Conv(_)) {
+            continue;
+        }
+        if g.consumers(long_edge).len() != 1 {
+            continue;
+        }
+        if g.node(conv1).inputs.len() != 1 {
+            continue; // already carries a skip input
+        }
+
+        // Optional trailing ReLU (the paper's blocks always have one).
+        let add_consumers = g.consumers(crate::graph::Edge::new(add_id, 0));
+        let trailing_relu = match add_consumers.as_slice() {
+            [r] if matches!(g.node(*r).op, Op::Relu) => Some(*r),
+            _ => None,
+        };
+
+        // Fuse: conv1 takes the skip stream as SkipInit, output exponent
+        // moves to the add's (they coincide in the builders).
+        if let Op::Conv(a) = &mut g.node_mut(conv1).op {
+            a.out_exp = add_out_exp;
+            // The fused conv requantizes once at the end (the raw 32-bit
+            // stream into the Add disappears with the Add itself).
+            a.raw_output = false;
+            if trailing_relu.is_some() {
+                a.relu = true;
+            }
+        }
+        g.node_mut(conv1).inputs.push((skip_edge, InputRole::SkipInit));
+
+        if let Some(r) = trailing_relu {
+            rewire(g, crate::graph::Edge::new(r, 0), crate::graph::Edge::new(conv1, 0));
+            g.node_mut(r).dead = true;
+        }
+        rewire(g, crate::graph::Edge::new(add_id, 0), crate::graph::Edge::new(conv1, 0));
+        g.node_mut(add_id).dead = true;
+        fused += 1;
+    }
+    fused
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ConvAttrs, Edge};
+
+    fn attrs(c: usize) -> ConvAttrs {
+        ConvAttrs {
+            cin: c, cout: c, k: 3, stride: 1, pad: 1, relu: false,
+            w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false, raw_output: false,
+        }
+    }
+
+    #[test]
+    fn fuses_add_and_relu() {
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 4, exp: -7 }, &[]);
+        let c0 = g.add_simple("c0", Op::Conv(attrs(4)), &[Edge::new(i, 0)]);
+        let c1 = g.add_simple("c1", Op::Conv(attrs(4)), &[Edge::new(c0, 0)]);
+        let add = g.add_simple("add", Op::Add { out_exp: -4 }, &[Edge::new(c1, 0), Edge::new(i, 0)]);
+        let r = g.add_simple("relu", Op::Relu, &[Edge::new(add, 0)]);
+        g.add_simple("pool", Op::GlobalAvgPool { out_exp: -5 }, &[Edge::new(r, 0)]);
+
+        assert_eq!(add_fusion(&mut g), 1);
+        g.compact();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.count_kind("add"), 0);
+        assert_eq!(g.count_kind("relu"), 0);
+        let c1 = g.find("c1").unwrap();
+        let n = g.node(c1);
+        assert_eq!(n.inputs.len(), 2);
+        assert_eq!(n.inputs[1].1, InputRole::SkipInit);
+        match &n.op {
+            Op::Conv(a) => {
+                assert!(a.relu);
+                assert_eq!(a.out_exp, -4, "conv1 adopts the add's output exponent");
+            }
+            _ => unreachable!(),
+        }
+        let pool = g.find("pool").unwrap();
+        assert_eq!(g.node(pool).inputs[0].0.node, c1);
+    }
+
+    #[test]
+    fn skips_conv_with_other_consumers() {
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 4, exp: -7 }, &[]);
+        let c1 = g.add_simple("c1", Op::Conv(attrs(4)), &[Edge::new(i, 0)]);
+        g.add_simple("add", Op::Add { out_exp: -5 }, &[Edge::new(c1, 0), Edge::new(i, 0)]);
+        // Second consumer of conv1's output prevents fusion.
+        g.add_simple("c2", Op::Conv(attrs(4)), &[Edge::new(c1, 0)]);
+        assert_eq!(add_fusion(&mut g), 0);
+    }
+}

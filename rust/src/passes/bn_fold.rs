@@ -1,0 +1,176 @@
+//! BatchNorm folding: `Conv -> BatchNorm` becomes a single Conv with
+//! rescaled weights and shifted bias (paper Section III-A: "the batch
+//! normalization layers are merged with the quantized convolution layers").
+//!
+//! BN in inference form is `y = scale * x + shift` per channel (scale and
+//! shift already absorb mean/var/eps/gamma/beta).  Folding into the conv:
+//!
+//! ```text
+//! W'[kh,kw,ci,co] = scale[co] * W[kh,kw,ci,co]
+//! b'[co]          = scale[co] * b[co] + shift[co]
+//! ```
+//!
+//! This pass is *numeric*: it needs float parameters, so it operates on a
+//! side table of float conv params (the training-time view).  The deployed
+//! quantized graphs never contain BN nodes — the paper (and our train.py)
+//! fold + retrain before export — but the pass is part of the flow and is
+//! exercised by tests that fold a float graph and compare outputs.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Edge, Graph, Op};
+
+use super::relu_merge::rewire;
+
+/// Float parameters of a conv layer during the fold (training-time view).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FloatConvParams {
+    /// (KH, KW, CIN, COUT) row-major.
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+impl FloatConvParams {
+    #[inline]
+    pub fn w_at(&self, kh: usize, kw: usize, ci: usize, co: usize) -> f32 {
+        self.w[((kh * self.kw + kw) * self.cin + ci) * self.cout + co]
+    }
+}
+
+/// Fold every `Conv -> BatchNorm` pair; returns the number folded.
+///
+/// `params` maps conv node names to their float parameters and is updated
+/// in place.
+pub fn bn_fold(g: &mut Graph, params: &mut BTreeMap<String, FloatConvParams>) -> usize {
+    let mut folded = 0;
+    let ids: Vec<usize> = g.live().map(|n| n.id).collect();
+    for id in ids {
+        let (conv_id, bn_id, scale, shift) = {
+            let n = g.node(id);
+            if n.dead {
+                continue;
+            }
+            let bn = match &n.op {
+                Op::BatchNorm(b) => b.clone(),
+                _ => continue,
+            };
+            let (src, _) = n.inputs[0];
+            if src.port != 0 || !matches!(g.node(src.node).op, Op::Conv(_)) {
+                continue;
+            }
+            if g.consumers(src).len() != 1 {
+                continue; // conv output also consumed raw elsewhere
+            }
+            (src.node, n.id, bn.scale, bn.shift)
+        };
+        let name = g.node(conv_id).name.clone();
+        if let Some(p) = params.get_mut(&name) {
+            assert_eq!(p.cout, scale.len(), "{name}: BN channels mismatch");
+            for idx in 0..p.w.len() {
+                let co = idx % p.cout;
+                p.w[idx] *= scale[co];
+            }
+            for co in 0..p.cout {
+                p.b[co] = p.b[co] * scale[co] + shift[co];
+            }
+        }
+        rewire(g, Edge::new(bn_id, 0), Edge::new(conv_id, 0));
+        g.node_mut(bn_id).dead = true;
+        folded += 1;
+    }
+    folded
+}
+
+/// Reference float conv for the fold-correctness test.
+#[cfg(test)]
+fn conv_f32(x: &[f32], h: usize, w: usize, p: &FloatConvParams, stride: usize, pad: usize) -> Vec<f32> {
+    let oh = (h + 2 * pad - p.kh) / stride + 1;
+    let ow = (w + 2 * pad - p.kw) / stride + 1;
+    let mut out = vec![0f32; oh * ow * p.cout];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for co in 0..p.cout {
+                let mut acc = p.b[co];
+                for ky in 0..p.kh {
+                    for kx in 0..p.kw {
+                        let iy = oy * stride + ky;
+                        let ix = ox * stride + kx;
+                        if iy < pad || ix < pad || iy - pad >= h || ix - pad >= w {
+                            continue;
+                        }
+                        for ci in 0..p.cin {
+                            acc += x[((iy - pad) * w + (ix - pad)) * p.cin + ci]
+                                * p.w_at(ky, kx, ci, co);
+                        }
+                    }
+                }
+                out[(oy * ow + ox) * p.cout + co] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{BatchNormAttrs, ConvAttrs};
+    use crate::util::Lcg64;
+
+    fn rand_params(rng: &mut Lcg64, kh: usize, kw: usize, cin: usize, cout: usize) -> FloatConvParams {
+        FloatConvParams {
+            w: (0..kh * kw * cin * cout).map(|_| rng.next_f64() as f32 - 0.5).collect(),
+            b: (0..cout).map(|_| rng.next_f64() as f32 - 0.5).collect(),
+            kh, kw, cin, cout,
+        }
+    }
+
+    #[test]
+    fn fold_is_numerically_exact() {
+        let mut rng = Lcg64::new(99);
+        let (h, w, cin, cout) = (6usize, 6usize, 3usize, 4usize);
+        let p = rand_params(&mut rng, 3, 3, cin, cout);
+        let scale: Vec<f32> = (0..cout).map(|_| rng.next_f64() as f32 + 0.5).collect();
+        let shift: Vec<f32> = (0..cout).map(|_| rng.next_f64() as f32 - 0.5).collect();
+        let x: Vec<f32> = (0..h * w * cin).map(|_| rng.next_f64() as f32 - 0.5).collect();
+
+        // Unfolded: conv then BN.
+        let y = conv_f32(&x, h, w, &p, 1, 1);
+        let want: Vec<f32> = y
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v * scale[i % cout] + shift[i % cout])
+            .collect();
+
+        // Build graph, fold, re-run conv with folded params.
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h, w, c: cin, exp: -7 }, &[]);
+        let c = g.add_simple(
+            "c",
+            Op::Conv(ConvAttrs {
+                cin, cout, k: 3, stride: 1, pad: 1, relu: false,
+                w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false, raw_output: false,
+            }),
+            &[Edge::new(i, 0)],
+        );
+        g.add_simple(
+            "bn",
+            Op::BatchNorm(BatchNormAttrs { channels: cout, scale: scale.clone(), shift: shift.clone() }),
+            &[Edge::new(c, 0)],
+        );
+        let mut params = BTreeMap::new();
+        params.insert("c".to_string(), p);
+        assert_eq!(bn_fold(&mut g, &mut params), 1);
+        g.compact();
+        assert_eq!(g.count_kind("batchnorm"), 0);
+
+        let got = conv_f32(&x, h, w, &params["c"], 1, 1);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

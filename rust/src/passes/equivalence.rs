@@ -1,0 +1,97 @@
+//! Structural graph equivalence (up to node ids and dead nodes).
+//!
+//! Used to assert that the optimization pipeline transforms the
+//! unoptimized builder's graph into exactly the optimized builder's graph.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Graph, Op};
+
+/// True if the two graphs are isomorphic under name matching: same live
+/// node names, same ops (attribute-exact), and same named input edges.
+pub fn equivalent(a: &Graph, b: &Graph) -> bool {
+    let name_map = |g: &Graph| -> BTreeMap<String, usize> {
+        g.live().map(|n| (n.name.clone(), n.id)).collect()
+    };
+    let an = name_map(a);
+    let bn = name_map(b);
+    if an.len() != bn.len() || an.keys().ne(bn.keys()) {
+        return false;
+    }
+    for (name, &aid) in &an {
+        let na = a.node(aid);
+        let nb = b.node(bn[name]);
+        if !ops_equal(&na.op, &nb.op) {
+            return false;
+        }
+        if na.inputs.len() != nb.inputs.len() {
+            return false;
+        }
+        for ((ea, ra), (eb, rb)) in na.inputs.iter().zip(&nb.inputs) {
+            if ra != rb || ea.port != eb.port {
+                return false;
+            }
+            if a.node(ea.node).name != b.node(eb.node).name {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+fn ops_equal(a: &Op, b: &Op) -> bool {
+    a == b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ConvAttrs, Edge};
+
+    fn conv(c: usize) -> Op {
+        Op::Conv(ConvAttrs {
+            cin: c, cout: c, k: 3, stride: 1, pad: 1, relu: false,
+            w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false, raw_output: false,
+        })
+    }
+
+    #[test]
+    fn identical_graphs_are_equivalent() {
+        let build = || {
+            let mut g = Graph::new();
+            let i = g.add_simple("in", Op::Input { h: 4, w: 4, c: 2, exp: -7 }, &[]);
+            g.add_simple("c", conv(2), &[Edge::new(i, 0)]);
+            g
+        };
+        assert!(equivalent(&build(), &build()));
+    }
+
+    #[test]
+    fn id_permutation_is_equivalent() {
+        let mut a = Graph::new();
+        let i = a.add_simple("in", Op::Input { h: 4, w: 4, c: 2, exp: -7 }, &[]);
+        a.add_simple("c", conv(2), &[Edge::new(i, 0)]);
+
+        // Same graph with a dead node inserted before (shifting ids).
+        let mut b = Graph::new();
+        let dead = b.add_simple("zombie", Op::Relu, &[]);
+        b.node_mut(dead).dead = true;
+        let i = b.add_simple("in", Op::Input { h: 4, w: 4, c: 2, exp: -7 }, &[]);
+        b.add_simple("c", conv(2), &[Edge::new(i, 0)]);
+        assert!(equivalent(&a, &b));
+    }
+
+    #[test]
+    fn attr_difference_detected() {
+        let mut a = Graph::new();
+        let i = a.add_simple("in", Op::Input { h: 4, w: 4, c: 2, exp: -7 }, &[]);
+        a.add_simple("c", conv(2), &[Edge::new(i, 0)]);
+        let mut b = Graph::new();
+        let i2 = b.add_simple("in", Op::Input { h: 4, w: 4, c: 2, exp: -7 }, &[]);
+        let cid = b.add_simple("c", conv(2), &[Edge::new(i2, 0)]);
+        if let Op::Conv(attrs) = &mut b.node_mut(cid).op {
+            attrs.relu = true;
+        }
+        assert!(!equivalent(&a, &b));
+    }
+}

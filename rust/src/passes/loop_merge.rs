@@ -1,0 +1,119 @@
+//! Loop merge (paper Fig. 12b): in a residual block *with* a downsample
+//! convolution, the pointwise skip conv is absorbed into the task of the
+//! long branch's first convolution.
+//!
+//! Pattern:
+//!
+//! ```text
+//!        t ──> ds(1x1 conv) ──────┐
+//!        t ──> conv0 ──> ...      v
+//!                              (consumer of ds, e.g. the Add)
+//! ```
+//!
+//! Both `ds` and `conv0` read the same tensor `t`.  After the pass, `ds`'s
+//! computation lives inside `conv0`'s task (both loops iterate over the
+//! same input stream, so they merge at identical trip counts) and the
+//! merged output is exposed on `conv0` port 1.  This removes one endpoint
+//! of `t` — the skip branch no longer needs its own copy of the stream —
+//! which is the first half of the paper's buffering reduction (Eq. 23).
+
+use crate::graph::{Edge, Graph, MergedDownsample, Op};
+
+use super::relu_merge::rewire;
+
+/// Apply the pass; returns the number of downsample convs merged.
+pub fn loop_merge(g: &mut Graph) -> usize {
+    let mut merged = 0;
+    let ids: Vec<usize> = g.live().map(|n| n.id).collect();
+    for ds_id in ids {
+        // Candidate ds: a 1x1 conv whose input tensor is also read by
+        // another (larger-filter) conv — the long branch's conv0.
+        let (t, ds_attrs, ds_name) = {
+            let n = g.node(ds_id);
+            if n.dead {
+                continue;
+            }
+            let a = match &n.op {
+                Op::Conv(a) if a.k == 1 && a.merged_downsample.is_none() && !a.forwards_input => a.clone(),
+                _ => continue,
+            };
+            (n.inputs[0].0, a, n.name.clone())
+        };
+        let siblings: Vec<usize> = g
+            .consumers(t)
+            .into_iter()
+            .filter(|&c| c != ds_id)
+            .filter(|&c| matches!(&g.node(c).op, Op::Conv(a) if a.k > 1 && a.merged_downsample.is_none()))
+            .collect();
+        let Some(&host) = siblings.first() else { continue };
+
+        // Absorb ds into the host conv's task.
+        if let Op::Conv(a) = &mut g.node_mut(host).op {
+            a.merged_downsample = Some(MergedDownsample {
+                name: ds_name,
+                cout: ds_attrs.cout,
+                k: ds_attrs.k,
+                stride: ds_attrs.stride,
+                pad: ds_attrs.pad,
+                w_exp: ds_attrs.w_exp,
+                out_exp: ds_attrs.out_exp,
+            });
+        }
+        rewire(g, Edge::new(ds_id, 0), Edge::new(host, 1));
+        g.node_mut(ds_id).dead = true;
+        merged += 1;
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ConvAttrs, InputRole};
+
+    fn attrs(cin: usize, cout: usize, k: usize, stride: usize) -> ConvAttrs {
+        ConvAttrs {
+            cin, cout, k, stride, pad: if k == 3 { 1 } else { 0 }, relu: false,
+            w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false, raw_output: false,
+        }
+    }
+
+    #[test]
+    fn merges_downsample_block() {
+        // t -> ds(1x1 s2), t -> c0(3x3 s2) -> c1(3x3) ; add(c1, ds)
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 4, exp: -7 }, &[]);
+        let ds = g.add_simple("ds", Op::Conv(attrs(4, 8, 1, 2)), &[Edge::new(i, 0)]);
+        let c0 = g.add_simple("c0", Op::Conv(attrs(4, 8, 3, 2)), &[Edge::new(i, 0)]);
+        let c1 = g.add_simple("c1", Op::Conv(attrs(8, 8, 3, 1)), &[Edge::new(c0, 0)]);
+        g.add(
+            "add",
+            Op::Add { out_exp: -5 },
+            vec![(Edge::new(c1, 0), InputRole::Data), (Edge::new(ds, 0), InputRole::Data)],
+        );
+        assert_eq!(loop_merge(&mut g), 1);
+        assert!(g.node(ds).dead);
+        let host = g.find("c0").unwrap();
+        match &g.node(host).op {
+            Op::Conv(a) => {
+                let m = a.merged_downsample.as_ref().unwrap();
+                assert_eq!(m.name, "ds");
+                assert_eq!(m.cout, 8);
+            }
+            _ => unreachable!(),
+        }
+        // Add's second input now reads c0 port 1.
+        let add = g.find("add").unwrap();
+        assert_eq!(g.node(add).inputs[1].0, Edge::new(host, 1));
+        g.compact();
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn ignores_lone_pointwise_conv() {
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 4, exp: -7 }, &[]);
+        g.add_simple("pw", Op::Conv(attrs(4, 8, 1, 1)), &[Edge::new(i, 0)]);
+        assert_eq!(loop_merge(&mut g), 0);
+    }
+}

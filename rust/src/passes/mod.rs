@@ -1,0 +1,107 @@
+//! Graph optimization passes (paper Sections III-A and III-G).
+//!
+//! Pipeline order (the paper's flow, Fig. 2 "graph optimization"):
+//!
+//! 1. [`bn_fold`] — merge BatchNorm into the preceding convolution
+//!    (Section III-A: done after training, before export);
+//! 2. [`relu_merge`] — fuse standalone ReLU nodes into the producing conv;
+//! 3. [`loop_merge`] — residual blocks *with* downsample: compute the
+//!    pointwise skip conv inside conv0's task (Fig. 12b);
+//! 4. [`temporal_reuse`] — residual blocks *without* downsample: forward
+//!    the skip tensor out of conv0's window buffer instead of buffering it
+//!    twice (Fig. 12a);
+//! 5. [`add_fusion`] — delete the Add node by initializing conv1's
+//!    accumulator with the (aligned) skip value (Fig. 13), fusing the
+//!    post-add ReLU.
+//!
+//! The end state must equal `models::build_optimized_graph` — asserted by
+//! `equivalent` in tests — and the whole pipeline must be numerics- and
+//! shape-preserving (property tests in `rust/tests/props.rs`, numeric
+//! equality via `model.unoptimized_ref_forward` on the Python side and
+//! `sim::golden` here).
+
+mod add_fusion;
+mod bn_fold;
+mod equivalence;
+mod loop_merge;
+mod relu_merge;
+mod temporal_reuse;
+
+pub use add_fusion::add_fusion;
+pub use bn_fold::{bn_fold, FloatConvParams};
+pub use equivalence::equivalent;
+pub use loop_merge::loop_merge;
+pub use relu_merge::relu_merge;
+pub use temporal_reuse::temporal_reuse;
+
+use crate::graph::Graph;
+
+/// Statistics of one pipeline run.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct PassStats {
+    pub bn_folded: usize,
+    pub relu_merged: usize,
+    pub loops_merged: usize,
+    pub reuses: usize,
+    pub adds_fused: usize,
+}
+
+/// Run the full residual-optimization pipeline in the published order.
+/// (BN folding is numeric and runs separately via [`bn_fold`] when float
+/// parameters are in play; graphs built from quantized checkpoints have no
+/// BN nodes left.)
+pub fn optimize(g: &mut Graph) -> PassStats {
+    let mut stats = PassStats::default();
+    stats.relu_merged = relu_merge(g);
+    stats.loops_merged = loop_merge(g);
+    stats.reuses = temporal_reuse(g);
+    stats.adds_fused = add_fusion(g);
+    g.compact();
+    debug_assert!(g.validate().is_ok());
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+    use crate::models::{build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8};
+
+    #[test]
+    fn pipeline_reaches_optimized_form_resnet8() {
+        let arch = resnet8();
+        let (act, w) = default_exps(&arch);
+        let mut g = build_unoptimized_graph(&arch, &act, &w);
+        let stats = optimize(&mut g);
+        assert_eq!(stats.loops_merged, 2, "resnet8 has 2 downsample blocks");
+        assert_eq!(stats.reuses, 1, "resnet8 has 1 identity-skip block");
+        assert_eq!(stats.adds_fused, 3);
+        let want = build_optimized_graph(&arch, &act, &w);
+        assert!(equivalent(&g, &want), "got:\n{g}\nwant:\n{want}");
+    }
+
+    #[test]
+    fn pipeline_reaches_optimized_form_resnet20() {
+        let arch = resnet20();
+        let (act, w) = default_exps(&arch);
+        let mut g = build_unoptimized_graph(&arch, &act, &w);
+        let stats = optimize(&mut g);
+        assert_eq!(stats.loops_merged, 2);
+        assert_eq!(stats.reuses, 7);
+        assert_eq!(stats.adds_fused, 9);
+        let want = build_optimized_graph(&arch, &act, &w);
+        assert!(equivalent(&g, &want), "got:\n{g}\nwant:\n{want}");
+    }
+
+    #[test]
+    fn pipeline_preserves_output_shape() {
+        for arch in [resnet8(), resnet20()] {
+            let (act, w) = default_exps(&arch);
+            let mut g = build_unoptimized_graph(&arch, &act, &w);
+            let before = infer_shapes(&g).unwrap()[&crate::graph::Edge::new(g.output().unwrap(), 0)];
+            optimize(&mut g);
+            let after = infer_shapes(&g).unwrap()[&crate::graph::Edge::new(g.output().unwrap(), 0)];
+            assert_eq!(before, after);
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! ReLU merging: `Conv -> Relu` becomes `Conv{relu: true}`.
+//!
+//! The paper merges ReLU (and BN) with convolutions before code generation
+//! (Section III-B: the code generation step works on the graph "after ReLU
+//! and batch normalization were merged with convolutional layers").  The
+//! fused ReLU is applied to the 32-bit accumulator before requantization,
+//! which is exactly equivalent to applying it to the int8 output when the
+//! output scale is non-negative (requantization is monotone and maps 0 to
+//! 0) — the property test in `rust/tests/props.rs` checks this identity.
+
+use crate::graph::{Edge, Graph, Op};
+
+/// Apply the pass; returns the number of ReLU nodes merged.
+pub fn relu_merge(g: &mut Graph) -> usize {
+    let mut merged = 0;
+    let ids: Vec<usize> = g.live().map(|n| n.id).collect();
+    for id in ids {
+        // Pattern: live Relu whose single input is a Conv with no other
+        // consumers of port 0 (a conv feeding both a ReLU and something
+        // else cannot fuse — the other consumer would see pre-ReLU data).
+        let (conv_id, relu_id) = {
+            let n = g.node(id);
+            if n.dead || !matches!(n.op, Op::Relu) {
+                continue;
+            }
+            let (src, _) = n.inputs[0];
+            if src.port != 0 {
+                continue;
+            }
+            match &g.node(src.node).op {
+                Op::Conv(_) => {}
+                _ => continue,
+            }
+            if g.consumers(src).len() != 1 {
+                continue;
+            }
+            (src.node, n.id)
+        };
+        // Fuse: set relu on the conv, rewire ReLU's consumers to the conv.
+        if let Op::Conv(a) = &mut g.node_mut(conv_id).op {
+            if a.relu {
+                continue; // already fused
+            }
+            a.relu = true;
+        }
+        rewire(g, Edge::new(relu_id, 0), Edge::new(conv_id, 0));
+        g.node_mut(relu_id).dead = true;
+        merged += 1;
+    }
+    merged
+}
+
+/// Replace every use of `from` with `to`.
+pub(crate) fn rewire(g: &mut Graph, from: Edge, to: Edge) {
+    for n in &mut g.nodes {
+        if n.dead {
+            continue;
+        }
+        for (e, _) in &mut n.inputs {
+            if *e == from {
+                *e = to;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ConvAttrs, InputRole};
+
+    fn conv_attrs() -> ConvAttrs {
+        ConvAttrs {
+            cin: 3, cout: 4, k: 3, stride: 1, pad: 1, relu: false,
+            w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false, raw_output: false,
+        }
+    }
+
+    #[test]
+    fn merges_simple_chain() {
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 3, exp: -7 }, &[]);
+        let c = g.add_simple("c", Op::Conv(conv_attrs()), &[Edge::new(i, 0)]);
+        let r = g.add_simple("r", Op::Relu, &[Edge::new(c, 0)]);
+        let _p = g.add_simple("p", Op::GlobalAvgPool { out_exp: -5 }, &[Edge::new(r, 0)]);
+        assert_eq!(relu_merge(&mut g), 1);
+        g.compact();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.count_kind("relu"), 0);
+        let c = g.find("c").unwrap();
+        assert!(matches!(&g.node(c).op, Op::Conv(a) if a.relu));
+        let p = g.find("p").unwrap();
+        assert_eq!(g.node(p).inputs[0].0, Edge::new(c as usize, 0));
+        let _ = p;
+    }
+
+    #[test]
+    fn refuses_when_conv_has_other_consumers() {
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 3, exp: -7 }, &[]);
+        let c = g.add_simple("c", Op::Conv(conv_attrs()), &[Edge::new(i, 0)]);
+        let r = g.add_simple("r", Op::Relu, &[Edge::new(c, 0)]);
+        // second consumer of the conv's raw output
+        let c2 = g.add_simple(
+            "c2",
+            Op::Conv(ConvAttrs { cin: 4, ..conv_attrs() }),
+            &[Edge::new(c, 0)],
+        );
+        g.add(
+            "add",
+            Op::Add { out_exp: -5 },
+            vec![(Edge::new(r, 0), InputRole::Data), (Edge::new(c2, 0), InputRole::Data)],
+        );
+        assert_eq!(relu_merge(&mut g), 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Temporal reuse (paper Fig. 12a): in a residual block *without* a
+//! downsample, the identity skip branch re-uses conv0's window buffer
+//! instead of buffering the tensor a second time.
+//!
+//! Pattern:
+//!
+//! ```text
+//!     t ──────────────────────┐        (identity skip)
+//!     t ──> conv0 ──> conv1 ──┴─> add
+//! ```
+//!
+//! `t` has two endpoints: conv0's window buffer and the skip stream.  The
+//! pass sets `forwards_input` on conv0 — its window buffer forwards each
+//! activation on port 1 once the value has been fully consumed by the
+//! sliding window — and rewires the skip consumer to that port.  The skip
+//! branch's buffering collapses from the receptive-field bound (Eq. 21)
+//! to conv1's own window buffer (Eq. 22): the R_sc = 0.5 headline.
+
+use crate::graph::{Graph, Op};
+
+/// Apply the pass; returns the number of skip branches rewired.
+pub fn temporal_reuse(g: &mut Graph) -> usize {
+    let mut rewired = 0;
+    let ids: Vec<usize> = g.live().map(|n| n.id).collect();
+    for add_id in ids {
+        // Pattern root: an Add node (the residual merge).
+        let (long_edge, skip_edge) = {
+            let n = g.node(add_id);
+            if n.dead || !matches!(n.op, Op::Add { .. }) {
+                continue;
+            }
+            (n.inputs[0].0, n.inputs[1].0)
+        };
+        // The long branch input must be a conv (conv1); walk back to conv0.
+        let conv1 = long_edge.node;
+        if !matches!(g.node(conv1).op, Op::Conv(_)) {
+            continue;
+        }
+        let conv0_edge = g.node(conv1).inputs[0].0;
+        let conv0 = conv0_edge.node;
+        if !matches!(g.node(conv0).op, Op::Conv(_)) {
+            continue;
+        }
+        // Identity skip: the skip edge must be exactly conv0's input.
+        if g.node(conv0).inputs[0].0 != skip_edge || skip_edge.port != 0 {
+            continue;
+        }
+        // Set forwarding on conv0 and move the skip consumer to port 1.
+        if let Op::Conv(a) = &mut g.node_mut(conv0).op {
+            if a.forwards_input || a.merged_downsample.is_some() {
+                continue;
+            }
+            a.forwards_input = true;
+        }
+        let new_edge = crate::graph::Edge::new(conv0, 1);
+        for (e, _) in &mut g.node_mut(add_id).inputs {
+            if *e == skip_edge {
+                *e = new_edge;
+            }
+        }
+        rewired += 1;
+    }
+    rewired
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ConvAttrs, Edge, InputRole};
+
+    fn attrs(c: usize) -> ConvAttrs {
+        ConvAttrs {
+            cin: c, cout: c, k: 3, stride: 1, pad: 1, relu: false,
+            w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false, raw_output: false,
+        }
+    }
+
+    #[test]
+    fn rewires_identity_skip() {
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 4, exp: -7 }, &[]);
+        let c0 = g.add_simple("c0", Op::Conv(attrs(4)), &[Edge::new(i, 0)]);
+        let c1 = g.add_simple("c1", Op::Conv(attrs(4)), &[Edge::new(c0, 0)]);
+        let add = g.add(
+            "add",
+            Op::Add { out_exp: -5 },
+            vec![(Edge::new(c1, 0), InputRole::Data), (Edge::new(i, 0), InputRole::Data)],
+        );
+        assert_eq!(temporal_reuse(&mut g), 1);
+        assert!(matches!(&g.node(c0).op, Op::Conv(a) if a.forwards_input));
+        assert_eq!(g.node(add).inputs[1].0, Edge::new(c0, 1));
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn ignores_downsample_skip() {
+        // Skip through a conv is not an identity skip; loop_merge handles it.
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 4, exp: -7 }, &[]);
+        let ds = g.add_simple("ds", Op::Conv(ConvAttrs { k: 1, pad: 0, ..attrs(4) }), &[Edge::new(i, 0)]);
+        let c0 = g.add_simple("c0", Op::Conv(attrs(4)), &[Edge::new(i, 0)]);
+        let c1 = g.add_simple("c1", Op::Conv(attrs(4)), &[Edge::new(c0, 0)]);
+        g.add(
+            "add",
+            Op::Add { out_exp: -5 },
+            vec![(Edge::new(c1, 0), InputRole::Data), (Edge::new(ds, 0), InputRole::Data)],
+        );
+        assert_eq!(temporal_reuse(&mut g), 0);
+    }
+}

@@ -1,0 +1,48 @@
+//! Power-of-two quantization (paper Section III-A, Eqs. 1–3).
+//!
+//! Bit-exact mirror of `python/compile/kernels/quantize.py` — the shared
+//! arithmetic contract that lets the Rust golden model, the dataflow
+//! simulator, and the PJRT-executed HLO agree to the last bit.
+//!
+//! A quantized tensor is an integer payload plus a power-of-two exponent:
+//! `real = q * 2^exp`.  Weights/activations are int8, biases int16 (stored
+//! at the accumulator exponent), accumulators int32 (Eq. 5 shows 30 bits
+//! suffice for the worst ResNet8/20 layer; 32 is used for the same reasons
+//! as the paper — no overflow plus native-width registers).
+
+mod ops;
+mod tensor;
+
+pub use ops::*;
+pub use tensor::{QTensor, Shape4};
+
+/// int8 clipping bounds (paper Eq. 2/3, signed case).
+pub const INT8_MIN: i32 = -128;
+pub const INT8_MAX: i32 = 127;
+/// int16 bias bounds.
+pub const INT16_MIN: i32 = -(1 << 15);
+pub const INT16_MAX: i32 = (1 << 15) - 1;
+
+/// Accumulator bit-width needed for a conv layer (paper Eq. 5):
+/// `ceil(log2(N_acc)) + 2*bw`.
+pub fn acc_bits(och: usize, ich: usize, fh: usize, fw: usize, bw: u32) -> u32 {
+    let n_acc = (och * ich * fh * fw) as u64;
+    (64 - n_acc.leading_zeros()).max(1) + 2 * bw
+    // NOTE: `64 - leading_zeros` is ceil(log2(n)) for n not a power of two
+    // and log2(n)+1 for exact powers — the paper's Eq. 6/7 example
+    // (N=9216 -> 14 bits) uses ceil(log2); both give <= 32 for these nets,
+    // and the +1 on powers of two is the safe direction.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_eq7_worst_case_fits_i32() {
+        // Resnet8/20 worst case: 32*32*3*3 = 9216 accumulations (Eq. 6).
+        let bits = acc_bits(32, 32, 3, 3, 8);
+        assert!(bits <= 32, "paper chooses 32-bit accumulators; got {bits}");
+        assert!(bits >= 30, "Eq. 7 computes 30 bits; got {bits}");
+    }
+}

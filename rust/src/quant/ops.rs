@@ -1,0 +1,116 @@
+//! Scalar quantization arithmetic — the contract functions.
+
+use super::{INT8_MAX, INT8_MIN};
+
+/// Requantizing shift: `shift > 0` is an arithmetic right shift with
+/// round-half-up (`floor((acc + 2^(s-1)) / 2^s)`); `shift <= 0` is an exact
+/// left shift.  Identical to `quantize.round_shift` on the Python side —
+/// i32 `>>` is an arithmetic (floor) shift in both languages.
+#[inline]
+pub fn round_shift(acc: i32, shift: i32) -> i32 {
+    if shift <= 0 {
+        acc.wrapping_shl((-shift) as u32)
+    } else {
+        let half = 1i32 << (shift - 1);
+        acc.wrapping_add(half) >> shift
+    }
+}
+
+/// Clip to the signed int8 grid (paper Eq. 1's clip with Eqs. 2–3 bounds).
+#[inline]
+pub fn clip_i8(x: i32) -> i32 {
+    x.clamp(INT8_MIN, INT8_MAX)
+}
+
+/// Full requantization of an int32 accumulator at `acc_exp` down to an int8
+/// activation at `out_exp`, with the fused ReLU applied on the accumulator
+/// (the generated HLS applies ReLU to the 32-bit register before shifting).
+#[inline]
+pub fn requantize(acc: i32, acc_exp: i32, out_exp: i32, relu: bool) -> i32 {
+    let acc = if relu { acc.max(0) } else { acc };
+    clip_i8(round_shift(acc, out_exp - acc_exp))
+}
+
+/// Align an int8 skip-connection value at `skip_exp` to the accumulator
+/// exponent (paper Fig. 13: the skip value initializes the accumulation
+/// register).  `skip_exp >= acc_exp` always holds for these nets.
+#[inline]
+pub fn align_skip(skip: i32, skip_exp: i32, acc_exp: i32) -> i32 {
+    let shift = skip_exp - acc_exp;
+    debug_assert!(shift >= 0, "skip exp {skip_exp} below acc exp {acc_exp}");
+    skip << shift
+}
+
+/// Tightest power-of-two exponent covering `max_abs` on `bits` bits —
+/// mirrors `quantize.pow2_exponent` (used only by tooling; the inference
+/// path receives exponents from the manifest).
+pub fn pow2_exponent(max_abs: f64, bits: u32) -> i32 {
+    let limit = ((1u32 << (bits - 1)) - 1) as f64;
+    if max_abs <= 0.0 || !max_abs.is_finite() {
+        return -((bits - 1) as i32);
+    }
+    (max_abs / limit).log2().ceil() as i32
+}
+
+/// Quantize a float to the int grid at `exp` (training/tooling only).
+pub fn quantize_pow2(x: f64, exp: i32, bits: u32) -> i32 {
+    let lo = -(1i64 << (bits - 1));
+    let hi = (1i64 << (bits - 1)) - 1;
+    let scaled = (x * (2f64).powi(-exp)).round() as i64;
+    scaled.clamp(lo, hi) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn round_shift_matches_floor_semantics() {
+        // floor((acc + half) / 2^s) including negatives.
+        assert_eq!(round_shift(10, 2), 3); // (10+2)>>2 = 3
+        assert_eq!(round_shift(-10, 2), -2); // (-10+2)>>2 = floor(-8/4) = -2
+        assert_eq!(round_shift(7, 0), 7);
+        assert_eq!(round_shift(7, -2), 28);
+        assert_eq!(round_shift(-1, 1), 0); // (-1+1)>>1
+    }
+
+    #[test]
+    fn round_shift_is_floor_div_property() {
+        forall("round_shift == floor((x+half)/2^s)", 2000, |rng| {
+            let x = rng.range_i64(-(1 << 28), 1 << 28) as i32;
+            let s = rng.range_i64(1, 20) as i32;
+            let half = 1i64 << (s - 1);
+            let expect = ((x as i64 + half).div_euclid(1i64 << s)) as i32;
+            assert_eq!(round_shift(x, s), expect, "x={x} s={s}");
+        });
+    }
+
+    #[test]
+    fn requantize_clips_and_relus() {
+        assert_eq!(requantize(1 << 20, 0, 8, false), 127);
+        assert_eq!(requantize(-(1 << 20), 0, 8, false), -128);
+        assert_eq!(requantize(-(1 << 20), 0, 8, true), 0);
+        assert_eq!(requantize(256, 0, 2, false), 64);
+    }
+
+    #[test]
+    fn align_skip_exact() {
+        assert_eq!(align_skip(-5, -6, -14), -5 << 8);
+        assert_eq!(align_skip(127, -5, -13), 127 << 8);
+    }
+
+    #[test]
+    fn pow2_exponent_tight() {
+        // max 127 on 8 bits -> exponent 0.
+        assert_eq!(pow2_exponent(127.0, 8), 0);
+        // max 1.0 -> 1.0 <= 127 * 2^e -> e = -6 (2^-7*127 = 0.99 < 1).
+        assert_eq!(pow2_exponent(1.0, 8), -6);
+        forall("pow2 exponent covers max", 500, |rng| {
+            let m = rng.next_f64() * 100.0 + 1e-6;
+            let e = pow2_exponent(m, 8);
+            assert!(127.0 * (2f64).powi(e) >= m * 0.999999);
+            assert!(127.0 * (2f64).powi(e - 1) < m);
+        });
+    }
+}

@@ -1,0 +1,115 @@
+//! Integer tensor container used by the golden model and the simulator.
+//!
+//! NHWC layout (depth-first / channel-last), matching the accelerator's
+//! streaming order (paper Section III-F: activations are produced in
+//! depth-first order) and the Python side's array layout.
+
+use std::fmt;
+
+/// 4-D shape (N, H, W, C).  Lower-rank tensors set trailing dims to 1 in
+/// the natural way (e.g. logits are (N, 1, 1, C)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape4 {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape4 {
+    pub fn new(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Shape4 { n, h, w, c }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.n * self.h * self.w * self.c
+    }
+}
+
+impl fmt::Display for Shape4 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({},{},{},{})", self.n, self.h, self.w, self.c)
+    }
+}
+
+/// Integer tensor with a power-of-two scale: `real = data * 2^exp`.
+///
+/// Payload is `i32` regardless of the logical width (int8 activations,
+/// int16 biases, int32 accumulators) — the logical grid is enforced at the
+/// producing operation, exactly as in the Python contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub shape: Shape4,
+    pub exp: i32,
+    pub data: Vec<i32>,
+}
+
+impl QTensor {
+    pub fn zeros(shape: Shape4, exp: i32) -> Self {
+        QTensor { shape, exp, data: vec![0; shape.elems()] }
+    }
+
+    pub fn from_vec(shape: Shape4, exp: i32, data: Vec<i32>) -> Self {
+        assert_eq!(shape.elems(), data.len(), "shape {shape} vs {} elems", data.len());
+        QTensor { shape, exp, data }
+    }
+
+    /// NHWC linear index.
+    #[inline]
+    pub fn idx(&self, n: usize, y: usize, x: usize, c: usize) -> usize {
+        ((n * self.shape.h + y) * self.shape.w + x) * self.shape.c + c
+    }
+
+    #[inline]
+    pub fn at(&self, n: usize, y: usize, x: usize, c: usize) -> i32 {
+        self.data[self.idx(n, y, x, c)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, n: usize, y: usize, x: usize, c: usize, v: i32) {
+        let i = self.idx(n, y, x, c);
+        self.data[i] = v;
+    }
+
+    /// Dequantized view (tooling/debug only — the inference path is integer).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let s = (2f32).powi(self.exp);
+        self.data.iter().map(|&q| q as f32 * s).collect()
+    }
+
+    /// Assert every element is on the signed `bits`-bit grid.
+    pub fn assert_bits(&self, bits: u32) {
+        let lo = -(1i32 << (bits - 1));
+        let hi = (1i32 << (bits - 1)) - 1;
+        for (i, &v) in self.data.iter().enumerate() {
+            assert!(v >= lo && v <= hi, "elem {i} = {v} outside int{bits}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_nhwc() {
+        let mut t = QTensor::zeros(Shape4::new(2, 3, 4, 5), -6);
+        t.set(1, 2, 3, 4, 42);
+        // last element of the buffer
+        assert_eq!(t.data[2 * 3 * 4 * 5 - 1], 42);
+        assert_eq!(t.at(1, 2, 3, 4), 42);
+    }
+
+    #[test]
+    fn dequantize_applies_scale() {
+        let t = QTensor::from_vec(Shape4::new(1, 1, 1, 2), -1, vec![3, -4]);
+        assert_eq!(t.dequantize(), vec![1.5, -2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bits_assertion_fires() {
+        let t = QTensor::from_vec(Shape4::new(1, 1, 1, 1), 0, vec![300]);
+        t.assert_bits(8);
+    }
+}

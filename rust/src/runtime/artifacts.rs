@@ -1,0 +1,135 @@
+//! The artifacts manifest: what `python/compile/aot.py` exported.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::{IMG_C, IMG_ELEMS, IMG_H, IMG_W};
+use crate::quant::{QTensor, Shape4};
+use crate::util::Json;
+
+/// One compiled model variant (architecture x baked batch size).
+#[derive(Debug, Clone)]
+pub struct ModelVariant {
+    pub name: String,
+    pub arch: String,
+    pub batch: usize,
+    pub hlo_path: PathBuf,
+    pub input_shape: Vec<usize>,
+    pub input_exp: i32,
+    pub output_shape: Vec<usize>,
+}
+
+/// The probe set: cross-language correctness anchor.
+#[derive(Debug, Clone)]
+pub struct ProbeSet {
+    /// (N, 32, 32, 3) int8-valued input @ 2^-7.
+    pub input: QTensor,
+    pub labels: Vec<u8>,
+    /// Oracle logits per architecture: arch -> (N, 10) int32.
+    pub logits: Vec<(String, Vec<i32>)>,
+}
+
+/// Parsed manifest + file access.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: Json,
+    pub models: Vec<ModelVariant>,
+}
+
+impl Artifacts {
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        let mut models = Vec::new();
+        for m in manifest
+            .get("models")
+            .and_then(|j| j.as_array())
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let geti = |k: &str| -> Vec<usize> {
+                m.get(k)
+                    .and_then(|j| j.as_array())
+                    .map(|a| a.iter().filter_map(|v| v.as_i64()).map(|x| x as usize).collect())
+                    .unwrap_or_default()
+            };
+            models.push(ModelVariant {
+                name: m.get("name").and_then(|j| j.as_str()).unwrap_or_default().into(),
+                arch: m.get("arch").and_then(|j| j.as_str()).unwrap_or_default().into(),
+                batch: m.get("batch").and_then(|j| j.as_i64()).unwrap_or(0) as usize,
+                hlo_path: dir.join(m.get("hlo").and_then(|j| j.as_str()).unwrap_or_default()),
+                input_shape: geti("input_shape"),
+                input_exp: m.get("input_exp").and_then(|j| j.as_i64()).unwrap_or(-7) as i32,
+                output_shape: geti("output_shape"),
+            });
+        }
+        Ok(Artifacts { dir: dir.to_path_buf(), manifest, models })
+    }
+
+    /// Variants for one architecture, sorted by batch size.
+    pub fn variants(&self, arch: &str) -> Vec<&ModelVariant> {
+        let mut v: Vec<&ModelVariant> = self.models.iter().filter(|m| m.arch == arch).collect();
+        v.sort_by_key(|m| m.batch);
+        v
+    }
+
+    pub fn arch_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.iter().map(|m| m.arch.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Load the probe batch + oracle logits.
+    pub fn probe(&self) -> Result<ProbeSet> {
+        let p = self
+            .manifest
+            .get("probe")
+            .ok_or_else(|| anyhow!("manifest missing probe"))?;
+        let count = p.get("count").and_then(|j| j.as_i64()).unwrap_or(0) as usize;
+        let input_raw = std::fs::read(
+            self.dir.join(p.get("input").and_then(|j| j.as_str()).unwrap_or_default()),
+        )?;
+        anyhow::ensure!(input_raw.len() == count * IMG_ELEMS, "probe input size");
+        let input = QTensor::from_vec(
+            Shape4::new(count, IMG_H, IMG_W, IMG_C),
+            -7,
+            input_raw.iter().map(|&b| b as i8 as i32).collect(),
+        );
+        let labels =
+            std::fs::read(self.dir.join(p.get("labels").and_then(|j| j.as_str()).unwrap_or_default()))?;
+        let mut logits = Vec::new();
+        if let Some(obj) = p.get("logits").and_then(|j| j.as_object()) {
+            for (arch, file) in obj {
+                let raw = std::fs::read(self.dir.join(file.as_str().unwrap_or_default()))?;
+                let vals: Vec<i32> = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                logits.push((arch.clone(), vals));
+            }
+        }
+        Ok(ProbeSet { input, labels, logits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_manifest_when_artifacts_exist() {
+        let dir = crate::paths::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let a = Artifacts::load(&dir).unwrap();
+        assert!(!a.models.is_empty());
+        assert!(a.arch_names().contains(&"resnet8".to_string()));
+        let probe = a.probe().unwrap();
+        assert_eq!(probe.input.shape.n, probe.labels.len());
+    }
+}

@@ -1,0 +1,128 @@
+//! The PJRT execution engine: compile once, execute many.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::quant::{QTensor, Shape4};
+
+use super::artifacts::{Artifacts, ModelVariant};
+
+/// A compiled model variant ready to execute.
+pub struct LoadedModel {
+    pub variant: ModelVariant,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute on a full batch.  `input` must match the baked batch size.
+    pub fn infer(&self, input: &QTensor) -> Result<QTensor> {
+        let b = self.variant.batch;
+        anyhow::ensure!(
+            input.shape.n == b,
+            "batch {} != compiled batch {b}",
+            input.shape.n
+        );
+        let dims: Vec<i64> = self.variant.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&input.data).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<i32>()?;
+        let classes = *self.variant.output_shape.last().unwrap_or(&10);
+        Ok(QTensor::from_vec(Shape4::new(b, 1, 1, classes), 0, values))
+    }
+}
+
+/// All compiled variants on one PJRT (CPU) client.
+pub struct Engine {
+    pub models: BTreeMap<String, LoadedModel>,
+    platform: String,
+}
+
+impl Engine {
+    /// Load and compile every variant in the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let artifacts = Artifacts::load(dir)?;
+        Self::from_artifacts(&artifacts)
+    }
+
+    pub fn from_artifacts(artifacts: &Artifacts) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let platform = client.platform_name();
+        let mut models = BTreeMap::new();
+        for v in &artifacts.models {
+            let proto = xla::HloModuleProto::from_text_file(
+                v.hlo_path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", v.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", v.name))?;
+            models.insert(v.name.clone(), LoadedModel { variant: v.clone(), exe });
+        }
+        Ok(Engine { models, platform })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    pub fn model(&self, name: &str) -> Result<&LoadedModel> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name} not loaded (have: {:?})", self.models.keys()))
+    }
+
+    /// Batch-size buckets available for an arch, ascending.
+    pub fn buckets(&self, arch: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .models
+            .values()
+            .filter(|m| m.variant.arch == arch)
+            .map(|m| m.variant.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Run a batch of any size by tiling over the largest fitting buckets
+    /// (padding the tail with zero frames).
+    pub fn infer_any(&self, arch: &str, input: &QTensor) -> Result<QTensor> {
+        let buckets = self.buckets(arch);
+        anyhow::ensure!(!buckets.is_empty(), "no variants for {arch}");
+        let n = input.shape.n;
+        let frame = input.shape.h * input.shape.w * input.shape.c;
+        let mut out_data = Vec::with_capacity(n * 10);
+        let mut done = 0usize;
+        let mut classes = 10;
+        while done < n {
+            let remaining = n - done;
+            // Largest bucket <= remaining, else smallest bucket (pad).
+            let bucket = buckets
+                .iter()
+                .rev()
+                .find(|&&b| b <= remaining)
+                .or_else(|| buckets.first())
+                .copied()
+                .unwrap();
+            let take = bucket.min(remaining);
+            let mut chunk = vec![0i32; bucket * frame];
+            chunk[..take * frame]
+                .copy_from_slice(&input.data[done * frame..(done + take) * frame]);
+            let q = QTensor::from_vec(
+                Shape4::new(bucket, input.shape.h, input.shape.w, input.shape.c),
+                input.exp,
+                chunk,
+            );
+            let name = format!("{arch}_b{bucket}");
+            let logits = self.model(&name)?.infer(&q)?;
+            classes = logits.shape.c;
+            out_data.extend_from_slice(&logits.data[..take * classes]);
+            done += take;
+        }
+        Ok(QTensor::from_vec(Shape4::new(n, 1, 1, classes), 0, out_data))
+    }
+}

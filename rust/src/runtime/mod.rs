@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT artifacts and execute them.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only consumer of its outputs.  HLO *text* is the interchange format —
+//! the crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos
+//! (64-bit instruction ids), while the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+mod artifacts;
+mod engine;
+
+pub use artifacts::{Artifacts, ModelVariant, ProbeSet};
+pub use engine::{Engine, LoadedModel};

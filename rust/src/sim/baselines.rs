@@ -1,0 +1,166 @@
+//! Performance models of the comparison systems in the paper's Table 3.
+//!
+//! The paper compares against bitstreams we cannot run: the WSQ-AdderNet
+//! ResNet20/AdderNet accelerators of [32], and the FINN / Vitis-AI ResNet8
+//! implementations of [30].  For the Table 3 reproduction we model each
+//! comparator's *architecture class* (overlay with off-chip weights vs.
+//! pipelined dataflow; DSP-packed vs. LUT-MAC; 8-bit vs. 4-bit) at the
+//! fidelity needed for the paper's *relative* claims — who wins and by
+//! roughly what factor — not their absolute board numbers.  Parameters are
+//! taken from each system's published configuration, and every modeled row
+//! is printed next to the paper's reported row by `eval::tables`.
+
+use crate::models::ArchSpec;
+
+/// A modeled Table-3 row.
+#[derive(Debug, Clone)]
+pub struct BaselineRow {
+    pub name: String,
+    pub bits: u32,
+    pub clock_mhz: f64,
+    pub fps: f64,
+    pub gops: f64,
+    pub latency_ms: f64,
+    /// Accuracy delta vs. the 8-bit QAT model (percentage points),
+    /// from the published numbers (e.g. 4-bit FINN: -2.8).
+    pub accuracy_delta_pp: f64,
+}
+
+/// Overlay accelerator model (Vitis-AI DPU class, [30]'s Vitis AI row).
+///
+/// Architecture: a fixed PE array executes layers *sequentially*; weights
+/// and intermediate activations move through off-chip DDR with per-layer
+/// scheduling overhead.  Throughput is compute-bound at the array's peak
+/// MACs/cycle, but latency pays the layer-serialization and memory round
+/// trips — which is why the paper's dataflow design beats it ~28x on
+/// latency at similar resources.
+pub fn overlay_model(arch: &ArchSpec, clock_mhz: f64, pe_macs_per_cycle: u64) -> BaselineRow {
+    let total_macs = arch.total_macs();
+    let n_layers = arch.conv_layers().len() as u64 + 1;
+    // Per-layer: compute + fixed scheduling/DMA overhead + activation
+    // round-trip to DDR (NHWC int8, ~8 bytes/cycle effective).
+    let sched_overhead_cycles = 12_000u64; // instruction fetch + reconfig
+    let mut cycles = 0u64;
+    for c in arch.conv_layers() {
+        let compute = c.macs().div_ceil(pe_macs_per_cycle);
+        let act_bytes = (c.out_h() * c.out_w() * c.cout) as u64;
+        let ddr = act_bytes.div_ceil(8) * 2; // write + read back
+        cycles += compute + ddr + sched_overhead_cycles;
+    }
+    cycles += (arch.fc_in * arch.fc_out) as u64 / 16 + sched_overhead_cycles;
+    let _ = n_layers;
+    let latency_s = cycles as f64 / (clock_mhz * 1e6);
+    // Overlays pipeline across frames poorly (ping-pong buffers): assume
+    // 1.5 frames in flight.
+    let fps = 1.5 / latency_s;
+    BaselineRow {
+        name: "overlay (Vitis-AI class)".into(),
+        bits: 8,
+        clock_mhz,
+        fps,
+        gops: 2.0 * total_macs as f64 * fps / 1e9,
+        latency_ms: latency_s * 1e3,
+        accuracy_delta_pp: 0.5, // executes BN in hardware (paper Sec. IV)
+    }
+}
+
+/// FINN-class dataflow model ([30]'s ResNet8 FINN row): pipelined
+/// dataflow like ours, but 4-bit LUT-based MACs and *naive* residual
+/// buffering (double-buffered skip tensors).
+///
+/// Throughput: LUT-bound MAC budget.  A raw 4-bit LUT multiplier is ~15
+/// LUTs, but the *effective* fabric cost per sustained MAC/cycle in a
+/// folded FINN pipeline — SWU generators, accumulators, thresholding,
+/// FIFO glue — calibrates to ~90 LUTs against [30]'s reported ResNet8
+/// configuration (13 475 FPS at 225 MHz in 81.4 kLUT).  Latency
+/// additionally pays the naive double-buffered residual branches (no
+/// Section III-G optimizations).
+pub fn finn_model(arch: &ArchSpec, clock_mhz: f64, luts: u64) -> BaselineRow {
+    let total_macs = arch.total_macs();
+    let mac_budget = (luts as f64 * 0.6 / 90.0) as u64; // sustained 4b MACs
+    // Balanced dataflow: bottleneck layer gets its proportional share.
+    let c_max = arch.conv_layers().iter().map(|c| c.macs()).max().unwrap();
+    let sum_c: u64 = arch.conv_layers().iter().map(|c| c.macs()).sum();
+    let bottleneck_macs = (mac_budget as f64 * c_max as f64 / sum_c as f64).max(1.0);
+    let ii = (c_max as f64 / bottleneck_macs).max(1.0);
+    let fps = clock_mhz * 1e6 / ii;
+    // Latency: II + window fills + naive skip buffering stalls (~1.6x II).
+    let latency_s = 1.6 * ii / (clock_mhz * 1e6);
+    BaselineRow {
+        name: "FINN class (4-bit dataflow)".into(),
+        bits: 4,
+        clock_mhz,
+        fps,
+        gops: 2.0 * total_macs as f64 * fps / 1e9,
+        latency_ms: latency_s * 1e3,
+        accuracy_delta_pp: -2.8, // paper Sec. IV: 4-bit FINN trails by 2.8pp
+    }
+}
+
+/// WSQ-AdderNet-class model ([32]): dataflow-ish accelerator with packed
+/// int8 *adder* kernels; reported at 200 MHz with ~half our Gops/s.
+///
+/// Its packing co-locates adds in DSP+LUT pairs; per the published
+/// numbers its efficiency per DSP is ~0.52 of ours at equal precision.
+pub fn addernet_model(arch: &ArchSpec, clock_mhz: f64, dsps: u64) -> BaselineRow {
+    let total_macs = arch.total_macs();
+    // 1 op/DSP/cycle equivalent (no ow_par packing of multiplies) with 85%
+    // utilization across the balanced pipeline.
+    let macs_per_cycle = dsps as f64 * 0.85;
+    let ii = arch.total_macs() as f64 / macs_per_cycle;
+    let fps = clock_mhz * 1e6 / ii;
+    BaselineRow {
+        name: "AdderNet class (packed adders)".into(),
+        bits: 8,
+        clock_mhz,
+        fps,
+        gops: 2.0 * total_macs as f64 * fps / 1e9,
+        latency_ms: 2.0 * ii / (clock_mhz * 1e6) * 1e3, // double-buffered frames
+        accuracy_delta_pp: -1.4, // paper: AdderNet trails our CNN by 1.4pp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{resnet20, resnet8};
+
+    #[test]
+    fn overlay_latency_dominated_by_serialization() {
+        let arch = resnet8();
+        let row = overlay_model(&arch, 200.0, 2048);
+        // Paper: Vitis AI ResNet8 = 1.29 ms latency, 4458 FPS.
+        assert!(row.latency_ms > 0.5 && row.latency_ms < 5.0, "{}", row.latency_ms);
+        assert!(row.fps < 10_000.0);
+    }
+
+    #[test]
+    fn dataflow_beats_overlay_on_latency_by_an_order() {
+        // Our KV260 ResNet8 latency ~0.046 ms vs overlay ~1.3 ms: >10x.
+        let arch = resnet8();
+        let overlay = overlay_model(&arch, 200.0, 2048);
+        assert!(
+            overlay.latency_ms / 0.046 > 10.0,
+            "overlay {} ms should be >10x of 0.046 ms",
+            overlay.latency_ms
+        );
+    }
+
+    #[test]
+    fn finn_class_trails_on_accuracy() {
+        let arch = resnet8();
+        let row = finn_model(&arch, 225.0, 117_120);
+        assert_eq!(row.bits, 4);
+        assert!(row.accuracy_delta_pp < 0.0);
+        assert!(row.fps > 1_000.0);
+    }
+
+    #[test]
+    fn addernet_class_half_our_throughput() {
+        let arch = resnet20();
+        let row = addernet_model(&arch, 200.0, 609);
+        // Paper: AdderNet = 317 Gops/s vs our 616 -> ratio ~0.5.
+        let ratio = row.gops / 616.0;
+        assert!((0.25..=0.8).contains(&ratio), "gops ratio {ratio}");
+    }
+}

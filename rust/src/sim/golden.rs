@@ -1,0 +1,334 @@
+//! Golden integer inference: executes a network graph with the exact
+//! accelerator numerics (paper Section III-A/C), bit-for-bit equal to
+//! the jnp oracle (`python/compile/kernels/ref.py`) and — through the
+//! AOT artifacts — to the PJRT-executed HLO.
+//!
+//! Handles both graph forms: the optimized dataflow (fused skip init,
+//! merged downsamples, forwarded inputs) and the naive form (explicit
+//! Add/ReLU nodes), which is how we prove the Section III-G transformations
+//! numerics-preserving on this side of the language fence too.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::{infer_shapes, ConvAttrs, Edge, Graph, InputRole, Op};
+use crate::models::ModelWeights;
+use crate::quant::{align_skip, clip_i8, requantize, round_shift, QTensor, Shape4};
+
+/// Run the graph on a batch of inputs. Returns the output-node tensor
+/// (int32 logits for the paper's nets).
+pub fn run(g: &Graph, weights: &ModelWeights, input: &QTensor) -> Result<QTensor> {
+    let shapes = infer_shapes(g).map_err(|e| anyhow!("{e}"))?;
+    let mut values: BTreeMap<Edge, QTensor> = BTreeMap::new();
+    let mut output = None;
+
+    for n in g.live() {
+        let get = |i: usize, values: &BTreeMap<Edge, QTensor>| -> Result<QTensor> {
+            let (e, _) = n.inputs[i];
+            values
+                .get(&e)
+                .cloned()
+                .ok_or_else(|| anyhow!("{}: missing input {i}", n.name))
+        };
+        match &n.op {
+            Op::Input { h, w, c, exp } => {
+                if (input.shape.h, input.shape.w, input.shape.c) != (*h, *w, *c) {
+                    bail!("input shape {} vs expected ({h},{w},{c})", input.shape);
+                }
+                if input.exp != *exp {
+                    bail!("input exp {} vs expected {exp}", input.exp);
+                }
+                values.insert(Edge::new(n.id, 0), input.clone());
+            }
+            Op::Conv(a) => {
+                let x = get(0, &values)?;
+                let skip = n
+                    .inputs
+                    .iter()
+                    .position(|(_, r)| *r == InputRole::SkipInit)
+                    .map(|i| get(i, &values))
+                    .transpose()?;
+                let lw = weights.layer(&n.name)?;
+                let out = conv2d(&x, a, &lw.w.data, &lw.b.data, lw.acc_exp(), skip.as_ref())?;
+                values.insert(Edge::new(n.id, 0), out);
+                if a.forwards_input {
+                    values.insert(Edge::new(n.id, 1), x.clone());
+                }
+                if let Some(ds) = &a.merged_downsample {
+                    let dsw = weights.layer(&ds.name)?;
+                    let ds_attrs = ConvAttrs {
+                        cin: a.cin,
+                        cout: ds.cout,
+                        k: ds.k,
+                        stride: ds.stride,
+                        pad: ds.pad,
+                        relu: false,
+                        w_exp: ds.w_exp,
+                        out_exp: ds.out_exp,
+                        merged_downsample: None,
+                        forwards_input: false, raw_output: false,
+                    };
+                    let out =
+                        conv2d(&x, &ds_attrs, &dsw.w.data, &dsw.b.data, dsw.acc_exp(), None)?;
+                    values.insert(Edge::new(n.id, 1), out);
+                }
+            }
+            Op::Relu => {
+                let x = get(0, &values)?;
+                let data = x.data.iter().map(|&v| v.max(0)).collect();
+                values.insert(Edge::new(n.id, 0), QTensor { data, ..x });
+            }
+            Op::Add { out_exp } => {
+                // Naive residual add, performed at the finer of the two
+                // input exponents then requantized — the dataflow the
+                // pre-optimization graph implies.  With the builders'
+                // exponent conventions this is bit-identical to the fused
+                // accumulator-init form (asserted by tests).
+                let a = get(0, &values)?;
+                let b = get(1, &values)?;
+                let lo = a.exp.min(b.exp);
+                let data: Vec<i32> = a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(&x, &y)| {
+                        let s = (x << (a.exp - lo)) + (y << (b.exp - lo));
+                        clip_i8(round_shift(s, out_exp - lo))
+                    })
+                    .collect();
+                values.insert(
+                    Edge::new(n.id, 0),
+                    QTensor { shape: a.shape, exp: *out_exp, data },
+                );
+            }
+            Op::MaxPool { k, stride } => {
+                let x = get(0, &values)?;
+                values.insert(Edge::new(n.id, 0), maxpool(&x, *k, *stride));
+            }
+            Op::GlobalAvgPool { out_exp } => {
+                let x = get(0, &values)?;
+                values.insert(Edge::new(n.id, 0), global_avgpool(&x, *out_exp));
+            }
+            Op::Linear { cin, cout, .. } => {
+                let x = get(0, &values)?;
+                let lw = weights.layer(&n.name)?;
+                let out = linear(&x, *cin, *cout, &lw.w.data, &lw.b.data)?;
+                output = Some(out.clone());
+                values.insert(Edge::new(n.id, 0), out);
+            }
+            Op::BatchNorm(_) => bail!("golden model runs post-fold graphs only"),
+        }
+        let _ = &shapes; // shapes pre-validated the graph
+    }
+    output.ok_or_else(|| anyhow!("graph has no linear output node"))
+}
+
+/// Fused integer convolution (ref.py `conv2d_ref` semantics).
+fn conv2d(
+    x: &QTensor,
+    a: &ConvAttrs,
+    w: &[i32],
+    bias: &[i32],
+    acc_exp: i32,
+    skip: Option<&QTensor>,
+) -> Result<QTensor> {
+    let (n, h, wd, cin) = (x.shape.n, x.shape.h, x.shape.w, x.shape.c);
+    if cin != a.cin {
+        bail!("conv cin mismatch: {} vs {}", cin, a.cin);
+    }
+    let (k, s, p, cout) = (a.k, a.stride, a.pad, a.cout);
+    let oh = (h + 2 * p - k) / s + 1;
+    let ow = (wd + 2 * p - k) / s + 1;
+    let out_shape = Shape4::new(n, oh, ow, cout);
+    let mut out = vec![0i32; out_shape.elems()];
+
+    // Row-level accumulation (the output-stationary structure of the
+    // paper's Fig. 4, and the performance-pass shape from EXPERIMENTS.md
+    // §Perf): one accumulator row (OW x COUT) is initialized with bias +
+    // aligned skip, then every filter tap streams its input row across all
+    // output columns with the weight slice `w[tap][ci]` hot in cache and
+    // the accumulator stride contiguous in `co`.
+    let mut acc_row = vec![0i32; ow * cout];
+    for b in 0..n {
+        for oy in 0..oh {
+            // init: bias (paper Fig. 4) + aligned skip (paper Fig. 13)
+            for ox in 0..ow {
+                acc_row[ox * cout..(ox + 1) * cout].copy_from_slice(bias);
+            }
+            if let Some(sk) = skip {
+                let s_base = (b * oh + oy) * ow * cout;
+                let shift = sk.exp - acc_exp;
+                debug_assert!(shift >= 0);
+                for (a_, &v) in acc_row.iter_mut().zip(&sk.data[s_base..s_base + ow * cout]) {
+                    *a_ += v << shift;
+                }
+            }
+            for ky in 0..k {
+                let iy = oy * s + ky;
+                if iy < p || iy - p >= h {
+                    continue;
+                }
+                let x_row = ((b * h) + (iy - p)) * wd * cin;
+                for kx in 0..k {
+                    let w_tap = (ky * k + kx) * cin * cout;
+                    for ox in 0..ow {
+                        let ix = ox * s + kx;
+                        if ix < p || ix - p >= wd {
+                            continue;
+                        }
+                        let x_base = x_row + (ix - p) * cin;
+                        let acc = &mut acc_row[ox * cout..(ox + 1) * cout];
+                        for ci in 0..cin {
+                            let xv = unsafe { *x.data.get_unchecked(x_base + ci) };
+                            if xv == 0 {
+                                continue;
+                            }
+                            let ws = &w[w_tap + ci * cout..w_tap + (ci + 1) * cout];
+                            for (a_, &wv) in acc.iter_mut().zip(ws) {
+                                *a_ += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+            let o_base = (b * oh + oy) * ow * cout;
+            if a.raw_output {
+                out[o_base..o_base + ow * cout].copy_from_slice(&acc_row);
+            } else {
+                for (o_, &v) in out[o_base..o_base + ow * cout].iter_mut().zip(&acc_row) {
+                    *o_ = requantize(v, acc_exp, a.out_exp, a.relu);
+                }
+            }
+        }
+    }
+    let _ = align_skip; // used by the scalar contract; row path inlines it
+    let exp = if a.raw_output { acc_exp } else { a.out_exp };
+    Ok(QTensor { shape: out_shape, exp, data: out })
+}
+
+fn maxpool(x: &QTensor, k: usize, stride: usize) -> QTensor {
+    let (n, h, w, c) = (x.shape.n, x.shape.h, x.shape.w, x.shape.c);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let shape = Shape4::new(n, oh, ow, c);
+    let mut out = vec![i32::MIN; shape.elems()];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let base = ((b * h + oy * stride + dy) * w + ox * stride + dx) * c;
+                        let obase = ((b * oh + oy) * ow + ox) * c;
+                        for ch in 0..c {
+                            let v = x.data[base + ch];
+                            if v > out[obase + ch] {
+                                out[obase + ch] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    QTensor { shape, exp: x.exp, data: out }
+}
+
+fn global_avgpool(x: &QTensor, out_exp: i32) -> QTensor {
+    let (n, h, w, c) = (x.shape.n, x.shape.h, x.shape.w, x.shape.c);
+    let hw = h * w;
+    assert!(hw.is_power_of_two(), "global pool window must be 2^k");
+    let log_hw = hw.trailing_zeros() as i32;
+    let shape = Shape4::new(n, 1, 1, c);
+    let mut out = vec![0i32; shape.elems()];
+    for b in 0..n {
+        for ch in 0..c {
+            let mut acc = 0i32;
+            for y in 0..h {
+                for xx in 0..w {
+                    acc += x.data[((b * h + y) * w + xx) * c + ch];
+                }
+            }
+            out[b * c + ch] = clip_i8(round_shift(acc, out_exp - x.exp + log_hw));
+        }
+    }
+    QTensor { shape, exp: out_exp, data: out }
+}
+
+fn linear(x: &QTensor, cin: usize, cout: usize, w: &[i32], bias: &[i32]) -> Result<QTensor> {
+    let n = x.shape.n;
+    if x.shape.h * x.shape.w * x.shape.c != cin {
+        bail!("linear input mismatch");
+    }
+    let shape = Shape4::new(n, 1, 1, cout);
+    let mut out = vec![0i32; shape.elems()];
+    for b in 0..n {
+        for co in 0..cout {
+            let mut acc = bias[co];
+            for ci in 0..cin {
+                acc += x.data[b * cin + ci] * w[ci * cout + co];
+            }
+            out[b * cout + co] = acc;
+        }
+    }
+    Ok(QTensor { shape, exp: 0, data: out })
+}
+
+/// Argmax over the class axis of logits (N, 1, 1, C).
+pub fn argmax_classes(logits: &QTensor) -> Vec<usize> {
+    let c = logits.shape.c;
+    logits
+        .data
+        .chunks_exact(c)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by_key(|&(_, v)| *v)
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth_batch, TEST_SEED};
+    use crate::models::{
+        build_optimized_graph, build_unoptimized_graph, default_exps, resnet8, synthetic_weights,
+    };
+    use crate::passes::optimize;
+
+    #[test]
+    fn optimized_equals_unoptimized_equals_pipelined() {
+        let arch = resnet8();
+        let (act, w) = default_exps(&arch);
+        let weights = synthetic_weights(&arch, 7);
+        let (input, _) = synth_batch(0, 2, TEST_SEED);
+
+        let g_opt = build_optimized_graph(&arch, &act, &w);
+        let g_naive = build_unoptimized_graph(&arch, &act, &w);
+        let mut g_pipe = build_unoptimized_graph(&arch, &act, &w);
+        optimize(&mut g_pipe);
+
+        let a = run(&g_opt, &weights, &input).unwrap();
+        let b = run(&g_naive, &weights, &input).unwrap();
+        let c = run(&g_pipe, &weights, &input).unwrap();
+        assert_eq!(a.data, b.data, "fused vs explicit-add must be bit-identical");
+        assert_eq!(a.data, c.data, "pass pipeline must preserve numerics");
+        assert_eq!(a.shape.c, 10);
+    }
+
+    #[test]
+    fn logits_vary_with_input() {
+        let arch = resnet8();
+        let (act, w) = default_exps(&arch);
+        let weights = synthetic_weights(&arch, 7);
+        let g = build_optimized_graph(&arch, &act, &w);
+        let (i1, _) = synth_batch(0, 1, TEST_SEED);
+        let (i2, _) = synth_batch(5, 1, TEST_SEED);
+        let a = run(&g, &weights, &i1).unwrap();
+        let b = run(&g, &weights, &i2).unwrap();
+        assert_ne!(a.data, b.data);
+    }
+}

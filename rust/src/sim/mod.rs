@@ -1,0 +1,25 @@
+//! Cycle-approximate simulation of the dataflow accelerator.
+//!
+//! Two complementary halves:
+//!
+//! * [`golden`] — *numerics*: executes the graph with the exact integer
+//!   arithmetic of the hardware (bit-equal to the jnp oracle and to the
+//!   AOT-compiled HLO run through PJRT).
+//! * [`engine`] / [`build`] — *timing*: a discrete-event process-network
+//!   simulation of the concurrent tasks (window buffers, parameter tasks,
+//!   computation pipelines, DMA) connected by bounded FIFOs, reproducing
+//!   the paper's Section III dataflow mechanics: startup (window fill)
+//!   latency, steady-state initiation interval, backpressure stalls, and —
+//!   crucially — *deadlock* when a residual skip FIFO is sized below the
+//!   receptive-field bound in the naive dataflow (the failure mode the
+//!   Section III-G optimizations exist to avoid).
+//! * [`baselines`] — performance models of the comparison systems in
+//!   Table 3 (overlay/Vitis-AI-like, FINN-like, AdderNet-like).
+
+pub mod baselines;
+mod build;
+mod engine;
+pub mod golden;
+
+pub use build::{build_network, SimOptions};
+pub use engine::{FifoStats, Network, SimReport, Step, TaskModel, TaskStats};

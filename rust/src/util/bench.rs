@@ -1,0 +1,168 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` targets are plain binaries (`harness = false`) built on
+//! this module: warmup, fixed-duration sampling, and median / p10 / p90
+//! reporting.  Results can be appended to a machine-readable log so the
+//! performance pass (EXPERIMENTS.md §Perf) can diff before/after.
+
+use std::time::{Duration, Instant};
+
+/// One measured statistic set, in nanoseconds per iteration.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+    /// Optional throughput unit count per iteration (e.g. frames, MACs).
+    pub items_per_iter: f64,
+}
+
+impl Stats {
+    /// Items per second at the median (0 if no item count set).
+    pub fn items_per_sec(&self) -> f64 {
+        if self.items_per_iter == 0.0 {
+            0.0
+        } else {
+            self.items_per_iter / (self.median_ns * 1e-9)
+        }
+    }
+}
+
+/// Simple fixed-budget bencher.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    min_samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Respect a quick mode for CI-ish runs: REPRO_BENCH_QUICK=1.
+        let quick = std::env::var("REPRO_BENCH_QUICK").ok().as_deref() == Some("1");
+        Bencher {
+            warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            budget: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            min_samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Measure `f`, which performs one logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        self.bench_items(name, 0.0, &mut f)
+    }
+
+    /// Measure with a throughput unit (items processed per iteration).
+    pub fn bench_items<F: FnMut()>(&mut self, name: &str, items: f64, f: &mut F) -> Stats {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Sample.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.budget || samples_ns.len() < self.min_samples {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 100_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| samples_ns[((samples_ns.len() - 1) as f64 * p) as usize];
+        let stats = Stats {
+            name: name.to_string(),
+            samples: samples_ns.len(),
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            mean_ns: samples_ns.iter().sum::<f64>() / samples_ns.len() as f64,
+            items_per_iter: items,
+        };
+        self.report(&stats);
+        self.results.push(stats.clone());
+        stats
+    }
+
+    fn report(&self, s: &Stats) {
+        let (val, unit) = human_ns(s.median_ns);
+        if s.items_per_iter > 0.0 {
+            println!(
+                "{:<44} {:>9.2} {}/iter   [p10 {:.2}, p90 {:.2}]   {:>12.1} items/s   ({} samples)",
+                s.name,
+                val,
+                unit,
+                human_ns(s.p10_ns).0,
+                human_ns(s.p90_ns).0,
+                s.items_per_sec(),
+                s.samples
+            );
+        } else {
+            println!(
+                "{:<44} {:>9.2} {}/iter   [p10 {:.2}, p90 {:.2}]   ({} samples)",
+                s.name,
+                val,
+                unit,
+                human_ns(s.p10_ns).0,
+                human_ns(s.p90_ns).0,
+                s.samples
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+fn human_ns(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "us")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s ")
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (std black_box is
+/// stable but this keeps call sites uniform).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("REPRO_BENCH_QUICK", "1");
+        let mut b = Bencher::new().with_budget(Duration::from_millis(20));
+        let s = b.bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.samples >= 5);
+    }
+}

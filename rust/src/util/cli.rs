@@ -1,0 +1,96 @@
+//! Minimal command-line parsing (clap is not available offline).
+//!
+//! Supports `prog <subcommand> [--flag] [--key value] [positional...]`,
+//! which covers the `repro` binary's surface.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, `--key value` options, `--flag` switches,
+/// and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Option/flag spec for a subcommand: (name, takes_value, help).
+pub type OptSpec = (&'static str, bool, &'static str);
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]); `value_opts` lists the
+    /// option names that consume a value.
+    pub fn parse(raw: impl Iterator<Item = String>, value_opts: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if value_opts.contains(&name) {
+                    let v = iter.next().unwrap_or_default();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> std::vec::IntoIter<String> {
+        s.iter().map(|x| x.to_string()).collect::<Vec<_>>().into_iter()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(
+            v(&["simulate", "--model", "resnet8", "--verbose", "extra"]),
+            &["model"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.opt("model"), Some("resnet8"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(v(&["x", "--n", "12", "--r", "2.5"]), &["n", "r"]);
+        assert_eq!(a.opt_usize("n", 0), 12);
+        assert_eq!(a.opt_f64("r", 0.0), 2.5);
+        assert_eq!(a.opt_usize("missing", 7), 7);
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities.
+//!
+//! The offline environment ships only the `xla` crate and its transitive
+//! dependencies, so the conveniences a project like this would normally pull
+//! from crates.io (serde_json, clap, criterion, proptest, rand) are
+//! implemented here at the scale this repo needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use bench::Bencher;
+pub use json::Json;
+pub use rng::Lcg64;

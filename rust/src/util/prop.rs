@@ -1,0 +1,73 @@
+//! Tiny property-based testing helper (proptest is not available offline).
+//!
+//! `forall` runs a closure over `n` seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath in this environment)
+//! use resnet_hls::util::prop::forall;
+//! forall("add commutes", 100, |rng| {
+//!     let a = rng.range_i64(-1000, 1000);
+//!     let b = rng.range_i64(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Lcg64;
+
+/// Run `body` for `n` cases with independent deterministic seeds.
+///
+/// Panics (preserving the inner assertion message) with the failing case
+/// index and seed on the first failure.
+pub fn forall<F>(name: &str, n: u64, body: F)
+where
+    F: Fn(&mut Lcg64) + std::panic::RefUnwindSafe,
+{
+    for case in 0..n {
+        let seed = 0x9e3779b97f4a7c15u64.wrapping_mul(case + 1);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Lcg64::new(seed);
+            body(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Like `forall` but the body returns `Result`, for use with `?`-heavy code.
+pub fn forall_res<F, E>(name: &str, n: u64, body: F)
+where
+    F: Fn(&mut Lcg64) -> Result<(), E> + std::panic::RefUnwindSafe,
+    E: std::fmt::Debug,
+{
+    forall(name, n, |rng| {
+        if let Err(e) = body(rng) {
+            panic!("{e:?}");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("identity", 50, |rng| {
+            let x = rng.next_u64();
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failure_with_seed() {
+        forall("always fails", 5, |_| panic!("boom"));
+    }
+}

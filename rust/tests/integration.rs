@@ -1,0 +1,220 @@
+//! Cross-module integration tests that do not require built artifacts:
+//! the full design flow (graph -> passes -> ILP -> config -> resources ->
+//! simulation -> codegen) for every (model, board) the paper evaluates.
+
+use resnet_hls::graph::{infer_shapes, Edge};
+use resnet_hls::hls::boards::{BOARDS, KV260, ULTRA96};
+use resnet_hls::hls::codegen::emit_top;
+use resnet_hls::hls::config::configure;
+use resnet_hls::hls::resources::{estimate, fit_to_board};
+use resnet_hls::ilp::{loads_from_arch, solve};
+use resnet_hls::models::{
+    arch_by_name, build_optimized_graph, build_unoptimized_graph, default_exps, synthetic_weights,
+};
+use resnet_hls::passes;
+use resnet_hls::sim::{build_network, golden, SimOptions};
+
+#[test]
+fn full_flow_all_models_all_boards() {
+    for arch_name in ["resnet8", "resnet20"] {
+        let arch = arch_by_name(arch_name).unwrap();
+        let (act, w) = default_exps(&arch);
+        for board in BOARDS {
+            // The published flow: build unoptimized, run the passes.
+            let mut g = build_unoptimized_graph(&arch, &act, &w);
+            let stats = passes::optimize(&mut g);
+            assert!(stats.adds_fused > 0);
+            assert!(passes::equivalent(&g, &build_optimized_graph(&arch, &act, &w)));
+
+            let loads = loads_from_arch(&arch, 2);
+            let (alloc, cfg, report) =
+                fit_to_board(&arch.name, &g, &loads, board, 2).expect("design fits");
+            assert!(report.fits(board), "{arch_name}@{}", board.name);
+            assert!(alloc.dsps_used <= board.n_par() as u64);
+
+            let mut net =
+                build_network(&g, &cfg, &SimOptions { frames: 3, ..Default::default() }).unwrap();
+            let rep = net.run(3);
+            assert!(!rep.deadlocked, "{arch_name}@{} deadlocked", board.name);
+            // The simulator's steady state ought to be within 2.5x of the
+            // ILP's idealized initiation interval.
+            let ratio = rep.ii_cycles as f64 / alloc.cycles_per_frame as f64;
+            assert!(
+                (0.9..2.5).contains(&ratio),
+                "{arch_name}@{}: sim II {} vs ILP {} (x{ratio:.2})",
+                board.name,
+                rep.ii_cycles,
+                alloc.cycles_per_frame
+            );
+
+            let cpp = emit_top(&cfg);
+            assert!(cpp.contains("#pragma HLS dataflow"));
+        }
+    }
+}
+
+#[test]
+fn simulated_latency_exceeds_ii_but_not_wildly() {
+    let arch = arch_by_name("resnet20").unwrap();
+    let (act, w) = default_exps(&arch);
+    let g = build_optimized_graph(&arch, &act, &w);
+    let loads = loads_from_arch(&arch, 2);
+    let alloc = solve(&loads, KV260.n_par() as u64).unwrap();
+    let cfg = configure(&arch.name, &g, &alloc, &KV260, 2).unwrap();
+    let mut net = build_network(&g, &cfg, &SimOptions { frames: 4, ..Default::default() }).unwrap();
+    let rep = net.run(4);
+    assert!(!rep.deadlocked);
+    assert!(rep.latency_cycles >= rep.ii_cycles);
+    assert!(
+        rep.latency_cycles < 6 * rep.ii_cycles,
+        "latency {} vs II {}",
+        rep.latency_cycles,
+        rep.ii_cycles
+    );
+}
+
+#[test]
+fn naive_dataflow_skip_occupancy_hits_receptive_field_bound() {
+    // In the naive dataflow, the skip FIFO peak occupancy should approach
+    // the Eq. 21 bound that the config assigned as its capacity.
+    let arch = arch_by_name("resnet8").unwrap();
+    let (act, w) = default_exps(&arch);
+    let g = build_unoptimized_graph(&arch, &act, &w);
+    let loads = loads_from_arch(&arch, 2);
+    let alloc = solve(&loads, ULTRA96.n_par() as u64).unwrap();
+    let cfg = configure(&arch.name, &g, &alloc, &ULTRA96, 2).unwrap();
+    let mut net = build_network(&g, &cfg, &SimOptions { frames: 2, ..Default::default() }).unwrap();
+    let rep = net.run(2);
+    assert!(!rep.deadlocked);
+    // The s0b0 identity-skip FIFO (tee -> add): Eq. 21 gives 2208 for the
+    // 32x32x16 block (rh = rw = 5).
+    let f = rep
+        .fifo_stats
+        .iter()
+        .find(|f| f.name.contains("tee(stem) -> s0b0_add"))
+        .expect("naive skip fifo");
+    let bound = 2208.0;
+    let frac = f.max_occupancy as f64 / bound;
+    assert!(
+        frac > 0.8,
+        "peak skip occupancy {} should approach Eq.21 bound {bound}",
+        f.max_occupancy
+    );
+}
+
+#[test]
+fn optimized_dataflow_skip_occupancy_within_half_naive_bound() {
+    let arch = arch_by_name("resnet8").unwrap();
+    let (act, w) = default_exps(&arch);
+    let g = build_optimized_graph(&arch, &act, &w);
+    let loads = loads_from_arch(&arch, 2);
+    let alloc = solve(&loads, ULTRA96.n_par() as u64).unwrap();
+    let cfg = configure(&arch.name, &g, &alloc, &ULTRA96, 2).unwrap();
+    let mut net = build_network(&g, &cfg, &SimOptions { frames: 2, ..Default::default() }).unwrap();
+    let rep = net.run(2);
+    assert!(!rep.deadlocked);
+    let f = rep
+        .fifo_stats
+        .iter()
+        .find(|f| f.name.contains("s0b0c0.1 -> s0b0c1"))
+        .expect("optimized skip fifo");
+    // Eq. 22 for the same block is 1072; the naive bound is 2208 (R_sc).
+    assert!(
+        (f.max_occupancy as f64) < 0.75 * 2208.0,
+        "optimized skip peak {} should be well below the naive bound",
+        f.max_occupancy
+    );
+}
+
+#[test]
+fn golden_inference_consistent_across_batch_splits() {
+    // Running 4 frames at once == running them one by one.
+    let arch = arch_by_name("resnet8").unwrap();
+    let weights = synthetic_weights(&arch, 3);
+    let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let (batch, _) = resnet_hls::data::synth_batch(0, 4, resnet_hls::data::TEST_SEED);
+    let all = golden::run(&g, &weights, &batch).unwrap();
+    for i in 0..4usize {
+        let (one, _) = resnet_hls::data::synth_batch(i as u64, 1, resnet_hls::data::TEST_SEED);
+        let out = golden::run(&g, &weights, &one).unwrap();
+        assert_eq!(&all.data[i * 10..(i + 1) * 10], &out.data[..], "frame {i}");
+    }
+}
+
+#[test]
+fn ow_par_ablation_packing_doubles_fps() {
+    // Same DSP budget, ow_par 1 vs 2: packing should deliver ~2x FPS
+    // until och caps bind.
+    let arch = arch_by_name("resnet20").unwrap();
+    let a1 = solve(&loads_from_arch(&arch, 1), 600).unwrap();
+    let a2 = solve(&loads_from_arch(&arch, 2), 600).unwrap();
+    let speedup = a1.cycles_per_frame as f64 / a2.cycles_per_frame as f64;
+    assert!(
+        (1.5..=2.2).contains(&speedup),
+        "packing speedup {speedup} (cycles {} -> {})",
+        a1.cycles_per_frame,
+        a2.cycles_per_frame
+    );
+}
+
+#[test]
+fn shapes_preserved_through_pass_pipeline_on_both_archs() {
+    for arch_name in ["resnet8", "resnet20"] {
+        let arch = arch_by_name(arch_name).unwrap();
+        let (act, w) = default_exps(&arch);
+        let mut g = build_unoptimized_graph(&arch, &act, &w);
+        let out_before = {
+            let shapes = infer_shapes(&g).unwrap();
+            shapes[&Edge::new(g.output().unwrap(), 0)]
+        };
+        passes::optimize(&mut g);
+        let shapes = infer_shapes(&g).unwrap();
+        let out_after = shapes[&Edge::new(g.output().unwrap(), 0)];
+        assert_eq!(out_before, out_after);
+        g.validate().unwrap();
+    }
+}
+
+#[test]
+fn resource_estimates_scale_with_parallelism() {
+    let arch = arch_by_name("resnet8").unwrap();
+    let (act, w) = default_exps(&arch);
+    let g = build_optimized_graph(&arch, &act, &w);
+    let loads = loads_from_arch(&arch, 2);
+    let mut last_dsps = 0;
+    // Minimum feasible budget: one PE per tap per layer = 7*9 + 2*1 = 65.
+    for budget in [80u64, 128, 256, 512] {
+        let alloc = solve(&loads, budget).unwrap();
+        let cfg = configure(&arch.name, &g, &alloc, &KV260, 2).unwrap();
+        let rep = estimate(&cfg);
+        assert!(rep.dsps >= last_dsps, "DSPs must grow with budget");
+        last_dsps = rep.dsps;
+    }
+}
+
+#[test]
+fn deadlock_experiment_matrix() {
+    // The Fig. 14 claim as a truth table over (dataflow, skip sizing):
+    //   naive + Eq.21 sizing        -> runs
+    //   naive + halved (Eq.22-like) -> deadlock
+    //   optimized + Eq.22 sizing    -> runs
+    let arch = arch_by_name("resnet8").unwrap();
+    let (act, w) = default_exps(&arch);
+    let loads = loads_from_arch(&arch, 2);
+    let alloc = solve(&loads, ULTRA96.n_par() as u64).unwrap();
+
+    let run = |naive: bool, factor: f64| -> bool {
+        let g = if naive {
+            build_unoptimized_graph(&arch, &act, &w)
+        } else {
+            build_optimized_graph(&arch, &act, &w)
+        };
+        let cfg = configure(&arch.name, &g, &alloc, &ULTRA96, 2).unwrap();
+        let opts = SimOptions { frames: 2, skip_factor: factor, ..Default::default() };
+        let mut net = build_network(&g, &cfg, &opts).unwrap();
+        net.run(2).deadlocked
+    };
+    assert!(!run(true, 1.0), "naive @ Eq.21 must run");
+    assert!(run(true, 0.45), "naive @ half sizing must deadlock");
+    assert!(!run(false, 1.0), "optimized @ Eq.22 must run");
+}

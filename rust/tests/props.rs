@@ -1,0 +1,317 @@
+//! Property-based tests over the coordinator and substrate invariants
+//! (seeded deterministic cases via `util::prop::forall`).
+
+use resnet_hls::coordinator::{Batcher, BatcherConfig};
+use resnet_hls::graph::{infer_shapes, ConvAttrs, Edge, Graph, InputRole, Op};
+use resnet_hls::ilp::{brute_force, solve, LayerLoad};
+use resnet_hls::models::synthetic_weights;
+use resnet_hls::passes;
+use resnet_hls::quant::{clip_i8, requantize, round_shift};
+use resnet_hls::sim::golden;
+use resnet_hls::util::prop::forall;
+use resnet_hls::util::Json;
+use resnet_hls::util::Lcg64;
+
+// ------------------------------------------------------------- quant laws
+
+#[test]
+fn relu_commutes_with_requantization() {
+    // The soundness condition of the relu-merge pass and the add-fusion
+    // relu placement: relu(requant(x)) == requant_with_relu(x).
+    forall("relu/requant commute", 5000, |rng| {
+        let acc = rng.range_i64(-(1 << 30), 1 << 30) as i32;
+        let acc_exp = rng.range_i64(-16, -8) as i32;
+        let out_exp = rng.range_i64(-7, 0) as i32;
+        let fused = requantize(acc, acc_exp, out_exp, true);
+        let separate = clip_i8(round_shift(acc, out_exp - acc_exp)).max(0);
+        assert_eq!(fused, separate, "acc={acc} shift={}", out_exp - acc_exp);
+    });
+}
+
+#[test]
+fn round_shift_monotone() {
+    forall("round_shift monotone", 3000, |rng| {
+        let a = rng.range_i64(-(1 << 30), 1 << 30) as i32;
+        let b = rng.range_i64(-(1 << 30), 1 << 30) as i32;
+        let s = rng.range_i64(0, 20) as i32;
+        if a <= b {
+            assert!(round_shift(a, s) <= round_shift(b, s));
+        } else {
+            assert!(round_shift(a, s) >= round_shift(b, s));
+        }
+    });
+}
+
+// ------------------------------------------------- random residual graphs
+
+/// Build a random chain of residual blocks; returns (graph, arch-like
+/// geometry used to build it).
+fn random_residual_graph(rng: &mut Lcg64) -> Graph {
+    let mut g = Graph::new();
+    let mut c = [4usize, 8, 16][rng.below(3) as usize];
+    let mut h = 16usize;
+    let input = g.add_simple("input", Op::Input { h, w: h, c, exp: -7 }, &[]);
+    let conv = |cin: usize, cout: usize, k: usize, stride: usize, relu: bool| {
+        Op::Conv(ConvAttrs {
+            cin, cout, k, stride, pad: if k == 3 { 1 } else { 0 }, relu,
+            w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false,
+            raw_output: false,
+        })
+    };
+    let mut prev = g.add_simple("stem", conv(c, c, 3, 1, true), &[Edge::new(input, 0)]);
+    let blocks = 1 + rng.below(3) as usize;
+    for b in 0..blocks {
+        let down = rng.below(2) == 0 && h >= 8;
+        let (cout, stride) = if down { (c * 2, 2) } else { (c, 1) };
+        let xin = prev;
+        let skip = if down {
+            g.add_simple(format!("b{b}ds"), conv(c, cout, 1, 2, false), &[Edge::new(xin, 0)])
+        } else {
+            xin
+        };
+        let c0 = g.add_simple(format!("b{b}c0"), conv(c, cout, 3, stride, true), &[Edge::new(xin, 0)]);
+        let mut c1_attrs = conv(cout, cout, 3, 1, false);
+        if let Op::Conv(a) = &mut c1_attrs {
+            a.raw_output = true;
+        }
+        let c1 = g.add_simple(format!("b{b}c1"), c1_attrs, &[Edge::new(c0, 0)]);
+        let add = g.add(
+            format!("b{b}_add"),
+            Op::Add { out_exp: -5 },
+            vec![(Edge::new(c1, 0), InputRole::Data), (Edge::new(skip, 0), InputRole::Data)],
+        );
+        prev = g.add_simple(format!("b{b}_relu"), Op::Relu, &[Edge::new(add, 0)]);
+        c = cout;
+        if down {
+            h /= 2;
+        }
+    }
+    let pool = g.add_simple("pool", Op::GlobalAvgPool { out_exp: -5 }, &[Edge::new(prev, 0)]);
+    g.add_simple(
+        "fc",
+        Op::Linear { cin: c, cout: 10, w_exp: -8 },
+        &[Edge::new(pool, 0)],
+    );
+    g
+}
+
+#[test]
+fn passes_preserve_shapes_on_random_graphs() {
+    forall("passes preserve output shape", 60, |rng| {
+        let mut g = random_residual_graph(rng);
+        g.validate().unwrap();
+        let before = infer_shapes(&g).unwrap()[&Edge::new(g.output().unwrap(), 0)];
+        let stats = passes::optimize(&mut g);
+        assert!(stats.adds_fused > 0, "every block's add must fuse");
+        g.validate().unwrap();
+        let after = infer_shapes(&g).unwrap()[&Edge::new(g.output().unwrap(), 0)];
+        assert_eq!(before, after);
+        assert_eq!(g.count_kind("add"), 0);
+        assert_eq!(g.count_kind("relu"), 0);
+    });
+}
+
+#[test]
+fn ilp_matches_brute_force_on_random_instances() {
+    forall("ilp == brute force", 40, |rng| {
+        let n = 1 + rng.below(3) as usize;
+        let loads: Vec<LayerLoad> = (0..n)
+            .map(|i| {
+                let och = [4usize, 6, 8][rng.below(3) as usize];
+                LayerLoad {
+                    name: format!("l{i}"),
+                    macs: (rng.range_i64(1, 200) as u64) * 4096 * och as u64 * 9,
+                    taps: [1usize, 9][rng.below(2) as usize],
+                    och,
+                    ow_par: 2,
+                }
+            })
+            .collect();
+        let budget = rng.range_i64(9, 300) as u64;
+        match (solve(&loads, budget), brute_force(&loads, budget)) {
+            (None, None) => {}
+            (Some(s), Some(b)) => {
+                assert_eq!(s.cycles_per_frame, b.cycles_per_frame);
+                assert!(s.dsps_used <= budget);
+            }
+            (s, b) => panic!("feasibility mismatch: {:?} vs {:?}", s.is_some(), b.is_some()),
+        }
+    });
+}
+
+// -------------------------------------------------------- numerics fuzzing
+
+#[test]
+fn optimization_pipeline_is_numerics_preserving_on_random_graphs() {
+    // The headline invariant: running the Section III-G passes never
+    // changes a single output bit, on arbitrary residual topologies and
+    // random weights/inputs.
+    forall("passes preserve numerics", 12, |rng| {
+        let g_naive = random_residual_graph(rng);
+        let mut g_opt = g_naive.clone();
+        passes::optimize(&mut g_opt);
+
+        // Build weights for the *named layers* of this graph via a mock
+        // arch: reuse synthetic_weights by constructing per-layer specs.
+        let weights = weights_for_graph(&g_naive, rng.next_u64());
+        // Input geometry differs from CIFAR: generate random pixels.
+        let in_node = g_naive.node(g_naive.find("input").unwrap());
+        let (h, c) = match in_node.op {
+            Op::Input { h, c, .. } => (h, c),
+            _ => unreachable!(),
+        };
+        let mut data = Vec::with_capacity(2 * h * h * c);
+        let mut r2 = Lcg64::new(rng.next_u64());
+        for _ in 0..2 * h * h * c {
+            data.push(r2.range_i64(-128, 127) as i32);
+        }
+        let input = resnet_hls::quant::QTensor::from_vec(
+            resnet_hls::quant::Shape4::new(2, h, h, c),
+            -7,
+            data,
+        );
+        let _ = &input;
+
+        let a = golden::run(&g_naive, &weights, &input).unwrap();
+        let b = golden::run(&g_opt, &weights, &input).unwrap();
+        assert_eq!(a.data, b.data, "optimization changed numerics");
+    });
+}
+
+/// Synthesize weights keyed by the graph's conv/linear layer names.
+fn weights_for_graph(g: &Graph, seed: u64) -> resnet_hls::models::ModelWeights {
+    use resnet_hls::models::{ConvWeights, WeightTensor};
+    use std::collections::BTreeMap;
+    let mut rng = Lcg64::new(seed);
+    let mut layers = BTreeMap::new();
+    let mut act_exps = BTreeMap::new();
+    let mut w_exps = BTreeMap::new();
+    act_exps.insert("input".to_string(), -7);
+    act_exps.insert("pool".to_string(), -5);
+    for n in g.live() {
+        match &n.op {
+            Op::Conv(a) => {
+                let wlen = a.k * a.k * a.cin * a.cout;
+                layers.insert(
+                    n.name.clone(),
+                    ConvWeights {
+                        w: WeightTensor {
+                            name: n.name.clone(), kind: "w".into(),
+                            shape: vec![a.k, a.k, a.cin, a.cout], exp: a.w_exp,
+                            data: (0..wlen).map(|_| rng.range_i64(-32, 32) as i32).collect(),
+                        },
+                        b: WeightTensor {
+                            name: n.name.clone(), kind: "b".into(),
+                            shape: vec![a.cout], exp: -5 + a.w_exp,
+                            data: (0..a.cout).map(|_| rng.range_i64(-256, 256) as i32).collect(),
+                        },
+                    },
+                );
+                act_exps.insert(n.name.clone(), a.out_exp);
+                w_exps.insert(n.name.clone(), a.w_exp);
+            }
+            Op::Linear { cin, cout, w_exp } => {
+                layers.insert(
+                    n.name.clone(),
+                    ConvWeights {
+                        w: WeightTensor {
+                            name: n.name.clone(), kind: "w".into(),
+                            shape: vec![*cin, *cout], exp: *w_exp,
+                            data: (0..cin * cout).map(|_| rng.range_i64(-32, 32) as i32).collect(),
+                        },
+                        b: WeightTensor {
+                            name: n.name.clone(), kind: "b".into(),
+                            shape: vec![*cout], exp: -5 + w_exp,
+                            data: (0..*cout).map(|_| rng.range_i64(-256, 256) as i32).collect(),
+                        },
+                    },
+                );
+                w_exps.insert(n.name.clone(), *w_exp);
+            }
+            _ => {}
+        }
+    }
+    resnet_hls::models::ModelWeights {
+        arch: "random".into(),
+        layers,
+        act_exps,
+        w_exps,
+        source: "prop".into(),
+    }
+}
+
+// --------------------------------------------------------------- batcher
+
+#[test]
+fn batcher_covers_all_queue_sizes_with_any_bucket_set() {
+    forall("batcher coverage", 200, |rng| {
+        let mut buckets = vec![1usize];
+        let mut b = 1usize;
+        for _ in 0..rng.below(4) {
+            b *= [2usize, 4, 8][rng.below(3) as usize];
+            buckets.push(b);
+        }
+        let batcher = Batcher::new(BatcherConfig { buckets, max_bucket: usize::MAX, ..Default::default() });
+        let q = 1 + rng.below(300) as usize;
+        let plans = batcher.plan(q);
+        let total: usize = plans.iter().map(|p| p.take).sum();
+        assert_eq!(total, q);
+        for p in &plans {
+            assert!(p.take <= p.bucket);
+        }
+        assert!(Batcher::efficiency(&plans) > 0.15);
+    });
+}
+
+// ------------------------------------------------------------------ json
+
+#[test]
+fn json_roundtrip_fuzz() {
+    forall("json roundtrip", 150, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(v, parsed, "text: {text}");
+    });
+}
+
+fn random_json(rng: &mut Lcg64, depth: u32) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Int(rng.range_i64(-1_000_000, 1_000_000)),
+        3 => {
+            let mut s = String::new();
+            for _ in 0..rng.below(10) {
+                s.push(match rng.below(5) {
+                    0 => '"',
+                    1 => '\\',
+                    2 => '\n',
+                    3 => 'é',
+                    _ => (b'a' + (rng.below(26) as u8)) as char,
+                });
+            }
+            Json::Str(s)
+        }
+        4 => Json::Array((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(4) {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Object(m)
+        }
+    }
+}
+
+// ---------------------------------------------------------------- weights
+
+#[test]
+fn synthetic_weights_deterministic() {
+    let arch = resnet_hls::models::arch_by_name("resnet20").unwrap();
+    let a = synthetic_weights(&arch, 9);
+    let b = synthetic_weights(&arch, 9);
+    for name in arch.param_names() {
+        assert_eq!(a.layer(&name).unwrap().w.data, b.layer(&name).unwrap().w.data);
+    }
+}
