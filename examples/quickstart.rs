@@ -11,16 +11,17 @@
 //! 3. Simulate the dataflow accelerator (cycle-approximate) and report
 //!    FPS/latency at the board clock;
 //! 4. Run *real* int8 inference through the AOT-compiled HLO on PJRT and
-//!    check it against the in-process golden model.
+//!    check it against the in-process golden model — both behind the
+//!    same `InferenceBackend` trait the serving router uses.
 
 use anyhow::Result;
 use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::hls::{codegen, resources::fit_to_board, KV260};
 use resnet_hls::ilp::loads_from_arch;
-use resnet_hls::models::{arch_by_name, build_unoptimized_graph, default_exps, ModelWeights};
+use resnet_hls::models::{arch_by_name, build_unoptimized_graph, default_exps};
 use resnet_hls::passes;
 use resnet_hls::paths::artifacts_dir;
-use resnet_hls::runtime::Engine;
+use resnet_hls::runtime::{infer_tiled, GoldenBackend, InferenceBackend, PjrtBackend};
 use resnet_hls::sim::{build_network, golden, SimOptions};
 
 fn main() -> Result<()> {
@@ -55,17 +56,23 @@ fn main() -> Result<()> {
         rep.latency_ms(KV260.clock_mhz)
     );
 
-    // -- 4. Real inference through PJRT ----------------------------------
+    // -- 4. Real inference through the backend trait ----------------------
+    // Two implementations of the same `InferenceBackend` API: the
+    // in-process golden model and the AOT-compiled HLO on PJRT.  The
+    // serving router runs on exactly this interface.
     let dir = artifacts_dir();
-    let weights = ModelWeights::load(&dir, "resnet8")?;
-    let engine = Engine::load(&dir)?;
+    let golden_b = GoldenBackend::from_artifacts(&dir, "resnet8", &[1, 8])?;
+    let pjrt_b = PjrtBackend::load(&dir, "resnet8")?;
     let (input, labels) = synth_batch(0, 8, TEST_SEED);
-    let g_w = resnet_hls::models::build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
-    let gold = golden::run(&g_w, &weights, &input)?;
-    let hw = engine.infer_any("resnet8", &input)?;
+    let gold = infer_tiled(&golden_b, &input)?;
+    let hw = infer_tiled(&pjrt_b, &input)?;
     assert_eq!(gold.data, hw.data, "golden and PJRT disagree");
     let preds = golden::argmax_classes(&hw);
-    println!("PJRT inference bit-exact vs golden; predictions {preds:?} labels {labels:?}");
+    println!(
+        "PJRT ({} buckets {:?}) bit-exact vs golden; predictions {preds:?} labels {labels:?}",
+        pjrt_b.arch(),
+        pjrt_b.buckets()
+    );
 
     // -- bonus: the generated HLS C++ ------------------------------------
     let cpp = codegen::emit_top(&cfg);

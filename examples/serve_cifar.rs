@@ -1,34 +1,53 @@
 //! End-to-end serving driver (DESIGN.md experiment E7).
 //!
-//! Loads the AOT-compiled ResNet8/20, starts the inference coordinator
-//! (dynamic batcher + executor thread), streams a synthetic CIFAR-10 test
-//! set through it at several request patterns, and reports accuracy,
-//! throughput and latency percentiles.  Results are recorded in
-//! EXPERIMENTS.md §E7.
+//! Starts ONE multi-architecture inference router serving both the
+//! AOT-compiled ResNet8 and ResNet20 (a worker pool per arch), streams a
+//! synthetic CIFAR-10 test set through it at several request patterns,
+//! and reports accuracy, throughput and latency percentiles.  Results
+//! are recorded in EXPERIMENTS.md §E7.
+//!
+//! Without artifacts the example falls back to the artifact-free golden
+//! backend (synthetic weights) so the serving path itself still runs.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_cifar [-- frames]
 //! ```
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
-use resnet_hls::coordinator::{BatcherConfig, InferenceServer};
+use resnet_hls::coordinator::{Router, RouterConfig};
 use resnet_hls::data::{synth_batch, IMG_ELEMS, TEST_SEED};
 use resnet_hls::paths::artifacts_dir;
+use resnet_hls::runtime::{BackendFactory, GoldenFactory, PjrtFactory};
+
+const ARCHS: [&str; 2] = ["resnet8", "resnet20"];
 
 fn main() -> Result<()> {
     let frames: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
     let (input, labels) = synth_batch(0, frames, TEST_SEED);
 
-    for arch in ["resnet8", "resnet20"] {
+    let dir = artifacts_dir();
+    let factories: Vec<Arc<dyn BackendFactory>> = if dir.join("manifest.json").exists() {
+        ARCHS.iter().map(|a| {
+            Arc::new(PjrtFactory::new(dir.clone(), a)) as Arc<dyn BackendFactory>
+        }).collect()
+    } else {
+        println!("artifacts not built — serving on the golden backend (synthetic weights)");
+        ARCHS.iter().map(|a| {
+            Arc::new(GoldenFactory::synthetic(a, 7)) as Arc<dyn BackendFactory>
+        }).collect()
+    };
+    let router = Router::start(factories, RouterConfig::default())?;
+
+    for arch in ARCHS {
         println!("== serving {arch} ({frames} frames) ==");
-        let server = InferenceServer::start(artifacts_dir(), arch, BatcherConfig::default())?;
 
         // Pattern A: open-loop burst (throughput-oriented).
         let t0 = Instant::now();
         let pending: Vec<_> = (0..frames)
-            .map(|i| server.submit(input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].to_vec()))
+            .map(|i| router.submit(arch, input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].to_vec()))
             .collect::<Result<_>>()?;
         let mut correct = 0usize;
         for (rx, &label) in pending.iter().zip(&labels) {
@@ -45,7 +64,7 @@ fn main() -> Result<()> {
             dt.as_secs_f64() * 1e3,
             correct as f64 / frames as f64
         );
-        println!("  burst metrics: {}", server.metrics.snapshot());
+        println!("  burst metrics: {}", router.metrics(arch).unwrap().snapshot());
 
         // Pattern B: closed-loop single-stream (latency-oriented).
         let probe = frames.min(64);
@@ -53,7 +72,7 @@ fn main() -> Result<()> {
         let mut lat_us = Vec::with_capacity(probe);
         for i in 0..probe {
             let s = Instant::now();
-            let _ = server.infer(input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].to_vec())?;
+            let _ = router.infer(arch, input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].to_vec())?;
             lat_us.push(s.elapsed().as_micros() as u64);
         }
         lat_us.sort_unstable();
@@ -65,5 +84,7 @@ fn main() -> Result<()> {
             lat_us[probe - 1]
         );
     }
+
+    println!("== final router snapshot ==\n{}", router.shutdown());
     Ok(())
 }

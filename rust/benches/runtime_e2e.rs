@@ -1,12 +1,15 @@
 //! Bench: the real request path — PJRT inference throughput per batch
-//! bucket and end-to-end served throughput (DESIGN.md E7).
+//! bucket and end-to-end served throughput through the backend-generic
+//! router (DESIGN.md E7).
 //!
 //! Requires `make artifacts`.  Run: `cargo bench --bench runtime_e2e`
 
-use resnet_hls::coordinator::{BatcherConfig, InferenceServer};
+use std::sync::Arc;
+
+use resnet_hls::coordinator::{Router, RouterConfig};
 use resnet_hls::data::{synth_batch, IMG_ELEMS, TEST_SEED};
 use resnet_hls::paths::artifacts_dir;
-use resnet_hls::runtime::Engine;
+use resnet_hls::runtime::{BackendFactory, Engine, GoldenFactory, PjrtFactory};
 use resnet_hls::util::Bencher;
 
 fn main() {
@@ -31,15 +34,21 @@ fn main() {
         }
     }
 
-    // Served throughput through the coordinator (batcher + channels).
-    for arch in ["resnet8"] {
-        let server = InferenceServer::start(dir.clone(), arch, BatcherConfig::default()).unwrap();
+    // Served throughput through the router (batcher + channels), for the
+    // PJRT backend and — as the dispatch-overhead baseline — the golden
+    // backend.
+    let factories: [(&str, Arc<dyn BackendFactory>); 2] = [
+        ("pjrt", Arc::new(PjrtFactory::new(dir.clone(), "resnet8"))),
+        ("golden", Arc::new(GoldenFactory::from_artifacts(dir.clone(), "resnet8"))),
+    ];
+    for (label, factory) in factories {
+        let router = Router::start(vec![factory], RouterConfig::default()).unwrap();
         let (input, _) = synth_batch(0, 64, TEST_SEED);
-        b.bench_items(&format!("served {arch} 64-frame burst"), 64.0, &mut || {
+        b.bench_items(&format!("served {label} resnet8 64-frame burst"), 64.0, &mut || {
             let pending: Vec<_> = (0..64)
                 .map(|i| {
-                    server
-                        .submit(input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].to_vec())
+                    router
+                        .submit("resnet8", input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].to_vec())
                         .unwrap()
                 })
                 .collect();
@@ -47,6 +56,6 @@ fn main() {
                 rx.recv().unwrap().unwrap();
             }
         });
-        println!("  metrics: {}", server.metrics.snapshot());
+        println!("  metrics {}", router.shutdown());
     }
 }

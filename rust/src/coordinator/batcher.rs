@@ -21,6 +21,10 @@ pub struct BatcherConfig {
     /// b64 (cache residency), so the default caps there — see
     /// EXPERIMENTS.md §Perf (coordinator entry).
     pub max_bucket: usize,
+    /// Frames-equivalent fixed cost charged per dispatched execution in
+    /// the planning cost model (padding 5 frames into a bucket of 8 beats
+    /// five single-frame dispatches, but 9 frames still split 8 + 1).
+    pub dispatch_overhead: usize,
 }
 
 impl Default for BatcherConfig {
@@ -30,6 +34,7 @@ impl Default for BatcherConfig {
             max_wait: Duration::from_millis(2),
             max_queue: 64,
             max_bucket: 8,
+            dispatch_overhead: 4,
         }
     }
 }
@@ -72,11 +77,15 @@ impl Batcher {
     ///
     /// At each step, compare (a) greedy largest-fit decomposition of the
     /// remainder against (b) padding the whole remainder into the smallest
-    /// covering bucket, under a cost of `bucket + DISPATCH_OVERHEAD` frames
+    /// covering bucket, under a cost of `bucket + dispatch_overhead` frames
     /// per execution — padding 5 frames into a bucket of 8 beats five
     /// single-frame dispatches, but 9 frames still split into 8 + 1.
+    ///
+    /// By construction the result never costs more (per [`Self::plan_cost`])
+    /// than the pure greedy largest-fit decomposition — asserted by the
+    /// property test in `rust/tests/props.rs`.
     pub fn plan(&self, queued: usize) -> Vec<BatchPlan> {
-        const DISPATCH_OVERHEAD: usize = 4; // frames-equivalent per dispatch
+        let overhead = self.cfg.dispatch_overhead;
         let mut plans = Vec::new();
         let mut left = queued;
         while left > 0 {
@@ -96,13 +105,13 @@ impl Batcher {
                 if first_greedy.is_none() {
                     first_greedy = Some(b);
                 }
-                greedy_cost += b + DISPATCH_OVERHEAD;
+                greedy_cost += b + overhead;
                 l -= b.min(l);
             }
             // Option B: pad into the smallest covering bucket.
             let pad = self.cfg.buckets.iter().find(|&&b| b >= left).copied();
             match pad {
-                Some(b) if b + DISPATCH_OVERHEAD < greedy_cost => {
+                Some(b) if b + overhead < greedy_cost => {
                     plans.push(BatchPlan { bucket: b, take: left });
                     left = 0;
                 }
@@ -115,6 +124,12 @@ impl Batcher {
             }
         }
         plans
+    }
+
+    /// Cost of a plan under the dispatch-overhead model: each execution
+    /// costs its bucket's frames plus the fixed dispatch overhead.
+    pub fn plan_cost(&self, plans: &[BatchPlan]) -> usize {
+        plans.iter().map(|p| p.bucket + self.cfg.dispatch_overhead).sum()
     }
 
     /// Padding efficiency of a plan: real frames / executed frames.

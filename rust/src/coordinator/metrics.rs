@@ -64,14 +64,19 @@ impl Metrics {
             }
             u64::MAX
         };
+        let frames = self.frames.load(Ordering::Relaxed);
+        let padded = self.padded_frames.load(Ordering::Relaxed);
+        let executed = frames + padded;
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
-            frames: self.frames.load(Ordering::Relaxed),
+            frames,
             batches: self.batches.load(Ordering::Relaxed),
-            padded_frames: self.padded_frames.load(Ordering::Relaxed),
+            padded_frames: padded,
+            padding_efficiency: if executed > 0 { frames as f64 / executed as f64 } else { 1.0 },
             errors: self.errors.load(Ordering::Relaxed),
             mean_latency_us: if total > 0 { h.sum_us / total } else { 0 },
             p50_le_us: pct(0.50),
+            p95_le_us: pct(0.95),
             p99_le_us: pct(0.99),
             max_latency_us: h.max_us,
         }
@@ -79,16 +84,19 @@ impl Metrics {
 }
 
 /// A point-in-time snapshot for reporting.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub frames: u64,
     pub batches: u64,
     pub padded_frames: u64,
+    /// Real frames / executed frames (1.0 when nothing ran yet).
+    pub padding_efficiency: f64,
     pub errors: u64,
     pub mean_latency_us: u64,
     /// Latency percentiles as histogram-bucket upper bounds.
     pub p50_le_us: u64,
+    pub p95_le_us: u64,
     pub p99_le_us: u64,
     pub max_latency_us: u64,
 }
@@ -100,9 +108,10 @@ impl std::fmt::Display for MetricsSnapshot {
         };
         write!(
             f,
-            "req {}  frames {}  batches {}  padded {}  err {}  lat mean {}us p50{} p99{} max {}us",
-            self.requests, self.frames, self.batches, self.padded_frames, self.errors,
-            self.mean_latency_us, b(self.p50_le_us), b(self.p99_le_us), self.max_latency_us
+            "req {}  frames {}  batches {}  padded {} (eff {:.2})  err {}  lat mean {}us p50{} p95{} p99{} max {}us",
+            self.requests, self.frames, self.batches, self.padded_frames,
+            self.padding_efficiency, self.errors, self.mean_latency_us,
+            b(self.p50_le_us), b(self.p95_le_us), b(self.p99_le_us), self.max_latency_us
         )
     }
 }
@@ -119,6 +128,7 @@ mod tests {
         }
         let s = m.snapshot();
         assert_eq!(s.p50_le_us, 250);
+        assert_eq!(s.p95_le_us, 100_000);
         assert_eq!(s.p99_le_us, 100_000);
         assert_eq!(s.max_latency_us, 80_000);
         assert!(s.mean_latency_us > 0);
@@ -133,5 +143,13 @@ mod tests {
         assert_eq!(s.frames, 69);
         assert_eq!(s.padded_frames, 3);
         assert_eq!(s.batches, 2);
+        assert!((s.padding_efficiency - 69.0 / 72.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_has_unit_efficiency() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.padding_efficiency, 1.0);
+        assert_eq!(s.p95_le_us, 0);
     }
 }

@@ -1,18 +1,38 @@
-//! L3 inference coordinator: the request-path runtime around the compiled
-//! accelerator models.
+//! L3 inference coordinator: the request-path runtime above the
+//! backend-agnostic execution API.
 //!
 //! The paper's deployment story is a free-running, data-driven accelerator
 //! (`ap_ctrl_none`): frames stream in, results stream out, no per-frame
-//! control handshake.  The software analogue here is a dedicated executor
-//! thread per architecture that drains a request queue through a dynamic
-//! batcher (one compiled executable per batch bucket — batch sizes are
-//! baked into the AOT artifacts) and streams responses back over channels.
-//! Python is never involved.
+//! control handshake.  The software analogue is the [`Router`]: one handle
+//! owning a worker pool per architecture.  Each pool drains a shared
+//! request queue through the dynamic [`Batcher`] into an
+//! [`InferenceBackend`](crate::runtime::InferenceBackend), with
+//! `workers_per_arch` executor threads stealing one batch plan at a time.
+//! Backends are built *inside* their executor thread via a
+//! [`BackendFactory`](crate::runtime::BackendFactory) — PJRT executables
+//! are not `Send` — so this module never touches an xla/PJRT type.
+//!
+//! Picking a backend:
+//! * `PjrtFactory` — real AOT-compiled numerics; needs `make artifacts`.
+//! * `GoldenFactory` — exact int8/int32 golden numerics, artifact-free;
+//!   the default for CI and integration tests.
+//! * `SimFactory` — golden numerics paced by the cycle-approximate
+//!   dataflow simulator; load testing with realistic accelerator timing.
+//!
+//! Shutdown: [`Router::shutdown`] drains the queues (every accepted
+//! request gets a real response); dropping the handle aborts, failing
+//! queued requests with an explicit "server stopped" error.
+//!
+//! [`InferenceServer`] is the deprecated pre-redesign single-arch PJRT
+//! wrapper, kept so existing callers compile.
 
 mod batcher;
 mod metrics;
+mod router;
 mod server;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{InferenceServer, Request, Response};
+pub use router::{Request, Response, Router, RouterConfig, RouterSnapshot};
+#[allow(deprecated)]
+pub use server::InferenceServer;

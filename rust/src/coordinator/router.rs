@@ -1,0 +1,385 @@
+//! The multi-architecture inference router.
+//!
+//! One handle owns N per-arch worker pools.  Each pool is a shared
+//! request queue plus `workers_per_arch` executor threads; every worker
+//! builds its *own* backend through the pool's [`BackendFactory`] (PJRT
+//! executables are not `Send`, so they are created inside the thread that
+//! uses them) and then steals work from the queue one batch plan at a
+//! time — the software analogue of multiple free-running accelerator
+//! instances fed from one DMA stream.
+//!
+//! Shutdown semantics:
+//! * [`Router::shutdown`] — graceful: stop accepting, let the workers
+//!   drain everything already queued, join, return the final snapshot.
+//! * `Drop` — abort: stop accepting and fail everything still queued with
+//!   an explicit "server stopped" error.  Requests are never silently
+//!   discarded.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{IMG_C, IMG_ELEMS, IMG_H, IMG_W, INPUT_EXP};
+use crate::quant::{QTensor, Shape4};
+use crate::runtime::{BackendFactory, InferenceBackend};
+use crate::sim::golden;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::{Metrics, MetricsSnapshot};
+
+/// A single-frame inference request.
+pub struct Request {
+    /// (32, 32, 3) int8-valued pixels @ 2^-7, NHWC flattened.
+    pub pixels: Vec<i32>,
+    pub submitted: Instant,
+    pub resp: Sender<Result<Response>>,
+}
+
+/// The response: int32 logits + the predicted class.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<i32>,
+    pub class: usize,
+    pub latency: Duration,
+}
+
+/// Router policy parameters.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Executor threads per architecture pool.  Each worker constructs
+    /// its own backend from the pool's factory.
+    pub workers_per_arch: usize,
+    /// Batching policy.  The bucket list is overridden per worker by what
+    /// its backend actually provides.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { workers_per_arch: 1, batcher: BatcherConfig::default() }
+    }
+}
+
+/// Queue state shared by one pool's workers.
+struct PoolState {
+    queue: VecDeque<Request>,
+    /// Accepting new submissions.
+    open: bool,
+    /// Graceful shutdown: process the remaining queue, then exit.
+    draining: bool,
+    /// Abort: fail the remaining queue with "server stopped", then exit.
+    abort: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+struct Pool {
+    shared: Arc<PoolShared>,
+    metrics: Arc<Metrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Per-arch + aggregate metrics at one instant.
+#[derive(Debug, Clone)]
+pub struct RouterSnapshot {
+    pub per_arch: BTreeMap<String, MetricsSnapshot>,
+    pub total: MetricsSnapshot,
+}
+
+impl std::fmt::Display for RouterSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "total: {}", self.total)?;
+        for (arch, snap) in &self.per_arch {
+            write!(f, "\n  {arch}: {snap}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Handle to a running multi-arch inference service.
+pub struct Router {
+    pools: BTreeMap<String, Pool>,
+    agg: Arc<Metrics>,
+}
+
+impl Router {
+    /// Start one worker pool per factory.  Blocks until every worker has
+    /// constructed its backend (so artifact/compile errors surface here,
+    /// not on the first request).
+    pub fn start(factories: Vec<Arc<dyn BackendFactory>>, cfg: RouterConfig) -> Result<Router> {
+        anyhow::ensure!(!factories.is_empty(), "router needs at least one backend factory");
+        let workers_per_arch = cfg.workers_per_arch.max(1);
+        let agg = Arc::new(Metrics::new());
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        // Workers are registered on the router as they spawn, so any
+        // early return below aborts + joins them through Drop.
+        let mut router = Router { pools: BTreeMap::new(), agg };
+        let mut spawned = 0usize;
+        for factory in factories {
+            let arch = factory.arch().to_string();
+            anyhow::ensure!(
+                !router.pools.contains_key(&arch),
+                "duplicate backend for arch {arch}"
+            );
+            let shared = Arc::new(PoolShared {
+                state: Mutex::new(PoolState {
+                    queue: VecDeque::new(),
+                    open: true,
+                    draining: false,
+                    abort: false,
+                }),
+                cv: Condvar::new(),
+            });
+            let metrics = Arc::new(Metrics::new());
+            router.pools.insert(
+                arch.clone(),
+                Pool { shared: shared.clone(), metrics: metrics.clone(), workers: Vec::new() },
+            );
+            for wi in 0..workers_per_arch {
+                let factory = factory.clone();
+                let shared = shared.clone();
+                let metrics = metrics.clone();
+                let agg = router.agg.clone();
+                let ready = ready_tx.clone();
+                let bcfg = cfg.batcher.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("exec-{arch}-{wi}"))
+                    .spawn(move || {
+                        // Backend construction happens *inside* the
+                        // worker: non-Send executables never migrate.
+                        let backend = match factory.create() {
+                            Ok(b) => {
+                                let _ = ready.send(Ok(()));
+                                b
+                            }
+                            Err(e) => {
+                                let _ = ready.send(Err(e));
+                                return;
+                            }
+                        };
+                        // Release the handshake sender now: if a sibling
+                        // worker panics in create() without reporting,
+                        // start() must see the channel close, not hang.
+                        drop(ready);
+                        worker_loop(backend.as_ref(), bcfg, &shared, &metrics, &agg);
+                    })?;
+                router.pools.get_mut(&arch).unwrap().workers.push(handle);
+                spawned += 1;
+            }
+        }
+        drop(ready_tx);
+        for _ in 0..spawned {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(e), // Drop aborts the rest
+                Err(_) => return Err(anyhow!("executor thread died during startup")),
+            }
+        }
+        Ok(router)
+    }
+
+    /// Architectures this router serves, ascending.
+    pub fn archs(&self) -> Vec<String> {
+        self.pools.keys().cloned().collect()
+    }
+
+    /// Submit a frame for `arch`; returns the response channel.
+    pub fn submit(&self, arch: &str, pixels: Vec<i32>) -> Result<Receiver<Result<Response>>> {
+        anyhow::ensure!(pixels.len() == IMG_ELEMS, "expected {IMG_ELEMS} pixels");
+        let pool = self.pools.get(arch).ok_or_else(|| {
+            anyhow!("no backend for arch {arch} (have: {:?})", self.archs())
+        })?;
+        let (resp_tx, resp_rx) = mpsc::channel();
+        {
+            let mut st = pool.shared.state.lock().unwrap();
+            anyhow::ensure!(st.open, "server stopped");
+            // Count while holding the lock: workers also need it to pop,
+            // so a snapshot can never observe frames > requests.
+            pool.metrics.requests.fetch_add(1, Ordering::Relaxed);
+            self.agg.requests.fetch_add(1, Ordering::Relaxed);
+            st.queue.push_back(Request {
+                pixels,
+                submitted: Instant::now(),
+                resp: resp_tx,
+            });
+        }
+        pool.shared.cv.notify_one();
+        Ok(resp_rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, arch: &str, pixels: Vec<i32>) -> Result<Response> {
+        self.submit(arch, pixels)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    /// One pool's live metrics.
+    pub fn metrics(&self, arch: &str) -> Option<Arc<Metrics>> {
+        self.pools.get(arch).map(|p| p.metrics.clone())
+    }
+
+    /// Aggregate metrics across every pool (exact — workers record into
+    /// both their pool's and this histogram).
+    pub fn aggregate(&self) -> Arc<Metrics> {
+        self.agg.clone()
+    }
+
+    /// Point-in-time per-arch + total snapshot.
+    pub fn snapshot(&self) -> RouterSnapshot {
+        RouterSnapshot {
+            per_arch: self
+                .pools
+                .iter()
+                .map(|(a, p)| (a.clone(), p.metrics.snapshot()))
+                .collect(),
+            total: self.agg.snapshot(),
+        }
+    }
+
+    /// Graceful shutdown: stop accepting requests, let the workers drain
+    /// everything already queued, join them, and return the final
+    /// snapshot.  Every request submitted before this call gets a real
+    /// response.
+    pub fn shutdown(mut self) -> RouterSnapshot {
+        self.drain_and_join();
+        self.snapshot()
+    }
+
+    /// Stop accepting, drain, join.  Idempotent; also used by the
+    /// deprecated `InferenceServer` shim to preserve its historical
+    /// drain-on-drop behavior.
+    pub(super) fn drain_and_join(&mut self) {
+        for pool in self.pools.values() {
+            let mut st = pool.shared.state.lock().unwrap();
+            st.open = false;
+            st.draining = true;
+            drop(st);
+            pool.shared.cv.notify_all();
+        }
+        for pool in self.pools.values_mut() {
+            for w in pool.workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        // Abort: anything still queued gets an explicit "server stopped"
+        // error — never a silently dropped response channel.
+        for pool in self.pools.values() {
+            let mut st = pool.shared.state.lock().unwrap();
+            st.open = false;
+            st.abort = true;
+            drop(st);
+            pool.shared.cv.notify_all();
+        }
+        for pool in self.pools.values_mut() {
+            for w in pool.workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+        // If a pool's workers never ran (startup failure), its queue may
+        // still hold requests: fail them here.
+        for pool in self.pools.values() {
+            let mut st = pool.shared.state.lock().unwrap();
+            while let Some(r) = st.queue.pop_front() {
+                let _ = r.resp.send(Err(anyhow!("server stopped")));
+            }
+        }
+    }
+}
+
+/// One executor thread: claim a planned batch under the queue lock,
+/// execute it outside the lock (other workers keep stealing), respond.
+fn worker_loop(
+    backend: &dyn InferenceBackend,
+    mut bcfg: BatcherConfig,
+    shared: &PoolShared,
+    pool_metrics: &Metrics,
+    agg: &Metrics,
+) {
+    let buckets = backend.buckets().to_vec();
+    if !buckets.is_empty() {
+        bcfg.buckets = buckets;
+    }
+    let batcher = Batcher::new(bcfg);
+    loop {
+        let mut st = shared.state.lock().unwrap();
+        let (plan, batch) = loop {
+            if st.abort {
+                while let Some(r) = st.queue.pop_front() {
+                    let _ = r.resp.send(Err(anyhow!("server stopped")));
+                }
+                return;
+            }
+            if let Some(front) = st.queue.front() {
+                let oldest = front.submitted.elapsed();
+                if st.draining || batcher.should_flush(st.queue.len(), oldest) {
+                    let plan = batcher
+                        .plan(st.queue.len())
+                        .into_iter()
+                        .next()
+                        .expect("plan of non-empty queue");
+                    let batch: Vec<Request> = st.queue.drain(..plan.take).collect();
+                    break (plan, batch);
+                }
+                let wait = batcher.config().max_wait.saturating_sub(oldest);
+                let (g, _) = shared
+                    .cv
+                    .wait_timeout(st, wait.max(Duration::from_micros(100)))
+                    .unwrap();
+                st = g;
+            } else {
+                if st.draining {
+                    return;
+                }
+                let (g, _) = shared.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
+                st = g;
+            }
+        };
+        drop(st);
+
+        let mut data = vec![0i32; plan.bucket * IMG_ELEMS];
+        for (i, r) in batch.iter().enumerate() {
+            data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].copy_from_slice(&r.pixels);
+        }
+        let input =
+            QTensor::from_vec(Shape4::new(plan.bucket, IMG_H, IMG_W, IMG_C), INPUT_EXP, data);
+        match backend.infer_batch(&input) {
+            Ok(logits) => {
+                pool_metrics.record_batch(plan.take, plan.bucket);
+                agg.record_batch(plan.take, plan.bucket);
+                let c = logits.shape.c;
+                // Same class selection as the test oracle, so serving and
+                // golden can never drift on tie-breaking.
+                let classes = golden::argmax_classes(&logits);
+                for (i, r) in batch.into_iter().enumerate() {
+                    let row = logits.data[i * c..(i + 1) * c].to_vec();
+                    let class = classes[i];
+                    let latency = r.submitted.elapsed();
+                    pool_metrics.record_latency(latency);
+                    agg.record_latency(latency);
+                    let _ = r.resp.send(Ok(Response { logits: row, class, latency }));
+                }
+            }
+            Err(e) => {
+                pool_metrics.errors.fetch_add(1, Ordering::Relaxed);
+                agg.errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("{e}");
+                for r in batch {
+                    let _ = r.resp.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}

@@ -1,82 +1,45 @@
-//! The inference server: per-architecture executor threads draining a
-//! request queue through the dynamic batcher into the PJRT engine.
+//! Deprecated single-arch wrapper around the [`Router`].
 //!
-//! The PJRT executables live entirely inside their executor thread (they
-//! are created there), so no `Send` bound is needed on the xla types; the
-//! outside world talks over channels — mirroring the paper's free-running
-//! accelerator fed by DMA streams.
+//! `InferenceServer` predates the backend-agnostic redesign: it was
+//! hard-wired to the PJRT engine and to exactly one architecture.  It is
+//! kept as a thin shim so existing callers compile; new code should
+//! start a [`Router`] with whichever [`BackendFactory`]
+//! (`PjrtFactory` / `GoldenFactory` / `SimFactory`) fits the deployment.
 
-use std::collections::VecDeque;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::path::PathBuf;
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use crate::data::IMG_ELEMS;
-use crate::quant::{QTensor, Shape4};
-use crate::runtime::Engine;
+use crate::runtime::PjrtFactory;
 
-use super::batcher::{Batcher, BatcherConfig};
-use super::metrics::Metrics;
+use super::batcher::BatcherConfig;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::router::{Response, Router, RouterConfig};
 
-/// A single-frame inference request.
-pub struct Request {
-    /// (32, 32, 3) int8-valued pixels @ 2^-7, NHWC flattened.
-    pub pixels: Vec<i32>,
-    pub submitted: Instant,
-    pub resp: Sender<Result<Response>>,
-}
-
-/// The response: int32 logits + the predicted class.
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub logits: Vec<i32>,
-    pub class: usize,
-    pub latency: Duration,
-}
-
-/// Handle to a running per-architecture inference server.
+/// Handle to a running single-architecture PJRT inference server.
+#[deprecated(note = "use coordinator::Router with a runtime::BackendFactory")]
 pub struct InferenceServer {
     arch: String,
-    tx: Sender<Request>,
+    router: Router,
     pub metrics: Arc<Metrics>,
-    worker: Option<std::thread::JoinHandle<()>>,
 }
 
+#[allow(deprecated)]
 impl InferenceServer {
-    /// Start the executor thread: it loads + compiles the artifacts for
-    /// `arch` and then serves until the handle is dropped.
+    /// Start a one-arch, one-worker PJRT router.
     pub fn start(
-        artifacts_dir: std::path::PathBuf,
+        artifacts_dir: PathBuf,
         arch: &str,
         cfg: BatcherConfig,
     ) -> Result<InferenceServer> {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let metrics = Arc::new(Metrics::new());
-        let m = metrics.clone();
-        let arch_name = arch.to_string();
-        let worker = std::thread::Builder::new()
-            .name(format!("exec-{arch}"))
-            .spawn(move || {
-                let engine = match Engine::load(&artifacts_dir) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                executor_loop(&engine, &arch_name, cfg, rx, m);
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("executor thread died during startup"))??;
-        Ok(InferenceServer { arch: arch.to_string(), tx, metrics, worker: Some(worker) })
+        let factory: Arc<dyn crate::runtime::BackendFactory> =
+            Arc::new(PjrtFactory::new(artifacts_dir, arch));
+        let router =
+            Router::start(vec![factory], RouterConfig { batcher: cfg, ..Default::default() })?;
+        let metrics = router.metrics(arch).expect("pool exists for started arch");
+        Ok(InferenceServer { arch: arch.to_string(), router, metrics })
     }
 
     pub fn arch(&self) -> &str {
@@ -85,106 +48,27 @@ impl InferenceServer {
 
     /// Submit a frame; returns the response channel.
     pub fn submit(&self, pixels: Vec<i32>) -> Result<Receiver<Result<Response>>> {
-        anyhow::ensure!(pixels.len() == IMG_ELEMS, "expected {IMG_ELEMS} pixels");
-        let (resp_tx, resp_rx) = mpsc::channel();
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Request { pixels, submitted: Instant::now(), resp: resp_tx })
-            .map_err(|_| anyhow!("server stopped"))?;
-        Ok(resp_rx)
+        self.router.submit(&self.arch, pixels)
     }
 
     /// Blocking convenience: submit and wait.
     pub fn infer(&self, pixels: Vec<i32>) -> Result<Response> {
-        self.submit(pixels)?
-            .recv()
-            .map_err(|_| anyhow!("server dropped request"))?
+        self.router.infer(&self.arch, pixels)
+    }
+
+    /// Graceful shutdown (drains the queue), returning the final metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.router.drain_and_join();
+        self.metrics.snapshot()
     }
 }
 
+// Historical `InferenceServer` semantics: dropping the handle *drains*
+// the queue (every accepted request still gets a response), unlike
+// `Router`'s abort-on-drop.  Existing callers rely on it.
+#[allow(deprecated)]
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        // Closing the channel ends the executor loop.
-        let (tx, _) = mpsc::channel();
-        let _ = std::mem::replace(&mut self.tx, tx);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-fn executor_loop(
-    engine: &Engine,
-    arch: &str,
-    cfg: BatcherConfig,
-    rx: Receiver<Request>,
-    metrics: Arc<Metrics>,
-) {
-    let mut cfg = cfg;
-    let engine_buckets = engine.buckets(arch);
-    if !engine_buckets.is_empty() {
-        cfg.buckets = engine_buckets;
-    }
-    let batcher = Batcher::new(cfg);
-    let mut queue: VecDeque<Request> = VecDeque::new();
-    loop {
-        // Wait for work (or a flush deadline on a non-empty queue).
-        let timeout = if queue.is_empty() {
-            Duration::from_millis(50)
-        } else {
-            let age = queue.front().map(|r| r.submitted.elapsed()).unwrap_or_default();
-            batcher.config().max_wait.saturating_sub(age)
-        };
-        match rx.recv_timeout(timeout) {
-            Ok(req) => queue.push_back(req),
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => {
-                if queue.is_empty() {
-                    return;
-                }
-            }
-        }
-        // Drain anything else already queued.
-        while let Ok(req) = rx.try_recv() {
-            queue.push_back(req);
-        }
-        let oldest = queue.front().map(|r| r.submitted.elapsed()).unwrap_or_default();
-        if !batcher.should_flush(queue.len(), oldest) {
-            continue;
-        }
-        for plan in batcher.plan(queue.len()) {
-            let take: Vec<Request> = queue.drain(..plan.take).collect();
-            let mut data = vec![0i32; plan.bucket * IMG_ELEMS];
-            for (i, r) in take.iter().enumerate() {
-                data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].copy_from_slice(&r.pixels);
-            }
-            let input = QTensor::from_vec(Shape4::new(plan.bucket, 32, 32, 3), -7, data);
-            let name = format!("{arch}_b{}", plan.bucket);
-            match engine.model(&name).and_then(|m| m.infer(&input)) {
-                Ok(logits) => {
-                    metrics.record_batch(plan.take, plan.bucket);
-                    let c = logits.shape.c;
-                    for (i, r) in take.into_iter().enumerate() {
-                        let row = logits.data[i * c..(i + 1) * c].to_vec();
-                        let class = row
-                            .iter()
-                            .enumerate()
-                            .max_by_key(|&(_, v)| *v)
-                            .map(|(k, _)| k)
-                            .unwrap_or(0);
-                        let latency = r.submitted.elapsed();
-                        metrics.record_latency(latency);
-                        let _ = r.resp.send(Ok(Response { logits: row, class, latency }));
-                    }
-                }
-                Err(e) => {
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    let msg = format!("{e}");
-                    for r in take {
-                        let _ = r.resp.send(Err(anyhow!("{msg}")));
-                    }
-                }
-            }
-        }
+        self.router.drain_and_join();
     }
 }

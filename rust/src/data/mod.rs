@@ -4,6 +4,6 @@
 mod cifar;
 
 pub use cifar::{
-    load_real_batch, sample, synth_batch, SynthSample, IMG_C, IMG_ELEMS, IMG_H, IMG_W,
+    load_real_batch, sample, synth_batch, SynthSample, IMG_C, IMG_ELEMS, IMG_H, IMG_W, INPUT_EXP,
     NUM_CLASSES, TEST_SEED, TRAIN_SEED,
 };

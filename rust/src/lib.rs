@@ -9,16 +9,25 @@
 //! for real through an AOT-compiled JAX/Pallas model executed via PJRT.
 //!
 //! Layer map (three-layer architecture):
-//! * **L3 (this crate)** — the paper's flow and substrates: graph IR and the
-//!   residual-block optimizations (`graph`, `passes`), ILP throughput
-//!   balancing (`ilp`), HLS-style configuration/codegen/resource model
-//!   (`hls`), a cycle-approximate dataflow simulator (`sim`), the PJRT
-//!   runtime (`runtime`) and an inference coordinator (`coordinator`).
+//! * **L3 (this crate)** — the paper's flow and substrates:
+//!   - *design flow*: graph IR and the residual-block optimizations
+//!     (`graph`, `passes`), ILP throughput balancing (`ilp`), HLS-style
+//!     configuration/codegen/resource model (`hls`);
+//!   - *execution*: the backend-agnostic inference API
+//!     (`runtime::backend` — the `InferenceBackend`/`BackendFactory`
+//!     traits) with three substrates: the PJRT engine (`runtime`, real
+//!     AOT-compiled numerics), the integer golden model (`sim::golden`,
+//!     artifact-free), and the cycle-approximate dataflow simulator
+//!     (`sim::engine`, realistic accelerator timing);
+//!   - *serving*: the multi-arch `coordinator::Router` (per-arch worker
+//!     pools, dynamic batcher, metrics) — backend-generic, so the whole
+//!     request path is testable without Python, PJRT or artifacts.
 //! * **L2/L1 (python/, build-time only)** — quantized ResNet8/20 in JAX,
 //!   compute hot-spots as Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
 //!
 //! Nothing in this crate imports Python at runtime; the `artifacts/`
-//! directory fully decouples the two worlds.
+//! directory fully decouples the two worlds, and only the PJRT backend
+//! consumes it.
 
 pub mod coordinator;
 pub mod data;

@@ -8,12 +8,13 @@
 //!   eval-tables                  Table 3 + Table 4 (modeled vs paper)
 //!   golden-eval [--model M] [--n N]               golden accuracy on synthetic test set
 //!   probe-check                  cross-language bit-equality (golden vs oracle vs PJRT)
-//!   serve      [--model M] [--frames N]           run the inference server on synthetic frames
+//!   serve      [--model M] [--frames N] [--backend pjrt|golden|sim] [--workers N]
+//!                                route synthetic frames through the inference router
 //!   buffers    [--model M]       Eq. 21/22/23 per residual block
 
 use anyhow::Result;
 
-use resnet_hls::coordinator::{BatcherConfig, InferenceServer};
+use resnet_hls::coordinator::{Router, RouterConfig};
 use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::eval::figures::skip_buffering_series;
 use resnet_hls::eval::tables::{print_table3, print_table4, table3, table4};
@@ -21,14 +22,19 @@ use resnet_hls::hls::{board_by_name, codegen, config::configure, resources::fit_
 use resnet_hls::ilp::loads_from_arch;
 use resnet_hls::models::{arch_by_name, build_optimized_graph, default_exps, ModelWeights};
 use resnet_hls::paths::artifacts_dir;
-use resnet_hls::runtime::{Artifacts, Engine};
+use resnet_hls::runtime::{
+    Artifacts, BackendFactory, Engine, GoldenFactory, PjrtFactory, SimFactory,
+};
 use resnet_hls::sim::{build_network, golden, SimOptions};
 use resnet_hls::util::cli::Args;
 
 fn main() {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["model", "board", "frames", "n", "out", "skip-factor", "ow-par", "budget"],
+        &[
+            "model", "board", "frames", "n", "out", "skip-factor", "ow-par", "budget", "backend",
+            "workers",
+        ],
     );
     let result = match args.subcommand.as_deref() {
         Some("info") => cmd_info(),
@@ -270,14 +276,29 @@ fn cmd_probe_check() -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let arch = arch_of(args)?;
     let frames = args.opt_usize("frames", 256);
-    let server = InferenceServer::start(artifacts_dir(), &arch.name, BatcherConfig::default())?;
+    let workers = args.opt_usize("workers", 1);
+    let backend = args.opt_or("backend", "pjrt");
+    let dir = artifacts_dir();
+    // `golden` prefers the trained artifact weights when present and
+    // falls back to deterministic synthetic weights (fully artifact-free).
+    let factory: std::sync::Arc<dyn BackendFactory> = match backend {
+        "pjrt" => std::sync::Arc::new(PjrtFactory::new(dir.clone(), &arch.name)),
+        "golden" => std::sync::Arc::new(GoldenFactory::auto(dir.clone(), &arch.name, 7)),
+        "sim" => std::sync::Arc::new(SimFactory::synthetic(&arch.name, 7)),
+        other => anyhow::bail!("unknown backend {other} (expected pjrt|golden|sim)"),
+    };
+    let router = Router::start(
+        vec![factory],
+        RouterConfig { workers_per_arch: workers, ..Default::default() },
+    )?;
+    println!("serving {} on {backend} backend ({workers} worker(s))", arch.name);
     let (input, labels) = synth_batch(0, frames, TEST_SEED);
     let frame_elems = 32 * 32 * 3;
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..frames {
         let pixels = input.data[i * frame_elems..(i + 1) * frame_elems].to_vec();
-        pending.push(server.submit(pixels)?);
+        pending.push(router.submit(&arch.name, pixels)?);
     }
     let mut correct = 0usize;
     for (rx, &label) in pending.iter().zip(&labels) {
@@ -293,7 +314,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         frames as f64 / dt.as_secs_f64(),
         correct as f64 / frames as f64
     );
-    println!("metrics: {}", server.metrics.snapshot());
+    println!("metrics {}", router.shutdown());
     Ok(())
 }
 

@@ -1,0 +1,423 @@
+//! The backend-agnostic inference API.
+//!
+//! The paper's accelerator is a free-running dataflow engine: the host
+//! never cares *what* executes a batch, only that frames go in and logits
+//! come out.  This module makes that boundary explicit: everything above
+//! it (the coordinator's router, batcher and metrics) talks to a
+//! [`InferenceBackend`] and can therefore run against any of three
+//! substrates:
+//!
+//! * [`PjrtBackend`](super::PjrtBackend) — the AOT-compiled HLO executed
+//!   on PJRT (real numerics, needs `make artifacts`);
+//! * [`GoldenBackend`] — the in-process integer golden model (exact
+//!   int8/int32 numerics, artifact-free);
+//! * [`SimBackend`] — golden numerics paced by the cycle-approximate
+//!   dataflow simulator (realistic accelerator timing for load tests).
+//!
+//! Backends are constructed through a [`BackendFactory`] *inside* the
+//! executor thread that will use them — PJRT executables are not `Send`,
+//! so they must never cross a thread boundary.  The factory itself is
+//! plain data (`Send + Sync`) and can be handed to any number of workers.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Batcher, BatcherConfig};
+use crate::graph::Graph;
+use crate::hls::{resources::fit_to_board, Board, KV260};
+use crate::ilp::loads_from_arch;
+use crate::models::{
+    arch_by_name, build_optimized_graph, default_exps, synthetic_weights, ModelWeights,
+};
+use crate::quant::{QTensor, Shape4};
+use crate::sim::{build_network, golden, SimOptions};
+
+/// Something that can run inference batches for one architecture.
+///
+/// The contract: `infer_batch` is called with inputs whose batch size is
+/// one of `buckets()` (backends may accept other sizes, but callers only
+/// rely on the buckets).  The result is the logits tensor `(N, 1, 1, C)`
+/// at exponent 0, row `i` corresponding to input frame `i`.
+pub trait InferenceBackend {
+    /// Architecture name this backend serves (e.g. `"resnet8"`).
+    fn arch(&self) -> &str;
+    /// Batch-size buckets executed natively, ascending.
+    fn buckets(&self) -> &[usize];
+    /// Execute one bucket-sized batch.
+    fn infer_batch(&self, input: &QTensor) -> Result<QTensor>;
+}
+
+/// Constructs [`InferenceBackend`]s inside their executor thread.
+///
+/// PJRT executables are not `Send`, so the coordinator never moves a
+/// backend between threads: it moves a factory (plain data) into each
+/// worker and calls `create()` there.  One factory may be shared by many
+/// workers of the same pool.
+pub trait BackendFactory: Send + Sync {
+    /// Architecture the created backends will serve (the router's key).
+    fn arch(&self) -> &str;
+    /// Build a fresh backend.  Called once per executor thread.
+    fn create(&self) -> Result<Box<dyn InferenceBackend>>;
+}
+
+/// Run a batch of any size through bucket-sized `infer_batch` calls.
+///
+/// The decomposition is the coordinator's [`Batcher::plan`] — the single
+/// batch-tiling policy in the crate (the serving path and this offline
+/// path can no longer drift).  Tail frames are zero-padded into the
+/// cheapest covering bucket under the dispatch-overhead cost model.
+pub fn infer_tiled(backend: &dyn InferenceBackend, input: &QTensor) -> Result<QTensor> {
+    let buckets = backend.buckets().to_vec();
+    anyhow::ensure!(!buckets.is_empty(), "no buckets for {}", backend.arch());
+    let batcher = Batcher::new(BatcherConfig {
+        buckets,
+        max_bucket: usize::MAX,
+        ..Default::default()
+    });
+    let n = input.shape.n;
+    let (h, w, c) = (input.shape.h, input.shape.w, input.shape.c);
+    let frame = h * w * c;
+    let mut out_data = Vec::with_capacity(n * 10);
+    let mut classes = 10;
+    let mut done = 0usize;
+    for plan in batcher.plan(n) {
+        let mut chunk = vec![0i32; plan.bucket * frame];
+        chunk[..plan.take * frame]
+            .copy_from_slice(&input.data[done * frame..(done + plan.take) * frame]);
+        let q = QTensor::from_vec(Shape4::new(plan.bucket, h, w, c), input.exp, chunk);
+        let logits = backend.infer_batch(&q)?;
+        classes = logits.shape.c;
+        out_data.extend_from_slice(&logits.data[..plan.take * classes]);
+        done += plan.take;
+    }
+    Ok(QTensor::from_vec(Shape4::new(n, 1, 1, classes), 0, out_data))
+}
+
+// ------------------------------------------------------------- golden
+
+/// Artifact-free backend: the exact int8/int32 golden numerics from
+/// [`sim::golden`](crate::sim::golden), bit-equal to the jnp oracle and
+/// (through the AOT artifacts) to the PJRT-executed HLO.
+///
+/// Accepts any batch size, but advertises a configurable bucket set so
+/// the batcher exercises the same tiling decisions it would make against
+/// real baked-batch executables.
+pub struct GoldenBackend {
+    arch: String,
+    graph: Graph,
+    weights: ModelWeights,
+    buckets: Vec<usize>,
+}
+
+impl GoldenBackend {
+    /// Bucket set mirroring the default AOT artifacts (b1/b8/b64).
+    pub const DEFAULT_BUCKETS: &'static [usize] = &[1, 8, 64];
+
+    /// Deterministic synthetic weights — runs anywhere, no artifacts.
+    pub fn synthetic(arch_name: &str, seed: u64, buckets: &[usize]) -> Result<GoldenBackend> {
+        let arch =
+            arch_by_name(arch_name).ok_or_else(|| anyhow!("unknown arch {arch_name}"))?;
+        let weights = synthetic_weights(&arch, seed);
+        let graph = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        Self::from_parts(arch_name, graph, weights, buckets)
+    }
+
+    /// Real trained weights from the artifacts directory (reads the
+    /// weight blobs only — no HLO, no PJRT).
+    pub fn from_artifacts(dir: &Path, arch_name: &str, buckets: &[usize]) -> Result<GoldenBackend> {
+        let arch =
+            arch_by_name(arch_name).ok_or_else(|| anyhow!("unknown arch {arch_name}"))?;
+        let weights = ModelWeights::load(dir, arch_name)?;
+        let graph = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        Self::from_parts(arch_name, graph, weights, buckets)
+    }
+
+    fn from_parts(
+        arch: &str,
+        graph: Graph,
+        weights: ModelWeights,
+        buckets: &[usize],
+    ) -> Result<GoldenBackend> {
+        let mut buckets = buckets.to_vec();
+        buckets.sort_unstable();
+        buckets.dedup();
+        anyhow::ensure!(!buckets.is_empty(), "golden backend needs at least one bucket");
+        Ok(GoldenBackend { arch: arch.to_string(), graph, weights, buckets })
+    }
+}
+
+impl InferenceBackend for GoldenBackend {
+    fn arch(&self) -> &str {
+        &self.arch
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn infer_batch(&self, input: &QTensor) -> Result<QTensor> {
+        golden::run(&self.graph, &self.weights, input)
+    }
+}
+
+/// Factory for [`GoldenBackend`]s.
+pub struct GoldenFactory {
+    arch: String,
+    seed: u64,
+    buckets: Vec<usize>,
+    /// `Some(dir)` — load trained weights from the artifacts directory;
+    /// `None` — deterministic synthetic weights.
+    artifacts: Option<PathBuf>,
+}
+
+impl GoldenFactory {
+    /// Synthetic weights: runs anywhere.
+    pub fn synthetic(arch: &str, seed: u64) -> GoldenFactory {
+        GoldenFactory {
+            arch: arch.to_string(),
+            seed,
+            buckets: GoldenBackend::DEFAULT_BUCKETS.to_vec(),
+            artifacts: None,
+        }
+    }
+
+    /// Trained weights from the artifacts directory.
+    pub fn from_artifacts(dir: PathBuf, arch: &str) -> GoldenFactory {
+        GoldenFactory {
+            arch: arch.to_string(),
+            seed: 0,
+            buckets: GoldenBackend::DEFAULT_BUCKETS.to_vec(),
+            artifacts: Some(dir),
+        }
+    }
+
+    /// Trained weights when the artifacts manifest is present, else the
+    /// `seed`-deterministic synthetic fallback (fully artifact-free).
+    pub fn auto(dir: PathBuf, arch: &str, seed: u64) -> GoldenFactory {
+        if dir.join("manifest.json").exists() {
+            Self::from_artifacts(dir, arch)
+        } else {
+            Self::synthetic(arch, seed)
+        }
+    }
+
+    /// Override the advertised bucket set.
+    pub fn with_buckets(mut self, buckets: &[usize]) -> GoldenFactory {
+        self.buckets = buckets.to_vec();
+        self
+    }
+}
+
+impl BackendFactory for GoldenFactory {
+    fn arch(&self) -> &str {
+        &self.arch
+    }
+
+    fn create(&self) -> Result<Box<dyn InferenceBackend>> {
+        let b = match &self.artifacts {
+            Some(dir) => GoldenBackend::from_artifacts(dir, &self.arch, &self.buckets)?,
+            None => GoldenBackend::synthetic(&self.arch, self.seed, &self.buckets)?,
+        };
+        Ok(Box::new(b))
+    }
+}
+
+// ---------------------------------------------------------------- sim
+
+/// Golden numerics paced by the cycle-approximate dataflow simulator.
+///
+/// At construction the discrete-event network for the architecture is
+/// built (ILP allocation + resource closure on `board`) and run once to
+/// calibrate first-frame latency and steady-state initiation interval.
+/// Each `infer_batch` then takes *at least* the modeled accelerator time
+/// `latency + (n-1) * II` at the board clock — if the golden compute is
+/// slower than the modeled fabric (it usually is for large nets), the
+/// call is compute-bound and no extra delay is added.  Use it to load-test
+/// the router with realistic timing, artifact-free.
+pub struct SimBackend {
+    inner: GoldenBackend,
+    latency: Duration,
+    per_frame: Duration,
+}
+
+impl SimBackend {
+    pub fn synthetic(
+        arch_name: &str,
+        seed: u64,
+        buckets: &[usize],
+        board: &Board,
+    ) -> Result<SimBackend> {
+        let inner = GoldenBackend::synthetic(arch_name, seed, buckets)?;
+        let (latency, per_frame) = calibrate(arch_name, board)?;
+        Ok(SimBackend::with_timing(inner, latency, per_frame))
+    }
+
+    /// Assemble from an already-calibrated timing model (the factory
+    /// calibrates once and shares the result across workers).
+    fn with_timing(inner: GoldenBackend, latency: Duration, per_frame: Duration) -> SimBackend {
+        SimBackend { inner, latency, per_frame }
+    }
+
+    /// Modeled (first-frame latency, steady-state per-frame interval).
+    pub fn timing(&self) -> (Duration, Duration) {
+        (self.latency, self.per_frame)
+    }
+}
+
+/// Run the process-network simulation once and convert cycles to wall
+/// time at the board clock.
+fn calibrate(arch_name: &str, board: &Board) -> Result<(Duration, Duration)> {
+    let arch = arch_by_name(arch_name).ok_or_else(|| anyhow!("unknown arch {arch_name}"))?;
+    let (act, w) = default_exps(&arch);
+    let g = build_optimized_graph(&arch, &act, &w);
+    let loads = loads_from_arch(&arch, 2);
+    let (_, cfg, _) = fit_to_board(&arch.name, &g, &loads, board, 2)?;
+    let mut net = build_network(&g, &cfg, &SimOptions { frames: 3, ..Default::default() })?;
+    let rep = net.run(3);
+    anyhow::ensure!(!rep.deadlocked, "simulated dataflow deadlocked during calibration");
+    let cyc = |c: u64| Duration::from_secs_f64(c as f64 / (board.clock_mhz * 1e6));
+    Ok((cyc(rep.latency_cycles), cyc(rep.ii_cycles)))
+}
+
+impl InferenceBackend for SimBackend {
+    fn arch(&self) -> &str {
+        self.inner.arch()
+    }
+
+    fn buckets(&self) -> &[usize] {
+        self.inner.buckets()
+    }
+
+    fn infer_batch(&self, input: &QTensor) -> Result<QTensor> {
+        let t0 = Instant::now();
+        let out = self.inner.infer_batch(input)?;
+        let modeled =
+            self.latency + self.per_frame * input.shape.n.saturating_sub(1) as u32;
+        if let Some(pad) = modeled.checked_sub(t0.elapsed()) {
+            std::thread::sleep(pad);
+        }
+        Ok(out)
+    }
+}
+
+/// Factory for [`SimBackend`]s.
+///
+/// The deterministic timing calibration (ILP solve + board fit + 3-frame
+/// discrete-event simulation) runs once and is shared by every worker the
+/// factory serves.
+pub struct SimFactory {
+    arch: String,
+    seed: u64,
+    buckets: Vec<usize>,
+    board: &'static Board,
+    timing: std::sync::Mutex<Option<(Duration, Duration)>>,
+}
+
+impl SimFactory {
+    /// Synthetic weights on the KV260 timing model.
+    pub fn synthetic(arch: &str, seed: u64) -> SimFactory {
+        SimFactory {
+            arch: arch.to_string(),
+            seed,
+            buckets: GoldenBackend::DEFAULT_BUCKETS.to_vec(),
+            board: &KV260,
+            timing: std::sync::Mutex::new(None),
+        }
+    }
+
+    pub fn with_board(mut self, board: &'static Board) -> SimFactory {
+        self.board = board;
+        self
+    }
+
+    pub fn with_buckets(mut self, buckets: &[usize]) -> SimFactory {
+        self.buckets = buckets.to_vec();
+        self
+    }
+
+    fn timing(&self) -> Result<(Duration, Duration)> {
+        let mut cached = self.timing.lock().unwrap();
+        if let Some(t) = *cached {
+            return Ok(t);
+        }
+        let t = calibrate(&self.arch, self.board)?;
+        *cached = Some(t);
+        Ok(t)
+    }
+}
+
+impl BackendFactory for SimFactory {
+    fn arch(&self) -> &str {
+        &self.arch
+    }
+
+    fn create(&self) -> Result<Box<dyn InferenceBackend>> {
+        let (latency, per_frame) = self.timing()?;
+        let inner = GoldenBackend::synthetic(&self.arch, self.seed, &self.buckets)?;
+        Ok(Box::new(SimBackend::with_timing(inner, latency, per_frame)))
+    }
+}
+
+// --------------------------------------------------------------- pjrt
+
+/// Factory for [`PjrtBackend`](super::PjrtBackend)s: each worker loads
+/// and compiles the arch's HLO variants on its own PJRT client, inside
+/// its own thread (the executables are not `Send`).
+pub struct PjrtFactory {
+    dir: PathBuf,
+    arch: String,
+}
+
+impl PjrtFactory {
+    pub fn new(dir: PathBuf, arch: &str) -> PjrtFactory {
+        PjrtFactory { dir, arch: arch.to_string() }
+    }
+}
+
+impl BackendFactory for PjrtFactory {
+    fn arch(&self) -> &str {
+        &self.arch
+    }
+
+    fn create(&self) -> Result<Box<dyn InferenceBackend>> {
+        Ok(Box::new(super::PjrtBackend::load(&self.dir, &self.arch)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth_batch, TEST_SEED};
+
+    #[test]
+    fn golden_backend_matches_direct_golden_run() {
+        let backend = GoldenBackend::synthetic("resnet8", 7, &[1, 2, 4]).unwrap();
+        let (input, _) = synth_batch(0, 2, TEST_SEED);
+        let via_backend = backend.infer_batch(&input).unwrap();
+        let arch = arch_by_name("resnet8").unwrap();
+        let weights = synthetic_weights(&arch, 7);
+        let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let direct = golden::run(&g, &weights, &input).unwrap();
+        assert_eq!(via_backend.data, direct.data);
+    }
+
+    #[test]
+    fn infer_tiled_covers_any_batch_size() {
+        let backend = GoldenBackend::synthetic("resnet8", 7, &[1, 2, 4]).unwrap();
+        let (input, _) = synth_batch(0, 5, TEST_SEED);
+        let tiled = infer_tiled(&backend, &input).unwrap();
+        assert_eq!(tiled.shape.n, 5);
+        // Tiling (with zero-padded tails) must not change any frame.
+        let whole = backend.infer_batch(&input).unwrap();
+        assert_eq!(tiled.data, whole.data);
+    }
+
+    #[test]
+    fn factories_report_their_arch() {
+        assert_eq!(GoldenFactory::synthetic("resnet8", 1).arch(), "resnet8");
+        assert_eq!(SimFactory::synthetic("resnet20", 1).arch(), "resnet20");
+        assert_eq!(PjrtFactory::new(PathBuf::from("/tmp"), "resnet8").arch(), "resnet8");
+    }
+}

@@ -8,6 +8,7 @@ use anyhow::{anyhow, Result};
 use crate::quant::{QTensor, Shape4};
 
 use super::artifacts::{Artifacts, ModelVariant};
+use super::backend::{infer_tiled, InferenceBackend};
 
 /// A compiled model variant ready to execute.
 pub struct LoadedModel {
@@ -45,6 +46,19 @@ impl Engine {
     /// Load and compile every variant in the artifacts directory.
     pub fn load(dir: &Path) -> Result<Engine> {
         let artifacts = Artifacts::load(dir)?;
+        Self::from_artifacts(&artifacts)
+    }
+
+    /// Load and compile only the variants of one architecture — what a
+    /// per-arch worker pool wants (avoids compiling other archs' HLO).
+    pub fn load_arch(dir: &Path, arch: &str) -> Result<Engine> {
+        let mut artifacts = Artifacts::load(dir)?;
+        artifacts.models.retain(|m| m.arch == arch);
+        anyhow::ensure!(
+            !artifacts.models.is_empty(),
+            "no compiled variants for {arch} in {}",
+            dir.display()
+        );
         Self::from_artifacts(&artifacts)
     }
 
@@ -88,41 +102,86 @@ impl Engine {
         v
     }
 
-    /// Run a batch of any size by tiling over the largest fitting buckets
-    /// (padding the tail with zero frames).
+    /// Run a batch of any size by tiling over the compiled buckets.
+    ///
+    /// The decomposition is [`Batcher::plan`](crate::coordinator::Batcher)
+    /// via [`infer_tiled`] — the same policy the serving path uses, so the
+    /// offline and online tilings cannot drift.
     pub fn infer_any(&self, arch: &str, input: &QTensor) -> Result<QTensor> {
         let buckets = self.buckets(arch);
         anyhow::ensure!(!buckets.is_empty(), "no variants for {arch}");
-        let n = input.shape.n;
-        let frame = input.shape.h * input.shape.w * input.shape.c;
-        let mut out_data = Vec::with_capacity(n * 10);
-        let mut done = 0usize;
-        let mut classes = 10;
-        while done < n {
-            let remaining = n - done;
-            // Largest bucket <= remaining, else smallest bucket (pad).
-            let bucket = buckets
-                .iter()
-                .rev()
-                .find(|&&b| b <= remaining)
-                .or_else(|| buckets.first())
-                .copied()
-                .unwrap();
-            let take = bucket.min(remaining);
-            let mut chunk = vec![0i32; bucket * frame];
-            chunk[..take * frame]
-                .copy_from_slice(&input.data[done * frame..(done + take) * frame]);
-            let q = QTensor::from_vec(
-                Shape4::new(bucket, input.shape.h, input.shape.w, input.shape.c),
-                input.exp,
-                chunk,
-            );
-            let name = format!("{arch}_b{bucket}");
-            let logits = self.model(&name)?.infer(&q)?;
-            classes = logits.shape.c;
-            out_data.extend_from_slice(&logits.data[..take * classes]);
-            done += take;
+        let view = ArchView { engine: self, arch, buckets };
+        infer_tiled(&view, input)
+    }
+
+    /// Execute one bucket-sized batch for `arch` (the compiled executable
+    /// `{arch}_b{N}` must exist).
+    fn infer_bucket(&self, arch: &str, input: &QTensor) -> Result<QTensor> {
+        self.model(&format!("{arch}_b{}", input.shape.n))?.infer(input)
+    }
+}
+
+/// Borrowed single-arch view of an [`Engine`], used to route `infer_any`
+/// through the backend-generic tiling helper.
+struct ArchView<'a> {
+    engine: &'a Engine,
+    arch: &'a str,
+    buckets: Vec<usize>,
+}
+
+impl InferenceBackend for ArchView<'_> {
+    fn arch(&self) -> &str {
+        self.arch
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn infer_batch(&self, input: &QTensor) -> Result<QTensor> {
+        self.engine.infer_bucket(self.arch, input)
+    }
+}
+
+/// The PJRT implementation of [`InferenceBackend`]: one architecture's
+/// compiled batch-bucket executables on a per-thread PJRT client.
+///
+/// Construct through [`PjrtFactory`](super::PjrtFactory) inside the
+/// executor thread — the underlying executables are not `Send`.
+pub struct PjrtBackend {
+    engine: Engine,
+    arch: String,
+    buckets: Vec<usize>,
+}
+
+impl PjrtBackend {
+    /// Load and compile the arch's variants from the artifacts directory.
+    pub fn load(dir: &Path, arch: &str) -> Result<PjrtBackend> {
+        let engine = Engine::load_arch(dir, arch)?;
+        let buckets = engine.buckets(arch);
+        Ok(PjrtBackend { engine, arch: arch.to_string(), buckets })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn arch(&self) -> &str {
+        &self.arch
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn infer_batch(&self, input: &QTensor) -> Result<QTensor> {
+        if self.buckets.contains(&input.shape.n) {
+            self.engine.infer_bucket(&self.arch, input)
+        } else {
+            // Off-bucket batch: tile it (keeps the trait total).
+            self.engine.infer_any(&self.arch, input)
         }
-        Ok(QTensor::from_vec(Shape4::new(n, 1, 1, classes), 0, out_data))
     }
 }

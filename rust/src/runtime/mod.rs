@@ -1,13 +1,25 @@
-//! PJRT runtime: load the AOT artifacts and execute them.
+//! Execution runtime: the backend-agnostic inference API and its
+//! substrates.
 //!
-//! Python runs once at build time (`make artifacts`); this module is the
-//! only consumer of its outputs.  HLO *text* is the interchange format —
-//! the crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos
-//! (64-bit instruction ids), while the text parser reassigns ids (see
-//! /opt/xla-example/README.md).
+//! [`backend`] defines the [`InferenceBackend`] / [`BackendFactory`]
+//! traits that the coordinator serves through; this module also hosts the
+//! PJRT substrate ([`Engine`] / [`PjrtBackend`]), which loads the AOT
+//! artifacts and executes them.
+//!
+//! Python runs once at build time (`make artifacts`); the PJRT engine is
+//! the only consumer of its outputs.  HLO *text* is the interchange
+//! format — the crate's xla_extension 0.5.1 rejects jax>=0.5 serialized
+//! protos (64-bit instruction ids), while the text parser reassigns ids
+//! (see /opt/xla-example/README.md).  The golden and sim backends have no
+//! artifact dependency at all.
 
 mod artifacts;
+pub mod backend;
 mod engine;
 
 pub use artifacts::{Artifacts, ModelVariant, ProbeSet};
-pub use engine::{Engine, LoadedModel};
+pub use backend::{
+    infer_tiled, BackendFactory, GoldenBackend, GoldenFactory, InferenceBackend, PjrtFactory,
+    SimBackend, SimFactory,
+};
+pub use engine::{Engine, LoadedModel, PjrtBackend};

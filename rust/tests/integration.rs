@@ -1,8 +1,14 @@
 //! Cross-module integration tests that do not require built artifacts:
 //! the full design flow (graph -> passes -> ILP -> config -> resources ->
-//! simulation -> codegen) for every (model, board) the paper evaluates.
+//! simulation -> codegen) for every (model, board) the paper evaluates,
+//! and the serving path (router + batcher + metrics) on the artifact-free
+//! golden backend.
 
+use std::sync::Arc;
+
+use resnet_hls::coordinator::{BatcherConfig, Router, RouterConfig};
 use resnet_hls::graph::{infer_shapes, Edge};
+use resnet_hls::runtime::{BackendFactory, GoldenBackend, GoldenFactory, InferenceBackend};
 use resnet_hls::hls::boards::{BOARDS, KV260, ULTRA96};
 use resnet_hls::hls::codegen::emit_top;
 use resnet_hls::hls::config::configure;
@@ -217,4 +223,128 @@ fn deadlock_experiment_matrix() {
     assert!(!run(true, 1.0), "naive @ Eq.21 must run");
     assert!(run(true, 0.45), "naive @ half sizing must deadlock");
     assert!(!run(false, 1.0), "optimized @ Eq.22 must run");
+}
+
+// ------------------------------------------------- serving path (golden)
+
+/// Golden single-frame predictions for the first `frames` synthetic test
+/// frames of `arch_name` under synthetic weights `seed`.
+fn golden_classes(arch_name: &str, seed: u64, frames: usize) -> Vec<usize> {
+    let arch = arch_by_name(arch_name).unwrap();
+    let weights = synthetic_weights(&arch, seed);
+    let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let (input, _) = resnet_hls::data::synth_batch(0, frames, resnet_hls::data::TEST_SEED);
+    let logits = golden::run(&g, &weights, &input).unwrap();
+    golden::argmax_classes(&logits)
+}
+
+#[test]
+fn router_serves_mixed_arch_requests_on_golden_backend() {
+    // The acceptance scenario: no artifacts, no PJRT — a multi-arch
+    // router on golden backends, mixed-arch submissions, work-stealing
+    // workers, graceful drain, and classes bit-equal to sim::golden.
+    let seed = 7u64;
+    let counts = [("resnet8", 5usize), ("resnet20", 3usize)];
+    let factories: Vec<Arc<dyn BackendFactory>> = counts
+        .iter()
+        .map(|(a, _)| {
+            Arc::new(GoldenFactory::synthetic(a, seed).with_buckets(&[1, 2, 4]))
+                as Arc<dyn BackendFactory>
+        })
+        .collect();
+    let router = Router::start(
+        factories,
+        RouterConfig { workers_per_arch: 2, batcher: BatcherConfig::default() },
+    )
+    .unwrap();
+    assert_eq!(router.archs(), vec!["resnet20".to_string(), "resnet8".to_string()]);
+
+    let max_frames = counts.iter().map(|&(_, n)| n).max().unwrap();
+    let (input, _) = resnet_hls::data::synth_batch(0, max_frames, resnet_hls::data::TEST_SEED);
+    let frame = resnet_hls::data::IMG_ELEMS;
+
+    // Interleave submissions across the two architectures.
+    let mut pending = Vec::new();
+    for i in 0..max_frames {
+        for &(arch, n) in &counts {
+            if i < n {
+                let pixels = input.data[i * frame..(i + 1) * frame].to_vec();
+                pending.push((arch, i, router.submit(arch, pixels).unwrap()));
+            }
+        }
+    }
+
+    // Graceful shutdown *before* receiving: every accepted request must
+    // still get a real response (drain semantics).
+    let snap = router.shutdown();
+
+    let expected: Vec<(&str, Vec<usize>)> = counts
+        .iter()
+        .map(|&(a, n)| (a, golden_classes(a, seed, n)))
+        .collect();
+    for (arch, i, rx) in pending {
+        let expect = expected.iter().find(|(a, _)| *a == arch).unwrap().1[i];
+        let resp = rx.recv().expect("response channel alive").expect("inference ok");
+        assert_eq!(resp.class, expect, "{arch} frame {i}");
+        assert_eq!(resp.logits.len(), 10);
+    }
+
+    let total: usize = counts.iter().map(|&(_, n)| n).sum();
+    assert_eq!(snap.total.requests, total as u64);
+    assert_eq!(snap.total.frames, total as u64);
+    assert_eq!(snap.total.errors, 0);
+    assert!(snap.total.padding_efficiency > 0.0 && snap.total.padding_efficiency <= 1.0);
+    let r8 = &snap.per_arch["resnet8"];
+    let r20 = &snap.per_arch["resnet20"];
+    assert_eq!(r8.frames + r20.frames, snap.total.frames);
+}
+
+#[test]
+fn router_rejects_bad_submissions() {
+    let factory: Arc<dyn BackendFactory> =
+        Arc::new(GoldenFactory::synthetic("resnet8", 3).with_buckets(&[1, 2]));
+    let router = Router::start(vec![factory], RouterConfig::default()).unwrap();
+    assert!(router.submit("resnet99", vec![0; resnet_hls::data::IMG_ELEMS]).is_err());
+    assert!(router.submit("resnet8", vec![0; 3]).is_err(), "wrong frame size");
+}
+
+#[test]
+fn router_drop_never_silently_discards_requests() {
+    let factory: Arc<dyn BackendFactory> =
+        Arc::new(GoldenFactory::synthetic("resnet8", 3).with_buckets(&[1, 2]));
+    let router = Router::start(vec![factory], RouterConfig::default()).unwrap();
+    let frame = resnet_hls::data::IMG_ELEMS;
+    let (input, _) = resnet_hls::data::synth_batch(0, 8, resnet_hls::data::TEST_SEED);
+    let pending: Vec<_> = (0..8)
+        .map(|i| router.submit("resnet8", input.data[i * frame..(i + 1) * frame].to_vec()).unwrap())
+        .collect();
+    // Abort path: dropping the handle must never silently discard a
+    // request — each channel yields either a real response or an
+    // explicit "server stopped" error.
+    drop(router);
+    for rx in pending {
+        let outcome = rx.recv().expect("no silently dropped channels");
+        if let Err(e) = outcome {
+            assert!(e.to_string().contains("server stopped"), "unexpected error: {e}");
+        }
+    }
+}
+
+#[test]
+fn golden_backend_tiling_is_frame_exact() {
+    // infer_tiled pads tails with zero frames; no real frame may change.
+    let backend = GoldenBackend::synthetic("resnet8", 11, &[1, 2, 4]).unwrap();
+    let (input, _) = resnet_hls::data::synth_batch(0, 5, resnet_hls::data::TEST_SEED);
+    let tiled = resnet_hls::runtime::infer_tiled(&backend, &input).unwrap();
+    let whole = backend.infer_batch(&input).unwrap();
+    assert_eq!(tiled.data, whole.data);
+    assert_eq!(backend.buckets(), &[1, 2, 4]);
+}
+
+#[test]
+fn router_start_fails_cleanly_on_unknown_arch() {
+    let factory: Arc<dyn BackendFactory> = Arc::new(GoldenFactory::synthetic("resnet99", 3));
+    // Backend construction happens in the worker; the error must still
+    // surface from start(), not on the first request.
+    assert!(Router::start(vec![factory], RouterConfig::default()).is_err());
 }

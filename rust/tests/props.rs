@@ -263,6 +263,49 @@ fn batcher_covers_all_queue_sizes_with_any_bucket_set() {
     });
 }
 
+#[test]
+fn batcher_plan_never_worse_than_pure_greedy() {
+    // `plan()` may pad a remainder into a larger covering bucket, but only
+    // when that is cheaper under the dispatch-overhead cost model — so its
+    // total cost must never exceed the pure greedy largest-fit
+    // decomposition (the policy `Engine::infer_any` used before the two
+    // were unified).
+    forall("plan cost <= greedy cost", 300, |rng| {
+        let mut buckets = vec![1usize];
+        let mut b = 1usize;
+        for _ in 0..rng.below(4) {
+            b *= [2usize, 3, 4, 8][rng.below(4) as usize];
+            buckets.push(b);
+        }
+        let batcher =
+            Batcher::new(BatcherConfig { buckets, max_bucket: usize::MAX, ..Default::default() });
+        let q = 1 + rng.below(400) as usize;
+        let plans = batcher.plan(q);
+        assert_eq!(plans.iter().map(|p| p.take).sum::<usize>(), q);
+
+        let cfg = batcher.config();
+        let mut greedy_cost = 0usize;
+        let mut left = q;
+        while left > 0 {
+            let b = cfg
+                .buckets
+                .iter()
+                .rev()
+                .find(|&&b| b <= left)
+                .copied()
+                .unwrap_or(cfg.buckets[0]);
+            greedy_cost += b + cfg.dispatch_overhead;
+            left -= b.min(left);
+        }
+        let cost = batcher.plan_cost(&plans);
+        assert!(
+            cost <= greedy_cost,
+            "plan cost {cost} > greedy {greedy_cost} for q={q} buckets={:?}",
+            cfg.buckets
+        );
+    });
+}
+
 // ------------------------------------------------------------------ json
 
 #[test]
