@@ -1,0 +1,37 @@
+//! Bench: the streaming line-buffer executor vs the golden model — does
+//! cross-layer pipeline parallelism pay for the FIFO handshakes?
+//!
+//! Artifact-free.  Run: `cargo bench --bench stream_backend`
+
+use resnet_hls::data::{synth_batch, TEST_SEED};
+use resnet_hls::runtime::{GoldenBackend, InferenceBackend, StreamBackend};
+use resnet_hls::util::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    for (arch, frames) in [("resnet8", 8usize), ("resnet20", 2)] {
+        let golden = GoldenBackend::synthetic(arch, 7, &[frames]).unwrap();
+        let stream = StreamBackend::synthetic(arch, 7, &[frames]).unwrap();
+        let (input, _) = synth_batch(0, frames, TEST_SEED);
+
+        // Correctness gate before timing anything.
+        let g = golden.infer_batch(&input).unwrap();
+        let s = stream.infer_batch(&input).unwrap();
+        assert_eq!(g.data, s.data, "{arch}: stream backend must match golden");
+
+        b.bench_items(&format!("golden {arch} b{frames}"), frames as f64, &mut || {
+            golden.infer_batch(&input).unwrap();
+        });
+        b.bench_items(&format!("stream {arch} b{frames}"), frames as f64, &mut || {
+            stream.infer_batch(&input).unwrap();
+        });
+
+        let stats = stream.last_stats().unwrap();
+        println!(
+            "{arch}: peak streamed buffering {} elems vs whole-tensor {} ({:.4})",
+            stats.peak_buffered_elems(),
+            stats.whole_tensor_elems,
+            stats.buffered_fraction()
+        );
+    }
+}

@@ -53,6 +53,15 @@ pub fn infer_shapes(g: &Graph) -> Result<BTreeMap<Edge, TensorShape>, ShapeError
                         "{}: cin {} but input has {} channels", n.name, a.cin, s.c
                     )));
                 }
+                if a.stride == 0 {
+                    return Err(ShapeError(format!("{}: conv stride must be >= 1", n.name)));
+                }
+                if a.k == 0 || s.h + 2 * a.pad < a.k || s.w + 2 * a.pad < a.k {
+                    return Err(ShapeError(format!(
+                        "{}: kernel {} exceeds padded input {}x{} (pad {})",
+                        n.name, a.k, s.h, s.w, a.pad
+                    )));
+                }
                 let oh = (s.h + 2 * a.pad - a.k) / a.stride + 1;
                 let ow = (s.w + 2 * a.pad - a.k) / a.stride + 1;
                 // Raw-output convs stream int32 accumulators at the
@@ -67,6 +76,17 @@ pub fn infer_shapes(g: &Graph) -> Result<BTreeMap<Edge, TensorShape>, ShapeError
                     shapes.insert(Edge::new(n.id, 1), s);
                 } else if let Some(ds) = &a.merged_downsample {
                     // Port 1 carries the merged downsample conv's output.
+                    if ds.stride == 0 {
+                        return Err(ShapeError(format!(
+                            "{}: downsample stride must be >= 1", ds.name
+                        )));
+                    }
+                    if ds.k == 0 || s.h + 2 * ds.pad < ds.k || s.w + 2 * ds.pad < ds.k {
+                        return Err(ShapeError(format!(
+                            "{}: downsample kernel {} exceeds padded input {}x{}",
+                            ds.name, ds.k, s.h, s.w
+                        )));
+                    }
                     let dh = (s.h + 2 * ds.pad - ds.k) / ds.stride + 1;
                     let dw = (s.w + 2 * ds.pad - ds.k) / ds.stride + 1;
                     shapes.insert(
@@ -98,6 +118,14 @@ pub fn infer_shapes(g: &Graph) -> Result<BTreeMap<Edge, TensorShape>, ShapeError
             }
             Op::MaxPool { k, stride } => {
                 let s = input_shape(0)?;
+                if *stride == 0 {
+                    return Err(ShapeError(format!("{}: pool stride must be >= 1", n.name)));
+                }
+                if *k == 0 || *k > s.h || *k > s.w {
+                    return Err(ShapeError(format!(
+                        "{}: pool window {} exceeds input {}x{}", n.name, k, s.h, s.w
+                    )));
+                }
                 shapes.insert(
                     Edge::new(n.id, 0),
                     TensorShape { h: (s.h - k) / stride + 1, w: (s.w - k) / stride + 1, ..s },
@@ -152,6 +180,32 @@ mod tests {
         let shapes = infer_shapes(&g).unwrap();
         let s = shapes[&Edge::new(c, 0)];
         assert_eq!((s.h, s.w, s.c), (16, 16, 16));
+    }
+
+    #[test]
+    fn oversized_kernel_and_zero_stride_rejected() {
+        // Kernel beyond the padded input: shape error, not usize underflow.
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 3, w: 3, c: 1, exp: -7 }, &[]);
+        g.add_simple(
+            "c",
+            Op::Conv(ConvAttrs {
+                cin: 1, cout: 1, k: 5, stride: 1, pad: 0, relu: false,
+                w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false, raw_output: false,
+            }),
+            &[Edge::new(i, 0)],
+        );
+        assert!(infer_shapes(&g).is_err());
+
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 4, w: 4, c: 1, exp: -7 }, &[]);
+        g.add_simple("mp", Op::MaxPool { k: 5, stride: 1 }, &[Edge::new(i, 0)]);
+        assert!(infer_shapes(&g).is_err());
+
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 4, w: 4, c: 1, exp: -7 }, &[]);
+        g.add_simple("mp", Op::MaxPool { k: 2, stride: 0 }, &[Edge::new(i, 0)]);
+        assert!(infer_shapes(&g).is_err());
     }
 
     #[test]

@@ -15,10 +15,12 @@
 //!     configuration/codegen/resource model (`hls`);
 //!   - *execution*: the backend-agnostic inference API
 //!     (`runtime::backend` — the `InferenceBackend`/`BackendFactory`
-//!     traits) with three substrates: the PJRT engine (`runtime`, real
+//!     traits) with four substrates: the PJRT engine (`runtime`, real
 //!     AOT-compiled numerics), the integer golden model (`sim::golden`,
-//!     artifact-free), and the cycle-approximate dataflow simulator
-//!     (`sim::engine`, realistic accelerator timing);
+//!     artifact-free), the cycle-approximate dataflow simulator
+//!     (`sim::engine`, realistic accelerator timing), and the pipelined
+//!     streaming executor (`stream`, golden numerics executed as the
+//!     paper's line-buffer/FIFO dataflow with measured Eq. 22 buffering);
 //!   - *serving*: the multi-arch `coordinator::Router` (per-arch worker
 //!     pools, dynamic batcher, metrics) — backend-generic, so the whole
 //!     request path is testable without Python, PJRT or artifacts.
@@ -40,6 +42,7 @@ pub mod passes;
 pub mod quant;
 pub mod runtime;
 pub mod sim;
+pub mod stream;
 pub mod util;
 
 /// Repository-relative path helpers used by tests, benches and examples.

@@ -8,9 +8,10 @@
 //!   eval-tables                  Table 3 + Table 4 (modeled vs paper)
 //!   golden-eval [--model M] [--n N]               golden accuracy on synthetic test set
 //!   probe-check                  cross-language bit-equality (golden vs oracle vs PJRT)
-//!   serve      [--model M] [--frames N] [--backend pjrt|golden|sim] [--workers N]
+//!   serve      [--model M] [--frames N] [--backend pjrt|golden|sim|stream] [--workers N]
 //!                                route synthetic frames through the inference router
-//!   buffers    [--model M]       Eq. 21/22/23 per residual block
+//!   buffers    [--model M]       Eq. 21/22/23 per residual block, plus the
+//!                                streaming executor's measured peak occupancy
 
 use anyhow::Result;
 
@@ -20,10 +21,12 @@ use resnet_hls::eval::figures::skip_buffering_series;
 use resnet_hls::eval::tables::{print_table3, print_table4, table3, table4};
 use resnet_hls::hls::{board_by_name, codegen, config::configure, resources::fit_to_board, ULTRA96};
 use resnet_hls::ilp::loads_from_arch;
-use resnet_hls::models::{arch_by_name, build_optimized_graph, default_exps, ModelWeights};
+use resnet_hls::models::{
+    arch_by_name, build_optimized_graph, default_exps, synthetic_weights, ModelWeights,
+};
 use resnet_hls::paths::artifacts_dir;
 use resnet_hls::runtime::{
-    Artifacts, BackendFactory, Engine, GoldenFactory, PjrtFactory, SimFactory,
+    Artifacts, BackendFactory, Engine, GoldenFactory, PjrtFactory, SimFactory, StreamFactory,
 };
 use resnet_hls::sim::{build_network, golden, SimOptions};
 use resnet_hls::util::cli::Args;
@@ -285,7 +288,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "pjrt" => std::sync::Arc::new(PjrtFactory::new(dir.clone(), &arch.name)),
         "golden" => std::sync::Arc::new(GoldenFactory::auto(dir.clone(), &arch.name, 7)),
         "sim" => std::sync::Arc::new(SimFactory::synthetic(&arch.name, 7)),
-        other => anyhow::bail!("unknown backend {other} (expected pjrt|golden|sim)"),
+        "stream" => std::sync::Arc::new(StreamFactory::auto(dir.clone(), &arch.name, 7)),
+        other => anyhow::bail!("unknown backend {other} (expected pjrt|golden|sim|stream)"),
     };
     let router = Router::start(
         vec![factory],
@@ -325,5 +329,25 @@ fn cmd_buffers(args: &Args) -> Result<()> {
     for (name, naive, opt, r) in skip_buffering_series(&arch) {
         println!("{name:<8} {naive:>10} {opt:>10} {r:>8.3}");
     }
+
+    // Measured: run the streaming executor on one synthetic frame and
+    // report the actual peak occupancy of every Eq. 22-sized skip FIFO,
+    // plus the total buffering against whole-tensor intermediates.
+    let weights = synthetic_weights(&arch, 7);
+    let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let (input, _) = synth_batch(0, 1, TEST_SEED);
+    let (_, stats) =
+        resnet_hls::stream::run_streaming(&g, &weights, &input, &Default::default())?;
+    println!("\n== streaming executor, measured (1 frame) ==");
+    println!("{:<16} {:>10} {:>10}", "skip fifo", "capacity", "peak");
+    for b in stats.of_kind(resnet_hls::hls::streams::StreamKind::Skip) {
+        println!("{:<16} {:>10} {:>10}", b.name, b.capacity, b.peak);
+    }
+    println!(
+        "peak streamed buffering {} elems vs whole-tensor intermediates {} ({:.4} of naive)",
+        stats.peak_buffered_elems(),
+        stats.whole_tensor_elems,
+        stats.buffered_fraction()
+    );
     Ok(())
 }

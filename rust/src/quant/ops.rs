@@ -16,10 +16,35 @@ pub fn round_shift(acc: i32, shift: i32) -> i32 {
     }
 }
 
+/// [`round_shift`] widened to `i64` for paths that align two operands
+/// before summing (the residual Add at the finer exponent): the aligned
+/// sum of a raw int32 accumulator and a shifted int8 stream can exceed
+/// `i32`, so the shift-and-round must happen at 64 bits.  Shift amounts
+/// are clamped to the type width instead of panicking — a malformed
+/// exponent table yields a clipped value, not a crash.
+#[inline]
+pub fn round_shift_i64(acc: i64, shift: i32) -> i64 {
+    if shift <= 0 {
+        acc.wrapping_shl((-shift).min(63) as u32)
+    } else if shift >= 64 {
+        // floor((acc + 2^(s-1)) / 2^s) -> 0 for any i64 once s >= 64.
+        0
+    } else {
+        let half = 1i64 << (shift - 1);
+        acc.wrapping_add(half) >> shift
+    }
+}
+
 /// Clip to the signed int8 grid (paper Eq. 1's clip with Eqs. 2–3 bounds).
 #[inline]
 pub fn clip_i8(x: i32) -> i32 {
     x.clamp(INT8_MIN, INT8_MAX)
+}
+
+/// [`clip_i8`] for a 64-bit aligned value (see [`round_shift_i64`]).
+#[inline]
+pub fn clip_i8_wide(x: i64) -> i32 {
+    x.clamp(INT8_MIN as i64, INT8_MAX as i64) as i32
 }
 
 /// Full requantization of an int32 accumulator at `acc_exp` down to an int8
@@ -84,6 +109,21 @@ mod tests {
             let expect = ((x as i64 + half).div_euclid(1i64 << s)) as i32;
             assert_eq!(round_shift(x, s), expect, "x={x} s={s}");
         });
+    }
+
+    #[test]
+    fn round_shift_i64_agrees_with_i32_in_range() {
+        forall("round_shift_i64 == round_shift on i32 range", 2000, |rng| {
+            let x = rng.range_i64(-(1 << 30), 1 << 30) as i32;
+            let s = rng.range_i64(-3, 20) as i32;
+            assert_eq!(round_shift_i64(x as i64, s), round_shift(x, s) as i64, "x={x} s={s}");
+        });
+        // Beyond-i32 alignment sums round without wrapping.
+        assert_eq!(round_shift_i64(i32::MAX as i64 + 256, 8), (1 << 23) + 1);
+        // Degenerate shift amounts clamp instead of panicking.
+        assert_eq!(round_shift_i64(1 << 40, 64), 0);
+        assert_eq!(clip_i8_wide(i64::MAX), 127);
+        assert_eq!(clip_i8_wide(i64::MIN), -128);
     }
 
     #[test]

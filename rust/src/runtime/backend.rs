@@ -4,7 +4,7 @@
 //! never cares *what* executes a batch, only that frames go in and logits
 //! come out.  This module makes that boundary explicit: everything above
 //! it (the coordinator's router, batcher and metrics) talks to a
-//! [`InferenceBackend`] and can therefore run against any of three
+//! [`InferenceBackend`] and can therefore run against any of four
 //! substrates:
 //!
 //! * [`PjrtBackend`](super::PjrtBackend) — the AOT-compiled HLO executed
@@ -12,7 +12,10 @@
 //! * [`GoldenBackend`] — the in-process integer golden model (exact
 //!   int8/int32 numerics, artifact-free);
 //! * [`SimBackend`] — golden numerics paced by the cycle-approximate
-//!   dataflow simulator (realistic accelerator timing for load tests).
+//!   dataflow simulator (realistic accelerator timing for load tests);
+//! * [`StreamBackend`] — the same exact numerics executed as the paper's
+//!   streaming line-buffer dataflow ([`crate::stream`]): one pipelined
+//!   task per layer, Eq. 22-sized skip FIFOs, measured peak buffering.
 //!
 //! Backends are constructed through a [`BackendFactory`] *inside* the
 //! executor thread that will use them — PJRT executables are not `Send`,
@@ -33,6 +36,7 @@ use crate::models::{
 };
 use crate::quant::{QTensor, Shape4};
 use crate::sim::{build_network, golden, SimOptions};
+use crate::stream::{run_streaming, StreamConfig, StreamStats};
 
 /// Something that can run inference batches for one architecture.
 ///
@@ -95,6 +99,33 @@ pub fn infer_tiled(backend: &dyn InferenceBackend, input: &QTensor) -> Result<QT
     Ok(QTensor::from_vec(Shape4::new(n, 1, 1, classes), 0, out_data))
 }
 
+// ------------------------------------------------- model construction
+
+/// Deterministic synthetic weights + the optimized graph for `arch_name`.
+fn model_parts_synthetic(arch_name: &str, seed: u64) -> Result<(Graph, ModelWeights)> {
+    let arch = arch_by_name(arch_name).ok_or_else(|| anyhow!("unknown arch {arch_name}"))?;
+    let weights = synthetic_weights(&arch, seed);
+    let graph = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    Ok((graph, weights))
+}
+
+/// Trained weights from the artifacts directory + the optimized graph
+/// (reads the weight blobs only — no HLO, no PJRT).
+fn model_parts_artifacts(dir: &Path, arch_name: &str) -> Result<(Graph, ModelWeights)> {
+    let arch = arch_by_name(arch_name).ok_or_else(|| anyhow!("unknown arch {arch_name}"))?;
+    let weights = ModelWeights::load(dir, arch_name)?;
+    let graph = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    Ok((graph, weights))
+}
+
+fn normalize_buckets(buckets: &[usize], what: &str) -> Result<Vec<usize>> {
+    let mut buckets = buckets.to_vec();
+    buckets.sort_unstable();
+    buckets.dedup();
+    anyhow::ensure!(!buckets.is_empty(), "{what} backend needs at least one bucket");
+    Ok(buckets)
+}
+
 // ------------------------------------------------------------- golden
 
 /// Artifact-free backend: the exact int8/int32 golden numerics from
@@ -117,20 +148,14 @@ impl GoldenBackend {
 
     /// Deterministic synthetic weights — runs anywhere, no artifacts.
     pub fn synthetic(arch_name: &str, seed: u64, buckets: &[usize]) -> Result<GoldenBackend> {
-        let arch =
-            arch_by_name(arch_name).ok_or_else(|| anyhow!("unknown arch {arch_name}"))?;
-        let weights = synthetic_weights(&arch, seed);
-        let graph = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let (graph, weights) = model_parts_synthetic(arch_name, seed)?;
         Self::from_parts(arch_name, graph, weights, buckets)
     }
 
     /// Real trained weights from the artifacts directory (reads the
     /// weight blobs only — no HLO, no PJRT).
     pub fn from_artifacts(dir: &Path, arch_name: &str, buckets: &[usize]) -> Result<GoldenBackend> {
-        let arch =
-            arch_by_name(arch_name).ok_or_else(|| anyhow!("unknown arch {arch_name}"))?;
-        let weights = ModelWeights::load(dir, arch_name)?;
-        let graph = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let (graph, weights) = model_parts_artifacts(dir, arch_name)?;
         Self::from_parts(arch_name, graph, weights, buckets)
     }
 
@@ -140,10 +165,7 @@ impl GoldenBackend {
         weights: ModelWeights,
         buckets: &[usize],
     ) -> Result<GoldenBackend> {
-        let mut buckets = buckets.to_vec();
-        buckets.sort_unstable();
-        buckets.dedup();
-        anyhow::ensure!(!buckets.is_empty(), "golden backend needs at least one bucket");
+        let buckets = normalize_buckets(buckets, "golden")?;
         Ok(GoldenBackend { arch: arch.to_string(), graph, weights, buckets })
     }
 }
@@ -360,6 +382,149 @@ impl BackendFactory for SimFactory {
     }
 }
 
+// -------------------------------------------------------------- stream
+
+/// The streaming line-buffer backend: exact golden numerics executed as
+/// the paper's pipelined dataflow ([`crate::stream`]) — one task per
+/// layer stage on scoped threads, bounded FIFOs sized by
+/// [`hls::streams`](crate::hls::streams), the residual skip path flowing
+/// through an Eq. 22-sized FIFO into the fused accumulator init.
+///
+/// Bit-exact versus [`GoldenBackend`] (asserted by integration and
+/// property tests) while exploiting cross-layer pipeline parallelism;
+/// every batch records a [`StreamStats`] buffering report retrievable
+/// via [`StreamBackend::last_stats`].
+pub struct StreamBackend {
+    arch: String,
+    graph: Graph,
+    weights: ModelWeights,
+    buckets: Vec<usize>,
+    cfg: StreamConfig,
+    last_stats: std::sync::Mutex<Option<StreamStats>>,
+}
+
+impl StreamBackend {
+    /// Deterministic synthetic weights — runs anywhere, no artifacts.
+    pub fn synthetic(arch_name: &str, seed: u64, buckets: &[usize]) -> Result<StreamBackend> {
+        let (graph, weights) = model_parts_synthetic(arch_name, seed)?;
+        Self::from_parts(arch_name, graph, weights, buckets)
+    }
+
+    /// Real trained weights from the artifacts directory.
+    pub fn from_artifacts(dir: &Path, arch_name: &str, buckets: &[usize]) -> Result<StreamBackend> {
+        let (graph, weights) = model_parts_artifacts(dir, arch_name)?;
+        Self::from_parts(arch_name, graph, weights, buckets)
+    }
+
+    fn from_parts(
+        arch: &str,
+        graph: Graph,
+        weights: ModelWeights,
+        buckets: &[usize],
+    ) -> Result<StreamBackend> {
+        let buckets = normalize_buckets(buckets, "stream")?;
+        Ok(StreamBackend {
+            arch: arch.to_string(),
+            graph,
+            weights,
+            buckets,
+            cfg: StreamConfig::default(),
+            last_stats: std::sync::Mutex::new(None),
+        })
+    }
+
+    /// Override the executor policy (progress timeout, test depth hooks).
+    pub fn with_config(mut self, cfg: StreamConfig) -> StreamBackend {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Buffering report of the most recent `infer_batch`.
+    pub fn last_stats(&self) -> Option<StreamStats> {
+        self.last_stats.lock().unwrap().clone()
+    }
+}
+
+impl InferenceBackend for StreamBackend {
+    fn arch(&self) -> &str {
+        &self.arch
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn infer_batch(&self, input: &QTensor) -> Result<QTensor> {
+        let (out, stats) = run_streaming(&self.graph, &self.weights, input, &self.cfg)?;
+        *self.last_stats.lock().unwrap() = Some(stats);
+        Ok(out)
+    }
+}
+
+/// Factory for [`StreamBackend`]s (each router worker gets its own
+/// pipeline; the weights/graph are rebuilt per worker, like golden).
+pub struct StreamFactory {
+    arch: String,
+    seed: u64,
+    buckets: Vec<usize>,
+    artifacts: Option<PathBuf>,
+    cfg: StreamConfig,
+}
+
+impl StreamFactory {
+    /// Synthetic weights: runs anywhere.
+    pub fn synthetic(arch: &str, seed: u64) -> StreamFactory {
+        StreamFactory {
+            arch: arch.to_string(),
+            seed,
+            buckets: GoldenBackend::DEFAULT_BUCKETS.to_vec(),
+            artifacts: None,
+            cfg: StreamConfig::default(),
+        }
+    }
+
+    /// Trained weights from the artifacts directory.
+    pub fn from_artifacts(dir: PathBuf, arch: &str) -> StreamFactory {
+        StreamFactory { artifacts: Some(dir), ..Self::synthetic(arch, 0) }
+    }
+
+    /// Trained weights when the artifacts manifest is present, else the
+    /// `seed`-deterministic synthetic fallback (fully artifact-free).
+    pub fn auto(dir: PathBuf, arch: &str, seed: u64) -> StreamFactory {
+        if dir.join("manifest.json").exists() {
+            Self::from_artifacts(dir, arch)
+        } else {
+            Self::synthetic(arch, seed)
+        }
+    }
+
+    /// Override the advertised bucket set.
+    pub fn with_buckets(mut self, buckets: &[usize]) -> StreamFactory {
+        self.buckets = buckets.to_vec();
+        self
+    }
+
+    /// Override the executor policy for every created backend.
+    pub fn with_config(mut self, cfg: StreamConfig) -> StreamFactory {
+        self.cfg = cfg;
+        self
+    }
+}
+
+impl BackendFactory for StreamFactory {
+    fn arch(&self) -> &str {
+        &self.arch
+    }
+
+    fn create(&self) -> Result<Box<dyn InferenceBackend>> {
+        let b = match &self.artifacts {
+            Some(dir) => StreamBackend::from_artifacts(dir, &self.arch, &self.buckets)?,
+            None => StreamBackend::synthetic(&self.arch, self.seed, &self.buckets)?,
+        };
+        Ok(Box::new(b.with_config(self.cfg.clone())))
+    }
+}
+
 // --------------------------------------------------------------- pjrt
 
 /// Factory for [`PjrtBackend`](super::PjrtBackend)s: each worker loads
@@ -418,6 +583,21 @@ mod tests {
     fn factories_report_their_arch() {
         assert_eq!(GoldenFactory::synthetic("resnet8", 1).arch(), "resnet8");
         assert_eq!(SimFactory::synthetic("resnet20", 1).arch(), "resnet20");
+        assert_eq!(StreamFactory::synthetic("resnet8", 1).arch(), "resnet8");
         assert_eq!(PjrtFactory::new(PathBuf::from("/tmp"), "resnet8").arch(), "resnet8");
+    }
+
+    #[test]
+    fn stream_backend_matches_golden_and_reports_stats() {
+        let stream = StreamBackend::synthetic("resnet8", 7, &[1, 2, 4]).unwrap();
+        let golden = GoldenBackend::synthetic("resnet8", 7, &[1, 2, 4]).unwrap();
+        let (input, _) = synth_batch(0, 2, TEST_SEED);
+        assert!(stream.last_stats().is_none());
+        let a = stream.infer_batch(&input).unwrap();
+        let b = golden.infer_batch(&input).unwrap();
+        assert_eq!(a.data, b.data, "stream backend must be bit-exact vs golden");
+        let stats = stream.last_stats().expect("stats recorded per batch");
+        assert!(stats.peak_buffered_elems() > 0);
+        assert!(stats.peak_buffered_elems() < stats.whole_tensor_elems);
     }
 }

@@ -20,6 +20,6 @@ mod engine;
 pub use artifacts::{Artifacts, ModelVariant, ProbeSet};
 pub use backend::{
     infer_tiled, BackendFactory, GoldenBackend, GoldenFactory, InferenceBackend, PjrtFactory,
-    SimBackend, SimFactory,
+    SimBackend, SimFactory, StreamBackend, StreamFactory,
 };
 pub use engine::{Engine, LoadedModel, PjrtBackend};

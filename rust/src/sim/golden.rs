@@ -14,7 +14,9 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::graph::{infer_shapes, ConvAttrs, Edge, Graph, InputRole, Op};
 use crate::models::ModelWeights;
-use crate::quant::{align_skip, clip_i8, requantize, round_shift, QTensor, Shape4};
+use crate::quant::{
+    align_skip, clip_i8, clip_i8_wide, requantize, round_shift, round_shift_i64, QTensor, Shape4,
+};
 
 /// Run the graph on a batch of inputs. Returns the output-node tensor
 /// (int32 logits for the paper's nets).
@@ -84,17 +86,22 @@ pub fn run(g: &Graph, weights: &ModelWeights, input: &QTensor) -> Result<QTensor
                 // input exponents then requantized — the dataflow the
                 // pre-optimization graph implies.  With the builders'
                 // exponent conventions this is bit-identical to the fused
-                // accumulator-init form (asserted by tests).
+                // accumulator-init form (asserted by tests).  The aligned
+                // sum is widened to i64: a raw int32 accumulator stream
+                // plus a shifted operand can exceed i32 (debug panic,
+                // release wraparound) at large exponent gaps.
                 let a = get(0, &values)?;
                 let b = get(1, &values)?;
                 let lo = a.exp.min(b.exp);
+                let sa = ((a.exp - lo) as u32).min(63);
+                let sb = ((b.exp - lo) as u32).min(63);
                 let data: Vec<i32> = a
                     .data
                     .iter()
                     .zip(&b.data)
                     .map(|(&x, &y)| {
-                        let s = (x << (a.exp - lo)) + (y << (b.exp - lo));
-                        clip_i8(round_shift(s, out_exp - lo))
+                        let s = ((x as i64) << sa) + ((y as i64) << sb);
+                        clip_i8_wide(round_shift_i64(s, out_exp - lo))
                     })
                     .collect();
                 values.insert(
@@ -104,11 +111,11 @@ pub fn run(g: &Graph, weights: &ModelWeights, input: &QTensor) -> Result<QTensor
             }
             Op::MaxPool { k, stride } => {
                 let x = get(0, &values)?;
-                values.insert(Edge::new(n.id, 0), maxpool(&x, *k, *stride));
+                values.insert(Edge::new(n.id, 0), maxpool(&x, *k, *stride)?);
             }
             Op::GlobalAvgPool { out_exp } => {
                 let x = get(0, &values)?;
-                values.insert(Edge::new(n.id, 0), global_avgpool(&x, *out_exp));
+                values.insert(Edge::new(n.id, 0), global_avgpool(&x, *out_exp)?);
             }
             Op::Linear { cin, cout, .. } => {
                 let x = get(0, &values)?;
@@ -138,6 +145,15 @@ fn conv2d(
         bail!("conv cin mismatch: {} vs {}", cin, a.cin);
     }
     let (k, s, p, cout) = (a.k, a.stride, a.pad, a.cout);
+    // Output-extent guards: a kernel larger than the padded input (or a
+    // zero stride) must be a shape error, not a usize underflow/division
+    // panic — mirrors `graph::shapes` validation.
+    if s == 0 {
+        bail!("conv stride must be >= 1");
+    }
+    if k == 0 || h + 2 * p < k || wd + 2 * p < k {
+        bail!("conv kernel {k} exceeds padded input {h}x{wd} (pad {p})");
+    }
     let oh = (h + 2 * p - k) / s + 1;
     let ow = (wd + 2 * p - k) / s + 1;
     let out_shape = Shape4::new(n, oh, ow, cout);
@@ -207,8 +223,14 @@ fn conv2d(
     Ok(QTensor { shape: out_shape, exp, data: out })
 }
 
-fn maxpool(x: &QTensor, k: usize, stride: usize) -> QTensor {
+fn maxpool(x: &QTensor, k: usize, stride: usize) -> Result<QTensor> {
     let (n, h, w, c) = (x.shape.n, x.shape.h, x.shape.w, x.shape.c);
+    if stride == 0 {
+        bail!("maxpool stride must be >= 1");
+    }
+    if k == 0 || k > h || k > w {
+        bail!("maxpool window {k} exceeds input {h}x{w}");
+    }
     let oh = (h - k) / stride + 1;
     let ow = (w - k) / stride + 1;
     let shape = Shape4::new(n, oh, ow, c);
@@ -231,13 +253,18 @@ fn maxpool(x: &QTensor, k: usize, stride: usize) -> QTensor {
             }
         }
     }
-    QTensor { shape, exp: x.exp, data: out }
+    Ok(QTensor { shape, exp: x.exp, data: out })
 }
 
-fn global_avgpool(x: &QTensor, out_exp: i32) -> QTensor {
+fn global_avgpool(x: &QTensor, out_exp: i32) -> Result<QTensor> {
     let (n, h, w, c) = (x.shape.n, x.shape.h, x.shape.w, x.shape.c);
     let hw = h * w;
-    assert!(hw.is_power_of_two(), "global pool window must be 2^k");
+    // The hardware divides by shifting, so the window must be a power of
+    // two; a malformed graph gets a typed error instead of panicking the
+    // worker thread that runs the golden model.
+    if !hw.is_power_of_two() {
+        bail!("global pool window {h}x{w} must be 2^k for the shift divide");
+    }
     let log_hw = hw.trailing_zeros() as i32;
     let shape = Shape4::new(n, 1, 1, c);
     let mut out = vec![0i32; shape.elems()];
@@ -252,7 +279,7 @@ fn global_avgpool(x: &QTensor, out_exp: i32) -> QTensor {
             out[b * c + ch] = clip_i8(round_shift(acc, out_exp - x.exp + log_hw));
         }
     }
-    QTensor { shape, exp: out_exp, data: out }
+    Ok(QTensor { shape, exp: out_exp, data: out })
 }
 
 fn linear(x: &QTensor, cin: usize, cout: usize, w: &[i32], bias: &[i32]) -> Result<QTensor> {
@@ -317,6 +344,119 @@ mod tests {
         assert_eq!(a.data, b.data, "fused vs explicit-add must be bit-identical");
         assert_eq!(a.data, c.data, "pass pipeline must preserve numerics");
         assert_eq!(a.shape.c, 10);
+    }
+
+    use crate::models::{ConvWeights, WeightTensor};
+    use std::collections::BTreeMap;
+
+    fn empty_weights() -> ModelWeights {
+        ModelWeights {
+            arch: "test".into(),
+            layers: BTreeMap::new(),
+            act_exps: BTreeMap::new(),
+            w_exps: BTreeMap::new(),
+            source: "test".into(),
+        }
+    }
+
+    fn tensor(name: &str, kind: &str, shape: Vec<usize>, exp: i32, data: Vec<i32>) -> WeightTensor {
+        WeightTensor { name: name.into(), kind: kind.into(), shape, exp, data }
+    }
+
+    #[test]
+    fn add_at_overflow_boundary_is_widened_not_wrapped() {
+        // Regression: a raw_output accumulator near i32::MAX feeding an
+        // Add used to overflow the i32 aligned sum (panic in debug, wrap
+        // in release).  The i64 widening clips it to the int8 grid.
+        let mut g = Graph::new();
+        let i = g.add_simple("input", Op::Input { h: 1, w: 1, c: 1, exp: -7 }, &[]);
+        let c = g.add_simple(
+            "c",
+            Op::Conv(ConvAttrs {
+                cin: 1, cout: 1, k: 1, stride: 1, pad: 0, relu: false,
+                w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false,
+                raw_output: true,
+            }),
+            &[Edge::new(i, 0)],
+        );
+        let add = g.add_simple("add", Op::Add { out_exp: -5 }, &[Edge::new(c, 0), Edge::new(i, 0)]);
+        let pool = g.add_simple("pool", Op::GlobalAvgPool { out_exp: -5 }, &[Edge::new(add, 0)]);
+        g.add_simple("fc", Op::Linear { cin: 1, cout: 2, w_exp: -8 }, &[Edge::new(pool, 0)]);
+
+        let mut weights = empty_weights();
+        // Bias at the raw accumulator exponent (-15 = input -7 + w -8),
+        // pinned just below the i32 boundary; zero weight keeps the raw
+        // conv output exactly at the bias.
+        weights.layers.insert(
+            "c".into(),
+            ConvWeights {
+                w: tensor("c", "w", vec![1, 1, 1, 1], -8, vec![0]),
+                b: tensor("c", "b", vec![1], -15, vec![i32::MAX - 100]),
+            },
+        );
+        weights.layers.insert(
+            "fc".into(),
+            ConvWeights {
+                w: tensor("fc", "w", vec![1, 2], -8, vec![3, -4]),
+                b: tensor("fc", "b", vec![2], -13, vec![10, 20]),
+            },
+        );
+        let input = QTensor::from_vec(Shape4::new(1, 1, 1, 1), -7, vec![1]);
+        let out = run(&g, &weights, &input).unwrap();
+        // (i32::MAX - 100) + (1 << 8) exceeds i32::MAX; the widened sum
+        // round-shifts by 10 and clips to 127, so logits are exact.
+        assert_eq!(out.data, vec![10 + 127 * 3, 20 - 127 * 4]);
+    }
+
+    #[test]
+    fn malformed_global_pool_window_is_an_error_not_a_panic() {
+        // 3x3 pool window is not a power of two: the shift divide cannot
+        // represent it; run() must return Err instead of asserting.
+        let mut g = Graph::new();
+        let i = g.add_simple("input", Op::Input { h: 3, w: 3, c: 1, exp: -7 }, &[]);
+        let pool = g.add_simple("pool", Op::GlobalAvgPool { out_exp: -5 }, &[Edge::new(i, 0)]);
+        g.add_simple("fc", Op::Linear { cin: 1, cout: 2, w_exp: -8 }, &[Edge::new(pool, 0)]);
+        let mut weights = empty_weights();
+        weights.layers.insert(
+            "fc".into(),
+            ConvWeights {
+                w: tensor("fc", "w", vec![1, 2], -8, vec![1, 1]),
+                b: tensor("fc", "b", vec![2], -13, vec![0, 0]),
+            },
+        );
+        let input = QTensor::from_vec(Shape4::new(1, 3, 3, 1), -7, vec![1; 9]);
+        let err = run(&g, &weights, &input).unwrap_err();
+        assert!(format!("{err:#}").contains("2^k"), "{err:#}");
+    }
+
+    #[test]
+    fn oversized_kernels_are_shape_errors_not_underflow_panics() {
+        // Conv kernel exceeding the padded input.
+        let mut g = Graph::new();
+        let i = g.add_simple("input", Op::Input { h: 3, w: 3, c: 1, exp: -7 }, &[]);
+        g.add_simple(
+            "c",
+            Op::Conv(ConvAttrs {
+                cin: 1, cout: 1, k: 5, stride: 1, pad: 0, relu: false,
+                w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false,
+                raw_output: false,
+            }),
+            &[Edge::new(i, 0)],
+        );
+        let input = QTensor::from_vec(Shape4::new(1, 3, 3, 1), -7, vec![1; 9]);
+        assert!(run(&g, &empty_weights(), &input).is_err());
+
+        // MaxPool window exceeding the input.
+        let mut g = Graph::new();
+        let i = g.add_simple("input", Op::Input { h: 3, w: 3, c: 1, exp: -7 }, &[]);
+        g.add_simple("mp", Op::MaxPool { k: 5, stride: 1 }, &[Edge::new(i, 0)]);
+        assert!(run(&g, &empty_weights(), &input).is_err());
+
+        // Zero stride must also be an error, not a divide-by-zero.
+        let mut g = Graph::new();
+        let i = g.add_simple("input", Op::Input { h: 3, w: 3, c: 1, exp: -7 }, &[]);
+        g.add_simple("mp", Op::MaxPool { k: 2, stride: 0 }, &[Edge::new(i, 0)]);
+        assert!(run(&g, &empty_weights(), &input).is_err());
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Bounded inter-stage streams for the pipelined executor.
+//!
+//! A [`Fifo`] carries *pixel tokens* — the channel vector of one spatial
+//! position, matching the depth-first streaming order of the accelerator
+//! (paper Section III-F) — and accounts its capacity in **activation
+//! elements**, so depths plug in directly from [`hls::streams`]
+//! (parameter/output/skip/DMA sizing, Section III-E).
+//!
+//! Blocking is *bounded*: a push or pop that makes no progress within the
+//! configured timeout returns [`StreamError::Stalled`] instead of hanging.
+//! Deadlock from an undersized FIFO is therefore an **error result**, the
+//! executor analogue of the dataflow simulator reporting `deadlocked`
+//! rather than spinning (paper Fig. 14's failure mode).
+//!
+//! [`hls::streams`]: crate::hls::streams
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::hls::streams::StreamKind;
+
+/// How often a blocked stream operation re-checks the abort flag.
+const POLL: Duration = Duration::from_millis(20);
+
+/// Why a streaming stage gave up.
+#[derive(Debug)]
+pub enum StreamError {
+    /// No progress on a stream operation within the bounded wait — an
+    /// undersized FIFO deadlock or a wedged peer stage.
+    Stalled {
+        fifo: String,
+        op: &'static str,
+        waited: Duration,
+    },
+    /// Another stage failed first; this one was woken to unwind.
+    Aborted,
+    /// A peer stage panicked (its error was lost with the thread).
+    Panicked,
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::Stalled { fifo, op, waited } => write!(
+                f,
+                "stream stalled: no progress on {op} of FIFO `{fifo}` within {waited:?} \
+                 (undersized FIFO deadlock or wedged stage)"
+            ),
+            StreamError::Aborted => write!(f, "stream stage unwound after a peer failed"),
+            StreamError::Panicked => write!(f, "a stream stage panicked"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// Capacity/occupancy record for one buffer (FIFO or line buffer), in
+/// activation elements.
+#[derive(Debug, Clone)]
+pub struct BufferStat {
+    pub name: String,
+    pub kind: StreamKind,
+    /// Bound enforced (FIFOs) or implied by the row-granular algorithm
+    /// (line buffers), in elements.
+    pub capacity: usize,
+    /// Peak elements held at any instant.
+    pub peak: usize,
+}
+
+struct FifoState {
+    queue: VecDeque<Box<[i32]>>,
+    occupancy: usize,
+    peak: usize,
+}
+
+/// A bounded, element-accounted stream of pixel tokens.
+pub struct Fifo {
+    name: String,
+    kind: StreamKind,
+    capacity: usize,
+    timeout: Duration,
+    abort: Arc<AtomicBool>,
+    state: Mutex<FifoState>,
+    cv: Condvar,
+}
+
+impl Fifo {
+    pub fn new(
+        name: String,
+        kind: StreamKind,
+        capacity: usize,
+        abort: Arc<AtomicBool>,
+        timeout: Duration,
+    ) -> Arc<Fifo> {
+        Arc::new(Fifo {
+            name,
+            kind,
+            capacity: capacity.max(1),
+            timeout,
+            abort,
+            state: Mutex::new(FifoState { queue: VecDeque::new(), occupancy: 0, peak: 0 }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Push one token, blocking (bounded) until `token.len()` elements fit.
+    pub fn push(&self, token: Box<[i32]>) -> Result<(), StreamError> {
+        let deadline = Instant::now() + self.timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.occupancy + token.len() <= self.capacity {
+                st.occupancy += token.len();
+                st.peak = st.peak.max(st.occupancy);
+                st.queue.push_back(token);
+                self.cv.notify_all();
+                return Ok(());
+            }
+            st = self.wait(st, deadline, "push")?;
+        }
+    }
+
+    /// Pop the oldest token, blocking (bounded) until one is available.
+    pub fn pop(&self) -> Result<Box<[i32]>, StreamError> {
+        let deadline = Instant::now() + self.timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(tok) = st.queue.pop_front() {
+                st.occupancy -= tok.len();
+                self.cv.notify_all();
+                return Ok(tok);
+            }
+            st = self.wait(st, deadline, "pop")?;
+        }
+    }
+
+    fn wait<'a>(
+        &self,
+        st: MutexGuard<'a, FifoState>,
+        deadline: Instant,
+        op: &'static str,
+    ) -> Result<MutexGuard<'a, FifoState>, StreamError> {
+        if self.abort.load(Ordering::SeqCst) {
+            return Err(StreamError::Aborted);
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(StreamError::Stalled { fifo: self.name.clone(), op, waited: self.timeout });
+        }
+        let slice = POLL.min(deadline - now);
+        let (st, _) = self.cv.wait_timeout(st, slice).unwrap();
+        Ok(st)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stat(&self) -> BufferStat {
+        let st = self.state.lock().unwrap();
+        BufferStat {
+            name: self.name.clone(),
+            kind: self.kind,
+            capacity: self.capacity,
+            peak: st.peak,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fifo(cap: usize, timeout_ms: u64) -> Arc<Fifo> {
+        Fifo::new(
+            "t".into(),
+            StreamKind::Output,
+            cap,
+            Arc::new(AtomicBool::new(false)),
+            Duration::from_millis(timeout_ms),
+        )
+    }
+
+    #[test]
+    fn push_pop_roundtrip_tracks_peak() {
+        let f = fifo(8, 200);
+        f.push(vec![1, 2, 3].into_boxed_slice()).unwrap();
+        f.push(vec![4, 5].into_boxed_slice()).unwrap();
+        assert_eq!(f.stat().peak, 5);
+        assert_eq!(&*f.pop().unwrap(), &[1, 2, 3]);
+        assert_eq!(&*f.pop().unwrap(), &[4, 5]);
+        assert_eq!(f.stat().peak, 5);
+    }
+
+    #[test]
+    fn oversized_token_stalls_with_error_not_hang() {
+        let f = fifo(2, 50);
+        let err = f.push(vec![0; 4].into_boxed_slice()).unwrap_err();
+        assert!(matches!(err, StreamError::Stalled { .. }), "{err}");
+    }
+
+    #[test]
+    fn pop_on_empty_times_out() {
+        let f = fifo(4, 50);
+        assert!(matches!(f.pop().unwrap_err(), StreamError::Stalled { .. }));
+    }
+
+    #[test]
+    fn blocked_push_wakes_when_consumer_drains() {
+        let f = fifo(3, 2_000);
+        f.push(vec![0; 3].into_boxed_slice()).unwrap();
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.push(vec![7; 3].into_boxed_slice()));
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(f.pop().unwrap().len(), 3);
+        h.join().unwrap().unwrap();
+        assert_eq!(&*f.pop().unwrap(), &[7, 7, 7]);
+    }
+
+    #[test]
+    fn abort_unblocks_waiters() {
+        let abort = Arc::new(AtomicBool::new(false));
+        let f = Fifo::new(
+            "a".into(),
+            StreamKind::Skip,
+            4,
+            abort.clone(),
+            Duration::from_secs(30),
+        );
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.pop());
+        std::thread::sleep(Duration::from_millis(30));
+        abort.store(true, Ordering::SeqCst);
+        assert!(matches!(h.join().unwrap().unwrap_err(), StreamError::Aborted));
+    }
+}

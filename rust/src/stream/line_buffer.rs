@@ -1,0 +1,133 @@
+//! Software line buffer — the row-granular equivalent of the paper's
+//! window buffer (Section III-F, Eqs. 16–17).
+//!
+//! The hardware window buffer is a chain of FIFO slices holding exactly
+//! `B_i = [(fh-1)*iw + fw - 1] * ich` activations (see
+//! [`hls::window`](crate::hls::window)).  The streaming executor works at
+//! row granularity instead: it retains at most `fh` complete input rows
+//! (`fh * iw * ich` elements — the same bound rounded up to whole rows),
+//! evicting each row the moment no pending output row's window can still
+//! reach it.  Eviction order is stream order, which is what lets the
+//! temporal-reuse path (paper Fig. 12a) forward evicted rows as the skip
+//! stream with no second buffer.
+
+use super::fifo::BufferStat;
+use crate::hls::streams::StreamKind;
+use std::collections::VecDeque;
+
+/// Sliding window of input rows with absolute row indexing.
+pub struct LineBuffer {
+    name: String,
+    rows: VecDeque<Box<[i32]>>,
+    /// Absolute index (within the current frame) of `rows[0]`.
+    first: usize,
+    row_elems: usize,
+    /// Row-count bound implied by the caller's access pattern (reporting).
+    rows_bound: usize,
+    held: usize,
+    peak: usize,
+}
+
+impl LineBuffer {
+    pub fn new(name: String, row_elems: usize, rows_bound: usize) -> LineBuffer {
+        LineBuffer {
+            name,
+            rows: VecDeque::new(),
+            first: 0,
+            row_elems,
+            rows_bound,
+            held: 0,
+            peak: 0,
+        }
+    }
+
+    /// Absolute index of the next row to be pushed (== rows consumed from
+    /// the input stream this frame).
+    pub fn next_row(&self) -> usize {
+        self.first + self.rows.len()
+    }
+
+    pub fn push_row(&mut self, row: Box<[i32]>) {
+        debug_assert_eq!(row.len(), self.row_elems);
+        self.held += row.len();
+        self.peak = self.peak.max(self.held);
+        self.rows.push_back(row);
+    }
+
+    /// Row at absolute index `abs` (must be resident).
+    pub fn row(&self, abs: usize) -> &[i32] {
+        &self.rows[abs - self.first]
+    }
+
+    /// Drop every resident row with absolute index `< abs`, returning them
+    /// in stream order (for skip-path forwarding).
+    pub fn evict_below(&mut self, abs: usize) -> Vec<Box<[i32]>> {
+        let mut out = Vec::new();
+        while self.first < abs {
+            match self.rows.pop_front() {
+                Some(r) => {
+                    self.held -= r.len();
+                    self.first += 1;
+                    out.push(r);
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// End-of-frame: drain the remaining rows in order and reset indices.
+    pub fn flush(&mut self) -> Vec<Box<[i32]>> {
+        let out: Vec<_> = self.rows.drain(..).collect();
+        self.held = 0;
+        self.first = 0;
+        out
+    }
+
+    pub fn stat(&self) -> BufferStat {
+        BufferStat {
+            name: self.name.clone(),
+            kind: StreamKind::WindowSlice,
+            capacity: self.rows_bound * self.row_elems,
+            peak: self.peak,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: i32, n: usize) -> Box<[i32]> {
+        vec![v; n].into_boxed_slice()
+    }
+
+    #[test]
+    fn sliding_window_evicts_in_order() {
+        let mut lb = LineBuffer::new("t".into(), 4, 3);
+        for i in 0..3 {
+            lb.push_row(row(i, 4));
+        }
+        assert_eq!(lb.next_row(), 3);
+        assert_eq!(lb.row(1)[0], 1);
+        let ev = lb.evict_below(2);
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0][0], 0);
+        assert_eq!(ev[1][0], 1);
+        assert_eq!(lb.row(2)[0], 2);
+        assert_eq!(lb.stat().peak, 12);
+    }
+
+    #[test]
+    fn flush_resets_for_next_frame() {
+        let mut lb = LineBuffer::new("t".into(), 2, 2);
+        lb.push_row(row(7, 2));
+        let rest = lb.flush();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(lb.next_row(), 0);
+        lb.push_row(row(9, 2));
+        assert_eq!(lb.row(0)[0], 9);
+        // Peak persists across frames (it is a whole-run statistic).
+        assert_eq!(lb.stat().peak, 2);
+    }
+}

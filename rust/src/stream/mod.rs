@@ -1,0 +1,106 @@
+//! Streaming line-buffer execution backend (paper Sections III-E/F/G).
+//!
+//! Until this module existed, the paper's central buffering claim — skip
+//! connections served from bounded FIFOs sized by Eq. 22 instead of
+//! whole-tensor intermediates — lived only as *sizing math* in
+//! [`hls::streams`] and [`hls::window`].  This subsystem actually runs
+//! that dataflow in software:
+//!
+//! * [`executor::run_streaming`] spawns one scoped thread per layer stage
+//!   of the optimized graph, connected by bounded [`Fifo`]s whose depths
+//!   come from `hls::streams` (DMA, output-burst and `skip_stream(B_sc)`
+//!   kinds) and whose sliding windows are [`LineBuffer`]s mirroring
+//!   `hls::window`'s geometry;
+//! * the skip path flows through the Eq. 22-sized FIFO directly into the
+//!   fused conv1 accumulator init (paper Fig. 13) — identity skips as
+//!   forwarded line-buffer rows (temporal reuse, Fig. 12a), downsample
+//!   skips computed inside the host conv task (loop merge, Fig. 12b);
+//! * numerics are bit-identical to [`sim::golden`](crate::sim::golden)
+//!   (same `quant::requantize` contract in the same evaluation order);
+//! * all blocking is bounded: an undersized FIFO produces a
+//!   [`StreamError::Stalled`] *error*, never a hang — the executor
+//!   analogue of the simulator's deadlock report (Fig. 14);
+//! * every run reports per-buffer peak occupancy ([`StreamStats`]) so
+//!   tests can assert the measured buffering stays below the
+//!   whole-tensor-intermediates total and within the Eq. 22 depths.
+//!
+//! Serving-side integration lives in
+//! [`runtime::backend`](crate::runtime::backend) as `StreamBackend` /
+//! `StreamFactory` (the fourth backend next to pjrt/golden/sim).
+//!
+//! [`hls::streams`]: crate::hls::streams
+//! [`hls::window`]: crate::hls::window
+
+mod executor;
+mod fifo;
+mod line_buffer;
+
+pub use executor::run_streaming;
+pub use fifo::{BufferStat, Fifo, StreamError};
+pub use line_buffer::LineBuffer;
+
+use std::time::Duration;
+
+use crate::hls::streams::StreamKind;
+
+/// Executor policy knobs.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Bounded wait before a blocked FIFO push/pop reports
+    /// [`StreamError::Stalled`] instead of hanging.
+    pub progress_timeout: Duration,
+    /// Test hook: force every skip FIFO to this capacity (in elements),
+    /// overriding the Eq. 22 depth from `hls::streams::skip_stream` —
+    /// used by the deadlock-regression tests to prove that undersized
+    /// depths fail with an error rather than a hang.
+    pub skip_capacity_override: Option<usize>,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        // Generous: the longest legitimate wait is the sink's first pop,
+        // which spans the whole pipeline fill (a full-frame compute in
+        // debug builds on slow CI hosts).  Stall detection stays bounded.
+        StreamConfig { progress_timeout: Duration::from_secs(60), skip_capacity_override: None }
+    }
+}
+
+/// Per-run buffering report: every FIFO and line buffer with its capacity
+/// bound and peak occupancy, in activation elements (the unit of
+/// `hls::streams` depths; most streams carry int8 activations, the final
+/// logits stream carries int32).
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    pub buffers: Vec<BufferStat>,
+    pub frames: usize,
+    /// What a non-streaming executor materializes per frame: the summed
+    /// size of every intermediate edge tensor in the graph.
+    pub whole_tensor_elems: usize,
+}
+
+impl StreamStats {
+    /// Summed peak occupancy across all buffers — an upper bound on the
+    /// executor's concurrent intermediate storage.
+    pub fn peak_buffered_elems(&self) -> usize {
+        self.buffers.iter().map(|b| b.peak).sum()
+    }
+
+    /// Buffers of one stream kind (e.g. [`StreamKind::Skip`]).
+    pub fn of_kind(&self, kind: StreamKind) -> impl Iterator<Item = &BufferStat> {
+        self.buffers.iter().filter(move |b| b.kind == kind)
+    }
+
+    /// Look up a buffer by name (e.g. `"s0b0c1.skip"`).
+    pub fn buffer(&self, name: &str) -> Option<&BufferStat> {
+        self.buffers.iter().find(|b| b.name == name)
+    }
+
+    /// Fraction of the whole-tensor intermediates the pipeline actually
+    /// buffered (lower is better; Eq. 22's point is that this is small).
+    pub fn buffered_fraction(&self) -> f64 {
+        if self.whole_tensor_elems == 0 {
+            return 0.0;
+        }
+        self.peak_buffered_elems() as f64 / self.whole_tensor_elems as f64
+    }
+}

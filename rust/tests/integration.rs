@@ -7,9 +7,13 @@
 use std::sync::Arc;
 
 use resnet_hls::coordinator::{BatcherConfig, Router, RouterConfig};
-use resnet_hls::graph::{infer_shapes, Edge};
-use resnet_hls::runtime::{BackendFactory, GoldenBackend, GoldenFactory, InferenceBackend};
+use resnet_hls::graph::{infer_shapes, Edge, InputRole, Op};
+use resnet_hls::runtime::{
+    BackendFactory, GoldenBackend, GoldenFactory, InferenceBackend, StreamBackend, StreamFactory,
+};
 use resnet_hls::hls::boards::{BOARDS, KV260, ULTRA96};
+use resnet_hls::hls::streams::skip_stream;
+use resnet_hls::hls::window::buffer_size;
 use resnet_hls::hls::codegen::emit_top;
 use resnet_hls::hls::config::configure;
 use resnet_hls::hls::resources::{estimate, fit_to_board};
@@ -223,6 +227,81 @@ fn deadlock_experiment_matrix() {
     assert!(!run(true, 1.0), "naive @ Eq.21 must run");
     assert!(run(true, 0.45), "naive @ half sizing must deadlock");
     assert!(!run(false, 1.0), "optimized @ Eq.22 must run");
+}
+
+// -------------------------------------------- streaming backend (tentpole)
+
+#[test]
+fn stream_backend_bit_exact_with_eq22_buffering() {
+    // Acceptance: StreamBackend is bit-exact vs GoldenBackend on both
+    // paper architectures, its reported peak intermediate buffering is
+    // below the whole-tensor-intermediates total, and every skip FIFO is
+    // sized exactly by hls::streams::skip_stream (Eq. 22) and ran within
+    // that depth.
+    for (arch_name, frames) in [("resnet8", 2usize), ("resnet20", 1)] {
+        let stream = StreamBackend::synthetic(arch_name, 7, &[1, 2, 4]).unwrap();
+        let golden = GoldenBackend::synthetic(arch_name, 7, &[1, 2, 4]).unwrap();
+        let (input, _) = resnet_hls::data::synth_batch(0, frames, resnet_hls::data::TEST_SEED);
+        let a = stream.infer_batch(&input).unwrap();
+        let b = golden.infer_batch(&input).unwrap();
+        assert_eq!(a.data, b.data, "{arch_name}: stream vs golden mismatch");
+
+        let stats = stream.last_stats().expect("stream stats recorded");
+        assert!(
+            stats.peak_buffered_elems() < stats.whole_tensor_elems,
+            "{arch_name}: streamed peak {} must undercut whole-tensor {}",
+            stats.peak_buffered_elems(),
+            stats.whole_tensor_elems
+        );
+
+        let arch = arch_by_name(arch_name).unwrap();
+        let weights = synthetic_weights(&arch, 7);
+        let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let shapes = infer_shapes(&g).unwrap();
+        let mut skip_fifos = 0usize;
+        for n in g.live() {
+            if let Op::Conv(at) = &n.op {
+                if n.inputs.iter().any(|(_, r)| *r == InputRole::SkipInit) {
+                    let in_shape = shapes[&n.inputs[0].0];
+                    let expect =
+                        skip_stream(buffer_size(at.k, at.k, in_shape.w, at.cin, 1)).capacity();
+                    let buf = stats
+                        .buffer(&format!("{}.skip", n.name))
+                        .unwrap_or_else(|| panic!("{arch_name}: no stat for {}.skip", n.name));
+                    assert_eq!(buf.capacity, expect, "{}: capacity != Eq. 22 depth", n.name);
+                    assert!(buf.peak > 0, "{}: skip stream never used", n.name);
+                    assert!(buf.peak <= expect, "{}: peak beyond Eq. 22 depth", n.name);
+                    skip_fifos += 1;
+                }
+            }
+        }
+        assert_eq!(skip_fifos, arch.blocks.len(), "{arch_name}: one skip FIFO per block");
+    }
+}
+
+#[test]
+fn router_serves_on_stream_backend() {
+    // The fourth backend is selectable through the coordinator exactly
+    // like the others, and serves golden-identical classes.
+    let expect = golden_classes("resnet8", 7, 3);
+    let factory: Arc<dyn BackendFactory> =
+        Arc::new(StreamFactory::synthetic("resnet8", 7).with_buckets(&[1, 2]));
+    let router = Router::start(
+        vec![factory],
+        RouterConfig { workers_per_arch: 1, batcher: BatcherConfig::default() },
+    )
+    .unwrap();
+    let (input, _) = resnet_hls::data::synth_batch(0, 3, resnet_hls::data::TEST_SEED);
+    let frame = 32 * 32 * 3;
+    let pending: Vec<_> = (0..3)
+        .map(|i| router.submit("resnet8", input.data[i * frame..(i + 1) * frame].to_vec()))
+        .collect::<anyhow::Result<_>>()
+        .unwrap();
+    for (rx, want) in pending.iter().zip(expect) {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.class, want);
+    }
+    router.shutdown();
 }
 
 // ------------------------------------------------- serving path (golden)

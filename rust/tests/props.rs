@@ -2,12 +2,14 @@
 //! (seeded deterministic cases via `util::prop::forall`).
 
 use resnet_hls::coordinator::{Batcher, BatcherConfig};
+use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::graph::{infer_shapes, ConvAttrs, Edge, Graph, InputRole, Op};
 use resnet_hls::ilp::{brute_force, solve, LayerLoad};
-use resnet_hls::models::synthetic_weights;
+use resnet_hls::models::{arch_by_name, build_optimized_graph, synthetic_weights};
 use resnet_hls::passes;
 use resnet_hls::quant::{clip_i8, requantize, round_shift};
 use resnet_hls::sim::golden;
+use resnet_hls::stream::{run_streaming, StreamConfig};
 use resnet_hls::util::prop::forall;
 use resnet_hls::util::Json;
 use resnet_hls::util::Lcg64;
@@ -238,6 +240,64 @@ fn weights_for_graph(g: &Graph, seed: u64) -> resnet_hls::models::ModelWeights {
         w_exps,
         source: "prop".into(),
     }
+}
+
+// ------------------------------------------------------ streaming backend
+
+#[test]
+fn stream_executor_bit_identical_to_golden_on_random_models() {
+    // The tentpole invariant: the pipelined line-buffer executor produces
+    // the exact golden bits for arbitrary synthetic weights and inputs on
+    // both paper architectures' optimized graphs.
+    for (arch_name, cases, frames) in [("resnet8", 4u64, 2usize), ("resnet20", 1, 1)] {
+        forall(&format!("stream == golden ({arch_name})"), cases, |rng| {
+            let arch = arch_by_name(arch_name).unwrap();
+            let weights = synthetic_weights(&arch, rng.next_u64());
+            let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+            let (input, _) = synth_batch(rng.below(1000), frames, TEST_SEED);
+            let want = golden::run(&g, &weights, &input).unwrap();
+            let (got, stats) =
+                run_streaming(&g, &weights, &input, &StreamConfig::default()).unwrap();
+            assert_eq!(want.shape, got.shape);
+            assert_eq!(want.data, got.data, "{arch_name}: stream output diverged");
+            assert!(
+                stats.peak_buffered_elems() < stats.whole_tensor_elems,
+                "{arch_name}: streamed buffering {} not below whole-tensor {}",
+                stats.peak_buffered_elems(),
+                stats.whole_tensor_elems
+            );
+        });
+    }
+}
+
+#[test]
+fn stream_executor_bounded_wait_instead_of_deadlock() {
+    let arch = arch_by_name("resnet8").unwrap();
+    let weights = synthetic_weights(&arch, 7);
+    let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let (input, _) = synth_batch(0, 1, TEST_SEED);
+
+    // At the exact minimum depths from hls::streams (the default
+    // construction) the pipeline completes.
+    let (out, _) = run_streaming(&g, &weights, &input, &StreamConfig::default()).unwrap();
+    assert_eq!(out.shape.c, 10);
+
+    // Forcing the skip FIFOs below one pixel token re-creates the paper's
+    // Fig. 14 failure mode: the producer can never flush its skip row, so
+    // the pipeline wedges.  The executor must surface a bounded-wait
+    // stall error — progress detection, not a hang.
+    let cfg = StreamConfig {
+        progress_timeout: std::time::Duration::from_millis(250),
+        skip_capacity_override: Some(4),
+    };
+    let t0 = std::time::Instant::now();
+    let err = run_streaming(&g, &weights, &input, &cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("stalled"), "expected a stall error, got: {msg}");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "stall detection must be bounded, not a hang"
+    );
 }
 
 // --------------------------------------------------------------- batcher
