@@ -1,11 +1,17 @@
 //! Streaming line-buffer backend demo: the paper's Section III dataflow
 //! executed for real.
 //!
-//! Runs the same synthetic batch through the golden backend (whole-tensor
-//! intermediates, single thread) and the streaming backend (one pipelined
-//! task per layer, bounded FIFOs sized by `hls::streams`, skip paths
-//! through Eq. 22-sized FIFOs), asserts bit-equality, and reports the
-//! measured buffering saving plus wall-clock throughput of both.
+//! Part 1 runs the same synthetic batch through the golden backend
+//! (whole-tensor intermediates, single thread) and the streaming backend
+//! (pipelined tasks, bounded FIFOs sized by the board/ILP config, skip
+//! paths through Eq. 22-sized FIFOs), asserts bit-equality, and reports
+//! the measured buffering saving plus wall-clock throughput of both.
+//!
+//! Part 2 shows the *serving* engine: a persistent frame-pipelined
+//! [`resnet_hls::stream::StreamPool`] with 1 vs 2 replicas against
+//! repeated one-shot `run_streaming` calls — the pool keeps its stage
+//! threads alive, so frame N+1 enters conv0 while frame N is in the
+//! classifier, and replicas trade buffering for throughput.
 //!
 //! ```bash
 //! cargo run --release --example stream_pipeline [-- frames]
@@ -16,7 +22,9 @@ use std::time::Instant;
 use anyhow::Result;
 use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::hls::streams::StreamKind;
+use resnet_hls::models::{arch_by_name, build_optimized_graph, synthetic_weights};
 use resnet_hls::runtime::{GoldenBackend, InferenceBackend, StreamBackend};
+use resnet_hls::stream::{run_streaming, StreamConfig};
 
 fn main() -> Result<()> {
     let frames: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16);
@@ -55,6 +63,48 @@ fn main() -> Result<()> {
             stats.peak_buffered_elems(),
             stats.whole_tensor_elems,
             stats.buffered_fraction()
+        );
+    }
+
+    // ---- Part 2: persistent pool throughput (resnet8, 32 frames) ----
+    let frames = frames.max(32);
+    let (input, _) = synth_batch(0, frames, TEST_SEED);
+    println!("\n== persistent stream pool, resnet8, {frames} frames ==");
+
+    let arch = arch_by_name("resnet8").unwrap();
+    let weights = synthetic_weights(&arch, 7);
+    let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let golden = GoldenBackend::synthetic("resnet8", 7, &[frames])?;
+    let want = golden.infer_batch(&input)?;
+
+    let t0 = Instant::now();
+    for i in 0..frames {
+        let (one, _) = synth_batch(i as u64, 1, TEST_SEED);
+        run_streaming(&g, &weights, &one, &StreamConfig::default())?;
+    }
+    let t_oneshot = t0.elapsed();
+    println!(
+        "  one-shot run_streaming x{frames}: {:>8.1} ms ({:.0} FPS) — plan + spawn + fill per frame",
+        t_oneshot.as_secs_f64() * 1e3,
+        frames as f64 / t_oneshot.as_secs_f64()
+    );
+
+    for replicas in [1usize, 2] {
+        let backend = StreamBackend::synthetic_with(
+            "resnet8",
+            7,
+            &[frames],
+            StreamConfig { replicas, ..Default::default() },
+        )?;
+        let t0 = Instant::now();
+        let out = backend.infer_batch(&input)?;
+        let dt = t0.elapsed();
+        assert_eq!(out.data, want.data, "pool must stay bit-exact vs golden");
+        println!(
+            "  pool x{replicas} replica(s) ({} frames in flight): {:>8.1} ms ({:.0} FPS, bit-exact)",
+            backend.pool().capacity(),
+            dt.as_secs_f64() * 1e3,
+            frames as f64 / dt.as_secs_f64()
         );
     }
     Ok(())

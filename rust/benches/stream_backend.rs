@@ -1,14 +1,24 @@
-//! Bench: the streaming line-buffer executor vs the golden model — does
-//! cross-layer pipeline parallelism pay for the FIFO handshakes?
+//! Bench: the streaming executor vs the golden model, and the persistent
+//! frame-pipelined pool vs repeated one-shot `run_streaming` calls.
+//!
+//! The second comparison is the PR-3 acceptance measurement: >= 32 frames
+//! through a 2-replica [`StreamPool`]-backed backend (stage threads
+//! spawned once, frames pipelined through the FIFO chain) against the
+//! same 32 frames paying plan + thread spawn + pipeline fill per frame.
 //!
 //! Artifact-free.  Run: `cargo bench --bench stream_backend`
+//! (`REPRO_BENCH_QUICK=1` for a short CI-ish run.)
 
 use resnet_hls::data::{synth_batch, TEST_SEED};
+use resnet_hls::models::{arch_by_name, build_optimized_graph, synthetic_weights};
 use resnet_hls::runtime::{GoldenBackend, InferenceBackend, StreamBackend};
+use resnet_hls::stream::{run_streaming, StreamConfig};
 use resnet_hls::util::Bencher;
 
 fn main() {
     let mut b = Bencher::new();
+
+    // ---- single-batch: pipelined executor vs golden ----
     for (arch, frames) in [("resnet8", 8usize), ("resnet20", 2)] {
         let golden = GoldenBackend::synthetic(arch, 7, &[frames]).unwrap();
         let stream = StreamBackend::synthetic(arch, 7, &[frames]).unwrap();
@@ -34,4 +44,66 @@ fn main() {
             stats.buffered_fraction()
         );
     }
+
+    // ---- serving throughput: persistent pool vs per-call pipelines ----
+    let frames = 32usize;
+    let arch = arch_by_name("resnet8").unwrap();
+    let weights = synthetic_weights(&arch, 7);
+    let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let (input, _) = synth_batch(0, frames, TEST_SEED);
+
+    let pooled = StreamBackend::synthetic_with(
+        "resnet8",
+        7,
+        &[frames],
+        StreamConfig { replicas: 2, ..Default::default() },
+    )
+    .unwrap();
+    let want = GoldenBackend::synthetic("resnet8", 7, &[frames])
+        .unwrap()
+        .infer_batch(&input)
+        .unwrap();
+    assert_eq!(pooled.infer_batch(&input).unwrap().data, want.data);
+
+    let singles: Vec<_> = (0..frames)
+        .map(|i| synth_batch(i as u64, 1, TEST_SEED).0)
+        .collect();
+
+    let s_pool = b.bench_items(
+        "pool resnet8 32 frames (2 replicas, persistent)",
+        frames as f64,
+        &mut || {
+            pooled.infer_batch(&input).unwrap();
+        },
+    );
+    let s_once = b.bench_items(
+        "one-shot run_streaming resnet8 32 x 1 frame",
+        frames as f64,
+        &mut || {
+            for f in &singles {
+                run_streaming(&g, &weights, f, &StreamConfig::default()).unwrap();
+            }
+        },
+    );
+    let speedup = s_once.median_ns / s_pool.median_ns;
+    println!(
+        "persistent pool vs repeated one-shot executor: {speedup:.2}x \
+         ({:.0} vs {:.0} frames/s)",
+        s_pool.items_per_sec(),
+        s_once.items_per_sec()
+    );
+    assert!(
+        speedup > 1.0,
+        "the persistent pool must beat per-call pipelines (got {speedup:.2}x)"
+    );
+
+    let stats = pooled.last_stats().unwrap();
+    println!(
+        "pool buffering: peak {} elems vs replica-scaled whole-tensor {} ({:.4}), \
+         {} frames served",
+        stats.peak_buffered_elems(),
+        stats.whole_tensor_elems,
+        stats.buffered_fraction(),
+        stats.frames
+    );
 }

@@ -16,6 +16,12 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub padded_frames: AtomicU64,
     pub errors: AtomicU64,
+    /// Worst streaming-pool buffering report observed: `(peak buffered
+    /// elements, whole-tensor comparison base)`, replica-aggregated.
+    /// Kept as a pair under one lock so the exported fraction always
+    /// comes from a single real report — independent maxima could pair
+    /// one backend's peak with another's base.
+    stream_gauge: Mutex<(u64, u64)>,
     latency: Mutex<Hist>,
 }
 
@@ -36,6 +42,18 @@ impl Metrics {
         self.frames.fetch_add(real as u64, Ordering::Relaxed);
         self.padded_frames
             .fetch_add((executed - real) as u64, Ordering::Relaxed);
+    }
+
+    /// Record a streaming backend's buffering report (peak buffered
+    /// elements and the whole-tensor base, both aggregated across the
+    /// pool's replicas).  The gauge keeps the report with the highest
+    /// peak, as a pair, so a snapshot reflects the worst concurrent
+    /// buffering observed with its own comparison base.
+    pub fn record_stream(&self, peak_elems: u64, whole_elems: u64) {
+        let mut g = self.stream_gauge.lock().unwrap();
+        if peak_elems > g.0 {
+            *g = (peak_elems, whole_elems);
+        }
     }
 
     pub fn record_latency(&self, d: Duration) {
@@ -67,6 +85,7 @@ impl Metrics {
         let frames = self.frames.load(Ordering::Relaxed);
         let padded = self.padded_frames.load(Ordering::Relaxed);
         let executed = frames + padded;
+        let (stream_peak, stream_whole) = *self.stream_gauge.lock().unwrap();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             frames,
@@ -79,6 +98,12 @@ impl Metrics {
             p95_le_us: pct(0.95),
             p99_le_us: pct(0.99),
             max_latency_us: h.max_us,
+            stream_peak_buffered_elems: stream_peak,
+            stream_buffered_fraction: if stream_whole > 0 {
+                stream_peak as f64 / stream_whole as f64
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -99,6 +124,14 @@ pub struct MetricsSnapshot {
     pub p95_le_us: u64,
     pub p99_le_us: u64,
     pub max_latency_us: u64,
+    /// Peak streamed buffering gauge (elements) from a streaming
+    /// backend's pool, aggregated across replicas; 0 when no streaming
+    /// backend reported.
+    pub stream_peak_buffered_elems: u64,
+    /// Peak buffering over the whole-tensor-intermediates base (0.0 when
+    /// no streaming backend reported; Eq. 22's point is that this is
+    /// well below 1).
+    pub stream_buffered_fraction: f64,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -112,7 +145,15 @@ impl std::fmt::Display for MetricsSnapshot {
             self.requests, self.frames, self.batches, self.padded_frames,
             self.padding_efficiency, self.errors, self.mean_latency_us,
             b(self.p50_le_us), b(self.p95_le_us), b(self.p99_le_us), self.max_latency_us
-        )
+        )?;
+        if self.stream_peak_buffered_elems > 0 {
+            write!(
+                f,
+                "  stream-buf peak {} elems ({:.4} of whole-tensor)",
+                self.stream_peak_buffered_elems, self.stream_buffered_fraction
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -151,5 +192,26 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.padding_efficiency, 1.0);
         assert_eq!(s.p95_le_us, 0);
+        assert_eq!(s.stream_peak_buffered_elems, 0);
+        assert_eq!(s.stream_buffered_fraction, 0.0);
+        assert!(!format!("{s}").contains("stream-buf"));
+    }
+
+    #[test]
+    fn stream_gauges_keep_the_worst_report_as_a_pair() {
+        let m = Metrics::new();
+        m.record_stream(100, 1000);
+        // Lower peak must not regress the gauge — and its (different)
+        // whole-tensor base must not be mixed into the kept report.
+        m.record_stream(80, 100);
+        let s = m.snapshot();
+        assert_eq!(s.stream_peak_buffered_elems, 100);
+        assert!((s.stream_buffered_fraction - 0.1).abs() < 1e-9);
+        assert!(format!("{s}").contains("stream-buf"));
+        // A higher peak replaces the pair wholesale.
+        m.record_stream(200, 400);
+        let s = m.snapshot();
+        assert_eq!(s.stream_peak_buffered_elems, 200);
+        assert!((s.stream_buffered_fraction - 0.5).abs() < 1e-9);
     }
 }

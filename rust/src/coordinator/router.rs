@@ -312,6 +312,13 @@ fn worker_loop(
     if !buckets.is_empty() {
         bcfg.buckets = buckets;
     }
+    // A streaming pool's derived in-flight-capacity bucket must survive
+    // the policy's max_bucket filter (tuned for PJRT executables), or the
+    // serve path degenerates to single-frame dispatches and frame-level
+    // pipelining never engages.
+    if let Some(mb) = backend.preferred_max_bucket() {
+        bcfg.max_bucket = bcfg.max_bucket.max(mb);
+    }
     let batcher = Batcher::new(bcfg);
     loop {
         let mut st = shared.state.lock().unwrap();
@@ -359,6 +366,12 @@ fn worker_loop(
             Ok(logits) => {
                 pool_metrics.record_batch(plan.take, plan.bucket);
                 agg.record_batch(plan.take, plan.bucket);
+                // Streaming backends: export the pool's replica-aggregated
+                // buffering gauges into the snapshots (ROADMAP item 4).
+                if let Some((peak, whole)) = backend.stream_gauges() {
+                    pool_metrics.record_stream(peak, whole);
+                    agg.record_stream(peak, whole);
+                }
                 let c = logits.shape.c;
                 // Same class selection as the test oracle, so serving and
                 // golden can never drift on tie-breaking.

@@ -9,7 +9,8 @@
 //!   golden-eval [--model M] [--n N]               golden accuracy on synthetic test set
 //!   probe-check                  cross-language bit-equality (golden vs oracle vs PJRT)
 //!   serve      [--model M] [--frames N] [--backend pjrt|golden|sim|stream] [--workers N]
-//!                                route synthetic frames through the inference router
+//!              [--replicas B]    route synthetic frames through the inference router
+//!                                (stream: B persistent pipeline replicas per worker)
 //!   buffers    [--model M]       Eq. 21/22/23 per residual block, plus the
 //!                                streaming executor's measured peak occupancy
 
@@ -36,7 +37,7 @@ fn main() {
         std::env::args().skip(1),
         &[
             "model", "board", "frames", "n", "out", "skip-factor", "ow-par", "budget", "backend",
-            "workers",
+            "workers", "replicas",
         ],
     );
     let result = match args.subcommand.as_deref() {
@@ -280,6 +281,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let arch = arch_of(args)?;
     let frames = args.opt_usize("frames", 256);
     let workers = args.opt_usize("workers", 1);
+    let replicas = args.opt_usize("replicas", 1);
     let backend = args.opt_or("backend", "pjrt");
     let dir = artifacts_dir();
     // `golden` prefers the trained artifact weights when present and
@@ -288,14 +290,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "pjrt" => std::sync::Arc::new(PjrtFactory::new(dir.clone(), &arch.name)),
         "golden" => std::sync::Arc::new(GoldenFactory::auto(dir.clone(), &arch.name, 7)),
         "sim" => std::sync::Arc::new(SimFactory::synthetic(&arch.name, 7)),
-        "stream" => std::sync::Arc::new(StreamFactory::auto(dir.clone(), &arch.name, 7)),
+        "stream" => std::sync::Arc::new(
+            StreamFactory::auto(dir.clone(), &arch.name, 7).with_replicas(replicas),
+        ),
         other => anyhow::bail!("unknown backend {other} (expected pjrt|golden|sim|stream)"),
     };
     let router = Router::start(
         vec![factory],
         RouterConfig { workers_per_arch: workers, ..Default::default() },
     )?;
-    println!("serving {} on {backend} backend ({workers} worker(s))", arch.name);
+    if backend == "stream" {
+        println!(
+            "serving {} on stream backend ({workers} worker(s), {replicas} pipeline replica(s) \
+             each, persistent frame-pipelined pool; buckets sized to in-flight capacity)",
+            arch.name
+        );
+    } else {
+        println!("serving {} on {backend} backend ({workers} worker(s))", arch.name);
+    }
     let (input, labels) = synth_batch(0, frames, TEST_SEED);
     let frame_elems = 32 * 32 * 3;
     let t0 = std::time::Instant::now();

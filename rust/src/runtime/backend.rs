@@ -13,9 +13,11 @@
 //!   int8/int32 numerics, artifact-free);
 //! * [`SimBackend`] — golden numerics paced by the cycle-approximate
 //!   dataflow simulator (realistic accelerator timing for load tests);
-//! * [`StreamBackend`] — the same exact numerics executed as the paper's
-//!   streaming line-buffer dataflow ([`crate::stream`]): one pipelined
-//!   task per layer, Eq. 22-sized skip FIFOs, measured peak buffering.
+//! * [`StreamBackend`] — the same exact numerics executed by a
+//!   persistent streaming pipeline pool ([`crate::stream`]): stage
+//!   threads spawned once and kept alive across frames, `replicas`
+//!   pipeline copies behind one work queue, ILP-driven FIFO depths and
+//!   `och_par` channel workers, measured peak buffering.
 //!
 //! Backends are constructed through a [`BackendFactory`] *inside* the
 //! executor thread that will use them — PJRT executables are not `Send`,
@@ -23,6 +25,7 @@
 //! plain data (`Send + Sync`) and can be handed to any number of workers.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -36,7 +39,7 @@ use crate::models::{
 };
 use crate::quant::{QTensor, Shape4};
 use crate::sim::{build_network, golden, SimOptions};
-use crate::stream::{run_streaming, StreamConfig, StreamStats};
+use crate::stream::{StreamConfig, StreamPool, StreamStats};
 
 /// Something that can run inference batches for one architecture.
 ///
@@ -51,6 +54,23 @@ pub trait InferenceBackend {
     fn buckets(&self) -> &[usize];
     /// Execute one bucket-sized batch.
     fn infer_batch(&self, input: &QTensor) -> Result<QTensor>;
+    /// Largest bucket this backend *wants* dispatched, or `None` to defer
+    /// to the batcher policy's `max_bucket` cap.  Streaming pools return
+    /// their in-flight capacity: the derived `[1, capacity]` bucket set
+    /// is the whole point of frame-level pipelining, and the policy's
+    /// default cap (tuned for PJRT executables) must not strip it.
+    fn preferred_max_bucket(&self) -> Option<usize> {
+        None
+    }
+    /// Streaming backends report their pool's buffering gauges here —
+    /// `(peak buffered elements, whole-tensor comparison base)`, both
+    /// aggregated across pool replicas — so the serving path can export
+    /// them cheaply after every batch (no per-buffer name clones; the
+    /// full named report stays on `StreamBackend::last_stats`).
+    /// Everything else returns `None`.
+    fn stream_gauges(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// Constructs [`InferenceBackend`]s inside their executor thread.
@@ -384,64 +404,90 @@ impl BackendFactory for SimFactory {
 
 // -------------------------------------------------------------- stream
 
-/// The streaming line-buffer backend: exact golden numerics executed as
-/// the paper's pipelined dataflow ([`crate::stream`]) — one task per
-/// layer stage on scoped threads, bounded FIFOs sized by
-/// [`hls::streams`](crate::hls::streams), the residual skip path flowing
-/// through an Eq. 22-sized FIFO into the fused accumulator init.
+/// The streaming backend: exact golden numerics executed by a
+/// **persistent** [`StreamPool`] held for the backend's lifetime — the
+/// paper's pipelined dataflow ([`crate::stream`]) with stage threads
+/// spawned once, `replicas` pipeline copies behind a shared work queue,
+/// bounded FIFOs at the board/ILP-configured depths, and per-layer
+/// `och_par` channel-parallel workers.
 ///
-/// Bit-exact versus [`GoldenBackend`] (asserted by integration and
-/// property tests) while exploiting cross-layer pipeline parallelism;
-/// every batch records a [`StreamStats`] buffering report retrievable
-/// via [`StreamBackend::last_stats`].
+/// `infer_batch` enqueues every frame of the batch before awaiting the
+/// first result, so frames pipeline through the pool concurrently
+/// (frame-level pipelining) and results come back in order.  Bit-exact
+/// versus [`GoldenBackend`] (asserted by integration and property
+/// tests); the pool's cumulative [`StreamStats`] buffering report is
+/// retrievable via [`StreamBackend::last_stats`] and its gauge pair is
+/// exported to the router's metrics through
+/// [`InferenceBackend::stream_gauges`].
 pub struct StreamBackend {
     arch: String,
-    graph: Graph,
-    weights: ModelWeights,
+    pool: StreamPool,
     buckets: Vec<usize>,
-    cfg: StreamConfig,
-    last_stats: std::sync::Mutex<Option<StreamStats>>,
 }
 
 impl StreamBackend {
     /// Deterministic synthetic weights — runs anywhere, no artifacts.
     pub fn synthetic(arch_name: &str, seed: u64, buckets: &[usize]) -> Result<StreamBackend> {
+        Self::synthetic_with(arch_name, seed, buckets, StreamConfig::default())
+    }
+
+    /// Synthetic weights with an explicit pool policy (replicas,
+    /// naive-add mode, board, worker caps...).
+    pub fn synthetic_with(
+        arch_name: &str,
+        seed: u64,
+        buckets: &[usize],
+        cfg: StreamConfig,
+    ) -> Result<StreamBackend> {
         let (graph, weights) = model_parts_synthetic(arch_name, seed)?;
-        Self::from_parts(arch_name, graph, weights, buckets)
+        Self::from_parts(arch_name, graph, weights, buckets, cfg)
     }
 
     /// Real trained weights from the artifacts directory.
     pub fn from_artifacts(dir: &Path, arch_name: &str, buckets: &[usize]) -> Result<StreamBackend> {
-        let (graph, weights) = model_parts_artifacts(dir, arch_name)?;
-        Self::from_parts(arch_name, graph, weights, buckets)
+        Self::from_artifacts_with(dir, arch_name, buckets, StreamConfig::default())
     }
 
+    /// Trained weights with an explicit pool policy.
+    pub fn from_artifacts_with(
+        dir: &Path,
+        arch_name: &str,
+        buckets: &[usize],
+        cfg: StreamConfig,
+    ) -> Result<StreamBackend> {
+        let (graph, weights) = model_parts_artifacts(dir, arch_name)?;
+        Self::from_parts(arch_name, graph, weights, buckets, cfg)
+    }
+
+    /// Launch the pool.  An empty `buckets` slice sizes the bucket set to
+    /// the pool's in-flight capacity (`[1, capacity]`), so the batcher
+    /// hands the pool exactly as many frames as it can pipeline.
     fn from_parts(
         arch: &str,
         graph: Graph,
         weights: ModelWeights,
         buckets: &[usize],
+        cfg: StreamConfig,
     ) -> Result<StreamBackend> {
-        let buckets = normalize_buckets(buckets, "stream")?;
-        Ok(StreamBackend {
-            arch: arch.to_string(),
-            graph,
-            weights,
-            buckets,
-            cfg: StreamConfig::default(),
-            last_stats: std::sync::Mutex::new(None),
-        })
+        let pool = StreamPool::new(arch, &graph, Arc::new(weights), cfg)?;
+        let buckets = if buckets.is_empty() {
+            let cap = pool.capacity();
+            if cap > 1 { vec![1, cap] } else { vec![1] }
+        } else {
+            normalize_buckets(buckets, "stream")?
+        };
+        Ok(StreamBackend { arch: arch.to_string(), pool, buckets })
     }
 
-    /// Override the executor policy (progress timeout, test depth hooks).
-    pub fn with_config(mut self, cfg: StreamConfig) -> StreamBackend {
-        self.cfg = cfg;
-        self
+    /// The persistent pipeline pool (shape, live stats, tickets).
+    pub fn pool(&self) -> &StreamPool {
+        &self.pool
     }
 
-    /// Buffering report of the most recent `infer_batch`.
+    /// Cumulative buffering report of the pool — `None` until the first
+    /// frame has been served.
     pub fn last_stats(&self) -> Option<StreamStats> {
-        self.last_stats.lock().unwrap().clone()
+        if self.pool.frames() == 0 { None } else { Some(self.pool.stats()) }
     }
 }
 
@@ -455,17 +501,29 @@ impl InferenceBackend for StreamBackend {
     }
 
     fn infer_batch(&self, input: &QTensor) -> Result<QTensor> {
-        let (out, stats) = run_streaming(&self.graph, &self.weights, input, &self.cfg)?;
-        *self.last_stats.lock().unwrap() = Some(stats);
-        Ok(out)
+        self.pool.infer(input)
+    }
+
+    fn preferred_max_bucket(&self) -> Option<usize> {
+        self.buckets.last().copied()
+    }
+
+    fn stream_gauges(&self) -> Option<(u64, u64)> {
+        if self.pool.frames() == 0 {
+            return None;
+        }
+        let (peak, whole) = self.pool.buffered_gauges();
+        Some((peak as u64, whole as u64))
     }
 }
 
 /// Factory for [`StreamBackend`]s (each router worker gets its own
-/// pipeline; the weights/graph are rebuilt per worker, like golden).
+/// pool; prefer one worker with `with_replicas(B)` over many workers —
+/// replicas share one work queue, workers would each spawn a full pool).
 pub struct StreamFactory {
     arch: String,
     seed: u64,
+    /// Empty = size buckets to the pool's in-flight capacity.
     buckets: Vec<usize>,
     artifacts: Option<PathBuf>,
     cfg: StreamConfig,
@@ -477,7 +535,7 @@ impl StreamFactory {
         StreamFactory {
             arch: arch.to_string(),
             seed,
-            buckets: GoldenBackend::DEFAULT_BUCKETS.to_vec(),
+            buckets: Vec::new(),
             artifacts: None,
             cfg: StreamConfig::default(),
         }
@@ -498,13 +556,21 @@ impl StreamFactory {
         }
     }
 
-    /// Override the advertised bucket set.
+    /// Override the advertised bucket set (default: sized to the pool's
+    /// in-flight capacity).
     pub fn with_buckets(mut self, buckets: &[usize]) -> StreamFactory {
         self.buckets = buckets.to_vec();
         self
     }
 
-    /// Override the executor policy for every created backend.
+    /// Pipeline replicas behind each created backend's work queue
+    /// (`serve --backend stream --replicas B`).
+    pub fn with_replicas(mut self, replicas: usize) -> StreamFactory {
+        self.cfg.replicas = replicas.max(1);
+        self
+    }
+
+    /// Override the whole pool policy for every created backend.
     pub fn with_config(mut self, cfg: StreamConfig) -> StreamFactory {
         self.cfg = cfg;
         self
@@ -518,10 +584,20 @@ impl BackendFactory for StreamFactory {
 
     fn create(&self) -> Result<Box<dyn InferenceBackend>> {
         let b = match &self.artifacts {
-            Some(dir) => StreamBackend::from_artifacts(dir, &self.arch, &self.buckets)?,
-            None => StreamBackend::synthetic(&self.arch, self.seed, &self.buckets)?,
+            Some(dir) => StreamBackend::from_artifacts_with(
+                dir,
+                &self.arch,
+                &self.buckets,
+                self.cfg.clone(),
+            )?,
+            None => StreamBackend::synthetic_with(
+                &self.arch,
+                self.seed,
+                &self.buckets,
+                self.cfg.clone(),
+            )?,
         };
-        Ok(Box::new(b.with_config(self.cfg.clone())))
+        Ok(Box::new(b))
     }
 }
 

@@ -1,780 +1,48 @@
-//! The pipelined streaming executor: one task per layer stage, bounded
-//! FIFOs between them, line-buffered sliding windows inside them.
+//! One-shot streaming execution: a thin wrapper over the persistent
+//! [`StreamPool`].
 //!
-//! This runs the *optimized* graph (paper Fig. 14) the way the generated
-//! accelerator does: every conv is a free-running task consuming a
-//! depth-first pixel stream through a line buffer (Section III-F), the
-//! residual skip path flows through a `skip_stream(B_sc)` FIFO sized by
-//! Eq. 22 straight into the consumer's accumulator initialization
-//! (Fig. 13), and the whole chain executes concurrently on scoped
-//! threads — cross-layer pipeline parallelism with bounded intermediate
-//! storage instead of whole-tensor materialization.
-//!
-//! Numerics are exactly [`sim::golden`](crate::sim::golden)'s: the same
-//! `requantize`/`align_skip` contract applied in the same per-element
-//! order, so outputs are bit-identical (asserted by integration and
-//! property tests).  What changes is *where tensors live*: the executor
-//! reports per-buffer peak occupancy so the Eq. 22 buffering saving can
-//! be measured, not just sized.
+//! Historically this module *was* the executor — it spawned one scoped
+//! thread per layer stage on every call and drained the whole pipeline
+//! per batch.  The execution engine now lives in [`super::pool`] /
+//! [`super::stage`] (persistent stage threads, frame-level pipelining,
+//! channel-parallel workers); `run_streaming` remains as the convenient
+//! build-run-drain entry point for tools, tests and property checks that
+//! want a single batch plus its buffering report with no pool lifecycle
+//! to manage.
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::Result;
 
-use crate::graph::{infer_shapes, Edge, Graph, InputRole, Op};
-use crate::hls::streams::{dma_stream, output_stream, skip_stream, StreamKind};
-use crate::hls::window::buffer_size;
+use crate::graph::Graph;
 use crate::models::ModelWeights;
-use crate::quant::{clip_i8, requantize, round_shift, QTensor, Shape4};
+use crate::quant::QTensor;
 
-use super::fifo::{BufferStat, Fifo, StreamError};
-use super::line_buffer::LineBuffer;
+use super::pool::StreamPool;
 use super::{StreamConfig, StreamStats};
 
-// ------------------------------------------------------------ stage plan
-
-struct SkipIn {
-    fifo: Arc<Fifo>,
-    /// `skip_exp - acc_exp` (>= 0 by the builders' exponent contract).
-    shift: u32,
-}
-
-struct DsStage<'w> {
-    k: usize,
-    stride: usize,
-    pad: usize,
-    oh: usize,
-    ow: usize,
-    och: usize,
-    out_exp: i32,
-    acc_exp: i32,
-    w: &'w [i32],
-    bias: &'w [i32],
-    out: Arc<Fifo>,
-}
-
-struct ConvStage<'w> {
-    name: String,
-    k: usize,
-    stride: usize,
-    pad: usize,
-    relu: bool,
-    out_exp: i32,
-    acc_exp: i32,
-    ih: usize,
-    iw: usize,
-    ich: usize,
-    oh: usize,
-    ow: usize,
-    och: usize,
-    w: &'w [i32],
-    bias: &'w [i32],
-    input: Arc<Fifo>,
-    out: Arc<Fifo>,
-    skip: Option<SkipIn>,
-    /// Temporal reuse (Fig. 12a): evicted line-buffer rows are re-emitted
-    /// on port 1 as the skip stream.
-    forward: Option<Arc<Fifo>>,
-    /// Loop merge (Fig. 12b): the pointwise downsample computed inside
-    /// this task, emitting on port 1.
-    ds: Option<DsStage<'w>>,
-}
-
-struct PoolStage {
-    name: String,
-    k: usize,
-    stride: usize,
-    ih: usize,
-    iw: usize,
-    c: usize,
-    oh: usize,
-    ow: usize,
-    input: Arc<Fifo>,
-    out: Arc<Fifo>,
-}
-
-struct GapStage {
-    h: usize,
-    w: usize,
-    c: usize,
-    in_exp: i32,
-    out_exp: i32,
-    input: Arc<Fifo>,
-    out: Arc<Fifo>,
-}
-
-struct LinearStage<'w> {
-    cout: usize,
-    /// Pixel tokens per frame on the input stream.
-    tokens: usize,
-    cin: usize,
-    w: &'w [i32],
-    bias: &'w [i32],
-    input: Arc<Fifo>,
-    out: Arc<Fifo>,
-}
-
-struct ReluStage {
-    tokens: usize,
-    input: Arc<Fifo>,
-    out: Arc<Fifo>,
-}
-
-enum Stage<'w> {
-    Conv(ConvStage<'w>),
-    Pool(PoolStage),
-    Gap(GapStage),
-    Linear(LinearStage<'w>),
-    Relu(ReluStage),
-}
-
-// --------------------------------------------------------------- helpers
-
-/// Run `f`, raising the shared abort flag on error *or panic* so every
-/// peer blocked on a FIFO unwinds within one poll interval.
-fn guarded<T>(
-    abort: &AtomicBool,
-    f: impl FnOnce() -> Result<T, StreamError>,
-) -> Result<T, StreamError> {
-    struct Guard<'a>(&'a AtomicBool, bool);
-    impl Drop for Guard<'_> {
-        fn drop(&mut self) {
-            if self.1 {
-                self.0.store(true, Ordering::SeqCst);
-            }
-        }
-    }
-    let mut g = Guard(abort, true);
-    let r = f();
-    if r.is_ok() {
-        g.1 = false;
-    }
-    r
-}
-
-fn pull_row(input: &Fifo, iw: usize, ich: usize) -> Result<Box<[i32]>, StreamError> {
-    let mut row = vec![0i32; iw * ich].into_boxed_slice();
-    for x in 0..iw {
-        let t = input.pop()?;
-        row[x * ich..(x + 1) * ich].copy_from_slice(&t);
-    }
-    Ok(row)
-}
-
-fn forward_rows(fwd: &Fifo, rows: &[Box<[i32]>], ich: usize) -> Result<(), StreamError> {
-    for row in rows {
-        for px in row.chunks_exact(ich) {
-            fwd.push(Box::from(px))?;
-        }
-    }
-    Ok(())
-}
-
-// ---------------------------------------------------------- stage bodies
-
-fn run_source(input: &QTensor, out: &Fifo) -> Result<(), StreamError> {
-    let (n, h, w, c) = (input.shape.n, input.shape.h, input.shape.w, input.shape.c);
-    for f in 0..n {
-        for y in 0..h {
-            for x in 0..w {
-                let base = ((f * h + y) * w + x) * c;
-                out.push(Box::from(&input.data[base..base + c]))?;
-            }
-        }
-    }
-    Ok(())
-}
-
-/// Emit one merged-downsample output row from the resident input rows.
-fn emit_ds_row(
-    ds: &DsStage<'_>,
-    lb: &LineBuffer,
-    dy: usize,
-    ih: usize,
-    iw: usize,
-    ich: usize,
-) -> Result<(), StreamError> {
-    let mut acc = vec![0i32; ds.och];
-    for ox in 0..ds.ow {
-        acc.copy_from_slice(ds.bias);
-        for ky in 0..ds.k {
-            let iy = dy * ds.stride + ky;
-            if iy < ds.pad || iy - ds.pad >= ih {
-                continue;
-            }
-            let row = lb.row(iy - ds.pad);
-            for kx in 0..ds.k {
-                let ix = ox * ds.stride + kx;
-                if ix < ds.pad || ix - ds.pad >= iw {
-                    continue;
-                }
-                let base = (ix - ds.pad) * ich;
-                let wtap = (ky * ds.k + kx) * ich * ds.och;
-                for ci in 0..ich {
-                    let xv = row[base + ci];
-                    if xv == 0 {
-                        continue;
-                    }
-                    let ws = &ds.w[wtap + ci * ds.och..wtap + (ci + 1) * ds.och];
-                    for (a, &wv) in acc.iter_mut().zip(ws) {
-                        *a += xv * wv;
-                    }
-                }
-            }
-        }
-        let tok: Box<[i32]> =
-            acc.iter().map(|&v| requantize(v, ds.acc_exp, ds.out_exp, false)).collect();
-        ds.out.push(tok)?;
-    }
-    Ok(())
-}
-
-/// Emit every downsample row whose input rows are already resident.
-fn emit_ready_ds_rows(
-    ds_next: &mut usize,
-    ds: &DsStage<'_>,
-    lb: &LineBuffer,
-    ih: usize,
-    iw: usize,
-    ich: usize,
-) -> Result<(), StreamError> {
-    while *ds_next < ds.oh {
-        let last = (*ds_next * ds.stride + ds.k).saturating_sub(1 + ds.pad).min(ih - 1);
-        if lb.next_row() <= last {
-            break;
-        }
-        emit_ds_row(ds, lb, *ds_next, ih, iw, ich)?;
-        *ds_next += 1;
-    }
-    Ok(())
-}
-
-fn run_conv(p: ConvStage<'_>, frames: usize) -> Result<Vec<BufferStat>, StreamError> {
-    let (k, s, pad) = (p.k, p.stride, p.pad);
-    let rows_bound = if p.ds.is_some() { k + 1 } else { k };
-    let mut lb = LineBuffer::new(format!("{}.window", p.name), p.iw * p.ich, rows_bound);
-    let mut acc = vec![0i32; p.och];
-    for _f in 0..frames {
-        let mut ds_next = 0usize;
-        for oy in 0..p.oh {
-            // Pull rows until the window for output row `oy` is resident.
-            let last = (oy * s + k).saturating_sub(1 + pad).min(p.ih - 1);
-            while lb.next_row() <= last {
-                lb.push_row(pull_row(&p.input, p.iw, p.ich)?);
-            }
-            for ox in 0..p.ow {
-                // Accumulator init: bias (Fig. 4), then the aligned skip
-                // stream (Fig. 13) — same order as golden's conv2d.
-                acc.copy_from_slice(p.bias);
-                if let Some(sk) = &p.skip {
-                    let t = sk.fifo.pop()?;
-                    for (a, &v) in acc.iter_mut().zip(t.iter()) {
-                        *a += v << sk.shift;
-                    }
-                }
-                for ky in 0..k {
-                    let iy = oy * s + ky;
-                    if iy < pad || iy - pad >= p.ih {
-                        continue;
-                    }
-                    let row = lb.row(iy - pad);
-                    for kx in 0..k {
-                        let ix = ox * s + kx;
-                        if ix < pad || ix - pad >= p.iw {
-                            continue;
-                        }
-                        let base = (ix - pad) * p.ich;
-                        let wtap = (ky * k + kx) * p.ich * p.och;
-                        for ci in 0..p.ich {
-                            let xv = row[base + ci];
-                            if xv == 0 {
-                                continue;
-                            }
-                            let ws = &p.w[wtap + ci * p.och..wtap + (ci + 1) * p.och];
-                            for (a, &wv) in acc.iter_mut().zip(ws) {
-                                *a += xv * wv;
-                            }
-                        }
-                    }
-                }
-                let tok: Box<[i32]> =
-                    acc.iter().map(|&v| requantize(v, p.acc_exp, p.out_exp, p.relu)).collect();
-                p.out.push(tok)?;
-            }
-            if let Some(ds) = &p.ds {
-                emit_ready_ds_rows(&mut ds_next, ds, &lb, p.ih, p.iw, p.ich)?;
-            }
-            // Evict rows that neither the host's next output row nor the
-            // pending downsample rows can still reach; forwarded rows are
-            // the temporal-reuse skip stream.
-            let next_host = if oy + 1 < p.oh { ((oy + 1) * s).saturating_sub(pad) } else { p.ih };
-            let next_ds = match &p.ds {
-                Some(ds) if ds_next < ds.oh => (ds_next * ds.stride).saturating_sub(ds.pad),
-                _ => p.ih,
-            };
-            let evicted = lb.evict_below(next_host.min(next_ds));
-            if let Some(fwd) = &p.forward {
-                forward_rows(fwd, &evicted, p.ich)?;
-            }
-        }
-        // Frame drain: finish the downsample program, consume any input
-        // rows the host windows never reached, and flush the line buffer
-        // (the skip consumer expects the complete forwarded tensor).
-        if let Some(ds) = &p.ds {
-            while ds_next < ds.oh {
-                let last = (ds_next * ds.stride + ds.k).saturating_sub(1 + ds.pad).min(p.ih - 1);
-                while lb.next_row() <= last {
-                    lb.push_row(pull_row(&p.input, p.iw, p.ich)?);
-                }
-                emit_ds_row(ds, &lb, ds_next, p.ih, p.iw, p.ich)?;
-                ds_next += 1;
-            }
-        }
-        while lb.next_row() < p.ih {
-            lb.push_row(pull_row(&p.input, p.iw, p.ich)?);
-        }
-        let rest = lb.flush();
-        if let Some(fwd) = &p.forward {
-            forward_rows(fwd, &rest, p.ich)?;
-        }
-    }
-    Ok(vec![lb.stat()])
-}
-
-fn run_pool(p: PoolStage, frames: usize) -> Result<Vec<BufferStat>, StreamError> {
-    let mut lb = LineBuffer::new(format!("{}.window", p.name), p.iw * p.c, p.k);
-    for _f in 0..frames {
-        for oy in 0..p.oh {
-            let last = (oy * p.stride + p.k - 1).min(p.ih - 1);
-            while lb.next_row() <= last {
-                lb.push_row(pull_row(&p.input, p.iw, p.c)?);
-            }
-            for ox in 0..p.ow {
-                let mut best = vec![i32::MIN; p.c];
-                for ky in 0..p.k {
-                    let row = lb.row(oy * p.stride + ky);
-                    for kx in 0..p.k {
-                        let base = (ox * p.stride + kx) * p.c;
-                        for (ch, b) in best.iter_mut().enumerate() {
-                            *b = (*b).max(row[base + ch]);
-                        }
-                    }
-                }
-                p.out.push(best.into_boxed_slice())?;
-            }
-            let next = if oy + 1 < p.oh { (oy + 1) * p.stride } else { p.ih };
-            lb.evict_below(next);
-        }
-        while lb.next_row() < p.ih {
-            lb.push_row(pull_row(&p.input, p.iw, p.c)?);
-        }
-        lb.flush();
-    }
-    Ok(vec![lb.stat()])
-}
-
-fn run_gap(p: GapStage, frames: usize) -> Result<Vec<BufferStat>, StreamError> {
-    let hw = p.h * p.w;
-    // Power-of-two validated at plan time.
-    let shift = p.out_exp - p.in_exp + hw.trailing_zeros() as i32;
-    for _f in 0..frames {
-        let mut acc = vec![0i32; p.c];
-        for _ in 0..hw {
-            let t = p.input.pop()?;
-            for (a, &v) in acc.iter_mut().zip(t.iter()) {
-                *a += v;
-            }
-        }
-        let tok: Box<[i32]> = acc.iter().map(|&v| clip_i8(round_shift(v, shift))).collect();
-        p.out.push(tok)?;
-    }
-    Ok(Vec::new())
-}
-
-fn run_linear(p: LinearStage<'_>, frames: usize) -> Result<Vec<BufferStat>, StreamError> {
-    for _f in 0..frames {
-        let mut xbuf = Vec::with_capacity(p.cin);
-        for _ in 0..p.tokens {
-            let t = p.input.pop()?;
-            xbuf.extend_from_slice(&t);
-        }
-        let mut out = vec![0i32; p.cout];
-        for (co, o) in out.iter_mut().enumerate() {
-            let mut a = p.bias[co];
-            for (ci, &xv) in xbuf.iter().enumerate() {
-                a += xv * p.w[ci * p.cout + co];
-            }
-            *o = a;
-        }
-        p.out.push(out.into_boxed_slice())?;
-    }
-    Ok(Vec::new())
-}
-
-fn run_relu(p: ReluStage, frames: usize) -> Result<Vec<BufferStat>, StreamError> {
-    for _f in 0..frames {
-        for _ in 0..p.tokens {
-            let t = p.input.pop()?;
-            let tok: Box<[i32]> = t.iter().map(|&v| v.max(0)).collect();
-            p.out.push(tok)?;
-        }
-    }
-    Ok(Vec::new())
-}
-
-fn run_stage(stage: Stage<'_>, frames: usize) -> Result<Vec<BufferStat>, StreamError> {
-    match stage {
-        Stage::Conv(p) => run_conv(p, frames),
-        Stage::Pool(p) => run_pool(p, frames),
-        Stage::Gap(p) => run_gap(p, frames),
-        Stage::Linear(p) => run_linear(p, frames),
-        Stage::Relu(p) => run_relu(p, frames),
-    }
-}
-
-// ------------------------------------------------------------- execution
-
-/// Run `input` through the streaming pipeline for graph `g`.
+/// Run `input` through a freshly built streaming pipeline for graph `g`,
+/// then drain and join it.
 ///
 /// Bit-identical to [`golden::run`](crate::sim::golden::run) on the same
 /// graph/weights/input, but executed as a concurrent task pipeline with
 /// bounded FIFOs; returns the logits plus the per-buffer occupancy stats.
+/// All pool policy knobs apply (`cfg.replicas` pipeline copies,
+/// `cfg.naive_add` explicit-Add dataflow, ILP-driven depths and channel
+/// workers); a stalled pipeline surfaces as a typed error, never a hang.
 ///
-/// Requires the *optimized* graph form: explicit `Add`/`BatchNorm` nodes
-/// and raw-accumulator streams are rejected with an error (the naive
-/// dataflow is the golden model's and the simulator's job).
+/// Serving should hold a [`StreamPool`] (or the `StreamBackend`) for its
+/// lifetime instead: this wrapper pays plan + thread spawn + pipeline
+/// fill on every call, which is exactly the overhead the pool removes.
 pub fn run_streaming(
     g: &Graph,
     weights: &ModelWeights,
     input: &QTensor,
     cfg: &StreamConfig,
 ) -> Result<(QTensor, StreamStats)> {
-    let shapes = infer_shapes(g).map_err(|e| anyhow!("{e}"))?;
-    let frames = input.shape.n;
-    anyhow::ensure!(frames >= 1, "empty input batch");
-
-    let abort = Arc::new(AtomicBool::new(false));
-    let timeout = cfg.progress_timeout;
-    let mut fifos: Vec<Arc<Fifo>> = Vec::new();
-    let mut fifo_of: BTreeMap<Edge, Arc<Fifo>> = BTreeMap::new();
-
-    // Pass 1: one FIFO per consumed edge, sized by hls::streams according
-    // to its role (paper Section III-E).
-    for n in g.live() {
-        for (e, role) in &n.inputs {
-            anyhow::ensure!(
-                g.consumers(*e).len() == 1,
-                "stream backend needs single-consumer edges; output of {} has several",
-                g.node(e.node).name
-            );
-            let es = shapes
-                .get(e)
-                .copied()
-                .ok_or_else(|| anyhow!("{}: unshaped input edge", n.name))?;
-            let (name, kind, cap) = match role {
-                InputRole::SkipInit => {
-                    let a = match &n.op {
-                        Op::Conv(a) => a,
-                        _ => bail!("{}: skip input on a non-conv node", n.name),
-                    };
-                    // Eq. 22: the optimized B_sc is the consumer's own
-                    // window-buffer size.
-                    let data_shape = shapes[&n.inputs[0].0];
-                    let spec = skip_stream(buffer_size(a.k, a.k, data_shape.w, a.cin, 1));
-                    let cap = cfg.skip_capacity_override.unwrap_or_else(|| spec.capacity());
-                    (format!("{}.skip", n.name), StreamKind::Skip, cap)
-                }
-                InputRole::Data => {
-                    if matches!(g.node(e.node).op, Op::Input { .. }) {
-                        let spec = dma_stream(es.w * es.c);
-                        (format!("{}.in", n.name), StreamKind::Dma, spec.capacity())
-                    } else {
-                        // One full och burst per window position.
-                        let spec = output_stream(es.c, es.c, 1);
-                        (format!("{}.in", n.name), StreamKind::Output, spec.capacity())
-                    }
-                }
-            };
-            let f = Fifo::new(name, kind, cap, abort.clone(), timeout);
-            fifos.push(f.clone());
-            fifo_of.insert(*e, f);
-        }
-    }
-
-    // The network output: the unique sink node must be the classifier.
-    let out_node = g
-        .output()
-        .ok_or_else(|| anyhow!("graph has no unique output node"))?;
-    anyhow::ensure!(
-        matches!(g.node(out_node).op, Op::Linear { .. }),
-        "graph has no linear output node"
-    );
-    let out_shape = shapes[&Edge::new(out_node, 0)];
-    let classes = out_shape.c;
-    let sink_fifo = Fifo::new(
-        format!("{}.out", g.node(out_node).name),
-        StreamKind::Dma,
-        dma_stream(classes).capacity(),
-        abort.clone(),
-        timeout,
-    );
-    fifos.push(sink_fifo.clone());
-
-    let out_fifo_for = |id: usize| -> Result<Arc<Fifo>> {
-        if id == out_node {
-            Ok(sink_fifo.clone())
-        } else {
-            fifo_of
-                .get(&Edge::new(id, 0))
-                .cloned()
-                .ok_or_else(|| anyhow!("output of {} has no consumer", g.node(id).name))
-        }
-    };
-
-    // Pass 2: build the stage plan.
-    let mut stages: Vec<Stage<'_>> = Vec::new();
-    let mut source_fifo: Option<Arc<Fifo>> = None;
-    for n in g.live() {
-        match &n.op {
-            Op::Input { h, w, c, exp } => {
-                if (input.shape.h, input.shape.w, input.shape.c) != (*h, *w, *c) {
-                    bail!("input shape {} vs expected ({h},{w},{c})", input.shape);
-                }
-                if input.exp != *exp {
-                    bail!("input exp {} vs expected {exp}", input.exp);
-                }
-                anyhow::ensure!(source_fifo.is_none(), "stream backend supports one input node");
-                source_fifo = Some(out_fifo_for(n.id)?);
-            }
-            Op::Conv(a) => {
-                anyhow::ensure!(
-                    !a.raw_output,
-                    "stream backend runs optimized graphs only ({}: raw int32 accumulator \
-                     streams feed explicit Add nodes)",
-                    n.name
-                );
-                let in_shape = shapes[&n.inputs[0].0];
-                let os = shapes[&Edge::new(n.id, 0)];
-                let lw = weights.layer(&n.name)?;
-                anyhow::ensure!(
-                    lw.w.data.len() == a.k * a.k * a.cin * a.cout && lw.b.data.len() == a.cout,
-                    "{}: weight/bias sizes do not match conv geometry",
-                    n.name
-                );
-                let skip = n
-                    .inputs
-                    .iter()
-                    .find(|(_, r)| *r == InputRole::SkipInit)
-                    .map(|(e, _)| -> Result<SkipIn> {
-                        let se = shapes[e];
-                        anyhow::ensure!(
-                            (se.h, se.w, se.c) == (os.h, os.w, os.c),
-                            "{}: skip stream shape mismatch",
-                            n.name
-                        );
-                        let shift = se.exp - lw.acc_exp();
-                        anyhow::ensure!(shift >= 0, "{}: skip exp below acc exp", n.name);
-                        Ok(SkipIn { fifo: fifo_of[e].clone(), shift: shift as u32 })
-                    })
-                    .transpose()?;
-                let aux = fifo_of.get(&Edge::new(n.id, 1)).cloned();
-                let (forward, ds) = if a.forwards_input {
-                    (aux, None)
-                } else if let Some(m) = &a.merged_downsample {
-                    match aux {
-                        Some(out) => {
-                            let dss = shapes[&Edge::new(n.id, 1)];
-                            let dsw = weights.layer(&m.name)?;
-                            anyhow::ensure!(
-                                dsw.w.data.len() == m.k * m.k * a.cin * m.cout
-                                    && dsw.b.data.len() == m.cout,
-                                "{}: merged downsample weight sizes mismatch",
-                                m.name
-                            );
-                            let ds = DsStage {
-                                k: m.k,
-                                stride: m.stride,
-                                pad: m.pad,
-                                oh: dss.h,
-                                ow: dss.w,
-                                och: m.cout,
-                                out_exp: m.out_exp,
-                                acc_exp: dsw.acc_exp(),
-                                w: dsw.w.data.as_slice(),
-                                bias: dsw.b.data.as_slice(),
-                                out,
-                            };
-                            (None, Some(ds))
-                        }
-                        // Port 1 unconsumed: skip the downsample entirely.
-                        None => (None, None),
-                    }
-                } else {
-                    (None, None)
-                };
-                stages.push(Stage::Conv(ConvStage {
-                    name: n.name.clone(),
-                    k: a.k,
-                    stride: a.stride,
-                    pad: a.pad,
-                    relu: a.relu,
-                    out_exp: a.out_exp,
-                    acc_exp: lw.acc_exp(),
-                    ih: in_shape.h,
-                    iw: in_shape.w,
-                    ich: a.cin,
-                    oh: os.h,
-                    ow: os.w,
-                    och: a.cout,
-                    w: lw.w.data.as_slice(),
-                    bias: lw.b.data.as_slice(),
-                    input: fifo_of[&n.inputs[0].0].clone(),
-                    out: out_fifo_for(n.id)?,
-                    skip,
-                    forward,
-                    ds,
-                }));
-            }
-            Op::MaxPool { k, stride } => {
-                // Window/stride bounds already validated by infer_shapes.
-                let s = shapes[&n.inputs[0].0];
-                let os = shapes[&Edge::new(n.id, 0)];
-                stages.push(Stage::Pool(PoolStage {
-                    name: n.name.clone(),
-                    k: *k,
-                    stride: *stride,
-                    ih: s.h,
-                    iw: s.w,
-                    c: s.c,
-                    oh: os.h,
-                    ow: os.w,
-                    input: fifo_of[&n.inputs[0].0].clone(),
-                    out: out_fifo_for(n.id)?,
-                }));
-            }
-            Op::GlobalAvgPool { out_exp } => {
-                let s = shapes[&n.inputs[0].0];
-                anyhow::ensure!(
-                    (s.h * s.w).is_power_of_two(),
-                    "{}: global pool window {}x{} must be 2^k",
-                    n.name,
-                    s.h,
-                    s.w
-                );
-                stages.push(Stage::Gap(GapStage {
-                    h: s.h,
-                    w: s.w,
-                    c: s.c,
-                    in_exp: s.exp,
-                    out_exp: *out_exp,
-                    input: fifo_of[&n.inputs[0].0].clone(),
-                    out: out_fifo_for(n.id)?,
-                }));
-            }
-            Op::Linear { cin, cout, .. } => {
-                let s = shapes[&n.inputs[0].0];
-                let lw = weights.layer(&n.name)?;
-                anyhow::ensure!(
-                    lw.w.data.len() == cin * cout && lw.b.data.len() == *cout,
-                    "{}: linear weight sizes mismatch",
-                    n.name
-                );
-                stages.push(Stage::Linear(LinearStage {
-                    cout: *cout,
-                    tokens: s.h * s.w,
-                    cin: *cin,
-                    w: lw.w.data.as_slice(),
-                    bias: lw.b.data.as_slice(),
-                    input: fifo_of[&n.inputs[0].0].clone(),
-                    out: out_fifo_for(n.id)?,
-                }));
-            }
-            Op::Relu => {
-                let s = shapes[&n.inputs[0].0];
-                stages.push(Stage::Relu(ReluStage {
-                    tokens: s.h * s.w,
-                    input: fifo_of[&n.inputs[0].0].clone(),
-                    out: out_fifo_for(n.id)?,
-                }));
-            }
-            Op::Add { .. } | Op::BatchNorm(_) => {
-                bail!(
-                    "stream backend runs optimized graphs only ({} is a {} node)",
-                    n.name,
-                    n.op.kind()
-                );
-            }
-        }
-    }
-    let source_fifo = source_fifo.ok_or_else(|| anyhow!("graph has no input node"))?;
-
-    // Execute: one scoped thread per stage plus source and sink.
-    let mut stage_stats: Vec<BufferStat> = Vec::new();
-    let mut first_err: Option<StreamError> = None;
-    let mut logits: Option<Vec<i32>> = None;
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(stages.len() + 1);
-        {
-            let abort = abort.clone();
-            let f = source_fifo.clone();
-            handles.push(s.spawn(move || {
-                guarded(&abort, || run_source(input, &f).map(|()| Vec::new()))
-            }));
-        }
-        for st in stages.drain(..) {
-            let abort = abort.clone();
-            handles.push(s.spawn(move || guarded(&abort, || run_stage(st, frames))));
-        }
-        let sink_handle = {
-            let abort = abort.clone();
-            let f = sink_fifo.clone();
-            s.spawn(move || {
-                guarded(&abort, || {
-                    let mut out = vec![0i32; frames * classes];
-                    for fr in 0..frames {
-                        let t = f.pop()?;
-                        out[fr * classes..(fr + 1) * classes].copy_from_slice(&t);
-                    }
-                    Ok(out)
-                })
-            })
-        };
-        let mut record = |e: StreamError| {
-            if !matches!(e, StreamError::Aborted) && first_err.is_none() {
-                first_err = Some(e);
-            }
-        };
-        for h in handles {
-            match h.join() {
-                Ok(Ok(bufs)) => stage_stats.extend(bufs),
-                Ok(Err(e)) => record(e),
-                Err(_) => record(StreamError::Panicked),
-            }
-        }
-        match sink_handle.join() {
-            Ok(Ok(out)) => logits = Some(out),
-            Ok(Err(e)) => record(e),
-            Err(_) => record(StreamError::Panicked),
-        }
-    });
-    if let Some(e) = first_err {
-        return Err(anyhow::Error::new(e).context("streaming execution failed"));
-    }
-    let data = logits.ok_or_else(|| anyhow!("streaming execution produced no output"))?;
-
-    // Stats: FIFO + line-buffer peaks vs the whole-tensor intermediates a
-    // non-streaming executor materializes per frame.
-    let mut buffers: Vec<BufferStat> = fifos.iter().map(|f| f.stat()).collect();
-    buffers.extend(stage_stats);
-    let whole_tensor_elems: usize = shapes
-        .iter()
-        .filter(|(e, _)| {
-            !matches!(g.node(e.node).op, Op::Input { .. }) && !(e.node == out_node && e.port == 0)
-        })
-        .map(|(_, s)| s.h * s.w * s.c)
-        .sum();
-    let stats = StreamStats { buffers, frames, whole_tensor_elems };
-    Ok((QTensor::from_vec(Shape4::new(frames, 1, 1, classes), 0, data), stats))
+    anyhow::ensure!(input.shape.n >= 1, "empty input batch");
+    let pool = StreamPool::new("stream", g, Arc::new(weights.clone()), cfg.clone())?;
+    let result = pool.infer(input);
+    let stats = pool.shutdown();
+    Ok((result?, stats))
 }

@@ -15,7 +15,7 @@
 //! [`hls::streams`]: crate::hls::streams
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -69,6 +69,44 @@ pub struct BufferStat {
     pub peak: usize,
 }
 
+/// Live peak-occupancy gauge for buffers owned by a stage thread (line
+/// buffers): pre-registered with the pool at plan time so buffering stats
+/// stay readable *while* the persistent pipeline runs, without joining
+/// the stage.  The stage publishes its held-element count after every
+/// mutation; readers take a consistent monotone peak.
+#[derive(Debug)]
+pub struct PeakGauge {
+    name: String,
+    kind: StreamKind,
+    capacity: usize,
+    peak: AtomicUsize,
+}
+
+impl PeakGauge {
+    pub fn new(name: String, kind: StreamKind, capacity: usize) -> Arc<PeakGauge> {
+        Arc::new(PeakGauge { name, kind, capacity, peak: AtomicUsize::new(0) })
+    }
+
+    /// Record an observed occupancy (elements currently held).
+    pub fn observe(&self, held: usize) {
+        self.peak.fetch_max(held, Ordering::Relaxed);
+    }
+
+    /// Peak elements observed (no allocation — for cheap serving gauges).
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn stat(&self) -> BufferStat {
+        BufferStat {
+            name: self.name.clone(),
+            kind: self.kind,
+            capacity: self.capacity,
+            peak: self.peak.load(Ordering::Relaxed),
+        }
+    }
+}
+
 struct FifoState {
     queue: VecDeque<Box<[i32]>>,
     occupancy: usize,
@@ -106,6 +144,10 @@ impl Fifo {
     }
 
     /// Push one token, blocking (bounded) until `token.len()` elements fit.
+    ///
+    /// A zero-length token occupies no capacity and therefore always fits,
+    /// even into a full FIFO — the pool's end-of-stream sentinel relies on
+    /// this so shutdown can never itself deadlock.
     pub fn push(&self, token: Box<[i32]>) -> Result<(), StreamError> {
         let deadline = Instant::now() + self.timeout;
         let mut st = self.state.lock().unwrap();
@@ -118,6 +160,28 @@ impl Fifo {
                 return Ok(());
             }
             st = self.wait(st, deadline, "push")?;
+        }
+    }
+
+    /// Pop the oldest token, blocking *without* the stall deadline — for
+    /// frame-boundary waits where indefinite idle is legitimate (a
+    /// persistent pool waiting for its next frame; the sink waiting for
+    /// the next result).  Still unblocks promptly on abort, and any real
+    /// deadlock cycle necessarily blocks some peer on a bounded push or
+    /// mid-frame pop, so stall detection is not weakened.
+    pub fn pop_idle(&self) -> Result<Box<[i32]>, StreamError> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(tok) = st.queue.pop_front() {
+                st.occupancy -= tok.len();
+                self.cv.notify_all();
+                return Ok(tok);
+            }
+            if self.abort.load(Ordering::SeqCst) {
+                return Err(StreamError::Aborted);
+            }
+            let (g, _) = self.cv.wait_timeout(st, POLL).unwrap();
+            st = g;
         }
     }
 
@@ -159,6 +223,12 @@ impl Fifo {
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Peak elements held at any instant (no allocation — for cheap
+    /// serving gauges; `stat()` carries the full named record).
+    pub fn peak(&self) -> usize {
+        self.state.lock().unwrap().peak
     }
 
     pub fn stat(&self) -> BufferStat {
@@ -220,6 +290,26 @@ mod tests {
         assert_eq!(f.pop().unwrap().len(), 3);
         h.join().unwrap().unwrap();
         assert_eq!(&*f.pop().unwrap(), &[7, 7, 7]);
+    }
+
+    #[test]
+    fn pop_idle_outlives_the_stall_deadline_but_honors_abort() {
+        // A frame-boundary pop must not trip stall detection while the
+        // pool is simply idle...
+        let f = fifo(4, 50);
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.pop_idle());
+        std::thread::sleep(Duration::from_millis(150)); // > the 50ms deadline
+        f.push(vec![42].into_boxed_slice()).unwrap();
+        assert_eq!(&*h.join().unwrap().unwrap(), &[42]);
+        // ...and must still unblock promptly when a peer aborts.
+        let abort = Arc::new(AtomicBool::new(false));
+        let f = Fifo::new("i".into(), StreamKind::Dma, 4, abort.clone(), Duration::from_secs(30));
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.pop_idle());
+        std::thread::sleep(Duration::from_millis(30));
+        abort.store(true, Ordering::SeqCst);
+        assert!(matches!(h.join().unwrap().unwrap_err(), StreamError::Aborted));
     }
 
     #[test]

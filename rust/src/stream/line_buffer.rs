@@ -10,35 +10,30 @@
 //! reach it.  Eviction order is stream order, which is what lets the
 //! temporal-reuse path (paper Fig. 12a) forward evicted rows as the skip
 //! stream with no second buffer.
+//!
+//! Rows are reference-counted (`Arc<[i32]>`) so a conv stage can hand the
+//! resident window to its `och_par` channel-parallel workers without
+//! copying pixel data — the workers hold cheap clones while the stage
+//! keeps evicting/forwarding at its own pace.  Occupancy reporting is
+//! external: the owning stage publishes [`held`](LineBuffer::held) into
+//! its pre-registered [`PeakGauge`](super::PeakGauge) after every push,
+//! so the pool can read peaks while the pipeline runs.
 
-use super::fifo::BufferStat;
-use crate::hls::streams::StreamKind;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Sliding window of input rows with absolute row indexing.
 pub struct LineBuffer {
-    name: String,
-    rows: VecDeque<Box<[i32]>>,
+    rows: VecDeque<Arc<[i32]>>,
     /// Absolute index (within the current frame) of `rows[0]`.
     first: usize,
     row_elems: usize,
-    /// Row-count bound implied by the caller's access pattern (reporting).
-    rows_bound: usize,
     held: usize,
-    peak: usize,
 }
 
 impl LineBuffer {
-    pub fn new(name: String, row_elems: usize, rows_bound: usize) -> LineBuffer {
-        LineBuffer {
-            name,
-            rows: VecDeque::new(),
-            first: 0,
-            row_elems,
-            rows_bound,
-            held: 0,
-            peak: 0,
-        }
+    pub fn new(row_elems: usize) -> LineBuffer {
+        LineBuffer { rows: VecDeque::new(), first: 0, row_elems, held: 0 }
     }
 
     /// Absolute index of the next row to be pushed (== rows consumed from
@@ -47,10 +42,9 @@ impl LineBuffer {
         self.first + self.rows.len()
     }
 
-    pub fn push_row(&mut self, row: Box<[i32]>) {
+    pub fn push_row(&mut self, row: Arc<[i32]>) {
         debug_assert_eq!(row.len(), self.row_elems);
         self.held += row.len();
-        self.peak = self.peak.max(self.held);
         self.rows.push_back(row);
     }
 
@@ -59,9 +53,20 @@ impl LineBuffer {
         &self.rows[abs - self.first]
     }
 
+    /// Elements currently held (published to the stage's peak gauge).
+    pub fn held(&self) -> usize {
+        self.held
+    }
+
+    /// Snapshot of the resident rows for channel-parallel workers:
+    /// `(absolute index of the first row, cheap Arc clones in order)`.
+    pub fn resident(&self) -> (usize, Vec<Arc<[i32]>>) {
+        (self.first, self.rows.iter().cloned().collect())
+    }
+
     /// Drop every resident row with absolute index `< abs`, returning them
     /// in stream order (for skip-path forwarding).
-    pub fn evict_below(&mut self, abs: usize) -> Vec<Box<[i32]>> {
+    pub fn evict_below(&mut self, abs: usize) -> Vec<Arc<[i32]>> {
         let mut out = Vec::new();
         while self.first < abs {
             match self.rows.pop_front() {
@@ -77,20 +82,11 @@ impl LineBuffer {
     }
 
     /// End-of-frame: drain the remaining rows in order and reset indices.
-    pub fn flush(&mut self) -> Vec<Box<[i32]>> {
+    pub fn flush(&mut self) -> Vec<Arc<[i32]>> {
         let out: Vec<_> = self.rows.drain(..).collect();
         self.held = 0;
         self.first = 0;
         out
-    }
-
-    pub fn stat(&self) -> BufferStat {
-        BufferStat {
-            name: self.name.clone(),
-            kind: StreamKind::WindowSlice,
-            capacity: self.rows_bound * self.row_elems,
-            peak: self.peak,
-        }
     }
 }
 
@@ -98,36 +94,40 @@ impl LineBuffer {
 mod tests {
     use super::*;
 
-    fn row(v: i32, n: usize) -> Box<[i32]> {
-        vec![v; n].into_boxed_slice()
+    fn row(v: i32, n: usize) -> Arc<[i32]> {
+        Arc::from(vec![v; n])
     }
 
     #[test]
     fn sliding_window_evicts_in_order() {
-        let mut lb = LineBuffer::new("t".into(), 4, 3);
+        let mut lb = LineBuffer::new(4);
         for i in 0..3 {
             lb.push_row(row(i, 4));
         }
         assert_eq!(lb.next_row(), 3);
+        assert_eq!(lb.held(), 12);
         assert_eq!(lb.row(1)[0], 1);
         let ev = lb.evict_below(2);
         assert_eq!(ev.len(), 2);
         assert_eq!(ev[0][0], 0);
         assert_eq!(ev[1][0], 1);
         assert_eq!(lb.row(2)[0], 2);
-        assert_eq!(lb.stat().peak, 12);
+        assert_eq!(lb.held(), 4);
+        let (first, rows) = lb.resident();
+        assert_eq!(first, 2);
+        assert_eq!(rows.len(), 1);
     }
 
     #[test]
     fn flush_resets_for_next_frame() {
-        let mut lb = LineBuffer::new("t".into(), 2, 2);
+        let mut lb = LineBuffer::new(2);
         lb.push_row(row(7, 2));
         let rest = lb.flush();
         assert_eq!(rest.len(), 1);
         assert_eq!(lb.next_row(), 0);
+        assert_eq!(lb.held(), 0);
         lb.push_row(row(9, 2));
         assert_eq!(lb.row(0)[0], 9);
-        // Peak persists across frames (it is a whole-run statistic).
-        assert_eq!(lb.stat().peak, 2);
+        assert_eq!(lb.held(), 2);
     }
 }

@@ -1,32 +1,52 @@
-//! Streaming line-buffer execution backend (paper Sections III-E/F/G).
+//! Streaming line-buffer execution backend (paper Sections III-E/F/G)
+//! with a persistent, replicated serving pool.
 //!
 //! Until this module existed, the paper's central buffering claim — skip
 //! connections served from bounded FIFOs sized by Eq. 22 instead of
 //! whole-tensor intermediates — lived only as *sizing math* in
 //! [`hls::streams`] and [`hls::window`].  This subsystem actually runs
-//! that dataflow in software:
+//! that dataflow in software, at the paper's parallelism model:
 //!
-//! * [`executor::run_streaming`] spawns one scoped thread per layer stage
-//!   of the optimized graph, connected by bounded [`Fifo`]s whose depths
-//!   come from `hls::streams` (DMA, output-burst and `skip_stream(B_sc)`
-//!   kinds) and whose sliding windows are [`LineBuffer`]s mirroring
-//!   `hls::window`'s geometry;
-//! * the skip path flows through the Eq. 22-sized FIFO directly into the
-//!   fused conv1 accumulator init (paper Fig. 13) — identity skips as
-//!   forwarded line-buffer rows (temporal reuse, Fig. 12a), downsample
-//!   skips computed inside the host conv task (loop merge, Fig. 12b);
-//! * numerics are bit-identical to [`sim::golden`](crate::sim::golden)
-//!   (same `quant::requantize` contract in the same evaluation order);
-//! * all blocking is bounded: an undersized FIFO produces a
-//!   [`StreamError::Stalled`] *error*, never a hang — the executor
-//!   analogue of the simulator's deadlock report (Fig. 14);
-//! * every run reports per-buffer peak occupancy ([`StreamStats`]) so
-//!   tests can assert the measured buffering stays below the
-//!   whole-tensor-intermediates total and within the Eq. 22 depths.
+//! * [`StreamPool`] is the serving engine: stage threads are
+//!   spawned **once per pipeline replica** and stay alive across frames,
+//!   fed through a shared work queue — frame N+1 enters conv0 while
+//!   frame N is still in the classifier (frame-level pipelining,
+//!   Section III-B), `replicas` pipeline copies trade buffering for
+//!   throughput, and each conv stage splits its output channels across
+//!   up to `och_par` worker threads from the layer's ILP allocation
+//!   ([`ilp::solver::LayerAlloc`](crate::ilp::LayerAlloc));
+//! * FIFO depths and `ow_par` come from the board/ILP configuration
+//!   ([`planned_config`] → `hls::config::configure`) — the
+//!   executor validates exactly the depths codegen emits: conv output
+//!   bursts at `och_groups x och_par x ow_par`, fused skips at Eq. 22
+//!   (`skip_stream(B_sc)`), naive skips at Eq. 21;
+//! * identity skips flow as forwarded line-buffer rows (temporal reuse,
+//!   Fig. 12a), downsample skips are computed inside the host conv task
+//!   (loop merge, Fig. 12b), both into the fused conv1 accumulator init
+//!   (Fig. 13); numerics are bit-identical to
+//!   [`sim::golden`](crate::sim::golden) — including across replicas and
+//!   channel-split workers;
+//! * [`StreamConfig::naive_add`] runs the *unoptimized* dataflow instead:
+//!   tee'd producers, raw int32 accumulator streams, explicit Add stage
+//!   tasks behind Eq. 21-sized skip FIFOs — undersize them and the
+//!   executor reproduces the paper's Fig. 14 deadlock as a typed
+//!   [`StreamError::Stalled`] error, not only in the discrete-event
+//!   simulator;
+//! * all blocking is bounded (stall errors, never hangs) and shutdown is
+//!   drain-and-join: the pool flows a zero-length end-of-stream sentinel
+//!   through every replica, finishes frames mid-pipeline, answers every
+//!   accepted frame, and leaks no threads;
+//! * every pool reports cumulative per-buffer peak occupancy
+//!   ([`StreamStats`], live via [`StreamPool::stats`]) so tests
+//!   and serving metrics can assert the measured buffering stays below
+//!   whole-tensor intermediates and within the configured depths.
 //!
-//! Serving-side integration lives in
-//! [`runtime::backend`](crate::runtime::backend) as `StreamBackend` /
-//! `StreamFactory` (the fourth backend next to pjrt/golden/sim).
+//! [`executor::run_streaming`] remains the one-shot wrapper (build, run
+//! one batch, drain) for tools and property tests.  Serving-side
+//! integration lives in [`runtime::backend`](crate::runtime::backend) as
+//! `StreamBackend` / `StreamFactory`: the backend holds a pool for its
+//! lifetime, `infer_batch` enqueues frames and awaits results in order,
+//! and the router exports the pool's buffering stats as gauges.
 //!
 //! [`hls::streams`]: crate::hls::streams
 //! [`hls::window`]: crate::hls::window
@@ -34,47 +54,79 @@
 mod executor;
 mod fifo;
 mod line_buffer;
+mod pool;
+mod stage;
 
 pub use executor::run_streaming;
-pub use fifo::{BufferStat, Fifo, StreamError};
+pub use fifo::{BufferStat, Fifo, PeakGauge, StreamError};
 pub use line_buffer::LineBuffer;
+pub use pool::{planned_config, FrameTicket, StreamPool};
 
 use std::time::Duration;
 
 use crate::hls::streams::StreamKind;
+use crate::hls::{Board, KV260};
 
-/// Executor policy knobs.
+/// Executor/pool policy knobs.
 #[derive(Debug, Clone)]
 pub struct StreamConfig {
     /// Bounded wait before a blocked FIFO push/pop reports
     /// [`StreamError::Stalled`] instead of hanging.
     pub progress_timeout: Duration,
     /// Test hook: force every skip FIFO to this capacity (in elements),
-    /// overriding the Eq. 22 depth from `hls::streams::skip_stream` —
-    /// used by the deadlock-regression tests to prove that undersized
-    /// depths fail with an error rather than a hang.
+    /// overriding the Eq. 22 depth from `hls::streams::skip_stream` (or
+    /// the Eq. 21 naive depth) — used by the deadlock-regression tests to
+    /// prove that undersized depths fail with an error rather than a hang.
     pub skip_capacity_override: Option<usize>,
+    /// Pipeline replicas behind the pool's shared work queue.
+    pub replicas: usize,
+    /// Run the *naive* dataflow: tee'd producers, raw int32 accumulator
+    /// streams and explicit Add stage tasks behind Eq. 21-sized FIFOs
+    /// (paper Fig. 10/14) instead of rejecting unoptimized graphs.
+    pub naive_add: bool,
+    /// Cap on channel-parallel worker threads per conv stage; the actual
+    /// count is `min(cap, layer's ILP och_par, och)`.  1 = inline.
+    pub och_worker_cap: usize,
+    /// Board whose DSP budget drives the ILP allocation that sizes FIFO
+    /// depths and per-layer `och_par`.
+    pub board: &'static Board,
+    /// Output-width unroll for stream/window sizing (2 = the paper's
+    /// DSP-packing default, matching codegen).
+    pub ow_par: usize,
 }
 
 impl Default for StreamConfig {
     fn default() -> Self {
-        // Generous: the longest legitimate wait is the sink's first pop,
-        // which spans the whole pipeline fill (a full-frame compute in
-        // debug builds on slow CI hosts).  Stall detection stays bounded.
-        StreamConfig { progress_timeout: Duration::from_secs(60), skip_capacity_override: None }
+        StreamConfig {
+            // Generous: the longest legitimate wait is the sink's first
+            // pop, which spans the whole pipeline fill (a full-frame
+            // compute in debug builds on slow CI hosts).  Stall detection
+            // stays bounded.
+            progress_timeout: Duration::from_secs(60),
+            skip_capacity_override: None,
+            replicas: 1,
+            naive_add: false,
+            och_worker_cap: 4,
+            board: &KV260,
+            ow_par: 2,
+        }
     }
 }
 
-/// Per-run buffering report: every FIFO and line buffer with its capacity
-/// bound and peak occupancy, in activation elements (the unit of
+/// Per-pool buffering report: every FIFO and line buffer with its
+/// capacity bound and peak occupancy, in activation elements (the unit of
 /// `hls::streams` depths; most streams carry int8 activations, the final
-/// logits stream carries int32).
+/// logits stream carries int32).  For a multi-replica pool, replica
+/// `i > 0` buffer names carry an `r{i}/` prefix and
+/// `whole_tensor_elems` is scaled by the replica count (the concurrent
+/// whole-tensor storage a non-streaming executor would need).
 #[derive(Debug, Clone)]
 pub struct StreamStats {
     pub buffers: Vec<BufferStat>,
     pub frames: usize,
-    /// What a non-streaming executor materializes per frame: the summed
-    /// size of every intermediate edge tensor in the graph.
+    /// What a non-streaming executor materializes per frame (times the
+    /// pool's replica count): the summed size of every intermediate edge
+    /// tensor in the graph.
     pub whole_tensor_elems: usize,
 }
 
@@ -90,7 +142,8 @@ impl StreamStats {
         self.buffers.iter().filter(move |b| b.kind == kind)
     }
 
-    /// Look up a buffer by name (e.g. `"s0b0c1.skip"`).
+    /// Look up a buffer by name (e.g. `"s0b0c1.skip"`; replica `i > 0`
+    /// buffers are `"r{i}/s0b0c1.skip"`).
     pub fn buffer(&self, name: &str) -> Option<&BufferStat> {
         self.buffers.iter().find(|b| b.name == name)
     }

@@ -1,0 +1,582 @@
+//! The persistent frame-pipelined stream pool.
+//!
+//! [`StreamPool`] spawns `StreamConfig::replicas` copies of the streaming
+//! pipeline **once** and keeps every stage thread alive across frames:
+//! frames are submitted to a shared work queue, each replica's *feeder*
+//! thread claims the next frame and streams its pixels into the replica's
+//! DMA FIFO, and the replica's *sink* thread pops logits and answers the
+//! frame's response channel.  Because stages never restart, frame N+1
+//! enters conv0 while frame N is still in the classifier — the
+//! frame-level pipelining that gives the paper's free-running dataflow
+//! its throughput (Section III-B), which the per-call
+//! [`run_streaming`](super::run_streaming) executor pays pipeline-fill
+//! latency to approximate one frame at a time.
+//!
+//! Sizing comes from the board/ILP configuration
+//! ([`planned_config`] → `hls::config::configure`): FIFO depths are
+//! exactly the depths codegen emits, and each conv stage splits its
+//! output channels across up to `och_par` worker threads (the layer's
+//! ILP allocation, capped by `StreamConfig::och_worker_cap`).
+//!
+//! Delivery and shutdown guarantees:
+//! * results are delivered **per submission** — in-order for a caller
+//!   that waits on its tickets in submit order, regardless of
+//!   cross-replica completion order;
+//! * dropping (or [`shutdown`](StreamPool::shutdown)ing) the pool closes
+//!   the queue, flows a zero-length end-of-stream sentinel through every
+//!   replica, **drains frames mid-pipeline** (every accepted frame gets a
+//!   real response), and joins every thread — no leaks, no lost
+//!   responses;
+//! * a stage failure (e.g. an undersized-FIFO [`StreamError::Stalled`])
+//!   aborts its replica, poisons the pool, and fails queued + in-flight
+//!   frames with the typed error message — never a hang.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::{infer_shapes, Edge, Graph, Op};
+use crate::hls::config::{configure, AcceleratorConfig};
+use crate::ilp::{solve, LayerLoad};
+use crate::models::ModelWeights;
+use crate::quant::{QTensor, Shape4};
+
+use super::fifo::{Fifo, PeakGauge, StreamError};
+use super::stage::{eos, guarded, plan_pipeline, push_all, run_stage, PipelinePlan};
+use super::{StreamConfig, StreamStats};
+
+/// How often a feeder blocked on an empty queue re-checks the abort flag.
+const POLL: Duration = Duration::from_millis(20);
+
+type FrameResult = Result<Vec<i32>, String>;
+type Pending = Arc<Mutex<VecDeque<mpsc::Sender<FrameResult>>>>;
+
+/// Build per-layer ILP inputs from the graph itself (Eq. 8): the pool
+/// has no `ArchSpec` — serving constructs everything from graph+weights.
+fn loads_from_graph(g: &Graph, ow_par: usize) -> Result<Vec<LayerLoad>> {
+    let shapes = infer_shapes(g).map_err(|e| anyhow!("{e}"))?;
+    let mut loads = Vec::new();
+    for n in g.live() {
+        if let Op::Conv(a) = &n.op {
+            let os = shapes[&Edge::new(n.id, 0)];
+            loads.push(LayerLoad {
+                name: n.name.clone(),
+                macs: (os.h * os.w * a.cout * a.cin * a.k * a.k) as u64,
+                taps: a.k * a.k,
+                och: a.cout,
+                ow_par,
+            });
+            if let Some(m) = &a.merged_downsample {
+                let ds = shapes[&Edge::new(n.id, 1)];
+                loads.push(LayerLoad {
+                    name: m.name.clone(),
+                    macs: (ds.h * ds.w * m.cout * a.cin * m.k * m.k) as u64,
+                    taps: m.k * m.k,
+                    och: m.cout,
+                    ow_par,
+                });
+            }
+        }
+    }
+    anyhow::ensure!(!loads.is_empty(), "graph has no conv layers");
+    Ok(loads)
+}
+
+/// The board/ILP-derived accelerator configuration the pool sizes its
+/// FIFO depths, `ow_par`, and per-layer `och_par` worker counts from —
+/// the executor validates exactly the depths codegen emits (ROADMAP
+/// item 3), instead of a fixed ow_par=1 policy.
+pub fn planned_config(name: &str, g: &Graph, cfg: &StreamConfig) -> Result<AcceleratorConfig> {
+    let loads = loads_from_graph(g, cfg.ow_par)?;
+    let alloc = solve(&loads, cfg.board.n_par() as u64)
+        .ok_or_else(|| anyhow!("no feasible ILP allocation on {}", cfg.board.name))?;
+    configure(name, g, &alloc, cfg.board, cfg.ow_par)
+}
+
+/// Response handle for one submitted frame.
+pub struct FrameTicket {
+    rx: mpsc::Receiver<FrameResult>,
+}
+
+impl FrameTicket {
+    /// Block until the frame's logits row (or the pipeline's typed error
+    /// message) arrives.
+    pub fn wait(self) -> Result<Vec<i32>> {
+        match self.rx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(msg)) => Err(anyhow!("{msg}")),
+            Err(_) => Err(anyhow!("stream pool dropped the frame (worker died)")),
+        }
+    }
+}
+
+struct Job {
+    pixels: Box<[i32]>,
+    resp: mpsc::Sender<FrameResult>,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    open: bool,
+    poison: Option<String>,
+}
+
+struct Shared {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct ReplicaHandle {
+    supervisor: Option<JoinHandle<()>>,
+    fifos: Vec<Arc<Fifo>>,
+    gauges: Vec<Arc<PeakGauge>>,
+}
+
+/// A running pool of persistent pipeline replicas behind one work queue.
+pub struct StreamPool {
+    shared: Arc<Shared>,
+    replicas: Vec<ReplicaHandle>,
+    error: Arc<Mutex<Option<String>>>,
+    frames_done: Arc<AtomicUsize>,
+    whole_tensor_elems: usize,
+    stages_per_replica: usize,
+    classes: usize,
+    in_h: usize,
+    in_w: usize,
+    in_c: usize,
+    in_exp: i32,
+}
+
+impl StreamPool {
+    /// Plan and launch the pool: ILP/board configuration once, then
+    /// `cfg.replicas` pipeline replicas whose stage threads stay alive
+    /// until shutdown.  `name` labels threads and the configuration.
+    pub fn new(
+        name: &str,
+        g: &Graph,
+        weights: Arc<ModelWeights>,
+        cfg: StreamConfig,
+    ) -> Result<StreamPool> {
+        let n_replicas = cfg.replicas.max(1);
+        let acfg = planned_config(name, g, &cfg)?;
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState { jobs: VecDeque::new(), open: true, poison: None }),
+            cv: Condvar::new(),
+        });
+        let error = Arc::new(Mutex::new(None));
+        let frames_done = Arc::new(AtomicUsize::new(0));
+        let mut pool = StreamPool {
+            shared: shared.clone(),
+            replicas: Vec::with_capacity(n_replicas),
+            error: error.clone(),
+            frames_done: frames_done.clone(),
+            whole_tensor_elems: 0,
+            stages_per_replica: 0,
+            classes: 0,
+            in_h: 0,
+            in_w: 0,
+            in_c: 0,
+            in_exp: 0,
+        };
+        for r in 0..n_replicas {
+            let abort = Arc::new(AtomicBool::new(false));
+            let tag = if r == 0 { String::new() } else { format!("r{r}/") };
+            let plan = plan_pipeline(g, &weights, &cfg, &acfg, abort.clone(), &tag)?;
+            if r == 0 {
+                pool.whole_tensor_elems = plan.whole_tensor_elems;
+                pool.stages_per_replica = plan.stages.len();
+                pool.classes = plan.classes;
+                pool.in_h = plan.in_h;
+                pool.in_w = plan.in_w;
+                pool.in_c = plan.in_c;
+                pool.in_exp = plan.in_exp;
+            }
+            let fifos = plan.fifos.clone();
+            let gauges = plan.gauges.clone();
+            let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
+            // If anything below fails, dropping `pool` closes the queue
+            // and joins the replicas already running.
+            let handles = spawn_replica(
+                name,
+                r,
+                plan,
+                weights.clone(),
+                shared.clone(),
+                pending.clone(),
+                abort.clone(),
+                frames_done.clone(),
+            )?;
+            // The handles live in a cell the supervisor takes on startup:
+            // if its spawn fails, they are still here to abort + join, so
+            // the replica's threads are never detached.
+            let handle_cell = Arc::new(Mutex::new(Some(handles)));
+            let sup = {
+                let cell = handle_cell.clone();
+                let shared = shared.clone();
+                let error = error.clone();
+                let sup_res = thread::Builder::new()
+                    .name(format!("strm-{name}-r{r}-sup"))
+                    .spawn(move || {
+                        let handles = cell.lock().unwrap().take().expect("handles unclaimed");
+                        supervise(handles, &shared, &pending, &error);
+                    });
+                match sup_res {
+                    Ok(h) => h,
+                    Err(e) => {
+                        abort.store(true, Ordering::SeqCst);
+                        if let Some(hs) = handle_cell.lock().unwrap().take() {
+                            for h in hs {
+                                let _ = h.join();
+                            }
+                        }
+                        return Err(anyhow!("failed to spawn pool supervisor: {e}"));
+                    }
+                }
+            };
+            pool.replicas.push(ReplicaHandle { supervisor: Some(sup), fifos, gauges });
+        }
+        Ok(pool)
+    }
+
+    /// Submit one frame (row-major `h*w*c` pixels at the input exponent);
+    /// returns immediately with the frame's response ticket.
+    pub fn submit(&self, pixels: &[i32]) -> Result<FrameTicket> {
+        let want = self.in_h * self.in_w * self.in_c;
+        anyhow::ensure!(
+            pixels.len() == want,
+            "frame has {} pixels, expected {want} ({}x{}x{})",
+            pixels.len(),
+            self.in_h,
+            self.in_w,
+            self.in_c
+        );
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.shared.q.lock().unwrap();
+            if let Some(p) = &st.poison {
+                return Err(anyhow!("{p}"));
+            }
+            anyhow::ensure!(st.open, "stream pool stopped");
+            st.jobs.push_back(Job { pixels: Box::from(pixels), resp: tx });
+        }
+        self.shared.cv.notify_one();
+        Ok(FrameTicket { rx })
+    }
+
+    /// Run a whole batch through the pool: every frame is enqueued before
+    /// the first result is awaited, so up to the pool's in-flight
+    /// capacity of frames pipeline concurrently.  Results are assembled
+    /// in submission order (bit-identical to the golden model).
+    pub fn infer(&self, input: &QTensor) -> Result<QTensor> {
+        let n = input.shape.n;
+        anyhow::ensure!(n >= 1, "empty input batch");
+        anyhow::ensure!(
+            (input.shape.h, input.shape.w, input.shape.c) == (self.in_h, self.in_w, self.in_c),
+            "input shape {} vs expected ({},{},{})",
+            input.shape,
+            self.in_h,
+            self.in_w,
+            self.in_c
+        );
+        anyhow::ensure!(
+            input.exp == self.in_exp,
+            "input exp {} vs expected {}",
+            input.exp,
+            self.in_exp
+        );
+        let frame = self.in_h * self.in_w * self.in_c;
+        let mut tickets = Vec::with_capacity(n);
+        for i in 0..n {
+            tickets.push(self.submit(&input.data[i * frame..(i + 1) * frame])?);
+        }
+        let mut out = Vec::with_capacity(n * self.classes);
+        for t in tickets {
+            out.extend_from_slice(&t.wait()?);
+        }
+        Ok(QTensor::from_vec(Shape4::new(n, 1, 1, self.classes), 0, out))
+    }
+
+    /// Pipeline replicas behind the shared queue.
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Frames the pool can usefully hold in flight: one per stage per
+    /// replica (each persistent stage works on its own frame).  Batcher
+    /// buckets are sized to this.
+    pub fn capacity(&self) -> usize {
+        (self.stages_per_replica * self.replicas.len()).max(1)
+    }
+
+    /// Logit classes per frame.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Frames completed since the pool started.
+    pub fn frames(&self) -> usize {
+        self.frames_done.load(Ordering::Relaxed)
+    }
+
+    /// First pipeline error, if any replica failed.
+    pub fn error(&self) -> Option<String> {
+        self.error.lock().unwrap().clone()
+    }
+
+    /// Cumulative buffering snapshot, readable while the pool runs:
+    /// every replica's FIFOs and line buffers (replica `i > 0` names are
+    /// prefixed `r{i}/`), with the whole-tensor comparison scaled by the
+    /// replica count (a non-streaming executor running R concurrent
+    /// frames materializes R whole-tensor sets).
+    pub fn stats(&self) -> StreamStats {
+        let mut buffers = Vec::new();
+        for r in &self.replicas {
+            buffers.extend(r.fifos.iter().map(|f| f.stat()));
+            buffers.extend(r.gauges.iter().map(|g| g.stat()));
+        }
+        StreamStats {
+            buffers,
+            frames: self.frames(),
+            whole_tensor_elems: self.whole_tensor_elems * self.replicas.len().max(1),
+        }
+    }
+
+    /// Cheap gauge pair for the serving metrics, recorded after every
+    /// batch: `(summed peak occupancy across every replica's buffers,
+    /// replica-scaled whole-tensor base)` — atomics/locks only, no
+    /// per-buffer name clones (use [`stats`](StreamPool::stats) for the
+    /// full named report).
+    pub fn buffered_gauges(&self) -> (usize, usize) {
+        let peak: usize = self
+            .replicas
+            .iter()
+            .map(|r| {
+                r.fifos.iter().map(|f| f.peak()).sum::<usize>()
+                    + r.gauges.iter().map(|g| g.peak()).sum::<usize>()
+            })
+            .sum();
+        (peak, self.whole_tensor_elems * self.replicas.len().max(1))
+    }
+
+    /// Graceful shutdown: stop accepting frames, drain everything
+    /// in-flight (every accepted frame still gets its response), join all
+    /// threads, and return the final buffering stats.
+    pub fn shutdown(mut self) -> StreamStats {
+        self.close_and_join();
+        self.stats()
+    }
+
+    fn close_and_join(&mut self) {
+        {
+            let mut st = self.shared.q.lock().unwrap();
+            st.open = false;
+        }
+        self.shared.cv.notify_all();
+        for r in &mut self.replicas {
+            if let Some(h) = r.supervisor.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for StreamPool {
+    fn drop(&mut self) {
+        // Same drain semantics as shutdown(): frames mid-pipeline finish,
+        // every thread is joined — a dropped pool never leaks threads or
+        // responses.
+        self.close_and_join();
+    }
+}
+
+/// Spawn one replica's feeder + stage + sink threads; on a spawn failure
+/// the replica's partial thread set is aborted and joined before the
+/// error propagates.
+#[allow(clippy::too_many_arguments)]
+fn spawn_replica(
+    name: &str,
+    r: usize,
+    plan: PipelinePlan,
+    weights: Arc<ModelWeights>,
+    shared: Arc<Shared>,
+    pending: Pending,
+    abort: Arc<AtomicBool>,
+    frames_done: Arc<AtomicUsize>,
+) -> Result<Vec<JoinHandle<Result<(), StreamError>>>> {
+    let PipelinePlan { stages, sources, sink, in_c, .. } = plan;
+    let mut handles: Vec<JoinHandle<Result<(), StreamError>>> = Vec::new();
+    let res = (|| -> Result<()> {
+        spawn_thread(format!("strm-{name}-r{r}-feed"), &mut handles, &abort, {
+            let shared = shared.clone();
+            let abort = abort.clone();
+            let pending = pending.clone();
+            move || feeder_loop(&shared, &abort, &sources, &pending, in_c)
+        })?;
+        for st in stages {
+            let w = weights.clone();
+            spawn_thread(format!("strm-{}", st.name()), &mut handles, &abort, move || {
+                run_stage(&st, &w)
+            })?;
+        }
+        spawn_thread(format!("strm-{name}-r{r}-sink"), &mut handles, &abort, {
+            let pending = pending.clone();
+            let frames_done = frames_done.clone();
+            move || sink_loop(&sink, &pending, &frames_done)
+        })?;
+        Ok(())
+    })();
+    match res {
+        Ok(()) => Ok(handles),
+        Err(e) => {
+            abort.store(true, Ordering::SeqCst);
+            for h in handles {
+                let _ = h.join();
+            }
+            Err(e)
+        }
+    }
+}
+
+fn spawn_thread(
+    name: String,
+    handles: &mut Vec<JoinHandle<Result<(), StreamError>>>,
+    abort: &Arc<AtomicBool>,
+    f: impl FnOnce() -> Result<(), StreamError> + Send + 'static,
+) -> Result<()> {
+    let a = abort.clone();
+    let h = thread::Builder::new()
+        .name(name)
+        .spawn(move || guarded(&a, f))
+        .map_err(|e| anyhow!("failed to spawn stream pool thread: {e}"))?;
+    handles.push(h);
+    Ok(())
+}
+
+/// Claim frames off the shared queue and stream their pixels into the
+/// replica's DMA FIFO(s); on queue close (or pool poison) flow the
+/// end-of-stream sentinel so the replica drains and exits cleanly.
+fn feeder_loop(
+    shared: &Shared,
+    abort: &AtomicBool,
+    sources: &[Arc<Fifo>],
+    pending: &Pending,
+    in_c: usize,
+) -> Result<(), StreamError> {
+    loop {
+        let job = {
+            let mut st = shared.q.lock().unwrap();
+            loop {
+                if abort.load(Ordering::SeqCst) {
+                    return Err(StreamError::Aborted);
+                }
+                if st.poison.is_some() {
+                    break None;
+                }
+                if let Some(j) = st.jobs.pop_front() {
+                    break Some(j);
+                }
+                if !st.open {
+                    break None;
+                }
+                let (g, _) = shared.cv.wait_timeout(st, POLL).unwrap();
+                st = g;
+            }
+        };
+        match job {
+            Some(job) => {
+                // Register the responder *before* the first pixel: the
+                // sink pairs results with this queue in feed order.
+                pending.lock().unwrap().push_back(job.resp);
+                for px in job.pixels.chunks_exact(in_c) {
+                    push_all(sources, Box::from(px))?;
+                }
+            }
+            None => {
+                for f in sources {
+                    f.push(eos())?;
+                }
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Pop one logits token per frame and answer the frame's responder.
+fn sink_loop(
+    sink: &Fifo,
+    pending: &Pending,
+    frames_done: &AtomicUsize,
+) -> Result<(), StreamError> {
+    loop {
+        // Deadline-free: the sink legitimately idles while the pool has
+        // no traffic (mid-frame stalls surface on the stages' bounded
+        // pushes/pops and unblock this pop via the abort flag).
+        let tok = sink.pop_idle()?;
+        if tok.is_empty() {
+            return Ok(());
+        }
+        // Invariant: the feeder registered a responder before streaming
+        // the frame, and this replica completes frames in feed order.
+        let resp = pending
+            .lock()
+            .unwrap()
+            .pop_front()
+            .expect("sink produced a frame with no pending submitter");
+        let _ = resp.send(Ok(tok.to_vec()));
+        frames_done.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Join every replica thread; on failure, record the first real error,
+/// poison the pool (queued and in-flight frames fail with the typed
+/// message — never a silent drop, never a hang).
+fn supervise(
+    handles: Vec<JoinHandle<Result<(), StreamError>>>,
+    shared: &Shared,
+    pending: &Pending,
+    error: &Mutex<Option<String>>,
+) {
+    let mut first: Option<StreamError> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                if !matches!(e, StreamError::Aborted) && first.is_none() {
+                    first = Some(e);
+                }
+            }
+            Err(_) => {
+                if first.is_none() {
+                    first = Some(StreamError::Panicked);
+                }
+            }
+        }
+    }
+    if let Some(e) = first {
+        let msg = format!("streaming execution failed: {e}");
+        {
+            let mut slot = error.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(msg.clone());
+            }
+        }
+        let drained: Vec<Job> = {
+            let mut st = shared.q.lock().unwrap();
+            if st.poison.is_none() {
+                st.poison = Some(msg.clone());
+            }
+            st.jobs.drain(..).collect()
+        };
+        shared.cv.notify_all();
+        for j in drained {
+            let _ = j.resp.send(Err(msg.clone()));
+        }
+        for tx in pending.lock().unwrap().drain(..) {
+            let _ = tx.send(Err(msg.clone()));
+        }
+    }
+}

@@ -1,0 +1,1230 @@
+//! Stage plans and stage bodies for the persistent streaming pipeline.
+//!
+//! [`plan_pipeline`] lowers one replica of the (optimized or naive) graph
+//! into a set of owned, `'static` stage plans connected by bounded
+//! [`Fifo`]s whose depths come from the board/ILP-derived
+//! [`AcceleratorConfig`] (`hls::config::configure` — the exact depths
+//! codegen emits, not a fixed ow_par=1 policy).  [`run_stage`] is the
+//! body a pool thread runs *forever*: each stage loops over frames until
+//! it pops the zero-length end-of-stream sentinel, which it propagates on
+//! every output port before returning — so shutdown drains frames
+//! mid-pipeline instead of dropping them.
+//!
+//! Parallelism mirrors the paper's model at execution time:
+//! * **frame-level pipelining** — stages never restart between frames, so
+//!   frame N+1 enters conv0 while frame N is still in the classifier;
+//! * **channel parallelism** — a conv stage splits its output channels
+//!   across up to `och_par` worker threads (the layer's ILP
+//!   [`LayerAlloc`](crate::ilp::LayerAlloc) unroll, capped by
+//!   `StreamConfig::och_worker_cap`), each computing a contiguous channel
+//!   range of every window position; the stage reassembles tokens in
+//!   stream order, so numerics stay bit-identical to the golden model.
+//!
+//! The naive dataflow (`StreamConfig::naive_add`) adds explicit
+//! [`AddPlan`] stages fed by Eq. 21-sized skip FIFOs and tee'd producers
+//! (one FIFO per consumer, pushed in consumer order) — the configuration
+//! the paper's Fig. 14 shows deadlocking when undersized, surfaced here
+//! as a typed [`StreamError::Stalled`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::{infer_shapes, Edge, Graph, InputRole, Op};
+use crate::hls::config::AcceleratorConfig;
+use crate::hls::streams::{dma_stream, output_stream, StreamKind};
+use crate::models::ModelWeights;
+use crate::quant::{clip_i8, clip_i8_wide, requantize, round_shift, round_shift_i64};
+
+use super::fifo::{Fifo, PeakGauge, StreamError};
+use super::line_buffer::LineBuffer;
+use super::StreamConfig;
+
+// --------------------------------------------------------------- helpers
+
+/// Run `f`, raising the shared abort flag on error *or panic* so every
+/// peer blocked on a FIFO unwinds within one poll interval.
+pub(crate) fn guarded<T>(
+    abort: &AtomicBool,
+    f: impl FnOnce() -> Result<T, StreamError>,
+) -> Result<T, StreamError> {
+    struct Guard<'a>(&'a AtomicBool, bool);
+    impl Drop for Guard<'_> {
+        fn drop(&mut self) {
+            if self.1 {
+                self.0.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+    let mut g = Guard(abort, true);
+    let r = f();
+    if r.is_ok() {
+        g.1 = false;
+    }
+    r
+}
+
+/// The end-of-stream sentinel: a zero-length token (always fits, even in
+/// a full FIFO, so shutdown can never itself deadlock).
+pub(crate) fn eos() -> Box<[i32]> {
+    Vec::new().into_boxed_slice()
+}
+
+/// Push one token to every consumer FIFO of an output port (tee), in
+/// consumer order — deterministic, and the blocking producer-side tee is
+/// exactly what makes the naive dataflow's Fig. 14 deadlock reproducible.
+pub(crate) fn push_all(outs: &[Arc<Fifo>], tok: Box<[i32]>) -> Result<(), StreamError> {
+    let (last, rest) = outs.split_last().expect("stage with no output");
+    for o in rest {
+        o.push(tok.clone())?;
+    }
+    last.push(tok)
+}
+
+fn push_eos(outs: &[Arc<Fifo>]) -> Result<(), StreamError> {
+    for o in outs {
+        o.push(eos())?;
+    }
+    Ok(())
+}
+
+/// Pop the head token of the next frame; `None` = end-of-stream.  Uses
+/// the deadline-free pop: a persistent stage legitimately idles here for
+/// as long as the pool has no traffic.
+fn next_frame(input: &Fifo) -> Result<Option<Box<[i32]>>, StreamError> {
+    let t = input.pop_idle()?;
+    Ok(if t.is_empty() { None } else { Some(t) })
+}
+
+/// Assemble one input row, consuming the frame-head token first if it is
+/// still pending.
+fn pull_row(
+    input: &Fifo,
+    head: &mut Option<Box<[i32]>>,
+    iw: usize,
+    ich: usize,
+) -> Result<Arc<[i32]>, StreamError> {
+    let mut row = vec![0i32; iw * ich];
+    for x in 0..iw {
+        let t = match head.take() {
+            Some(t) => t,
+            None => input.pop()?,
+        };
+        row[x * ich..(x + 1) * ich].copy_from_slice(&t);
+    }
+    Ok(Arc::from(row))
+}
+
+fn forward_rows(
+    outs: &[Arc<Fifo>],
+    rows: &[Arc<[i32]>],
+    ich: usize,
+) -> Result<(), StreamError> {
+    for row in rows {
+        for px in row.chunks_exact(ich) {
+            push_all(outs, Box::from(px))?;
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ stage plan
+
+pub(crate) struct SkipPlan {
+    pub fifo: Arc<Fifo>,
+    /// `skip_exp - acc_exp` (>= 0 by the builders' exponent contract).
+    pub shift: u32,
+}
+
+/// Loop-merged pointwise downsample computed inside the host conv task
+/// (paper Fig. 12b); always sequential — the ILP's parallelism for it is
+/// absorbed into the host stage's schedule.
+pub(crate) struct DsPlan {
+    pub layer: String,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub och: usize,
+    pub out_exp: i32,
+    pub acc_exp: i32,
+    pub outs: Vec<Arc<Fifo>>,
+}
+
+pub(crate) struct ConvPlan {
+    pub name: String,
+    /// Weights key (layer name).
+    pub layer: String,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+    /// Emit raw int32 accumulators (naive dataflow into an Add stage).
+    pub raw: bool,
+    pub out_exp: i32,
+    pub acc_exp: i32,
+    pub ih: usize,
+    pub iw: usize,
+    pub ich: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub och: usize,
+    pub input: Arc<Fifo>,
+    pub outs: Vec<Arc<Fifo>>,
+    pub skip: Option<SkipPlan>,
+    /// Temporal reuse (Fig. 12a): evicted line-buffer rows re-emitted on
+    /// port 1 as the skip stream.
+    pub forward: Option<Vec<Arc<Fifo>>>,
+    pub ds: Option<DsPlan>,
+    /// Contiguous output-channel ranges, one per channel-parallel worker
+    /// thread (len 1 = inline, no workers).
+    pub worker_ranges: Vec<(usize, usize)>,
+    pub gauge: Arc<PeakGauge>,
+}
+
+pub(crate) struct PoolPlan {
+    pub name: String,
+    pub k: usize,
+    pub stride: usize,
+    pub ih: usize,
+    pub iw: usize,
+    pub c: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub input: Arc<Fifo>,
+    pub outs: Vec<Arc<Fifo>>,
+    pub gauge: Arc<PeakGauge>,
+}
+
+pub(crate) struct GapPlan {
+    pub name: String,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub in_exp: i32,
+    pub out_exp: i32,
+    pub input: Arc<Fifo>,
+    pub outs: Vec<Arc<Fifo>>,
+}
+
+pub(crate) struct LinearPlan {
+    pub name: String,
+    /// Weights key (layer name, untagged).
+    pub layer: String,
+    pub cout: usize,
+    /// Pixel tokens per frame on the input stream.
+    pub tokens: usize,
+    pub cin: usize,
+    pub input: Arc<Fifo>,
+    pub outs: Vec<Arc<Fifo>>,
+}
+
+pub(crate) struct ReluPlan {
+    pub name: String,
+    pub tokens: usize,
+    pub input: Arc<Fifo>,
+    pub outs: Vec<Arc<Fifo>>,
+}
+
+/// Explicit residual-merge task (naive dataflow only): pops the long-path
+/// raw accumulator stream and the Eq. 21-buffered skip stream in
+/// lockstep, widens to i64, requantizes — golden's `Op::Add` semantics.
+pub(crate) struct AddPlan {
+    pub name: String,
+    pub tokens: usize,
+    pub sa: u32,
+    pub sb: u32,
+    pub shift: i32,
+    pub in_a: Arc<Fifo>,
+    pub in_b: Arc<Fifo>,
+    pub outs: Vec<Arc<Fifo>>,
+}
+
+pub(crate) enum StagePlan {
+    Conv(ConvPlan),
+    Pool(PoolPlan),
+    Gap(GapPlan),
+    Linear(LinearPlan),
+    Relu(ReluPlan),
+    Add(AddPlan),
+}
+
+impl StagePlan {
+    /// Replica-tagged stage name, used for pool thread names so a wedged
+    /// replica's diagnostics identify exactly which copy failed.
+    pub(crate) fn name(&self) -> &str {
+        match self {
+            StagePlan::Conv(p) => &p.name,
+            StagePlan::Pool(p) => &p.name,
+            StagePlan::Gap(p) => &p.name,
+            StagePlan::Linear(p) => &p.name,
+            StagePlan::Relu(p) => &p.name,
+            StagePlan::Add(p) => &p.name,
+        }
+    }
+}
+
+/// One replica's full lowering: stages + streams + live gauges.
+pub(crate) struct PipelinePlan {
+    pub stages: Vec<StagePlan>,
+    /// Consumer FIFO(s) of the network input node (the feeder pushes each
+    /// pixel to all of them — a tee in the naive dataflow).
+    pub sources: Vec<Arc<Fifo>>,
+    /// The classifier output stream the sink pops one token per frame.
+    pub sink: Arc<Fifo>,
+    pub fifos: Vec<Arc<Fifo>>,
+    pub gauges: Vec<Arc<PeakGauge>>,
+    pub classes: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub in_exp: i32,
+    /// What a non-streaming executor materializes per frame.
+    pub whole_tensor_elems: usize,
+}
+
+/// Lower one pipeline replica of `g` into owned stage plans.
+///
+/// FIFO depths come from `acfg` (the board/ILP configuration): conv
+/// output streams at their `och_groups x och_par x ow_par` burst
+/// capacity, fused skip streams at Eq. 22, naive Add skip streams at
+/// Eq. 21.  `tag` prefixes buffer names (`"r1/"` for replica 1, `""` for
+/// replica 0) so pool stats stay distinguishable.
+pub(crate) fn plan_pipeline(
+    g: &Graph,
+    weights: &ModelWeights,
+    cfg: &StreamConfig,
+    acfg: &AcceleratorConfig,
+    abort: Arc<AtomicBool>,
+    tag: &str,
+) -> Result<PipelinePlan> {
+    let shapes = infer_shapes(g).map_err(|e| anyhow!("{e}"))?;
+    let timeout = cfg.progress_timeout;
+
+    // Pass 1: one FIFO per (consumed edge, consumer) pair — a producer
+    // whose edge has several consumers pushes to each (tee).
+    let mut fifos: Vec<Arc<Fifo>> = Vec::new();
+    let mut fifo_of: std::collections::BTreeMap<(Edge, usize), Arc<Fifo>> =
+        std::collections::BTreeMap::new();
+    for n in g.live() {
+        for (i, (e, role)) in n.inputs.iter().enumerate() {
+            let es = shapes
+                .get(e)
+                .copied()
+                .ok_or_else(|| anyhow!("{}: unshaped input edge", n.name))?;
+            let producer = g.node(e.node);
+            let (name, kind, cap) = match role {
+                InputRole::SkipInit => {
+                    let lc = acfg
+                        .convs
+                        .get(&n.id)
+                        .ok_or_else(|| anyhow!("{}: skip input on a non-conv node", n.name))?;
+                    // Eq. 22: the optimized B_sc is the consumer's own
+                    // window-buffer size (configure's skip_in spec).
+                    let spec = lc
+                        .skip_in
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("{}: config lost the skip stream", n.name))?;
+                    let cap = cfg.skip_capacity_override.unwrap_or_else(|| spec.capacity());
+                    (format!("{}.skip", n.name), StreamKind::Skip, cap)
+                }
+                InputRole::Data => {
+                    if matches!(producer.op, Op::Input { .. }) {
+                        let spec = dma_stream(es.w * es.c);
+                        (format!("{}.in", n.name), StreamKind::Dma, spec.capacity())
+                    } else if matches!(n.op, Op::Add { .. }) && i == 1 {
+                        // Naive residual skip: the Eq. 21 receptive-field
+                        // bound from the configuration (paper Fig. 14).
+                        let bound = acfg
+                            .adds
+                            .get(&n.id)
+                            .map(|a| a.skip_fifo)
+                            .ok_or_else(|| anyhow!("{}: no Eq. 21 sizing for add", n.name))?;
+                        let cap = cfg.skip_capacity_override.unwrap_or(bound);
+                        (format!("{}.skip", n.name), StreamKind::Skip, cap)
+                    } else if matches!(producer.op, Op::Conv(_)) {
+                        // The producing conv's configured output burst.
+                        let lc = acfg
+                            .convs
+                            .get(&e.node)
+                            .ok_or_else(|| anyhow!("{}: unconfigured conv", producer.name))?;
+                        let spec = if e.port == 0 {
+                            &lc.out_stream
+                        } else {
+                            &lc.merged_ds
+                                .as_ref()
+                                .ok_or_else(|| {
+                                    anyhow!("{}: port 1 data without a downsample", producer.name)
+                                })?
+                                .out_stream
+                        };
+                        (format!("{}.in", n.name), StreamKind::Output, spec.capacity())
+                    } else {
+                        // Non-conv producers (relu/pool/add): one full
+                        // pixel burst.
+                        let spec = output_stream(es.c, es.c, 1);
+                        (format!("{}.in", n.name), StreamKind::Output, spec.capacity())
+                    }
+                }
+            };
+            let f = Fifo::new(format!("{tag}{name}"), kind, cap, abort.clone(), timeout);
+            fifos.push(f.clone());
+            fifo_of.insert((*e, n.id), f);
+        }
+    }
+
+    // The network output: the unique sink node must be the classifier.
+    let out_node = g
+        .output()
+        .ok_or_else(|| anyhow!("graph has no unique output node"))?;
+    anyhow::ensure!(
+        matches!(g.node(out_node).op, Op::Linear { .. }),
+        "graph has no linear output node"
+    );
+    let out_shape = shapes[&Edge::new(out_node, 0)];
+    let classes = out_shape.c;
+    let sink = Fifo::new(
+        format!("{tag}{}.out", g.node(out_node).name),
+        StreamKind::Dma,
+        dma_stream(classes).capacity(),
+        abort.clone(),
+        timeout,
+    );
+    fifos.push(sink.clone());
+
+    // All consumer FIFOs of an output port, in consumer order.
+    let outs_for = |e: Edge| -> Vec<Arc<Fifo>> {
+        fifo_of
+            .iter()
+            .filter(|((ee, _), _)| *ee == e)
+            .map(|(_, f)| f.clone())
+            .collect()
+    };
+    let outs_for_node = |id: usize| -> Result<Vec<Arc<Fifo>>> {
+        if id == out_node {
+            return Ok(vec![sink.clone()]);
+        }
+        let outs = outs_for(Edge::new(id, 0));
+        anyhow::ensure!(!outs.is_empty(), "output of {} has no consumer", g.node(id).name);
+        Ok(outs)
+    };
+
+    // Pass 2: build the stage plans.
+    let mut stages: Vec<StagePlan> = Vec::new();
+    let mut gauges: Vec<Arc<PeakGauge>> = Vec::new();
+    let mut sources: Option<Vec<Arc<Fifo>>> = None;
+    let mut input_spec = None;
+    for n in g.live() {
+        match &n.op {
+            Op::Input { h, w, c, exp } => {
+                anyhow::ensure!(sources.is_none(), "stream backend supports one input node");
+                sources = Some(outs_for_node(n.id)?);
+                input_spec = Some((*h, *w, *c, *exp));
+            }
+            Op::Conv(a) => {
+                anyhow::ensure!(
+                    cfg.naive_add || !a.raw_output,
+                    "stream backend runs optimized graphs only unless naive_add is set \
+                     ({}: raw int32 accumulator streams feed explicit Add nodes)",
+                    n.name
+                );
+                let in_shape = shapes[&n.inputs[0].0];
+                let os = shapes[&Edge::new(n.id, 0)];
+                let lw = weights.layer(&n.name)?;
+                anyhow::ensure!(
+                    lw.w.data.len() == a.k * a.k * a.cin * a.cout && lw.b.data.len() == a.cout,
+                    "{}: weight/bias sizes do not match conv geometry",
+                    n.name
+                );
+                let skip = n
+                    .inputs
+                    .iter()
+                    .find(|(_, r)| *r == InputRole::SkipInit)
+                    .map(|(e, _)| -> Result<SkipPlan> {
+                        let se = shapes[e];
+                        anyhow::ensure!(
+                            (se.h, se.w, se.c) == (os.h, os.w, os.c),
+                            "{}: skip stream shape mismatch",
+                            n.name
+                        );
+                        let shift = se.exp - lw.acc_exp();
+                        anyhow::ensure!(shift >= 0, "{}: skip exp below acc exp", n.name);
+                        Ok(SkipPlan { fifo: fifo_of[&(*e, n.id)].clone(), shift: shift as u32 })
+                    })
+                    .transpose()?;
+                let aux = outs_for(Edge::new(n.id, 1));
+                let (forward, ds) = if a.forwards_input {
+                    (if aux.is_empty() { None } else { Some(aux) }, None)
+                } else if let Some(m) = &a.merged_downsample {
+                    if aux.is_empty() {
+                        // Port 1 unconsumed: skip the downsample entirely.
+                        (None, None)
+                    } else {
+                        let dss = shapes[&Edge::new(n.id, 1)];
+                        let dsw = weights.layer(&m.name)?;
+                        anyhow::ensure!(
+                            dsw.w.data.len() == m.k * m.k * a.cin * m.cout
+                                && dsw.b.data.len() == m.cout,
+                            "{}: merged downsample weight sizes mismatch",
+                            m.name
+                        );
+                        let ds = DsPlan {
+                            layer: m.name.clone(),
+                            k: m.k,
+                            stride: m.stride,
+                            pad: m.pad,
+                            oh: dss.h,
+                            ow: dss.w,
+                            och: m.cout,
+                            out_exp: m.out_exp,
+                            acc_exp: dsw.acc_exp(),
+                            outs: aux,
+                        };
+                        (None, Some(ds))
+                    }
+                } else {
+                    (None, None)
+                };
+                // Channel parallelism: the ILP's och_par for this layer,
+                // capped by the host-thread budget, as contiguous ranges.
+                let och_par = acfg
+                    .convs
+                    .get(&n.id)
+                    .map(|l| l.och_par)
+                    .ok_or_else(|| anyhow!("{}: no ILP allocation", n.name))?;
+                let nw = cfg.och_worker_cap.max(1).min(och_par).min(a.cout).max(1);
+                let chunk = a.cout.div_ceil(nw);
+                let mut worker_ranges = Vec::new();
+                let mut lo = 0usize;
+                while lo < a.cout {
+                    let hi = (lo + chunk).min(a.cout);
+                    worker_ranges.push((lo, hi));
+                    lo = hi;
+                }
+                let rows_bound = if ds.is_some() { a.k + 1 } else { a.k };
+                let gauge = PeakGauge::new(
+                    format!("{tag}{}.window", n.name),
+                    StreamKind::WindowSlice,
+                    rows_bound * in_shape.w * a.cin,
+                );
+                gauges.push(gauge.clone());
+                stages.push(StagePlan::Conv(ConvPlan {
+                    name: format!("{tag}{}", n.name),
+                    layer: n.name.clone(),
+                    k: a.k,
+                    stride: a.stride,
+                    pad: a.pad,
+                    relu: a.relu,
+                    raw: a.raw_output,
+                    out_exp: a.out_exp,
+                    acc_exp: lw.acc_exp(),
+                    ih: in_shape.h,
+                    iw: in_shape.w,
+                    ich: a.cin,
+                    oh: os.h,
+                    ow: os.w,
+                    och: a.cout,
+                    input: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    outs: outs_for_node(n.id)?,
+                    skip,
+                    forward,
+                    ds,
+                    worker_ranges,
+                    gauge,
+                }));
+            }
+            Op::MaxPool { k, stride } => {
+                // Window/stride bounds already validated by infer_shapes.
+                let s = shapes[&n.inputs[0].0];
+                let os = shapes[&Edge::new(n.id, 0)];
+                let gauge = PeakGauge::new(
+                    format!("{tag}{}.window", n.name),
+                    StreamKind::WindowSlice,
+                    k * s.w * s.c,
+                );
+                gauges.push(gauge.clone());
+                stages.push(StagePlan::Pool(PoolPlan {
+                    name: format!("{tag}{}", n.name),
+                    k: *k,
+                    stride: *stride,
+                    ih: s.h,
+                    iw: s.w,
+                    c: s.c,
+                    oh: os.h,
+                    ow: os.w,
+                    input: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    outs: outs_for_node(n.id)?,
+                    gauge,
+                }));
+            }
+            Op::GlobalAvgPool { out_exp } => {
+                let s = shapes[&n.inputs[0].0];
+                anyhow::ensure!(
+                    (s.h * s.w).is_power_of_two(),
+                    "{}: global pool window {}x{} must be 2^k",
+                    n.name,
+                    s.h,
+                    s.w
+                );
+                stages.push(StagePlan::Gap(GapPlan {
+                    name: format!("{tag}{}", n.name),
+                    h: s.h,
+                    w: s.w,
+                    c: s.c,
+                    in_exp: s.exp,
+                    out_exp: *out_exp,
+                    input: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    outs: outs_for_node(n.id)?,
+                }));
+            }
+            Op::Linear { cin, cout, .. } => {
+                let s = shapes[&n.inputs[0].0];
+                let lw = weights.layer(&n.name)?;
+                anyhow::ensure!(
+                    lw.w.data.len() == cin * cout && lw.b.data.len() == *cout,
+                    "{}: linear weight sizes mismatch",
+                    n.name
+                );
+                stages.push(StagePlan::Linear(LinearPlan {
+                    name: format!("{tag}{}", n.name),
+                    layer: n.name.clone(),
+                    cout: *cout,
+                    tokens: s.h * s.w,
+                    cin: *cin,
+                    input: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    outs: outs_for_node(n.id)?,
+                }));
+            }
+            Op::Relu => {
+                let s = shapes[&n.inputs[0].0];
+                stages.push(StagePlan::Relu(ReluPlan {
+                    name: format!("{tag}{}", n.name),
+                    tokens: s.h * s.w,
+                    input: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    outs: outs_for_node(n.id)?,
+                }));
+            }
+            Op::Add { out_exp } => {
+                anyhow::ensure!(
+                    cfg.naive_add,
+                    "stream backend runs optimized graphs only unless naive_add is set \
+                     ({} is an add node)",
+                    n.name
+                );
+                let os = shapes[&Edge::new(n.id, 0)];
+                // Operand exponents: a raw conv streams accumulators at
+                // its weights' acc exponent (golden's Op::Add contract).
+                let exp_of = |e: &Edge| -> Result<i32> {
+                    let p = g.node(e.node);
+                    if let Op::Conv(a) = &p.op {
+                        if a.raw_output {
+                            return Ok(weights.layer(&p.name)?.acc_exp());
+                        }
+                    }
+                    Ok(shapes[e].exp)
+                };
+                let ea = exp_of(&n.inputs[0].0)?;
+                let eb = exp_of(&n.inputs[1].0)?;
+                let lo = ea.min(eb);
+                stages.push(StagePlan::Add(AddPlan {
+                    name: format!("{tag}{}", n.name),
+                    tokens: os.h * os.w,
+                    sa: ((ea - lo) as u32).min(63),
+                    sb: ((eb - lo) as u32).min(63),
+                    shift: out_exp - lo,
+                    in_a: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    in_b: fifo_of[&(n.inputs[1].0, n.id)].clone(),
+                    outs: outs_for_node(n.id)?,
+                }));
+            }
+            Op::BatchNorm(_) => {
+                bail!("stream backend runs post-fold graphs only ({} is a batchnorm)", n.name);
+            }
+        }
+    }
+    let sources = sources.ok_or_else(|| anyhow!("graph has no input node"))?;
+    let (in_h, in_w, in_c, in_exp) = input_spec.expect("input spec recorded with sources");
+
+    let whole_tensor_elems: usize = shapes
+        .iter()
+        .filter(|(e, _)| {
+            !matches!(g.node(e.node).op, Op::Input { .. }) && !(e.node == out_node && e.port == 0)
+        })
+        .map(|(_, s)| s.h * s.w * s.c)
+        .sum();
+
+    Ok(PipelinePlan {
+        stages,
+        sources,
+        sink,
+        fifos,
+        gauges,
+        classes,
+        in_h,
+        in_w,
+        in_c,
+        in_exp,
+        whole_tensor_elems,
+    })
+}
+
+// -------------------------------------------- channel-parallel workers
+
+/// Per-row work unit fanned out to the channel workers: cheap Arc clones
+/// of the resident window rows plus the row's skip tokens.
+struct RowJob {
+    rows: Vec<Arc<[i32]>>,
+    first_abs: usize,
+    oy: usize,
+    skip: Option<Arc<Vec<Box<[i32]>>>>,
+}
+
+#[derive(Clone)]
+struct ConvGeom {
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ih: usize,
+    iw: usize,
+    ich: usize,
+    ow: usize,
+    och: usize,
+    relu: bool,
+    raw: bool,
+    acc_exp: i32,
+    out_exp: i32,
+    skip_shift: u32,
+}
+
+/// THE conv kernel: compute channels `[lo, hi)` of every window position
+/// of output row `oy` into `out` (`ow x (hi-lo)`, row-major by window
+/// position), reading the resident rows starting at absolute index
+/// `first_abs`.  The inline path (`lo..hi` = the full channel range),
+/// the channel-parallel workers, and the merged-downsample emission all
+/// run this one function, so the bias + aligned-skip accumulator init,
+/// tap order and requantize contract cannot drift between them — the
+/// property bit-exactness vs golden rests on.
+#[allow(clippy::too_many_arguments)]
+fn conv_row_kernel(
+    geom: &ConvGeom,
+    w: &[i32],
+    bias: &[i32],
+    rows: &[Arc<[i32]>],
+    first_abs: usize,
+    oy: usize,
+    skip: Option<&[Box<[i32]>]>,
+    lo: usize,
+    hi: usize,
+    out: &mut [i32],
+) {
+    let chunk = hi - lo;
+    debug_assert_eq!(out.len(), geom.ow * chunk);
+    let mut acc = vec![0i32; chunk];
+    for ox in 0..geom.ow {
+        // Accumulator init: bias (Fig. 4), then the aligned skip stream
+        // (Fig. 13) — same order as golden's conv2d.
+        acc.copy_from_slice(&bias[lo..hi]);
+        if let Some(sk) = skip {
+            for (a, &v) in acc.iter_mut().zip(&sk[ox][lo..hi]) {
+                *a += v << geom.skip_shift;
+            }
+        }
+        for ky in 0..geom.k {
+            let iy = oy * geom.stride + ky;
+            if iy < geom.pad || iy - geom.pad >= geom.ih {
+                continue;
+            }
+            let row = &rows[iy - geom.pad - first_abs];
+            for kx in 0..geom.k {
+                let ix = ox * geom.stride + kx;
+                if ix < geom.pad || ix - geom.pad >= geom.iw {
+                    continue;
+                }
+                let base = (ix - geom.pad) * geom.ich;
+                let wtap = (ky * geom.k + kx) * geom.ich * geom.och;
+                for ci in 0..geom.ich {
+                    let xv = row[base + ci];
+                    if xv == 0 {
+                        continue;
+                    }
+                    let ws = &w[wtap + ci * geom.och + lo..wtap + ci * geom.och + hi];
+                    for (a, &wv) in acc.iter_mut().zip(ws) {
+                        *a += xv * wv;
+                    }
+                }
+            }
+        }
+        let dst = &mut out[ox * chunk..(ox + 1) * chunk];
+        if geom.raw {
+            dst.copy_from_slice(&acc);
+        } else {
+            for (o, &v) in dst.iter_mut().zip(&acc) {
+                *o = requantize(v, geom.acc_exp, geom.out_exp, geom.relu);
+            }
+        }
+    }
+}
+
+fn conv_geom(p: &ConvPlan) -> ConvGeom {
+    ConvGeom {
+        k: p.k,
+        stride: p.stride,
+        pad: p.pad,
+        ih: p.ih,
+        iw: p.iw,
+        ich: p.ich,
+        ow: p.ow,
+        och: p.och,
+        relu: p.relu,
+        raw: p.raw,
+        acc_exp: p.acc_exp,
+        out_exp: p.out_exp,
+        skip_shift: p.skip.as_ref().map_or(0, |s| s.shift),
+    }
+}
+
+/// The merged downsample as kernel geometry: same input rows as the host
+/// conv, its own window/channel shape, never raw, no skip init.
+fn ds_geom(ds: &DsPlan, host: &ConvPlan) -> ConvGeom {
+    ConvGeom {
+        k: ds.k,
+        stride: ds.stride,
+        pad: ds.pad,
+        ih: host.ih,
+        iw: host.iw,
+        ich: host.ich,
+        ow: ds.ow,
+        och: ds.och,
+        relu: false,
+        raw: false,
+        acc_exp: ds.acc_exp,
+        out_exp: ds.out_exp,
+        skip_shift: 0,
+    }
+}
+
+/// Worker body: run the shared kernel over this worker's channel range
+/// for every row job the stage fans out.
+fn conv_worker(
+    geom: ConvGeom,
+    layer: String,
+    weights: Arc<ModelWeights>,
+    lo: usize,
+    hi: usize,
+    jobs: mpsc::Receiver<RowJob>,
+    results: mpsc::SyncSender<Vec<i32>>,
+) {
+    let lw = weights.layer(&layer).expect("plan-validated layer");
+    let w = lw.w.data.as_slice();
+    let bias = lw.b.data.as_slice();
+    let chunk = hi - lo;
+    while let Ok(job) = jobs.recv() {
+        let mut out = vec![0i32; geom.ow * chunk];
+        conv_row_kernel(
+            &geom,
+            w,
+            bias,
+            &job.rows,
+            job.first_abs,
+            job.oy,
+            job.skip.as_ref().map(|v| v.as_slice()),
+            lo,
+            hi,
+            &mut out,
+        );
+        if results.send(out).is_err() {
+            return; // stage unwound — exit quietly
+        }
+    }
+}
+
+/// Handle on a conv stage's worker threads; dropping it closes both
+/// channel ends first so every worker exits its loop, then joins.
+struct ConvWorkers {
+    txs: Vec<mpsc::SyncSender<RowJob>>,
+    rxs: Vec<mpsc::Receiver<Vec<i32>>>,
+    ranges: Vec<(usize, usize)>,
+    handles: Vec<Option<thread::JoinHandle<()>>>,
+}
+
+impl Drop for ConvWorkers {
+    fn drop(&mut self) {
+        self.txs.clear();
+        self.rxs.clear();
+        for h in &mut self.handles {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn spawn_workers(p: &ConvPlan, weights: &Arc<ModelWeights>) -> ConvWorkers {
+    let geom = conv_geom(p);
+    let mut txs = Vec::new();
+    let mut rxs = Vec::new();
+    let mut handles = Vec::new();
+    for &(lo, hi) in &p.worker_ranges {
+        let (jtx, jrx) = mpsc::sync_channel::<RowJob>(1);
+        let (rtx, rrx) = mpsc::sync_channel::<Vec<i32>>(1);
+        let g = geom.clone();
+        let wts = weights.clone();
+        let layer = p.layer.clone();
+        handles.push(Some(thread::spawn(move || {
+            conv_worker(g, layer, wts, lo, hi, jrx, rtx)
+        })));
+        txs.push(jtx);
+        rxs.push(rrx);
+    }
+    ConvWorkers { txs, rxs, ranges: p.worker_ranges.clone(), handles }
+}
+
+// ---------------------------------------------------------- stage bodies
+
+/// Emit one merged-downsample output row through the shared kernel.
+fn emit_ds_row(
+    ds: &DsPlan,
+    geom: &ConvGeom,
+    dw: &[i32],
+    db: &[i32],
+    lb: &LineBuffer,
+    dy: usize,
+) -> Result<(), StreamError> {
+    let (first_abs, rows) = lb.resident();
+    let mut out = vec![0i32; ds.ow * ds.och];
+    conv_row_kernel(geom, dw, db, &rows, first_abs, dy, None, 0, ds.och, &mut out);
+    for ox in 0..ds.ow {
+        push_all(&ds.outs, Box::from(&out[ox * ds.och..(ox + 1) * ds.och]))?;
+    }
+    Ok(())
+}
+
+/// Emit every downsample row whose input rows are already resident.
+fn emit_ready_ds_rows(
+    ds_next: &mut usize,
+    ds: &DsPlan,
+    geom: &ConvGeom,
+    dw: &[i32],
+    db: &[i32],
+    lb: &LineBuffer,
+) -> Result<(), StreamError> {
+    while *ds_next < ds.oh {
+        let last = (*ds_next * ds.stride + ds.k).saturating_sub(1 + ds.pad).min(geom.ih - 1);
+        if lb.next_row() <= last {
+            break;
+        }
+        emit_ds_row(ds, geom, dw, db, lb, *ds_next)?;
+        *ds_next += 1;
+    }
+    Ok(())
+}
+
+fn run_conv(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+    let lw = weights.layer(&p.layer).expect("plan-validated layer");
+    let w = lw.w.data.as_slice();
+    let bias = lw.b.data.as_slice();
+    let geom = conv_geom(p);
+    // Merged downsample: kernel geometry + weights, resolved once.
+    let ds_ctx = p.ds.as_ref().map(|d| {
+        let dw = weights.layer(&d.layer).expect("plan-validated downsample");
+        (ds_geom(d, p), dw)
+    });
+    let (k, s, pad) = (p.k, p.stride, p.pad);
+    let mut lb = LineBuffer::new(p.iw * p.ich);
+    let workers =
+        if p.worker_ranges.len() > 1 { Some(spawn_workers(p, weights)) } else { None };
+    let mut rowbuf = vec![0i32; p.ow * p.och];
+    loop {
+        let mut head = match next_frame(&p.input)? {
+            Some(t) => Some(t),
+            None => {
+                // End of stream: consume the skip sentinel, propagate on
+                // every output port, unwind the workers (ConvWorkers drop).
+                if let Some(sk) = &p.skip {
+                    let t = sk.fifo.pop()?;
+                    debug_assert!(t.is_empty(), "skip stream out of frame sync");
+                }
+                push_eos(&p.outs)?;
+                if let Some(fwd) = &p.forward {
+                    push_eos(fwd)?;
+                }
+                if let Some(ds) = &p.ds {
+                    push_eos(&ds.outs)?;
+                }
+                return Ok(());
+            }
+        };
+        let mut ds_next = 0usize;
+        for oy in 0..p.oh {
+            // Pull rows until the window for output row `oy` is resident.
+            let last = (oy * s + k).saturating_sub(1 + pad).min(p.ih - 1);
+            while lb.next_row() <= last {
+                lb.push_row(pull_row(&p.input, &mut head, p.iw, p.ich)?);
+                p.gauge.observe(lb.held());
+            }
+            // Pop the row's skip tokens once (frees Eq. 22 capacity to the
+            // producer no later than the per-pixel schedule would), then
+            // run the shared kernel — fanned across the channel workers,
+            // or inline over the full channel range.
+            let skip_row: Option<Vec<Box<[i32]>>> = match &p.skip {
+                Some(sk) => {
+                    let mut v = Vec::with_capacity(p.ow);
+                    for _ in 0..p.ow {
+                        v.push(sk.fifo.pop()?);
+                    }
+                    Some(v)
+                }
+                None => None,
+            };
+            let (first_abs, rows) = lb.resident();
+            match &workers {
+                Some(wk) => {
+                    let skip_shared = skip_row.map(Arc::new);
+                    for tx in &wk.txs {
+                        let job = RowJob {
+                            rows: rows.clone(),
+                            first_abs,
+                            oy,
+                            skip: skip_shared.clone(),
+                        };
+                        if tx.send(job).is_err() {
+                            return Err(StreamError::Panicked);
+                        }
+                    }
+                    let mut bufs = Vec::with_capacity(wk.rxs.len());
+                    for rx in &wk.rxs {
+                        bufs.push(rx.recv().map_err(|_| StreamError::Panicked)?);
+                    }
+                    for ox in 0..p.ow {
+                        let mut tok = vec![0i32; p.och];
+                        for ((lo, hi), buf) in wk.ranges.iter().zip(&bufs) {
+                            let c = hi - lo;
+                            tok[*lo..*hi].copy_from_slice(&buf[ox * c..(ox + 1) * c]);
+                        }
+                        push_all(&p.outs, tok.into_boxed_slice())?;
+                    }
+                }
+                None => {
+                    conv_row_kernel(
+                        &geom,
+                        w,
+                        bias,
+                        &rows,
+                        first_abs,
+                        oy,
+                        skip_row.as_deref(),
+                        0,
+                        p.och,
+                        &mut rowbuf,
+                    );
+                    for ox in 0..p.ow {
+                        push_all(&p.outs, Box::from(&rowbuf[ox * p.och..(ox + 1) * p.och]))?;
+                    }
+                }
+            }
+            if let (Some(ds), Some((dg, dw))) = (&p.ds, ds_ctx.as_ref()) {
+                emit_ready_ds_rows(&mut ds_next, ds, dg, &dw.w.data, &dw.b.data, &lb)?;
+            }
+            // Evict rows that neither the host's next output row nor the
+            // pending downsample rows can still reach; forwarded rows are
+            // the temporal-reuse skip stream.
+            let next_host =
+                if oy + 1 < p.oh { ((oy + 1) * s).saturating_sub(pad) } else { p.ih };
+            let next_ds = match &p.ds {
+                Some(ds) if ds_next < ds.oh => (ds_next * ds.stride).saturating_sub(ds.pad),
+                _ => p.ih,
+            };
+            let evicted = lb.evict_below(next_host.min(next_ds));
+            if let Some(fwd) = &p.forward {
+                forward_rows(fwd, &evicted, p.ich)?;
+            }
+        }
+        // Frame drain: finish the downsample program, consume any input
+        // rows the host windows never reached, and flush the line buffer
+        // (the skip consumer expects the complete forwarded tensor).
+        if let (Some(ds), Some((dg, dw))) = (&p.ds, ds_ctx.as_ref()) {
+            while ds_next < ds.oh {
+                let last = (ds_next * ds.stride + ds.k).saturating_sub(1 + ds.pad).min(p.ih - 1);
+                while lb.next_row() <= last {
+                    lb.push_row(pull_row(&p.input, &mut head, p.iw, p.ich)?);
+                    p.gauge.observe(lb.held());
+                }
+                emit_ds_row(ds, dg, &dw.w.data, &dw.b.data, &lb, ds_next)?;
+                ds_next += 1;
+            }
+        }
+        while lb.next_row() < p.ih {
+            lb.push_row(pull_row(&p.input, &mut head, p.iw, p.ich)?);
+            p.gauge.observe(lb.held());
+        }
+        let rest = lb.flush();
+        if let Some(fwd) = &p.forward {
+            forward_rows(fwd, &rest, p.ich)?;
+        }
+    }
+}
+
+fn run_pool(p: &PoolPlan) -> Result<(), StreamError> {
+    let mut lb = LineBuffer::new(p.iw * p.c);
+    loop {
+        let mut head = match next_frame(&p.input)? {
+            Some(t) => Some(t),
+            None => {
+                push_eos(&p.outs)?;
+                return Ok(());
+            }
+        };
+        for oy in 0..p.oh {
+            let last = (oy * p.stride + p.k - 1).min(p.ih - 1);
+            while lb.next_row() <= last {
+                lb.push_row(pull_row(&p.input, &mut head, p.iw, p.c)?);
+                p.gauge.observe(lb.held());
+            }
+            for ox in 0..p.ow {
+                let mut best = vec![i32::MIN; p.c];
+                for ky in 0..p.k {
+                    let row = lb.row(oy * p.stride + ky);
+                    for kx in 0..p.k {
+                        let base = (ox * p.stride + kx) * p.c;
+                        for (ch, b) in best.iter_mut().enumerate() {
+                            *b = (*b).max(row[base + ch]);
+                        }
+                    }
+                }
+                push_all(&p.outs, best.into_boxed_slice())?;
+            }
+            let next = if oy + 1 < p.oh { (oy + 1) * p.stride } else { p.ih };
+            lb.evict_below(next);
+        }
+        while lb.next_row() < p.ih {
+            lb.push_row(pull_row(&p.input, &mut head, p.iw, p.c)?);
+            p.gauge.observe(lb.held());
+        }
+        lb.flush();
+    }
+}
+
+fn run_gap(p: &GapPlan) -> Result<(), StreamError> {
+    let hw = p.h * p.w;
+    // Power-of-two validated at plan time.
+    let shift = p.out_exp - p.in_exp + hw.trailing_zeros() as i32;
+    loop {
+        let head = match next_frame(&p.input)? {
+            Some(t) => t,
+            None => {
+                push_eos(&p.outs)?;
+                return Ok(());
+            }
+        };
+        let mut acc = vec![0i32; p.c];
+        for (a, &v) in acc.iter_mut().zip(head.iter()) {
+            *a += v;
+        }
+        for _ in 1..hw {
+            let t = p.input.pop()?;
+            for (a, &v) in acc.iter_mut().zip(t.iter()) {
+                *a += v;
+            }
+        }
+        let tok: Box<[i32]> = acc.iter().map(|&v| clip_i8(round_shift(v, shift))).collect();
+        push_all(&p.outs, tok)?;
+    }
+}
+
+fn run_linear(p: &LinearPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+    let lw = weights.layer(&p.layer).expect("plan-validated layer");
+    let w = lw.w.data.as_slice();
+    let bias = lw.b.data.as_slice();
+    loop {
+        let head = match next_frame(&p.input)? {
+            Some(t) => t,
+            None => {
+                push_eos(&p.outs)?;
+                return Ok(());
+            }
+        };
+        let mut xbuf = Vec::with_capacity(p.cin);
+        xbuf.extend_from_slice(&head);
+        for _ in 1..p.tokens {
+            let t = p.input.pop()?;
+            xbuf.extend_from_slice(&t);
+        }
+        let mut out = vec![0i32; p.cout];
+        for (co, o) in out.iter_mut().enumerate() {
+            let mut a = bias[co];
+            for (ci, &xv) in xbuf.iter().enumerate() {
+                a += xv * w[ci * p.cout + co];
+            }
+            *o = a;
+        }
+        push_all(&p.outs, out.into_boxed_slice())?;
+    }
+}
+
+fn run_relu(p: &ReluPlan) -> Result<(), StreamError> {
+    loop {
+        let head = match next_frame(&p.input)? {
+            Some(t) => t,
+            None => {
+                push_eos(&p.outs)?;
+                return Ok(());
+            }
+        };
+        let mut t = head;
+        for i in 0..p.tokens {
+            if i > 0 {
+                t = p.input.pop()?;
+            }
+            let tok: Box<[i32]> = t.iter().map(|&v| v.max(0)).collect();
+            push_all(&p.outs, tok)?;
+        }
+    }
+}
+
+fn run_add(p: &AddPlan) -> Result<(), StreamError> {
+    loop {
+        let mut a = match next_frame(&p.in_a)? {
+            Some(t) => t,
+            None => {
+                let t = p.in_b.pop()?;
+                debug_assert!(t.is_empty(), "skip stream out of frame sync");
+                push_eos(&p.outs)?;
+                return Ok(());
+            }
+        };
+        for i in 0..p.tokens {
+            if i > 0 {
+                a = p.in_a.pop()?;
+            }
+            let b = p.in_b.pop()?;
+            // Align at the finer exponent, widen to i64 (a raw int32
+            // accumulator plus a shifted operand can exceed i32), then
+            // requantize — bit-identical to golden's Op::Add.
+            let tok: Box<[i32]> = a
+                .iter()
+                .zip(b.iter())
+                .map(|(&x, &y)| {
+                    let s = ((x as i64) << p.sa) + ((y as i64) << p.sb);
+                    clip_i8_wide(round_shift_i64(s, p.shift))
+                })
+                .collect();
+            push_all(&p.outs, tok)?;
+        }
+    }
+}
+
+/// Run one stage until end-of-stream (or error).  This is the body a
+/// pool thread executes for its whole lifetime.
+pub(crate) fn run_stage(stage: &StagePlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+    match stage {
+        StagePlan::Conv(p) => run_conv(p, weights),
+        StagePlan::Pool(p) => run_pool(p),
+        StagePlan::Gap(p) => run_gap(p),
+        StagePlan::Linear(p) => run_linear(p, weights),
+        StagePlan::Relu(p) => run_relu(p),
+        StagePlan::Add(p) => run_add(p),
+    }
+}

@@ -289,6 +289,7 @@ fn stream_executor_bounded_wait_instead_of_deadlock() {
     let cfg = StreamConfig {
         progress_timeout: std::time::Duration::from_millis(250),
         skip_capacity_override: Some(4),
+        ..StreamConfig::default()
     };
     let t0 = std::time::Instant::now();
     let err = run_streaming(&g, &weights, &input, &cfg).unwrap_err();
