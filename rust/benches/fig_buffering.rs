@@ -31,8 +31,54 @@ fn main() {
 
     println!("\n== Figs. 7/9: window buffer slice sizes (stem, 32x32x3) ==");
     for ow_par in [1usize, 2] {
-        let sizes = window_figure(3, 32, 3, ow_par);
+        let sizes = window_figure(3, 32, 3, ow_par).unwrap();
         println!("  ow_par={ow_par}: {} slices {:?}", sizes.len(), sizes);
+    }
+
+    // The executor's slice-chain view of the same buffer: fill a
+    // SliceWindow to the full Eq. 17 span and show how the buffered
+    // elements (beyond the in-flight pixel) occupy the configured chain.
+    {
+        let (k, iw, ich, ow_par) = (3usize, 32usize, 3usize, 2usize);
+        let plan = resnet_hls::hls::window::slice_plan(k, k, iw, ich, ow_par).unwrap();
+        let mut win = resnet_hls::stream::SliceWindow::new(ich, &plan);
+        let span_pixels = plan.total() / ich + 1;
+        for i in 0..span_pixels {
+            win.push_pixel(std::sync::Arc::from(vec![i as i32; ich]));
+        }
+        let occ = win.slice_occupancy();
+        assert_eq!(occ.iter().sum::<usize>(), plan.total());
+        assert_eq!(win.held(), plan.total() + ich);
+        println!(
+            "  full span ({} elems + {ich} in flight): chain occupancy {:?}",
+            plan.total(),
+            occ
+        );
+    }
+
+    // Row-granular (legacy executor) vs slice-granular (Eq. 16/17) window
+    // storage: the per-layer and total peak-buffering delta the stream
+    // executor now realizes at execution time (ow_par = 2 spans, plus the
+    // in-flight pixel each).
+    println!("\n== window storage bound: rows (fh*iw*ich) vs slice span (Eq. 16/17) ==");
+    for model in ["resnet8", "resnet20"] {
+        let arch = arch_by_name(model).unwrap();
+        let mut rows_total = 0usize;
+        let mut slice_total = 0usize;
+        for c in arch.conv_layers() {
+            let ow_par = 2;
+            let rows = c.k * c.in_w * c.cin;
+            let span = resnet_hls::hls::window::buffer_size(c.k, c.k, c.in_w, c.cin, ow_par)
+                .unwrap()
+                + c.cin;
+            rows_total += rows;
+            slice_total += span;
+        }
+        assert!(slice_total < rows_total);
+        println!(
+            "  {model}: {rows_total} elems (rows) -> {slice_total} (slices), {}% saved",
+            100 * (rows_total - slice_total) / rows_total
+        );
     }
 
     // Ablation: the paper's stated future work -- rate-aware partition
@@ -45,10 +91,11 @@ fn main() {
     let mut merged_total = 0usize;
     for c in arch20.conv_layers() {
         let interval = c.cin * 4; // och_groups >= 4 across the balanced allocs
-        let full = resnet_hls::hls::window::slice_plan(c.k, c.k, c.in_w, c.cin, 2);
+        let full = resnet_hls::hls::window::slice_plan(c.k, c.k, c.in_w, c.cin, 2).unwrap();
         let merged = resnet_hls::hls::window::slice_plan_rate_aware(
             c.k, c.k, c.in_w, c.cin, 2, interval,
-        );
+        )
+        .unwrap();
         full_total += full.slices();
         merged_total += merged.slices();
     }

@@ -1,7 +1,9 @@
-//! Bench: the streaming executor vs the golden model, and the persistent
-//! frame-pipelined pool vs repeated one-shot `run_streaming` calls.
+//! Bench: the streaming executor vs the golden model, the persistent
+//! frame-pipelined pool vs repeated one-shot `run_streaming` calls, the
+//! row-vs-slice window-storage peak-buffering delta, and the `ow_par`
+//! 1-vs-2 throughput delta of the column-parallel conv workers.
 //!
-//! The second comparison is the PR-3 acceptance measurement: >= 32 frames
+//! The pool comparison is the PR-3 acceptance measurement: >= 32 frames
 //! through a 2-replica [`StreamPool`]-backed backend (stage threads
 //! spawned once, frames pipelined through the FIFO chain) against the
 //! same 32 frames paying plan + thread spawn + pipeline fill per frame.
@@ -10,9 +12,10 @@
 //! (`REPRO_BENCH_QUICK=1` for a short CI-ish run.)
 
 use resnet_hls::data::{synth_batch, TEST_SEED};
+use resnet_hls::hls::streams::StreamKind;
 use resnet_hls::models::{arch_by_name, build_optimized_graph, synthetic_weights};
 use resnet_hls::runtime::{GoldenBackend, InferenceBackend, StreamBackend};
-use resnet_hls::stream::{run_streaming, StreamConfig};
+use resnet_hls::stream::{run_streaming, StreamConfig, WindowStorage};
 use resnet_hls::util::Bencher;
 
 fn main() {
@@ -42,6 +45,71 @@ fn main() {
             stats.peak_buffered_elems(),
             stats.whole_tensor_elems,
             stats.buffered_fraction()
+        );
+    }
+
+    // ---- row vs slice window storage: measured peak-buffering delta ----
+    println!("\n== window storage: row-granular vs slice-granular (Eq. 16/17) ==");
+    for arch in ["resnet8", "resnet20"] {
+        let a = arch_by_name(arch).unwrap();
+        let w = synthetic_weights(&a, 7);
+        let g = build_optimized_graph(&a, &w.act_exps, &w.w_exps);
+        let (input, _) = synth_batch(0, 1, TEST_SEED);
+        let rows_cfg =
+            StreamConfig { window_storage: WindowStorage::Rows, ..Default::default() };
+        let (out_rows, st_rows) = run_streaming(&g, &w, &input, &rows_cfg).unwrap();
+        let (out_slices, st_slices) =
+            run_streaming(&g, &w, &input, &StreamConfig::default()).unwrap();
+        assert_eq!(out_rows.data, out_slices.data, "{arch}: storage modes must agree");
+        let peak =
+            |st: &resnet_hls::stream::StreamStats| -> usize {
+                st.of_kind(StreamKind::WindowSlice).map(|b| b.peak).sum()
+            };
+        let (pr, ps) = (peak(&st_rows), peak(&st_slices));
+        assert!(ps < pr, "{arch}: slice windows must buffer less than rows");
+        println!(
+            "  {arch}: window peaks {pr} elems (rows) -> {ps} (slices), \
+             {:.1}% saved; total streamed peak {} -> {}",
+            100.0 * (pr - ps) as f64 / pr as f64,
+            st_rows.peak_buffered_elems(),
+            st_slices.peak_buffered_elems(),
+        );
+    }
+
+    // ---- ow_par column workers: 1-vs-2 throughput delta ----
+    println!("\n== ow_par column parallelism (slice-granular, resnet8) ==");
+    {
+        let a = arch_by_name("resnet8").unwrap();
+        let w = synthetic_weights(&a, 7);
+        let g = build_optimized_graph(&a, &w.act_exps, &w.w_exps);
+        let frames = 4usize;
+        let (input, _) = synth_batch(0, frames, TEST_SEED);
+        let golden = GoldenBackend::synthetic("resnet8", 7, &[frames]).unwrap();
+        let want = golden.infer_batch(&input).unwrap();
+        let mut rates = Vec::new();
+        for ow_par in [1usize, 2] {
+            let cfg = StreamConfig { ow_par, ..Default::default() };
+            assert_eq!(
+                run_streaming(&g, &w, &input, &cfg).unwrap().0.data,
+                want.data,
+                "ow_par={ow_par} must stay bit-exact"
+            );
+            let stream =
+                StreamBackend::synthetic_with("resnet8", 7, &[frames], cfg).unwrap();
+            let s = b.bench_items(
+                &format!("stream resnet8 b{frames} ow_par={ow_par}"),
+                frames as f64,
+                &mut || {
+                    stream.infer_batch(&input).unwrap();
+                },
+            );
+            rates.push(s.items_per_sec());
+        }
+        println!(
+            "  ow_par 1 -> 2: {:.0} -> {:.0} frames/s ({:.2}x)",
+            rates[0],
+            rates[1],
+            rates[1] / rates[0]
         );
     }
 

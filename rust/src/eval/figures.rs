@@ -49,9 +49,15 @@ pub fn packing_figure(taps: usize, och_par: usize) -> PackingFigure {
     }
 }
 
-/// Fig. 7/9 data: slice sizes of a window buffer.
-pub fn window_figure(k: usize, iw: usize, ich: usize, ow_par: usize) -> Vec<usize> {
-    slice_plan(k, k, iw, ich, ow_par).sizes
+/// Fig. 7/9 data: slice sizes of a window buffer.  Errors (typed) when
+/// the widened window cannot fit the row — see `hls::window::WindowError`.
+pub fn window_figure(
+    k: usize,
+    iw: usize,
+    ich: usize,
+    ow_par: usize,
+) -> Result<Vec<usize>, crate::hls::window::WindowError> {
+    Ok(slice_plan(k, k, iw, ich, ow_par)?.sizes)
 }
 
 /// Alg. 1 sweep: (budget, fps_per_mhz, dsps_used) for a range of budgets.

@@ -167,11 +167,22 @@ pub fn configure(
                 let macs = (out_shape.h * out_shape.w * a.cout * a.cin * taps) as u64;
                 let cycles = macs.div_ceil(la.cp);
                 let param_bytes = taps * a.cin * a.cout + 2 * a.cout;
-                let skip_in = n
-                    .inputs
-                    .iter()
-                    .find(|(_, r)| *r == InputRole::SkipInit)
-                    .map(|_| skip_stream(buffer_size(a.k, a.k, in_shape.w, a.cin, 1)));
+                // Window geometry can be unsatisfiable (e.g. the widened
+                // ow_par window on a narrow late-stage row): surface the
+                // typed WindowError with the layer name, never underflow.
+                let win_err = |e| anyhow!("{}: {e}", n.name);
+                let window =
+                    slice_plan(a.k, a.k, in_shape.w, a.cin, ow_par).map_err(win_err)?;
+                let window_capacity =
+                    buffer_size(a.k, a.k, in_shape.w, a.cin, ow_par).map_err(win_err)?;
+                let skip_in = match n.inputs.iter().find(|(_, r)| *r == InputRole::SkipInit) {
+                    Some(_) => Some(skip_stream(
+                        // Eq. 22 sizes the skip at the consumer's own
+                        // (unwidened, ow_par = 1) window-buffer depth.
+                        buffer_size(a.k, a.k, in_shape.w, a.cin, 1).map_err(win_err)?,
+                    )),
+                    None => None,
+                };
                 let host_groups = a.cout.div_ceil(la.och_par);
                 let merged_ds = a.merged_downsample.as_ref().map(|m| {
                     // The merged loop iterates the host's och_groups; the
@@ -217,8 +228,8 @@ pub fn configure(
                         cycles,
                         dsps: la.dsps,
                         chain: chain_plan(taps),
-                        window: slice_plan(a.k, a.k, in_shape.w, a.cin, ow_par),
-                        window_capacity: buffer_size(a.k, a.k, in_shape.w, a.cin, ow_par),
+                        window,
+                        window_capacity,
                         param_stream: parameter_stream(la.och_par, taps),
                         out_stream: output_stream(a.cout, la.och_par, ow_par),
                         skip_in,
@@ -306,6 +317,23 @@ mod tests {
         let r = opt.skip_buffer_total() as f64 / naive.skip_buffer_total() as f64;
         // Paper Eq. 23: R_sc = 0.5 for every block.
         assert!((r - 0.5).abs() < 0.05, "R_sc = {r}");
+    }
+
+    #[test]
+    fn unsatisfiable_window_geometry_is_a_typed_configure_error() {
+        // Regression: an ow_par too wide for a late-stage 8-wide row used
+        // to underflow inside slice_plan; configure must now surface the
+        // typed WindowError tagged with the offending layer.
+        let arch = resnet8();
+        let (act, w) = default_exps(&arch);
+        let g = build_optimized_graph(&arch, &act, &w);
+        let alloc = solve(&loads_from_arch(&arch, 2), KV260.n_par() as u64).unwrap();
+        let err = configure(&arch.name, &g, &alloc, &KV260, 16).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("widened window"),
+            "expected the WindowError message, got: {msg}"
+        );
     }
 
     #[test]

@@ -6,8 +6,61 @@
 //! chain of FIFO slices (Figs. 7/9) whose sizes are the stream distances
 //! between window elements.
 
+/// Why a window-buffer geometry cannot be built.
+///
+/// Every sizing entry point validates before computing so that no
+/// reachable layer geometry can underflow `usize` arithmetic (a debug
+/// panic / release wraparound for e.g. 8-wide rows with `fw = 5` and a
+/// large `--ow-par`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WindowError {
+    /// `fh`, `fw` or `ow_par` of zero describes no window at all.
+    Degenerate { fh: usize, fw: usize, ow_par: usize },
+    /// The widened window `fw_eff = fw + ow_par - 1` does not fit one
+    /// padded input row (`fw_eff > iw + 1`): the Eq. 16/17 stream
+    /// distance `S2 = (iw - fw_eff + 1) * ich` would be negative, i.e.
+    /// there is no stream position at which all `ow_par` adjacent
+    /// computation windows exist.
+    TooWide { fw_eff: usize, iw: usize },
+}
+
+impl std::fmt::Display for WindowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WindowError::Degenerate { fh, fw, ow_par } => write!(
+                f,
+                "degenerate window geometry (fh={fh}, fw={fw}, ow_par={ow_par}): \
+                 every factor must be >= 1"
+            ),
+            WindowError::TooWide { fw_eff, iw } => write!(
+                f,
+                "widened window fw_eff = fw + ow_par - 1 = {fw_eff} exceeds the \
+                 {iw}-wide input row (+1): reduce ow_par or the filter width"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for WindowError {}
+
+/// The shared validity invariant of Eqs. 16/17: non-degenerate window,
+/// and the `ow_par`-widened window spans at most `iw + 1` columns.
+fn validate(fh: usize, fw: usize, iw: usize, ow_par: usize) -> Result<(), WindowError> {
+    if fh == 0 || fw == 0 || ow_par == 0 {
+        return Err(WindowError::Degenerate { fh, fw, ow_par });
+    }
+    let fw_eff = fw + ow_par - 1;
+    if fw_eff > iw + 1 {
+        return Err(WindowError::TooWide { fw_eff, iw });
+    }
+    Ok(())
+}
+
 /// Window buffer size in activations for `ow_par = 1` (Eq. 16):
 /// `B_i = [(fh-1)*iw + fw - 1] * ich`.
+///
+/// Infallible literal formula; callers guarantee `fh, fw >= 1` (use
+/// [`buffer_size`] for validated sizing).
 pub fn buffer_size_owpar1(fh: usize, fw: usize, iw: usize, ich: usize) -> usize {
     ((fh - 1) * iw + fw - 1) * ich
 }
@@ -19,13 +72,21 @@ pub fn buffer_size_owpar2(fh: usize, fw: usize, iw: usize, ich: usize) -> usize 
     ((fh - 1) * iw + fw) * ich
 }
 
-/// Window buffer size for the configured `ow_par`.
-pub fn buffer_size(fh: usize, fw: usize, iw: usize, ich: usize, ow_par: usize) -> usize {
-    match ow_par {
+/// Window buffer size for the configured `ow_par`, validated: errors
+/// instead of underflowing when the widened window cannot fit the row.
+pub fn buffer_size(
+    fh: usize,
+    fw: usize,
+    iw: usize,
+    ich: usize,
+    ow_par: usize,
+) -> Result<usize, WindowError> {
+    validate(fh, fw, iw, ow_par)?;
+    Ok(match ow_par {
         1 => buffer_size_owpar1(fh, fw, iw, ich),
         2 => buffer_size_owpar2(fh, fw, iw, ich),
         n => ((fh - 1) * iw + fw + n - 2) * ich, // natural generalization
-    }
+    })
 }
 
 /// FIFO slice plan for the partitioned window buffer (Figs. 7/9).
@@ -55,10 +116,18 @@ impl SlicePlan {
 /// within a window row, successive taps are `S1 = ich` apart; across rows
 /// the gap is `S2 = (iw - fw_eff + 1) * ich` where `fw_eff = fw + ow_par-1`
 /// is the widened window (Fig. 8 keeps `ow_par` computation windows).
-pub fn slice_plan(fh: usize, fw: usize, iw: usize, ich: usize, ow_par: usize) -> SlicePlan {
+pub fn slice_plan(
+    fh: usize,
+    fw: usize,
+    iw: usize,
+    ich: usize,
+    ow_par: usize,
+) -> Result<SlicePlan, WindowError> {
+    validate(fh, fw, iw, ow_par)?;
     let fw_eff = fw + ow_par - 1;
     let s1 = ich;
-    let s2 = (iw - fw_eff + 1) * ich;
+    // Validated: fw_eff <= iw + 1, so this cannot underflow.
+    let s2 = (iw + 1 - fw_eff) * ich;
     let mut sizes = Vec::new();
     for row in 0..fh {
         if row > 0 {
@@ -71,7 +140,7 @@ pub fn slice_plan(fh: usize, fw: usize, iw: usize, ich: usize, ow_par: usize) ->
     // The first slice in stream order holds the newest activation; sizes
     // listed oldest-to-newest here.  One extra head slot per plan keeps the
     // in-flight element (implementation detail of the task chain).
-    SlicePlan { sizes, forward_stride: ow_par }
+    Ok(SlicePlan { sizes, forward_stride: ow_par })
 }
 
 /// Rate-aware window-buffer partitioning — the paper's stated future work
@@ -94,11 +163,11 @@ pub fn slice_plan_rate_aware(
     ich: usize,
     ow_par: usize,
     window_interval_cycles: usize,
-) -> SlicePlan {
-    let full = slice_plan(fh, fw, iw, ich, ow_par);
+) -> Result<SlicePlan, WindowError> {
+    let full = slice_plan(fh, fw, iw, ich, ow_par)?;
     let interval = window_interval_cycles.max(1);
     if interval == 1 {
-        return full;
+        return Ok(full);
     }
     // Merge up to `interval` adjacent slices per physical FIFO: the window
     // task then performs `group_len` sequential reads per window, which
@@ -118,7 +187,7 @@ pub fn slice_plan_rate_aware(
     if count > 0 {
         sizes.push(acc);
     }
-    SlicePlan { sizes, forward_stride: full.forward_stride }
+    Ok(SlicePlan { sizes, forward_stride: full.forward_stride })
 }
 
 /// Receptive-field height/width of conv1's window back-projected through
@@ -175,23 +244,54 @@ mod tests {
     fn slice_plan_sums_to_buffer_size() {
         // The chain of slice distances spans first-to-last window element:
         // exactly B_i (minus nothing — Eq. 16 counts the same span).
+        // Sampled over every supported ow_par, including the `n > 2`
+        // "natural generalization" arm of buffer_size.
         forall("slice plan total == B_i span", 300, |rng| {
             let fh = rng.range_i64(1, 5) as usize;
             let fw = rng.range_i64(1, 5) as usize;
-            let ow_par = rng.range_i64(1, 2) as usize;
+            let ow_par = rng.range_i64(1, 4) as usize;
             let iw = rng.range_i64((fw + ow_par) as i64, 64) as usize;
             let ich = rng.range_i64(1, 64) as usize;
-            let plan = slice_plan(fh, fw, iw, ich, ow_par);
+            let plan = slice_plan(fh, fw, iw, ich, ow_par).unwrap();
             // Span of distances = ((fh-1)*iw + fw_eff - 1) * ich, which is
             // exactly the Eq. 16/17 buffer size for the widened window.
             let fw_eff = fw + ow_par - 1;
             let span = ((fh - 1) * iw + fw_eff - 1) * ich;
             assert_eq!(plan.total(), span);
-            assert_eq!(plan.total(), buffer_size(fh, fw, iw, ich, ow_par));
+            assert_eq!(plan.total(), buffer_size(fh, fw, iw, ich, ow_par).unwrap());
             // One slice per window-element transition: fh*(fw_eff-1) within
             // rows + (fh-1) across rows.
             assert_eq!(plan.slices(), fh * (fw_eff - 1) + (fh - 1));
         });
+    }
+
+    #[test]
+    fn narrow_rows_yield_typed_errors_not_underflow() {
+        // Regression: s2 = (iw - fw_eff + 1) * ich used to underflow (debug
+        // panic / release wrap) whenever fw_eff = fw + ow_par - 1 > iw + 1 —
+        // reachable for narrow late-stage feature maps (8-wide rows with
+        // fw = 5 and a large `--ow-par`).  All three sizing entry points
+        // must return the typed error instead.
+        let too_wide = |r: Result<_, WindowError>| match r {
+            Err(WindowError::TooWide { fw_eff, iw }) => (fw_eff, iw),
+            other => panic!("expected TooWide, got {other:?}"),
+        };
+        // fw_eff = 5 + 6 - 1 = 10 > 8 + 1.
+        assert_eq!(too_wide(slice_plan(3, 5, 8, 16, 6).map(|_| ())), (10, 8));
+        assert_eq!(too_wide(buffer_size(3, 5, 8, 16, 6).map(|_| ())), (10, 8));
+        assert_eq!(too_wide(slice_plan_rate_aware(3, 5, 8, 16, 6, 4).map(|_| ())), (10, 8));
+        // Narrow row alone is fine as long as the widened window fits:
+        // fw_eff = iw + 1 is the boundary (S2 = 0 — a direct wire).
+        let plan = slice_plan(3, 5, 8, 2, 4).unwrap(); // fw_eff = 8 <= 9
+        assert_eq!(plan.total(), buffer_size(3, 5, 8, 2, 4).unwrap());
+        let boundary = slice_plan(3, 5, 8, 2, 5).unwrap(); // fw_eff = 9 = iw + 1
+        assert!(boundary.sizes.contains(&0), "S2 slices collapse to wires");
+        // Degenerate factors are rejected, not wrapped.
+        assert!(matches!(
+            buffer_size(0, 3, 32, 16, 1),
+            Err(WindowError::Degenerate { .. })
+        ));
+        assert!(matches!(slice_plan(3, 3, 32, 16, 0), Err(WindowError::Degenerate { .. })));
     }
 
     #[test]
@@ -211,15 +311,15 @@ mod tests {
             let iw = rng.range_i64(8, 40) as usize;
             let ich = rng.range_i64(1, 32) as usize;
             let interval = rng.range_i64(1, 12) as usize;
-            let full = slice_plan(fh, fh, iw, ich, 2);
-            let merged = slice_plan_rate_aware(fh, fh, iw, ich, 2, interval);
+            let full = slice_plan(fh, fh, iw, ich, 2).unwrap();
+            let merged = slice_plan_rate_aware(fh, fh, iw, ich, 2, interval).unwrap();
             assert_eq!(full.total(), merged.total(), "capacity preserved");
             assert_eq!(merged.slices(), full.slices().div_ceil(interval));
             assert!(merged.slices() <= full.slices());
         });
         // Unit rate (one window per cycle) must keep the full split.
-        let full = slice_plan(3, 3, 32, 16, 2);
-        let same = slice_plan_rate_aware(3, 3, 32, 16, 2, 1);
+        let full = slice_plan(3, 3, 32, 16, 2).unwrap();
+        let same = slice_plan_rate_aware(3, 3, 32, 16, 2, 1).unwrap();
         assert_eq!(full, same);
     }
 

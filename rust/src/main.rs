@@ -9,8 +9,11 @@
 //!   golden-eval [--model M] [--n N]               golden accuracy on synthetic test set
 //!   probe-check                  cross-language bit-equality (golden vs oracle vs PJRT)
 //!   serve      [--model M] [--frames N] [--backend pjrt|golden|sim|stream] [--workers N]
-//!              [--replicas B]    route synthetic frames through the inference router
-//!                                (stream: B persistent pipeline replicas per worker)
+//!              [--replicas B] [--ow-par N] [--window-storage rows|slices]
+//!                                route synthetic frames through the inference router
+//!                                (stream: B persistent pipeline replicas per worker,
+//!                                ow_par window groups + column workers, slice-granular
+//!                                Eq. 16/17 window buffers by default)
 //!   buffers    [--model M]       Eq. 21/22/23 per residual block, plus the
 //!                                streaming executor's measured peak occupancy
 
@@ -37,7 +40,7 @@ fn main() {
         std::env::args().skip(1),
         &[
             "model", "board", "frames", "n", "out", "skip-factor", "ow-par", "budget", "backend",
-            "workers", "replicas",
+            "workers", "replicas", "window-storage",
         ],
     );
     let result = match args.subcommand.as_deref() {
@@ -282,6 +285,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let frames = args.opt_usize("frames", 256);
     let workers = args.opt_usize("workers", 1);
     let replicas = args.opt_usize("replicas", 1);
+    let ow_par = args.opt_usize("ow-par", 2);
+    let storage = match args.opt_or("window-storage", "slices") {
+        "rows" => resnet_hls::stream::WindowStorage::Rows,
+        "slices" => resnet_hls::stream::WindowStorage::Slices,
+        other => anyhow::bail!("unknown window storage {other} (expected rows|slices)"),
+    };
     let backend = args.opt_or("backend", "pjrt");
     let dir = artifacts_dir();
     // `golden` prefers the trained artifact weights when present and
@@ -291,7 +300,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "golden" => std::sync::Arc::new(GoldenFactory::auto(dir.clone(), &arch.name, 7)),
         "sim" => std::sync::Arc::new(SimFactory::synthetic(&arch.name, 7)),
         "stream" => std::sync::Arc::new(
-            StreamFactory::auto(dir.clone(), &arch.name, 7).with_replicas(replicas),
+            StreamFactory::auto(dir.clone(), &arch.name, 7)
+                .with_replicas(replicas)
+                .with_ow_par(ow_par)
+                .with_storage(storage),
         ),
         other => anyhow::bail!("unknown backend {other} (expected pjrt|golden|sim|stream)"),
     };
@@ -302,7 +314,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if backend == "stream" {
         println!(
             "serving {} on stream backend ({workers} worker(s), {replicas} pipeline replica(s) \
-             each, persistent frame-pipelined pool; buckets sized to in-flight capacity)",
+             each, persistent frame-pipelined pool; ow_par={ow_par}, {storage:?} window \
+             storage; buckets sized to in-flight capacity)",
             arch.name
         );
     } else {
@@ -353,6 +366,12 @@ fn cmd_buffers(args: &Args) -> Result<()> {
     println!("\n== streaming executor, measured (1 frame) ==");
     println!("{:<16} {:>10} {:>10}", "skip fifo", "capacity", "peak");
     for b in stats.of_kind(resnet_hls::hls::streams::StreamKind::Skip) {
+        println!("{:<16} {:>10} {:>10}", b.name, b.capacity, b.peak);
+    }
+    // Slice-granular window buffers: the bound is the exact Eq. 16/17
+    // span (B_i plus the in-flight pixel), not rounded up to rows.
+    println!("{:<16} {:>10} {:>10}", "window buffer", "Eq.16/17", "peak");
+    for b in stats.of_kind(resnet_hls::hls::streams::StreamKind::WindowSlice) {
         println!("{:<16} {:>10} {:>10}", b.name, b.capacity, b.peak);
     }
     println!(

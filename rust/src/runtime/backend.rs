@@ -570,6 +570,21 @@ impl StreamFactory {
         self
     }
 
+    /// Output-width unroll for window sizing, group width and column
+    /// workers (`serve --backend stream --ow-par N`; 2 = the paper's
+    /// DSP-packing default).
+    pub fn with_ow_par(mut self, ow_par: usize) -> StreamFactory {
+        self.cfg.ow_par = ow_par.max(1);
+        self
+    }
+
+    /// Window-buffer storage mode (`serve --backend stream
+    /// --window-storage rows|slices`; slice-granular by default).
+    pub fn with_storage(mut self, storage: crate::stream::WindowStorage) -> StreamFactory {
+        self.cfg.window_storage = storage;
+        self
+    }
+
     /// Override the whole pool policy for every created backend.
     pub fn with_config(mut self, cfg: StreamConfig) -> StreamFactory {
         self.cfg = cfg;

@@ -38,6 +38,10 @@ pub enum StreamError {
     Aborted,
     /// A peer stage panicked (its error was lost with the thread).
     Panicked,
+    /// The pool's bookkeeping broke an invariant (e.g. a completed frame
+    /// with no pending submitter).  Degrades the replica into the typed
+    /// error path instead of aborting the serving process.
+    Inconsistent { what: &'static str },
 }
 
 impl std::fmt::Display for StreamError {
@@ -50,6 +54,9 @@ impl std::fmt::Display for StreamError {
             ),
             StreamError::Aborted => write!(f, "stream stage unwound after a peer failed"),
             StreamError::Panicked => write!(f, "a stream stage panicked"),
+            StreamError::Inconsistent { what } => {
+                write!(f, "stream pool state inconsistent: {what}")
+            }
         }
     }
 }

@@ -1,26 +1,32 @@
-//! Software line buffer — the row-granular equivalent of the paper's
-//! window buffer (Section III-F, Eqs. 16–17).
+//! Software window buffers for the streaming executor (paper Section
+//! III-F, Eqs. 16–17), in two granularities:
 //!
-//! The hardware window buffer is a chain of FIFO slices holding exactly
-//! `B_i = [(fh-1)*iw + fw - 1] * ich` activations (see
-//! [`hls::window`](crate::hls::window)).  The streaming executor works at
-//! row granularity instead: it retains at most `fh` complete input rows
-//! (`fh * iw * ich` elements — the same bound rounded up to whole rows),
-//! evicting each row the moment no pending output row's window can still
-//! reach it.  Eviction order is stream order, which is what lets the
-//! temporal-reuse path (paper Fig. 12a) forward evicted rows as the skip
-//! stream with no second buffer.
+//! * [`SliceWindow`] — pixel-granular, the execution counterpart of the
+//!   hardware window buffer's FIFO slice chain (Figs. 7/9,
+//!   [`hls::window::slice_plan`](crate::hls::window::slice_plan)): the
+//!   stage holds exactly the Eq. 16/17 span — `B_i` buffered elements
+//!   plus the in-flight pixel — and evicts pixel-by-pixel in stream
+//!   order behind the last window that can still reach each pixel.
+//! * [`LineBuffer`] — the row-granular legacy mode: retains at most `fh`
+//!   complete input rows (`fh * iw * ich` elements — the Eq. 16 bound
+//!   rounded up to whole rows), evicting whole rows.
 //!
-//! Rows are reference-counted (`Arc<[i32]>`) so a conv stage can hand the
-//! resident window to its `och_par` channel-parallel workers without
-//! copying pixel data — the workers hold cheap clones while the stage
-//! keeps evicting/forwarding at its own pace.  Occupancy reporting is
-//! external: the owning stage publishes [`held`](LineBuffer::held) into
-//! its pre-registered [`PeakGauge`](super::PeakGauge) after every push,
-//! so the pool can read peaks while the pipeline runs.
+//! Eviction order is stream order in both, which is what lets the
+//! temporal-reuse path (paper Fig. 12a) forward evicted pixels as the
+//! skip stream with no second buffer.
+//!
+//! Pixels/rows are reference-counted (`Arc<[i32]>`) so a conv stage can
+//! hand the resident window to its column/channel-parallel workers
+//! without copying pixel data — the workers hold cheap clones while the
+//! stage keeps evicting/forwarding at its own pace.  Occupancy reporting
+//! is external: the owning stage publishes `held()` into its
+//! pre-registered [`PeakGauge`](super::PeakGauge) after every push, so
+//! the pool can read peaks while the pipeline runs.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
+
+use crate::hls::window::SlicePlan;
 
 /// Sliding window of input rows with absolute row indexing.
 pub struct LineBuffer {
@@ -90,9 +96,108 @@ impl LineBuffer {
     }
 }
 
+/// Pixel-granular sliding window with absolute pixel indexing — the
+/// slice-chain storage mode (Figs. 7/9).  One "pixel" is the
+/// `ich`-element channel vector of a spatial position, exactly one
+/// stream token.
+pub struct SliceWindow {
+    pixels: VecDeque<Arc<[i32]>>,
+    /// Absolute index (within the current frame, `y * iw + x`) of
+    /// `pixels[0]`.
+    first: usize,
+    ich: usize,
+    held: usize,
+    /// Slice sizes of the configured chain (oldest-to-newest, from
+    /// `hls::window::slice_plan`), for the per-slice occupancy view.
+    slice_sizes: Vec<usize>,
+}
+
+impl SliceWindow {
+    pub fn new(ich: usize, plan: &SlicePlan) -> SliceWindow {
+        SliceWindow {
+            pixels: VecDeque::new(),
+            first: 0,
+            ich,
+            held: 0,
+            slice_sizes: plan.sizes.clone(),
+        }
+    }
+
+    /// Absolute index of the next pixel to be pushed (== pixels consumed
+    /// from the input stream this frame).
+    pub fn next_pixel(&self) -> usize {
+        self.first + self.pixels.len()
+    }
+
+    pub fn push_pixel(&mut self, px: Arc<[i32]>) {
+        debug_assert_eq!(px.len(), self.ich);
+        self.held += px.len();
+        self.pixels.push_back(px);
+    }
+
+    /// Channel vector of the pixel at absolute index `abs` (resident).
+    pub fn pixel(&self, abs: usize) -> &[i32] {
+        &self.pixels[abs - self.first]
+    }
+
+    /// Cheap shared handle on the pixel at absolute index `abs`, for
+    /// worker job snapshots.
+    pub fn pixel_arc(&self, abs: usize) -> &Arc<[i32]> {
+        &self.pixels[abs - self.first]
+    }
+
+    /// Elements currently held (published to the stage's peak gauge).
+    pub fn held(&self) -> usize {
+        self.held
+    }
+
+    /// Occupancy of each configured FIFO slice (oldest-to-newest), the
+    /// Figs. 7/9 chain view: buffered elements beyond the in-flight
+    /// pixel fill the chain from the newest (input) end.  Should the
+    /// window transiently hold more than the configured chain capacity,
+    /// the excess is not attributed to any slice (the view saturates);
+    /// the stage's total-occupancy gauge still accounts every element.
+    pub fn slice_occupancy(&self) -> Vec<usize> {
+        let mut remaining = self.held.saturating_sub(self.ich);
+        let mut occ = vec![0usize; self.slice_sizes.len()];
+        for (o, &cap) in occ.iter_mut().zip(&self.slice_sizes).rev() {
+            let take = remaining.min(cap);
+            *o = take;
+            remaining -= take;
+        }
+        occ
+    }
+
+    /// Drop every resident pixel with absolute index `< abs`, returning
+    /// them in stream order (for skip-path forwarding).
+    pub fn evict_below(&mut self, abs: usize) -> Vec<Arc<[i32]>> {
+        let mut out = Vec::new();
+        while self.first < abs {
+            match self.pixels.pop_front() {
+                Some(p) => {
+                    self.held -= p.len();
+                    self.first += 1;
+                    out.push(p);
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// End-of-frame: drain the remaining pixels in order, reset indices.
+    pub fn flush(&mut self) -> Vec<Arc<[i32]>> {
+        let out: Vec<_> = self.pixels.drain(..).collect();
+        self.held = 0;
+        self.first = 0;
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hls::window::slice_plan;
 
     fn row(v: i32, n: usize) -> Arc<[i32]> {
         Arc::from(vec![v; n])
@@ -116,6 +221,37 @@ mod tests {
         let (first, rows) = lb.resident();
         assert_eq!(first, 2);
         assert_eq!(rows.len(), 1);
+    }
+
+    #[test]
+    fn slice_window_tracks_span_and_evicts_in_stream_order() {
+        // 3x3 window, 4-wide rows, 2 channels, ow_par = 1: the span is
+        // (2*4 + 2) pixels buffered + 1 in flight.
+        let plan = slice_plan(3, 3, 4, 2, 1).unwrap();
+        let mut w = SliceWindow::new(2, &plan);
+        for i in 0..11 {
+            w.push_pixel(row(i, 2));
+        }
+        assert_eq!(w.next_pixel(), 11);
+        assert_eq!(w.held(), 22);
+        // Exactly the Eq. 16 span: B_i + the in-flight pixel.
+        assert_eq!(w.held(), plan.total() + 2);
+        assert_eq!(w.pixel(4)[0], 4);
+        // The chain view accounts every buffered element beyond the
+        // in-flight pixel, newest slices first.
+        let occ = w.slice_occupancy();
+        assert_eq!(occ.iter().sum::<usize>(), plan.total());
+        assert_eq!(occ.len(), plan.slices());
+        let ev = w.evict_below(3);
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0][0], 0);
+        assert_eq!(ev[2][0], 2);
+        assert_eq!(w.held(), 16);
+        assert_eq!(w.pixel_arc(3)[0], 3);
+        let rest = w.flush();
+        assert_eq!(rest.len(), 8);
+        assert_eq!(w.next_pixel(), 0);
+        assert_eq!(w.held(), 0);
     }
 
     #[test]

@@ -14,7 +14,11 @@
 //!   Section III-B), `replicas` pipeline copies trade buffering for
 //!   throughput, and each conv stage splits its output channels across
 //!   up to `och_par` worker threads from the layer's ILP allocation
-//!   ([`ilp::solver::LayerAlloc`](crate::ilp::LayerAlloc));
+//!   ([`ilp::solver::LayerAlloc`](crate::ilp::LayerAlloc)) — plus, in
+//!   the default slice-granular mode, up to `ow_par` *column* workers
+//!   per window group (the execution counterpart of the ILP's DSP
+//!   packing, `hls::packing::macs_per_cycle`), with conv window storage
+//!   held to exactly the Eq. 16/17 span ([`WindowStorage::Slices`]);
 //! * FIFO depths and `ow_par` come from the board/ILP configuration
 //!   ([`planned_config`] → `hls::config::configure`) — the
 //!   executor validates exactly the depths codegen emits: conv output
@@ -59,13 +63,29 @@ mod stage;
 
 pub use executor::run_streaming;
 pub use fifo::{BufferStat, Fifo, PeakGauge, StreamError};
-pub use line_buffer::LineBuffer;
+pub use line_buffer::{LineBuffer, SliceWindow};
 pub use pool::{planned_config, FrameTicket, StreamPool};
 
 use std::time::Duration;
 
 use crate::hls::streams::StreamKind;
 use crate::hls::{Board, KV260};
+
+/// How a conv stage stores its sliding input window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WindowStorage {
+    /// Row-granular (the pre-slice legacy mode): retain up to `fh` whole
+    /// input rows (`fh * iw * ich` elements — Eq. 16 rounded up to rows)
+    /// and emit a whole output row per step.
+    Rows,
+    /// Slice-granular (paper Figs. 7/9, the default): consume the
+    /// depth-first pixel stream one `ow_par`-wide window group at a time,
+    /// holding exactly the Eq. 16/17 span (`hls::window::slice_plan`
+    /// total) plus the in-flight pixel, and evicting in stream order
+    /// behind the last window that can still reach each pixel.
+    #[default]
+    Slices,
+}
 
 /// Executor/pool policy knobs.
 #[derive(Debug, Clone)]
@@ -90,9 +110,19 @@ pub struct StreamConfig {
     /// Board whose DSP budget drives the ILP allocation that sizes FIFO
     /// depths and per-layer `och_par`.
     pub board: &'static Board,
-    /// Output-width unroll for stream/window sizing (2 = the paper's
-    /// DSP-packing default, matching codegen).
+    /// Output-width unroll (2 = the paper's DSP-packing default, matching
+    /// codegen).  Drives stream/window sizing *and*, in slice-granular
+    /// mode, the executor's window-group width and column-worker fan-out
+    /// (stride-1 convs only; strided convs fall back to single-column
+    /// groups, whose Eq. 16 span the configured capacity covers).
     pub ow_par: usize,
+    /// Window-buffer storage mode for conv stages (see [`WindowStorage`];
+    /// defaults to the slice-granular Eq. 16/17 layout).
+    pub window_storage: WindowStorage,
+    /// Cap on column-parallel worker threads per conv stage in
+    /// slice-granular mode; the actual count is `min(cap, ow_par, ow)`
+    /// and multiplies the channel-worker count.  1 = no column split.
+    pub ow_worker_cap: usize,
 }
 
 impl Default for StreamConfig {
@@ -109,6 +139,8 @@ impl Default for StreamConfig {
             och_worker_cap: 4,
             board: &KV260,
             ow_par: 2,
+            window_storage: WindowStorage::default(),
+            ow_worker_cap: 4,
         }
     }
 }

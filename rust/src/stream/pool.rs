@@ -221,8 +221,20 @@ impl StreamPool {
                 let sup_res = thread::Builder::new()
                     .name(format!("strm-{name}-r{r}-sup"))
                     .spawn(move || {
-                        let handles = cell.lock().unwrap().take().expect("handles unclaimed");
-                        supervise(handles, &shared, &pending, &error);
+                        // A claimed cell is a bookkeeping bug, not a reason
+                        // to abort the process: poison the pool with the
+                        // typed error so the router's error path reports it.
+                        match cell.lock().unwrap().take() {
+                            Some(handles) => supervise(handles, &shared, &pending, &error),
+                            None => fail_pool(
+                                &shared,
+                                &pending,
+                                &error,
+                                &StreamError::Inconsistent {
+                                    what: "replica thread handles were already claimed",
+                                },
+                            ),
+                        }
                     });
                 match sup_res {
                     Ok(h) => h,
@@ -520,12 +532,13 @@ fn sink_loop(
             return Ok(());
         }
         // Invariant: the feeder registered a responder before streaming
-        // the frame, and this replica completes frames in feed order.
-        let resp = pending
-            .lock()
-            .unwrap()
-            .pop_front()
-            .expect("sink produced a frame with no pending submitter");
+        // the frame, and this replica completes frames in feed order.  A
+        // violated invariant degrades this replica into the supervisor's
+        // typed error path (poisoning the pool) instead of aborting the
+        // serving process.
+        let resp = pending.lock().unwrap().pop_front().ok_or(StreamError::Inconsistent {
+            what: "sink produced a frame with no pending submitter",
+        })?;
         let _ = resp.send(Ok(tok.to_vec()));
         frames_done.fetch_add(1, Ordering::Relaxed);
     }
@@ -557,26 +570,104 @@ fn supervise(
         }
     }
     if let Some(e) = first {
-        let msg = format!("streaming execution failed: {e}");
-        {
-            let mut slot = error.lock().unwrap();
-            if slot.is_none() {
-                *slot = Some(msg.clone());
-            }
+        fail_pool(shared, pending, error, &e);
+    }
+}
+
+/// Poison the pool with a typed error: record it, close the queue, fail
+/// every queued and in-flight frame with the message.  Shared by the
+/// supervisor's join path and its startup invariant checks, so a
+/// degraded replica always lands in the router's error path.
+fn fail_pool(shared: &Shared, pending: &Pending, error: &Mutex<Option<String>>, e: &StreamError) {
+    let msg = format!("streaming execution failed: {e}");
+    {
+        let mut slot = error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(msg.clone());
         }
-        let drained: Vec<Job> = {
-            let mut st = shared.q.lock().unwrap();
-            if st.poison.is_none() {
-                st.poison = Some(msg.clone());
-            }
-            st.jobs.drain(..).collect()
-        };
-        shared.cv.notify_all();
-        for j in drained {
-            let _ = j.resp.send(Err(msg.clone()));
+    }
+    let drained: Vec<Job> = {
+        let mut st = shared.q.lock().unwrap();
+        if st.poison.is_none() {
+            st.poison = Some(msg.clone());
         }
-        for tx in pending.lock().unwrap().drain(..) {
-            let _ = tx.send(Err(msg.clone()));
-        }
+        st.jobs.drain(..).collect()
+    };
+    shared.cv.notify_all();
+    for j in drained {
+        let _ = j.resp.send(Err(msg.clone()));
+    }
+    for tx in pending.lock().unwrap().drain(..) {
+        let _ = tx.send(Err(msg.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::streams::StreamKind;
+
+    /// Regression (was `.expect("sink produced a frame with no pending
+    /// submitter")`): an inconsistent pending queue must surface as the
+    /// typed error, not a process abort.
+    #[test]
+    fn sink_without_pending_submitter_is_a_typed_error() {
+        let abort = Arc::new(AtomicBool::new(false));
+        let sink = Fifo::new(
+            "t.out".into(),
+            StreamKind::Dma,
+            16,
+            abort,
+            Duration::from_millis(200),
+        );
+        sink.push(vec![1, 2, 3].into_boxed_slice()).unwrap();
+        let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
+        let frames = AtomicUsize::new(0);
+        let err = sink_loop(&sink, &pending, &frames).unwrap_err();
+        assert!(
+            matches!(err, StreamError::Inconsistent { .. }),
+            "expected Inconsistent, got {err:?}"
+        );
+        assert!(format!("{err}").contains("no pending submitter"), "{err}");
+        assert_eq!(frames.load(Ordering::Relaxed), 0);
+    }
+
+    /// Regression (was `.expect("handles unclaimed")`): the supervisor's
+    /// inconsistent-state path poisons the pool — queued and in-flight
+    /// frames fail with the typed message, new submissions fail fast.
+    #[test]
+    fn fail_pool_poisons_queue_and_pending() {
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState { jobs: VecDeque::new(), open: true, poison: None }),
+            cv: Condvar::new(),
+        });
+        let (qtx, qrx) = mpsc::channel();
+        shared
+            .q
+            .lock()
+            .unwrap()
+            .jobs
+            .push_back(Job { pixels: Box::from([0i32; 4]), resp: qtx });
+        let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
+        let (ptx, prx) = mpsc::channel();
+        pending.lock().unwrap().push_back(ptx);
+        let error = Mutex::new(None);
+        fail_pool(
+            &shared,
+            &pending,
+            &error,
+            &StreamError::Inconsistent { what: "replica thread handles were already claimed" },
+        );
+        // Every queued and in-flight frame got the typed failure...
+        let queued = qrx.recv().unwrap().unwrap_err();
+        assert!(queued.contains("already claimed"), "{queued}");
+        let inflight = prx.recv().unwrap().unwrap_err();
+        assert!(inflight.contains("already claimed"), "{inflight}");
+        // ...the error is recorded, and the queue is poisoned for
+        // follow-up submissions (StreamPool::submit checks this field).
+        assert!(error.lock().unwrap().as_deref().unwrap().contains("inconsistent"));
+        let st = shared.q.lock().unwrap();
+        assert!(st.poison.as_deref().unwrap().contains("already claimed"));
+        assert!(st.jobs.is_empty());
     }
 }

@@ -18,7 +18,20 @@
 //!   [`LayerAlloc`](crate::ilp::LayerAlloc) unroll, capped by
 //!   `StreamConfig::och_worker_cap`), each computing a contiguous channel
 //!   range of every window position; the stage reassembles tokens in
-//!   stream order, so numerics stay bit-identical to the golden model.
+//!   stream order, so numerics stay bit-identical to the golden model;
+//! * **column parallelism** (slice-granular mode) — each window-position
+//!   group of `ow_par` adjacent output columns (the widened Fig. 8
+//!   window) is additionally split across up to `ow_par` column workers
+//!   (capped by `StreamConfig::ow_worker_cap`), the execution-time
+//!   counterpart of the ILP's `ow_par = 2` DSP-packing assumption
+//!   (`hls::packing::macs_per_cycle`).
+//!
+//! Window storage is slice-granular by default
+//! ([`StreamConfig::window_storage`]): a conv stage holds exactly the
+//! Eq. 16/17 span (`slice_plan` total plus the in-flight pixel) in a
+//! [`SliceWindow`], consuming and evicting pixel-by-pixel per window
+//! group; `WindowStorage::Rows` keeps the legacy whole-row
+//! [`LineBuffer`] path (`fh` rows, the bound rounded up to rows).
 //!
 //! The naive dataflow (`StreamConfig::naive_add`) adds explicit
 //! [`AddPlan`] stages fed by Eq. 21-sized skip FIFOs and tee'd producers
@@ -35,12 +48,13 @@ use anyhow::{anyhow, bail, Result};
 use crate::graph::{infer_shapes, Edge, Graph, InputRole, Op};
 use crate::hls::config::AcceleratorConfig;
 use crate::hls::streams::{dma_stream, output_stream, StreamKind};
+use crate::hls::window::SlicePlan;
 use crate::models::ModelWeights;
 use crate::quant::{clip_i8, clip_i8_wide, requantize, round_shift, round_shift_i64};
 
 use super::fifo::{Fifo, PeakGauge, StreamError};
-use super::line_buffer::LineBuffer;
-use super::StreamConfig;
+use super::line_buffer::{LineBuffer, SliceWindow};
+use super::{StreamConfig, WindowStorage};
 
 // --------------------------------------------------------------- helpers
 
@@ -130,6 +144,28 @@ fn forward_rows(
     Ok(())
 }
 
+/// Pull one pixel token (`ich` channel values), consuming the frame-head
+/// token first if it is still pending.
+fn pull_pixel(
+    input: &Fifo,
+    head: &mut Option<Box<[i32]>>,
+) -> Result<Arc<[i32]>, StreamError> {
+    let t = match head.take() {
+        Some(t) => t,
+        None => input.pop()?,
+    };
+    Ok(Arc::from(t))
+}
+
+/// Forward evicted pixel tokens in stream order (the temporal-reuse skip
+/// stream of the slice-granular path).
+fn forward_pixels(outs: &[Arc<Fifo>], pixels: &[Arc<[i32]>]) -> Result<(), StreamError> {
+    for px in pixels {
+        push_all(outs, Box::from(&px[..]))?;
+    }
+    Ok(())
+}
+
 // ------------------------------------------------------------ stage plan
 
 pub(crate) struct SkipPlan {
@@ -182,6 +218,22 @@ pub(crate) struct ConvPlan {
     /// Contiguous output-channel ranges, one per channel-parallel worker
     /// thread (len 1 = inline, no workers).
     pub worker_ranges: Vec<(usize, usize)>,
+    /// Window storage mode (slice-granular by default).
+    pub storage: WindowStorage,
+    /// Execution window-group width: `ow_par` adjacent output columns are
+    /// consumed per step in slice-granular mode (1 for strided convs —
+    /// their packed window would span `fw + stride*(ow_par-1)` input
+    /// columns, beyond the Eq. 17 widening; Eq. 16 applies instead).
+    pub ow_par: usize,
+    /// Column-parallel workers per window group (1 = no column split);
+    /// total worker threads = `col_workers * worker_ranges.len()`.
+    pub col_workers: usize,
+    /// The layer's configured slice plan (Figs. 7/9), passed through
+    /// from `hls::config::configure` so the stage's [`SliceWindow`] is
+    /// built against exactly the sized chain.  Its per-slice view
+    /// (`SliceWindow::slice_occupancy`) is an analysis/bench API, not
+    /// live telemetry — the runtime gauge tracks total occupancy only.
+    pub window: SlicePlan,
     pub gauge: Arc<PeakGauge>,
 }
 
@@ -490,12 +542,11 @@ pub(crate) fn plan_pipeline(
                 };
                 // Channel parallelism: the ILP's och_par for this layer,
                 // capped by the host-thread budget, as contiguous ranges.
-                let och_par = acfg
+                let lc = acfg
                     .convs
                     .get(&n.id)
-                    .map(|l| l.och_par)
                     .ok_or_else(|| anyhow!("{}: no ILP allocation", n.name))?;
-                let nw = cfg.och_worker_cap.max(1).min(och_par).min(a.cout).max(1);
+                let nw = cfg.och_worker_cap.max(1).min(lc.och_par).min(a.cout).max(1);
                 let chunk = a.cout.div_ceil(nw);
                 let mut worker_ranges = Vec::new();
                 let mut lo = 0usize;
@@ -504,12 +555,33 @@ pub(crate) fn plan_pipeline(
                     worker_ranges.push((lo, hi));
                     lo = hi;
                 }
+                // Execution group width + column workers (slice mode,
+                // stride-1 convs only: the Eq. 17 widening assumes
+                // unit-stride adjacent windows).
+                let ow_par_exec = match cfg.window_storage {
+                    WindowStorage::Slices if a.stride == 1 => lc.ow_par.max(1).min(os.w.max(1)),
+                    _ => 1,
+                };
+                let col_workers = match cfg.window_storage {
+                    WindowStorage::Slices => {
+                        ow_par_exec.min(cfg.ow_worker_cap.max(1)).max(1)
+                    }
+                    WindowStorage::Rows => 1,
+                };
+                // Gauge bound: the exact Eq. 16/17 span (buffered B_i plus
+                // the in-flight pixel) in slice mode; the row-rounded
+                // legacy bound otherwise.
                 let rows_bound = if ds.is_some() { a.k + 1 } else { a.k };
+                let window_bound = match cfg.window_storage {
+                    WindowStorage::Slices => lc.window_capacity + a.cin,
+                    WindowStorage::Rows => rows_bound * in_shape.w * a.cin,
+                };
                 let gauge = PeakGauge::new(
                     format!("{tag}{}.window", n.name),
                     StreamKind::WindowSlice,
-                    rows_bound * in_shape.w * a.cin,
+                    window_bound,
                 );
+                let window = lc.window.clone();
                 gauges.push(gauge.clone());
                 stages.push(StagePlan::Conv(ConvPlan {
                     name: format!("{tag}{}", n.name),
@@ -533,6 +605,10 @@ pub(crate) fn plan_pipeline(
                     forward,
                     ds,
                     worker_ranges,
+                    storage: cfg.window_storage,
+                    ow_par: ow_par_exec,
+                    col_workers,
+                    window,
                     gauge,
                 }));
             }
@@ -671,14 +747,35 @@ pub(crate) fn plan_pipeline(
     })
 }
 
-// -------------------------------------------- channel-parallel workers
+// ------------------------------------- column/channel-parallel workers
 
-/// Per-row work unit fanned out to the channel workers: cheap Arc clones
-/// of the resident window rows plus the row's skip tokens.
+/// Per-row work unit fanned out to the channel workers (row-granular
+/// mode): cheap Arc clones of the resident window rows plus the row's
+/// skip tokens.
 struct RowJob {
     rows: Vec<Arc<[i32]>>,
     first_abs: usize,
     oy: usize,
+    skip: Option<Arc<Vec<Box<[i32]>>>>,
+}
+
+/// Per-window-group work unit fanned out to the column x channel worker
+/// grid (slice-granular mode): Arc clones of exactly the pixels the
+/// group's `cols` adjacent windows can touch.
+#[derive(Clone)]
+struct GroupJob {
+    /// Row-major over the clamped span: `pixels[r * span_w + c]` is input
+    /// pixel `(y0 + r, x0 + c)`.
+    pixels: Vec<Arc<[i32]>>,
+    y0: usize,
+    x0: usize,
+    span_w: usize,
+    oy: usize,
+    /// First output column of the group.
+    ox0: usize,
+    /// Columns in this group (`ow_par`, or the `ow % ow_par` remainder).
+    cols: usize,
+    /// The group's skip tokens, indexed by column-within-group.
     skip: Option<Arc<Vec<Box<[i32]>>>>,
 }
 
@@ -699,14 +796,123 @@ struct ConvGeom {
     skip_shift: u32,
 }
 
-/// THE conv kernel: compute channels `[lo, hi)` of every window position
-/// of output row `oy` into `out` (`ow x (hi-lo)`, row-major by window
-/// position), reading the resident rows starting at absolute index
-/// `first_abs`.  The inline path (`lo..hi` = the full channel range),
-/// the channel-parallel workers, and the merged-downsample emission all
-/// run this one function, so the bias + aligned-skip accumulator init,
-/// tap order and requantize contract cannot drift between them — the
-/// property bit-exactness vs golden rests on.
+/// Read access to (valid, pad-adjusted) input pixels for the kernel —
+/// abstracts over the row-granular and pixel-granular storages so both
+/// monomorphize the one shared core.
+trait PixelSource {
+    /// Channel vector of input pixel `(iy, ix)` (already pad-adjusted
+    /// and in-bounds — the core's tap loop guarantees it).
+    fn pixel(&self, iy: usize, ix: usize) -> &[i32];
+}
+
+/// Whole-row storage view (`LineBuffer` snapshots / row worker jobs).
+struct RowsView<'a> {
+    rows: &'a [Arc<[i32]>],
+    first_row: usize,
+    ich: usize,
+}
+
+impl PixelSource for RowsView<'_> {
+    fn pixel(&self, iy: usize, ix: usize) -> &[i32] {
+        let row = &self.rows[iy - self.first_row];
+        &row[ix * self.ich..(ix + 1) * self.ich]
+    }
+}
+
+/// Resident pixel-window view (`SliceWindow`, inline slice-mode path).
+struct WinView<'a> {
+    win: &'a SliceWindow,
+    iw: usize,
+}
+
+impl PixelSource for WinView<'_> {
+    fn pixel(&self, iy: usize, ix: usize) -> &[i32] {
+        self.win.pixel(iy * self.iw + ix)
+    }
+}
+
+/// Clamped span snapshot carried by a [`GroupJob`] to the worker grid.
+struct SpanView<'a> {
+    pixels: &'a [Arc<[i32]>],
+    y0: usize,
+    x0: usize,
+    span_w: usize,
+}
+
+impl PixelSource for SpanView<'_> {
+    fn pixel(&self, iy: usize, ix: usize) -> &[i32] {
+        &self.pixels[(iy - self.y0) * self.span_w + (ix - self.x0)]
+    }
+}
+
+/// THE conv kernel core: compute channels `[lo, hi)` of the single
+/// window at output position `(oy, ox)` into `out` (`hi - lo` values),
+/// with `acc` as same-sized scratch.  Every path — the inline row and
+/// slice stages, the channel-parallel row workers, the column x channel
+/// group workers, and the merged-downsample emission — runs this one
+/// function, so the bias + aligned-skip accumulator init, tap order and
+/// requantize contract cannot drift between them — the property
+/// bit-exactness vs golden rests on.
+#[allow(clippy::too_many_arguments)]
+fn conv_pos_core<V: PixelSource>(
+    geom: &ConvGeom,
+    w: &[i32],
+    bias: &[i32],
+    v: &V,
+    oy: usize,
+    ox: usize,
+    skip: Option<&[i32]>,
+    lo: usize,
+    hi: usize,
+    acc: &mut [i32],
+    out: &mut [i32],
+) {
+    debug_assert_eq!(out.len(), hi - lo);
+    debug_assert_eq!(acc.len(), hi - lo);
+    // Accumulator init: bias (Fig. 4), then the aligned skip stream
+    // (Fig. 13) — same order as golden's conv2d.
+    acc.copy_from_slice(&bias[lo..hi]);
+    if let Some(sk) = skip {
+        for (a, &sv) in acc.iter_mut().zip(&sk[lo..hi]) {
+            *a += sv << geom.skip_shift;
+        }
+    }
+    for ky in 0..geom.k {
+        let iy = oy * geom.stride + ky;
+        if iy < geom.pad || iy - geom.pad >= geom.ih {
+            continue;
+        }
+        for kx in 0..geom.k {
+            let ix = ox * geom.stride + kx;
+            if ix < geom.pad || ix - geom.pad >= geom.iw {
+                continue;
+            }
+            let px = v.pixel(iy - geom.pad, ix - geom.pad);
+            let wtap = (ky * geom.k + kx) * geom.ich * geom.och;
+            for ci in 0..geom.ich {
+                let xv = px[ci];
+                if xv == 0 {
+                    continue;
+                }
+                let ws = &w[wtap + ci * geom.och + lo..wtap + ci * geom.och + hi];
+                for (a, &wv) in acc.iter_mut().zip(ws) {
+                    *a += xv * wv;
+                }
+            }
+        }
+    }
+    if geom.raw {
+        out.copy_from_slice(acc);
+    } else {
+        for (o, &av) in out.iter_mut().zip(acc.iter()) {
+            *o = requantize(av, geom.acc_exp, geom.out_exp, geom.relu);
+        }
+    }
+}
+
+/// Row-granular wrapper: channels `[lo, hi)` of every window position of
+/// output row `oy` into `out` (`ow x (hi-lo)`, row-major by position),
+/// reading the resident rows starting at absolute index `first_abs`.
 #[allow(clippy::too_many_arguments)]
 fn conv_row_kernel(
     geom: &ConvGeom,
@@ -722,49 +928,23 @@ fn conv_row_kernel(
 ) {
     let chunk = hi - lo;
     debug_assert_eq!(out.len(), geom.ow * chunk);
+    let v = RowsView { rows, first_row: first_abs, ich: geom.ich };
     let mut acc = vec![0i32; chunk];
     for ox in 0..geom.ow {
-        // Accumulator init: bias (Fig. 4), then the aligned skip stream
-        // (Fig. 13) — same order as golden's conv2d.
-        acc.copy_from_slice(&bias[lo..hi]);
-        if let Some(sk) = skip {
-            for (a, &v) in acc.iter_mut().zip(&sk[ox][lo..hi]) {
-                *a += v << geom.skip_shift;
-            }
-        }
-        for ky in 0..geom.k {
-            let iy = oy * geom.stride + ky;
-            if iy < geom.pad || iy - geom.pad >= geom.ih {
-                continue;
-            }
-            let row = &rows[iy - geom.pad - first_abs];
-            for kx in 0..geom.k {
-                let ix = ox * geom.stride + kx;
-                if ix < geom.pad || ix - geom.pad >= geom.iw {
-                    continue;
-                }
-                let base = (ix - geom.pad) * geom.ich;
-                let wtap = (ky * geom.k + kx) * geom.ich * geom.och;
-                for ci in 0..geom.ich {
-                    let xv = row[base + ci];
-                    if xv == 0 {
-                        continue;
-                    }
-                    let ws = &w[wtap + ci * geom.och + lo..wtap + ci * geom.och + hi];
-                    for (a, &wv) in acc.iter_mut().zip(ws) {
-                        *a += xv * wv;
-                    }
-                }
-            }
-        }
-        let dst = &mut out[ox * chunk..(ox + 1) * chunk];
-        if geom.raw {
-            dst.copy_from_slice(&acc);
-        } else {
-            for (o, &v) in dst.iter_mut().zip(&acc) {
-                *o = requantize(v, geom.acc_exp, geom.out_exp, geom.relu);
-            }
-        }
+        let sk = skip.map(|s| &*s[ox]);
+        conv_pos_core(
+            geom,
+            w,
+            bias,
+            &v,
+            oy,
+            ox,
+            sk,
+            lo,
+            hi,
+            &mut acc,
+            &mut out[ox * chunk..(ox + 1) * chunk],
+        );
     }
 }
 
@@ -841,16 +1021,67 @@ fn conv_worker(
     }
 }
 
+/// Group-worker body (slice mode): for every fanned-out window group,
+/// run the shared core over this worker's strided column set
+/// (`col0, col0 + col_stride, ...` within the group) and channel range.
+/// Remainder groups (`cols < ow_par`) simply yield fewer (possibly zero)
+/// columns — no dropped or duplicated tail columns by construction.
+#[allow(clippy::too_many_arguments)]
+fn conv_group_worker(
+    geom: ConvGeom,
+    layer: String,
+    weights: Arc<ModelWeights>,
+    col0: usize,
+    col_stride: usize,
+    lo: usize,
+    hi: usize,
+    jobs: mpsc::Receiver<GroupJob>,
+    results: mpsc::SyncSender<Vec<i32>>,
+) {
+    let lw = weights.layer(&layer).expect("plan-validated layer");
+    let w = lw.w.data.as_slice();
+    let bias = lw.b.data.as_slice();
+    let chunk = hi - lo;
+    let mut acc = vec![0i32; chunk];
+    while let Ok(job) = jobs.recv() {
+        let v = SpanView { pixels: &job.pixels, y0: job.y0, x0: job.x0, span_w: job.span_w };
+        let mut out = Vec::new();
+        for c in (col0..job.cols).step_by(col_stride) {
+            let start = out.len();
+            out.resize(start + chunk, 0);
+            let sk = job.skip.as_ref().map(|s| &*s[c]);
+            conv_pos_core(
+                &geom,
+                w,
+                bias,
+                &v,
+                job.oy,
+                job.ox0 + c,
+                sk,
+                lo,
+                hi,
+                &mut acc,
+                &mut out[start..],
+            );
+        }
+        if results.send(out).is_err() {
+            return; // stage unwound — exit quietly
+        }
+    }
+}
+
+/// A worker thread's whole-lifetime body, handed its job/result ends.
+type WorkerBody<J> = Box<dyn FnOnce(mpsc::Receiver<J>, mpsc::SyncSender<Vec<i32>>) + Send>;
+
 /// Handle on a conv stage's worker threads; dropping it closes both
 /// channel ends first so every worker exits its loop, then joins.
-struct ConvWorkers {
-    txs: Vec<mpsc::SyncSender<RowJob>>,
+struct Workers<J> {
+    txs: Vec<mpsc::SyncSender<J>>,
     rxs: Vec<mpsc::Receiver<Vec<i32>>>,
-    ranges: Vec<(usize, usize)>,
     handles: Vec<Option<thread::JoinHandle<()>>>,
 }
 
-impl Drop for ConvWorkers {
+impl<J> Drop for Workers<J> {
     fn drop(&mut self) {
         self.txs.clear();
         self.rxs.clear();
@@ -862,24 +1093,57 @@ impl Drop for ConvWorkers {
     }
 }
 
-fn spawn_workers(p: &ConvPlan, weights: &Arc<ModelWeights>) -> ConvWorkers {
-    let geom = conv_geom(p);
-    let mut txs = Vec::new();
-    let mut rxs = Vec::new();
-    let mut handles = Vec::new();
-    for &(lo, hi) in &p.worker_ranges {
-        let (jtx, jrx) = mpsc::sync_channel::<RowJob>(1);
-        let (rtx, rrx) = mpsc::sync_channel::<Vec<i32>>(1);
-        let g = geom.clone();
-        let wts = weights.clone();
-        let layer = p.layer.clone();
-        handles.push(Some(thread::spawn(move || {
-            conv_worker(g, layer, wts, lo, hi, jrx, rtx)
-        })));
-        txs.push(jtx);
-        rxs.push(rrx);
+impl<J: Send + 'static> Workers<J> {
+    fn spawn(specs: Vec<WorkerBody<J>>) -> Workers<J> {
+        let mut txs = Vec::new();
+        let mut rxs = Vec::new();
+        let mut handles = Vec::new();
+        for body in specs {
+            let (jtx, jrx) = mpsc::sync_channel::<J>(1);
+            let (rtx, rrx) = mpsc::sync_channel::<Vec<i32>>(1);
+            handles.push(Some(thread::spawn(move || body(jrx, rtx))));
+            txs.push(jtx);
+            rxs.push(rrx);
+        }
+        Workers { txs, rxs, handles }
     }
-    ConvWorkers { txs, rxs, ranges: p.worker_ranges.clone(), handles }
+}
+
+/// Channel-range workers for the row-granular path.
+fn spawn_row_workers(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Workers<RowJob> {
+    let geom = conv_geom(p);
+    let specs: Vec<WorkerBody<RowJob>> = p
+        .worker_ranges
+        .iter()
+        .map(|&(lo, hi)| {
+            let g = geom.clone();
+            let wts = weights.clone();
+            let layer = p.layer.clone();
+            Box::new(move |jobs, results| conv_worker(g, layer, wts, lo, hi, jobs, results))
+                as WorkerBody<RowJob>
+        })
+        .collect();
+    Workers::spawn(specs)
+}
+
+/// The column x channel worker grid for the slice-granular path, in
+/// column-major worker order: worker `c * nranges + ri` owns group
+/// columns `{c, c + col_workers, ...}` and channel range `ri`.
+fn spawn_group_workers(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Workers<GroupJob> {
+    let geom = conv_geom(p);
+    let cw = p.col_workers.max(1);
+    let mut specs: Vec<WorkerBody<GroupJob>> = Vec::new();
+    for c in 0..cw {
+        for &(lo, hi) in &p.worker_ranges {
+            let g = geom.clone();
+            let wts = weights.clone();
+            let layer = p.layer.clone();
+            specs.push(Box::new(move |jobs, results| {
+                conv_group_worker(g, layer, wts, c, cw, lo, hi, jobs, results)
+            }));
+        }
+    }
+    Workers::spawn(specs)
 }
 
 // ---------------------------------------------------------- stage bodies
@@ -922,7 +1186,15 @@ fn emit_ready_ds_rows(
     Ok(())
 }
 
+/// Dispatch on the planned window-storage mode.
 fn run_conv(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+    match p.storage {
+        WindowStorage::Rows => run_conv_rows(p, weights),
+        WindowStorage::Slices => run_conv_slices(p, weights),
+    }
+}
+
+fn run_conv_rows(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
     let lw = weights.layer(&p.layer).expect("plan-validated layer");
     let w = lw.w.data.as_slice();
     let bias = lw.b.data.as_slice();
@@ -935,14 +1207,14 @@ fn run_conv(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError
     let (k, s, pad) = (p.k, p.stride, p.pad);
     let mut lb = LineBuffer::new(p.iw * p.ich);
     let workers =
-        if p.worker_ranges.len() > 1 { Some(spawn_workers(p, weights)) } else { None };
+        if p.worker_ranges.len() > 1 { Some(spawn_row_workers(p, weights)) } else { None };
     let mut rowbuf = vec![0i32; p.ow * p.och];
     loop {
         let mut head = match next_frame(&p.input)? {
             Some(t) => Some(t),
             None => {
                 // End of stream: consume the skip sentinel, propagate on
-                // every output port, unwind the workers (ConvWorkers drop).
+                // every output port, unwind the workers (Workers drop).
                 if let Some(sk) = &p.skip {
                     let t = sk.fifo.pop()?;
                     debug_assert!(t.is_empty(), "skip stream out of frame sync");
@@ -1000,7 +1272,7 @@ fn run_conv(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError
                     }
                     for ox in 0..p.ow {
                         let mut tok = vec![0i32; p.och];
-                        for ((lo, hi), buf) in wk.ranges.iter().zip(&bufs) {
+                        for ((lo, hi), buf) in p.worker_ranges.iter().zip(&bufs) {
                             let c = hi - lo;
                             tok[*lo..*hi].copy_from_slice(&buf[ox * c..(ox + 1) * c]);
                         }
@@ -1064,6 +1336,274 @@ fn run_conv(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError
         if let Some(fwd) = &p.forward {
             forward_rows(fwd, &rest, p.ich)?;
         }
+    }
+}
+
+/// Emit one merged-downsample output row from the resident pixel window.
+fn emit_ds_row_slices(
+    ds: &DsPlan,
+    geom: &ConvGeom,
+    dw: &[i32],
+    db: &[i32],
+    win: &SliceWindow,
+    iw: usize,
+    dy: usize,
+) -> Result<(), StreamError> {
+    let v = WinView { win, iw };
+    let mut acc = vec![0i32; ds.och];
+    let mut out = vec![0i32; ds.och];
+    for ox in 0..ds.ow {
+        conv_pos_core(geom, dw, db, &v, dy, ox, None, 0, ds.och, &mut acc, &mut out);
+        push_all(&ds.outs, Box::from(&out[..]))?;
+    }
+    Ok(())
+}
+
+/// Emit every downsample row whose input pixels are already resident.
+#[allow(clippy::too_many_arguments)]
+fn emit_ready_ds_rows_slices(
+    ds_next: &mut usize,
+    ds: &DsPlan,
+    geom: &ConvGeom,
+    dw: &[i32],
+    db: &[i32],
+    win: &SliceWindow,
+    iw: usize,
+) -> Result<(), StreamError> {
+    while *ds_next < ds.oh {
+        let last = (*ds_next * ds.stride + ds.k).saturating_sub(1 + ds.pad).min(geom.ih - 1);
+        if win.next_pixel() < (last + 1) * iw {
+            break;
+        }
+        emit_ds_row_slices(ds, geom, dw, db, win, iw, *ds_next)?;
+        *ds_next += 1;
+    }
+    Ok(())
+}
+
+/// Slice-granular conv stage (the default): consume the depth-first
+/// pixel stream one `ow_par`-wide window group at a time, holding
+/// exactly the Eq. 16/17 span (`slice_plan` total plus the in-flight
+/// pixel) and evicting pixel-by-pixel in stream order behind the last
+/// window — host or pending merged downsample — that can still reach
+/// each pixel.  Evicted pixels are the temporal-reuse skip stream.
+fn run_conv_slices(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+    let lw = weights.layer(&p.layer).expect("plan-validated layer");
+    let w = lw.w.data.as_slice();
+    let bias = lw.b.data.as_slice();
+    let geom = conv_geom(p);
+    let ds_ctx = p.ds.as_ref().map(|d| {
+        let dw = weights.layer(&d.layer).expect("plan-validated downsample");
+        (ds_geom(d, p), dw)
+    });
+    let (k, s, pad) = (p.k, p.stride, p.pad);
+    let owp = p.ow_par.max(1);
+    let groups = p.ow.div_ceil(owp);
+    let nranges = p.worker_ranges.len();
+    let cw = p.col_workers.max(1);
+    let mut win = SliceWindow::new(p.ich, &p.window);
+    let workers =
+        if cw * nranges > 1 { Some(spawn_group_workers(p, weights)) } else { None };
+    let mut acc = vec![0i32; p.och];
+    let mut tokbuf = vec![0i32; p.och];
+    loop {
+        let mut head = match next_frame(&p.input)? {
+            Some(t) => Some(t),
+            None => {
+                // End of stream: consume the skip sentinel, propagate on
+                // every output port, unwind the workers (Workers drop).
+                if let Some(sk) = &p.skip {
+                    let t = sk.fifo.pop()?;
+                    debug_assert!(t.is_empty(), "skip stream out of frame sync");
+                }
+                push_eos(&p.outs)?;
+                if let Some(fwd) = &p.forward {
+                    push_eos(fwd)?;
+                }
+                if let Some(ds) = &p.ds {
+                    push_eos(&ds.outs)?;
+                }
+                return Ok(());
+            }
+        };
+        let mut ds_next = 0usize;
+        for oy in 0..p.oh {
+            for xg in 0..groups {
+                let ox0 = xg * owp;
+                let cols = owp.min(p.ow - ox0);
+                // Pull pixels until the group's widened window (Fig. 8:
+                // `cols` adjacent computation windows) is resident.
+                let y_last = (oy * s + k).saturating_sub(1 + pad).min(p.ih - 1);
+                let x_last =
+                    ((ox0 + cols - 1) * s + k).saturating_sub(1 + pad).min(p.iw - 1);
+                while win.next_pixel() <= y_last * p.iw + x_last {
+                    win.push_pixel(pull_pixel(&p.input, &mut head)?);
+                    p.gauge.observe(win.held());
+                }
+                // Pop the group's skip tokens once (frees Eq. 22 capacity
+                // to the producer at the per-group schedule).
+                let skip_g: Option<Vec<Box<[i32]>>> = match &p.skip {
+                    Some(sk) => {
+                        let mut v = Vec::with_capacity(cols);
+                        for _ in 0..cols {
+                            v.push(sk.fifo.pop()?);
+                        }
+                        Some(v)
+                    }
+                    None => None,
+                };
+                match &workers {
+                    Some(wk) => {
+                        // Snapshot the clamped pixel span the group's
+                        // windows can touch; fan it to the worker grid.
+                        let y0 = (oy * s).saturating_sub(pad);
+                        let x0 = (ox0 * s).saturating_sub(pad);
+                        let span_w = x_last + 1 - x0;
+                        let mut pixels = Vec::with_capacity((y_last + 1 - y0) * span_w);
+                        for y in y0..=y_last {
+                            for x in x0..=x_last {
+                                pixels.push(win.pixel_arc(y * p.iw + x).clone());
+                            }
+                        }
+                        let job = GroupJob {
+                            pixels,
+                            y0,
+                            x0,
+                            span_w,
+                            oy,
+                            ox0,
+                            cols,
+                            skip: skip_g.map(Arc::new),
+                        };
+                        for tx in &wk.txs {
+                            if tx.send(job.clone()).is_err() {
+                                return Err(StreamError::Panicked);
+                            }
+                        }
+                        let mut bufs = Vec::with_capacity(wk.rxs.len());
+                        for rx in &wk.rxs {
+                            bufs.push(rx.recv().map_err(|_| StreamError::Panicked)?);
+                        }
+                        // Reassemble in stream (column) order: column c's
+                        // channel range ri came from worker
+                        // `(c % cw) * nranges + ri`, slot `c / cw`.
+                        for c in 0..cols {
+                            let mut tok = vec![0i32; p.och];
+                            for (ri, (lo, hi)) in p.worker_ranges.iter().enumerate() {
+                                let chunk = hi - lo;
+                                let buf = &bufs[(c % cw) * nranges + ri];
+                                tok[*lo..*hi].copy_from_slice(
+                                    &buf[(c / cw) * chunk..(c / cw + 1) * chunk],
+                                );
+                            }
+                            push_all(&p.outs, tok.into_boxed_slice())?;
+                        }
+                    }
+                    None => {
+                        let v = WinView { win: &win, iw: p.iw };
+                        for c in 0..cols {
+                            let sk = skip_g.as_ref().map(|sg| &*sg[c]);
+                            conv_pos_core(
+                                &geom,
+                                w,
+                                bias,
+                                &v,
+                                oy,
+                                ox0 + c,
+                                sk,
+                                0,
+                                p.och,
+                                &mut acc,
+                                &mut tokbuf,
+                            );
+                            push_all(&p.outs, Box::from(&tokbuf[..]))?;
+                        }
+                    }
+                }
+                // Evict (and forward) every pixel no future host window
+                // or pending downsample row can still reach.
+                let next_host = if xg + 1 < groups {
+                    (oy * s).saturating_sub(pad) * p.iw
+                        + ((ox0 + owp) * s).saturating_sub(pad)
+                } else if oy + 1 < p.oh {
+                    ((oy + 1) * s).saturating_sub(pad) * p.iw
+                } else {
+                    p.ih * p.iw
+                };
+                let next_ds = match &p.ds {
+                    Some(ds) if ds_next < ds.oh => {
+                        (ds_next * ds.stride).saturating_sub(ds.pad) * p.iw
+                    }
+                    _ => p.ih * p.iw,
+                };
+                let evicted = win.evict_below(next_host.min(next_ds));
+                if let Some(fwd) = &p.forward {
+                    forward_pixels(fwd, &evicted)?;
+                }
+            }
+            if let (Some(ds), Some((dg, dwts))) = (&p.ds, ds_ctx.as_ref()) {
+                emit_ready_ds_rows_slices(
+                    &mut ds_next,
+                    ds,
+                    dg,
+                    &dwts.w.data,
+                    &dwts.b.data,
+                    &win,
+                    p.iw,
+                )?;
+                // The downsample advanced: release what only it retained.
+                let next_host = if oy + 1 < p.oh {
+                    ((oy + 1) * s).saturating_sub(pad) * p.iw
+                } else {
+                    p.ih * p.iw
+                };
+                let next_ds = if ds_next < ds.oh {
+                    (ds_next * ds.stride).saturating_sub(ds.pad) * p.iw
+                } else {
+                    p.ih * p.iw
+                };
+                let evicted = win.evict_below(next_host.min(next_ds));
+                if let Some(fwd) = &p.forward {
+                    forward_pixels(fwd, &evicted)?;
+                }
+            }
+        }
+        // Frame drain: finish the downsample program (pulling pixel by
+        // pixel through the one emit-when-ready helper), then release
+        // every resident and consume-and-forward any pixels no window
+        // ever reaches *without* re-buffering them — the Eq. 16/17 gauge
+        // must never count unreachable pixels (e.g. the odd rows a
+        // standalone strided conv skips in naive mode).
+        if let (Some(ds), Some((dg, dwts))) = (&p.ds, ds_ctx.as_ref()) {
+            while ds_next < ds.oh {
+                emit_ready_ds_rows_slices(
+                    &mut ds_next,
+                    ds,
+                    dg,
+                    &dwts.w.data,
+                    &dwts.b.data,
+                    &win,
+                    p.iw,
+                )?;
+                if ds_next < ds.oh {
+                    win.push_pixel(pull_pixel(&p.input, &mut head)?);
+                    p.gauge.observe(win.held());
+                }
+            }
+        }
+        let rest = win.evict_below(win.next_pixel());
+        if let Some(fwd) = &p.forward {
+            forward_pixels(fwd, &rest)?;
+        }
+        let mut unreached = (p.ih * p.iw).saturating_sub(win.next_pixel());
+        while unreached > 0 {
+            let px = pull_pixel(&p.input, &mut head)?;
+            if let Some(fwd) = &p.forward {
+                push_all(fwd, Box::from(&px[..]))?;
+            }
+            unreached -= 1;
+        }
+        win.flush();
     }
 }
 

@@ -264,7 +264,8 @@ fn stream_backend_bit_exact_with_eq22_buffering() {
                 if n.inputs.iter().any(|(_, r)| *r == InputRole::SkipInit) {
                     let in_shape = shapes[&n.inputs[0].0];
                     let expect =
-                        skip_stream(buffer_size(at.k, at.k, in_shape.w, at.cin, 1)).capacity();
+                        skip_stream(buffer_size(at.k, at.k, in_shape.w, at.cin, 1).unwrap())
+                            .capacity();
                     let buf = stats
                         .buffer(&format!("{}.skip", n.name))
                         .unwrap_or_else(|| panic!("{arch_name}: no stat for {}.skip", n.name));

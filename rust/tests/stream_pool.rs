@@ -11,15 +11,20 @@ use std::time::{Duration, Instant};
 
 use resnet_hls::coordinator::{Router, RouterConfig};
 use resnet_hls::data::{synth_batch, IMG_ELEMS, TEST_SEED};
+use resnet_hls::hls::streams::StreamKind;
 use resnet_hls::hls::window::{skip_buffer_naive, skip_buffer_optimized};
 use resnet_hls::models::{
-    arch_by_name, build_optimized_graph, build_unoptimized_graph, synthetic_weights,
+    arch_by_name, build_optimized_graph, build_unoptimized_graph, synthetic_weights, ArchSpec,
+    BlockSpec, ConvSpec,
 };
+use resnet_hls::quant::{QTensor, Shape4};
 use resnet_hls::runtime::{
     BackendFactory, GoldenBackend, InferenceBackend, StreamBackend, StreamFactory,
 };
 use resnet_hls::sim::golden;
-use resnet_hls::stream::{planned_config, run_streaming, StreamConfig, StreamPool};
+use resnet_hls::stream::{
+    planned_config, run_streaming, StreamConfig, StreamPool, StreamStats, WindowStorage,
+};
 
 /// Run `f` on a helper thread and fail LOUDLY if it exceeds `secs` — a
 /// pool-shutdown regression must hang this watchdog, not CI silently.
@@ -340,6 +345,196 @@ fn pool_throughput_smoke_32_frames() {
         assert_eq!(whole, stats.whole_tensor_elems);
         assert_eq!(backend.stream_gauges(), Some((peak as u64, whole as u64)));
     });
+}
+
+// ------------------------------ slice-granular window buffers + ow_par
+
+/// Summed peak occupancy of every window-buffer gauge in a report.
+fn window_peak_total(stats: &StreamStats) -> usize {
+    stats.of_kind(StreamKind::WindowSlice).map(|b| b.peak).sum()
+}
+
+#[test]
+fn slice_granular_peaks_meet_eq16_17_and_beat_row_bound() {
+    // The PR tentpole acceptance: in the (default) slice-granular mode,
+    // every conv stage's measured peak window buffering is within the
+    // exact Eq. 16/17 span (B_i plus the in-flight pixel) — strictly
+    // below the old row-rounded bound — and skip peaks stay within the
+    // Eq. 22 depths, on both paper architectures.
+    for (arch_name, frames) in [("resnet8", 2usize), ("resnet20", 1)] {
+        let (g, weights) = model(arch_name, 7);
+        let (input, _) = synth_batch(0, frames, TEST_SEED);
+        let cfg = StreamConfig::default();
+        let (_, stats) = run_streaming(&g, &weights, &input, &cfg).unwrap();
+        let acfg = planned_config(arch_name, &g, &cfg).unwrap();
+        for lc in acfg.convs.values() {
+            let buf = stats
+                .buffer(&format!("{}.window", lc.name))
+                .unwrap_or_else(|| panic!("{arch_name}: no stat for {}.window", lc.name));
+            let span = lc.window_capacity + lc.ich;
+            assert_eq!(buf.capacity, span, "{}: gauge bound != Eq. 16/17 span", lc.name);
+            assert!(buf.peak > 0, "{}: window buffer never used", lc.name);
+            assert!(
+                buf.peak <= span,
+                "{}: peak {} beyond the Eq. 16/17 span {span}",
+                lc.name,
+                buf.peak
+            );
+            let rows_bound =
+                (if lc.merged_ds.is_some() { lc.k + 1 } else { lc.k }) * lc.iw * lc.ich;
+            assert!(
+                span < rows_bound,
+                "{}: span {span} must undercut the row-rounded bound {rows_bound}",
+                lc.name
+            );
+            if let Some(skip) = &lc.skip_in {
+                let sbuf = stats
+                    .buffer(&format!("{}.skip", lc.name))
+                    .unwrap_or_else(|| panic!("{arch_name}: no stat for {}.skip", lc.name));
+                assert!(
+                    sbuf.peak <= skip.capacity(),
+                    "{}: skip peak {} beyond Eq. 22 depth {}",
+                    lc.name,
+                    sbuf.peak,
+                    skip.capacity()
+                );
+            }
+        }
+    }
+
+    // Row-vs-slice measured delta (the relationship the stream_backend
+    // bench reports): the legacy whole-row mode buffers strictly more.
+    let (g, weights) = model("resnet8", 7);
+    let (input, _) = synth_batch(0, 1, TEST_SEED);
+    let want = golden::run(&g, &weights, &input).unwrap();
+    let (slice_out, slice_stats) =
+        run_streaming(&g, &weights, &input, &StreamConfig::default()).unwrap();
+    let rows_cfg =
+        StreamConfig { window_storage: WindowStorage::Rows, ..Default::default() };
+    let (rows_out, rows_stats) = run_streaming(&g, &weights, &input, &rows_cfg).unwrap();
+    assert_eq!(slice_out.data, want.data);
+    assert_eq!(rows_out.data, want.data, "row storage mode must stay bit-exact too");
+    assert!(
+        window_peak_total(&slice_stats) < window_peak_total(&rows_stats),
+        "slice-granular windows ({}) must buffer strictly less than rows ({})",
+        window_peak_total(&slice_stats),
+        window_peak_total(&rows_stats)
+    );
+}
+
+#[test]
+fn ow_par_sweep_bit_exact_with_slice_peaks() {
+    // Acceptance: bit-exact vs golden for ow_par in {1, 2, 3} on both
+    // architectures in slice-granular mode, window peaks within that
+    // ow_par's exact Eq. 16/17 span.  ow_par = 3 on ResNet8 exercises
+    // the 8-wide tail's remainder columns (8 % 3 = 2).  CI runs this
+    // test once per value via STREAM_OW_PAR; unset, it sweeps all three.
+    let sweep: Vec<usize> = match std::env::var("STREAM_OW_PAR") {
+        Ok(v) => vec![v.parse().expect("STREAM_OW_PAR must be an integer")],
+        Err(_) => vec![1, 2, 3],
+    };
+    for &ow_par in &sweep {
+        for (arch_name, frames) in [("resnet8", 2usize), ("resnet20", 1)] {
+            let (g, weights) = model(arch_name, 7);
+            let (input, _) = synth_batch(0, frames, TEST_SEED);
+            let want = golden::run(&g, &weights, &input).unwrap();
+            let cfg = StreamConfig { ow_par, ..Default::default() };
+            let (got, stats) = run_streaming(&g, &weights, &input, &cfg).unwrap();
+            assert_eq!(
+                want.data, got.data,
+                "{arch_name} ow_par={ow_par}: diverged from golden"
+            );
+            let acfg = planned_config(arch_name, &g, &cfg).unwrap();
+            assert_eq!(acfg.ow_par, ow_par);
+            for lc in acfg.convs.values() {
+                let buf = stats
+                    .buffer(&format!("{}.window", lc.name))
+                    .unwrap_or_else(|| panic!("no stat for {}.window", lc.name));
+                assert_eq!(buf.capacity, lc.window_capacity + lc.ich);
+                assert!(
+                    buf.peak <= buf.capacity,
+                    "{} ow_par={ow_par}: peak {} beyond span {}",
+                    lc.name,
+                    buf.peak,
+                    buf.capacity
+                );
+            }
+        }
+    }
+}
+
+/// A deliberately odd-width net: 7-wide rows keep `ow % ow_par != 0` for
+/// every swept ow_par, the strided stage lands on 4-wide rows (another
+/// remainder for ow_par = 3), and the 4x4 tail satisfies the global
+/// pool's power-of-two window.
+fn odd_arch() -> ArchSpec {
+    let conv = |name: &str, cin, cout, stride, relu, in_hw| ConvSpec {
+        name: name.into(),
+        cin,
+        cout,
+        k: 3,
+        stride,
+        pad: 1,
+        relu,
+        in_h: in_hw,
+        in_w: in_hw,
+    };
+    ArchSpec {
+        name: "odd7".into(),
+        stem: conv("stem", 3, 8, 1, true, 7),
+        blocks: vec![
+            BlockSpec {
+                name: "s0b0".into(),
+                conv0: conv("s0b0c0", 8, 8, 1, true, 7),
+                conv1: conv("s0b0c1", 8, 8, 1, true, 7),
+                downsample: None,
+            },
+            BlockSpec {
+                name: "s1b0".into(),
+                conv0: conv("s1b0c0", 8, 16, 2, true, 7),
+                conv1: conv("s1b0c1", 16, 16, 1, true, 4),
+                downsample: Some(ConvSpec {
+                    name: "s1b0ds".into(),
+                    cin: 8,
+                    cout: 16,
+                    k: 1,
+                    stride: 2,
+                    pad: 0,
+                    relu: false,
+                    in_h: 7,
+                    in_w: 7,
+                }),
+            },
+        ],
+        fc_in: 16,
+        fc_out: 10,
+        in_h: 7,
+        in_w: 7,
+        in_c: 3,
+    }
+}
+
+#[test]
+fn odd_output_width_remainder_columns_bit_exact() {
+    // Conv stages with ow % ow_par != 0 must neither drop nor duplicate
+    // the tail window columns: a synthetic odd-output-width graph stays
+    // bit-exact vs golden for every group width that leaves a remainder.
+    let arch = odd_arch();
+    let weights = synthetic_weights(&arch, 13);
+    let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let frames = 2usize;
+    let elems = frames * 7 * 7 * 3;
+    let data: Vec<i32> = (0..elems).map(|i| ((i * 37 + 11) % 127) as i32 - 64).collect();
+    let input = QTensor::from_vec(Shape4::new(frames, 7, 7, 3), -7, data);
+    let want = golden::run(&g, &weights, &input).unwrap();
+    for ow_par in [2usize, 3] {
+        let cfg = StreamConfig { ow_par, ..Default::default() };
+        let (got, _) = run_streaming(&g, &weights, &input, &cfg).unwrap();
+        assert_eq!(
+            want.data, got.data,
+            "odd7 ow_par={ow_par}: remainder columns dropped or duplicated"
+        );
+    }
 }
 
 #[test]
