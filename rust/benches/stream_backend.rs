@@ -1,7 +1,8 @@
 //! Bench: the streaming executor vs the golden model, the persistent
 //! frame-pipelined pool vs repeated one-shot `run_streaming` calls, the
-//! row-vs-slice window-storage peak-buffering delta, and the `ow_par`
-//! 1-vs-2 throughput delta of the column-parallel conv workers.
+//! row-vs-slice window-storage peak-buffering delta, the `ow_par`
+//! 1-vs-2 throughput delta of the column-parallel conv workers, and the
+//! elastic replica band's burst throughput vs a fixed-size pool.
 //!
 //! The pool comparison is the PR-3 acceptance measurement: >= 32 frames
 //! through a 2-replica [`StreamPool`]-backed backend (stage threads
@@ -15,7 +16,7 @@ use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::hls::streams::StreamKind;
 use resnet_hls::models::{arch_by_name, build_optimized_graph, synthetic_weights};
 use resnet_hls::runtime::{GoldenBackend, InferenceBackend, StreamBackend};
-use resnet_hls::stream::{run_streaming, StreamConfig, WindowStorage};
+use resnet_hls::stream::{run_streaming, ElasticConfig, StreamConfig, WindowStorage};
 use resnet_hls::util::Bencher;
 
 fn main() {
@@ -173,5 +174,44 @@ fn main() {
         stats.whole_tensor_elems,
         stats.buffered_fraction(),
         stats.frames
+    );
+
+    // ---- elastic band: burst throughput once the pool has grown ----
+    // A fast-cadence 1..=2 band under the same 32-frame burst: after the
+    // controller grows the pool, sustained bursts run at (about) the
+    // fixed-2-replica rate while idle periods pay only one replica's
+    // threads.  Correctness gate first, as everywhere else.
+    let elastic = StreamBackend::synthetic_with(
+        "resnet8",
+        7,
+        &[frames],
+        StreamConfig {
+            elastic: Some(ElasticConfig {
+                min_replicas: 1,
+                max_replicas: 2,
+                high_water: Some(4),
+                sample_interval: std::time::Duration::from_millis(2),
+                scale_up_samples: 2,
+                scale_down_samples: 10_000, // hold the grown pool for the bench
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(elastic.infer_batch(&input).unwrap().data, want.data);
+    let s_elastic = b.bench_items(
+        "elastic pool resnet8 32 frames (band 1..=2, queue-driven)",
+        frames as f64,
+        &mut || {
+            elastic.infer_batch(&input).unwrap();
+        },
+    );
+    println!(
+        "elastic band 1..=2 vs fixed 2 replicas: {:.0} vs {:.0} frames/s \
+         (live replicas {}, peak {})",
+        s_elastic.items_per_sec(),
+        s_pool.items_per_sec(),
+        elastic.pool().replicas(),
+        elastic.pool().peak_replicas()
     );
 }

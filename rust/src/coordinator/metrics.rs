@@ -22,6 +22,12 @@ pub struct Metrics {
     /// comes from a single real report — independent maxima could pair
     /// one backend's peak with another's base.
     stream_gauge: Mutex<(u64, u64)>,
+    /// Live pipeline-replica count last reported by a streaming pool
+    /// backend (an elastic pool moves this inside its band).
+    replicas: AtomicU64,
+    /// Highest replica count ever reported — shows how far an elastic
+    /// pool scaled even after it drained back.
+    peak_replicas: AtomicU64,
     latency: Mutex<Hist>,
 }
 
@@ -54,6 +60,18 @@ impl Metrics {
         if peak_elems > g.0 {
             *g = (peak_elems, whole_elems);
         }
+    }
+
+    /// Record a streaming backend's live pipeline-replica count (the
+    /// elastic pool gauge): the snapshot keeps the latest value plus the
+    /// peak ever observed.  Last-writer-wins — record it into one
+    /// metrics instance per pool (the router records per arch only and
+    /// sums arches into its total; with several workers per arch, each
+    /// owning a pool, the per-arch gauge reflects the last-reporting
+    /// worker's pool).
+    pub fn record_replicas(&self, n: u64) {
+        self.replicas.store(n, Ordering::Relaxed);
+        self.peak_replicas.fetch_max(n, Ordering::Relaxed);
     }
 
     pub fn record_latency(&self, d: Duration) {
@@ -104,6 +122,8 @@ impl Metrics {
             } else {
                 0.0
             },
+            stream_replicas: self.replicas.load(Ordering::Relaxed),
+            stream_peak_replicas: self.peak_replicas.load(Ordering::Relaxed),
         }
     }
 }
@@ -132,6 +152,12 @@ pub struct MetricsSnapshot {
     /// no streaming backend reported; Eq. 22's point is that this is
     /// well below 1).
     pub stream_buffered_fraction: f64,
+    /// Live pipeline replicas last reported by a streaming pool backend
+    /// (0 when none reported); an elastic pool moves this inside its
+    /// `min..=max` band.
+    pub stream_replicas: u64,
+    /// Highest replica count ever reported (0 when none reported).
+    pub stream_peak_replicas: u64,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -152,6 +178,9 @@ impl std::fmt::Display for MetricsSnapshot {
                 "  stream-buf peak {} elems ({:.4} of whole-tensor)",
                 self.stream_peak_buffered_elems, self.stream_buffered_fraction
             )?;
+        }
+        if self.stream_peak_replicas > 0 {
+            write!(f, "  replicas {} (peak {})", self.stream_replicas, self.stream_peak_replicas)?;
         }
         Ok(())
     }
@@ -195,6 +224,23 @@ mod tests {
         assert_eq!(s.stream_peak_buffered_elems, 0);
         assert_eq!(s.stream_buffered_fraction, 0.0);
         assert!(!format!("{s}").contains("stream-buf"));
+    }
+
+    #[test]
+    fn replica_gauge_tracks_latest_and_peak() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.stream_replicas, s.stream_peak_replicas), (0, 0));
+        assert!(!format!("{s}").contains("replicas"));
+        m.record_replicas(1);
+        m.record_replicas(3);
+        m.record_replicas(2);
+        let s = m.snapshot();
+        // Latest value + peak: an elastic pool that grew to 3 and
+        // drained back to 2 reports both transitions.
+        assert_eq!(s.stream_replicas, 2);
+        assert_eq!(s.stream_peak_replicas, 3);
+        assert!(format!("{s}").contains("replicas 2 (peak 3)"), "{s}");
     }
 
     #[test]

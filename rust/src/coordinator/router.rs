@@ -28,7 +28,7 @@ use crate::quant::{QTensor, Shape4};
 use crate::runtime::{BackendFactory, InferenceBackend};
 use crate::sim::golden;
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{BatchPlan, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
 
 /// A single-frame inference request.
@@ -232,16 +232,21 @@ impl Router {
         self.agg.clone()
     }
 
-    /// Point-in-time per-arch + total snapshot.
+    /// Point-in-time per-arch + total snapshot.  The total's replica
+    /// gauges are summed across the per-arch pools (a last-writer-wins
+    /// aggregate would show whichever pool reported most recently, not
+    /// the fleet's capacity); every other total field comes from the
+    /// exact aggregate histogram the workers record into.
     pub fn snapshot(&self) -> RouterSnapshot {
-        RouterSnapshot {
-            per_arch: self
-                .pools
-                .iter()
-                .map(|(a, p)| (a.clone(), p.metrics.snapshot()))
-                .collect(),
-            total: self.agg.snapshot(),
-        }
+        let per_arch: BTreeMap<String, MetricsSnapshot> = self
+            .pools
+            .iter()
+            .map(|(a, p)| (a.clone(), p.metrics.snapshot()))
+            .collect();
+        let mut total = self.agg.snapshot();
+        total.stream_replicas = per_arch.values().map(|m| m.stream_replicas).sum();
+        total.stream_peak_replicas = per_arch.values().map(|m| m.stream_peak_replicas).sum();
+        RouterSnapshot { per_arch, total }
     }
 
     /// Graceful shutdown: stop accepting requests, let the workers drain
@@ -299,8 +304,32 @@ impl Drop for Router {
     }
 }
 
-/// One executor thread: claim a planned batch under the queue lock,
-/// execute it outside the lock (other workers keep stealing), respond.
+/// The planning surface an executor thread needs — a seam so tests can
+/// inject a degenerate planner (e.g. one whose `plan` yields no
+/// executions for a non-empty queue, the condition that used to panic
+/// the worker).
+trait BatchPlanner {
+    fn should_flush(&self, queued: usize, oldest_age: Duration) -> bool;
+    fn plan(&self, queued: usize) -> Vec<BatchPlan>;
+    fn max_wait(&self) -> Duration;
+}
+
+impl BatchPlanner for Batcher {
+    fn should_flush(&self, queued: usize, oldest_age: Duration) -> bool {
+        Batcher::should_flush(self, queued, oldest_age)
+    }
+
+    fn plan(&self, queued: usize) -> Vec<BatchPlan> {
+        Batcher::plan(self, queued)
+    }
+
+    fn max_wait(&self) -> Duration {
+        self.config().max_wait
+    }
+}
+
+/// One executor thread: build the batcher from the backend's bucket
+/// preferences, then serve the queue until shutdown.
 fn worker_loop(
     backend: &dyn InferenceBackend,
     mut bcfg: BatcherConfig,
@@ -320,7 +349,22 @@ fn worker_loop(
         bcfg.max_bucket = bcfg.max_bucket.max(mb);
     }
     let batcher = Batcher::new(bcfg);
-    loop {
+    serve_queue(backend, &batcher, shared, pool_metrics, agg);
+}
+
+/// Claim a planned batch under the queue lock, execute it outside the
+/// lock (other workers keep stealing), respond.  Requests are never
+/// silently dropped: even a planner that yields no plan for a non-empty
+/// queue fails the drained requests with a typed error instead of
+/// panicking the worker and stranding them.
+fn serve_queue(
+    backend: &dyn InferenceBackend,
+    planner: &dyn BatchPlanner,
+    shared: &PoolShared,
+    pool_metrics: &Metrics,
+    agg: &Metrics,
+) {
+    'serve: loop {
         let mut st = shared.state.lock().unwrap();
         let (plan, batch) = loop {
             if st.abort {
@@ -329,18 +373,37 @@ fn worker_loop(
                 }
                 return;
             }
+            // Elastic streaming pools fold the router's queue depth into
+            // their replica-scaling signal; a cheap no-op elsewhere.
+            backend.load_hint(st.queue.len());
             if let Some(front) = st.queue.front() {
                 let oldest = front.submitted.elapsed();
-                if st.draining || batcher.should_flush(st.queue.len(), oldest) {
-                    let plan = batcher
-                        .plan(st.queue.len())
-                        .into_iter()
-                        .next()
-                        .expect("plan of non-empty queue");
-                    let batch: Vec<Request> = st.queue.drain(..plan.take).collect();
-                    break (plan, batch);
+                if st.draining || planner.should_flush(st.queue.len(), oldest) {
+                    match planner.plan(st.queue.len()).into_iter().next() {
+                        Some(plan) => {
+                            let batch: Vec<Request> = st.queue.drain(..plan.take).collect();
+                            break (plan, batch);
+                        }
+                        None => {
+                            // Bugfix (was `.expect("plan of non-empty
+                            // queue")`): a worker panic here would
+                            // silently strand everything queued.  Fail
+                            // the drained requests with the typed
+                            // server-side error instead and keep serving.
+                            let failed: Vec<Request> = st.queue.drain(..).collect();
+                            drop(st);
+                            pool_metrics.errors.fetch_add(1, Ordering::Relaxed);
+                            agg.errors.fetch_add(1, Ordering::Relaxed);
+                            for r in failed {
+                                let _ = r.resp.send(Err(anyhow!(
+                                    "server error: batcher produced no plan for a non-empty queue"
+                                )));
+                            }
+                            continue 'serve;
+                        }
+                    }
                 }
-                let wait = batcher.config().max_wait.saturating_sub(oldest);
+                let wait = planner.max_wait().saturating_sub(oldest);
                 let (g, _) = shared
                     .cv
                     .wait_timeout(st, wait.max(Duration::from_micros(100)))
@@ -372,6 +435,14 @@ fn worker_loop(
                     pool_metrics.record_stream(peak, whole);
                     agg.record_stream(peak, whole);
                 }
+                // Elastic pools: export the live replica count so the
+                // snapshot shows how far the pool has scaled.  Recorded
+                // per arch only — the router's snapshot() sums the
+                // per-arch gauges into the total (a shared last-writer
+                // gauge would misreport multi-pool fleets).
+                if let Some(r) = backend.replica_count() {
+                    pool_metrics.record_replicas(r as u64);
+                }
                 let c = logits.shape.c;
                 // Same class selection as the test oracle, so serving and
                 // golden can never drift on tie-breaking.
@@ -394,5 +465,97 @@ fn worker_loop(
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QTensor;
+
+    /// A backend that must never be reached: the no-plan path fails the
+    /// queue before any execution.
+    struct NullBackend;
+
+    impl InferenceBackend for NullBackend {
+        fn arch(&self) -> &str {
+            "null"
+        }
+
+        fn buckets(&self) -> &[usize] {
+            &[1]
+        }
+
+        fn infer_batch(&self, _input: &QTensor) -> Result<QTensor> {
+            Err(anyhow!("NullBackend::infer_batch should not be reached"))
+        }
+    }
+
+    /// A degenerate planner: always flush, never produce a plan — the
+    /// exact condition that used to hit `.expect("plan of non-empty
+    /// queue")`, panicking the worker and stranding the queue.
+    struct NoPlanPlanner;
+
+    impl BatchPlanner for NoPlanPlanner {
+        fn should_flush(&self, queued: usize, _oldest_age: Duration) -> bool {
+            queued > 0
+        }
+
+        fn plan(&self, _queued: usize) -> Vec<BatchPlan> {
+            Vec::new()
+        }
+
+        fn max_wait(&self) -> Duration {
+            Duration::from_millis(1)
+        }
+    }
+
+    /// Regression: a planner that yields no plan for a non-empty queue
+    /// must fail every drained request with the typed server error (and
+    /// keep the worker alive to serve/drain later), not panic.
+    #[test]
+    fn no_plan_for_nonempty_queue_fails_requests_typed_instead_of_panicking() {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                open: true,
+                draining: false,
+                abort: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let metrics = Arc::new(Metrics::new());
+        let agg = Arc::new(Metrics::new());
+        let (resp_tx, resp_rx) = mpsc::channel();
+        shared.state.lock().unwrap().queue.push_back(Request {
+            pixels: vec![0; IMG_ELEMS],
+            submitted: Instant::now(),
+            resp: resp_tx,
+        });
+        let worker = {
+            let shared = shared.clone();
+            let metrics = metrics.clone();
+            let agg = agg.clone();
+            std::thread::spawn(move || {
+                serve_queue(&NullBackend, &NoPlanPlanner, &shared, &metrics, &agg)
+            })
+        };
+        // The stranded request gets the typed error, not a dropped
+        // channel (which would surface as RecvError here).
+        let resp = resp_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("worker dropped the request instead of answering it");
+        let msg = format!("{:#}", resp.unwrap_err());
+        assert!(msg.contains("no plan"), "{msg}");
+        assert_eq!(metrics.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(agg.errors.load(Ordering::Relaxed), 1);
+        // The worker survived: it drains and exits cleanly on request.
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.open = false;
+            st.draining = true;
+        }
+        shared.cv.notify_all();
+        worker.join().expect("worker panicked");
     }
 }

@@ -9,11 +9,14 @@
 //!   golden-eval [--model M] [--n N]               golden accuracy on synthetic test set
 //!   probe-check                  cross-language bit-equality (golden vs oracle vs PJRT)
 //!   serve      [--model M] [--frames N] [--backend pjrt|golden|sim|stream] [--workers N]
-//!              [--replicas B] [--ow-par N] [--window-storage rows|slices]
+//!              [--replicas B | --min-replicas A --max-replicas B] [--ow-par N]
+//!              [--window-storage rows|slices]
 //!                                route synthetic frames through the inference router
-//!                                (stream: B persistent pipeline replicas per worker,
-//!                                ow_par window groups + column workers, slice-granular
-//!                                Eq. 16/17 window buffers by default)
+//!                                (stream: B persistent pipeline replicas per worker —
+//!                                or an elastic A..=B band scaled under the router's
+//!                                queue-depth signal — ow_par window groups + column
+//!                                workers, slice-granular Eq. 16/17 window buffers by
+//!                                default)
 //!   buffers    [--model M]       Eq. 21/22/23 per residual block, plus the
 //!                                streaming executor's measured peak occupancy
 
@@ -40,7 +43,7 @@ fn main() {
         std::env::args().skip(1),
         &[
             "model", "board", "frames", "n", "out", "skip-factor", "ow-par", "budget", "backend",
-            "workers", "replicas", "window-storage",
+            "workers", "replicas", "min-replicas", "max-replicas", "window-storage",
         ],
     );
     let result = match args.subcommand.as_deref() {
@@ -285,6 +288,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let frames = args.opt_usize("frames", 256);
     let workers = args.opt_usize("workers", 1);
     let replicas = args.opt_usize("replicas", 1);
+    // Elastic band: either flag opts the stream pool into queue-driven
+    // replica scaling (the other end of the band defaults sensibly);
+    // a contradictory band is rejected here, not silently clamped.
+    let min_replicas = args.opt_usize("min-replicas", 0);
+    let max_replicas = args.opt_usize("max-replicas", 0);
+    let elastic = if min_replicas > 0 || max_replicas > 0 {
+        let min = min_replicas.max(1);
+        anyhow::ensure!(
+            max_replicas == 0 || max_replicas >= min,
+            "--max-replicas {max_replicas} is below --min-replicas {min}"
+        );
+        Some((min, max_replicas.max(min)))
+    } else {
+        None
+    };
+    anyhow::ensure!(
+        elastic.is_none() || args.opt("replicas").is_none(),
+        "--replicas fixes the pool size; use either it or the elastic \
+         --min-replicas/--max-replicas band, not both"
+    );
     let ow_par = args.opt_usize("ow-par", 2);
     let storage = match args.opt_or("window-storage", "slices") {
         "rows" => resnet_hls::stream::WindowStorage::Rows,
@@ -299,12 +322,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "pjrt" => std::sync::Arc::new(PjrtFactory::new(dir.clone(), &arch.name)),
         "golden" => std::sync::Arc::new(GoldenFactory::auto(dir.clone(), &arch.name, 7)),
         "sim" => std::sync::Arc::new(SimFactory::synthetic(&arch.name, 7)),
-        "stream" => std::sync::Arc::new(
-            StreamFactory::auto(dir.clone(), &arch.name, 7)
+        "stream" => {
+            let mut f = StreamFactory::auto(dir.clone(), &arch.name, 7)
                 .with_replicas(replicas)
                 .with_ow_par(ow_par)
-                .with_storage(storage),
-        ),
+                .with_storage(storage);
+            if let Some((min, max)) = elastic {
+                f = f.with_elastic(min, max);
+            }
+            std::sync::Arc::new(f)
+        }
         other => anyhow::bail!("unknown backend {other} (expected pjrt|golden|sim|stream)"),
     };
     let router = Router::start(
@@ -312,10 +339,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         RouterConfig { workers_per_arch: workers, ..Default::default() },
     )?;
     if backend == "stream" {
+        let band = match elastic {
+            Some((min, max)) => format!("elastic {min}..={max} replicas (queue-driven)"),
+            None => format!("{replicas} pipeline replica(s)"),
+        };
         println!(
-            "serving {} on stream backend ({workers} worker(s), {replicas} pipeline replica(s) \
-             each, persistent frame-pipelined pool; ow_par={ow_par}, {storage:?} window \
-             storage; buckets sized to in-flight capacity)",
+            "serving {} on stream backend ({workers} worker(s), {band} each, persistent \
+             frame-pipelined pool; ow_par={ow_par}, {storage:?} window storage; buckets sized \
+             to in-flight capacity)",
             arch.name
         );
     } else {

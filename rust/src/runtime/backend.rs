@@ -39,7 +39,7 @@ use crate::models::{
 };
 use crate::quant::{QTensor, Shape4};
 use crate::sim::{build_network, golden, SimOptions};
-use crate::stream::{StreamConfig, StreamPool, StreamStats};
+use crate::stream::{ElasticConfig, StreamConfig, StreamPool, StreamStats};
 
 /// Something that can run inference batches for one architecture.
 ///
@@ -69,6 +69,18 @@ pub trait InferenceBackend {
     /// full named report stays on `StreamBackend::last_stats`).
     /// Everything else returns `None`.
     fn stream_gauges(&self) -> Option<(u64, u64)> {
+        None
+    }
+    /// Serving-layer load hint: the router reports its per-arch queue
+    /// depth here on every claim-loop pass.  Elastic streaming pools
+    /// fold the hint into their replica-scaling signal (so the pool can
+    /// grow *before* its own queue backs up); everything else ignores
+    /// it.  Must be cheap — it is called under the router's queue lock.
+    fn load_hint(&self, _queued: usize) {}
+    /// Live pipeline-replica count of a streaming pool backend (exported
+    /// to the serving metrics as a gauge).  `None` for backends without
+    /// a replica pool.
+    fn replica_count(&self) -> Option<usize> {
         None
     }
 }
@@ -515,6 +527,14 @@ impl InferenceBackend for StreamBackend {
         let (peak, whole) = self.pool.buffered_gauges();
         Some((peak as u64, whole as u64))
     }
+
+    fn load_hint(&self, queued: usize) {
+        self.pool.load_hint(queued);
+    }
+
+    fn replica_count(&self) -> Option<usize> {
+        Some(self.pool.replicas())
+    }
 }
 
 /// Factory for [`StreamBackend`]s (each router worker gets its own
@@ -567,6 +587,21 @@ impl StreamFactory {
     /// (`serve --backend stream --replicas B`).
     pub fn with_replicas(mut self, replicas: usize) -> StreamFactory {
         self.cfg.replicas = replicas.max(1);
+        self
+    }
+
+    /// Elastic replica scaling (`serve --backend stream --min-replicas
+    /// A --max-replicas B`): each created pool starts at `min` replicas
+    /// and its controller grows/drains whole replicas inside
+    /// `min..=max` under the queue-depth signal (including the router's
+    /// `load_hint`), overriding the fixed `with_replicas` knob.
+    pub fn with_elastic(mut self, min: usize, max: usize) -> StreamFactory {
+        let min = min.max(1);
+        self.cfg.elastic = Some(ElasticConfig {
+            min_replicas: min,
+            max_replicas: max.max(min),
+            ..Default::default()
+        });
         self
     }
 

@@ -1,0 +1,235 @@
+//! Elastic replica scaling for the persistent stream pool.
+//!
+//! The paper's throughput comes from keeping the dataflow pipeline
+//! saturated; a pool fixed at `--replicas B` either wastes stage threads
+//! at low load or queues frames at high load.  This module closes that
+//! loop, FINN-style (parallelism as a runtime resource knob, not a
+//! build-time constant): a controller thread samples the pool's shared
+//! work-queue depth (plus the router's queue-depth hint, see
+//! `InferenceBackend::load_hint`) and the in-flight frame count on a
+//! cadence, and grows or drains **whole pipeline replicas** between
+//! `min_replicas..=max_replicas`.
+//!
+//! Scaling is deliberately conservative and frame-safe:
+//! * **up** — only after the load signal stays *strictly above* the
+//!   high-water mark for `scale_up_samples` consecutive samples; the new
+//!   replica is stamped from the pool's one [`PipelineBlueprint`]
+//!   (FIFO specs, gauges and the weights `Arc` are built once per pool,
+//!   so growth costs thread spawns, not re-planning);
+//! * **down** — only after the pool is *fully idle* (empty queue, zero
+//!   frames in flight) for `scale_down_samples` consecutive samples; the
+//!   drained replica's feeder stops claiming work between frames, flows
+//!   the existing zero-length end-of-stream sentinel through its front
+//!   stage, and every thread is joined before the replica is dropped —
+//!   never mid-frame;
+//! * **no flap** — a load sitting exactly *at* the high-water mark (or
+//!   an idle queue with frames still in flight) resets both streaks, so
+//!   steady load at the boundary never oscillates the pool
+//!   ([`ElasticPolicy`] is pure and unit-tested for exactly this).
+//!
+//! [`PipelineBlueprint`]: super::stage::PipelineBlueprint
+
+use std::sync::atomic::Ordering;
+use std::thread;
+use std::time::Duration;
+
+use super::pool::PoolInner;
+
+/// Elastic-scaling policy knobs (see [`crate::stream::StreamConfig`]'s
+/// `elastic` field; `None` there keeps the fixed `replicas` pool).
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// The pool never drains below this many replicas (floor 1); also
+    /// the replica count the pool starts with.
+    pub min_replicas: usize,
+    /// The pool never grows beyond this many replicas.  Batcher buckets
+    /// are sized to the in-flight capacity at this band maximum.
+    pub max_replicas: usize,
+    /// Queue-depth high-water mark; `None` sizes it to one replica's
+    /// in-flight capacity (its stage count) — scale up only when at
+    /// least a whole replica's worth of frames is waiting.
+    pub high_water: Option<usize>,
+    /// Controller sampling cadence.  Also bounds pool-shutdown latency:
+    /// the controller is joined on shutdown and sleeps this long between
+    /// samples, so keep it small (milliseconds, not minutes).
+    pub sample_interval: Duration,
+    /// Consecutive samples strictly above the high-water mark before one
+    /// replica is added.
+    pub scale_up_samples: usize,
+    /// Consecutive fully idle samples (empty queue, nothing in flight)
+    /// before one replica is drained.
+    pub scale_down_samples: usize,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            high_water: None,
+            sample_interval: Duration::from_millis(5),
+            scale_up_samples: 2,
+            scale_down_samples: 40,
+        }
+    }
+}
+
+/// One scaling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Add one replica.
+    Up,
+    /// Drain and join one replica.
+    Down,
+}
+
+/// The pure scaling policy: streak counting over load samples.  Kept
+/// free of pool state so the hysteresis (in particular the no-flap
+/// behavior at the high-water mark) is directly unit-testable.
+#[derive(Debug)]
+pub struct ElasticPolicy {
+    min: usize,
+    max: usize,
+    high_water: usize,
+    up_after: usize,
+    down_after: usize,
+    up_streak: usize,
+    idle_streak: usize,
+}
+
+impl ElasticPolicy {
+    /// `default_high_water` is used when the config leaves `high_water`
+    /// unset (the pool passes one replica's stage count).
+    pub fn new(cfg: &ElasticConfig, default_high_water: usize) -> ElasticPolicy {
+        let min = cfg.min_replicas.max(1);
+        ElasticPolicy {
+            min,
+            max: cfg.max_replicas.max(min),
+            high_water: cfg.high_water.unwrap_or(default_high_water).max(1),
+            up_after: cfg.scale_up_samples.max(1),
+            down_after: cfg.scale_down_samples.max(1),
+            up_streak: 0,
+            idle_streak: 0,
+        }
+    }
+
+    /// The effective high-water mark.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Feed one load sample; returns the action to take now, if any.
+    /// `queue_depth` is the waiting-frame signal (pool queue plus router
+    /// hint), `in_flight` counts accepted-but-unanswered frames,
+    /// `replicas` is the current live replica count.
+    pub fn observe(
+        &mut self,
+        queue_depth: usize,
+        in_flight: usize,
+        replicas: usize,
+    ) -> Option<ScaleAction> {
+        if queue_depth > self.high_water {
+            self.idle_streak = 0;
+            self.up_streak = self.up_streak.saturating_add(1);
+            if replicas < self.max && self.up_streak >= self.up_after {
+                self.up_streak = 0;
+                return Some(ScaleAction::Up);
+            }
+        } else if queue_depth == 0 && in_flight == 0 {
+            self.up_streak = 0;
+            self.idle_streak = self.idle_streak.saturating_add(1);
+            if replicas > self.min && self.idle_streak >= self.down_after {
+                self.idle_streak = 0;
+                return Some(ScaleAction::Down);
+            }
+        } else {
+            // Load at/below the high-water mark, or an idle queue with
+            // frames still in flight: steady state.  Both streaks reset,
+            // so load sitting exactly on the mark never flaps the pool.
+            self.up_streak = 0;
+            self.idle_streak = 0;
+        }
+        None
+    }
+}
+
+/// One load sample the pool hands the controller.
+pub(crate) struct LoadSample {
+    /// Waiting frames: the pool's queue depth plus the router's hint.
+    pub queue_depth: usize,
+    /// Frames accepted but not yet answered (includes the queue).
+    pub in_flight: usize,
+}
+
+/// The controller body: sample on the cadence, apply the policy, scale.
+/// Exits when the pool stops, poisons, or raises the stop flag.
+pub(crate) fn controller_loop(inner: &PoolInner, cfg: &ElasticConfig, default_high_water: usize) {
+    let mut policy = ElasticPolicy::new(cfg, default_high_water);
+    loop {
+        thread::sleep(cfg.sample_interval);
+        if inner.ctl_stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Some(s) = inner.sample() else { return };
+        match policy.observe(s.queue_depth, s.in_flight, inner.replica_count()) {
+            // A failed spawn (transient resource exhaustion) is not
+            // fatal: the pool keeps serving at its current size and the
+            // controller simply retries on a later sample.
+            Some(ScaleAction::Up) => {
+                let _ = inner.add_replica();
+            }
+            Some(ScaleAction::Down) => {
+                inner.retire_one();
+            }
+            None => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ElasticConfig {
+        ElasticConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            high_water: Some(8),
+            scale_up_samples: 2,
+            scale_down_samples: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn scales_up_only_after_a_sustained_burst() {
+        let mut p = ElasticPolicy::new(&cfg(), 99);
+        assert_eq!(p.high_water(), 8);
+        assert!(p.observe(9, 9, 1).is_none());
+        assert_eq!(p.observe(9, 9, 1), Some(ScaleAction::Up));
+        // The streak resets after an action: growing further takes
+        // another sustained burst.
+        assert!(p.observe(9, 9, 2).is_none());
+        assert_eq!(p.observe(9, 9, 2), Some(ScaleAction::Up));
+        // At the band maximum, pressure never acts.
+        for _ in 0..50 {
+            assert!(p.observe(1000, 1000, 4).is_none());
+        }
+    }
+
+    #[test]
+    fn scales_down_only_when_fully_idle_for_the_streak() {
+        let mut p = ElasticPolicy::new(&cfg(), 99);
+        // An empty queue with frames still in flight is not idle.
+        for _ in 0..50 {
+            assert!(p.observe(0, 3, 2).is_none());
+        }
+        assert!(p.observe(0, 0, 2).is_none());
+        assert!(p.observe(0, 0, 2).is_none());
+        assert_eq!(p.observe(0, 0, 2), Some(ScaleAction::Down));
+        // At the band minimum, idleness never drains further.
+        for _ in 0..50 {
+            assert!(p.observe(0, 0, 1).is_none());
+        }
+    }
+}

@@ -19,6 +19,13 @@
 //!   per window group (the execution counterpart of the ILP's DSP
 //!   packing, `hls::packing::macs_per_cycle`), with conv window storage
 //!   held to exactly the Eq. 16/17 span ([`WindowStorage::Slices`]);
+//! * the replica count can be **elastic** ([`StreamConfig::elastic`]):
+//!   a controller thread samples the work-queue depth (plus the
+//!   router's queue-depth hint) and the in-flight frame count, and
+//!   grows or drains whole replicas between `min_replicas..=max_replicas`,
+//!   stamping new replicas from the pool's single pipeline blueprint
+//!   (planned once, instantiated per replica) and draining via the
+//!   end-of-stream sentinel — never mid-frame (see [`ElasticConfig`]);
 //! * FIFO depths and `ow_par` come from the board/ILP configuration
 //!   ([`planned_config`] → `hls::config::configure`) — the
 //!   executor validates exactly the depths codegen emits: conv output
@@ -55,12 +62,14 @@
 //! [`hls::streams`]: crate::hls::streams
 //! [`hls::window`]: crate::hls::window
 
+mod elastic;
 mod executor;
 mod fifo;
 mod line_buffer;
 mod pool;
 mod stage;
 
+pub use elastic::{ElasticConfig, ElasticPolicy, ScaleAction};
 pub use executor::run_streaming;
 pub use fifo::{BufferStat, Fifo, PeakGauge, StreamError};
 pub use line_buffer::{LineBuffer, SliceWindow};
@@ -123,6 +132,12 @@ pub struct StreamConfig {
     /// slice-granular mode; the actual count is `min(cap, ow_par, ow)`
     /// and multiplies the channel-worker count.  1 = no column split.
     pub ow_worker_cap: usize,
+    /// Elastic replica scaling: `Some` grows/drains whole pipeline
+    /// replicas between `min_replicas..=max_replicas` under the
+    /// work-queue depth signal (plus the router's queue-depth hint),
+    /// ignoring the fixed `replicas` knob; `None` keeps the pool at
+    /// exactly `replicas`.  See [`ElasticConfig`].
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl Default for StreamConfig {
@@ -141,6 +156,7 @@ impl Default for StreamConfig {
             ow_par: 2,
             window_storage: WindowStorage::default(),
             ow_worker_cap: 4,
+            elastic: None,
         }
     }
 }
@@ -149,9 +165,11 @@ impl Default for StreamConfig {
 /// capacity bound and peak occupancy, in activation elements (the unit of
 /// `hls::streams` depths; most streams carry int8 activations, the final
 /// logits stream carries int32).  For a multi-replica pool, replica
-/// `i > 0` buffer names carry an `r{i}/` prefix and
-/// `whole_tensor_elems` is scaled by the replica count (the concurrent
-/// whole-tensor storage a non-streaming executor would need).
+/// `i > 0` buffer names carry an `r{i}/` prefix (replicas the elastic
+/// controller drained keep reporting their final stats) and
+/// `whole_tensor_elems` is scaled by the pool's *peak* replica count
+/// (the concurrent whole-tensor storage a non-streaming executor would
+/// need at that concurrency).
 #[derive(Debug, Clone)]
 pub struct StreamStats {
     pub buffers: Vec<BufferStat>,

@@ -1,22 +1,28 @@
 //! The persistent frame-pipelined stream pool.
 //!
-//! [`StreamPool`] spawns `StreamConfig::replicas` copies of the streaming
-//! pipeline **once** and keeps every stage thread alive across frames:
-//! frames are submitted to a shared work queue, each replica's *feeder*
-//! thread claims the next frame and streams its pixels into the replica's
-//! DMA FIFO, and the replica's *sink* thread pops logits and answers the
-//! frame's response channel.  Because stages never restart, frame N+1
-//! enters conv0 while frame N is still in the classifier — the
-//! frame-level pipelining that gives the paper's free-running dataflow
-//! its throughput (Section III-B), which the per-call
-//! [`run_streaming`](super::run_streaming) executor pays pipeline-fill
-//! latency to approximate one frame at a time.
+//! [`StreamPool`] stamps pipeline replicas out of one shared
+//! [`PipelineBlueprint`] (planned **once** per pool: FIFO/gauge specs,
+//! shapes, ILP lookups, weight validation) and keeps every stage thread
+//! alive across frames: frames are submitted to a shared work queue,
+//! each replica's *feeder* thread claims the next frame and streams its
+//! pixels into the replica's DMA FIFO, and the replica's *sink* thread
+//! pops logits and answers the frame's response channel.  Because stages
+//! never restart, frame N+1 enters conv0 while frame N is still in the
+//! classifier — the frame-level pipelining that gives the paper's
+//! free-running dataflow its throughput (Section III-B), which the
+//! per-call [`run_streaming`](super::run_streaming) executor pays
+//! pipeline-fill latency to approximate one frame at a time.
 //!
 //! Sizing comes from the board/ILP configuration
 //! ([`planned_config`] → `hls::config::configure`): FIFO depths are
 //! exactly the depths codegen emits, and each conv stage splits its
 //! output channels across up to `och_par` worker threads (the layer's
 //! ILP allocation, capped by `StreamConfig::och_worker_cap`).
+//!
+//! The replica count is either fixed (`StreamConfig::replicas`) or
+//! **elastic** (`StreamConfig::elastic`): a controller thread samples
+//! the queue depth + in-flight count and grows/drains whole replicas
+//! between `min_replicas..=max_replicas` — see [`super::elastic`].
 //!
 //! Delivery and shutdown guarantees:
 //! * results are delivered **per submission** — in-order for a caller
@@ -26,14 +32,19 @@
 //!   the queue, flows a zero-length end-of-stream sentinel through every
 //!   replica, **drains frames mid-pipeline** (every accepted frame gets a
 //!   real response), and joins every thread — no leaks, no lost
-//!   responses;
+//!   responses; a replica drained by the elastic controller gets the
+//!   same sentinel treatment, never a mid-frame cut;
 //! * a stage failure (e.g. an undersized-FIFO [`StreamError::Stalled`])
 //!   aborts its replica, poisons the pool, and fails queued + in-flight
-//!   frames with the typed error message — never a hang.
+//!   frames with the typed error message — never a hang; a mutex
+//!   poisoned by a panicked thread maps to the same typed
+//!   [`StreamError::Inconsistent`] path instead of an unwrap panic.
+//!
+//! [`PipelineBlueprint`]: super::stage::PipelineBlueprint
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
@@ -45,8 +56,11 @@ use crate::ilp::{solve, LayerLoad};
 use crate::models::ModelWeights;
 use crate::quant::{QTensor, Shape4};
 
-use super::fifo::{Fifo, PeakGauge, StreamError};
-use super::stage::{eos, guarded, plan_pipeline, push_all, run_stage, PipelinePlan};
+use super::elastic::{controller_loop, LoadSample};
+use super::fifo::{BufferStat, Fifo, PeakGauge, StreamError};
+use super::stage::{
+    eos, guarded, plan_pipeline, push_all, run_stage, PipelineBlueprint, PipelinePlan,
+};
 use super::{StreamConfig, StreamStats};
 
 /// How often a feeder blocked on an empty queue re-checks the abort flag.
@@ -54,6 +68,20 @@ const POLL: Duration = Duration::from_millis(20);
 
 type FrameResult = Result<Vec<i32>, String>;
 type Pending = Arc<Mutex<VecDeque<mpsc::Sender<FrameResult>>>>;
+
+/// Recover the guard of a poisoned mutex: shutdown, poison and stats
+/// paths must always complete even if a stage thread panicked while
+/// holding the lock (the guarded data is plain bookkeeping, still valid).
+fn recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Lock for the serving hot path: a poisoned lock becomes the typed
+/// [`StreamError::Inconsistent`] (degrading into the router's error
+/// path) instead of an opaque unwrap panic.
+fn locked<'a, T>(m: &'a Mutex<T>, what: &'static str) -> Result<MutexGuard<'a, T>, StreamError> {
+    m.lock().map_err(|_| StreamError::Inconsistent { what })
+}
 
 /// Build per-layer ILP inputs from the graph itself (Eq. 8): the pool
 /// has no `ArchSpec` — serving constructs everything from graph+weights.
@@ -131,125 +159,263 @@ struct Shared {
 }
 
 struct ReplicaHandle {
+    /// Replica id (tag `r{id}/` for id > 0); returned to the free list
+    /// on retirement so an oscillating elastic pool reuses tags instead
+    /// of growing an unbounded name space.
+    id: usize,
     supervisor: Option<JoinHandle<()>>,
     fifos: Vec<Arc<Fifo>>,
     gauges: Vec<Arc<PeakGauge>>,
+    /// Raised by the elastic controller to drain this replica: its
+    /// feeder stops claiming frames (between frames, never mid-frame)
+    /// and flows the end-of-stream sentinel.
+    retire: Arc<AtomicBool>,
+}
+
+/// Everything the pool's threads (and the elastic controller) share.
+pub(crate) struct PoolInner {
+    name: String,
+    shared: Arc<Shared>,
+    error: Arc<Mutex<Option<String>>>,
+    frames_done: Arc<AtomicUsize>,
+    frames_submitted: AtomicUsize,
+    /// The router's queue-depth hint (`InferenceBackend::load_hint`),
+    /// taken-and-reset by each controller sample.
+    router_hint: AtomicUsize,
+    replicas: Mutex<Vec<ReplicaHandle>>,
+    /// Final buffer stats of the most recent drain of each replica tag.
+    /// Bounded: retired ids return to `free_ids` and a re-grown replica
+    /// purges its tag's old entries, so an oscillating pool holds at
+    /// most one drained stat set per band slot — never one per cycle.
+    retired: Mutex<Vec<BufferStat>>,
+    peak_replicas: AtomicUsize,
+    /// Replica ids freed by retirement, reused before minting new ones.
+    free_ids: Mutex<Vec<usize>>,
+    next_replica: AtomicUsize,
+    /// Stops the elastic controller (checked every sample).
+    pub(crate) ctl_stop: AtomicBool,
+    blueprint: PipelineBlueprint,
+    weights: Arc<ModelWeights>,
+    min_replicas: usize,
+    max_replicas: usize,
+}
+
+impl PoolInner {
+    /// Live replica count.
+    pub(crate) fn replica_count(&self) -> usize {
+        recover(&self.replicas).len()
+    }
+
+    /// One controller load sample; `None` means the pool is stopping
+    /// (closed or poisoned) and the controller should exit.
+    pub(crate) fn sample(&self) -> Option<LoadSample> {
+        let depth = {
+            let st = self.shared.q.lock().ok()?;
+            if !st.open || st.poison.is_some() {
+                return None;
+            }
+            st.jobs.len()
+        };
+        let hint = self.router_hint.swap(0, Ordering::Relaxed);
+        let submitted = self.frames_submitted.load(Ordering::Relaxed);
+        let done = self.frames_done.load(Ordering::Relaxed);
+        Some(LoadSample {
+            queue_depth: depth.saturating_add(hint),
+            in_flight: submitted.saturating_sub(done),
+        })
+    }
+
+    /// Stamp and launch one replica from the shared blueprint.  Cheap
+    /// (no re-planning); on a spawn failure the partial thread set is
+    /// aborted and joined before the error propagates.
+    pub(crate) fn add_replica(&self) -> Result<()> {
+        let id = match recover(&self.free_ids).pop() {
+            Some(id) => id,
+            None => self.next_replica.fetch_add(1, Ordering::SeqCst),
+        };
+        let tag = if id == 0 { String::new() } else { format!("r{id}/") };
+        if !tag.is_empty() {
+            // This tag's slot is live again: its previous drain's stats
+            // are superseded (their worst pair already reached the
+            // metrics layer while the old replica served).
+            recover(&self.retired).retain(|b| !b.name.starts_with(&tag));
+        }
+        let abort = Arc::new(AtomicBool::new(false));
+        let retire = Arc::new(AtomicBool::new(false));
+        let plan = self.blueprint.instantiate(&abort, &tag);
+        let fifos = plan.fifos.clone();
+        let gauges = plan.gauges.clone();
+        let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
+        let handles = spawn_replica(
+            &self.name,
+            id,
+            plan,
+            self.weights.clone(),
+            self.shared.clone(),
+            pending.clone(),
+            abort.clone(),
+            retire.clone(),
+            self.frames_done.clone(),
+            self.blueprint.in_c,
+        )?;
+        // The handles live in a cell the supervisor takes on startup: if
+        // its spawn fails, they are still here to abort + join, so the
+        // replica's threads are never detached.
+        let handle_cell = Arc::new(Mutex::new(Some(handles)));
+        let sup = {
+            let cell = handle_cell.clone();
+            let shared = self.shared.clone();
+            let error = self.error.clone();
+            let sup_res = thread::Builder::new()
+                .name(format!("strm-{}-r{id}-sup", self.name))
+                .spawn(move || {
+                    // A poisoned or already-claimed cell is a bookkeeping
+                    // bug, not a reason to abort the process: recover the
+                    // guard, and poison the pool with the typed error so
+                    // the router's error path reports it.
+                    match recover(&cell).take() {
+                        Some(handles) => supervise(handles, &shared, &pending, &error),
+                        None => fail_pool(
+                            &shared,
+                            &pending,
+                            &error,
+                            &StreamError::Inconsistent {
+                                what: "replica thread handles were already claimed",
+                            },
+                        ),
+                    }
+                });
+            match sup_res {
+                Ok(h) => h,
+                Err(e) => {
+                    abort.store(true, Ordering::SeqCst);
+                    if let Some(hs) = recover(&handle_cell).take() {
+                        for h in hs {
+                            let _ = h.join();
+                        }
+                    }
+                    return Err(anyhow!("failed to spawn pool supervisor: {e}"));
+                }
+            }
+        };
+        let mut reps = recover(&self.replicas);
+        reps.push(ReplicaHandle { id, supervisor: Some(sup), fifos, gauges, retire });
+        self.peak_replicas.fetch_max(reps.len(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Drain and join the newest replica (LIFO), unless the pool is
+    /// already at `min_replicas`.  The replica's feeder stops claiming
+    /// frames between frames and flows the end-of-stream sentinel; its
+    /// threads are joined before this returns, and its final buffer
+    /// stats move to the retired set.  Returns whether a replica was
+    /// actually drained.
+    ///
+    /// The handle stays in the live set for the whole drain: should the
+    /// retiring replica still finish a late-claimed frame, concurrent
+    /// `replicas()`/`stats()`/`buffered_gauges()` readers keep seeing
+    /// its threads and buffers until the join completes — the replica
+    /// gauge only drops afterwards.  (Only the controller and the
+    /// post-controller shutdown mutate the live set, so the tail handle
+    /// cannot change identity mid-drain.)
+    pub(crate) fn retire_one(&self) -> bool {
+        let sup = {
+            let mut reps = recover(&self.replicas);
+            if reps.len() <= self.min_replicas {
+                return false;
+            }
+            let Some(h) = reps.last_mut() else { return false };
+            h.retire.store(true, Ordering::SeqCst);
+            h.supervisor.take()
+        };
+        self.shared.cv.notify_all();
+        if let Some(sup) = sup {
+            let _ = sup.join();
+        }
+        let Some(h) = recover(&self.replicas).pop() else { return false };
+        {
+            let mut retired = recover(&self.retired);
+            retired.extend(h.fifos.iter().map(|f| f.stat()));
+            retired.extend(h.gauges.iter().map(|g| g.stat()));
+        }
+        recover(&self.free_ids).push(h.id);
+        true
+    }
 }
 
 /// A running pool of persistent pipeline replicas behind one work queue.
 pub struct StreamPool {
-    shared: Arc<Shared>,
-    replicas: Vec<ReplicaHandle>,
-    error: Arc<Mutex<Option<String>>>,
-    frames_done: Arc<AtomicUsize>,
-    whole_tensor_elems: usize,
-    stages_per_replica: usize,
-    classes: usize,
-    in_h: usize,
-    in_w: usize,
-    in_c: usize,
-    in_exp: i32,
+    inner: Arc<PoolInner>,
+    controller: Option<JoinHandle<()>>,
 }
 
 impl StreamPool {
-    /// Plan and launch the pool: ILP/board configuration once, then
-    /// `cfg.replicas` pipeline replicas whose stage threads stay alive
-    /// until shutdown.  `name` labels threads and the configuration.
+    /// Plan the pool once (ILP/board configuration + one pipeline
+    /// blueprint), then launch its replicas: a fixed `cfg.replicas`, or
+    /// — with `cfg.elastic` set — `min_replicas` plus a controller
+    /// thread that grows/drains the pool under load.  `name` labels
+    /// threads and the configuration.
     pub fn new(
         name: &str,
         g: &Graph,
         weights: Arc<ModelWeights>,
         cfg: StreamConfig,
     ) -> Result<StreamPool> {
-        let n_replicas = cfg.replicas.max(1);
-        let acfg = planned_config(name, g, &cfg)?;
-        let shared = Arc::new(Shared {
-            q: Mutex::new(QueueState { jobs: VecDeque::new(), open: true, poison: None }),
-            cv: Condvar::new(),
-        });
-        let error = Arc::new(Mutex::new(None));
-        let frames_done = Arc::new(AtomicUsize::new(0));
-        let mut pool = StreamPool {
-            shared: shared.clone(),
-            replicas: Vec::with_capacity(n_replicas),
-            error: error.clone(),
-            frames_done: frames_done.clone(),
-            whole_tensor_elems: 0,
-            stages_per_replica: 0,
-            classes: 0,
-            in_h: 0,
-            in_w: 0,
-            in_c: 0,
-            in_exp: 0,
-        };
-        for r in 0..n_replicas {
-            let abort = Arc::new(AtomicBool::new(false));
-            let tag = if r == 0 { String::new() } else { format!("r{r}/") };
-            let plan = plan_pipeline(g, &weights, &cfg, &acfg, abort.clone(), &tag)?;
-            if r == 0 {
-                pool.whole_tensor_elems = plan.whole_tensor_elems;
-                pool.stages_per_replica = plan.stages.len();
-                pool.classes = plan.classes;
-                pool.in_h = plan.in_h;
-                pool.in_w = plan.in_w;
-                pool.in_c = plan.in_c;
-                pool.in_exp = plan.in_exp;
+        let elastic = cfg.elastic.clone();
+        let (initial, min_replicas, max_replicas) = match &elastic {
+            Some(e) => {
+                let min = e.min_replicas.max(1);
+                anyhow::ensure!(
+                    e.max_replicas >= min,
+                    "elastic band empty: max_replicas {} < min_replicas {min}",
+                    e.max_replicas
+                );
+                (min, min, e.max_replicas)
             }
-            let fifos = plan.fifos.clone();
-            let gauges = plan.gauges.clone();
-            let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
-            // If anything below fails, dropping `pool` closes the queue
-            // and joins the replicas already running.
-            let handles = spawn_replica(
-                name,
-                r,
-                plan,
-                weights.clone(),
-                shared.clone(),
-                pending.clone(),
-                abort.clone(),
-                frames_done.clone(),
-            )?;
-            // The handles live in a cell the supervisor takes on startup:
-            // if its spawn fails, they are still here to abort + join, so
-            // the replica's threads are never detached.
-            let handle_cell = Arc::new(Mutex::new(Some(handles)));
-            let sup = {
-                let cell = handle_cell.clone();
-                let shared = shared.clone();
-                let error = error.clone();
-                let sup_res = thread::Builder::new()
-                    .name(format!("strm-{name}-r{r}-sup"))
-                    .spawn(move || {
-                        // A claimed cell is a bookkeeping bug, not a reason
-                        // to abort the process: poison the pool with the
-                        // typed error so the router's error path reports it.
-                        match cell.lock().unwrap().take() {
-                            Some(handles) => supervise(handles, &shared, &pending, &error),
-                            None => fail_pool(
-                                &shared,
-                                &pending,
-                                &error,
-                                &StreamError::Inconsistent {
-                                    what: "replica thread handles were already claimed",
-                                },
-                            ),
-                        }
-                    });
-                match sup_res {
-                    Ok(h) => h,
-                    Err(e) => {
-                        abort.store(true, Ordering::SeqCst);
-                        if let Some(hs) = handle_cell.lock().unwrap().take() {
-                            for h in hs {
-                                let _ = h.join();
-                            }
-                        }
-                        return Err(anyhow!("failed to spawn pool supervisor: {e}"));
-                    }
-                }
-            };
-            pool.replicas.push(ReplicaHandle { supervisor: Some(sup), fifos, gauges });
+            None => {
+                let r = cfg.replicas.max(1);
+                (r, r, r)
+            }
+        };
+        let acfg = planned_config(name, g, &cfg)?;
+        let blueprint = plan_pipeline(g, &weights, &cfg, &acfg)?;
+        let inner = Arc::new(PoolInner {
+            name: name.to_string(),
+            shared: Arc::new(Shared {
+                q: Mutex::new(QueueState { jobs: VecDeque::new(), open: true, poison: None }),
+                cv: Condvar::new(),
+            }),
+            error: Arc::new(Mutex::new(None)),
+            frames_done: Arc::new(AtomicUsize::new(0)),
+            frames_submitted: AtomicUsize::new(0),
+            router_hint: AtomicUsize::new(0),
+            replicas: Mutex::new(Vec::with_capacity(initial)),
+            retired: Mutex::new(Vec::new()),
+            peak_replicas: AtomicUsize::new(0),
+            free_ids: Mutex::new(Vec::new()),
+            next_replica: AtomicUsize::new(0),
+            ctl_stop: AtomicBool::new(false),
+            blueprint,
+            weights,
+            min_replicas,
+            max_replicas,
+        });
+        let mut pool = StreamPool { inner: inner.clone(), controller: None };
+        for _ in 0..initial {
+            // If a later replica fails to spawn, dropping `pool` closes
+            // the queue and joins the replicas already running.
+            inner.add_replica()?;
+        }
+        if let Some(e) = elastic {
+            let high = inner.blueprint.stages_per_replica().max(1);
+            let ctl = thread::Builder::new()
+                .name(format!("strm-{name}-elastic"))
+                .spawn({
+                    let inner = inner.clone();
+                    move || controller_loop(&inner, &e, high)
+                })
+                .map_err(|err| anyhow!("failed to spawn elastic controller: {err}"))?;
+            pool.controller = Some(ctl);
         }
         Ok(pool)
     }
@@ -257,25 +423,28 @@ impl StreamPool {
     /// Submit one frame (row-major `h*w*c` pixels at the input exponent);
     /// returns immediately with the frame's response ticket.
     pub fn submit(&self, pixels: &[i32]) -> Result<FrameTicket> {
-        let want = self.in_h * self.in_w * self.in_c;
+        let bp = &self.inner.blueprint;
+        let want = bp.in_h * bp.in_w * bp.in_c;
         anyhow::ensure!(
             pixels.len() == want,
             "frame has {} pixels, expected {want} ({}x{}x{})",
             pixels.len(),
-            self.in_h,
-            self.in_w,
-            self.in_c
+            bp.in_h,
+            bp.in_w,
+            bp.in_c
         );
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.shared.q.lock().unwrap();
+            let mut st = locked(&self.inner.shared.q, "work-queue lock poisoned")
+                .map_err(|e| anyhow!("{e}"))?;
             if let Some(p) = &st.poison {
                 return Err(anyhow!("{p}"));
             }
             anyhow::ensure!(st.open, "stream pool stopped");
             st.jobs.push_back(Job { pixels: Box::from(pixels), resp: tx });
+            self.inner.frames_submitted.fetch_add(1, Ordering::Relaxed);
         }
-        self.shared.cv.notify_one();
+        self.inner.shared.cv.notify_one();
         Ok(FrameTicket { rx })
     }
 
@@ -284,94 +453,133 @@ impl StreamPool {
     /// capacity of frames pipeline concurrently.  Results are assembled
     /// in submission order (bit-identical to the golden model).
     pub fn infer(&self, input: &QTensor) -> Result<QTensor> {
+        let bp = &self.inner.blueprint;
         let n = input.shape.n;
         anyhow::ensure!(n >= 1, "empty input batch");
         anyhow::ensure!(
-            (input.shape.h, input.shape.w, input.shape.c) == (self.in_h, self.in_w, self.in_c),
+            (input.shape.h, input.shape.w, input.shape.c) == (bp.in_h, bp.in_w, bp.in_c),
             "input shape {} vs expected ({},{},{})",
             input.shape,
-            self.in_h,
-            self.in_w,
-            self.in_c
+            bp.in_h,
+            bp.in_w,
+            bp.in_c
         );
         anyhow::ensure!(
-            input.exp == self.in_exp,
+            input.exp == bp.in_exp,
             "input exp {} vs expected {}",
             input.exp,
-            self.in_exp
+            bp.in_exp
         );
-        let frame = self.in_h * self.in_w * self.in_c;
+        let frame = bp.in_h * bp.in_w * bp.in_c;
         let mut tickets = Vec::with_capacity(n);
         for i in 0..n {
             tickets.push(self.submit(&input.data[i * frame..(i + 1) * frame])?);
         }
-        let mut out = Vec::with_capacity(n * self.classes);
+        let classes = bp.classes;
+        let mut out = Vec::with_capacity(n * classes);
         for t in tickets {
             out.extend_from_slice(&t.wait()?);
         }
-        Ok(QTensor::from_vec(Shape4::new(n, 1, 1, self.classes), 0, out))
+        Ok(QTensor::from_vec(Shape4::new(n, 1, 1, classes), 0, out))
     }
 
-    /// Pipeline replicas behind the shared queue.
+    /// Live pipeline replicas behind the shared queue (an elastic pool
+    /// moves this between its band's min and max).
     pub fn replicas(&self) -> usize {
-        self.replicas.len()
+        self.inner.replica_count()
     }
 
-    /// Frames the pool can usefully hold in flight: one per stage per
-    /// replica (each persistent stage works on its own frame).  Batcher
-    /// buckets are sized to this.
+    /// The highest live replica count the pool ever reached.
+    pub fn peak_replicas(&self) -> usize {
+        self.inner.peak_replicas.load(Ordering::Relaxed)
+    }
+
+    /// The replica band floor (equals `replicas` for a fixed pool).
+    pub fn min_replicas(&self) -> usize {
+        self.inner.min_replicas
+    }
+
+    /// The replica band ceiling (equals `replicas` for a fixed pool).
+    pub fn max_replicas(&self) -> usize {
+        self.inner.max_replicas
+    }
+
+    /// Frames the pool can usefully hold in flight at its band maximum:
+    /// one per stage per replica (each persistent stage works on its own
+    /// frame).  Batcher buckets are sized to this, so an elastic pool is
+    /// handed enough queued frames to justify growing.
     pub fn capacity(&self) -> usize {
-        (self.stages_per_replica * self.replicas.len()).max(1)
+        (self.inner.blueprint.stages_per_replica() * self.inner.max_replicas).max(1)
     }
 
     /// Logit classes per frame.
     pub fn classes(&self) -> usize {
-        self.classes
+        self.inner.blueprint.classes
     }
 
     /// Frames completed since the pool started.
     pub fn frames(&self) -> usize {
-        self.frames_done.load(Ordering::Relaxed)
+        self.inner.frames_done.load(Ordering::Relaxed)
+    }
+
+    /// Serving-layer load hint (the router's per-arch queue depth): the
+    /// elastic controller folds the highest hint since its last sample
+    /// into the scaling signal.  No-op for a fixed pool beyond a cheap
+    /// atomic store.
+    pub fn load_hint(&self, queued: usize) {
+        self.inner.router_hint.fetch_max(queued, Ordering::Relaxed);
     }
 
     /// First pipeline error, if any replica failed.
     pub fn error(&self) -> Option<String> {
-        self.error.lock().unwrap().clone()
+        recover(&self.inner.error).clone()
     }
 
     /// Cumulative buffering snapshot, readable while the pool runs:
-    /// every replica's FIFOs and line buffers (replica `i > 0` names are
-    /// prefixed `r{i}/`), with the whole-tensor comparison scaled by the
-    /// replica count (a non-streaming executor running R concurrent
-    /// frames materializes R whole-tensor sets).
+    /// every live replica's FIFOs and line buffers (replica `i > 0`
+    /// names are prefixed `r{i}/`), plus the final stats of replicas the
+    /// elastic controller drained; the whole-tensor comparison is scaled
+    /// by the peak replica count (a non-streaming executor running R
+    /// concurrent frames materializes R whole-tensor sets).
     pub fn stats(&self) -> StreamStats {
         let mut buffers = Vec::new();
-        for r in &self.replicas {
-            buffers.extend(r.fifos.iter().map(|f| f.stat()));
-            buffers.extend(r.gauges.iter().map(|g| g.stat()));
+        {
+            let reps = recover(&self.inner.replicas);
+            for r in reps.iter() {
+                buffers.extend(r.fifos.iter().map(|f| f.stat()));
+                buffers.extend(r.gauges.iter().map(|g| g.stat()));
+            }
         }
+        buffers.extend(recover(&self.inner.retired).iter().cloned());
         StreamStats {
             buffers,
             frames: self.frames(),
-            whole_tensor_elems: self.whole_tensor_elems * self.replicas.len().max(1),
+            whole_tensor_elems: self.inner.blueprint.whole_tensor_elems
+                * self.peak_replicas().max(1),
         }
     }
 
     /// Cheap gauge pair for the serving metrics, recorded after every
-    /// batch: `(summed peak occupancy across every replica's buffers,
-    /// replica-scaled whole-tensor base)` — atomics/locks only, no
-    /// per-buffer name clones (use [`stats`](StreamPool::stats) for the
-    /// full named report).
+    /// batch: `(summed peak occupancy across every *live* replica's
+    /// buffers, peak-replica-scaled whole-tensor base)` — atomics/locks
+    /// only, no per-buffer name clones (use
+    /// [`stats`](StreamPool::stats) for the full named report).
+    /// Drained replicas are deliberately excluded: their worst pair was
+    /// exported while they served (the metrics layer keeps the maximum),
+    /// and summing every past generation on top of the live ones would
+    /// inflate the buffered fraction without bound on an oscillating
+    /// elastic pool.
     pub fn buffered_gauges(&self) -> (usize, usize) {
-        let peak: usize = self
-            .replicas
-            .iter()
-            .map(|r| {
-                r.fifos.iter().map(|f| f.peak()).sum::<usize>()
-                    + r.gauges.iter().map(|g| g.peak()).sum::<usize>()
-            })
-            .sum();
-        (peak, self.whole_tensor_elems * self.replicas.len().max(1))
+        let peak: usize = {
+            let reps = recover(&self.inner.replicas);
+            reps.iter()
+                .map(|r| {
+                    r.fifos.iter().map(|f| f.peak()).sum::<usize>()
+                        + r.gauges.iter().map(|g| g.peak()).sum::<usize>()
+                })
+                .sum()
+        };
+        (peak, self.inner.blueprint.whole_tensor_elems * self.peak_replicas().max(1))
     }
 
     /// Graceful shutdown: stop accepting frames, drain everything
@@ -383,16 +591,27 @@ impl StreamPool {
     }
 
     fn close_and_join(&mut self) {
+        // Stop the elastic controller first so it cannot add or retire
+        // replicas concurrently with the drain.
+        self.inner.ctl_stop.store(true, Ordering::SeqCst);
+        if let Some(c) = self.controller.take() {
+            let _ = c.join();
+        }
         {
-            let mut st = self.shared.q.lock().unwrap();
+            let mut st = recover(&self.inner.shared.q);
             st.open = false;
         }
-        self.shared.cv.notify_all();
-        for r in &mut self.replicas {
+        self.inner.shared.cv.notify_all();
+        let handles: Vec<ReplicaHandle> = recover(&self.inner.replicas).drain(..).collect();
+        let mut retired = Vec::new();
+        for mut r in handles {
             if let Some(h) = r.supervisor.take() {
                 let _ = h.join();
             }
+            retired.extend(r.fifos.iter().map(|f| f.stat()));
+            retired.extend(r.gauges.iter().map(|g| g.stat()));
         }
+        recover(&self.inner.retired).extend(retired);
     }
 }
 
@@ -417,16 +636,18 @@ fn spawn_replica(
     shared: Arc<Shared>,
     pending: Pending,
     abort: Arc<AtomicBool>,
+    retire: Arc<AtomicBool>,
     frames_done: Arc<AtomicUsize>,
+    in_c: usize,
 ) -> Result<Vec<JoinHandle<Result<(), StreamError>>>> {
-    let PipelinePlan { stages, sources, sink, in_c, .. } = plan;
+    let PipelinePlan { stages, sources, sink, .. } = plan;
     let mut handles: Vec<JoinHandle<Result<(), StreamError>>> = Vec::new();
     let res = (|| -> Result<()> {
         spawn_thread(format!("strm-{name}-r{r}-feed"), &mut handles, &abort, {
             let shared = shared.clone();
             let abort = abort.clone();
             let pending = pending.clone();
-            move || feeder_loop(&shared, &abort, &sources, &pending, in_c)
+            move || feeder_loop(&shared, &abort, &retire, &sources, &pending, in_c)
         })?;
         for st in stages {
             let w = weights.clone();
@@ -469,21 +690,27 @@ fn spawn_thread(
 }
 
 /// Claim frames off the shared queue and stream their pixels into the
-/// replica's DMA FIFO(s); on queue close (or pool poison) flow the
-/// end-of-stream sentinel so the replica drains and exits cleanly.
+/// replica's DMA FIFO(s); on queue close, pool poison, or a retire
+/// request from the elastic controller, flow the end-of-stream sentinel
+/// so the replica drains and exits cleanly — retirement is only ever
+/// observed *between* frames, never mid-frame.
 fn feeder_loop(
     shared: &Shared,
     abort: &AtomicBool,
+    retire: &AtomicBool,
     sources: &[Arc<Fifo>],
     pending: &Pending,
     in_c: usize,
 ) -> Result<(), StreamError> {
     loop {
         let job = {
-            let mut st = shared.q.lock().unwrap();
+            let mut st = locked(&shared.q, "work-queue lock poisoned")?;
             loop {
                 if abort.load(Ordering::SeqCst) {
                     return Err(StreamError::Aborted);
+                }
+                if retire.load(Ordering::SeqCst) {
+                    break None;
                 }
                 if st.poison.is_some() {
                     break None;
@@ -494,7 +721,10 @@ fn feeder_loop(
                 if !st.open {
                     break None;
                 }
-                let (g, _) = shared.cv.wait_timeout(st, POLL).unwrap();
+                let (g, _) = shared
+                    .cv
+                    .wait_timeout(st, POLL)
+                    .map_err(|_| StreamError::Inconsistent { what: "work-queue lock poisoned" })?;
                 st = g;
             }
         };
@@ -502,7 +732,7 @@ fn feeder_loop(
             Some(job) => {
                 // Register the responder *before* the first pixel: the
                 // sink pairs results with this queue in feed order.
-                pending.lock().unwrap().push_back(job.resp);
+                locked(pending, "pending-responders lock poisoned")?.push_back(job.resp);
                 for px in job.pixels.chunks_exact(in_c) {
                     push_all(sources, Box::from(px))?;
                 }
@@ -536,9 +766,11 @@ fn sink_loop(
         // violated invariant degrades this replica into the supervisor's
         // typed error path (poisoning the pool) instead of aborting the
         // serving process.
-        let resp = pending.lock().unwrap().pop_front().ok_or(StreamError::Inconsistent {
-            what: "sink produced a frame with no pending submitter",
-        })?;
+        let resp = locked(pending, "pending-responders lock poisoned")?
+            .pop_front()
+            .ok_or(StreamError::Inconsistent {
+                what: "sink produced a frame with no pending submitter",
+            })?;
         let _ = resp.send(Ok(tok.to_vec()));
         frames_done.fetch_add(1, Ordering::Relaxed);
     }
@@ -577,17 +809,19 @@ fn supervise(
 /// Poison the pool with a typed error: record it, close the queue, fail
 /// every queued and in-flight frame with the message.  Shared by the
 /// supervisor's join path and its startup invariant checks, so a
-/// degraded replica always lands in the router's error path.
+/// degraded replica always lands in the router's error path.  All locks
+/// are taken poison-tolerantly: a panicked stage must not be able to
+/// block the poison report itself.
 fn fail_pool(shared: &Shared, pending: &Pending, error: &Mutex<Option<String>>, e: &StreamError) {
     let msg = format!("streaming execution failed: {e}");
     {
-        let mut slot = error.lock().unwrap();
+        let mut slot = recover(error);
         if slot.is_none() {
             *slot = Some(msg.clone());
         }
     }
     let drained: Vec<Job> = {
-        let mut st = shared.q.lock().unwrap();
+        let mut st = recover(&shared.q);
         if st.poison.is_none() {
             st.poison = Some(msg.clone());
         }
@@ -597,7 +831,7 @@ fn fail_pool(shared: &Shared, pending: &Pending, error: &Mutex<Option<String>>, 
     for j in drained {
         let _ = j.resp.send(Err(msg.clone()));
     }
-    for tx in pending.lock().unwrap().drain(..) {
+    for tx in recover(pending).drain(..) {
         let _ = tx.send(Err(msg.clone()));
     }
 }
@@ -669,5 +903,106 @@ mod tests {
         let st = shared.q.lock().unwrap();
         assert!(st.poison.as_deref().unwrap().contains("already claimed"));
         assert!(st.jobs.is_empty());
+    }
+
+    /// Regression for the `lock().unwrap()` audit: a work-queue mutex
+    /// poisoned by a panicked thread must degrade the feeder into the
+    /// typed `Inconsistent` error (the supervisor then poisons the pool
+    /// through the recovered guard) — not convert every later call into
+    /// an opaque unwrap panic.
+    #[test]
+    fn poisoned_work_queue_is_typed_for_the_feeder_and_recoverable_for_poisoning() {
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState { jobs: VecDeque::new(), open: true, poison: None }),
+            cv: Condvar::new(),
+        });
+        let s2 = shared.clone();
+        let _ = thread::spawn(move || {
+            let _g = s2.q.lock().unwrap();
+            panic!("poison the queue lock");
+        })
+        .join();
+        assert!(shared.q.lock().is_err(), "queue lock should be poisoned");
+        let abort = AtomicBool::new(false);
+        let retire = AtomicBool::new(false);
+        let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
+        let err = feeder_loop(&shared, &abort, &retire, &[], &pending, 3).unwrap_err();
+        assert!(matches!(err, StreamError::Inconsistent { .. }), "{err}");
+        assert!(format!("{err}").contains("lock poisoned"), "{err}");
+        // fail_pool still completes on the poisoned lock (recovered
+        // guard) so the pool lands in the normal poisoned-queue state.
+        let error = Mutex::new(None);
+        fail_pool(&shared, &pending, &error, &err);
+        assert!(recover(&shared.q).poison.as_deref().unwrap().contains("lock poisoned"));
+    }
+
+    /// An oscillating elastic pool must not grow its diagnostic state
+    /// without bound: a drained replica's id (and `r{id}/` tag) is
+    /// reused by the next grow, which purges the tag's superseded
+    /// retired stats — so the retired set holds at most one drained
+    /// stat set per band slot, never one per grow/drain cycle.
+    #[test]
+    fn retired_replica_tags_are_reused_and_stats_stay_bounded() {
+        use crate::models::{arch_by_name, build_optimized_graph, synthetic_weights};
+        use crate::stream::ElasticConfig;
+
+        let arch = arch_by_name("resnet8").unwrap();
+        let weights = synthetic_weights(&arch, 7);
+        let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let cfg = StreamConfig {
+            elastic: Some(ElasticConfig {
+                min_replicas: 1,
+                max_replicas: 2,
+                // Effectively passive: no load to scale up on, and the
+                // idle streak can never reach this before the test ends.
+                scale_down_samples: 1_000_000,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let pool = StreamPool::new("resnet8", &g, Arc::new(weights), cfg).unwrap();
+        assert_eq!(pool.replicas(), 1);
+        pool.inner.add_replica().unwrap();
+        assert_eq!(pool.replicas(), 2);
+        assert!(pool.inner.retire_one());
+        assert_eq!(pool.replicas(), 1);
+        let drained = recover(&pool.inner.retired).len();
+        assert!(drained > 0, "drained replica must leave its final stats");
+        assert!(recover(&pool.inner.retired).iter().all(|b| b.name.starts_with("r1/")));
+        // Grow + drain again: the tag is reused, the set does not grow.
+        pool.inner.add_replica().unwrap();
+        assert_eq!(recover(&pool.inner.retired).len(), 0, "re-grown tag purges old stats");
+        assert!(pool.inner.retire_one());
+        assert_eq!(recover(&pool.inner.retired).len(), drained);
+        assert_eq!(pool.peak_replicas(), 2);
+        // Live-only gauges: the drained replica's history must not
+        // inflate the per-batch buffered gauge (the metrics layer keeps
+        // the worst pair recorded while it served).
+        let (peak, _) = pool.buffered_gauges();
+        assert_eq!(peak, 0, "idle live replica; retired peaks excluded");
+    }
+
+    /// Same audit for the sink's pending-responders lock.
+    #[test]
+    fn poisoned_pending_lock_is_typed_for_the_sink() {
+        let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
+        let p2 = pending.clone();
+        let _ = thread::spawn(move || {
+            let _g = p2.lock().unwrap();
+            panic!("poison the pending lock");
+        })
+        .join();
+        let sink = Fifo::new(
+            "t.out".into(),
+            StreamKind::Dma,
+            16,
+            Arc::new(AtomicBool::new(false)),
+            Duration::from_millis(200),
+        );
+        sink.push(vec![1].into_boxed_slice()).unwrap();
+        let frames = AtomicUsize::new(0);
+        let err = sink_loop(&sink, &pending, &frames).unwrap_err();
+        assert!(matches!(err, StreamError::Inconsistent { .. }), "{err}");
+        assert!(format!("{err}").contains("lock poisoned"), "{err}");
     }
 }

@@ -1,14 +1,19 @@
 //! Stage plans and stage bodies for the persistent streaming pipeline.
 //!
-//! [`plan_pipeline`] lowers one replica of the (optimized or naive) graph
-//! into a set of owned, `'static` stage plans connected by bounded
-//! [`Fifo`]s whose depths come from the board/ILP-derived
-//! [`AcceleratorConfig`] (`hls::config::configure` — the exact depths
-//! codegen emits, not a fixed ow_par=1 policy).  [`run_stage`] is the
-//! body a pool thread runs *forever*: each stage loops over frames until
-//! it pops the zero-length end-of-stream sentinel, which it propagates on
-//! every output port before returning — so shutdown drains frames
-//! mid-pipeline instead of dropping them.
+//! [`plan_pipeline`] lowers the (optimized or naive) graph **once per
+//! pool** into a [`PipelineBlueprint`]: validated stage templates plus
+//! the sized [`BufferSpec`]s of every inter-stage FIFO and window gauge,
+//! with depths from the board/ILP-derived [`AcceleratorConfig`]
+//! (`hls::config::configure` — the exact depths codegen emits, not a
+//! fixed ow_par=1 policy).  [`PipelineBlueprint::instantiate`] then
+//! stamps out one *replica* cheaply — fresh tagged [`Fifo`]s and gauges
+//! wired into the shared templates — so an elastic pool can add a
+//! replica mid-flight without re-running shape inference, ILP lookups or
+//! weight validation.  [`run_stage`] is the body a pool thread runs
+//! *forever*: each stage loops over frames until it pops the zero-length
+//! end-of-stream sentinel, which it propagates on every output port
+//! before returning — so shutdown drains frames mid-pipeline instead of
+//! dropping them.
 //!
 //! Parallelism mirrors the paper's model at execution time:
 //! * **frame-level pipelining** — stages never restart between frames, so
@@ -42,6 +47,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -49,7 +55,7 @@ use crate::graph::{infer_shapes, Edge, Graph, InputRole, Op};
 use crate::hls::config::AcceleratorConfig;
 use crate::hls::streams::{dma_stream, output_stream, StreamKind};
 use crate::hls::window::SlicePlan;
-use crate::models::ModelWeights;
+use crate::models::{ConvWeights, ModelWeights};
 use crate::quant::{clip_i8, clip_i8_wide, requantize, round_shift, round_shift_i64};
 
 use super::fifo::{Fifo, PeakGauge, StreamError};
@@ -167,9 +173,36 @@ fn forward_pixels(outs: &[Arc<Fifo>], pixels: &[Arc<[i32]>]) -> Result<(), Strea
 }
 
 // ------------------------------------------------------------ stage plan
+//
+// Every plan struct is generic over its port type `P` (and gauge type
+// `G` where the stage owns a window gauge): the blueprint stores
+// *templates* (`P = usize` — an index into the pool-wide
+// [`BufferSpec`] table; `G = BufferSpec`), and each replica
+// instantiation maps them to *runnable* plans (`P = Arc<Fifo>`,
+// `G = Arc<PeakGauge>`) — so the expensive planning/validation pass
+// runs once per pool, never once per replica.
 
-pub(crate) struct SkipPlan {
-    pub fifo: Arc<Fifo>,
+/// Sized spec of one runtime buffer (FIFO or live window gauge): the
+/// pool-wide planning artifact a replica instantiation turns into a
+/// tagged live object.
+pub(crate) struct BufferSpec {
+    pub name: String,
+    pub kind: StreamKind,
+    pub capacity: usize,
+}
+
+impl BufferSpec {
+    fn fifo(&self, tag: &str, abort: &Arc<AtomicBool>, timeout: Duration) -> Arc<Fifo> {
+        Fifo::new(format!("{tag}{}", self.name), self.kind, self.capacity, abort.clone(), timeout)
+    }
+
+    fn gauge(&self, tag: &str) -> Arc<PeakGauge> {
+        PeakGauge::new(format!("{tag}{}", self.name), self.kind, self.capacity)
+    }
+}
+
+pub(crate) struct SkipPlan<P> {
+    pub fifo: P,
     /// `skip_exp - acc_exp` (>= 0 by the builders' exponent contract).
     pub shift: u32,
 }
@@ -177,7 +210,7 @@ pub(crate) struct SkipPlan {
 /// Loop-merged pointwise downsample computed inside the host conv task
 /// (paper Fig. 12b); always sequential — the ILP's parallelism for it is
 /// absorbed into the host stage's schedule.
-pub(crate) struct DsPlan {
+pub(crate) struct DsPlan<P> {
     pub layer: String,
     pub k: usize,
     pub stride: usize,
@@ -187,10 +220,10 @@ pub(crate) struct DsPlan {
     pub och: usize,
     pub out_exp: i32,
     pub acc_exp: i32,
-    pub outs: Vec<Arc<Fifo>>,
+    pub outs: Vec<P>,
 }
 
-pub(crate) struct ConvPlan {
+pub(crate) struct ConvPlan<P, G> {
     pub name: String,
     /// Weights key (layer name).
     pub layer: String,
@@ -208,13 +241,13 @@ pub(crate) struct ConvPlan {
     pub oh: usize,
     pub ow: usize,
     pub och: usize,
-    pub input: Arc<Fifo>,
-    pub outs: Vec<Arc<Fifo>>,
-    pub skip: Option<SkipPlan>,
+    pub input: P,
+    pub outs: Vec<P>,
+    pub skip: Option<SkipPlan<P>>,
     /// Temporal reuse (Fig. 12a): evicted line-buffer rows re-emitted on
     /// port 1 as the skip stream.
-    pub forward: Option<Vec<Arc<Fifo>>>,
-    pub ds: Option<DsPlan>,
+    pub forward: Option<Vec<P>>,
+    pub ds: Option<DsPlan<P>>,
     /// Contiguous output-channel ranges, one per channel-parallel worker
     /// thread (len 1 = inline, no workers).
     pub worker_ranges: Vec<(usize, usize)>,
@@ -234,10 +267,10 @@ pub(crate) struct ConvPlan {
     /// (`SliceWindow::slice_occupancy`) is an analysis/bench API, not
     /// live telemetry — the runtime gauge tracks total occupancy only.
     pub window: SlicePlan,
-    pub gauge: Arc<PeakGauge>,
+    pub gauge: G,
 }
 
-pub(crate) struct PoolPlan {
+pub(crate) struct PoolPlan<P, G> {
     pub name: String,
     pub k: usize,
     pub stride: usize,
@@ -246,23 +279,23 @@ pub(crate) struct PoolPlan {
     pub c: usize,
     pub oh: usize,
     pub ow: usize,
-    pub input: Arc<Fifo>,
-    pub outs: Vec<Arc<Fifo>>,
-    pub gauge: Arc<PeakGauge>,
+    pub input: P,
+    pub outs: Vec<P>,
+    pub gauge: G,
 }
 
-pub(crate) struct GapPlan {
+pub(crate) struct GapPlan<P> {
     pub name: String,
     pub h: usize,
     pub w: usize,
     pub c: usize,
     pub in_exp: i32,
     pub out_exp: i32,
-    pub input: Arc<Fifo>,
-    pub outs: Vec<Arc<Fifo>>,
+    pub input: P,
+    pub outs: Vec<P>,
 }
 
-pub(crate) struct LinearPlan {
+pub(crate) struct LinearPlan<P> {
     pub name: String,
     /// Weights key (layer name, untagged).
     pub layer: String,
@@ -270,43 +303,58 @@ pub(crate) struct LinearPlan {
     /// Pixel tokens per frame on the input stream.
     pub tokens: usize,
     pub cin: usize,
-    pub input: Arc<Fifo>,
-    pub outs: Vec<Arc<Fifo>>,
+    pub input: P,
+    pub outs: Vec<P>,
 }
 
-pub(crate) struct ReluPlan {
+pub(crate) struct ReluPlan<P> {
     pub name: String,
     pub tokens: usize,
-    pub input: Arc<Fifo>,
-    pub outs: Vec<Arc<Fifo>>,
+    pub input: P,
+    pub outs: Vec<P>,
 }
 
 /// Explicit residual-merge task (naive dataflow only): pops the long-path
 /// raw accumulator stream and the Eq. 21-buffered skip stream in
 /// lockstep, widens to i64, requantizes — golden's `Op::Add` semantics.
-pub(crate) struct AddPlan {
+pub(crate) struct AddPlan<P> {
     pub name: String,
     pub tokens: usize,
     pub sa: u32,
     pub sb: u32,
     pub shift: i32,
-    pub in_a: Arc<Fifo>,
-    pub in_b: Arc<Fifo>,
-    pub outs: Vec<Arc<Fifo>>,
+    pub in_a: P,
+    pub in_b: P,
+    pub outs: Vec<P>,
 }
 
-pub(crate) enum StagePlan {
-    Conv(ConvPlan),
-    Pool(PoolPlan),
-    Gap(GapPlan),
-    Linear(LinearPlan),
-    Relu(ReluPlan),
-    Add(AddPlan),
+pub(crate) enum StagePlan<P, G> {
+    Conv(ConvPlan<P, G>),
+    Pool(PoolPlan<P, G>),
+    Gap(GapPlan<P>),
+    Linear(LinearPlan<P>),
+    Relu(ReluPlan<P>),
+    Add(AddPlan<P>),
 }
 
-impl StagePlan {
-    /// Replica-tagged stage name, used for pool thread names so a wedged
-    /// replica's diagnostics identify exactly which copy failed.
+/// A blueprint-side stage: ports are indices into the pool's
+/// [`BufferSpec`] table, gauges are their specs.
+pub(crate) type StageTemplate = StagePlan<usize, BufferSpec>;
+/// A runnable replica stage: ports are live FIFOs, gauges are live.
+pub(crate) type RunStagePlan = StagePlan<Arc<Fifo>, Arc<PeakGauge>>;
+
+type RunConvPlan = ConvPlan<Arc<Fifo>, Arc<PeakGauge>>;
+type RunDsPlan = DsPlan<Arc<Fifo>>;
+type RunPoolPlan = PoolPlan<Arc<Fifo>, Arc<PeakGauge>>;
+type RunGapPlan = GapPlan<Arc<Fifo>>;
+type RunLinearPlan = LinearPlan<Arc<Fifo>>;
+type RunReluPlan = ReluPlan<Arc<Fifo>>;
+type RunAddPlan = AddPlan<Arc<Fifo>>;
+
+impl<P, G> StagePlan<P, G> {
+    /// Stage name (replica-tagged on runnable plans), used for pool
+    /// thread names so a wedged replica's diagnostics identify exactly
+    /// which copy failed.
     pub(crate) fn name(&self) -> &str {
         match self {
             StagePlan::Conv(p) => &p.name,
@@ -319,16 +367,130 @@ impl StagePlan {
     }
 }
 
-/// One replica's full lowering: stages + streams + live gauges.
-pub(crate) struct PipelinePlan {
-    pub stages: Vec<StagePlan>,
-    /// Consumer FIFO(s) of the network input node (the feeder pushes each
-    /// pixel to all of them — a tee in the naive dataflow).
-    pub sources: Vec<Arc<Fifo>>,
+impl StagePlan<usize, BufferSpec> {
+    /// Stamp the template into a runnable stage for one replica: ports
+    /// resolve against the replica's freshly built FIFOs, window gauges
+    /// are created (tagged) and registered with the replica.
+    fn instantiate(
+        &self,
+        f: &[Arc<Fifo>],
+        tag: &str,
+        gauges: &mut Vec<Arc<PeakGauge>>,
+    ) -> RunStagePlan {
+        let port = |i: &usize| f[*i].clone();
+        let ports = |v: &[usize]| v.iter().map(|&i| f[i].clone()).collect::<Vec<_>>();
+        match self {
+            StagePlan::Conv(p) => {
+                let gauge = p.gauge.gauge(tag);
+                gauges.push(gauge.clone());
+                StagePlan::Conv(ConvPlan {
+                    name: format!("{tag}{}", p.name),
+                    layer: p.layer.clone(),
+                    k: p.k,
+                    stride: p.stride,
+                    pad: p.pad,
+                    relu: p.relu,
+                    raw: p.raw,
+                    out_exp: p.out_exp,
+                    acc_exp: p.acc_exp,
+                    ih: p.ih,
+                    iw: p.iw,
+                    ich: p.ich,
+                    oh: p.oh,
+                    ow: p.ow,
+                    och: p.och,
+                    input: port(&p.input),
+                    outs: ports(&p.outs),
+                    skip: p.skip.as_ref().map(|s| SkipPlan { fifo: port(&s.fifo), shift: s.shift }),
+                    forward: p.forward.as_ref().map(|v| ports(v)),
+                    ds: p.ds.as_ref().map(|d| DsPlan {
+                        layer: d.layer.clone(),
+                        k: d.k,
+                        stride: d.stride,
+                        pad: d.pad,
+                        oh: d.oh,
+                        ow: d.ow,
+                        och: d.och,
+                        out_exp: d.out_exp,
+                        acc_exp: d.acc_exp,
+                        outs: ports(&d.outs),
+                    }),
+                    worker_ranges: p.worker_ranges.clone(),
+                    storage: p.storage,
+                    ow_par: p.ow_par,
+                    col_workers: p.col_workers,
+                    window: p.window.clone(),
+                    gauge,
+                })
+            }
+            StagePlan::Pool(p) => {
+                let gauge = p.gauge.gauge(tag);
+                gauges.push(gauge.clone());
+                StagePlan::Pool(PoolPlan {
+                    name: format!("{tag}{}", p.name),
+                    k: p.k,
+                    stride: p.stride,
+                    ih: p.ih,
+                    iw: p.iw,
+                    c: p.c,
+                    oh: p.oh,
+                    ow: p.ow,
+                    input: port(&p.input),
+                    outs: ports(&p.outs),
+                    gauge,
+                })
+            }
+            StagePlan::Gap(p) => StagePlan::Gap(GapPlan {
+                name: format!("{tag}{}", p.name),
+                h: p.h,
+                w: p.w,
+                c: p.c,
+                in_exp: p.in_exp,
+                out_exp: p.out_exp,
+                input: port(&p.input),
+                outs: ports(&p.outs),
+            }),
+            StagePlan::Linear(p) => StagePlan::Linear(LinearPlan {
+                name: format!("{tag}{}", p.name),
+                layer: p.layer.clone(),
+                cout: p.cout,
+                tokens: p.tokens,
+                cin: p.cin,
+                input: port(&p.input),
+                outs: ports(&p.outs),
+            }),
+            StagePlan::Relu(p) => StagePlan::Relu(ReluPlan {
+                name: format!("{tag}{}", p.name),
+                tokens: p.tokens,
+                input: port(&p.input),
+                outs: ports(&p.outs),
+            }),
+            StagePlan::Add(p) => StagePlan::Add(AddPlan {
+                name: format!("{tag}{}", p.name),
+                tokens: p.tokens,
+                sa: p.sa,
+                sb: p.sb,
+                shift: p.shift,
+                in_a: port(&p.in_a),
+                in_b: port(&p.in_b),
+                outs: ports(&p.outs),
+            }),
+        }
+    }
+}
+
+/// The pool-wide plan, built **once**: validated stage templates, the
+/// sized buffer table, and the scalar frame geometry.  Replicas are
+/// stamped out of it with [`instantiate`](PipelineBlueprint::instantiate).
+pub(crate) struct PipelineBlueprint {
+    stages: Vec<StageTemplate>,
+    fifo_specs: Vec<BufferSpec>,
+    /// Port indices of the network input node's consumer FIFO(s) (the
+    /// feeder pushes each pixel to all of them — a tee in naive mode).
+    source_ports: Vec<usize>,
     /// The classifier output stream the sink pops one token per frame.
-    pub sink: Arc<Fifo>,
-    pub fifos: Vec<Arc<Fifo>>,
-    pub gauges: Vec<Arc<PeakGauge>>,
+    sink_port: usize,
+    timeout: Duration,
     pub classes: usize,
     pub in_h: usize,
     pub in_w: usize,
@@ -338,28 +500,65 @@ pub(crate) struct PipelinePlan {
     pub whole_tensor_elems: usize,
 }
 
-/// Lower one pipeline replica of `g` into owned stage plans.
+impl PipelineBlueprint {
+    /// Stages per replica — the pool's per-replica in-flight capacity.
+    pub(crate) fn stages_per_replica(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Stamp one replica: fresh `tag`-prefixed FIFOs and gauges on
+    /// `abort`, wired into the shared stage templates.  Cheap (no shape
+    /// inference, no ILP lookups, no weight validation) — this is what
+    /// lets the elastic controller add a replica mid-flight.
+    pub(crate) fn instantiate(&self, abort: &Arc<AtomicBool>, tag: &str) -> PipelinePlan {
+        let fifos: Vec<Arc<Fifo>> = self
+            .fifo_specs
+            .iter()
+            .map(|s| s.fifo(tag, abort, self.timeout))
+            .collect();
+        let mut gauges = Vec::new();
+        let stages = self.stages.iter().map(|t| t.instantiate(&fifos, tag, &mut gauges)).collect();
+        PipelinePlan {
+            stages,
+            sources: self.source_ports.iter().map(|&i| fifos[i].clone()).collect(),
+            sink: fifos[self.sink_port].clone(),
+            fifos,
+            gauges,
+        }
+    }
+}
+
+/// One replica's runnable lowering: stages + live streams + live gauges.
+pub(crate) struct PipelinePlan {
+    pub stages: Vec<RunStagePlan>,
+    pub sources: Vec<Arc<Fifo>>,
+    pub sink: Arc<Fifo>,
+    pub fifos: Vec<Arc<Fifo>>,
+    pub gauges: Vec<Arc<PeakGauge>>,
+}
+
+/// Lower `g` into the pool-wide [`PipelineBlueprint`] — run **once per
+/// pool**, however many replicas it grows to.
 ///
 /// FIFO depths come from `acfg` (the board/ILP configuration): conv
 /// output streams at their `och_groups x och_par x ow_par` burst
 /// capacity, fused skip streams at Eq. 22, naive Add skip streams at
-/// Eq. 21.  `tag` prefixes buffer names (`"r1/"` for replica 1, `""` for
-/// replica 0) so pool stats stay distinguishable.
+/// Eq. 21.  All weight lookups are validated here, so a stage body's
+/// later lookup failure is a bookkeeping inconsistency (typed error),
+/// never a user-input error.
 pub(crate) fn plan_pipeline(
     g: &Graph,
     weights: &ModelWeights,
     cfg: &StreamConfig,
     acfg: &AcceleratorConfig,
-    abort: Arc<AtomicBool>,
-    tag: &str,
-) -> Result<PipelinePlan> {
+) -> Result<PipelineBlueprint> {
     let shapes = infer_shapes(g).map_err(|e| anyhow!("{e}"))?;
     let timeout = cfg.progress_timeout;
 
-    // Pass 1: one FIFO per (consumed edge, consumer) pair — a producer
-    // whose edge has several consumers pushes to each (tee).
-    let mut fifos: Vec<Arc<Fifo>> = Vec::new();
-    let mut fifo_of: std::collections::BTreeMap<(Edge, usize), Arc<Fifo>> =
+    // Pass 1: one FIFO spec per (consumed edge, consumer) pair — a
+    // producer whose edge has several consumers pushes to each (tee).
+    let mut fifo_specs: Vec<BufferSpec> = Vec::new();
+    let mut fifo_of: std::collections::BTreeMap<(Edge, usize), usize> =
         std::collections::BTreeMap::new();
     for n in g.live() {
         for (i, (e, role)) in n.inputs.iter().enumerate() {
@@ -422,9 +621,9 @@ pub(crate) fn plan_pipeline(
                     }
                 }
             };
-            let f = Fifo::new(format!("{tag}{name}"), kind, cap, abort.clone(), timeout);
-            fifos.push(f.clone());
-            fifo_of.insert((*e, n.id), f);
+            let idx = fifo_specs.len();
+            fifo_specs.push(BufferSpec { name, kind, capacity: cap });
+            fifo_of.insert((*e, n.id), idx);
         }
     }
 
@@ -438,36 +637,33 @@ pub(crate) fn plan_pipeline(
     );
     let out_shape = shapes[&Edge::new(out_node, 0)];
     let classes = out_shape.c;
-    let sink = Fifo::new(
-        format!("{tag}{}.out", g.node(out_node).name),
-        StreamKind::Dma,
-        dma_stream(classes).capacity(),
-        abort.clone(),
-        timeout,
-    );
-    fifos.push(sink.clone());
+    let sink_port = fifo_specs.len();
+    fifo_specs.push(BufferSpec {
+        name: format!("{}.out", g.node(out_node).name),
+        kind: StreamKind::Dma,
+        capacity: dma_stream(classes).capacity(),
+    });
 
-    // All consumer FIFOs of an output port, in consumer order.
-    let outs_for = |e: Edge| -> Vec<Arc<Fifo>> {
+    // All consumer FIFO ports of an output port, in consumer order.
+    let outs_for = |e: Edge| -> Vec<usize> {
         fifo_of
             .iter()
             .filter(|((ee, _), _)| *ee == e)
-            .map(|(_, f)| f.clone())
+            .map(|(_, &i)| i)
             .collect()
     };
-    let outs_for_node = |id: usize| -> Result<Vec<Arc<Fifo>>> {
+    let outs_for_node = |id: usize| -> Result<Vec<usize>> {
         if id == out_node {
-            return Ok(vec![sink.clone()]);
+            return Ok(vec![sink_port]);
         }
         let outs = outs_for(Edge::new(id, 0));
         anyhow::ensure!(!outs.is_empty(), "output of {} has no consumer", g.node(id).name);
         Ok(outs)
     };
 
-    // Pass 2: build the stage plans.
-    let mut stages: Vec<StagePlan> = Vec::new();
-    let mut gauges: Vec<Arc<PeakGauge>> = Vec::new();
-    let mut sources: Option<Vec<Arc<Fifo>>> = None;
+    // Pass 2: build the stage templates.
+    let mut stages: Vec<StageTemplate> = Vec::new();
+    let mut sources: Option<Vec<usize>> = None;
     let mut input_spec = None;
     for n in g.live() {
         match &n.op {
@@ -495,7 +691,7 @@ pub(crate) fn plan_pipeline(
                     .inputs
                     .iter()
                     .find(|(_, r)| *r == InputRole::SkipInit)
-                    .map(|(e, _)| -> Result<SkipPlan> {
+                    .map(|(e, _)| -> Result<SkipPlan<usize>> {
                         let se = shapes[e];
                         anyhow::ensure!(
                             (se.h, se.w, se.c) == (os.h, os.w, os.c),
@@ -504,7 +700,7 @@ pub(crate) fn plan_pipeline(
                         );
                         let shift = se.exp - lw.acc_exp();
                         anyhow::ensure!(shift >= 0, "{}: skip exp below acc exp", n.name);
-                        Ok(SkipPlan { fifo: fifo_of[&(*e, n.id)].clone(), shift: shift as u32 })
+                        Ok(SkipPlan { fifo: fifo_of[&(*e, n.id)], shift: shift as u32 })
                     })
                     .transpose()?;
                 let aux = outs_for(Edge::new(n.id, 1));
@@ -576,15 +772,14 @@ pub(crate) fn plan_pipeline(
                     WindowStorage::Slices => lc.window_capacity + a.cin,
                     WindowStorage::Rows => rows_bound * in_shape.w * a.cin,
                 };
-                let gauge = PeakGauge::new(
-                    format!("{tag}{}.window", n.name),
-                    StreamKind::WindowSlice,
-                    window_bound,
-                );
+                let gauge = BufferSpec {
+                    name: format!("{}.window", n.name),
+                    kind: StreamKind::WindowSlice,
+                    capacity: window_bound,
+                };
                 let window = lc.window.clone();
-                gauges.push(gauge.clone());
                 stages.push(StagePlan::Conv(ConvPlan {
-                    name: format!("{tag}{}", n.name),
+                    name: n.name.clone(),
                     layer: n.name.clone(),
                     k: a.k,
                     stride: a.stride,
@@ -599,7 +794,7 @@ pub(crate) fn plan_pipeline(
                     oh: os.h,
                     ow: os.w,
                     och: a.cout,
-                    input: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    input: fifo_of[&(n.inputs[0].0, n.id)],
                     outs: outs_for_node(n.id)?,
                     skip,
                     forward,
@@ -616,14 +811,13 @@ pub(crate) fn plan_pipeline(
                 // Window/stride bounds already validated by infer_shapes.
                 let s = shapes[&n.inputs[0].0];
                 let os = shapes[&Edge::new(n.id, 0)];
-                let gauge = PeakGauge::new(
-                    format!("{tag}{}.window", n.name),
-                    StreamKind::WindowSlice,
-                    k * s.w * s.c,
-                );
-                gauges.push(gauge.clone());
+                let gauge = BufferSpec {
+                    name: format!("{}.window", n.name),
+                    kind: StreamKind::WindowSlice,
+                    capacity: k * s.w * s.c,
+                };
                 stages.push(StagePlan::Pool(PoolPlan {
-                    name: format!("{tag}{}", n.name),
+                    name: n.name.clone(),
                     k: *k,
                     stride: *stride,
                     ih: s.h,
@@ -631,7 +825,7 @@ pub(crate) fn plan_pipeline(
                     c: s.c,
                     oh: os.h,
                     ow: os.w,
-                    input: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    input: fifo_of[&(n.inputs[0].0, n.id)],
                     outs: outs_for_node(n.id)?,
                     gauge,
                 }));
@@ -646,13 +840,13 @@ pub(crate) fn plan_pipeline(
                     s.w
                 );
                 stages.push(StagePlan::Gap(GapPlan {
-                    name: format!("{tag}{}", n.name),
+                    name: n.name.clone(),
                     h: s.h,
                     w: s.w,
                     c: s.c,
                     in_exp: s.exp,
                     out_exp: *out_exp,
-                    input: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    input: fifo_of[&(n.inputs[0].0, n.id)],
                     outs: outs_for_node(n.id)?,
                 }));
             }
@@ -665,21 +859,21 @@ pub(crate) fn plan_pipeline(
                     n.name
                 );
                 stages.push(StagePlan::Linear(LinearPlan {
-                    name: format!("{tag}{}", n.name),
+                    name: n.name.clone(),
                     layer: n.name.clone(),
                     cout: *cout,
                     tokens: s.h * s.w,
                     cin: *cin,
-                    input: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    input: fifo_of[&(n.inputs[0].0, n.id)],
                     outs: outs_for_node(n.id)?,
                 }));
             }
             Op::Relu => {
                 let s = shapes[&n.inputs[0].0];
                 stages.push(StagePlan::Relu(ReluPlan {
-                    name: format!("{tag}{}", n.name),
+                    name: n.name.clone(),
                     tokens: s.h * s.w,
-                    input: fifo_of[&(n.inputs[0].0, n.id)].clone(),
+                    input: fifo_of[&(n.inputs[0].0, n.id)],
                     outs: outs_for_node(n.id)?,
                 }));
             }
@@ -706,13 +900,13 @@ pub(crate) fn plan_pipeline(
                 let eb = exp_of(&n.inputs[1].0)?;
                 let lo = ea.min(eb);
                 stages.push(StagePlan::Add(AddPlan {
-                    name: format!("{tag}{}", n.name),
+                    name: n.name.clone(),
                     tokens: os.h * os.w,
                     sa: ((ea - lo) as u32).min(63),
                     sb: ((eb - lo) as u32).min(63),
                     shift: out_exp - lo,
-                    in_a: fifo_of[&(n.inputs[0].0, n.id)].clone(),
-                    in_b: fifo_of[&(n.inputs[1].0, n.id)].clone(),
+                    in_a: fifo_of[&(n.inputs[0].0, n.id)],
+                    in_b: fifo_of[&(n.inputs[1].0, n.id)],
                     outs: outs_for_node(n.id)?,
                 }));
             }
@@ -732,12 +926,12 @@ pub(crate) fn plan_pipeline(
         .map(|(_, s)| s.h * s.w * s.c)
         .sum();
 
-    Ok(PipelinePlan {
+    Ok(PipelineBlueprint {
         stages,
-        sources,
-        sink,
-        fifos,
-        gauges,
+        fifo_specs,
+        source_ports: sources,
+        sink_port,
+        timeout,
         classes,
         in_h,
         in_w,
@@ -948,7 +1142,7 @@ fn conv_row_kernel(
     }
 }
 
-fn conv_geom(p: &ConvPlan) -> ConvGeom {
+fn conv_geom<P, G>(p: &ConvPlan<P, G>) -> ConvGeom {
     ConvGeom {
         k: p.k,
         stride: p.stride,
@@ -968,7 +1162,7 @@ fn conv_geom(p: &ConvPlan) -> ConvGeom {
 
 /// The merged downsample as kernel geometry: same input rows as the host
 /// conv, its own window/channel shape, never raw, no skip init.
-fn ds_geom(ds: &DsPlan, host: &ConvPlan) -> ConvGeom {
+fn ds_geom<P, G>(ds: &DsPlan<P>, host: &ConvPlan<P, G>) -> ConvGeom {
     ConvGeom {
         k: ds.k,
         stride: ds.stride,
@@ -986,6 +1180,25 @@ fn ds_geom(ds: &DsPlan, host: &ConvPlan) -> ConvGeom {
     }
 }
 
+/// One worker's answer to one fanned-out job: its channel-range outputs,
+/// or the typed error that degrades the stage (and pool) instead of a
+/// worker panic.
+type WorkerResult = Result<Vec<i32>, StreamError>;
+
+/// Resolve a plan-validated weights layer inside a running stage or
+/// worker.  [`plan_pipeline`] validated every layer the plan references,
+/// so a miss here means the pool's bookkeeping (not the user's graph)
+/// broke — it degrades into the typed [`StreamError::Inconsistent`] path
+/// that poisons the pool, instead of panicking the thread and wedging
+/// the replica.
+fn stage_layer<'a>(
+    weights: &'a ModelWeights,
+    name: &str,
+    what: &'static str,
+) -> Result<&'a ConvWeights, StreamError> {
+    weights.layer(name).map_err(|_| StreamError::Inconsistent { what })
+}
+
 /// Worker body: run the shared kernel over this worker's channel range
 /// for every row job the stage fans out.
 fn conv_worker(
@@ -995,9 +1208,21 @@ fn conv_worker(
     lo: usize,
     hi: usize,
     jobs: mpsc::Receiver<RowJob>,
-    results: mpsc::SyncSender<Vec<i32>>,
+    results: mpsc::SyncSender<WorkerResult>,
 ) {
-    let lw = weights.layer(&layer).expect("plan-validated layer");
+    let lw = match stage_layer(
+        &weights,
+        &layer,
+        "conv worker weights missing after plan validation",
+    ) {
+        Ok(lw) => lw,
+        Err(e) => {
+            // Report the typed inconsistency on the result channel (the
+            // stage's next recv propagates it) and exit.
+            let _ = results.send(Err(e));
+            return;
+        }
+    };
     let w = lw.w.data.as_slice();
     let bias = lw.b.data.as_slice();
     let chunk = hi - lo;
@@ -1015,7 +1240,7 @@ fn conv_worker(
             hi,
             &mut out,
         );
-        if results.send(out).is_err() {
+        if results.send(Ok(out)).is_err() {
             return; // stage unwound — exit quietly
         }
     }
@@ -1036,9 +1261,19 @@ fn conv_group_worker(
     lo: usize,
     hi: usize,
     jobs: mpsc::Receiver<GroupJob>,
-    results: mpsc::SyncSender<Vec<i32>>,
+    results: mpsc::SyncSender<WorkerResult>,
 ) {
-    let lw = weights.layer(&layer).expect("plan-validated layer");
+    let lw = match stage_layer(
+        &weights,
+        &layer,
+        "conv worker weights missing after plan validation",
+    ) {
+        Ok(lw) => lw,
+        Err(e) => {
+            let _ = results.send(Err(e));
+            return;
+        }
+    };
     let w = lw.w.data.as_slice();
     let bias = lw.b.data.as_slice();
     let chunk = hi - lo;
@@ -1064,20 +1299,20 @@ fn conv_group_worker(
                 &mut out[start..],
             );
         }
-        if results.send(out).is_err() {
+        if results.send(Ok(out)).is_err() {
             return; // stage unwound — exit quietly
         }
     }
 }
 
 /// A worker thread's whole-lifetime body, handed its job/result ends.
-type WorkerBody<J> = Box<dyn FnOnce(mpsc::Receiver<J>, mpsc::SyncSender<Vec<i32>>) + Send>;
+type WorkerBody<J> = Box<dyn FnOnce(mpsc::Receiver<J>, mpsc::SyncSender<WorkerResult>) + Send>;
 
 /// Handle on a conv stage's worker threads; dropping it closes both
 /// channel ends first so every worker exits its loop, then joins.
 struct Workers<J> {
     txs: Vec<mpsc::SyncSender<J>>,
-    rxs: Vec<mpsc::Receiver<Vec<i32>>>,
+    rxs: Vec<mpsc::Receiver<WorkerResult>>,
     handles: Vec<Option<thread::JoinHandle<()>>>,
 }
 
@@ -1100,7 +1335,7 @@ impl<J: Send + 'static> Workers<J> {
         let mut handles = Vec::new();
         for body in specs {
             let (jtx, jrx) = mpsc::sync_channel::<J>(1);
-            let (rtx, rrx) = mpsc::sync_channel::<Vec<i32>>(1);
+            let (rtx, rrx) = mpsc::sync_channel::<WorkerResult>(1);
             handles.push(Some(thread::spawn(move || body(jrx, rtx))));
             txs.push(jtx);
             rxs.push(rrx);
@@ -1110,7 +1345,7 @@ impl<J: Send + 'static> Workers<J> {
 }
 
 /// Channel-range workers for the row-granular path.
-fn spawn_row_workers(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Workers<RowJob> {
+fn spawn_row_workers(p: &RunConvPlan, weights: &Arc<ModelWeights>) -> Workers<RowJob> {
     let geom = conv_geom(p);
     let specs: Vec<WorkerBody<RowJob>> = p
         .worker_ranges
@@ -1129,7 +1364,7 @@ fn spawn_row_workers(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Workers<RowJo
 /// The column x channel worker grid for the slice-granular path, in
 /// column-major worker order: worker `c * nranges + ri` owns group
 /// columns `{c, c + col_workers, ...}` and channel range `ri`.
-fn spawn_group_workers(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Workers<GroupJob> {
+fn spawn_group_workers(p: &RunConvPlan, weights: &Arc<ModelWeights>) -> Workers<GroupJob> {
     let geom = conv_geom(p);
     let cw = p.col_workers.max(1);
     let mut specs: Vec<WorkerBody<GroupJob>> = Vec::new();
@@ -1150,7 +1385,7 @@ fn spawn_group_workers(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Workers<Gro
 
 /// Emit one merged-downsample output row through the shared kernel.
 fn emit_ds_row(
-    ds: &DsPlan,
+    ds: &RunDsPlan,
     geom: &ConvGeom,
     dw: &[i32],
     db: &[i32],
@@ -1169,7 +1404,7 @@ fn emit_ds_row(
 /// Emit every downsample row whose input rows are already resident.
 fn emit_ready_ds_rows(
     ds_next: &mut usize,
-    ds: &DsPlan,
+    ds: &RunDsPlan,
     geom: &ConvGeom,
     dw: &[i32],
     db: &[i32],
@@ -1187,23 +1422,30 @@ fn emit_ready_ds_rows(
 }
 
 /// Dispatch on the planned window-storage mode.
-fn run_conv(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+fn run_conv(p: &RunConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
     match p.storage {
         WindowStorage::Rows => run_conv_rows(p, weights),
         WindowStorage::Slices => run_conv_slices(p, weights),
     }
 }
 
-fn run_conv_rows(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
-    let lw = weights.layer(&p.layer).expect("plan-validated layer");
+fn run_conv_rows(p: &RunConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+    let lw = stage_layer(weights, &p.layer, "conv stage weights missing after plan validation")?;
     let w = lw.w.data.as_slice();
     let bias = lw.b.data.as_slice();
     let geom = conv_geom(p);
     // Merged downsample: kernel geometry + weights, resolved once.
-    let ds_ctx = p.ds.as_ref().map(|d| {
-        let dw = weights.layer(&d.layer).expect("plan-validated downsample");
-        (ds_geom(d, p), dw)
-    });
+    let ds_ctx = match p.ds.as_ref() {
+        Some(d) => {
+            let dw = stage_layer(
+                weights,
+                &d.layer,
+                "downsample weights missing after plan validation",
+            )?;
+            Some((ds_geom(d, p), dw))
+        }
+        None => None,
+    };
     let (k, s, pad) = (p.k, p.stride, p.pad);
     let mut lb = LineBuffer::new(p.iw * p.ich);
     let workers =
@@ -1262,13 +1504,18 @@ fn run_conv_rows(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), Stream
                             oy,
                             skip: skip_shared.clone(),
                         };
-                        if tx.send(job).is_err() {
-                            return Err(StreamError::Panicked);
-                        }
+                        // A dead worker surfaces on its result channel
+                        // below (typed error or disconnect), so a failed
+                        // send is not terminal by itself.
+                        let _ = tx.send(job);
                     }
                     let mut bufs = Vec::with_capacity(wk.rxs.len());
                     for rx in &wk.rxs {
-                        bufs.push(rx.recv().map_err(|_| StreamError::Panicked)?);
+                        match rx.recv() {
+                            Ok(Ok(b)) => bufs.push(b),
+                            Ok(Err(e)) => return Err(e),
+                            Err(_) => return Err(StreamError::Panicked),
+                        }
                     }
                     for ox in 0..p.ow {
                         let mut tok = vec![0i32; p.och];
@@ -1341,7 +1588,7 @@ fn run_conv_rows(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), Stream
 
 /// Emit one merged-downsample output row from the resident pixel window.
 fn emit_ds_row_slices(
-    ds: &DsPlan,
+    ds: &RunDsPlan,
     geom: &ConvGeom,
     dw: &[i32],
     db: &[i32],
@@ -1363,7 +1610,7 @@ fn emit_ds_row_slices(
 #[allow(clippy::too_many_arguments)]
 fn emit_ready_ds_rows_slices(
     ds_next: &mut usize,
-    ds: &DsPlan,
+    ds: &RunDsPlan,
     geom: &ConvGeom,
     dw: &[i32],
     db: &[i32],
@@ -1387,15 +1634,22 @@ fn emit_ready_ds_rows_slices(
 /// pixel) and evicting pixel-by-pixel in stream order behind the last
 /// window — host or pending merged downsample — that can still reach
 /// each pixel.  Evicted pixels are the temporal-reuse skip stream.
-fn run_conv_slices(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
-    let lw = weights.layer(&p.layer).expect("plan-validated layer");
+fn run_conv_slices(p: &RunConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+    let lw = stage_layer(weights, &p.layer, "conv stage weights missing after plan validation")?;
     let w = lw.w.data.as_slice();
     let bias = lw.b.data.as_slice();
     let geom = conv_geom(p);
-    let ds_ctx = p.ds.as_ref().map(|d| {
-        let dw = weights.layer(&d.layer).expect("plan-validated downsample");
-        (ds_geom(d, p), dw)
-    });
+    let ds_ctx = match p.ds.as_ref() {
+        Some(d) => {
+            let dw = stage_layer(
+                weights,
+                &d.layer,
+                "downsample weights missing after plan validation",
+            )?;
+            Some((ds_geom(d, p), dw))
+        }
+        None => None,
+    };
     let (k, s, pad) = (p.k, p.stride, p.pad);
     let owp = p.ow_par.max(1);
     let groups = p.ow.div_ceil(owp);
@@ -1476,13 +1730,18 @@ fn run_conv_slices(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), Stre
                             skip: skip_g.map(Arc::new),
                         };
                         for tx in &wk.txs {
-                            if tx.send(job.clone()).is_err() {
-                                return Err(StreamError::Panicked);
-                            }
+                            // A dead worker surfaces on its result
+                            // channel below, so a failed send is not
+                            // terminal by itself.
+                            let _ = tx.send(job.clone());
                         }
                         let mut bufs = Vec::with_capacity(wk.rxs.len());
                         for rx in &wk.rxs {
-                            bufs.push(rx.recv().map_err(|_| StreamError::Panicked)?);
+                            match rx.recv() {
+                                Ok(Ok(b)) => bufs.push(b),
+                                Ok(Err(e)) => return Err(e),
+                                Err(_) => return Err(StreamError::Panicked),
+                            }
                         }
                         // Reassemble in stream (column) order: column c's
                         // channel range ri came from worker
@@ -1607,7 +1866,7 @@ fn run_conv_slices(p: &ConvPlan, weights: &Arc<ModelWeights>) -> Result<(), Stre
     }
 }
 
-fn run_pool(p: &PoolPlan) -> Result<(), StreamError> {
+fn run_pool(p: &RunPoolPlan) -> Result<(), StreamError> {
     let mut lb = LineBuffer::new(p.iw * p.c);
     loop {
         let mut head = match next_frame(&p.input)? {
@@ -1647,7 +1906,7 @@ fn run_pool(p: &PoolPlan) -> Result<(), StreamError> {
     }
 }
 
-fn run_gap(p: &GapPlan) -> Result<(), StreamError> {
+fn run_gap(p: &RunGapPlan) -> Result<(), StreamError> {
     let hw = p.h * p.w;
     // Power-of-two validated at plan time.
     let shift = p.out_exp - p.in_exp + hw.trailing_zeros() as i32;
@@ -1674,8 +1933,9 @@ fn run_gap(p: &GapPlan) -> Result<(), StreamError> {
     }
 }
 
-fn run_linear(p: &LinearPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
-    let lw = weights.layer(&p.layer).expect("plan-validated layer");
+fn run_linear(p: &RunLinearPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+    let lw =
+        stage_layer(weights, &p.layer, "linear stage weights missing after plan validation")?;
     let w = lw.w.data.as_slice();
     let bias = lw.b.data.as_slice();
     loop {
@@ -1704,7 +1964,7 @@ fn run_linear(p: &LinearPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamE
     }
 }
 
-fn run_relu(p: &ReluPlan) -> Result<(), StreamError> {
+fn run_relu(p: &RunReluPlan) -> Result<(), StreamError> {
     loop {
         let head = match next_frame(&p.input)? {
             Some(t) => t,
@@ -1724,7 +1984,7 @@ fn run_relu(p: &ReluPlan) -> Result<(), StreamError> {
     }
 }
 
-fn run_add(p: &AddPlan) -> Result<(), StreamError> {
+fn run_add(p: &RunAddPlan) -> Result<(), StreamError> {
     loop {
         let mut a = match next_frame(&p.in_a)? {
             Some(t) => t,
@@ -1758,7 +2018,10 @@ fn run_add(p: &AddPlan) -> Result<(), StreamError> {
 
 /// Run one stage until end-of-stream (or error).  This is the body a
 /// pool thread executes for its whole lifetime.
-pub(crate) fn run_stage(stage: &StagePlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+pub(crate) fn run_stage(
+    stage: &RunStagePlan,
+    weights: &Arc<ModelWeights>,
+) -> Result<(), StreamError> {
     match stage {
         StagePlan::Conv(p) => run_conv(p, weights),
         StagePlan::Pool(p) => run_pool(p),
@@ -1766,5 +2029,95 @@ pub(crate) fn run_stage(stage: &StagePlan, weights: &Arc<ModelWeights>) -> Resul
         StagePlan::Linear(p) => run_linear(p, weights),
         StagePlan::Relu(p) => run_relu(p),
         StagePlan::Add(p) => run_add(p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{arch_by_name, build_optimized_graph, synthetic_weights};
+    use crate::stream::{planned_config, StreamConfig};
+
+    fn blueprint() -> (PipelineBlueprint, ModelWeights) {
+        let arch = arch_by_name("resnet8").unwrap();
+        let weights = synthetic_weights(&arch, 7);
+        let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let cfg = StreamConfig::default();
+        let acfg = planned_config("resnet8", &g, &cfg).unwrap();
+        (plan_pipeline(&g, &weights, &cfg, &acfg).unwrap(), weights)
+    }
+
+    /// The pool-elasticity hoist: one blueprint stamps out any number of
+    /// replicas — same sized FIFO/gauge chain, tag-distinguished names —
+    /// without re-running shape inference or weight validation.
+    #[test]
+    fn blueprint_instantiates_tagged_replicas_from_one_plan() {
+        let (bp, _) = blueprint();
+        let r0 = bp.instantiate(&Arc::new(AtomicBool::new(false)), "");
+        let r1 = bp.instantiate(&Arc::new(AtomicBool::new(false)), "r1/");
+        assert_eq!(r0.stages.len(), bp.stages_per_replica());
+        assert_eq!(r0.fifos.len(), r1.fifos.len());
+        assert_eq!(r0.gauges.len(), r1.gauges.len());
+        for (a, b) in r0.fifos.iter().zip(&r1.fifos) {
+            assert_eq!(a.capacity(), b.capacity());
+            assert_eq!(format!("r1/{}", a.name()), b.name());
+        }
+        for (a, b) in r0.gauges.iter().zip(&r1.gauges) {
+            assert_eq!(format!("r1/{}", a.stat().name), b.stat().name);
+        }
+    }
+
+    /// Regression (was `.expect("plan-validated layer")`): a conv stage
+    /// whose weights key vanished after planning degrades into the typed
+    /// error the supervisor poisons the pool with, instead of panicking
+    /// the stage thread and wedging the replica.
+    #[test]
+    fn conv_stage_with_missing_weights_is_a_typed_inconsistency() {
+        let (bp, weights) = blueprint();
+        let mut plan = bp.instantiate(&Arc::new(AtomicBool::new(false)), "");
+        let idx = plan
+            .stages
+            .iter()
+            .position(|s| matches!(s, StagePlan::Conv(_)))
+            .unwrap();
+        if let StagePlan::Conv(p) = &mut plan.stages[idx] {
+            p.layer = "no-such-layer".into();
+        }
+        let weights = Arc::new(weights);
+        let err = run_stage(&plan.stages[idx], &weights).unwrap_err();
+        assert!(matches!(err, StreamError::Inconsistent { .. }), "{err}");
+        assert!(format!("{err}").contains("weights missing"), "{err}");
+    }
+
+    /// Regression for the worker-thread lookup (was a worker panic that
+    /// wedged its stage): channel/column workers report the typed
+    /// inconsistency on their result channel, which the stage propagates.
+    #[test]
+    fn conv_workers_report_missing_weights_as_typed_errors() {
+        let arch = arch_by_name("resnet8").unwrap();
+        let weights = Arc::new(synthetic_weights(&arch, 7));
+        let geom = ConvGeom {
+            k: 1,
+            stride: 1,
+            pad: 0,
+            ih: 1,
+            iw: 1,
+            ich: 1,
+            ow: 1,
+            och: 1,
+            relu: false,
+            raw: true,
+            acc_exp: 0,
+            out_exp: 0,
+            skip_shift: 0,
+        };
+        let (_jtx, jrx) = mpsc::sync_channel::<RowJob>(1);
+        let (rtx, rrx) = mpsc::sync_channel::<WorkerResult>(1);
+        conv_worker(geom.clone(), "bogus".into(), weights.clone(), 0, 1, jrx, rtx);
+        assert!(matches!(rrx.recv().unwrap(), Err(StreamError::Inconsistent { .. })));
+        let (_jtx, jrx) = mpsc::sync_channel::<GroupJob>(1);
+        let (rtx, rrx) = mpsc::sync_channel::<WorkerResult>(1);
+        conv_group_worker(geom, "bogus".into(), weights, 0, 1, 0, 1, jrx, rtx);
+        assert!(matches!(rrx.recv().unwrap(), Err(StreamError::Inconsistent { .. })));
     }
 }
