@@ -1,0 +1,99 @@
+//! TCP ingress client: stream synthetic CIFAR frames at a target FPS
+//! and report client-observed p50/p95/p99 latency plus the shed rate.
+//!
+//! Point it at a running `repro listen` server:
+//!
+//! ```bash
+//! cargo run --release -- listen --backend golden --port 7433 &
+//! cargo run --release --example tcp_client -- 127.0.0.1:7433 512 2000
+//! ```
+//!
+//! With no address argument the example is self-contained: it starts an
+//! in-process ingress server on an ephemeral port (golden backend,
+//! synthetic weights), measures the service rate closed-loop, then
+//! drives ~2x that rate to demonstrate bounded-queue load-shedding with
+//! retry-after hints — the ISSUE's soak scenario in miniature.
+//!
+//! Positional args: `[addr] [frames] [fps] [deadline_ms]`
+//! (fps 0 = open loop).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use resnet_hls::coordinator::{Router, RouterConfig};
+use resnet_hls::net::{drive, DriveConfig, IngressServer, ServerConfig};
+use resnet_hls::runtime::{BackendFactory, GoldenFactory};
+
+fn main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let addr = args.next();
+    let frames: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(512);
+    let fps: f64 = args.next().and_then(|s| s.parse().ok()).unwrap_or(0.0);
+    let deadline_ms: u32 = args.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+
+    match addr {
+        Some(addr) => {
+            let cfg = DriveConfig {
+                addr,
+                frames,
+                fps,
+                deadline_ms,
+                ..Default::default()
+            };
+            println!(
+                "driving {} frames at {} (deadline {} ms) -> {}",
+                cfg.frames,
+                if fps > 0.0 { format!("{fps:.0} FPS") } else { "open loop".into() },
+                cfg.deadline_ms,
+                cfg.addr
+            );
+            let report = drive(&cfg).map_err(|e| anyhow::anyhow!("drive failed: {e}"))?;
+            println!("{report}");
+            anyhow::ensure!(report.accounted(), "request accounting failed: {report}");
+        }
+        None => {
+            println!("no address given — starting an in-process ingress server");
+            let factory: Arc<dyn BackendFactory> = Arc::new(GoldenFactory::synthetic("resnet8", 7));
+            let router = Arc::new(Router::start(vec![factory], RouterConfig::default())?);
+            let server = IngressServer::start(
+                router.clone(),
+                ServerConfig { queue_capacity: 16, ..Default::default() },
+            )?;
+            let addr = format!("{}", server.local_addr());
+            println!("listening on {addr}");
+
+            // Closed-loop calibration: what rate does one connection
+            // sustain with a small pipeline window?
+            let cal = drive(&DriveConfig {
+                addr: addr.clone(),
+                frames: frames.min(128),
+                window: 4,
+                ..Default::default()
+            })
+            .map_err(|e| anyhow::anyhow!("calibration failed: {e}"))?;
+            println!("calibration: {cal}");
+            let base_fps = cal.ok_fps().max(50.0);
+
+            // 2x sustained overload: the bounded queue must shed (with
+            // retry-after hints) instead of buffering unboundedly.
+            let overload = drive(&DriveConfig {
+                addr: addr.clone(),
+                frames,
+                fps: 2.0 * base_fps,
+                deadline_ms,
+                window: 64,
+                ..Default::default()
+            })
+            .map_err(|e| anyhow::anyhow!("overload drive failed: {e}"))?;
+            println!("2x overload ({:.0} FPS): {overload}", 2.0 * base_fps);
+            anyhow::ensure!(overload.accounted(), "request accounting failed: {overload}");
+
+            let snap = server.shutdown();
+            println!("ingress {snap}");
+            let router = Arc::try_unwrap(router)
+                .map_err(|_| anyhow::anyhow!("server still holds the router"))?;
+            println!("router {}", router.shutdown());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Bench: the TCP ingress tier under load — closed-loop round-trip
+//! latency through the full socket/admission/dispatch/router path, the
+//! sustained 2x-overload soak (bounded queue, load-shedding with
+//! retry-after hints, client-observed tail latency), and a machine-
+//! readable `BENCH_ingress.json` summary for CI trend tracking.
+//!
+//! Artifact-free (golden backend, synthetic weights, ephemeral port).
+//! Run: `cargo bench --bench ingress_soak`
+//! (`REPRO_BENCH_QUICK=1` for a short CI-ish run.)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use resnet_hls::coordinator::{Router, RouterConfig};
+use resnet_hls::data::{synth_batch, IMG_ELEMS, TEST_SEED};
+use resnet_hls::net::{drive, Client, DriveConfig, IngressServer, ServerConfig};
+use resnet_hls::runtime::GoldenFactory;
+use resnet_hls::util::{Bencher, Json};
+
+fn main() {
+    let quick = std::env::var("REPRO_BENCH_QUICK").ok().as_deref() == Some("1");
+    let frames = if quick { 256 } else { 2048 };
+    let mut b = Bencher::new();
+
+    // The ISSUE's soak shape in miniature: a deliberately small queue so
+    // a 64-deep client window overcommits it and sheds are observable.
+    let cap = 16usize;
+    let router = Arc::new(
+        Router::start(
+            vec![Arc::new(GoldenFactory::synthetic("resnet8", 7))],
+            RouterConfig::default(),
+        )
+        .expect("router start"),
+    );
+    let server = IngressServer::start(
+        router.clone(),
+        ServerConfig { queue_capacity: cap, ..Default::default() },
+    )
+    .expect("ingress start");
+    let addr = format!("{}", server.local_addr());
+    println!("ingress soak bench on {addr} (queue cap {cap}, {frames} frames/drive)");
+
+    // ---- closed-loop round trip: one request outstanding ----
+    // The full wire + admission + dispatch + router + golden-compute
+    // path, client-observed.  This is the latency floor the overload
+    // percentiles are judged against.
+    let (batch, _) = synth_batch(0, 1, TEST_SEED);
+    let mut client = Client::connect(&addr).expect("connect");
+    let rt = b.bench_items("ingress round trip (closed loop)", 1.0, &mut || {
+        let resp = client
+            .request("resnet8", 0, &batch.data[..IMG_ELEMS])
+            .expect("request");
+        assert!(
+            matches!(resp, resnet_hls::net::ResponseFrame::Ok { .. }),
+            "closed-loop request must serve, got {resp:?}"
+        );
+    });
+    drop(client);
+
+    // ---- calibration: what does one pipelined connection sustain? ----
+    let cal = drive(&DriveConfig {
+        addr: addr.clone(),
+        frames,
+        window: 4,
+        ..Default::default()
+    })
+    .expect("calibration drive");
+    println!("calibration (window 4): {cal}");
+    assert!(cal.accounted(), "calibration accounting failed: {cal}");
+    let base_fps = cal.ok_fps().max(50.0);
+
+    // ---- the soak: 2x sustained overload ----
+    // Paced at twice the measured service rate with a window four times
+    // the queue cap: the bounded queue must shed the excess (every shed
+    // carrying a retry-after hint), never exceed its cap, and keep
+    // serving what it admits.
+    let overload = drive(&DriveConfig {
+        addr: addr.clone(),
+        frames,
+        fps: 2.0 * base_fps,
+        window: 4 * cap,
+        ..Default::default()
+    })
+    .expect("overload drive");
+    println!("2x overload ({:.0} FPS target): {overload}", 2.0 * base_fps);
+    assert!(overload.accounted(), "soak accounting failed: {overload}");
+    assert!(overload.sheds > 0, "a 2x overload against cap {cap} must shed: {overload}");
+    assert!(overload.oks > 0, "admitted requests must still serve: {overload}");
+
+    let snap = server.shutdown();
+    println!("ingress {snap}");
+    assert!(
+        snap.queue_peak_depth <= cap,
+        "admission queue exceeded its cap: {} > {cap}",
+        snap.queue_peak_depth
+    );
+    let rs = router.snapshot();
+    println!("router {rs}");
+
+    // ---- machine-readable summary ----
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    o.insert("bench".into(), Json::Str("ingress_soak".into()));
+    o.insert("quick".into(), Json::Bool(quick));
+    o.insert("frames_per_drive".into(), Json::Int(frames as i64));
+    o.insert("queue_capacity".into(), Json::Int(cap as i64));
+    o.insert("round_trip_median_ns".into(), Json::Float(rt.median_ns));
+    o.insert("closed_loop_ok_fps".into(), Json::Float(cal.ok_fps()));
+    o.insert("closed_loop_p99_us".into(), Json::Int(cal.p99_us as i64));
+    o.insert("overload_fps_target".into(), Json::Float(2.0 * base_fps));
+    o.insert("overload_ok_fps".into(), Json::Float(overload.ok_fps()));
+    o.insert("overload_oks".into(), Json::Int(overload.oks as i64));
+    o.insert("overload_sheds".into(), Json::Int(overload.sheds as i64));
+    o.insert("overload_shed_rate".into(), Json::Float(overload.shed_rate()));
+    o.insert("overload_p50_us".into(), Json::Int(overload.p50_us as i64));
+    o.insert("overload_p95_us".into(), Json::Int(overload.p95_us as i64));
+    o.insert("overload_p99_us".into(), Json::Int(overload.p99_us as i64));
+    o.insert("queue_peak_depth".into(), Json::Int(snap.queue_peak_depth as i64));
+    o.insert("accepted".into(), Json::Int(snap.accepted as i64));
+    o.insert("shed".into(), Json::Int(snap.shed as i64));
+    o.insert("deadline_expired".into(), Json::Int(snap.expired as i64));
+    o.insert("router_shed_rate".into(), Json::Float(rs.total.shed_rate));
+    let j = Json::Object(o);
+    std::fs::write("BENCH_ingress.json", format!("{j}\n")).expect("write BENCH_ingress.json");
+    println!("wrote BENCH_ingress.json: {j}");
+
+    let router = Arc::try_unwrap(router).ok().expect("router still shared");
+    let _ = router.shutdown();
+}

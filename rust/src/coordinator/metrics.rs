@@ -16,6 +16,17 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub padded_frames: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests shed at ingress admission (queue full / infeasible
+    /// deadline) instead of queued.  Shed requests never become
+    /// `requests` — they are refused before reaching the router.
+    pub shed: AtomicU64,
+    /// Requests that expired while queued at ingress and were dropped at
+    /// dispatch without backend work.
+    pub deadline_expired: AtomicU64,
+    /// Responses that could not be delivered because the client vanished
+    /// mid-flight (dropped `submit` receiver or a dead socket).  Each is
+    /// a counted no-op, never a worker panic.
+    pub disconnects: AtomicU64,
     /// Worst streaming-pool buffering report observed: `(peak buffered
     /// elements, whole-tensor comparison base)`, replica-aggregated.
     /// Kept as a pair under one lock so the exported fraction always
@@ -74,6 +85,21 @@ impl Metrics {
         self.peak_replicas.fetch_max(n, Ordering::Relaxed);
     }
 
+    /// Count one load-shed admission refusal.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one deadline expiry caught at dequeue.
+    pub fn record_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one undeliverable response (client disconnected mid-flight).
+    pub fn record_disconnect(&self) {
+        self.disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn record_latency(&self, d: Duration) {
         let us = d.as_micros() as u64;
         let mut h = self.latency.lock().unwrap();
@@ -104,13 +130,23 @@ impl Metrics {
         let padded = self.padded_frames.load(Ordering::Relaxed);
         let executed = frames + padded;
         let (stream_peak, stream_whole) = *self.stream_gauge.lock().unwrap();
+        let requests = self.requests.load(Ordering::Relaxed);
+        let shed = self.shed.load(Ordering::Relaxed);
+        let deadline_expired = self.deadline_expired.load(Ordering::Relaxed);
+        // Offered load = everything that reached admission: executed
+        // requests, sheds, and queued-then-expired frames.
+        let offered = requests + shed + deadline_expired;
         MetricsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
+            requests,
             frames,
             batches: self.batches.load(Ordering::Relaxed),
             padded_frames: padded,
             padding_efficiency: if executed > 0 { frames as f64 / executed as f64 } else { 1.0 },
             errors: self.errors.load(Ordering::Relaxed),
+            shed,
+            deadline_expired,
+            disconnects: self.disconnects.load(Ordering::Relaxed),
+            shed_rate: if offered > 0 { shed as f64 / offered as f64 } else { 0.0 },
             mean_latency_us: if total > 0 { h.sum_us / total } else { 0 },
             p50_le_us: pct(0.50),
             p95_le_us: pct(0.95),
@@ -138,6 +174,15 @@ pub struct MetricsSnapshot {
     /// Real frames / executed frames (1.0 when nothing ran yet).
     pub padding_efficiency: f64,
     pub errors: u64,
+    /// Ingress admission refusals (queue full / infeasible deadline).
+    pub shed: u64,
+    /// Requests expired while queued at ingress, dropped at dispatch.
+    pub deadline_expired: u64,
+    /// Responses dropped because the client vanished mid-flight.
+    pub disconnects: u64,
+    /// `shed / (requests + shed + deadline_expired)` — the fraction of
+    /// offered load refused at admission (0.0 when nothing was offered).
+    pub shed_rate: f64,
     pub mean_latency_us: u64,
     /// Latency percentiles as histogram-bucket upper bounds.
     pub p50_le_us: u64,
@@ -172,6 +217,16 @@ impl std::fmt::Display for MetricsSnapshot {
             self.padding_efficiency, self.errors, self.mean_latency_us,
             b(self.p50_le_us), b(self.p95_le_us), b(self.p99_le_us), self.max_latency_us
         )?;
+        if self.shed + self.deadline_expired + self.disconnects > 0 {
+            write!(
+                f,
+                "  shed {} ({:.1}% of offered)  expired {}  disconnects {}",
+                self.shed,
+                self.shed_rate * 100.0,
+                self.deadline_expired,
+                self.disconnects
+            )?;
+        }
         if self.stream_peak_buffered_elems > 0 {
             write!(
                 f,
@@ -224,6 +279,29 @@ mod tests {
         assert_eq!(s.stream_peak_buffered_elems, 0);
         assert_eq!(s.stream_buffered_fraction, 0.0);
         assert!(!format!("{s}").contains("stream-buf"));
+    }
+
+    #[test]
+    fn shed_rate_over_offered_load_and_display_tail() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.shed, s.deadline_expired, s.disconnects), (0, 0, 0));
+        assert_eq!(s.shed_rate, 0.0);
+        assert!(!format!("{s}").contains("shed"), "quiet until something sheds: {s}");
+        // 6 executed + 3 shed + 1 queued-then-expired = 10 offered.
+        m.requests.fetch_add(6, Ordering::Relaxed);
+        for _ in 0..3 {
+            m.record_shed();
+        }
+        m.record_expired();
+        m.record_disconnect();
+        let s = m.snapshot();
+        assert_eq!(s.shed, 3);
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.disconnects, 1);
+        assert!((s.shed_rate - 0.3).abs() < 1e-9, "{}", s.shed_rate);
+        let text = format!("{s}");
+        assert!(text.contains("shed 3 (30.0% of offered)  expired 1  disconnects 1"), "{text}");
     }
 
     #[test]

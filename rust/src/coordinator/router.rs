@@ -16,7 +16,7 @@
 //!   discarded.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -78,6 +78,26 @@ struct PoolState {
 struct PoolShared {
     state: Mutex<PoolState>,
     cv: Condvar,
+    /// Depth of the network-ingress admission queue (0 without an
+    /// ingress front-end).  Folded into the `load_hint` the workers
+    /// report to elastic streaming backends, so socket backlog grows
+    /// stream-pool replicas before the router's own queue fills.
+    ingress: AtomicUsize,
+}
+
+impl PoolShared {
+    fn new() -> PoolShared {
+        PoolShared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                open: true,
+                draining: false,
+                abort: false,
+            }),
+            cv: Condvar::new(),
+            ingress: AtomicUsize::new(0),
+        }
+    }
 }
 
 struct Pool {
@@ -128,15 +148,7 @@ impl Router {
                 !router.pools.contains_key(&arch),
                 "duplicate backend for arch {arch}"
             );
-            let shared = Arc::new(PoolShared {
-                state: Mutex::new(PoolState {
-                    queue: VecDeque::new(),
-                    open: true,
-                    draining: false,
-                    abort: false,
-                }),
-                cv: Condvar::new(),
-            });
+            let shared = Arc::new(PoolShared::new());
             let metrics = Arc::new(Metrics::new());
             router.pools.insert(
                 arch.clone(),
@@ -221,6 +233,19 @@ impl Router {
             .map_err(|_| anyhow!("server dropped request"))?
     }
 
+    /// Report the network-ingress admission-queue depth.  The workers
+    /// fold this into the queue depth they pass to
+    /// [`InferenceBackend::load_hint`], closing the socket-to-replica
+    /// elastic loop: backlog still buffered at the ingress tier makes
+    /// an elastic streaming pool scale up before the router's own queue
+    /// reflects it.  Cheap (one relaxed store per pool); call it on
+    /// every ingress push/pop.
+    pub fn report_ingress(&self, depth: usize) {
+        for pool in self.pools.values() {
+            pool.shared.ingress.store(depth, Ordering::Relaxed);
+        }
+    }
+
     /// One pool's live metrics.
     pub fn metrics(&self, arch: &str) -> Option<Arc<Metrics>> {
         self.pools.get(arch).map(|p| p.metrics.clone())
@@ -298,7 +323,7 @@ impl Drop for Router {
         for pool in self.pools.values() {
             let mut st = pool.shared.state.lock().unwrap();
             while let Some(r) = st.queue.pop_front() {
-                let _ = r.resp.send(Err(anyhow!("server stopped")));
+                respond_counted(&pool.metrics, &self.agg, r, Err(anyhow!("server stopped")));
             }
         }
     }
@@ -352,6 +377,21 @@ fn worker_loop(
     serve_queue(backend, &batcher, shared, pool_metrics, agg);
 }
 
+/// Deliver one response; a client that dropped its receiver mid-flight
+/// (disconnect) makes this a *counted* no-op — never a worker panic or
+/// wedge.  The ingress front-end surfaces the counter in snapshots.
+fn respond_counted(
+    pool_metrics: &Metrics,
+    agg: &Metrics,
+    r: Request,
+    resp: Result<Response>,
+) {
+    if r.resp.send(resp).is_err() {
+        pool_metrics.record_disconnect();
+        agg.record_disconnect();
+    }
+}
+
 /// Claim a planned batch under the queue lock, execute it outside the
 /// lock (other workers keep stealing), respond.  Requests are never
 /// silently dropped: even a planner that yields no plan for a non-empty
@@ -369,13 +409,19 @@ fn serve_queue(
         let (plan, batch) = loop {
             if st.abort {
                 while let Some(r) = st.queue.pop_front() {
-                    let _ = r.resp.send(Err(anyhow!("server stopped")));
+                    respond_counted(pool_metrics, agg, r, Err(anyhow!("server stopped")));
                 }
                 return;
             }
             // Elastic streaming pools fold the router's queue depth into
             // their replica-scaling signal; a cheap no-op elsewhere.
-            backend.load_hint(st.queue.len());
+            // Ingress backlog (frames admitted by the TCP front-end but
+            // not yet dispatched here) counts toward the same signal.
+            backend.load_hint(
+                st.queue
+                    .len()
+                    .saturating_add(shared.ingress.load(Ordering::Relaxed)),
+            );
             if let Some(front) = st.queue.front() {
                 let oldest = front.submitted.elapsed();
                 if st.draining || planner.should_flush(st.queue.len(), oldest) {
@@ -395,9 +441,14 @@ fn serve_queue(
                             pool_metrics.errors.fetch_add(1, Ordering::Relaxed);
                             agg.errors.fetch_add(1, Ordering::Relaxed);
                             for r in failed {
-                                let _ = r.resp.send(Err(anyhow!(
-                                    "server error: batcher produced no plan for a non-empty queue"
-                                )));
+                                respond_counted(
+                                    pool_metrics,
+                                    agg,
+                                    r,
+                                    Err(anyhow!(
+                                        "server error: batcher produced no plan for a non-empty queue"
+                                    )),
+                                );
                             }
                             continue 'serve;
                         }
@@ -453,7 +504,12 @@ fn serve_queue(
                     let latency = r.submitted.elapsed();
                     pool_metrics.record_latency(latency);
                     agg.record_latency(latency);
-                    let _ = r.resp.send(Ok(Response { logits: row, class, latency }));
+                    respond_counted(
+                        pool_metrics,
+                        agg,
+                        r,
+                        Ok(Response { logits: row, class, latency }),
+                    );
                 }
             }
             Err(e) => {
@@ -461,7 +517,7 @@ fn serve_queue(
                 agg.errors.fetch_add(1, Ordering::Relaxed);
                 let msg = format!("{e}");
                 for r in batch {
-                    let _ = r.resp.send(Err(anyhow!("{msg}")));
+                    respond_counted(pool_metrics, agg, r, Err(anyhow!("{msg}")));
                 }
             }
         }
@@ -515,15 +571,7 @@ mod tests {
     /// keep the worker alive to serve/drain later), not panic.
     #[test]
     fn no_plan_for_nonempty_queue_fails_requests_typed_instead_of_panicking() {
-        let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState {
-                queue: VecDeque::new(),
-                open: true,
-                draining: false,
-                abort: false,
-            }),
-            cv: Condvar::new(),
-        });
+        let shared = Arc::new(PoolShared::new());
         let metrics = Arc::new(Metrics::new());
         let agg = Arc::new(Metrics::new());
         let (resp_tx, resp_rx) = mpsc::channel();
@@ -557,5 +605,149 @@ mod tests {
         }
         shared.cv.notify_all();
         worker.join().expect("worker panicked");
+    }
+
+    /// A backend that always succeeds with zero logits (10 classes).
+    struct ZeroBackend {
+        /// Highest load hint observed (for the ingress-fold test).
+        max_hint: std::sync::atomic::AtomicUsize,
+    }
+
+    impl ZeroBackend {
+        fn new() -> ZeroBackend {
+            ZeroBackend { max_hint: std::sync::atomic::AtomicUsize::new(0) }
+        }
+    }
+
+    impl InferenceBackend for ZeroBackend {
+        fn arch(&self) -> &str {
+            "zero"
+        }
+
+        fn buckets(&self) -> &[usize] {
+            &[1]
+        }
+
+        fn infer_batch(&self, input: &QTensor) -> Result<QTensor> {
+            let n = input.shape.n;
+            Ok(QTensor::from_vec(Shape4::new(n, 1, 1, 10), 0, vec![0i32; n * 10]))
+        }
+
+        fn load_hint(&self, queued: usize) {
+            self.max_hint.fetch_max(queued, Ordering::Relaxed);
+        }
+    }
+
+    /// Flush immediately, one frame at a time.
+    struct OnePlanner;
+
+    impl BatchPlanner for OnePlanner {
+        fn should_flush(&self, queued: usize, _oldest_age: Duration) -> bool {
+            queued > 0
+        }
+
+        fn plan(&self, _queued: usize) -> Vec<BatchPlan> {
+            vec![BatchPlan { bucket: 1, take: 1 }]
+        }
+
+        fn max_wait(&self) -> Duration {
+            Duration::from_millis(1)
+        }
+    }
+
+    fn run_worker(
+        shared: &Arc<PoolShared>,
+        metrics: &Arc<Metrics>,
+        agg: &Arc<Metrics>,
+        backend: Arc<ZeroBackend>,
+    ) -> std::thread::JoinHandle<()> {
+        let shared = shared.clone();
+        let metrics = metrics.clone();
+        let agg = agg.clone();
+        std::thread::spawn(move || {
+            serve_queue(backend.as_ref(), &OnePlanner, &shared, &metrics, &agg)
+        })
+    }
+
+    fn drain_worker(shared: &Arc<PoolShared>, worker: std::thread::JoinHandle<()>) {
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.open = false;
+            st.draining = true;
+        }
+        shared.cv.notify_all();
+        worker.join().expect("worker panicked");
+    }
+
+    /// Injection test for the disconnect bugfix: a client that dropped
+    /// its response `Receiver` mid-flight must cost exactly one counted
+    /// disconnect — the worker neither panics nor wedges, and it keeps
+    /// serving the connected client queued right behind.
+    #[test]
+    fn dropped_response_receiver_is_a_counted_noop() {
+        let shared = Arc::new(PoolShared::new());
+        let metrics = Arc::new(Metrics::new());
+        let agg = Arc::new(Metrics::new());
+        // First request: receiver already dropped (disconnected client).
+        let (gone_tx, gone_rx) = mpsc::channel();
+        drop(gone_rx);
+        // Second request: a live client waiting behind the dead one.
+        let (live_tx, live_rx) = mpsc::channel();
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.queue.push_back(Request {
+                pixels: vec![0; IMG_ELEMS],
+                submitted: Instant::now(),
+                resp: gone_tx,
+            });
+            st.queue.push_back(Request {
+                pixels: vec![0; IMG_ELEMS],
+                submitted: Instant::now(),
+                resp: live_tx,
+            });
+        }
+        let worker = run_worker(&shared, &metrics, &agg, Arc::new(ZeroBackend::new()));
+        shared.cv.notify_all();
+        // The live client is served (single worker, FIFO: the dead
+        // request was handled first).
+        let resp = live_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("worker wedged behind a disconnected client")
+            .expect("inference failed");
+        assert_eq!(resp.logits.len(), 10);
+        assert_eq!(metrics.disconnects.load(Ordering::Relaxed), 1);
+        assert_eq!(agg.disconnects.load(Ordering::Relaxed), 1);
+        // Both frames executed — the disconnect was a no-op, not a skip.
+        assert_eq!(metrics.frames.load(Ordering::Relaxed), 2);
+        drain_worker(&shared, worker);
+        let s = metrics.snapshot();
+        assert_eq!(s.disconnects, 1);
+        assert!(format!("{s}").contains("disconnects 1"), "{s}");
+    }
+
+    /// The worker's load hint folds the reported ingress depth into the
+    /// router queue depth — the signal an elastic stream pool scales on.
+    #[test]
+    fn load_hint_folds_ingress_depth_into_queue_depth() {
+        let shared = Arc::new(PoolShared::new());
+        let metrics = Arc::new(Metrics::new());
+        let agg = Arc::new(Metrics::new());
+        shared.ingress.store(7, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = mpsc::channel();
+        shared.state.lock().unwrap().queue.push_back(Request {
+            pixels: vec![0; IMG_ELEMS],
+            submitted: Instant::now(),
+            resp: resp_tx,
+        });
+        let backend = Arc::new(ZeroBackend::new());
+        let worker = run_worker(&shared, &metrics, &agg, backend.clone());
+        shared.cv.notify_all();
+        resp_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("worker did not serve")
+            .expect("inference failed");
+        drain_worker(&shared, worker);
+        // Queue depth 1 + ingress depth 7 = 8 observed by the backend.
+        assert_eq!(backend.max_hint.load(Ordering::Relaxed), 8);
     }
 }

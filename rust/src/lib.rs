@@ -23,7 +23,10 @@
 //!     paper's line-buffer/FIFO dataflow with measured Eq. 22 buffering);
 //!   - *serving*: the multi-arch `coordinator::Router` (per-arch worker
 //!     pools, dynamic batcher, metrics) — backend-generic, so the whole
-//!     request path is testable without Python, PJRT or artifacts.
+//!     request path is testable without Python, PJRT or artifacts —
+//!     fronted by the `net` ingress tier (length-prefixed TCP protocol,
+//!     bounded admission with load-shedding and deadlines, in-order
+//!     per-connection responses).
 //! * **L2/L1 (python/, build-time only)** — quantized ResNet8/20 in JAX,
 //!   compute hot-spots as Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
 //!
@@ -38,6 +41,7 @@ pub mod graph;
 pub mod hls;
 pub mod ilp;
 pub mod models;
+pub mod net;
 pub mod passes;
 pub mod quant;
 pub mod runtime;

@@ -19,6 +19,18 @@
 //!                                default)
 //!   buffers    [--model M]       Eq. 21/22/23 per residual block, plus the
 //!                                streaming executor's measured peak occupancy
+//!   listen     [--host H] [--port P] [--backend ...] [--workers N]
+//!              [--queue-cap N] [--dispatchers N] [--deadline-ms D]
+//!              [--duration-s S] [serve's backend flags]
+//!                                TCP ingress front-end ahead of the router:
+//!                                bounded admission, load-shedding with
+//!                                retry-after, deadlines enforced at admission
+//!                                and at dequeue (see README "Network ingress")
+//!   client     [--addr H:P] [--model M] [--frames N] [--fps F]
+//!              [--deadline-ms D] [--window W]
+//!                                stream synthetic CIFAR frames at a target FPS;
+//!                                prints p50/p95/p99 latency + shed rate and
+//!                                fails unless every request is accounted for
 
 use anyhow::Result;
 
@@ -31,6 +43,7 @@ use resnet_hls::ilp::loads_from_arch;
 use resnet_hls::models::{
     arch_by_name, build_optimized_graph, default_exps, synthetic_weights, ModelWeights,
 };
+use resnet_hls::net::{drive, DriveConfig, IngressServer, ServerConfig};
 use resnet_hls::paths::artifacts_dir;
 use resnet_hls::runtime::{
     Artifacts, BackendFactory, Engine, GoldenFactory, PjrtFactory, SimFactory, StreamFactory,
@@ -43,7 +56,9 @@ fn main() {
         std::env::args().skip(1),
         &[
             "model", "board", "frames", "n", "out", "skip-factor", "ow-par", "budget", "backend",
-            "workers", "replicas", "min-replicas", "max-replicas", "window-storage",
+            "workers", "replicas", "min-replicas", "max-replicas", "window-storage", "host",
+            "port", "queue-cap", "dispatchers", "deadline-ms", "duration-s", "addr", "fps",
+            "window",
         ],
     );
     let result = match args.subcommand.as_deref() {
@@ -55,10 +70,12 @@ fn main() {
         Some("golden-eval") => cmd_golden_eval(&args),
         Some("probe-check") => cmd_probe_check(),
         Some("serve") => cmd_serve(&args),
+        Some("listen") => cmd_listen(&args),
+        Some("client") => cmd_client(&args),
         Some("buffers") => cmd_buffers(&args),
         _ => {
             eprintln!(
-                "usage: repro <info|optimize|simulate|codegen|eval-tables|golden-eval|probe-check|serve|buffers> [options]"
+                "usage: repro <info|optimize|simulate|codegen|eval-tables|golden-eval|probe-check|serve|listen|client|buffers> [options]"
             );
             Ok(())
         }
@@ -283,10 +300,14 @@ fn cmd_probe_check() -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let arch = arch_of(args)?;
-    let frames = args.opt_usize("frames", 256);
-    let workers = args.opt_usize("workers", 1);
+/// Build the backend factory from the shared `serve`/`listen` flags
+/// (`--backend`, `--replicas` / elastic band, `--ow-par`,
+/// `--window-storage`), plus a human description for the startup line.
+fn build_factory(
+    args: &Args,
+    arch_name: &str,
+    workers: usize,
+) -> Result<(std::sync::Arc<dyn BackendFactory>, String)> {
     let replicas = args.opt_usize("replicas", 1);
     // Elastic band: either flag opts the stream pool into queue-driven
     // replica scaling (the other end of the band defaults sensibly);
@@ -319,11 +340,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // `golden` prefers the trained artifact weights when present and
     // falls back to deterministic synthetic weights (fully artifact-free).
     let factory: std::sync::Arc<dyn BackendFactory> = match backend {
-        "pjrt" => std::sync::Arc::new(PjrtFactory::new(dir.clone(), &arch.name)),
-        "golden" => std::sync::Arc::new(GoldenFactory::auto(dir.clone(), &arch.name, 7)),
-        "sim" => std::sync::Arc::new(SimFactory::synthetic(&arch.name, 7)),
+        "pjrt" => std::sync::Arc::new(PjrtFactory::new(dir.clone(), arch_name)),
+        "golden" => std::sync::Arc::new(GoldenFactory::auto(dir.clone(), arch_name, 7)),
+        "sim" => std::sync::Arc::new(SimFactory::synthetic(arch_name, 7)),
         "stream" => {
-            let mut f = StreamFactory::auto(dir.clone(), &arch.name, 7)
+            let mut f = StreamFactory::auto(dir.clone(), arch_name, 7)
                 .with_replicas(replicas)
                 .with_ow_par(ow_par)
                 .with_storage(storage);
@@ -334,24 +355,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown backend {other} (expected pjrt|golden|sim|stream)"),
     };
-    let router = Router::start(
-        vec![factory],
-        RouterConfig { workers_per_arch: workers, ..Default::default() },
-    )?;
-    if backend == "stream" {
+    let desc = if backend == "stream" {
         let band = match elastic {
             Some((min, max)) => format!("elastic {min}..={max} replicas (queue-driven)"),
             None => format!("{replicas} pipeline replica(s)"),
         };
-        println!(
-            "serving {} on stream backend ({workers} worker(s), {band} each, persistent \
+        format!(
+            "stream backend ({workers} worker(s), {band} each, persistent \
              frame-pipelined pool; ow_par={ow_par}, {storage:?} window storage; buckets sized \
-             to in-flight capacity)",
-            arch.name
-        );
+             to in-flight capacity)"
+        )
     } else {
-        println!("serving {} on {backend} backend ({workers} worker(s))", arch.name);
-    }
+        format!("{backend} backend ({workers} worker(s))")
+    };
+    Ok((factory, desc))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let arch = arch_of(args)?;
+    let frames = args.opt_usize("frames", 256);
+    let workers = args.opt_usize("workers", 1);
+    let (factory, desc) = build_factory(args, &arch.name, workers)?;
+    let router = Router::start(
+        vec![factory],
+        RouterConfig { workers_per_arch: workers, ..Default::default() },
+    )?;
+    println!("serving {} on {desc}", arch.name);
     let (input, labels) = synth_batch(0, frames, TEST_SEED);
     let frame_elems = 32 * 32 * 3;
     let t0 = std::time::Instant::now();
@@ -375,6 +404,92 @@ fn cmd_serve(args: &Args) -> Result<()> {
         correct as f64 / frames as f64
     );
     println!("metrics {}", router.shutdown());
+    Ok(())
+}
+
+fn cmd_listen(args: &Args) -> Result<()> {
+    let arch = arch_of(args)?;
+    let workers = args.opt_usize("workers", 1);
+    let (factory, desc) = build_factory(args, &arch.name, workers)?;
+    let router = std::sync::Arc::new(Router::start(
+        vec![factory],
+        RouterConfig { workers_per_arch: workers, ..Default::default() },
+    )?);
+    let host = args.opt_or("host", "127.0.0.1");
+    let port = args.opt_usize("port", 7433);
+    let cfg = ServerConfig {
+        addr: format!("{host}:{port}"),
+        queue_capacity: args.opt_usize("queue-cap", 64),
+        dispatchers: args.opt_usize("dispatchers", 2),
+        default_deadline: std::time::Duration::from_millis(
+            args.opt_usize("deadline-ms", 500) as u64
+        ),
+        ..Default::default()
+    };
+    let server = IngressServer::start(router.clone(), cfg)?;
+    // The CI smoke job greps this exact line for the ephemeral port
+    // (`--port 0` lets the OS pick one).
+    println!("listening on {} — {} ({desc})", server.local_addr(), arch.name);
+    {
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+    }
+    let duration = args.opt_usize("duration-s", 0);
+    let mut ticks = 0u64;
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(1));
+        ticks += 1;
+        if duration > 0 && ticks >= duration as u64 {
+            break;
+        }
+        if ticks % 30 == 0 {
+            println!("ingress {}", server.snapshot());
+            println!("metrics {}", router.snapshot());
+        }
+    }
+    // --duration-s elapsed: stop the ingress tier first (it drains and
+    // answers everything admitted), then the router.
+    let snap = server.shutdown();
+    println!("ingress {snap}");
+    let router = std::sync::Arc::try_unwrap(router)
+        .map_err(|_| anyhow::anyhow!("ingress server still holds the router"))?;
+    println!("metrics {}", router.shutdown());
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let arch = arch_of(args)?;
+    let cfg = DriveConfig {
+        addr: args.opt_or("addr", "127.0.0.1:7433").to_string(),
+        arch: arch.name.clone(),
+        frames: args.opt_usize("frames", 256),
+        fps: args.opt_f64("fps", 0.0),
+        deadline_ms: args.opt_usize("deadline-ms", 0) as u32,
+        window: args.opt_usize("window", 8),
+    };
+    println!(
+        "driving {} x {} to {} (fps {}, window {}, deadline {} ms)",
+        cfg.frames,
+        cfg.arch,
+        cfg.addr,
+        if cfg.fps > 0.0 { format!("{:.0}", cfg.fps) } else { "open-loop".to_string() },
+        cfg.window,
+        cfg.deadline_ms
+    );
+    let report = drive(&cfg).map_err(|e| anyhow::anyhow!("client failed: {e}"))?;
+    println!("{report}");
+    anyhow::ensure!(
+        report.accounted(),
+        "accounting failed: {} sent vs {} ok + {} shed + {} expired + {} err \
+         (out-of-order {}, hintless sheds {})",
+        report.sent,
+        report.oks,
+        report.sheds,
+        report.expired,
+        report.errors,
+        report.out_of_order,
+        report.sheds_without_hint
+    );
     Ok(())
 }
 

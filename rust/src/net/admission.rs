@@ -1,0 +1,306 @@
+//! Bounded admission ahead of the router: explicit load-shedding instead
+//! of unbounded queueing.
+//!
+//! The queue is the only buffering stage between the socket readers and
+//! the dispatcher threads that feed [`crate::coordinator::Router`], and
+//! it is *bounded*: when it is full, or when the waiting work ahead of a
+//! request makes its deadline infeasible (estimated from an EWMA of
+//! measured service times), [`AdmissionQueue::offer`] hands the item
+//! back with a SHED decision and a retry-after hint — the caller replies
+//! on the wire instead of queueing.  Deadlines are enforced a second
+//! time at dequeue by the dispatchers (a request can expire while
+//! queued), so an accepted-then-stale frame is dropped before it wastes
+//! backend work.
+//!
+//! Depth and peak-depth gauges are exported so the server can (a) feed
+//! the ingress depth into the router's `load_hint` path — closing the
+//! socket-to-replica elastic loop — and (b) let the soak tests assert
+//! the queue really never exceeds its cap.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Admission policy knobs.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Maximum queued requests; offers beyond this shed.
+    pub capacity: usize,
+    /// Dispatcher threads draining the queue (used by the wait
+    /// estimate: `depth * service / dispatchers`).
+    pub dispatchers: usize,
+    /// Floor for the retry-after hint on shed responses.
+    pub min_retry_after: Duration,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            capacity: 64,
+            dispatchers: 2,
+            min_retry_after: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Why an offer was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The queue is at capacity.
+    QueueFull,
+    /// The estimated queue wait already exceeds the request's remaining
+    /// deadline — executing it would only produce a late answer.
+    DeadlineInfeasible,
+}
+
+/// Outcome of an [`AdmissionQueue::offer`].
+pub enum Offer<T> {
+    /// Queued; `depth` is the post-push queue depth (for gauges).
+    Admitted { depth: usize },
+    /// Shed: the item is handed back with a retry-after hint.
+    Shed { item: T, reason: ShedReason, retry_after: Duration },
+}
+
+/// Outcome of an [`AdmissionQueue::pop`].
+pub enum Pop<T> {
+    Item { item: T, depth: usize },
+    /// Nothing arrived within the timeout; the queue is still open.
+    Empty,
+    /// Closed and fully drained — the dispatcher should exit.
+    Closed,
+}
+
+struct QState<T> {
+    q: VecDeque<T>,
+    open: bool,
+}
+
+/// The bounded, sheddable ingress queue.
+pub struct AdmissionQueue<T> {
+    state: Mutex<QState<T>>,
+    cv: Condvar,
+    cfg: AdmissionConfig,
+    depth: AtomicUsize,
+    peak_depth: AtomicUsize,
+    /// EWMA of measured dispatch-to-response service time, microseconds.
+    /// 0 until the first observation.
+    est_service_us: AtomicU64,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            state: Mutex::new(QState { q: VecDeque::new(), open: true }),
+            cv: Condvar::new(),
+            cfg: AdmissionConfig {
+                capacity: cfg.capacity.max(1),
+                dispatchers: cfg.dispatchers.max(1),
+                ..cfg
+            },
+            depth: AtomicUsize::new(0),
+            peak_depth: AtomicUsize::new(0),
+            est_service_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Current queue depth (gauge; exported to `load_hint`).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Highest depth ever observed — the soak tests assert this never
+    /// exceeds the configured capacity.
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth.load(Ordering::Relaxed)
+    }
+
+    /// The queue capacity (cap on `peak_depth`).
+    pub fn capacity(&self) -> usize {
+        self.cfg.capacity
+    }
+
+    /// Record a measured service time (dispatch to backend response);
+    /// feeds the deadline-feasibility estimate as an EWMA (alpha 1/8).
+    pub fn record_service(&self, service: Duration) {
+        let obs = (service.as_micros() as u64).max(1);
+        let old = self.est_service_us.load(Ordering::Relaxed);
+        let new = if old == 0 { obs } else { (old * 7 + obs) / 8 };
+        self.est_service_us.store(new, Ordering::Relaxed);
+    }
+
+    /// Estimated wait for a request entering at `depth`, from the
+    /// service EWMA and the dispatcher count.  Zero until the first
+    /// service observation (the estimate fails open: with no history,
+    /// only a full queue sheds).
+    pub fn estimated_wait(&self, depth: usize) -> Duration {
+        let est = self.est_service_us.load(Ordering::Relaxed);
+        Duration::from_micros(est * (depth as u64) / self.cfg.dispatchers as u64)
+    }
+
+    fn retry_after(&self, depth: usize) -> Duration {
+        self.estimated_wait(depth.max(1)).max(self.cfg.min_retry_after)
+    }
+
+    /// Offer one request: queue it, or shed with a retry-after hint when
+    /// the queue is full / the deadline cannot be met.  Never blocks.
+    pub fn offer(&self, item: T, remaining_deadline: Duration) -> Offer<T> {
+        let mut st = match self.state.lock() {
+            Ok(g) => g,
+            // A poisoned queue lock means a dispatcher panicked; shed
+            // rather than propagate the panic into the reader thread.
+            Err(p) => p.into_inner(),
+        };
+        if !st.open || st.q.len() >= self.cfg.capacity {
+            let retry = self.retry_after(self.cfg.capacity);
+            return Offer::Shed { item, reason: ShedReason::QueueFull, retry_after: retry };
+        }
+        let wait = self.estimated_wait(st.q.len() + 1);
+        if !wait.is_zero() && wait > remaining_deadline {
+            let retry = self.retry_after(st.q.len() + 1);
+            return Offer::Shed {
+                item,
+                reason: ShedReason::DeadlineInfeasible,
+                retry_after: retry,
+            };
+        }
+        st.q.push_back(item);
+        let depth = st.q.len();
+        drop(st);
+        self.depth.store(depth, Ordering::Relaxed);
+        self.peak_depth.fetch_max(depth, Ordering::Relaxed);
+        self.cv.notify_one();
+        Offer::Admitted { depth }
+    }
+
+    /// Pop the oldest request, waiting up to `timeout`.  After
+    /// [`close`](Self::close), the remaining items keep draining and
+    /// `Closed` is returned once the queue is empty.
+    pub fn pop(&self, timeout: Duration) -> Pop<T> {
+        let mut st = match self.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if st.q.is_empty() && st.open {
+            let (g, _) = match self.cv.wait_timeout(st, timeout) {
+                Ok(r) => r,
+                Err(p) => {
+                    let (g, t) = p.into_inner();
+                    (g, t)
+                }
+            };
+            st = g;
+        }
+        match st.q.pop_front() {
+            Some(item) => {
+                let depth = st.q.len();
+                drop(st);
+                self.depth.store(depth, Ordering::Relaxed);
+                Pop::Item { item, depth }
+            }
+            None => {
+                if st.open {
+                    Pop::Empty
+                } else {
+                    Pop::Closed
+                }
+            }
+        }
+    }
+
+    /// Stop accepting offers (they shed from now on); queued items keep
+    /// draining through `pop`, which reports `Closed` once empty.
+    pub fn close(&self) {
+        let mut st = match self.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        st.open = false;
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(capacity: usize) -> AdmissionQueue<u32> {
+        AdmissionQueue::new(AdmissionConfig {
+            capacity,
+            dispatchers: 1,
+            min_retry_after: Duration::from_millis(3),
+        })
+    }
+
+    #[test]
+    fn sheds_when_full_with_retry_hint() {
+        let queue = q(2);
+        let d = Duration::from_secs(1);
+        assert!(matches!(queue.offer(1, d), Offer::Admitted { depth: 1 }));
+        assert!(matches!(queue.offer(2, d), Offer::Admitted { depth: 2 }));
+        match queue.offer(3, d) {
+            Offer::Shed { item, reason, retry_after } => {
+                assert_eq!(item, 3);
+                assert_eq!(reason, ShedReason::QueueFull);
+                // No service history yet: the hint falls back to the floor.
+                assert_eq!(retry_after, Duration::from_millis(3));
+            }
+            Offer::Admitted { .. } => panic!("full queue must shed"),
+        }
+        assert_eq!(queue.depth(), 2);
+        assert_eq!(queue.peak_depth(), 2);
+        // Draining frees a slot.
+        assert!(matches!(queue.pop(Duration::ZERO), Pop::Item { item: 1, depth: 1 }));
+        assert!(matches!(queue.offer(4, d), Offer::Admitted { depth: 2 }));
+        assert_eq!(queue.peak_depth(), 2, "peak never exceeded the cap");
+    }
+
+    #[test]
+    fn sheds_infeasible_deadlines_once_calibrated() {
+        let queue = q(16);
+        // 10 ms measured service; one dispatcher.
+        queue.record_service(Duration::from_millis(10));
+        assert!(matches!(queue.offer(1, Duration::from_secs(1)), Offer::Admitted { .. }));
+        // Entering at depth 2 means ~20 ms of wait; a 5 ms deadline is
+        // infeasible and sheds with a calibrated (not floor) hint.
+        match queue.offer(2, Duration::from_millis(5)) {
+            Offer::Shed { reason, retry_after, .. } => {
+                assert_eq!(reason, ShedReason::DeadlineInfeasible);
+                assert!(retry_after >= Duration::from_millis(10), "{retry_after:?}");
+            }
+            Offer::Admitted { .. } => panic!("infeasible deadline must shed"),
+        }
+        // A generous deadline still gets in.
+        assert!(matches!(queue.offer(3, Duration::from_secs(1)), Offer::Admitted { .. }));
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let queue = q(4);
+        assert!(matches!(queue.offer(1, Duration::from_secs(1)), Offer::Admitted { .. }));
+        queue.close();
+        // Offers shed once closed.
+        assert!(matches!(
+            queue.offer(2, Duration::from_secs(1)),
+            Offer::Shed { reason: ShedReason::QueueFull, .. }
+        ));
+        // Remaining items drain, then Closed.
+        assert!(matches!(queue.pop(Duration::ZERO), Pop::Item { item: 1, .. }));
+        assert!(matches!(queue.pop(Duration::ZERO), Pop::Closed));
+    }
+
+    #[test]
+    fn ewma_tracks_service_observations() {
+        let queue = q(4);
+        assert!(queue.estimated_wait(4).is_zero(), "fails open with no history");
+        queue.record_service(Duration::from_millis(8));
+        assert_eq!(queue.estimated_wait(1), Duration::from_millis(8));
+        for _ in 0..64 {
+            queue.record_service(Duration::from_millis(2));
+        }
+        let est = queue.estimated_wait(1);
+        assert!(est < Duration::from_millis(4), "EWMA must converge down: {est:?}");
+        assert!(est >= Duration::from_millis(2));
+    }
+}

@@ -1,0 +1,305 @@
+//! Blocking TCP client for the ingress protocol, plus the shared
+//! traffic driver used by the example client, the `client` subcommand,
+//! the soak bench and the integration tests.
+//!
+//! [`Client`] is deliberately thin: connect, send a frame, receive the
+//! next in-order response.  [`drive`] layers a paced closed-ish loop on
+//! top — at most `window` requests outstanding, optional target FPS —
+//! and returns a [`DriveReport`] with client-observed latency
+//! percentiles, shed/expiry accounting and an ordering check, so every
+//! caller asserts the same invariants the ISSUE's soak criteria name.
+
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::data::{synth_batch, IMG_ELEMS, TEST_SEED};
+
+use super::protocol::{
+    read_frame, write_frame, RequestFrame, ResponseFrame, WireError, MAX_RESPONSE_BYTES,
+};
+
+/// A blocking ingress-protocol client over one TCP connection.
+pub struct Client {
+    stream: TcpStream,
+    next_ticket: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream, next_ticket: 0 })
+    }
+
+    /// Send one request; returns the ticket the server will answer it
+    /// with (tickets are per-connection, 1-based, in send order).
+    pub fn send(&mut self, arch: &str, deadline_ms: u32, pixels: &[i32]) -> Result<u64, WireError> {
+        let body = RequestFrame {
+            arch: arch.to_string(),
+            deadline_ms,
+            pixels: pixels.to_vec(),
+        }
+        .encode();
+        write_frame(&mut self.stream, &body)?;
+        self.next_ticket += 1;
+        Ok(self.next_ticket)
+    }
+
+    /// Receive the next response (they arrive in ticket order).
+    /// A clean server-side close is [`WireError::Closed`].
+    pub fn recv(&mut self) -> Result<ResponseFrame, WireError> {
+        match read_frame(&mut self.stream, MAX_RESPONSE_BYTES)? {
+            Some(body) => ResponseFrame::decode(&body),
+            None => Err(WireError::Closed),
+        }
+    }
+
+    /// Blocking convenience: send one request and wait for its answer.
+    pub fn request(
+        &mut self,
+        arch: &str,
+        deadline_ms: u32,
+        pixels: &[i32],
+    ) -> Result<ResponseFrame, WireError> {
+        self.send(arch, deadline_ms, pixels)?;
+        self.recv()
+    }
+}
+
+/// Traffic-driver parameters.
+#[derive(Debug, Clone)]
+pub struct DriveConfig {
+    /// Server address, `host:port`.
+    pub addr: String,
+    pub arch: String,
+    /// Frames to send (synthetic CIFAR-10, deterministic).
+    pub frames: usize,
+    /// Target send rate; 0.0 = open loop (as fast as the window allows).
+    pub fps: f64,
+    /// Per-request deadline (0 = server default).
+    pub deadline_ms: u32,
+    /// Maximum outstanding (pipelined) requests on the connection.
+    pub window: usize,
+}
+
+impl Default for DriveConfig {
+    fn default() -> Self {
+        DriveConfig {
+            addr: "127.0.0.1:7433".to_string(),
+            arch: "resnet8".to_string(),
+            frames: 256,
+            fps: 0.0,
+            deadline_ms: 0,
+            window: 8,
+        }
+    }
+}
+
+/// What one [`drive`] run observed, from the client's side of the wire.
+#[derive(Debug, Clone)]
+pub struct DriveReport {
+    pub sent: usize,
+    pub oks: usize,
+    pub sheds: usize,
+    pub expired: usize,
+    pub errors: usize,
+    /// Responses whose ticket did not match the oldest outstanding
+    /// request — must stay 0 (the protocol guarantees per-connection
+    /// ordering).
+    pub out_of_order: usize,
+    /// Shed responses carrying a zero retry-after hint — must stay 0.
+    pub sheds_without_hint: usize,
+    /// Client-observed latency of OK responses, microseconds.
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub wall: Duration,
+}
+
+impl DriveReport {
+    /// Every request answered exactly once, in order, and every shed
+    /// carried a retry hint — the smoke/soak acceptance predicate.
+    pub fn accounted(&self) -> bool {
+        self.oks + self.sheds + self.expired + self.errors == self.sent
+            && self.out_of_order == 0
+            && self.sheds_without_hint == 0
+    }
+
+    /// Fraction of sent requests that were shed.
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.sheds as f64 / self.sent as f64
+        }
+    }
+
+    /// Achieved OK throughput in frames/second.
+    pub fn ok_fps(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s > 0.0 {
+            self.oks as f64 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+impl std::fmt::Display for DriveReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "sent {}  ok {}  shed {} ({:.1}%)  expired {}  err {}  \
+             lat p50 {}us p95 {}us p99 {}us max {}us  wall {:.2}s  {:.0} ok-fps",
+            self.sent,
+            self.oks,
+            self.sheds,
+            self.shed_rate() * 100.0,
+            self.expired,
+            self.errors,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.max_us,
+            self.wall.as_secs_f64(),
+            self.ok_fps()
+        )
+    }
+}
+
+/// Exact percentile over observed samples (nearest-rank; 0 when empty).
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Stream deterministic synthetic CIFAR frames at the configured pace
+/// and account for every response.
+pub fn drive(cfg: &DriveConfig) -> Result<DriveReport, WireError> {
+    let mut client = Client::connect(&cfg.addr)?;
+    let window = cfg.window.max(1);
+    // A modest pool of distinct frames, cycled — enough to exercise the
+    // wire without regenerating pixels per request.
+    let pool = cfg.frames.clamp(1, 64);
+    let (batch, _labels) = synth_batch(0, pool, TEST_SEED);
+    let mut report = DriveReport {
+        sent: 0,
+        oks: 0,
+        sheds: 0,
+        expired: 0,
+        errors: 0,
+        out_of_order: 0,
+        sheds_without_hint: 0,
+        p50_us: 0,
+        p95_us: 0,
+        p99_us: 0,
+        max_us: 0,
+        wall: Duration::ZERO,
+    };
+    let mut latencies: Vec<u64> = Vec::with_capacity(cfg.frames);
+    let mut inflight: VecDeque<(u64, Instant)> = VecDeque::with_capacity(window);
+    let start = Instant::now();
+    for i in 0..cfg.frames {
+        if cfg.fps > 0.0 {
+            let due = start + Duration::from_secs_f64(i as f64 / cfg.fps);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        while inflight.len() >= window {
+            recv_one(&mut client, &mut inflight, &mut report, &mut latencies)?;
+        }
+        let fi = i % pool;
+        let ticket =
+            client.send(&cfg.arch, cfg.deadline_ms, &batch.data[fi * IMG_ELEMS..(fi + 1) * IMG_ELEMS])?;
+        report.sent += 1;
+        inflight.push_back((ticket, Instant::now()));
+    }
+    while !inflight.is_empty() {
+        recv_one(&mut client, &mut inflight, &mut report, &mut latencies)?;
+    }
+    report.wall = start.elapsed();
+    latencies.sort_unstable();
+    report.p50_us = percentile(&latencies, 0.50);
+    report.p95_us = percentile(&latencies, 0.95);
+    report.p99_us = percentile(&latencies, 0.99);
+    report.max_us = latencies.last().copied().unwrap_or(0);
+    Ok(report)
+}
+
+fn recv_one(
+    client: &mut Client,
+    inflight: &mut VecDeque<(u64, Instant)>,
+    report: &mut DriveReport,
+    latencies: &mut Vec<u64>,
+) -> Result<(), WireError> {
+    let resp = client.recv()?;
+    let (want_ticket, sent_at) = inflight
+        .pop_front()
+        .expect("recv_one called with nothing outstanding");
+    if resp.ticket() != want_ticket {
+        report.out_of_order += 1;
+    }
+    match resp {
+        ResponseFrame::Ok { .. } => {
+            report.oks += 1;
+            latencies.push(sent_at.elapsed().as_micros() as u64);
+        }
+        ResponseFrame::Shed { retry_after_ms, .. } => {
+            report.sheds += 1;
+            if retry_after_ms == 0 {
+                report.sheds_without_hint += 1;
+            }
+        }
+        ResponseFrame::Expired { .. } => report.expired += 1,
+        ResponseFrame::Error { .. } => report.errors += 1,
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.5), 7);
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&s, 0.50), 50);
+        assert_eq!(percentile(&s, 0.95), 95);
+        assert_eq!(percentile(&s, 0.99), 99);
+        assert_eq!(percentile(&s, 1.0), 100);
+    }
+
+    #[test]
+    fn report_accounting_predicate() {
+        let mut r = DriveReport {
+            sent: 10,
+            oks: 6,
+            sheds: 3,
+            expired: 1,
+            errors: 0,
+            out_of_order: 0,
+            sheds_without_hint: 0,
+            p50_us: 0,
+            p95_us: 0,
+            p99_us: 0,
+            max_us: 0,
+            wall: Duration::from_secs(1),
+        };
+        assert!(r.accounted());
+        assert!((r.shed_rate() - 0.3).abs() < 1e-9);
+        r.out_of_order = 1;
+        assert!(!r.accounted());
+        r.out_of_order = 0;
+        r.errors = 1;
+        assert!(!r.accounted(), "over-answered runs must fail accounting");
+    }
+}

@@ -1,0 +1,33 @@
+//! Network ingress: the TCP front-end ahead of [`crate::coordinator`].
+//!
+//! The paper's accelerators are judged under sustained overload (the
+//! KV260 ResNet8 point is 30153 FPS); this module is the serving-side
+//! analogue — the subsystem that survives a firehose at bounded memory
+//! and bounded tail latency instead of queueing unboundedly:
+//!
+//! * [`protocol`] — the length-prefixed binary wire format (requests:
+//!   magic/version/arch/deadline/pixels; responses: in-order ticket +
+//!   OK/SHED/EXPIRED/ERROR tails), with typed, panic-free decoding;
+//! * [`admission`] — the bounded queue between socket readers and the
+//!   router dispatchers: shed-on-full and shed-on-infeasible-deadline
+//!   with retry-after hints, depth gauges for the elastic loop;
+//! * [`server`] — [`server::IngressServer`]: acceptor, per-connection
+//!   reader/writer pairs (responses strictly in ticket order),
+//!   dispatcher pool, second deadline check at dequeue, and ingress
+//!   depth reported into [`crate::coordinator::Router::report_ingress`]
+//!   so stream pools grow replicas from socket backlog;
+//! * [`client`] — the blocking client plus the [`client::drive`]
+//!   traffic generator shared by the example, the `client` subcommand,
+//!   the soak bench and the integration tests.
+//!
+//! Everything is `std`-only: no async runtime, no wire-format crates.
+
+pub mod admission;
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use admission::{AdmissionConfig, AdmissionQueue, Offer, Pop, ShedReason};
+pub use client::{drive, Client, DriveConfig, DriveReport};
+pub use protocol::{ErrorCode, RequestFrame, ResponseFrame, WireError};
+pub use server::{IngressServer, IngressSnapshot, ServerConfig};

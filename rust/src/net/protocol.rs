@@ -1,0 +1,544 @@
+//! The ingress wire protocol: length-prefixed binary frames.
+//!
+//! Every frame on the wire is a little-endian `u32` body length followed
+//! by the body.  A request body carries magic, protocol version, the
+//! architecture name, a per-request deadline and the raw `i32` pixel
+//! payload; a response body carries the connection-ordered ticket and a
+//! status-specific tail (logits, a retry-after hint, or a typed error
+//! code).  Responses on one connection are always written in request
+//! (ticket) order, so a pipelining client needs no reordering buffer.
+//!
+//! Request body layout (after the `u32` length prefix):
+//!
+//! | offset | size | field                                          |
+//! |--------|------|------------------------------------------------|
+//! | 0      | 4    | magic `0x5248_4C53` ("RHLS")                   |
+//! | 4      | 1    | version (currently 1)                          |
+//! | 5      | 1    | arch name length `L` (<= 64)                   |
+//! | 6      | L    | arch name, UTF-8                               |
+//! | 6+L    | 4    | deadline_ms (0 = server default)               |
+//! | 10+L   | 4    | pixel count (must equal `IMG_ELEMS`)           |
+//! | 14+L   | 4n   | pixels, `i32` each                             |
+//!
+//! Response body layout:
+//!
+//! | offset | size | field                                          |
+//! |--------|------|------------------------------------------------|
+//! | 0      | 4    | magic                                          |
+//! | 4      | 1    | version                                        |
+//! | 5      | 1    | status: 0 OK, 1 SHED, 2 EXPIRED, 3 ERROR       |
+//! | 6      | 8    | ticket (per-connection, 1-based, in order)     |
+//! | 14     | ...  | status tail (see [`ResponseFrame`])            |
+//!
+//! Decoding malformed input never panics: every failure is a typed
+//! [`WireError`], property-tested in this module and injection-tested
+//! over a real socket in the server tests.
+
+use std::io::{self, Read, Write};
+
+use crate::data::IMG_ELEMS;
+
+/// Frame magic: `"RHLS"` read as a little-endian `u32`.
+pub const MAGIC: u32 = 0x5248_4C53;
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Longest accepted architecture name.
+pub const MAX_ARCH_LEN: usize = 64;
+
+/// Largest legal request body: the fixed header at the longest arch name
+/// plus the full pixel payload.  Anything larger is rejected from the
+/// length prefix alone, before any allocation.
+pub const MAX_REQUEST_BYTES: usize = 14 + MAX_ARCH_LEN + 4 * IMG_ELEMS;
+/// Largest legal response body (OK status with a full logits row; the
+/// bound is generous so richer tails fit without a version bump).
+pub const MAX_RESPONSE_BYTES: usize = 14 + 8 + 2 + 2 + 4 * 1024;
+
+/// Typed wire-protocol failure.  `Io` wraps transport errors from the
+/// framed read/write helpers; everything else is a malformed or
+/// out-of-contract frame.
+#[derive(Debug)]
+pub enum WireError {
+    /// The stream ended (or the body was shorter than its fields claim).
+    Truncated { need: usize, have: usize },
+    /// Length prefix above the per-direction cap.
+    Oversized { len: usize, max: usize },
+    /// First four body bytes were not [`MAGIC`].
+    BadMagic(u32),
+    /// Version byte this build does not speak.
+    BadVersion(u8),
+    /// Arch name too long or not UTF-8.
+    BadArchName,
+    /// Pixel count other than the `IMG_ELEMS` contract.
+    BadPixelCount { got: usize, want: usize },
+    /// Unknown response status byte.
+    BadStatus(u8),
+    /// Unknown typed error code in an ERROR response.
+    BadErrorCode(u8),
+    /// The peer closed the connection at a frame boundary.
+    Closed,
+    /// Transport failure underneath the framing.
+    Io(io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes (max {max})")
+            }
+            WireError::BadMagic(m) => write!(f, "bad magic {m:#010x} (want {MAGIC:#010x})"),
+            WireError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            WireError::BadArchName => write!(f, "bad arch name (too long or not UTF-8)"),
+            WireError::BadPixelCount { got, want } => {
+                write!(f, "bad pixel count {got} (want {want})")
+            }
+            WireError::BadStatus(s) => write!(f, "unknown response status {s}"),
+            WireError::BadErrorCode(c) => write!(f, "unknown error code {c}"),
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// Typed server-side error codes carried by ERROR responses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Request frame failed to decode (bad magic/version/fields); the
+    /// response message carries the detail.
+    BadRequest = 1,
+    /// No backend pool for the requested architecture.
+    UnknownArch = 2,
+    /// The backend failed the request (typed router/pool error text).
+    Backend = 3,
+    /// The server is shutting down; the request was not executed.
+    Shutdown = 4,
+}
+
+impl ErrorCode {
+    pub fn from_u8(v: u8) -> Result<ErrorCode, WireError> {
+        match v {
+            1 => Ok(ErrorCode::BadRequest),
+            2 => Ok(ErrorCode::UnknownArch),
+            3 => Ok(ErrorCode::Backend),
+            4 => Ok(ErrorCode::Shutdown),
+            other => Err(WireError::BadErrorCode(other)),
+        }
+    }
+}
+
+/// A decoded inference request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestFrame {
+    pub arch: String,
+    /// Client deadline in milliseconds; 0 defers to the server default.
+    pub deadline_ms: u32,
+    /// `(32, 32, 3)` int8-valued pixels @ 2^-7, NHWC flattened.
+    pub pixels: Vec<i32>,
+}
+
+/// A decoded response.  `ticket` is the server-assigned per-connection
+/// sequence number (1-based); responses arrive in ticket order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResponseFrame {
+    Ok { ticket: u64, latency_us: u64, class: u16, logits: Vec<i32> },
+    /// Load-shed at admission: not executed; retry after the hint.
+    Shed { ticket: u64, retry_after_ms: u32 },
+    /// Deadline already expired (at admission or at dispatch); dropped.
+    Expired { ticket: u64 },
+    Error { ticket: u64, code: ErrorCode, msg: String },
+}
+
+impl ResponseFrame {
+    pub fn ticket(&self) -> u64 {
+        match self {
+            ResponseFrame::Ok { ticket, .. }
+            | ResponseFrame::Shed { ticket, .. }
+            | ResponseFrame::Expired { ticket }
+            | ResponseFrame::Error { ticket, .. } => *ticket,
+        }
+    }
+}
+
+// ------------------------------------------------------------ encoding
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+impl RequestFrame {
+    /// Encode the body (no length prefix; see [`write_frame`]).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(14 + self.arch.len() + 4 * self.pixels.len());
+        put_u32(&mut out, MAGIC);
+        out.push(VERSION);
+        debug_assert!(self.arch.len() <= MAX_ARCH_LEN);
+        out.push(self.arch.len().min(MAX_ARCH_LEN) as u8);
+        out.extend_from_slice(&self.arch.as_bytes()[..self.arch.len().min(MAX_ARCH_LEN)]);
+        put_u32(&mut out, self.deadline_ms);
+        put_u32(&mut out, self.pixels.len() as u32);
+        for p in &self.pixels {
+            put_u32(&mut out, *p as u32);
+        }
+        out
+    }
+
+    /// Decode a request body.  Never panics on malformed input.
+    pub fn decode(body: &[u8]) -> Result<RequestFrame, WireError> {
+        let mut c = Cursor { buf: body, pos: 0 };
+        let magic = c.take_u32()?;
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        let version = c.take_u8()?;
+        if version != VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let arch_len = c.take_u8()? as usize;
+        if arch_len > MAX_ARCH_LEN {
+            return Err(WireError::BadArchName);
+        }
+        let arch = std::str::from_utf8(c.take_bytes(arch_len)?)
+            .map_err(|_| WireError::BadArchName)?
+            .to_string();
+        let deadline_ms = c.take_u32()?;
+        let n = c.take_u32()? as usize;
+        if n != IMG_ELEMS {
+            return Err(WireError::BadPixelCount { got: n, want: IMG_ELEMS });
+        }
+        let mut pixels = Vec::with_capacity(n);
+        for _ in 0..n {
+            pixels.push(c.take_u32()? as i32);
+        }
+        c.finish()?;
+        Ok(RequestFrame { arch, deadline_ms, pixels })
+    }
+}
+
+impl ResponseFrame {
+    /// Encode the body (no length prefix; see [`write_frame`]).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        put_u32(&mut out, MAGIC);
+        out.push(VERSION);
+        match self {
+            ResponseFrame::Ok { ticket, latency_us, class, logits } => {
+                out.push(0);
+                put_u64(&mut out, *ticket);
+                put_u64(&mut out, *latency_us);
+                put_u16(&mut out, *class);
+                put_u16(&mut out, logits.len() as u16);
+                for l in logits {
+                    put_u32(&mut out, *l as u32);
+                }
+            }
+            ResponseFrame::Shed { ticket, retry_after_ms } => {
+                out.push(1);
+                put_u64(&mut out, *ticket);
+                put_u32(&mut out, *retry_after_ms);
+            }
+            ResponseFrame::Expired { ticket } => {
+                out.push(2);
+                put_u64(&mut out, *ticket);
+            }
+            ResponseFrame::Error { ticket, code, msg } => {
+                out.push(3);
+                put_u64(&mut out, *ticket);
+                out.push(*code as u8);
+                let msg = &msg.as_bytes()[..msg.len().min(u16::MAX as usize)];
+                put_u16(&mut out, msg.len() as u16);
+                out.extend_from_slice(msg);
+            }
+        }
+        out
+    }
+
+    /// Decode a response body.  Never panics on malformed input.
+    pub fn decode(body: &[u8]) -> Result<ResponseFrame, WireError> {
+        let mut c = Cursor { buf: body, pos: 0 };
+        let magic = c.take_u32()?;
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        let version = c.take_u8()?;
+        if version != VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let status = c.take_u8()?;
+        let ticket = c.take_u64()?;
+        let frame = match status {
+            0 => {
+                let latency_us = c.take_u64()?;
+                let class = c.take_u16()?;
+                let n = c.take_u16()? as usize;
+                let mut logits = Vec::with_capacity(n);
+                for _ in 0..n {
+                    logits.push(c.take_u32()? as i32);
+                }
+                ResponseFrame::Ok { ticket, latency_us, class, logits }
+            }
+            1 => ResponseFrame::Shed { ticket, retry_after_ms: c.take_u32()? },
+            2 => ResponseFrame::Expired { ticket },
+            3 => {
+                let code = ErrorCode::from_u8(c.take_u8()?)?;
+                let n = c.take_u16()? as usize;
+                let msg = std::str::from_utf8(c.take_bytes(n)?)
+                    .map_err(|_| WireError::BadArchName)?
+                    .to_string();
+                ResponseFrame::Error { ticket, code, msg }
+            }
+            other => return Err(WireError::BadStatus(other)),
+        };
+        c.finish()?;
+        Ok(frame)
+    }
+}
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take_bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Truncated {
+                need: self.pos + n,
+                have: self.buf.len(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take_bytes(1)?[0])
+    }
+
+    fn take_u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take_bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn take_u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take_bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn take_u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take_bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Trailing bytes after the last field are a framing bug on the
+    /// peer's side — reject them rather than silently ignoring.
+    fn finish(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Truncated { need: self.pos, have: self.buf.len() });
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- framing
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> io::Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame body, bounded by `max` bytes.
+///
+/// Returns `Ok(None)` on a clean close (EOF exactly at a frame
+/// boundary); EOF inside a frame is [`WireError::Truncated`]; a length
+/// prefix above `max` is [`WireError::Oversized`] and is rejected before
+/// any payload allocation.
+pub fn read_frame(r: &mut impl Read, max: usize) -> Result<Option<Vec<u8>>, WireError> {
+    let mut prefix = [0u8; 4];
+    let mut have = 0usize;
+    while have < 4 {
+        match r.read(&mut prefix[have..]) {
+            Ok(0) => {
+                if have == 0 {
+                    return Ok(None);
+                }
+                return Err(WireError::Truncated { need: 4, have });
+            }
+            Ok(n) => have += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > max {
+        return Err(WireError::Oversized { len, max });
+    }
+    let mut body = vec![0u8; len];
+    let mut have = 0usize;
+    while have < len {
+        match r.read(&mut body[have..]) {
+            Ok(0) => return Err(WireError::Truncated { need: len, have }),
+            Ok(n) => have += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(Some(body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn req(rng: &mut crate::util::rng::Lcg64) -> RequestFrame {
+        let arch = match rng.below(3) {
+            0 => "resnet8",
+            1 => "resnet20",
+            _ => "a-b_c.64",
+        };
+        RequestFrame {
+            arch: arch.to_string(),
+            deadline_ms: rng.next_u64() as u32,
+            pixels: (0..IMG_ELEMS).map(|_| rng.range_i64(-128, 127) as i32).collect(),
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_property() {
+        forall("request encode/decode roundtrip", 25, |rng| {
+            let r = req(rng);
+            let body = r.encode();
+            assert!(body.len() <= MAX_REQUEST_BYTES);
+            assert_eq!(RequestFrame::decode(&body).unwrap(), r);
+        });
+    }
+
+    #[test]
+    fn response_roundtrip_property() {
+        forall("response encode/decode roundtrip", 50, |rng| {
+            let ticket = rng.next_u64();
+            let r = match rng.below(4) {
+                0 => ResponseFrame::Ok {
+                    ticket,
+                    latency_us: rng.next_u64(),
+                    class: rng.below(10) as u16,
+                    logits: (0..10).map(|_| rng.range_i64(i32::MIN as i64, i32::MAX as i64) as i32).collect(),
+                },
+                1 => ResponseFrame::Shed { ticket, retry_after_ms: rng.next_u64() as u32 },
+                2 => ResponseFrame::Expired { ticket },
+                _ => ResponseFrame::Error {
+                    ticket,
+                    code: ErrorCode::Backend,
+                    msg: "stage r1/conv0 poisoned".to_string(),
+                },
+            };
+            let body = r.encode();
+            assert!(body.len() <= MAX_RESPONSE_BYTES);
+            assert_eq!(ResponseFrame::decode(&body).unwrap(), r);
+        });
+    }
+
+    #[test]
+    fn truncated_bodies_yield_typed_errors_never_panics() {
+        let full = RequestFrame {
+            arch: "resnet8".into(),
+            deadline_ms: 20,
+            pixels: vec![0; IMG_ELEMS],
+        }
+        .encode();
+        // Every prefix of a valid frame must fail typed, not panic.
+        for cut in 0..full.len().min(64) {
+            assert!(RequestFrame::decode(&full[..cut]).is_err(), "cut {cut} accepted");
+        }
+        // And a few cuts through the payload region.
+        for cut in [full.len() - 1, full.len() - 5, 20, 100] {
+            assert!(matches!(
+                RequestFrame::decode(&full[..cut]),
+                Err(WireError::Truncated { .. })
+            ));
+        }
+        // Trailing garbage is rejected too.
+        let mut long = full.clone();
+        long.push(0xAB);
+        assert!(RequestFrame::decode(&long).is_err());
+    }
+
+    #[test]
+    fn bad_magic_version_and_pixel_count_are_typed() {
+        let mut body = RequestFrame {
+            arch: "resnet8".into(),
+            deadline_ms: 0,
+            pixels: vec![0; IMG_ELEMS],
+        }
+        .encode();
+        let mut bad_magic = body.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(matches!(RequestFrame::decode(&bad_magic), Err(WireError::BadMagic(_))));
+        let mut bad_version = body.clone();
+        bad_version[4] = 99;
+        assert!(matches!(RequestFrame::decode(&bad_version), Err(WireError::BadVersion(99))));
+        // Lie about the pixel count.
+        body[10 + 7..14 + 7].copy_from_slice(&7u32.to_le_bytes());
+        assert!(matches!(
+            RequestFrame::decode(&body),
+            Err(WireError::BadPixelCount { got: 7, .. })
+        ));
+        assert!(matches!(ResponseFrame::decode(&[1, 2, 3]), Err(WireError::Truncated { .. })));
+        let mut resp = ResponseFrame::Expired { ticket: 1 }.encode();
+        resp[5] = 250;
+        assert!(matches!(ResponseFrame::decode(&resp), Err(WireError::BadStatus(250))));
+    }
+
+    #[test]
+    fn framed_io_roundtrip_and_limits() {
+        let body = ResponseFrame::Shed { ticket: 9, retry_after_ms: 12 }.encode();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &body).unwrap();
+        let mut rd = &wire[..];
+        let got = read_frame(&mut rd, MAX_RESPONSE_BYTES).unwrap().unwrap();
+        assert_eq!(got, body);
+        // Clean EOF at the boundary.
+        assert!(read_frame(&mut rd, MAX_RESPONSE_BYTES).unwrap().is_none());
+        // EOF inside the prefix and inside the body are Truncated.
+        let mut cut = &wire[..2];
+        assert!(matches!(
+            read_frame(&mut cut, MAX_RESPONSE_BYTES),
+            Err(WireError::Truncated { .. })
+        ));
+        let mut cut = &wire[..wire.len() - 3];
+        assert!(matches!(
+            read_frame(&mut cut, MAX_RESPONSE_BYTES),
+            Err(WireError::Truncated { .. })
+        ));
+        // An oversized length prefix is rejected before allocation.
+        let huge = (u32::MAX).to_le_bytes();
+        let mut rd = &huge[..];
+        assert!(matches!(
+            read_frame(&mut rd, MAX_REQUEST_BYTES),
+            Err(WireError::Oversized { .. })
+        ));
+    }
+}

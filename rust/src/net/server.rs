@@ -1,0 +1,970 @@
+//! The TCP ingress front-end: sockets in, router out.
+//!
+//! Thread shape:
+//!
+//! * one **acceptor** (nonblocking accept loop, bounded by `max_conns`);
+//! * two threads per connection — a **reader** that decodes frames,
+//!   assigns tickets and offers work to the bounded
+//!   [`AdmissionQueue`], and a **writer** that emits responses strictly
+//!   in ticket order (the reader enqueues one response *slot* per
+//!   request before the outcome is known, so pipelined clients never
+//!   see reordering);
+//! * `dispatchers` **dispatcher** threads that pop admitted requests,
+//!   re-check the deadline (a request can expire while queued), submit
+//!   to the [`Router`], and forward the backend's answer into the slot.
+//!
+//! Admission is where the firehose is survived: a full queue or an
+//! infeasible deadline sheds immediately with a retry-after hint
+//! (`SHED` on the wire) instead of queueing unboundedly, and the
+//! ingress queue depth is reported into the router's
+//! [`load_hint`](crate::runtime::InferenceBackend::load_hint) path on
+//! every depth change so an elastic streaming pool can grow replicas
+//! *before* the backend's own queue backs up — the socket-to-replica
+//! elastic loop from the ROADMAP's production-ingress item.
+//!
+//! Shed and deadline-expired requests are also recorded into the
+//! router's per-arch [`Metrics`] (and its aggregate), so a
+//! `RouterSnapshot` shows the ingress tail: shed counts, shed rate and
+//! expiries alongside the serving latency percentiles.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{Metrics, Router};
+
+use super::admission::{AdmissionConfig, AdmissionQueue, Offer, Pop, ShedReason};
+use super::protocol::{
+    write_frame, ErrorCode, RequestFrame, ResponseFrame, WireError, MAX_REQUEST_BYTES,
+};
+
+/// Ingress policy knobs (see the README's "Network ingress" section).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; port 0 asks the OS for an ephemeral port (read the
+    /// chosen one back from [`IngressServer::local_addr`]).
+    pub addr: String,
+    /// Bounded admission-queue capacity; offers beyond it shed.
+    pub queue_capacity: usize,
+    /// Dispatcher threads bridging the queue to the router.  Also the
+    /// ingress-side in-flight cap: each dispatcher waits for its
+    /// request's response before popping the next, so total buffered
+    /// work is `queue_capacity + dispatchers` frames.
+    pub dispatchers: usize,
+    /// Deadline applied when a request carries `deadline_ms == 0`.
+    pub default_deadline: Duration,
+    /// Upper clamp on client-supplied deadlines.
+    pub max_deadline: Duration,
+    /// Floor for the retry-after hint on shed responses.
+    pub min_retry_after: Duration,
+    /// Maximum concurrent connections; beyond it new sockets are
+    /// dropped at accept (counted, never queued).
+    pub max_conns: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            queue_capacity: 64,
+            dispatchers: 2,
+            default_deadline: Duration::from_millis(500),
+            max_deadline: Duration::from_secs(10),
+            min_retry_after: Duration::from_millis(5),
+            max_conns: 256,
+        }
+    }
+}
+
+/// One admitted request, queued between a connection reader and the
+/// dispatchers.
+struct Admitted {
+    arch: String,
+    pixels: Vec<i32>,
+    ticket: u64,
+    accepted: Instant,
+    deadline: Instant,
+    /// The connection writer's in-order response slot.
+    done: Sender<ResponseFrame>,
+}
+
+/// Ingress counters (atomics; see [`IngressSnapshot`] for the exported
+/// point-in-time view).
+#[derive(Debug, Default)]
+struct IngressStats {
+    connections: AtomicU64,
+    refused_conns: AtomicU64,
+    accepted: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    responses: AtomicU64,
+    disconnects: AtomicU64,
+    bad_frames: AtomicU64,
+}
+
+/// Point-in-time ingress counters + queue gauges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IngressSnapshot {
+    /// Sockets accepted over the server's lifetime.
+    pub connections: u64,
+    /// Sockets dropped at accept because `max_conns` was reached.
+    pub refused_conns: u64,
+    /// Requests admitted into the bounded queue.
+    pub accepted: u64,
+    /// Requests shed at admission (queue full or deadline infeasible).
+    pub shed: u64,
+    /// Requests that expired while queued (caught at dispatch).
+    pub expired: u64,
+    /// Response frames written to sockets.
+    pub responses: u64,
+    /// Connections that vanished mid-flight (write failed or the
+    /// response slot was gone).
+    pub disconnects: u64,
+    /// Malformed request frames answered with a typed error.
+    pub bad_frames: u64,
+    /// Live admission-queue depth.
+    pub queue_depth: usize,
+    /// Highest queue depth ever observed (the soak bound: never above
+    /// `queue_capacity`).
+    pub queue_peak_depth: usize,
+    pub queue_capacity: usize,
+}
+
+impl std::fmt::Display for IngressSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "conns {} (refused {})  accepted {}  shed {}  expired {}  responses {}  \
+             disconnects {}  bad-frames {}  queue {}/{} (peak {})",
+            self.connections, self.refused_conns, self.accepted, self.shed, self.expired,
+            self.responses, self.disconnects, self.bad_frames, self.queue_depth,
+            self.queue_capacity, self.queue_peak_depth
+        )
+    }
+}
+
+/// Everything the acceptor, connection and dispatcher threads share.
+struct ServerShared {
+    router: Arc<Router>,
+    queue: AdmissionQueue<Admitted>,
+    cfg: ServerConfig,
+    stop: AtomicBool,
+    stats: IngressStats,
+    archs: Vec<String>,
+    /// Per-arch router metrics plus the aggregate — shed/expired are
+    /// recorded here so they surface in `RouterSnapshot`.
+    metrics: BTreeMap<String, Arc<Metrics>>,
+    agg: Arc<Metrics>,
+}
+
+impl ServerShared {
+    fn record_shed(&self, arch: &str) {
+        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = self.metrics.get(arch) {
+            m.record_shed();
+        }
+        self.agg.record_shed();
+    }
+
+    fn record_expired(&self, arch: &str) {
+        self.stats.expired.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = self.metrics.get(arch) {
+            m.record_expired();
+        }
+        self.agg.record_expired();
+    }
+
+    fn snapshot(&self) -> IngressSnapshot {
+        IngressSnapshot {
+            connections: self.stats.connections.load(Ordering::Relaxed),
+            refused_conns: self.stats.refused_conns.load(Ordering::Relaxed),
+            accepted: self.stats.accepted.load(Ordering::Relaxed),
+            shed: self.stats.shed.load(Ordering::Relaxed),
+            expired: self.stats.expired.load(Ordering::Relaxed),
+            responses: self.stats.responses.load(Ordering::Relaxed),
+            disconnects: self.stats.disconnects.load(Ordering::Relaxed),
+            bad_frames: self.stats.bad_frames.load(Ordering::Relaxed),
+            queue_depth: self.queue.depth(),
+            queue_peak_depth: self.queue.peak_depth(),
+            queue_capacity: self.queue.capacity(),
+        }
+    }
+}
+
+/// Handle to a running TCP ingress front-end.
+pub struct IngressServer {
+    addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    acceptor: Option<JoinHandle<()>>,
+    dispatchers: Vec<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl IngressServer {
+    /// Bind, spawn the acceptor and dispatcher threads, return the
+    /// handle.  The router stays owned by the caller (`Arc`); the
+    /// server only submits into it and reports ingress depth.
+    pub fn start(router: Arc<Router>, cfg: ServerConfig) -> Result<IngressServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let archs = router.archs();
+        let metrics: BTreeMap<String, Arc<Metrics>> = archs
+            .iter()
+            .filter_map(|a| router.metrics(a).map(|m| (a.clone(), m)))
+            .collect();
+        let agg = router.aggregate();
+        let queue = AdmissionQueue::new(AdmissionConfig {
+            capacity: cfg.queue_capacity,
+            dispatchers: cfg.dispatchers,
+            min_retry_after: cfg.min_retry_after,
+        });
+        let shared = Arc::new(ServerShared {
+            router,
+            queue,
+            cfg: cfg.clone(),
+            stop: AtomicBool::new(false),
+            stats: IngressStats::default(),
+            archs,
+            metrics,
+            agg,
+        });
+        let mut dispatchers = Vec::new();
+        for di in 0..cfg.dispatchers.max(1) {
+            let shared = shared.clone();
+            dispatchers.push(
+                std::thread::Builder::new()
+                    .name(format!("ingress-dispatch-{di}"))
+                    .spawn(move || dispatcher_loop(&shared))?,
+            );
+        }
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let live_conns = Arc::new(AtomicUsize::new(0));
+        let acceptor = {
+            let shared = shared.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new().name("ingress-accept".to_string()).spawn(move || {
+                accept_loop(&shared, &listener, &conns, &live_conns)
+            })?
+        };
+        Ok(IngressServer { addr, shared, acceptor: Some(acceptor), dispatchers, conns })
+    }
+
+    /// The bound address (resolves port 0 to the OS-chosen port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live ingress counters and queue gauges.
+    pub fn snapshot(&self) -> IngressSnapshot {
+        self.shared.snapshot()
+    }
+
+    /// Stop accepting, drain the admission queue (every queued request
+    /// is answered — with its result if already dispatched, with a
+    /// typed shutdown error otherwise), join every thread, and return
+    /// the final counters.  The router is left running.
+    pub fn shutdown(mut self) -> IngressSnapshot {
+        self.stop_and_join();
+        self.shared.snapshot()
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.queue.close();
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for d in self.dispatchers.drain(..) {
+            let _ = d.join();
+        }
+        let handles: Vec<JoinHandle<()>> = match self.conns.lock() {
+            Ok(mut g) => g.drain(..).collect(),
+            Err(p) => p.into_inner().drain(..).collect(),
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        self.shared.router.report_ingress(0);
+    }
+}
+
+impl Drop for IngressServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+// ------------------------------------------------------------ acceptor
+
+fn accept_loop(
+    shared: &Arc<ServerShared>,
+    listener: &TcpListener,
+    conns: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    live: &Arc<AtomicUsize>,
+) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+                if live.load(Ordering::Relaxed) >= shared.cfg.max_conns {
+                    shared.stats.refused_conns.fetch_add(1, Ordering::Relaxed);
+                    drop(stream);
+                    continue;
+                }
+                live.fetch_add(1, Ordering::Relaxed);
+                let shared = shared.clone();
+                let live = live.clone();
+                let handle = std::thread::Builder::new()
+                    .name("ingress-conn".to_string())
+                    .spawn(move || {
+                        conn_loop(&shared, stream);
+                        live.fetch_sub(1, Ordering::Relaxed);
+                    });
+                match handle {
+                    Ok(h) => {
+                        let mut g = match conns.lock() {
+                            Ok(g) => g,
+                            Err(p) => p.into_inner(),
+                        };
+                        // Reap finished connections so a long-lived
+                        // server doesn't accumulate dead JoinHandles.
+                        g.retain(|h| !h.is_finished());
+                        g.push(h);
+                    }
+                    Err(_) => {
+                        live.fetch_sub(1, Ordering::Relaxed);
+                        shared.stats.refused_conns.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+// ---------------------------------------------------------- connection
+
+/// Read one length-prefixed frame, tolerating read timeouts (the socket
+/// has a short read timeout so shutdown is observed); partial frames
+/// are accumulated across timeouts.  `Ok(None)` = clean close or stop.
+fn read_frame_cancellable(
+    stream: &mut TcpStream,
+    max: usize,
+    stop: &AtomicBool,
+) -> Result<Option<Vec<u8>>, WireError> {
+    let mut prefix = [0u8; 4];
+    let mut have = 0usize;
+    while have < 4 {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        match stream.read(&mut prefix[have..]) {
+            Ok(0) => {
+                if have == 0 {
+                    return Ok(None);
+                }
+                return Err(WireError::Truncated { need: 4, have });
+            }
+            Ok(n) => have += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > max {
+        return Err(WireError::Oversized { len, max });
+    }
+    let mut body = vec![0u8; len];
+    let mut have = 0usize;
+    while have < len {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        match stream.read(&mut body[have..]) {
+            Ok(0) => return Err(WireError::Truncated { need: len, have }),
+            Ok(n) => have += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(Some(body))
+}
+
+/// Per-connection reader: decode, admit (or shed/reject), and keep the
+/// writer's slot queue in strict ticket order.
+fn conn_loop(shared: &Arc<ServerShared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let wstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    // In-order response slots: the reader enqueues one slot per request
+    // *before* its outcome exists; the writer resolves them in order.
+    let (slot_tx, slot_rx) = mpsc::channel::<Receiver<ResponseFrame>>();
+    let writer = {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name("ingress-write".to_string())
+            .spawn(move || writer_loop(&shared, wstream, slot_rx))
+    };
+    let writer = match writer {
+        Ok(w) => w,
+        Err(_) => {
+            shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+
+    let mut ticket: u64 = 0;
+    loop {
+        let body = match read_frame_cancellable(&mut stream, MAX_REQUEST_BYTES, &shared.stop) {
+            Ok(Some(b)) => b,
+            Ok(None) => break, // clean close or server stop
+            Err(WireError::Oversized { len, max }) => {
+                // The framing itself is untrustworthy past this point:
+                // answer typed, then close.
+                ticket += 1;
+                shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                respond(
+                    &slot_tx,
+                    ResponseFrame::Error {
+                        ticket,
+                        code: ErrorCode::BadRequest,
+                        msg: format!("oversized frame: {len} bytes (max {max})"),
+                    },
+                );
+                break;
+            }
+            Err(_) => {
+                // Mid-frame EOF or a transport error: the client is gone.
+                shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        };
+        ticket += 1;
+        let req = match RequestFrame::decode(&body) {
+            Ok(r) => r,
+            Err(we) => {
+                // Frame boundaries are still intact (the length prefix
+                // was honored): reject this request typed and keep the
+                // connection.
+                shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                respond(
+                    &slot_tx,
+                    ResponseFrame::Error {
+                        ticket,
+                        code: ErrorCode::BadRequest,
+                        msg: we.to_string(),
+                    },
+                );
+                continue;
+            }
+        };
+        if !shared.archs.iter().any(|a| a == &req.arch) {
+            shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+            respond(
+                &slot_tx,
+                ResponseFrame::Error {
+                    ticket,
+                    code: ErrorCode::UnknownArch,
+                    msg: format!("no backend for arch {} (have: {:?})", req.arch, shared.archs),
+                },
+            );
+            continue;
+        }
+        let budget = if req.deadline_ms == 0 {
+            shared.cfg.default_deadline
+        } else {
+            Duration::from_millis(req.deadline_ms as u64).min(shared.cfg.max_deadline)
+        };
+        let accepted = Instant::now();
+        let (done_tx, done_rx) = mpsc::channel::<ResponseFrame>();
+        if slot_tx.send(done_rx).is_err() {
+            // Writer died (socket gone): stop reading.
+            shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+            break;
+        }
+        let item = Admitted {
+            arch: req.arch,
+            pixels: req.pixels,
+            ticket,
+            accepted,
+            deadline: accepted + budget,
+            done: done_tx,
+        };
+        match shared.queue.offer(item, budget) {
+            Offer::Admitted { depth } => {
+                shared.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                shared.router.report_ingress(depth);
+            }
+            Offer::Shed { item, reason: _reason, retry_after } => {
+                shared.record_shed(&item.arch);
+                let _ = item.done.send(ResponseFrame::Shed {
+                    ticket: item.ticket,
+                    retry_after_ms: (retry_after.as_millis() as u32).max(1),
+                });
+            }
+        }
+    }
+    // Closing the slot channel lets the writer drain outstanding
+    // responses and exit.
+    drop(slot_tx);
+    let _ = writer.join();
+}
+
+/// Push an immediately-resolved response slot (shed / typed error).
+fn respond(slot_tx: &Sender<Receiver<ResponseFrame>>, resp: ResponseFrame) {
+    let (tx, rx) = mpsc::channel();
+    let _ = tx.send(resp);
+    let _ = slot_tx.send(rx);
+}
+
+/// Per-connection writer: resolve slots in ticket order, write frames.
+/// A failed write marks the connection broken (counted once); the
+/// remaining slots still drain so dispatchers never block on a dead
+/// connection's channel.
+fn writer_loop(
+    shared: &Arc<ServerShared>,
+    mut stream: TcpStream,
+    slots: Receiver<Receiver<ResponseFrame>>,
+) {
+    let mut broken = false;
+    for slot in slots.iter() {
+        let resp = match slot.recv() {
+            Ok(r) => r,
+            // The producer vanished without answering (dispatcher
+            // panic): nothing to write for this slot.
+            Err(_) => continue,
+        };
+        if broken {
+            continue;
+        }
+        if write_frame(&mut stream, &resp.encode()).is_err() {
+            broken = true;
+            shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+        } else {
+            shared.stats.responses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------- dispatcher
+
+/// Pop admitted requests, enforce the deadline again at dequeue, bridge
+/// to the router, and resolve the connection's response slot.
+fn dispatcher_loop(shared: &Arc<ServerShared>) {
+    loop {
+        let (item, depth) = match shared.queue.pop(Duration::from_millis(50)) {
+            Pop::Closed => return,
+            Pop::Empty => continue,
+            Pop::Item { item, depth } => (item, depth),
+        };
+        shared.router.report_ingress(depth);
+        let Admitted { arch, pixels, ticket, accepted, deadline, done } = item;
+        if Instant::now() >= deadline {
+            // Expired while queued: enforced here, at dequeue, as well
+            // as estimated at admission.
+            shared.record_expired(&arch);
+            send_or_count_disconnect(shared, &done, ResponseFrame::Expired { ticket });
+            continue;
+        }
+        if shared.stop.load(Ordering::Relaxed) {
+            send_or_count_disconnect(
+                shared,
+                &done,
+                ResponseFrame::Error {
+                    ticket,
+                    code: ErrorCode::Shutdown,
+                    msg: "ingress server stopped before dispatch".to_string(),
+                },
+            );
+            continue;
+        }
+        let t0 = Instant::now();
+        let resp = match shared.router.submit(&arch, pixels) {
+            Err(e) => ResponseFrame::Error {
+                ticket,
+                code: ErrorCode::Shutdown,
+                msg: format!("{e:#}"),
+            },
+            Ok(rx) => match rx.recv() {
+                Err(_) => ResponseFrame::Error {
+                    ticket,
+                    code: ErrorCode::Shutdown,
+                    msg: "server stopped".to_string(),
+                },
+                Ok(Err(e)) => ResponseFrame::Error {
+                    ticket,
+                    code: ErrorCode::Backend,
+                    msg: format!("{e:#}"),
+                },
+                Ok(Ok(r)) => {
+                    shared.queue.record_service(t0.elapsed());
+                    ResponseFrame::Ok {
+                        ticket,
+                        latency_us: accepted.elapsed().as_micros() as u64,
+                        class: r.class as u16,
+                        logits: r.logits,
+                    }
+                }
+            },
+        };
+        send_or_count_disconnect(shared, &done, resp);
+    }
+}
+
+fn send_or_count_disconnect(
+    shared: &Arc<ServerShared>,
+    done: &Sender<ResponseFrame>,
+    resp: ResponseFrame,
+) {
+    if done.send(resp).is_err() {
+        // The connection (and its writer) are gone; completing the work
+        // for a vanished client is a counted no-op, exactly like the
+        // router-level disconnect path.
+        shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RouterConfig;
+    use crate::data::{synth_batch, IMG_ELEMS, TEST_SEED};
+    use crate::net::client::Client;
+    use crate::net::protocol::{read_frame, MAGIC, MAX_RESPONSE_BYTES, VERSION};
+    use crate::quant::{QTensor, Shape4};
+    use crate::runtime::{BackendFactory, GoldenBackend, GoldenFactory, InferenceBackend};
+
+    /// A backend that sleeps per batch and returns fixed logits — makes
+    /// overload and expiry deterministic without golden compute cost.
+    struct SlowBackend {
+        delay: Duration,
+    }
+
+    impl InferenceBackend for SlowBackend {
+        fn arch(&self) -> &str {
+            "resnet8"
+        }
+
+        fn buckets(&self) -> &[usize] {
+            &[1, 8]
+        }
+
+        fn infer_batch(&self, input: &QTensor) -> Result<QTensor> {
+            std::thread::sleep(self.delay);
+            let n = input.shape.n;
+            Ok(QTensor::from_vec(Shape4::new(n, 1, 1, 10), 0, vec![0i32; n * 10]))
+        }
+    }
+
+    struct SlowFactory {
+        delay: Duration,
+    }
+
+    impl BackendFactory for SlowFactory {
+        fn arch(&self) -> &str {
+            "resnet8"
+        }
+
+        fn create(&self) -> Result<Box<dyn InferenceBackend>> {
+            Ok(Box::new(SlowBackend { delay: self.delay }))
+        }
+    }
+
+    fn start_slow(
+        delay_ms: u64,
+        cfg: ServerConfig,
+    ) -> (Arc<Router>, IngressServer) {
+        let router = Arc::new(
+            Router::start(
+                vec![Arc::new(SlowFactory { delay: Duration::from_millis(delay_ms) })],
+                RouterConfig::default(),
+            )
+            .unwrap(),
+        );
+        let server = IngressServer::start(router.clone(), cfg).unwrap();
+        (router, server)
+    }
+
+    fn addr_of(server: &IngressServer) -> String {
+        format!("{}", server.local_addr())
+    }
+
+    #[test]
+    fn loopback_round_trip_is_bit_exact_and_in_order() {
+        let router = Arc::new(
+            Router::start(
+                vec![Arc::new(GoldenFactory::synthetic("resnet8", 7))],
+                RouterConfig::default(),
+            )
+            .unwrap(),
+        );
+        let server = IngressServer::start(router.clone(), ServerConfig::default()).unwrap();
+        let frames = 4usize;
+        let (input, _) = synth_batch(0, frames, TEST_SEED);
+        let golden = GoldenBackend::synthetic("resnet8", 7, &[frames]).unwrap();
+        let want = golden.infer_batch(&input).unwrap();
+
+        let mut client = Client::connect(&addr_of(&server)).unwrap();
+        for i in 0..frames {
+            let t = client
+                .send("resnet8", 0, &input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS])
+                .unwrap();
+            assert_eq!(t, (i + 1) as u64);
+        }
+        for i in 0..frames {
+            match client.recv().unwrap() {
+                ResponseFrame::Ok { ticket, logits, .. } => {
+                    assert_eq!(ticket, (i + 1) as u64, "responses must arrive in order");
+                    assert_eq!(
+                        logits,
+                        want.data[i * 10..(i + 1) * 10].to_vec(),
+                        "frame {i}: wire logits must be bit-exact vs golden"
+                    );
+                }
+                other => panic!("frame {i}: expected Ok, got {other:?}"),
+            }
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.accepted, frames as u64);
+        assert_eq!(snap.responses, frames as u64);
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.disconnects, 0);
+        // Shed/expired counters surface through the router snapshot too.
+        let rs = router.snapshot();
+        assert_eq!(rs.total.shed, 0);
+        assert_eq!(rs.total.requests, frames as u64);
+    }
+
+    #[test]
+    fn overload_sheds_with_retry_hint_and_bounded_queue() {
+        let (router, server) = start_slow(
+            3,
+            ServerConfig {
+                queue_capacity: 4,
+                dispatchers: 1,
+                min_retry_after: Duration::from_millis(5),
+                ..Default::default()
+            },
+        );
+        let frames = 64usize;
+        let pixels = vec![0i32; IMG_ELEMS];
+        let mut client = Client::connect(&addr_of(&server)).unwrap();
+        for _ in 0..frames {
+            client.send("resnet8", 60_000, &pixels).unwrap();
+        }
+        let (mut oks, mut sheds) = (0usize, 0usize);
+        for i in 0..frames {
+            match client.recv().unwrap() {
+                ResponseFrame::Ok { ticket, .. } => {
+                    assert_eq!(ticket, (i + 1) as u64);
+                    oks += 1;
+                }
+                ResponseFrame::Shed { ticket, retry_after_ms } => {
+                    assert_eq!(ticket, (i + 1) as u64);
+                    assert!(retry_after_ms >= 1, "shed must carry a retry-after hint");
+                    sheds += 1;
+                }
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+        assert_eq!(oks + sheds, frames, "every request is answered exactly once");
+        assert!(sheds > 0, "a 16x overcommit against a 4-deep queue must shed");
+        assert!(oks > 0, "the queue still serves what it admitted");
+        let snap = server.shutdown();
+        assert!(
+            snap.queue_peak_depth <= 4,
+            "admission queue exceeded its cap: {}",
+            snap.queue_peak_depth
+        );
+        assert_eq!(snap.shed as usize, sheds);
+        // The shed count flows into the router's serving metrics.
+        let rs = router.snapshot();
+        assert_eq!(rs.total.shed as usize, sheds);
+        assert!(rs.total.shed_rate > 0.0);
+    }
+
+    #[test]
+    fn queued_requests_expire_at_dequeue() {
+        let (router, server) = start_slow(
+            30,
+            ServerConfig { queue_capacity: 16, dispatchers: 1, ..Default::default() },
+        );
+        let pixels = vec![0i32; IMG_ELEMS];
+        let mut client = Client::connect(&addr_of(&server)).unwrap();
+        // One long-deadline request occupies the single dispatcher for
+        // ~30 ms; three 5 ms-deadline requests queue behind it and must
+        // be expired at dispatch (no service history yet, so admission
+        // cannot predict the wait).
+        client.send("resnet8", 1_000, &pixels).unwrap();
+        for _ in 0..3 {
+            client.send("resnet8", 5, &pixels).unwrap();
+        }
+        assert!(matches!(client.recv().unwrap(), ResponseFrame::Ok { ticket: 1, .. }));
+        for i in 0..3 {
+            match client.recv().unwrap() {
+                ResponseFrame::Expired { ticket } => assert_eq!(ticket, (i + 2) as u64),
+                other => panic!("expected Expired, got {other:?}"),
+            }
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.expired, 3);
+        let rs = router.snapshot();
+        assert_eq!(rs.total.deadline_expired, 3);
+        // Only the executed request reached the router.
+        assert_eq!(rs.total.requests, 1);
+    }
+
+    #[test]
+    fn malformed_frames_get_typed_errors_and_do_not_kill_the_server() {
+        use std::io::Write;
+        let (_router, server) = start_slow(0, ServerConfig::default());
+        let addr = addr_of(&server);
+
+        // Bad magic: typed error, connection survives, a valid request
+        // on the same socket still works.
+        {
+            let mut raw = TcpStream::connect(&addr).unwrap();
+            let mut bad = RequestFrame {
+                arch: "resnet8".into(),
+                deadline_ms: 0,
+                pixels: vec![0; IMG_ELEMS],
+            }
+            .encode();
+            bad[0] ^= 0xFF;
+            write_frame(&mut raw, &bad).unwrap();
+            let body = read_frame(&mut raw, MAX_RESPONSE_BYTES).unwrap().unwrap();
+            match ResponseFrame::decode(&body).unwrap() {
+                ResponseFrame::Error { ticket: 1, code: ErrorCode::BadRequest, msg } => {
+                    assert!(msg.contains("magic"), "{msg}");
+                }
+                other => panic!("expected BadRequest error, got {other:?}"),
+            }
+            let good = RequestFrame {
+                arch: "resnet8".into(),
+                deadline_ms: 0,
+                pixels: vec![0; IMG_ELEMS],
+            }
+            .encode();
+            write_frame(&mut raw, &good).unwrap();
+            let body = read_frame(&mut raw, MAX_RESPONSE_BYTES).unwrap().unwrap();
+            assert!(matches!(
+                ResponseFrame::decode(&body).unwrap(),
+                ResponseFrame::Ok { ticket: 2, .. }
+            ));
+        }
+
+        // Unknown arch: typed error.
+        {
+            let mut raw = TcpStream::connect(&addr).unwrap();
+            let req = RequestFrame {
+                arch: "resnet99".into(),
+                deadline_ms: 0,
+                pixels: vec![0; IMG_ELEMS],
+            };
+            write_frame(&mut raw, &req.encode()).unwrap();
+            let body = read_frame(&mut raw, MAX_RESPONSE_BYTES).unwrap().unwrap();
+            assert!(matches!(
+                ResponseFrame::decode(&body).unwrap(),
+                ResponseFrame::Error { code: ErrorCode::UnknownArch, .. }
+            ));
+        }
+
+        // Oversized length prefix: typed error, then the server closes
+        // this connection (framing is no longer trustworthy)...
+        {
+            let mut raw = TcpStream::connect(&addr).unwrap();
+            raw.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+            raw.flush().unwrap();
+            let body = read_frame(&mut raw, MAX_RESPONSE_BYTES).unwrap().unwrap();
+            assert!(matches!(
+                ResponseFrame::decode(&body).unwrap(),
+                ResponseFrame::Error { code: ErrorCode::BadRequest, .. }
+            ));
+            assert!(read_frame(&mut raw, MAX_RESPONSE_BYTES).unwrap().is_none());
+        }
+
+        // ...and a fresh connection is still served: no panic wedged
+        // the acceptor or dispatchers.
+        let mut client = Client::connect(&addr).unwrap();
+        let resp = client.request("resnet8", 0, &vec![0i32; IMG_ELEMS]).unwrap();
+        assert!(matches!(resp, ResponseFrame::Ok { .. }));
+        let snap = server.shutdown();
+        assert_eq!(snap.bad_frames, 3);
+        // Sanity on the wire constants used above.
+        assert_eq!(MAGIC.to_le_bytes()[0], b'S');
+        assert_eq!(VERSION, 1);
+    }
+
+    #[test]
+    fn shutdown_answers_everything_already_queued() {
+        let (_router, server) = start_slow(
+            20,
+            ServerConfig { queue_capacity: 16, dispatchers: 1, ..Default::default() },
+        );
+        let pixels = vec![0i32; IMG_ELEMS];
+        let mut client = Client::connect(&addr_of(&server)).unwrap();
+        let frames = 6usize;
+        for _ in 0..frames {
+            client.send("resnet8", 60_000, &pixels).unwrap();
+        }
+        // Give the first request a moment to reach the dispatcher, then
+        // shut down with the rest still queued.
+        std::thread::sleep(Duration::from_millis(10));
+        let snap = server.shutdown();
+        // Every admitted request was answered: as Ok (already
+        // dispatched), or with the typed shutdown error.
+        let mut got = 0usize;
+        loop {
+            match client.recv() {
+                Ok(resp) => {
+                    got += 1;
+                    assert!(matches!(
+                        resp,
+                        ResponseFrame::Ok { .. }
+                            | ResponseFrame::Error { code: ErrorCode::Shutdown, .. }
+                            | ResponseFrame::Shed { .. }
+                    ));
+                }
+                Err(WireError::Closed) => break,
+                Err(e) => panic!("client read failed: {e}"),
+            }
+        }
+        assert_eq!(got, frames, "shutdown must answer every request, got {got}");
+        assert_eq!(snap.responses, frames as u64);
+    }
+}

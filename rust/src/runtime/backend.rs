@@ -72,10 +72,13 @@ pub trait InferenceBackend {
         None
     }
     /// Serving-layer load hint: the router reports its per-arch queue
-    /// depth here on every claim-loop pass.  Elastic streaming pools
-    /// fold the hint into their replica-scaling signal (so the pool can
-    /// grow *before* its own queue backs up); everything else ignores
-    /// it.  Must be cheap — it is called under the router's queue lock.
+    /// depth — plus the network-ingress admission-queue depth when a
+    /// TCP front-end ([`crate::net`]) is running — here on every
+    /// claim-loop pass.  Elastic streaming pools fold the hint into
+    /// their replica-scaling signal (so the pool can grow *before* its
+    /// own queue backs up, even while the backlog is still buffered at
+    /// the socket tier); everything else ignores it.  Must be cheap —
+    /// it is called under the router's queue lock.
     fn load_hint(&self, _queued: usize) {}
     /// Live pipeline-replica count of a streaming pool backend (exported
     /// to the serving metrics as a gauge).  `None` for backends without

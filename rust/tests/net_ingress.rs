@@ -1,0 +1,228 @@
+//! Network ingress integration tests (the PR-6 tentpole, driven through
+//! the public crate surface): the loopback round trip via the shared
+//! [`resnet_hls::net::drive`] traffic generator, the bounded-queue
+//! overload soak (sheds with retry hints, queue peak never above its
+//! cap, every request answered exactly once and in order), and the
+//! elastic acceptance criterion — socket backlog reported through
+//! `Router::report_ingress` must grow a stream pool's replica band
+//! above `min_replicas`, observable in the router's replica gauges.
+//!
+//! Deterministic failure-path coverage (expiry at dequeue, malformed
+//! frames, shutdown draining) lives next to the server in
+//! `src/net/server.rs`; these tests exercise the same binary protocol
+//! end to end over real sockets with the same driver the example
+//! client, the `client` subcommand and the soak bench use.
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use resnet_hls::coordinator::{Router, RouterConfig};
+use resnet_hls::net::{drive, DriveConfig, IngressServer, ServerConfig};
+use resnet_hls::quant::{QTensor, Shape4};
+use resnet_hls::runtime::{BackendFactory, GoldenFactory, InferenceBackend, StreamFactory};
+use resnet_hls::stream::{ElasticConfig, StreamConfig};
+
+/// Run `f` on a helper thread and fail LOUDLY if it exceeds `secs` — an
+/// ingress-shutdown regression must hang this watchdog, not CI silently.
+fn with_watchdog<F: FnOnce() + Send + 'static>(secs: u64, what: &str, f: F) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => h.join().unwrap(),
+        Err(RecvTimeoutError::Disconnected) => h.join().unwrap(), // propagate the panic
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("{what}: exceeded the {secs}s watchdog (shutdown/drain regression)")
+        }
+    }
+}
+
+/// A backend that sleeps per batch and returns fixed logits — makes the
+/// overload soak deterministic without golden compute cost.
+struct SlowBackend {
+    delay: Duration,
+}
+
+impl InferenceBackend for SlowBackend {
+    fn arch(&self) -> &str {
+        "resnet8"
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &[1, 8]
+    }
+
+    fn infer_batch(&self, input: &QTensor) -> Result<QTensor> {
+        std::thread::sleep(self.delay);
+        let n = input.shape.n;
+        Ok(QTensor::from_vec(Shape4::new(n, 1, 1, 10), 0, vec![0i32; n * 10]))
+    }
+}
+
+struct SlowFactory {
+    delay: Duration,
+}
+
+impl BackendFactory for SlowFactory {
+    fn arch(&self) -> &str {
+        "resnet8"
+    }
+
+    fn create(&self) -> Result<Box<dyn InferenceBackend>> {
+        Ok(Box::new(SlowBackend { delay: self.delay }))
+    }
+}
+
+#[test]
+fn drive_accounts_every_frame_against_a_golden_server() {
+    with_watchdog(120, "golden loopback drive", || {
+        let router = Arc::new(
+            Router::start(
+                vec![Arc::new(GoldenFactory::synthetic("resnet8", 7))],
+                RouterConfig::default(),
+            )
+            .unwrap(),
+        );
+        let server = IngressServer::start(router.clone(), ServerConfig::default()).unwrap();
+
+        let report = drive(&DriveConfig {
+            addr: format!("{}", server.local_addr()),
+            frames: 32,
+            window: 8,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.accounted(), "accounting failed: {report}");
+        assert_eq!(report.sent, 32);
+        // An 8-deep pipeline window can never fill the 64-deep default
+        // admission queue: nothing sheds, everything serves.
+        assert_eq!(report.oks, 32, "unexpected non-OK responses: {report}");
+        assert!(report.p50_us > 0 && report.p99_us >= report.p50_us);
+
+        let snap = server.shutdown();
+        assert_eq!(snap.accepted, 32);
+        assert_eq!(snap.responses, 32);
+        assert_eq!(snap.shed, 0);
+        let rs = router.snapshot();
+        assert_eq!(rs.total.requests, 32);
+        assert_eq!(rs.total.shed, 0);
+    });
+}
+
+#[test]
+fn overload_soak_sheds_with_hints_and_never_exceeds_the_queue_cap() {
+    with_watchdog(120, "overload soak", || {
+        let deadline_ms = 60_000u32;
+        let router = Arc::new(
+            Router::start(
+                vec![Arc::new(SlowFactory { delay: Duration::from_millis(2) })],
+                RouterConfig::default(),
+            )
+            .unwrap(),
+        );
+        let server = IngressServer::start(
+            router.clone(),
+            ServerConfig { queue_capacity: 8, dispatchers: 1, ..Default::default() },
+        )
+        .unwrap();
+
+        // Open loop with a 64-deep window against an 8-deep queue and a
+        // ~2ms service time: a sustained (way past 2x) overload.  The
+        // bounded queue must shed the excess with retry hints instead of
+        // buffering it, and what it admits must still serve.
+        let report = drive(&DriveConfig {
+            addr: format!("{}", server.local_addr()),
+            frames: 128,
+            window: 64,
+            deadline_ms,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.accounted(), "accounting failed: {report}");
+        assert!(report.sheds > 0, "overload must shed: {report}");
+        assert!(report.oks > 0, "admitted requests must still serve: {report}");
+        assert!(
+            report.p99_us < u64::from(deadline_ms) * 1000,
+            "client-observed p99 {}us blew the {deadline_ms}ms deadline",
+            report.p99_us
+        );
+
+        let snap = server.shutdown();
+        assert!(
+            snap.queue_peak_depth <= 8,
+            "admission queue exceeded its cap: {}",
+            snap.queue_peak_depth
+        );
+        assert_eq!(snap.shed as usize, report.sheds);
+        let rs = router.snapshot();
+        assert_eq!(rs.total.shed as usize, report.sheds);
+        assert!(rs.total.shed_rate > 0.0, "shed rate must surface in the snapshot");
+        assert!(
+            format!("{}", rs.total).contains("shed"),
+            "snapshot text must mention shedding: {}",
+            rs.total
+        );
+    });
+}
+
+#[test]
+fn ingress_backlog_grows_elastic_stream_replicas_above_min() {
+    // The PR-6 acceptance criterion for the elastic loop: requests
+    // buffered at the *socket tier* (the admission queue) must reach the
+    // stream pool's scaling signal via `Router::report_ingress` +
+    // `InferenceBackend::load_hint`, growing the pool above its
+    // `min_replicas` floor even though the router's own queue stays
+    // shallow (dispatchers submit one request at a time).
+    with_watchdog(180, "elastic ingress growth", || {
+        let elastic = ElasticConfig {
+            min_replicas: 1,
+            max_replicas: 2,
+            high_water: Some(4),
+            sample_interval: Duration::from_millis(2),
+            scale_up_samples: 2,
+            // Hold the grown pool so the post-drive snapshot can't race
+            // an idle drain (peak gauges would survive one anyway).
+            scale_down_samples: 10_000,
+        };
+        let factory = StreamFactory::synthetic("resnet8", 7)
+            .with_config(StreamConfig { elastic: Some(elastic), ..Default::default() });
+        let router =
+            Arc::new(Router::start(vec![Arc::new(factory)], RouterConfig::default()).unwrap());
+        let server = IngressServer::start(
+            router.clone(),
+            ServerConfig { queue_capacity: 32, dispatchers: 2, ..Default::default() },
+        )
+        .unwrap();
+
+        // A 32-deep open-loop window keeps the admission queue tens of
+        // frames deep for the whole burst — far above the high-water
+        // mark of 4 for many 2ms controller samples.
+        let report = drive(&DriveConfig {
+            addr: format!("{}", server.local_addr()),
+            frames: 64,
+            window: 32,
+            deadline_ms: 60_000,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.accounted(), "accounting failed: {report}");
+        assert!(report.oks > 0, "the pool must serve under the burst: {report}");
+
+        let rs = router.snapshot();
+        let m = rs.per_arch.get("resnet8").expect("resnet8 metrics");
+        assert!(
+            m.stream_peak_replicas >= 2,
+            "socket backlog never grew the pool above min_replicas=1 \
+             (peak gauge {}, live {})",
+            m.stream_peak_replicas,
+            m.stream_replicas
+        );
+
+        let snap = server.shutdown();
+        assert!(snap.accepted > 0);
+    });
+}
