@@ -1,0 +1,297 @@
+//! Deadlock-freedom: worst-case token accounting over the planned
+//! FIFO/skip/merge graph.
+//!
+//! The streaming executor's skip paths are the only edges whose depth is
+//! a *liveness* requirement rather than a throughput knob.  In both
+//! dataflow forms the skip producer must buffer a bounded skew before
+//! its consumer pops the first token:
+//!
+//! * **fused skip** (`InputRole::SkipInit`, optimized graph): the
+//!   consuming conv initializes its accumulator from the skip stream,
+//!   but cannot pop until its own window buffer has filled — the
+//!   producer must park the consumer's full `ow_par = 1` window span,
+//!   Eq. 22 (`hls::window::buffer_size(k, k, iw, ich, 1)`);
+//! * **naive skip** (explicit `Add` node, paper Fig. 14): the add pops
+//!   element `k` only after the two-conv branch delivers element `k`,
+//!   which trails the tee'd producer by the branch's receptive field —
+//!   Eq. 21 (`hls::window::skip_buffer_naive`).
+//!
+//! A declared capacity below the bound means the blocking producer-side
+//! tee wedges with certainty once the skew exceeds the FIFO — the
+//! Fig. 14 deadlock.  Because `plan_pipeline` sizes these FIFOs from
+//! `AcceleratorConfig` (optionally overridden by
+//! `StreamConfig::skip_capacity_override`), the accounting here mirrors
+//! that sizing exactly and re-derives each bound from the graph, so a
+//! planner bug cannot hide behind its own numbers (a planner/analyzer
+//! disagreement is itself reported as a warning).
+
+use anyhow::Result;
+
+use crate::graph::{infer_shapes, Graph, InputRole, Op};
+use crate::hls::config::AcceleratorConfig;
+use crate::hls::window::{buffer_size, skip_buffer_naive};
+use crate::stream::StreamConfig;
+
+use super::{Diagnostic, Severity};
+
+/// The Fig. 14 deadlock message for an undersized skip edge.
+fn undersized(
+    subject: &str,
+    declared: usize,
+    required: usize,
+    law: &str,
+) -> Diagnostic {
+    Diagnostic::new(
+        Severity::Error,
+        "fifo.undersized",
+        subject,
+        format!(
+            "skip FIFO holds {declared} elems but the {law} token-accounting \
+             bound requires {required}: the blocking producer-side tee wedges \
+             once the skew fills the FIFO (paper Fig. 14 deadlock)"
+        ),
+    )
+    .with_values(declared as i64, required as i64)
+    .with_min_safe_depth(required)
+}
+
+/// A planner/analyzer disagreement on a skip depth (either direction).
+fn mismatch(subject: &str, planned: usize, required: usize, law: &str) -> Diagnostic {
+    Diagnostic::new(
+        Severity::Warning,
+        "fifo.config-mismatch",
+        subject,
+        format!(
+            "planner sized this skip FIFO at {planned} elems but the {law} \
+             bound re-derived from the graph is {required}"
+        ),
+    )
+    .with_values(planned as i64, required as i64)
+}
+
+fn approved(subject: &str, declared: usize, required: usize, law: &str) -> Diagnostic {
+    Diagnostic::new(
+        Severity::Info,
+        "fifo.ok",
+        subject,
+        format!("depth {declared} meets the {law} bound {required}"),
+    )
+    .with_values(declared as i64, required as i64)
+}
+
+/// Verify every skip edge against its Eq. 21/22 bound and every planned
+/// stream spec against zero-capacity degeneracy.
+pub fn check(
+    g: &Graph,
+    cfg: &StreamConfig,
+    acfg: &AcceleratorConfig,
+) -> Result<Vec<Diagnostic>> {
+    let shapes = infer_shapes(g).map_err(anyhow::Error::new)?;
+    let mut out = Vec::new();
+
+    for n in g.live() {
+        match &n.op {
+            // Fused skip: Eq. 22 — the consumer's own ow_par=1 window span.
+            Op::Conv(a) => {
+                if !n.inputs.iter().any(|(_, r)| *r == InputRole::SkipInit) {
+                    continue;
+                }
+                let subject = format!("{}.skip", n.name);
+                let in_shape = match n.inputs.first().and_then(|(e, _)| shapes.get(e)) {
+                    Some(s) => *s,
+                    None => {
+                        out.push(Diagnostic::new(
+                            Severity::Error,
+                            "fifo.unshaped",
+                            &subject,
+                            "the consuming conv's data input has no inferred shape",
+                        ));
+                        continue;
+                    }
+                };
+                let required = match buffer_size(a.k, a.k, in_shape.w, a.cin, 1) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        out.push(Diagnostic::new(
+                            Severity::Error,
+                            "fifo.window",
+                            &subject,
+                            format!("the Eq. 22 bound cannot be derived: {e}"),
+                        ));
+                        continue;
+                    }
+                };
+                let planned = acfg
+                    .convs
+                    .get(&n.id)
+                    .and_then(|lc| lc.skip_in.as_ref())
+                    .map(|s| s.capacity());
+                let Some(planned) = planned else {
+                    out.push(Diagnostic::new(
+                        Severity::Error,
+                        "fifo.config-missing",
+                        &subject,
+                        "the accelerator configuration lost this conv's skip stream",
+                    ));
+                    continue;
+                };
+                if planned != required {
+                    out.push(mismatch(&subject, planned, required, "Eq. 22"));
+                }
+                let declared = cfg.skip_capacity_override.unwrap_or(planned);
+                if declared < required {
+                    out.push(undersized(&subject, declared, required, "Eq. 22"));
+                } else {
+                    out.push(approved(&subject, declared, required, "Eq. 22"));
+                }
+            }
+            // Naive skip: Eq. 21 — the two-conv branch's receptive field.
+            Op::Add { .. } => {
+                let subject = format!("{}.skip", n.name);
+                let planned = acfg.adds.get(&n.id).map(|a| a.skip_fifo);
+                let Some(planned) = planned else {
+                    out.push(Diagnostic::new(
+                        Severity::Error,
+                        "fifo.config-missing",
+                        &subject,
+                        "the accelerator configuration has no Eq. 21 sizing for this add",
+                    ));
+                    continue;
+                };
+                // Re-derive Eq. 21 from the conv pair on the long branch,
+                // the same walk `hls::config::configure` performs.
+                let derived = (|| {
+                    let conv1 = g.nodes.get(n.inputs.first()?.0.node)?;
+                    let Op::Conv(a1) = &conv1.op else { return None };
+                    let conv0 = g.nodes.get(conv1.inputs.first()?.0.node)?;
+                    let Op::Conv(a0) = &conv0.op else { return None };
+                    let c0_in = shapes.get(&conv0.inputs.first()?.0)?;
+                    Some(skip_buffer_naive(a0.k, a0.k, c0_in.w, c0_in.c, a1.k, a1.k))
+                })();
+                let required = match derived {
+                    Some(r) => {
+                        if planned != r {
+                            out.push(mismatch(&subject, planned, r, "Eq. 21"));
+                        }
+                        r
+                    }
+                    None => {
+                        out.push(Diagnostic::new(
+                            Severity::Warning,
+                            "fifo.topology",
+                            &subject,
+                            "the Eq. 21 bound cannot be re-derived (the add's long \
+                             branch is not a two-conv chain); trusting the planner's \
+                             sizing",
+                        ));
+                        planned
+                    }
+                };
+                let declared = cfg.skip_capacity_override.unwrap_or(planned);
+                if declared < required {
+                    out.push(undersized(&subject, declared, required, "Eq. 21"));
+                } else {
+                    out.push(approved(&subject, declared, required, "Eq. 21"));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Degenerate stream specs: a zero-capacity FIFO can never admit a
+    // token, so the first push wedges regardless of the topology.  This
+    // only arises from hostile inputs (e.g. an imported QONNX conv with
+    // zero output channels), never from the stock architectures.
+    for lc in acfg.convs.values() {
+        for (what, cap) in [
+            ("out", lc.out_stream.capacity()),
+            ("param", lc.param_stream.capacity()),
+        ] {
+            if cap == 0 {
+                out.push(Diagnostic::new(
+                    Severity::Error,
+                    "fifo.zero-capacity",
+                    format!("{}.{what}", lc.name),
+                    "planned stream has zero capacity; the first push can never \
+                     complete",
+                ));
+            }
+        }
+        if let Some(m) = &lc.merged_ds {
+            if m.out_stream.capacity() == 0 {
+                out.push(Diagnostic::new(
+                    Severity::Error,
+                    "fifo.zero-capacity",
+                    format!("{}.out", m.name),
+                    "planned stream has zero capacity; the first push can never \
+                     complete",
+                ));
+            }
+        }
+    }
+
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::window::{skip_buffer_naive, skip_buffer_optimized};
+    use crate::models::{arch_by_name, build_optimized_graph, build_unoptimized_graph, default_exps};
+    use crate::stream::{planned_config, StreamConfig};
+
+    fn naive_setup() -> (Graph, AcceleratorConfig, StreamConfig) {
+        let arch = arch_by_name("resnet8").unwrap();
+        let (act, w) = default_exps(&arch);
+        let g = build_unoptimized_graph(&arch, &act, &w);
+        let cfg = StreamConfig { naive_add: true, ..StreamConfig::default() };
+        let acfg = planned_config("resnet8", &g, &cfg).unwrap();
+        (g, acfg, cfg)
+    }
+
+    #[test]
+    fn stock_configs_have_no_errors() {
+        for name in ["resnet8", "resnet20"] {
+            let arch = arch_by_name(name).unwrap();
+            let (act, w) = default_exps(&arch);
+            let g = build_optimized_graph(&arch, &act, &w);
+            let cfg = StreamConfig::default();
+            let acfg = planned_config(name, &g, &cfg).unwrap();
+            let diags = check(&g, &cfg, &acfg).unwrap();
+            assert!(
+                diags.iter().all(|d| d.severity != Severity::Error),
+                "{name}: {diags:?}"
+            );
+            // Every fused skip is individually verified.
+            assert!(diags.iter().any(|d| d.code == "fifo.ok"), "{name}");
+        }
+    }
+
+    #[test]
+    fn fig14_override_is_flagged_with_edge_and_min_depth() {
+        // The paper's Fig. 14 experiment: Eq. 22-sized skip FIFOs on the
+        // naive dataflow.  Statically rejected, naming the first block's
+        // edge with the exact Eq. 21 minimum safe depth.
+        let (g, acfg, mut cfg) = naive_setup();
+        cfg.skip_capacity_override = Some(skip_buffer_optimized(3, 3, 32, 16));
+        let diags = check(&g, &cfg, &acfg).unwrap();
+        let d = diags
+            .iter()
+            .find(|d| d.code == "fifo.undersized" && d.subject == "s0b0_add.skip")
+            .expect("undersized diagnostic for the first block");
+        assert_eq!(d.min_safe_depth, Some(skip_buffer_naive(3, 3, 32, 16, 3, 3)));
+        assert_eq!(d.measured, Some(skip_buffer_optimized(3, 3, 32, 16) as i64));
+    }
+
+    #[test]
+    fn naive_eq21_depths_are_approved() {
+        let (g, acfg, cfg) = naive_setup();
+        let diags = check(&g, &cfg, &acfg).unwrap();
+        assert!(diags.iter().all(|d| d.severity != Severity::Error), "{diags:?}");
+        assert_eq!(
+            diags.iter().filter(|d| d.code == "fifo.ok").count(),
+            3,
+            "one verified skip per residual block"
+        );
+    }
+}

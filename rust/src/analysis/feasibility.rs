@@ -1,0 +1,220 @@
+//! Window/shape feasibility: re-derive the Eq. 16/17 slice spans from the
+//! graph and cross-check the planner's `hls::window::slice_plan` output.
+//!
+//! The planner (`hls::config::configure`) and the executor
+//! (`stream::stage`/`stream::line_buffer`) both consume `LayerConfig`'s
+//! window geometry; if the recorded plan ever drifted from what the graph
+//! implies (a stale config, a hand-edited import, a planner regression),
+//! the executor would build a window buffer whose slice spans disagree
+//! with the stream distances actually arriving — producing silent wrong
+//! answers or stalls rather than a typed error.  This pass recomputes
+//! every span from first principles and reports any disagreement before a
+//! thread spawns.
+
+use anyhow::Result;
+
+use crate::graph::{infer_shapes, Graph, Op};
+use crate::hls::config::AcceleratorConfig;
+use crate::hls::window::{buffer_size, slice_plan};
+
+use super::{Diagnostic, Severity};
+
+/// Cross-check every planned conv's window geometry against the graph.
+pub fn check(g: &Graph, acfg: &AcceleratorConfig) -> Result<Vec<Diagnostic>> {
+    let shapes = infer_shapes(g).map_err(anyhow::Error::new)?;
+    let mut out = Vec::new();
+
+    for lc in acfg.convs.values() {
+        let subject = format!("{}.window", lc.name);
+
+        // The config must still point at a live conv of the same geometry.
+        let node = g.nodes.get(lc.node);
+        let conv = match node.map(|n| (&n.op, n)) {
+            Some((Op::Conv(a), n)) => Some((a, n)),
+            _ => None,
+        };
+        let Some((attrs, node)) = conv else {
+            out.push(Diagnostic::new(
+                Severity::Error,
+                "window.node-missing",
+                &subject,
+                "the accelerator configuration references a node that is not \
+                 a live conv in the graph",
+            ));
+            continue;
+        };
+        let in_shape = node.inputs.first().and_then(|(e, _)| shapes.get(e));
+        let Some(in_shape) = in_shape else {
+            out.push(Diagnostic::new(
+                Severity::Error,
+                "window.unshaped",
+                &subject,
+                "the conv's data input has no inferred shape",
+            ));
+            continue;
+        };
+        if (lc.ih, lc.iw, lc.ich) != (in_shape.h, in_shape.w, in_shape.c)
+            || lc.k != attrs.k
+        {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "window.shape-mismatch",
+                    &subject,
+                    format!(
+                        "config records input {}x{}x{} (k={}) but the graph \
+                         implies {}x{}x{} (k={})",
+                        lc.ih, lc.iw, lc.ich, lc.k,
+                        in_shape.h, in_shape.w, in_shape.c, attrs.k
+                    ),
+                )
+                .with_values(lc.iw as i64, in_shape.w as i64),
+            );
+            continue;
+        }
+
+        // Re-derive Eq. 16/17 from the (now-validated) geometry.
+        let derived = slice_plan(lc.k, lc.k, lc.iw, lc.ich, lc.ow_par)
+            .and_then(|p| buffer_size(lc.k, lc.k, lc.iw, lc.ich, lc.ow_par).map(|b| (p, b)));
+        let (plan, cap) = match derived {
+            Ok(pb) => pb,
+            Err(e) => {
+                out.push(Diagnostic::new(
+                    Severity::Error,
+                    "window.degenerate",
+                    &subject,
+                    format!("the Eq. 16/17 span cannot be derived: {e}"),
+                ));
+                continue;
+            }
+        };
+        if lc.window != plan {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "window.plan-mismatch",
+                    &subject,
+                    format!(
+                        "planned slice spans {:?} (stride {}) disagree with the \
+                         Eq. 16/17 derivation {:?} (stride {})",
+                        lc.window.sizes, lc.window.forward_stride,
+                        plan.sizes, plan.forward_stride
+                    ),
+                )
+                .with_values(lc.window.total() as i64, plan.total() as i64),
+            );
+            continue;
+        }
+        if lc.window_capacity != cap {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "window.capacity-mismatch",
+                    &subject,
+                    format!(
+                        "planned window capacity {} disagrees with the Eq. 16/17 \
+                         buffer size {cap}",
+                        lc.window_capacity
+                    ),
+                )
+                .with_values(lc.window_capacity as i64, cap as i64),
+            );
+            continue;
+        }
+        // Eq. 16/17 internal invariant: slice spans sum to the buffer size
+        // minus the in-flight window span held by the tasks themselves.
+        if plan.total() > cap {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "window.invariant",
+                    &subject,
+                    format!(
+                        "slice spans sum to {} which exceeds the Eq. 16/17 \
+                         buffer size {cap}",
+                        plan.total()
+                    ),
+                )
+                .with_values(plan.total() as i64, cap as i64),
+            );
+            continue;
+        }
+        out.push(
+            Diagnostic::new(
+                Severity::Info,
+                "window.ok",
+                &subject,
+                format!(
+                    "{} slices spanning {} of {} elems match the Eq. 16/17 \
+                     derivation (ow_par {})",
+                    plan.slices(), plan.total(), cap, lc.ow_par
+                ),
+            )
+            .with_values(plan.total() as i64, cap as i64),
+        );
+    }
+
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{arch_by_name, build_optimized_graph, default_exps};
+    use crate::stream::{planned_config, StreamConfig};
+
+    fn setup(name: &str) -> (Graph, AcceleratorConfig) {
+        let arch = arch_by_name(name).unwrap();
+        let (act, w) = default_exps(&arch);
+        let g = build_optimized_graph(&arch, &act, &w);
+        let acfg = planned_config(name, &g, &StreamConfig::default()).unwrap();
+        (g, acfg)
+    }
+
+    #[test]
+    fn planner_output_is_feasible_for_stock_archs() {
+        for name in ["resnet8", "resnet20"] {
+            let (g, acfg) = setup(name);
+            let diags = check(&g, &acfg).unwrap();
+            assert!(
+                diags.iter().all(|d| d.severity != Severity::Error),
+                "{name}: {diags:?}"
+            );
+            assert_eq!(
+                diags.iter().filter(|d| d.code == "window.ok").count(),
+                acfg.convs.len(),
+                "{name}: one verified window per conv"
+            );
+        }
+    }
+
+    #[test]
+    fn tampered_window_capacity_is_flagged() {
+        let (g, mut acfg) = setup("resnet8");
+        let id = *acfg.convs.keys().next().unwrap();
+        acfg.convs.get_mut(&id).unwrap().window_capacity += 1;
+        let diags = check(&g, &acfg).unwrap();
+        assert!(diags.iter().any(|d| d.code == "window.capacity-mismatch"));
+    }
+
+    #[test]
+    fn tampered_slice_plan_is_flagged() {
+        let (g, mut acfg) = setup("resnet8");
+        let id = *acfg.convs.keys().next().unwrap();
+        let lc = acfg.convs.get_mut(&id).unwrap();
+        if let Some(s) = lc.window.sizes.first_mut() {
+            *s += 1;
+        }
+        let diags = check(&g, &acfg).unwrap();
+        assert!(diags.iter().any(|d| d.code == "window.plan-mismatch"));
+    }
+
+    #[test]
+    fn stale_node_reference_is_flagged() {
+        let (g, mut acfg) = setup("resnet8");
+        let id = *acfg.convs.keys().next().unwrap();
+        acfg.convs.get_mut(&id).unwrap().node = usize::MAX;
+        let diags = check(&g, &acfg).unwrap();
+        assert!(diags.iter().any(|d| d.code == "window.node-missing"));
+    }
+}

@@ -1,0 +1,349 @@
+//! Static pipeline verification: prove a planned pipeline safe **before
+//! any thread spawns**.
+//!
+//! The paper's central hazard is structural, not numeric: an undersized
+//! skip FIFO deadlocks the free-running dataflow (Fig. 14).  Until now
+//! the repo discovered that at *runtime*, as a typed
+//! [`StreamError::Stalled`](crate::stream::StreamError) after the stage
+//! threads were already spinning — yet Eqs. 16/17/21/22 contain
+//! everything needed to prove safety from the plan alone.  This module
+//! is that proof, split into three passes:
+//!
+//! * [`deadlock`] — worst-case token accounting over the blueprint's
+//!   FIFO/skip/merge graph: every declared skip depth must meet its
+//!   Eq. 21 (naive receptive-field) or Eq. 22 (fused window-span) lower
+//!   bound.  An undersized edge is reported by name together with the
+//!   minimum safe depth, turning the Fig. 14 deadlock into a *static*
+//!   diagnostic (the runtime `Stalled` watchdog stays as
+//!   defense-in-depth).
+//! * [`ranges`] — interval analysis over the quantized datapath:
+//!   worst-case i32 accumulator magnitudes per layer from the actual i8
+//!   weight magnitudes, 16-bit biases and the skip-add widening path
+//!   (falling back to sound dtype bounds when a layer has no weights,
+//!   e.g. an imported QONNX graph).
+//! * [`feasibility`] — Eq. 16/17 window/shape cross-check: the slice
+//!   spans are re-derived from the graph and compared against what
+//!   `hls::config::configure` stored, so planner and executor can never
+//!   disagree silently.
+//!
+//! Entry points: [`verify`] runs all three passes and returns the full
+//! [`AnalysisReport`] (the `repro verify` subcommand renders it as text
+//! or JSON); [`preflight`] runs the structural passes (deadlock +
+//! feasibility) and is invoked by `stream::stage::plan_pipeline`, so
+//! `StreamPool`/`StreamBackend` refuse a provably-deadlocking
+//! configuration with a typed [`AnalysisError`] before a single stage
+//! thread exists.  `StreamConfig::static_checks` is the escape hatch
+//! the deadlock-regression tests use to reach the runtime watchdog.
+
+pub mod deadlock;
+pub mod feasibility;
+pub mod ranges;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::graph::Graph;
+use crate::hls::config::AcceleratorConfig;
+use crate::models::ModelWeights;
+use crate::stream::StreamConfig;
+use crate::util::Json;
+
+/// Severity of one finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// A check that ran and passed (kept in the report so "verified"
+    /// is distinguishable from "never looked").
+    Info,
+    /// Suspicious but not provably unsafe (e.g. planner/analyzer
+    /// disagreement, thin accumulator headroom).
+    Warning,
+    /// Provably unsafe: the configuration must be rejected.
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One finding from a verification pass.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable machine-readable code (catalogued in the README), e.g.
+    /// `fifo.undersized` or `range.overflow`.
+    pub code: &'static str,
+    pub severity: Severity,
+    /// The FIFO edge or layer the finding is about (e.g. `s0b0_add.skip`).
+    pub subject: String,
+    /// Human-readable explanation.
+    pub message: String,
+    /// The value the check measured (declared FIFO depth, worst-case
+    /// accumulator magnitude, ...).
+    pub measured: Option<i64>,
+    /// The bound it was compared against.
+    pub bound: Option<i64>,
+    /// For undersized FIFOs: the minimum depth that is provably safe.
+    pub min_safe_depth: Option<usize>,
+}
+
+impl Diagnostic {
+    pub fn new(
+        severity: Severity,
+        code: &'static str,
+        subject: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity,
+            subject: subject.into(),
+            message: message.into(),
+            measured: None,
+            bound: None,
+            min_safe_depth: None,
+        }
+    }
+
+    /// Attach the measured-vs-bound pair.
+    pub fn with_values(mut self, measured: i64, bound: i64) -> Diagnostic {
+        self.measured = Some(measured);
+        self.bound = Some(bound);
+        self
+    }
+
+    /// Attach the minimum safe FIFO depth.
+    pub fn with_min_safe_depth(mut self, depth: usize) -> Diagnostic {
+        self.min_safe_depth = Some(depth);
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("code".into(), Json::Str(self.code.into()));
+        o.insert("severity".into(), Json::Str(self.severity.as_str().into()));
+        o.insert("subject".into(), Json::Str(self.subject.clone()));
+        o.insert("message".into(), Json::Str(self.message.clone()));
+        if let Some(m) = self.measured {
+            o.insert("measured".into(), Json::Int(m));
+        }
+        if let Some(b) = self.bound {
+            o.insert("bound".into(), Json::Int(b));
+        }
+        if let Some(d) = self.min_safe_depth {
+            o.insert("min_safe_depth".into(), Json::Int(d as i64));
+        }
+        Json::Object(o)
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{:<7}] {:<24} {}: {}",
+            self.severity, self.code, self.subject, self.message
+        )?;
+        if let Some(d) = self.min_safe_depth {
+            write!(f, " (min safe depth {d})")?;
+        }
+        Ok(())
+    }
+}
+
+/// The combined result of the verification passes.
+#[derive(Debug, Clone, Default)]
+pub struct AnalysisReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AnalysisReport {
+    /// True when no Error-severity diagnostic is present.
+    pub fn ok(&self) -> bool {
+        self.count(Severity::Error) == 0
+    }
+
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == severity).count()
+    }
+
+    /// The Error-severity findings.
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    /// Find a diagnostic by code and subject (test convenience).
+    pub fn find(&self, code: &str, subject: &str) -> Option<&Diagnostic> {
+        self.diagnostics.iter().find(|d| d.code == code && d.subject == subject)
+    }
+
+    /// `Err(AnalysisError)` carrying the Error-severity findings when
+    /// the report rejects the configuration.
+    pub fn into_result(self) -> Result<AnalysisReport, AnalysisError> {
+        if self.ok() {
+            Ok(self)
+        } else {
+            Err(AnalysisError {
+                diagnostics: self
+                    .diagnostics
+                    .into_iter()
+                    .filter(|d| d.severity == Severity::Error)
+                    .collect(),
+            })
+        }
+    }
+
+    /// The JSON document `repro verify --json` emits: stable key order,
+    /// diagnostics in pass order.
+    pub fn to_json(&self) -> Json {
+        let mut counts = BTreeMap::new();
+        for s in [Severity::Info, Severity::Warning, Severity::Error] {
+            counts.insert(s.as_str().to_string(), Json::Int(self.count(s) as i64));
+        }
+        let mut o = BTreeMap::new();
+        o.insert(
+            "status".into(),
+            Json::Str(if self.ok() { "ok" } else { "rejected" }.into()),
+        );
+        o.insert("counts".into(), Json::Object(counts));
+        o.insert(
+            "diagnostics".into(),
+            Json::Array(self.diagnostics.iter().map(|d| d.to_json()).collect()),
+        );
+        Json::Object(o)
+    }
+}
+
+impl fmt::Display for AnalysisReport {
+    /// Errors first, then warnings, then the passed checks, closed by
+    /// a one-line verdict.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for sev in [Severity::Error, Severity::Warning, Severity::Info] {
+            for d in self.diagnostics.iter().filter(|d| d.severity == sev) {
+                writeln!(f, "{d}")?;
+            }
+        }
+        write!(
+            f,
+            "verdict: {} ({} error(s), {} warning(s), {} check(s) passed)",
+            if self.ok() { "APPROVED" } else { "REJECTED" },
+            self.count(Severity::Error),
+            self.count(Severity::Warning),
+            self.count(Severity::Info),
+        )
+    }
+}
+
+/// Typed rejection: the static analyzer proved the configuration unsafe.
+///
+/// Carried through `anyhow` by `plan_pipeline`, so
+/// `StreamPool::new` / `run_streaming` callers can
+/// `err.downcast_ref::<AnalysisError>()` and inspect the exact
+/// undersized edges and their minimum safe depths.
+#[derive(Debug, Clone)]
+pub struct AnalysisError {
+    /// The Error-severity findings that caused the rejection.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl fmt::Display for AnalysisError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "static pipeline analysis rejected the configuration ({} error(s))",
+            self.diagnostics.len()
+        )?;
+        for d in &self.diagnostics {
+            write!(f, "; {}: {}", d.subject, d.message)?;
+            if let Some(depth) = d.min_safe_depth {
+                write!(f, " (min safe depth {depth})")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for AnalysisError {}
+
+/// Run every verification pass and return the full report.
+///
+/// `weights` is optional: without it (e.g. a freshly imported QONNX
+/// graph) the range pass falls back to sound dtype worst cases instead
+/// of per-channel sums.
+pub fn verify(
+    g: &Graph,
+    weights: Option<&ModelWeights>,
+    cfg: &StreamConfig,
+    acfg: &AcceleratorConfig,
+) -> Result<AnalysisReport> {
+    let mut diagnostics = deadlock::check(g, cfg, acfg)?;
+    diagnostics.extend(feasibility::check(g, acfg)?);
+    diagnostics.extend(ranges::check(g, weights)?);
+    Ok(AnalysisReport { diagnostics })
+}
+
+/// The cheap structural passes (deadlock + window feasibility) run by
+/// `plan_pipeline` before any stage thread spawns.  Returns
+/// `Err(AnalysisError)` (downcastable through `anyhow`) on a provable
+/// hazard.
+pub fn preflight(g: &Graph, cfg: &StreamConfig, acfg: &AcceleratorConfig) -> Result<()> {
+    let mut diagnostics = deadlock::check(g, cfg, acfg)?;
+    diagnostics.extend(feasibility::check(g, acfg)?);
+    AnalysisReport { diagnostics }
+        .into_result()
+        .map_err(anyhow::Error::new)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(sev: Severity) -> Diagnostic {
+        Diagnostic::new(sev, "fifo.undersized", "b0.skip", "too small")
+            .with_values(4, 2128)
+            .with_min_safe_depth(2128)
+    }
+
+    #[test]
+    fn report_verdict_and_counts() {
+        let ok = AnalysisReport { diagnostics: vec![diag(Severity::Info)] };
+        assert!(ok.ok());
+        assert!(ok.clone().into_result().is_ok());
+        assert!(format!("{ok}").contains("APPROVED"));
+
+        let bad = AnalysisReport {
+            diagnostics: vec![diag(Severity::Info), diag(Severity::Error)],
+        };
+        assert!(!bad.ok());
+        assert_eq!(bad.count(Severity::Error), 1);
+        let err = bad.into_result().unwrap_err();
+        assert_eq!(err.diagnostics.len(), 1);
+        let msg = format!("{err}");
+        assert!(msg.contains("b0.skip"), "{msg}");
+        assert!(msg.contains("min safe depth 2128"), "{msg}");
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = AnalysisReport { diagnostics: vec![diag(Severity::Error)] };
+        let j = r.to_json();
+        assert_eq!(j.at("status").and_then(|s| s.as_str()), Some("rejected"));
+        assert_eq!(j.at("counts/error").and_then(|c| c.as_i64()), Some(1));
+        let d = &j.at("diagnostics").and_then(|a| a.as_array()).unwrap()[0];
+        assert_eq!(d.get("min_safe_depth").and_then(|v| v.as_i64()), Some(2128));
+        assert_eq!(d.get("subject").and_then(|v| v.as_str()), Some("b0.skip"));
+    }
+}

@@ -1,0 +1,342 @@
+//! Integer-range analysis: worst-case accumulator magnitudes per layer.
+//!
+//! The conv kernel (`stream::stage::conv_pos_core`, mirroring the paper's
+//! Fig. 4 task) accumulates `bias + (skip << shift) + Σ x·w` in plain
+//! `i32`; the naive residual add aligns two operands at the finer
+//! exponent in `i64`.  Neither saturates, so a configuration whose
+//! worst-case magnitude exceeds the accumulator width computes garbage
+//! silently (release builds wrap).  The stock int8 ResNets sit orders of
+//! magnitude below the limit — cf. "Low Precision Constant Parameter CNN
+//! on FPGA": quantized ranges are tight enough to bound ahead of time —
+//! but an imported QONNX graph chooses its own channel counts and
+//! exponents, so the bound is re-proved here for every graph.
+//!
+//! With `ModelWeights` available the bound is exact per output channel
+//! (`|b[co]| + A·Σ|w[·,co]| + A·2^shift` with `A = 128`, the largest
+//! post-clip activation magnitude); without weights it falls back to the
+//! dtype worst case (`|w| ≤ 128`, `|b| ≤ 32768`).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::graph::{infer_shapes, Edge, Graph, InputRole, Op};
+use crate::models::ModelWeights;
+
+use super::{Diagnostic, Severity};
+
+/// Largest post-clip activation magnitude (|i8| including -128).
+const ACT_MAX: i128 = 128;
+/// Dtype worst cases for the weightless fallback.
+const WEIGHT_MAX: i128 = 128;
+const BIAS_MAX: i128 = 32768;
+
+fn sat(v: i128) -> i64 {
+    i64::try_from(v).unwrap_or(i64::MAX)
+}
+
+/// Per-output-channel `Σ|w|` and `max|b|` for one layer, exact from the
+/// weight blob when its lengths match the graph geometry, else the dtype
+/// worst case.  Returns `(max_co (|b[co]| + in_bound * Σ|w[·,co]|), exact)`.
+fn acc_bound(
+    weights: Option<&ModelWeights>,
+    layer: &str,
+    taps_cin: usize,
+    cout: usize,
+    in_bound: i128,
+) -> (i128, bool) {
+    if let Some(lw) = weights.and_then(|w| w.layers.get(layer)) {
+        // Both conv (KH, KW, CIN, COUT) and fc (CIN, COUT) layouts are
+        // row-major with COUT innermost: flat index i maps to co = i % cout.
+        if lw.w.data.len() == taps_cin * cout && lw.b.data.len() == cout && cout > 0 {
+            let mut wsum = vec![0i128; cout];
+            for (i, &v) in lw.w.data.iter().enumerate() {
+                wsum[i % cout] += v.unsigned_abs() as i128;
+            }
+            let worst = (0..cout)
+                .map(|co| lw.b.data[co].unsigned_abs() as i128 + in_bound * wsum[co])
+                .max()
+                .unwrap_or(0);
+            return (worst, true);
+        }
+    }
+    (BIAS_MAX + in_bound * WEIGHT_MAX * taps_cin as i128, false)
+}
+
+/// Push the severity-graded accumulator diagnostic for one layer.
+fn grade(out: &mut Vec<Diagnostic>, subject: String, worst: i128, exact: bool) {
+    let basis = if exact { "from the weight blob" } else { "dtype worst case" };
+    let (sev, code, verdict) = if worst > i32::MAX as i128 {
+        (Severity::Error, "range.overflow", "exceeds the i32 accumulator")
+    } else if worst > (i32::MAX / 4) as i128 {
+        (Severity::Warning, "range.headroom", "leaves under 2 bits of i32 headroom")
+    } else {
+        (Severity::Info, "range.ok", "fits the i32 accumulator")
+    };
+    out.push(
+        Diagnostic::new(
+            sev,
+            code,
+            subject,
+            format!("worst-case |acc| = {} ({basis}) {verdict}", sat(worst)),
+        )
+        .with_values(sat(worst), i32::MAX as i64),
+    );
+}
+
+/// Prove (or refute) accumulator-width safety for every layer.
+pub fn check(g: &Graph, weights: Option<&ModelWeights>) -> Result<Vec<Diagnostic>> {
+    let shapes = infer_shapes(g).map_err(anyhow::Error::new)?;
+    let mut out = Vec::new();
+    // Worst-case |value| on every live edge, propagated topologically
+    // (`g.live()` yields id order, ids are topological).
+    let mut bound: BTreeMap<Edge, i128> = BTreeMap::new();
+    let in_of = |n: &crate::graph::Node, i: usize| n.inputs.get(i).map(|(e, _)| *e);
+    // Exponent an Add operand arrives at: a raw conv streams accumulators
+    // at its acc exponent (stage.rs exp_of contract); weightless, the
+    // shape exponent (= in_exp + w_exp for raw outputs) stands in.
+    let operand_exp = |e: Edge| -> i32 {
+        if let Some(p) = g.nodes.get(e.node) {
+            if let Op::Conv(a) = &p.op {
+                if a.raw_output {
+                    if let Some(lw) = weights.and_then(|w| w.layers.get(&p.name)) {
+                        return lw.acc_exp();
+                    }
+                }
+            }
+        }
+        shapes.get(&e).map_or(0, |s| s.exp)
+    };
+
+    for n in g.live() {
+        match &n.op {
+            Op::Input { .. } => {
+                bound.insert(Edge::new(n.id, 0), ACT_MAX);
+            }
+            Op::Conv(a) => {
+                let in_edge = in_of(n, 0);
+                let in_bound = in_edge.and_then(|e| bound.get(&e)).copied().unwrap_or(ACT_MAX);
+                let taps_cin = a.k * a.k * a.cin;
+                let (mut worst, exact) = acc_bound(weights, &n.name, taps_cin, a.cout, in_bound);
+
+                // Fused skip init: `acc += skip << (skip_exp - acc_exp)`.
+                let skip = n.inputs.iter().find(|(_, r)| *r == InputRole::SkipInit);
+                if let Some((se, _)) = skip {
+                    let acc_exp = weights
+                        .and_then(|w| w.layers.get(&n.name))
+                        .map(|lw| lw.acc_exp())
+                        .unwrap_or_else(|| {
+                            in_edge.and_then(|e| shapes.get(&e)).map_or(0, |s| s.exp) + a.w_exp
+                        });
+                    let skip_exp = shapes.get(se).map_or(acc_exp, |s| s.exp);
+                    let shift = skip_exp - acc_exp;
+                    if shift < 0 {
+                        out.push(Diagnostic::new(
+                            Severity::Error,
+                            "range.skip-shift",
+                            format!("{}.skip", n.name),
+                            format!(
+                                "skip exponent {skip_exp} is below the accumulator \
+                                 exponent {acc_exp}: the fused init cannot align \
+                                 without losing bits"
+                            ),
+                        ));
+                    } else if shift > 62 {
+                        out.push(Diagnostic::new(
+                            Severity::Error,
+                            "range.skip-shift",
+                            format!("{}.skip", n.name),
+                            format!(
+                                "skip-to-accumulator shift of {shift} bits overflows \
+                                 any fixed-point accumulator"
+                            ),
+                        ));
+                    } else {
+                        let skip_bound = bound.get(se).copied().unwrap_or(ACT_MAX);
+                        worst += skip_bound << shift;
+                    }
+                }
+                grade(&mut out, format!("{}.acc", n.name), worst, exact);
+
+                let out_bound = if a.raw_output { worst } else { ACT_MAX };
+                bound.insert(Edge::new(n.id, 0), out_bound);
+                if a.forwards_input {
+                    bound.insert(Edge::new(n.id, 1), in_bound);
+                } else if let Some(ds) = &a.merged_downsample {
+                    let ds_taps_cin = ds.k * ds.k * a.cin;
+                    let (ds_worst, ds_exact) =
+                        acc_bound(weights, &ds.name, ds_taps_cin, ds.cout, in_bound);
+                    grade(&mut out, format!("{}.acc", ds.name), ds_worst, ds_exact);
+                    // The merged downsample output is requantized to i8.
+                    bound.insert(Edge::new(n.id, 1), ACT_MAX);
+                }
+            }
+            Op::Add { .. } => {
+                // Naive residual merge: `(a << sa) + (b << sb)` in i64.
+                let (ea, ba) = match in_of(n, 0) {
+                    Some(e) => (operand_exp(e), bound.get(&e).copied().unwrap_or(ACT_MAX)),
+                    None => (0, ACT_MAX),
+                };
+                let (eb, bb) = match in_of(n, 1) {
+                    Some(e) => (operand_exp(e), bound.get(&e).copied().unwrap_or(ACT_MAX)),
+                    None => (0, ACT_MAX),
+                };
+                let lo = ea.min(eb);
+                let (sa, sb) = ((ea - lo) as u32, (eb - lo) as u32);
+                if sa > 62 || sb > 62 {
+                    out.push(Diagnostic::new(
+                        Severity::Error,
+                        "range.shift",
+                        format!("{}.add", n.name),
+                        format!(
+                            "operand alignment shifts ({sa}, {sb}) exceed the i64 \
+                             widening the add stage performs"
+                        ),
+                    ));
+                } else {
+                    let sum = (ba << sa) + (bb << sb);
+                    if sum > i64::MAX as i128 {
+                        out.push(
+                            Diagnostic::new(
+                                Severity::Error,
+                                "range.add-overflow",
+                                format!("{}.add", n.name),
+                                format!(
+                                    "worst-case aligned sum {} exceeds the i64 \
+                                     widening accumulator",
+                                    sat(sum)
+                                ),
+                            )
+                            .with_values(sat(sum), i64::MAX),
+                        );
+                    } else {
+                        out.push(
+                            Diagnostic::new(
+                                Severity::Info,
+                                "range.ok",
+                                format!("{}.add", n.name),
+                                format!("worst-case aligned sum {} fits i64", sat(sum)),
+                            )
+                            .with_values(sat(sum), i64::MAX),
+                        );
+                    }
+                }
+                // The add requantizes and clips back to i8.
+                bound.insert(Edge::new(n.id, 0), ACT_MAX);
+            }
+            Op::Linear { cin, cout, .. } => {
+                let in_bound = in_of(n, 0)
+                    .and_then(|e| bound.get(&e))
+                    .copied()
+                    .unwrap_or(ACT_MAX);
+                let (worst, exact) = acc_bound(weights, &n.name, *cin, *cout, in_bound);
+                grade(&mut out, format!("{}.acc", n.name), worst, exact);
+                // Logits stream as raw i32.
+                bound.insert(Edge::new(n.id, 0), worst);
+            }
+            Op::Relu | Op::MaxPool { .. } | Op::BatchNorm(_) => {
+                // Pointwise / selecting ops never increase magnitude.
+                let b = in_of(n, 0).and_then(|e| bound.get(&e)).copied().unwrap_or(ACT_MAX);
+                bound.insert(Edge::new(n.id, 0), b);
+            }
+            Op::GlobalAvgPool { .. } => {
+                // Shift-divide then clip to i8.
+                bound.insert(Edge::new(n.id, 0), ACT_MAX);
+            }
+        }
+    }
+
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ConvAttrs;
+    use crate::models::{
+        arch_by_name, build_optimized_graph, build_unoptimized_graph, default_exps,
+        synthetic_weights,
+    };
+
+    #[test]
+    fn stock_archs_fit_i32_with_synthetic_weights() {
+        for name in ["resnet8", "resnet20"] {
+            let arch = arch_by_name(name).unwrap();
+            let weights = synthetic_weights(&arch, 7);
+            for g in [
+                build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps),
+                build_unoptimized_graph(&arch, &weights.act_exps, &weights.w_exps),
+            ] {
+                let diags = check(&g, Some(&weights)).unwrap();
+                assert!(
+                    diags.iter().all(|d| d.severity == Severity::Info),
+                    "{name}: {diags:?}"
+                );
+                assert!(diags.iter().all(|d| d.code == "range.ok"));
+            }
+        }
+    }
+
+    #[test]
+    fn weightless_fallback_still_approves_stock_archs() {
+        let arch = arch_by_name("resnet8").unwrap();
+        let (act, w) = default_exps(&arch);
+        let g = build_optimized_graph(&arch, &act, &w);
+        let diags = check(&g, None).unwrap();
+        assert!(diags.iter().all(|d| d.severity == Severity::Info), "{diags:?}");
+        assert!(diags.iter().any(|d| d.message.contains("dtype worst case")));
+    }
+
+    #[test]
+    fn oversized_import_overflows_and_is_flagged() {
+        // A hostile "import": one conv wide enough that even the dtype
+        // worst case exceeds i32 (128 * 128 * 9 * cin > 2^31 for
+        // cin = 2^17): flagged, not silently wrapped at runtime.
+        let mut g = Graph::new();
+        let cin = 1 << 17;
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: cin, exp: -7 }, &[]);
+        g.add_simple(
+            "huge",
+            Op::Conv(ConvAttrs {
+                cin, cout: 4, k: 3, stride: 1, pad: 1, relu: false,
+                w_exp: -8, out_exp: -5,
+                merged_downsample: None, forwards_input: false, raw_output: false,
+            }),
+            &[Edge::new(i, 0)],
+        );
+        let diags = check(&g, None).unwrap();
+        let d = diags.iter().find(|d| d.code == "range.overflow").expect("overflow diag");
+        assert_eq!(d.subject, "huge.acc");
+        assert_eq!(d.severity, Severity::Error);
+    }
+
+    #[test]
+    fn skip_exponent_below_acc_exponent_is_flagged() {
+        // A fused skip whose activation exponent sits below the consumer's
+        // accumulator exponent cannot be aligned by a left shift; the
+        // executor would refuse at plan time, the analyzer says why.
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 4, exp: -20 }, &[]);
+        let attrs = |w_exp| ConvAttrs {
+            cin: 4, cout: 4, k: 3, stride: 1, pad: 1, relu: false,
+            w_exp, out_exp: -20,
+            merged_downsample: None, forwards_input: true, raw_output: false,
+        };
+        let c0 = g.add_simple("c0", Op::Conv(attrs(-2)), &[Edge::new(i, 0)]);
+        // c1's weightless acc exponent is in_exp + w_exp = -20 + 5 = -15,
+        // above the forwarded skip's -20: a negative alignment shift.
+        g.add(
+            "c1",
+            Op::Conv(ConvAttrs { forwards_input: false, ..attrs(5) }),
+            vec![
+                (Edge::new(c0, 0), InputRole::Data),
+                (Edge::new(c0, 1), InputRole::SkipInit),
+            ],
+        );
+        let diags = check(&g, None).unwrap();
+        assert!(
+            diags.iter().any(|d| d.code == "range.skip-shift" && d.subject == "c1.skip"),
+            "{diags:?}"
+        );
+    }
+}

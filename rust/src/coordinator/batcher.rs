@@ -59,7 +59,12 @@ impl Batcher {
         cfg.buckets.dedup();
         let cap = cfg.max_bucket.max(*cfg.buckets.first().unwrap_or(&1));
         cfg.buckets.retain(|&b| b <= cap);
-        assert!(!cfg.buckets.is_empty(), "need at least one bucket");
+        if cfg.buckets.is_empty() {
+            // An empty bucket list (misconfigured manifest) degrades to
+            // single-frame dispatch instead of panicking the executor
+            // thread that builds its batcher from backend preferences.
+            cfg.buckets.push(1);
+        }
         Batcher { cfg }
     }
 
@@ -87,6 +92,11 @@ impl Batcher {
     pub fn plan(&self, queued: usize) -> Vec<BatchPlan> {
         let overhead = self.cfg.dispatch_overhead;
         let mut plans = Vec::new();
+        // `new()` guarantees a non-empty bucket list; the guard keeps this
+        // loop panic-free even if that invariant is ever broken.
+        let Some(&smallest) = self.cfg.buckets.first() else {
+            return plans;
+        };
         let mut left = queued;
         while left > 0 {
             // Option A: greedy decomposition cost of `left`.
@@ -101,7 +111,7 @@ impl Batcher {
                     .rev()
                     .find(|&&b| b <= l)
                     .copied()
-                    .unwrap_or(*self.cfg.buckets.first().unwrap());
+                    .unwrap_or(smallest);
                 if first_greedy.is_none() {
                     first_greedy = Some(b);
                 }
@@ -116,7 +126,9 @@ impl Batcher {
                     left = 0;
                 }
                 _ => {
-                    let b = first_greedy.unwrap();
+                    // The greedy pass above always visits at least one
+                    // bucket when `left > 0`.
+                    let b = first_greedy.unwrap_or(smallest);
                     let take = b.min(left);
                     plans.push(BatchPlan { bucket: b, take });
                     left -= take;
@@ -145,6 +157,7 @@ impl Batcher {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

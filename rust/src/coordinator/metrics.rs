@@ -1,7 +1,7 @@
 //! Serving metrics: counters and a fixed-bucket latency histogram.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 use std::time::Duration;
 
 /// Histogram bucket upper bounds in microseconds.
@@ -67,7 +67,9 @@ impl Metrics {
     /// peak, as a pair, so a snapshot reflects the worst concurrent
     /// buffering observed with its own comparison base.
     pub fn record_stream(&self, peak_elems: u64, whole_elems: u64) {
-        let mut g = self.stream_gauge.lock().unwrap();
+        // Gauges recover from poison: a panic elsewhere must not stop
+        // metrics from recording or reporting (the data is plain u64s).
+        let mut g = self.stream_gauge.lock().unwrap_or_else(PoisonError::into_inner);
         if peak_elems > g.0 {
             *g = (peak_elems, whole_elems);
         }
@@ -102,7 +104,7 @@ impl Metrics {
 
     pub fn record_latency(&self, d: Duration) {
         let us = d.as_micros() as u64;
-        let mut h = self.latency.lock().unwrap();
+        let mut h = self.latency.lock().unwrap_or_else(PoisonError::into_inner);
         let idx = BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(BOUNDS_US.len() - 1);
         h.counts[idx] += 1;
         h.sum_us += us;
@@ -110,7 +112,7 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let h = self.latency.lock().unwrap();
+        let h = self.latency.lock().unwrap_or_else(PoisonError::into_inner);
         let total: u64 = h.counts.iter().sum();
         let pct = |p: f64| -> u64 {
             if total == 0 {
@@ -129,7 +131,8 @@ impl Metrics {
         let frames = self.frames.load(Ordering::Relaxed);
         let padded = self.padded_frames.load(Ordering::Relaxed);
         let executed = frames + padded;
-        let (stream_peak, stream_whole) = *self.stream_gauge.lock().unwrap();
+        let (stream_peak, stream_whole) =
+            *self.stream_gauge.lock().unwrap_or_else(PoisonError::into_inner);
         let requests = self.requests.load(Ordering::Relaxed);
         let shed = self.shed.load(Ordering::Relaxed);
         let deadline_expired = self.deadline_expired.load(Ordering::Relaxed);
@@ -242,6 +245,7 @@ impl std::fmt::Display for MetricsSnapshot {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

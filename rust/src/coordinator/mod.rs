@@ -26,6 +26,12 @@
 //! [`InferenceServer`] is the deprecated pre-redesign single-arch PJRT
 //! wrapper, kept so existing callers compile.
 
+// Panic-freedom gate: request-path code reports typed errors (and
+// recovers poisoned gauges/queues) instead of unwinding worker threads.
+// `clippy.toml` disallows Option/Result unwrap+expect; test modules opt
+// out locally.
+#![deny(clippy::disallowed_methods)]
+
 mod batcher;
 mod metrics;
 mod router;

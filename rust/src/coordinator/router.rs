@@ -18,7 +18,7 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -83,6 +83,17 @@ struct PoolShared {
     /// report to elastic streaming backends, so socket backlog grows
     /// stream-pool replicas before the router's own queue fills.
     ingress: AtomicUsize,
+}
+
+/// Recover a queue-state guard from a poisoned mutex.  `PoolState` holds
+/// plain data (a request queue and three flags) with no invariant a
+/// mid-panic unwind can break, and the paths that use this — drain,
+/// drop, the worker serve loop — must keep responding to queued requests
+/// even after a sibling worker panicked, so recovery beats propagating.
+fn recover(
+    r: Result<MutexGuard<'_, PoolState>, PoisonError<MutexGuard<'_, PoolState>>>,
+) -> MutexGuard<'_, PoolState> {
+    r.unwrap_or_else(PoisonError::into_inner)
 }
 
 impl PoolShared {
@@ -182,7 +193,11 @@ impl Router {
                         drop(ready);
                         worker_loop(backend.as_ref(), bcfg, &shared, &metrics, &agg);
                     })?;
-                router.pools.get_mut(&arch).unwrap().workers.push(handle);
+                let pool = router
+                    .pools
+                    .get_mut(&arch)
+                    .ok_or_else(|| anyhow!("pool for arch {arch} vanished during startup"))?;
+                pool.workers.push(handle);
                 spawned += 1;
             }
         }
@@ -210,7 +225,15 @@ impl Router {
         })?;
         let (resp_tx, resp_rx) = mpsc::channel();
         {
-            let mut st = pool.shared.state.lock().unwrap();
+            // A poisoned queue mutex means a worker panicked mid-pop; the
+            // pool can no longer promise a response, so refuse the frame
+            // with a typed error instead of propagating the panic into
+            // the caller (typically a network connection handler).
+            let mut st = pool
+                .shared
+                .state
+                .lock()
+                .map_err(|_| anyhow!("server error: pool queue poisoned by a worker panic"))?;
             anyhow::ensure!(st.open, "server stopped");
             // Count while holding the lock: workers also need it to pop,
             // so a snapshot can never observe frames > requests.
@@ -288,7 +311,7 @@ impl Router {
     /// drain-on-drop behavior.
     pub(super) fn drain_and_join(&mut self) {
         for pool in self.pools.values() {
-            let mut st = pool.shared.state.lock().unwrap();
+            let mut st = recover(pool.shared.state.lock());
             st.open = false;
             st.draining = true;
             drop(st);
@@ -307,7 +330,7 @@ impl Drop for Router {
         // Abort: anything still queued gets an explicit "server stopped"
         // error — never a silently dropped response channel.
         for pool in self.pools.values() {
-            let mut st = pool.shared.state.lock().unwrap();
+            let mut st = recover(pool.shared.state.lock());
             st.open = false;
             st.abort = true;
             drop(st);
@@ -321,7 +344,7 @@ impl Drop for Router {
         // If a pool's workers never ran (startup failure), its queue may
         // still hold requests: fail them here.
         for pool in self.pools.values() {
-            let mut st = pool.shared.state.lock().unwrap();
+            let mut st = recover(pool.shared.state.lock());
             while let Some(r) = st.queue.pop_front() {
                 respond_counted(&pool.metrics, &self.agg, r, Err(anyhow!("server stopped")));
             }
@@ -405,7 +428,7 @@ fn serve_queue(
     agg: &Metrics,
 ) {
     'serve: loop {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = recover(shared.state.lock());
         let (plan, batch) = loop {
             if st.abort {
                 while let Some(r) = st.queue.pop_front() {
@@ -458,13 +481,16 @@ fn serve_queue(
                 let (g, _) = shared
                     .cv
                     .wait_timeout(st, wait.max(Duration::from_micros(100)))
-                    .unwrap();
+                    .unwrap_or_else(PoisonError::into_inner);
                 st = g;
             } else {
                 if st.draining {
                     return;
                 }
-                let (g, _) = shared.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
+                let (g, _) = shared
+                    .cv
+                    .wait_timeout(st, Duration::from_millis(50))
+                    .unwrap_or_else(PoisonError::into_inner);
                 st = g;
             }
         };
@@ -525,6 +551,7 @@ fn serve_queue(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::quant::QTensor;

@@ -38,7 +38,9 @@ impl InferenceServer {
             Arc::new(PjrtFactory::new(artifacts_dir, arch));
         let router =
             Router::start(vec![factory], RouterConfig { batcher: cfg, ..Default::default() })?;
-        let metrics = router.metrics(arch).expect("pool exists for started arch");
+        let metrics = router
+            .metrics(arch)
+            .ok_or_else(|| anyhow::anyhow!("router started without a pool for arch {arch}"))?;
         Ok(InferenceServer { arch: arch.to_string(), router, metrics })
     }
 

@@ -129,7 +129,52 @@ fn attributes(op: &Op) -> Json {
     Json::Object(a)
 }
 
+/// Look up an integer attribute; `Ok(None)` if absent, typed error if
+/// present with a non-integer value (silently reading garbage as 0 is
+/// how untrusted files used to reach shape inference and abort there).
+fn opt_int(attrs: &Json, node: &str, k: &str) -> Result<Option<i64>> {
+    match attrs.get(k) {
+        None => Ok(None),
+        Some(j) => j
+            .as_i64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("{node}.{k}: expected an integer attribute")),
+    }
+}
+
+/// Required dimension: present, integral, and at least `min` (stride 0
+/// or channels 0 would divide-by-zero / degenerate downstream).
+fn dim(attrs: &Json, node: &str, k: &str, min: usize) -> Result<usize> {
+    let v = opt_int(attrs, node, k)?
+        .ok_or_else(|| anyhow!("{node}.{k}: missing required attribute"))?;
+    let u = usize::try_from(v).map_err(|_| anyhow!("{node}.{k}: negative value {v}"))?;
+    if u < min {
+        bail!("{node}.{k}: value {u} below minimum {min}");
+    }
+    Ok(u)
+}
+
+/// Optional quantization exponent / flag-style integer, defaulting to
+/// `def` when absent (hand-written files may omit flags), typed error on
+/// a non-integer or out-of-range value.
+fn exp_or(attrs: &Json, node: &str, k: &str, def: i32) -> Result<i32> {
+    match opt_int(attrs, node, k)? {
+        None => Ok(def),
+        Some(v) => {
+            i32::try_from(v).map_err(|_| anyhow!("{node}.{k}: exponent {v} out of i32 range"))
+        }
+    }
+}
+
+fn flag(attrs: &Json, node: &str, k: &str) -> Result<bool> {
+    Ok(opt_int(attrs, node, k)?.unwrap_or(0) != 0)
+}
+
 /// Parse a QONNX-flavored JSON document back into a graph.
+///
+/// Never panics on malformed input: every missing/ill-typed/out-of-range
+/// field is a typed `Err` naming the node and attribute (regression
+/// corpus in this module's tests and in `tests/verify_analysis.rs`).
 pub fn import(doc: &Json) -> Result<Graph> {
     let nodes = doc
         .at("graph/nodes")
@@ -143,70 +188,92 @@ pub fn import(doc: &Json) -> Result<Graph> {
             .and_then(|j| j.as_str())
             .ok_or_else(|| anyhow!("node missing name"))?
             .to_string();
-        let op_type = n.get("op_type").and_then(|j| j.as_str()).unwrap_or_default();
+        if by_name.contains_key(&name) {
+            // A silent overwrite would rebind every earlier edge that
+            // names this node to the later definition.
+            bail!("duplicate node name {name}");
+        }
+        let op_type = n
+            .get("op_type")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow!("{name}: missing op_type"))?;
         let attrs = n.get("attributes").cloned().unwrap_or(Json::Object(BTreeMap::new()));
-        let geti = |k: &str| -> i64 { attrs.get(k).and_then(|j| j.as_i64()).unwrap_or(0) };
+        let a = &attrs;
         let op = match op_type {
             "Input" => Op::Input {
-                h: geti("height") as usize,
-                w: geti("width") as usize,
-                c: geti("channels") as usize,
-                exp: geti("quant_exp") as i32,
+                h: dim(a, &name, "height", 1)?,
+                w: dim(a, &name, "width", 1)?,
+                c: dim(a, &name, "channels", 1)?,
+                exp: exp_or(a, &name, "quant_exp", 0)?,
             },
             "QConv" => Op::Conv(ConvAttrs {
-                cin: geti("cin") as usize,
-                cout: geti("cout") as usize,
-                k: geti("kernel") as usize,
-                stride: geti("stride") as usize,
-                pad: geti("pad") as usize,
-                relu: geti("relu") != 0,
-                w_exp: geti("weight_exp") as i32,
-                out_exp: geti("out_exp") as i32,
-                forwards_input: geti("forwards_input") != 0,
-                raw_output: geti("raw_output") != 0,
-                merged_downsample: attrs.get("merged_downsample").map(|m| {
-                    let gi = |k: &str| m.get(k).and_then(|j| j.as_i64()).unwrap_or(0);
-                    MergedDownsample {
-                        name: m.get("name").and_then(|j| j.as_str()).unwrap_or_default().into(),
-                        cout: gi("cout") as usize,
-                        k: gi("kernel") as usize,
-                        stride: gi("stride") as usize,
-                        pad: gi("pad") as usize,
-                        w_exp: gi("weight_exp") as i32,
-                        out_exp: gi("out_exp") as i32,
-                    }
-                }),
+                cin: dim(a, &name, "cin", 1)?,
+                cout: dim(a, &name, "cout", 1)?,
+                k: dim(a, &name, "kernel", 1)?,
+                stride: dim(a, &name, "stride", 1)?,
+                pad: dim(a, &name, "pad", 0)?,
+                relu: flag(a, &name, "relu")?,
+                w_exp: exp_or(a, &name, "weight_exp", 0)?,
+                out_exp: exp_or(a, &name, "out_exp", 0)?,
+                forwards_input: flag(a, &name, "forwards_input")?,
+                raw_output: flag(a, &name, "raw_output")?,
+                merged_downsample: match attrs.get("merged_downsample") {
+                    None => None,
+                    Some(m) => Some(MergedDownsample {
+                        name: m
+                            .get("name")
+                            .and_then(|j| j.as_str())
+                            .ok_or_else(|| anyhow!("{name}.merged_downsample: missing name"))?
+                            .into(),
+                        cout: dim(m, &name, "cout", 1)?,
+                        k: dim(m, &name, "kernel", 1)?,
+                        stride: dim(m, &name, "stride", 1)?,
+                        pad: dim(m, &name, "pad", 0)?,
+                        w_exp: exp_or(m, &name, "weight_exp", 0)?,
+                        out_exp: exp_or(m, &name, "out_exp", 0)?,
+                    }),
+                },
             }),
             "BatchNormalization" => {
                 let getv = |k: &str| -> Vec<f32> {
                     attrs
                         .get(k)
                         .and_then(|j| j.as_array())
-                        .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|x| x as f32).collect())
+                        .map(|arr| {
+                            arr.iter().filter_map(|v| v.as_f64()).map(|x| x as f32).collect()
+                        })
                         .unwrap_or_default()
                 };
                 Op::BatchNorm(BatchNormAttrs {
-                    channels: geti("channels") as usize,
+                    channels: dim(a, &name, "channels", 1)?,
                     scale: getv("scale"),
                     shift: getv("shift"),
                 })
             }
             "Relu" => Op::Relu,
-            "Add" => Op::Add { out_exp: geti("out_exp") as i32 },
-            "MaxPool" => Op::MaxPool { k: geti("kernel") as usize, stride: geti("stride") as usize },
-            "GlobalAveragePool" => Op::GlobalAvgPool { out_exp: geti("out_exp") as i32 },
-            "QGemm" => Op::Linear {
-                cin: geti("cin") as usize,
-                cout: geti("cout") as usize,
-                w_exp: geti("weight_exp") as i32,
+            "Add" => Op::Add { out_exp: exp_or(a, &name, "out_exp", 0)? },
+            "MaxPool" => Op::MaxPool {
+                k: dim(a, &name, "kernel", 1)?,
+                stride: dim(a, &name, "stride", 1)?,
             },
-            other => bail!("unsupported op_type {other}"),
+            "GlobalAveragePool" => Op::GlobalAvgPool { out_exp: exp_or(a, &name, "out_exp", 0)? },
+            "QGemm" => Op::Linear {
+                cin: dim(a, &name, "cin", 1)?,
+                cout: dim(a, &name, "cout", 1)?,
+                w_exp: exp_or(a, &name, "weight_exp", 0)?,
+            },
+            other => bail!("{name}: unsupported op_type {other}"),
         };
         let mut inputs = Vec::new();
         if let Some(arr) = n.get("inputs").and_then(|j| j.as_array()) {
             for i in arr {
-                let src = i.get("node").and_then(|j| j.as_str()).unwrap_or_default();
-                let port = i.get("port").and_then(|j| j.as_i64()).unwrap_or(0) as u8;
+                let src = i
+                    .get("node")
+                    .and_then(|j| j.as_str())
+                    .ok_or_else(|| anyhow!("{name}: input missing source node"))?;
+                let port_raw = opt_int(i, &name, "port")?.unwrap_or(0);
+                let port = u8::try_from(port_raw)
+                    .map_err(|_| anyhow!("{name}: input port {port_raw} out of range"))?;
                 let role = match i.get("role").and_then(|j| j.as_str()) {
                     Some("skip_init") => InputRole::SkipInit,
                     _ => InputRole::Data,
@@ -266,5 +333,83 @@ mod tests {
         )
         .unwrap();
         assert!(import(&doc).is_err());
+    }
+
+    /// Malformed-input corpus: every entry must come back as a typed
+    /// `Err`, never a panic/abort (the `repro verify --qonnx` path runs
+    /// on untrusted files).
+    #[test]
+    fn malformed_corpus_yields_typed_errors() {
+        let corpus: &[(&str, &str)] = &[
+            ("empty object", r#"{}"#),
+            ("nodes not an array", r#"{"graph":{"nodes":42}}"#),
+            ("node without a name", r#"{"graph":{"nodes":[{"op_type":"Relu"}]}}"#),
+            ("node without op_type", r#"{"graph":{"nodes":[{"name":"x"}]}}"#),
+            (
+                "conv with zero stride (would divide-by-zero in shapes)",
+                r#"{"graph":{"nodes":[
+                    {"name":"in","op_type":"Input","inputs":[],
+                     "attributes":{"height":8,"width":8,"channels":3,"quant_exp":-7}},
+                    {"name":"c","op_type":"QConv","inputs":[{"node":"in","port":0}],
+                     "attributes":{"cin":3,"cout":4,"kernel":3,"stride":0,"pad":1,
+                       "relu":1,"weight_exp":-9,"out_exp":-7,
+                       "forwards_input":0,"raw_output":0}}]}}"#,
+            ),
+            (
+                "conv with negative cin (used to wrap to a huge usize)",
+                r#"{"graph":{"nodes":[
+                    {"name":"c","op_type":"QConv","inputs":[],
+                     "attributes":{"cin":-3,"cout":4,"kernel":3,"stride":1,"pad":1,
+                       "relu":1,"weight_exp":-9,"out_exp":-7,
+                       "forwards_input":0,"raw_output":0}}]}}"#,
+            ),
+            (
+                "conv missing its kernel attribute",
+                r#"{"graph":{"nodes":[
+                    {"name":"c","op_type":"QConv","inputs":[],
+                     "attributes":{"cin":3,"cout":4,"stride":1,"pad":1}}]}}"#,
+            ),
+            (
+                "string where an integer attribute belongs",
+                r#"{"graph":{"nodes":[
+                    {"name":"in","op_type":"Input","inputs":[],
+                     "attributes":{"height":"tall","width":8,"channels":3}}]}}"#,
+            ),
+            (
+                "input port out of u8 range (used to wrap silently)",
+                r#"{"graph":{"nodes":[
+                    {"name":"a","op_type":"Relu","inputs":[],"attributes":{}},
+                    {"name":"b","op_type":"Relu",
+                     "inputs":[{"node":"a","port":300}],"attributes":{}}]}}"#,
+            ),
+            (
+                "duplicate node names (used to rebind earlier edges)",
+                r#"{"graph":{"nodes":[
+                    {"name":"x","op_type":"Relu","inputs":[],"attributes":{}},
+                    {"name":"x","op_type":"Relu","inputs":[],"attributes":{}}]}}"#,
+            ),
+        ];
+        for (what, text) in corpus {
+            let doc = Json::parse(text).unwrap_or_else(|e| panic!("{what}: corpus JSON: {e}"));
+            assert!(import(&doc).is_err(), "{what}: import must reject this");
+        }
+    }
+
+    /// Truncating a real export anywhere must fail parsing or import
+    /// with a typed error — never abort.  (Truncation can land inside a
+    /// string, a number, or between nodes; all must be survivable.)
+    #[test]
+    fn truncated_exports_never_panic() {
+        let (act, w) = default_exps(&resnet8());
+        let text = export(&build_optimized_graph(&resnet8(), &act, &w)).to_string();
+        let steps = (text.len() / 97).max(1);
+        for cut in (0..text.len()).step_by(steps) {
+            let prefix = &text[..cut];
+            if let Ok(doc) = Json::parse(prefix) {
+                // A prefix that happens to parse must still be rejected
+                // (or accepted) without panicking.
+                let _ = import(&doc);
+            }
+        }
     }
 }

@@ -34,6 +34,7 @@
 //! directory fully decouples the two worlds, and only the PJRT backend
 //! consumes it.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod eval;

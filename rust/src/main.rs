@@ -31,6 +31,16 @@
 //!                                stream synthetic CIFAR frames at a target FPS;
 //!                                prints p50/p95/p99 latency + shed rate and
 //!                                fails unless every request is accounted for
+//!   verify     [--model M | --qonnx FILE] [--board B] [--ow-par N] [--naive]
+//!              [--skip-capacity N] [--json]
+//!                                static pipeline verification before any thread
+//!                                spawns: FIFO deadlock-freedom (Eq. 21/22 depth
+//!                                bounds, naming the undersized edge and its
+//!                                minimum safe depth — Fig. 14 as a diagnostic),
+//!                                i32 accumulator range analysis from the actual
+//!                                weight blobs, and Eq. 16/17 window feasibility;
+//!                                exits nonzero when rejected (see README
+//!                                "Static verification")
 
 use anyhow::Result;
 
@@ -58,7 +68,7 @@ fn main() {
             "model", "board", "frames", "n", "out", "skip-factor", "ow-par", "budget", "backend",
             "workers", "replicas", "min-replicas", "max-replicas", "window-storage", "host",
             "port", "queue-cap", "dispatchers", "deadline-ms", "duration-s", "addr", "fps",
-            "window",
+            "window", "qonnx", "skip-capacity",
         ],
     );
     let result = match args.subcommand.as_deref() {
@@ -73,9 +83,10 @@ fn main() {
         Some("listen") => cmd_listen(&args),
         Some("client") => cmd_client(&args),
         Some("buffers") => cmd_buffers(&args),
+        Some("verify") => cmd_verify(&args),
         _ => {
             eprintln!(
-                "usage: repro <info|optimize|simulate|codegen|eval-tables|golden-eval|probe-check|serve|listen|client|buffers> [options]"
+                "usage: repro <info|optimize|simulate|codegen|eval-tables|golden-eval|probe-check|serve|listen|client|buffers|verify> [options]"
             );
             Ok(())
         }
@@ -489,6 +500,85 @@ fn cmd_client(args: &Args) -> Result<()> {
         report.errors,
         report.out_of_order,
         report.sheds_without_hint
+    );
+    Ok(())
+}
+
+/// Static pipeline verification (the `repro verify` front-end over
+/// `analysis::verify`): plan the accelerator configuration exactly as
+/// the stream pool would, then prove FIFO deadlock-freedom, i32
+/// accumulator headroom and Eq. 16/17 window feasibility *without
+/// spawning a single thread*.  Rejection exits nonzero after printing
+/// every diagnostic (human-readable by default, `--json` for tooling).
+fn cmd_verify(args: &Args) -> Result<()> {
+    let board = board_of(args);
+    let ow_par = args.opt_usize("ow-par", 2);
+    let naive = args.has_flag("naive");
+    let as_json = args.has_flag("json");
+    let skip_capacity_override = match args.opt("skip-capacity") {
+        None => None,
+        Some(s) => Some(
+            s.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("--skip-capacity {s}: {e}"))?,
+        ),
+    };
+    let cfg = resnet_hls::stream::StreamConfig {
+        board,
+        ow_par,
+        naive_add: naive,
+        skip_capacity_override,
+        ..Default::default()
+    };
+    // --qonnx verifies an untrusted import (typed parse errors, no
+    // weight blobs: range analysis falls back to dtype worst cases);
+    // otherwise the named architecture with its trained weights when
+    // artifacts exist, deterministic synthetic weights when not.
+    let (label, g, weights) = match args.opt("qonnx") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--qonnx {path}: {e}"))?;
+            let doc = resnet_hls::util::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("--qonnx {path}: {e}"))?;
+            let g = resnet_hls::graph::qonnx::import(&doc)
+                .map_err(|e| anyhow::anyhow!("--qonnx {path}: {e}"))?;
+            (format!("qonnx:{path}"), g, None)
+        }
+        None => {
+            let arch = arch_of(args)?;
+            let weights = ModelWeights::load(&artifacts_dir(), &arch.name)
+                .unwrap_or_else(|_| synthetic_weights(&arch, 7));
+            let g = if naive {
+                resnet_hls::models::build_unoptimized_graph(
+                    &arch,
+                    &weights.act_exps,
+                    &weights.w_exps,
+                )
+            } else {
+                build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps)
+            };
+            (arch.name.clone(), g, Some(weights))
+        }
+    };
+    let acfg = resnet_hls::stream::planned_config(&label, &g, &cfg)?;
+    let report = resnet_hls::analysis::verify(&g, weights.as_ref(), &cfg, &acfg)?;
+    if as_json {
+        println!("{}", report.to_json());
+    } else {
+        println!(
+            "== static pipeline verification: {label} on {} (ow_par={ow_par}{}{}) ==",
+            board.name,
+            if naive { ", naive dataflow" } else { "" },
+            match skip_capacity_override {
+                Some(c) => format!(", skip capacity forced to {c}"),
+                None => String::new(),
+            }
+        );
+        println!("{report}");
+    }
+    anyhow::ensure!(
+        report.ok(),
+        "static verification rejected the configuration ({} error(s))",
+        report.errors().count()
     );
     Ok(())
 }

@@ -222,6 +222,7 @@ impl<T> AdmissionQueue<T> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -240,9 +240,12 @@ fn recv_one(
     latencies: &mut Vec<u64>,
 ) -> Result<(), WireError> {
     let resp = client.recv()?;
-    let (want_ticket, sent_at) = inflight
-        .pop_front()
-        .expect("recv_one called with nothing outstanding");
+    // Both call sites guard on a non-empty window, but a response with
+    // nothing outstanding (a server double-answer) must surface as a
+    // protocol error, not a client panic.
+    let Some((want_ticket, sent_at)) = inflight.pop_front() else {
+        return Err(WireError::Protocol("response with no outstanding request"));
+    };
     if resp.ticket() != want_ticket {
         report.out_of_order += 1;
     }
@@ -264,6 +267,7 @@ fn recv_one(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -22,6 +22,12 @@
 //!
 //! Everything is `std`-only: no async runtime, no wire-format crates.
 
+// Panic-freedom gate: ingress code answers malformed/hostile input with
+// typed errors, never by unwinding a connection or dispatcher thread.
+// `clippy.toml` disallows Option/Result unwrap+expect; test modules opt
+// out locally.
+#![deny(clippy::disallowed_methods)]
+
 pub mod admission;
 pub mod client;
 pub mod protocol;

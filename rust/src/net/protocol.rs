@@ -76,6 +76,9 @@ pub enum WireError {
     BadErrorCode(u8),
     /// The peer closed the connection at a frame boundary.
     Closed,
+    /// The peer violated the request/response protocol (e.g. a response
+    /// arrived with no request outstanding).
+    Protocol(&'static str),
     /// Transport failure underneath the framing.
     Io(io::Error),
 }
@@ -98,6 +101,7 @@ impl std::fmt::Display for WireError {
             WireError::BadStatus(s) => write!(f, "unknown response status {s}"),
             WireError::BadErrorCode(c) => write!(f, "unknown error code {c}"),
             WireError::Closed => write!(f, "connection closed"),
+            WireError::Protocol(what) => write!(f, "protocol violation: {what}"),
             WireError::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -409,6 +413,7 @@ pub fn read_frame(r: &mut impl Read, max: usize) -> Result<Option<Vec<u8>>, Wire
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::util::prop::forall;

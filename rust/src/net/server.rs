@@ -660,6 +660,7 @@ fn send_or_count_disconnect(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::coordinator::RouterConfig;

@@ -187,6 +187,7 @@ pub(crate) fn controller_loop(inner: &PoolInner, cfg: &ElasticConfig, default_hi
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -16,7 +16,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::hls::streams::StreamKind;
@@ -132,6 +132,15 @@ pub struct Fifo {
 }
 
 impl Fifo {
+    /// Hot-path lock: a poisoned mutex (a peer panicked while holding it)
+    /// becomes the typed `Inconsistent` error, degrading the replica
+    /// instead of cascading the panic through every stage thread.
+    fn locked(&self) -> Result<MutexGuard<'_, FifoState>, StreamError> {
+        self.state
+            .lock()
+            .map_err(|_| StreamError::Inconsistent { what: "fifo mutex poisoned" })
+    }
+
     pub fn new(
         name: String,
         kind: StreamKind,
@@ -157,7 +166,7 @@ impl Fifo {
     /// this so shutdown can never itself deadlock.
     pub fn push(&self, token: Box<[i32]>) -> Result<(), StreamError> {
         let deadline = Instant::now() + self.timeout;
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked()?;
         loop {
             if st.occupancy + token.len() <= self.capacity {
                 st.occupancy += token.len();
@@ -177,7 +186,7 @@ impl Fifo {
     /// deadlock cycle necessarily blocks some peer on a bounded push or
     /// mid-frame pop, so stall detection is not weakened.
     pub fn pop_idle(&self) -> Result<Box<[i32]>, StreamError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked()?;
         loop {
             if let Some(tok) = st.queue.pop_front() {
                 st.occupancy -= tok.len();
@@ -187,7 +196,10 @@ impl Fifo {
             if self.abort.load(Ordering::SeqCst) {
                 return Err(StreamError::Aborted);
             }
-            let (g, _) = self.cv.wait_timeout(st, POLL).unwrap();
+            let (g, _) = self
+                .cv
+                .wait_timeout(st, POLL)
+                .map_err(|_| StreamError::Inconsistent { what: "fifo mutex poisoned" })?;
             st = g;
         }
     }
@@ -195,7 +207,7 @@ impl Fifo {
     /// Pop the oldest token, blocking (bounded) until one is available.
     pub fn pop(&self) -> Result<Box<[i32]>, StreamError> {
         let deadline = Instant::now() + self.timeout;
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked()?;
         loop {
             if let Some(tok) = st.queue.pop_front() {
                 st.occupancy -= tok.len();
@@ -220,7 +232,10 @@ impl Fifo {
             return Err(StreamError::Stalled { fifo: self.name.clone(), op, waited: self.timeout });
         }
         let slice = POLL.min(deadline - now);
-        let (st, _) = self.cv.wait_timeout(st, slice).unwrap();
+        let (st, _) = self
+            .cv
+            .wait_timeout(st, slice)
+            .map_err(|_| StreamError::Inconsistent { what: "fifo mutex poisoned" })?;
         Ok(st)
     }
 
@@ -235,11 +250,13 @@ impl Fifo {
     /// Peak elements held at any instant (no allocation — for cheap
     /// serving gauges; `stat()` carries the full named record).
     pub fn peak(&self) -> usize {
-        self.state.lock().unwrap().peak
+        // Gauges must stay readable even after a stage panicked with the
+        // lock held — the occupancy fields are monotone and plain data.
+        self.state.lock().unwrap_or_else(PoisonError::into_inner).peak
     }
 
     pub fn stat(&self) -> BufferStat {
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         BufferStat {
             name: self.name.clone(),
             kind: self.kind,
@@ -250,6 +267,7 @@ impl Fifo {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -195,6 +195,7 @@ impl SliceWindow {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::hls::window::slice_plan;

@@ -62,6 +62,11 @@
 //! [`hls::streams`]: crate::hls::streams
 //! [`hls::window`]: crate::hls::window
 
+// Panic-freedom gate: the serving hot path reports typed `StreamError`s
+// (poisoning the pool) instead of unwinding worker threads.  `clippy.toml`
+// disallows Option/Result unwrap+expect; test modules opt out locally.
+#![deny(clippy::disallowed_methods)]
+
 mod elastic;
 mod executor;
 mod fifo;
@@ -138,6 +143,12 @@ pub struct StreamConfig {
     /// ignoring the fixed `replicas` knob; `None` keeps the pool at
     /// exactly `replicas`.  See [`ElasticConfig`].
     pub elastic: Option<ElasticConfig>,
+    /// Run the static analyzer ([`crate::analysis::preflight`]) inside
+    /// `plan_pipeline`, refusing provably-deadlocking configurations with
+    /// a typed [`crate::analysis::AnalysisError`] before any stage thread
+    /// spawns (default).  The deadlock-regression tests set this to
+    /// `false` to reach the runtime `Stalled` watchdog on purpose.
+    pub static_checks: bool,
 }
 
 impl Default for StreamConfig {
@@ -157,6 +168,7 @@ impl Default for StreamConfig {
             window_storage: WindowStorage::default(),
             ow_worker_cap: 4,
             elastic: None,
+            static_checks: true,
         }
     }
 }

@@ -837,6 +837,7 @@ fn fail_pool(shared: &Shared, pending: &Pending, error: &Mutex<Option<String>>, 
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::hls::streams::StreamKind;

@@ -96,7 +96,9 @@ pub(crate) fn eos() -> Box<[i32]> {
 /// consumer order — deterministic, and the blocking producer-side tee is
 /// exactly what makes the naive dataflow's Fig. 14 deadlock reproducible.
 pub(crate) fn push_all(outs: &[Arc<Fifo>], tok: Box<[i32]>) -> Result<(), StreamError> {
-    let (last, rest) = outs.split_last().expect("stage with no output");
+    let Some((last, rest)) = outs.split_last() else {
+        return Err(StreamError::Inconsistent { what: "stage has no output port" });
+    };
     for o in rest {
         o.push(tok.clone())?;
     }
@@ -552,6 +554,14 @@ pub(crate) fn plan_pipeline(
     cfg: &StreamConfig,
     acfg: &AcceleratorConfig,
 ) -> Result<PipelineBlueprint> {
+    // Static preflight (deadlock-freedom + window feasibility): refuse a
+    // provably-unsafe configuration with a typed, downcastable
+    // `analysis::AnalysisError` before any FIFO exists, let alone a
+    // thread.  The deadlock-regression tests clear `static_checks` to
+    // exercise the runtime `Stalled` watchdog behind this gate.
+    if cfg.static_checks {
+        crate::analysis::preflight(g, cfg, acfg)?;
+    }
     let shapes = infer_shapes(g).map_err(|e| anyhow!("{e}"))?;
     let timeout = cfg.progress_timeout;
 
@@ -916,7 +926,9 @@ pub(crate) fn plan_pipeline(
         }
     }
     let sources = sources.ok_or_else(|| anyhow!("graph has no input node"))?;
-    let (in_h, in_w, in_c, in_exp) = input_spec.expect("input spec recorded with sources");
+    let Some((in_h, in_w, in_c, in_exp)) = input_spec else {
+        bail!("graph input recorded no spec");
+    };
 
     let whole_tensor_elems: usize = shapes
         .iter()
@@ -2033,6 +2045,7 @@ pub(crate) fn run_stage(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::models::{arch_by_name, build_optimized_graph, synthetic_weights};

@@ -289,6 +289,9 @@ fn stream_executor_bounded_wait_instead_of_deadlock() {
     let cfg = StreamConfig {
         progress_timeout: std::time::Duration::from_millis(250),
         skip_capacity_override: Some(4),
+        // Reach past the static analyzer (which rejects this depth before
+        // any thread spawns) to exercise the runtime watchdog.
+        static_checks: false,
         ..StreamConfig::default()
     };
     let t0 = std::time::Instant::now();

@@ -164,6 +164,9 @@ fn stalled_pool_fails_typed_and_poisons_followups() {
         let cfg = StreamConfig {
             progress_timeout: Duration::from_millis(250),
             skip_capacity_override: Some(4), // below one skip token
+            // Reach past the static analyzer (which rejects this depth
+            // outright) to exercise the runtime watchdog defense-in-depth.
+            static_checks: false,
             ..Default::default()
         };
         let pool = StreamPool::new("resnet8", &g, Arc::new(weights), cfg).unwrap();
@@ -229,6 +232,9 @@ fn naive_add_undersized_skip_reproduces_fig14_deadlock_as_typed_stall() {
             progress_timeout: Duration::from_millis(400),
             // Eq. 22-like sizing (~half of Eq. 21) on the naive dataflow.
             skip_capacity_override: Some(skip_buffer_optimized(3, 3, 32, 16)),
+            // Reach past the static analyzer (tests/verify_analysis.rs
+            // proves it flags exactly this config) to the runtime watchdog.
+            static_checks: false,
             ..Default::default()
         };
         let t0 = Instant::now();

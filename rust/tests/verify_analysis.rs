@@ -1,0 +1,212 @@
+//! Static-verifier acceptance tests (the ISSUE 7 tentpole): the
+//! analyzer must approve every stock board/ILP configuration the
+//! executor actually runs bit-exact, statically flag the paper's
+//! Fig. 14 undersized-skip-FIFO configuration by edge name with its
+//! minimum safe depth, and make `plan_pipeline` refuse provably
+//! deadlocking configs with a typed [`AnalysisError`] before a single
+//! stage thread spawns.  The agreement property ties the two worlds
+//! together: configurations the verifier flags really do stall at
+//! runtime (reached via `static_checks: false`), and configurations it
+//! approves really do run.
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
+
+use resnet_hls::analysis::{self, AnalysisError, Severity};
+use resnet_hls::data::{synth_batch, TEST_SEED};
+use resnet_hls::graph::qonnx;
+use resnet_hls::hls::window::{skip_buffer_naive, skip_buffer_optimized};
+use resnet_hls::models::{
+    arch_by_name, build_optimized_graph, build_unoptimized_graph, synthetic_weights,
+};
+use resnet_hls::sim::golden;
+use resnet_hls::stream::{planned_config, run_streaming, StreamConfig};
+use resnet_hls::util::Json;
+
+/// Run `f` on a helper thread and fail LOUDLY if it exceeds `secs`.
+fn with_watchdog<F: FnOnce() + Send + 'static>(secs: u64, what: &str, f: F) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => h.join().unwrap(),
+        Err(RecvTimeoutError::Disconnected) => h.join().unwrap(),
+        Err(RecvTimeoutError::Timeout) => panic!("{what}: exceeded the {secs}s watchdog"),
+    }
+}
+
+/// The Fig. 14 reproduction config: the naive dataflow with its Eq. 21
+/// skip FIFOs forced down to the Eq. 22 optimized depth — sound only
+/// after the graph transformations, provably deadlocking without them.
+fn fig14_cfg() -> StreamConfig {
+    StreamConfig {
+        naive_add: true,
+        skip_capacity_override: Some(skip_buffer_optimized(3, 3, 32, 16)),
+        progress_timeout: Duration::from_millis(400),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn stock_configs_are_approved_and_run_bit_exact() {
+    // Approve direction of the agreement property: everything the
+    // verifier passes must actually execute, bit-exact vs golden.
+    for arch_name in ["resnet8", "resnet20"] {
+        let arch = arch_by_name(arch_name).unwrap();
+        let weights = synthetic_weights(&arch, 7);
+        let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let cfg = StreamConfig::default();
+        let acfg = planned_config(arch_name, &g, &cfg).unwrap();
+
+        let report = analysis::verify(&g, Some(&weights), &cfg, &acfg).unwrap();
+        assert!(
+            report.ok(),
+            "{arch_name}: stock config rejected:\n{report}"
+        );
+        assert_eq!(report.count(Severity::Error), 0);
+        // Every pass actually looked: fifo, window and range checks all
+        // left passed-check evidence.
+        for code in ["fifo.ok", "window.ok", "range.ok"] {
+            assert!(
+                report.diagnostics.iter().any(|d| d.code == code),
+                "{arch_name}: no {code} diagnostic in report"
+            );
+        }
+
+        let (input, _) = synth_batch(0, 1, TEST_SEED);
+        let want = golden::run(&g, &weights, &input).unwrap();
+        let (got, _) = run_streaming(&g, &weights, &input, &cfg).unwrap();
+        assert_eq!(got.data, want.data, "{arch_name}: approved config diverged from golden");
+    }
+}
+
+#[test]
+fn fig14_config_is_flagged_with_edge_name_and_min_safe_depth() {
+    let arch = arch_by_name("resnet8").unwrap();
+    let weights = synthetic_weights(&arch, 7);
+    let g = build_unoptimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let cfg = fig14_cfg();
+    let acfg = planned_config("resnet8", &g, &cfg).unwrap();
+
+    let report = analysis::verify(&g, Some(&weights), &cfg, &acfg).unwrap();
+    assert!(!report.ok(), "Fig. 14 config must be rejected:\n{report}");
+    let d = report
+        .find("fifo.undersized", "s0b0_add.skip")
+        .expect("the undersized edge must be named exactly");
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.measured, Some(skip_buffer_optimized(3, 3, 32, 16) as i64));
+    assert_eq!(d.min_safe_depth, Some(skip_buffer_naive(3, 3, 32, 16, 3, 3)));
+    // The JSON rendering carries the same machine-readable fields the
+    // README documents.
+    let j = report.to_json();
+    assert_eq!(j.at("status").and_then(|s| s.as_str()), Some("rejected"));
+}
+
+#[test]
+fn plan_rejects_deadlocking_config_before_any_thread_spawns() {
+    // `static_checks` defaults on: the pool must refuse the Fig. 14
+    // config with a typed, downcastable error — immediately, not after
+    // burning a progress timeout on spinning stage threads.
+    let arch = arch_by_name("resnet8").unwrap();
+    let weights = synthetic_weights(&arch, 7);
+    let g = build_unoptimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let (input, _) = synth_batch(0, 1, TEST_SEED);
+
+    let t0 = Instant::now();
+    let err = run_streaming(&g, &weights, &input, &fig14_cfg()).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "static rejection must not wait out a runtime stall"
+    );
+    let analysis_err = err
+        .downcast_ref::<AnalysisError>()
+        .unwrap_or_else(|| panic!("expected AnalysisError, got: {err:#}"));
+    assert!(
+        analysis_err.diagnostics.iter().any(|d| d.subject == "s0b0_add.skip"),
+        "rejection must carry the undersized edge: {analysis_err}"
+    );
+    assert!(
+        analysis_err
+            .diagnostics
+            .iter()
+            .all(|d| d.min_safe_depth.is_some() || d.code != "fifo.undersized"),
+        "undersized findings must carry the minimum safe depth"
+    );
+}
+
+#[test]
+fn flagged_configs_really_stall_at_runtime() {
+    // Flag direction of the agreement property: a config the verifier
+    // rejects, executed anyway via the `static_checks: false` escape
+    // hatch, must produce the runtime `Stalled` watchdog error — the
+    // static diagnostic and the dynamic behavior agree.
+    with_watchdog(120, "agreement stall direction", || {
+        let arch = arch_by_name("resnet8").unwrap();
+        let weights = synthetic_weights(&arch, 7);
+        let g = build_unoptimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let (input, _) = synth_batch(0, 1, TEST_SEED);
+        let bound = skip_buffer_naive(3, 3, 32, 16, 3, 3);
+        for cap in [bound / 2, bound / 4] {
+            let mut cfg = fig14_cfg();
+            cfg.skip_capacity_override = Some(cap);
+            let acfg = planned_config("resnet8", &g, &cfg).unwrap();
+            let report = analysis::verify(&g, Some(&weights), &cfg, &acfg).unwrap();
+            assert!(!report.ok(), "cap {cap}: verifier must flag this config");
+
+            cfg.static_checks = false;
+            let err = run_streaming(&g, &weights, &input, &cfg).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("stalled"),
+                "cap {cap}: flagged config must stall at runtime, got: {msg}"
+            );
+        }
+    });
+}
+
+#[test]
+fn imported_qonnx_graph_verifies_weightless() {
+    // The `repro verify --qonnx` path: a round-tripped export carries
+    // no weight blobs, so the range pass falls back to dtype worst
+    // cases — and the stock architecture still verifies clean.
+    let arch = arch_by_name("resnet8").unwrap();
+    let weights = synthetic_weights(&arch, 7);
+    let g0 = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let text = qonnx::export(&g0).to_string();
+    let g = qonnx::import(&Json::parse(&text).unwrap()).unwrap();
+
+    let cfg = StreamConfig::default();
+    let acfg = planned_config("qonnx-import", &g, &cfg).unwrap();
+    let report = analysis::verify(&g, None, &cfg, &acfg).unwrap();
+    assert!(report.ok(), "imported stock graph rejected:\n{report}");
+    assert!(
+        report
+            .diagnostics
+            .iter()
+            .any(|d| d.code == "range.ok" && d.message.contains("dtype worst case")),
+        "weightless import must use the dtype fallback"
+    );
+}
+
+#[test]
+fn malformed_qonnx_documents_fail_typed_not_abort() {
+    // Corpus mirror of the unit tests, at the exact call sequence the
+    // CLI uses: parse -> import -> (never reached) verify.
+    for text in [
+        "",
+        "{",
+        r#"{"graph":{"nodes":[{"name":"c","op_type":"QConv","inputs":[],
+            "attributes":{"cin":3,"cout":4,"kernel":3,"stride":0,"pad":1}}]}}"#,
+        r#"{"graph":{"nodes":[{"name":"x","op_type":"Relu","inputs":[],"attributes":{}},
+            {"name":"x","op_type":"Relu","inputs":[],"attributes":{}}]}}"#,
+    ] {
+        match Json::parse(text) {
+            Err(_) => {} // typed parse failure is the expected path
+            Ok(doc) => {
+                assert!(qonnx::import(&doc).is_err(), "import must reject: {text}");
+            }
+        }
+    }
+}
