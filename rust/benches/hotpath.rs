@@ -1,19 +1,34 @@
 //! Bench: the L3 hot paths — the instrument for the performance pass
 //! (EXPERIMENTS.md §Perf).  Each entry is one optimization target.
 //!
+//! Also the observability-overhead guard: the streaming executor's
+//! per-token FIFO push/pop is timed with the `obs` instrumentation
+//! disabled and enabled, and the full run (`REPRO_BENCH_QUICK` unset)
+//! asserts the probe is cheap enough to leave on.  A machine-readable
+//! `BENCH_hotpath.json` summary is written for CI trend tracking.
+//!
 //! Run: `cargo bench --bench hotpath`
+//! (`REPRO_BENCH_QUICK=1` for a short CI-ish run.)
+
+use std::collections::BTreeMap;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
 
 use resnet_hls::coordinator::{Batcher, BatcherConfig};
 use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::hls::config::configure;
+use resnet_hls::hls::streams::StreamKind;
 use resnet_hls::hls::ULTRA96;
 use resnet_hls::ilp::{loads_from_arch, solve};
 use resnet_hls::models::{arch_by_name, build_optimized_graph, default_exps, synthetic_weights};
 use resnet_hls::sim::{build_network, golden, SimOptions};
+use resnet_hls::stream::Fifo;
 use resnet_hls::util::bench::black_box;
 use resnet_hls::util::{Bencher, Json};
 
 fn main() {
+    let quick = std::env::var("REPRO_BENCH_QUICK").ok().as_deref() == Some("1");
     let mut b = Bencher::new();
 
     // 1. Golden int8 conv (the numerics hot loop).
@@ -22,7 +37,7 @@ fn main() {
     let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
     let (input1, _) = synth_batch(0, 1, TEST_SEED);
     let macs = arch.total_macs() as f64;
-    b.bench_items("golden resnet8 1 frame (MACs/s)", macs, &mut || {
+    let s_golden = b.bench_items("golden resnet8 1 frame (MACs/s)", macs, &mut || {
         black_box(golden::run(&g, &weights, &input1).unwrap());
     });
 
@@ -33,7 +48,7 @@ fn main() {
     let loads = loads_from_arch(&arch20, 2);
     let alloc = solve(&loads, 1248).unwrap();
     let cfg = configure(&arch20.name, &g20, &alloc, &ULTRA96, 2).unwrap();
-    b.bench("sim resnet20 3 frames", || {
+    let s_sim = b.bench("sim resnet20 3 frames", || {
         let mut net =
             build_network(&g20, &cfg, &SimOptions { frames: 3, ..Default::default() }).unwrap();
         let rep = net.run(3);
@@ -42,24 +57,81 @@ fn main() {
 
     // 3. Batcher planning (request-path, must be ~ns).
     let batcher = Batcher::new(BatcherConfig::default());
-    b.bench("batcher plan(70)", || {
+    let s_plan = b.bench("batcher plan(70)", || {
         black_box(batcher.plan(black_box(70)));
     });
 
     // 4. Manifest JSON parse (startup path).
     let manifest = std::fs::read_to_string(resnet_hls::paths::artifacts_dir().join("manifest.json"))
         .unwrap_or_else(|_| "{\"models\":[]}".into());
-    b.bench("manifest json parse", || {
+    let s_json = b.bench("manifest json parse", || {
         black_box(Json::parse(black_box(&manifest)).unwrap());
     });
 
     // 5. Full design flow (tooling path).
-    b.bench("fit_to_board resnet20@Ultra96", || {
+    let s_fit = b.bench("fit_to_board resnet20@Ultra96", || {
         resnet_hls::hls::resources::fit_to_board(&arch20.name, &g20, &loads, &ULTRA96, 2).unwrap();
     });
 
     // 6. ILP solve.
-    b.bench("ilp solve resnet20@1248", || {
+    let s_ilp = b.bench("ilp solve resnet20@1248", || {
         black_box(solve(black_box(&loads), 1248));
     });
+
+    // 7. Instrumented FIFO push/pop — the streaming executor's per-token
+    //    hot path — with stall/occupancy observability off vs on.  The
+    //    uncontended path costs one relaxed histogram increment when the
+    //    probe is enabled; the token is recycled so neither side pays an
+    //    allocation.  The guard keeps the probe honest about "cheap
+    //    enough to leave on" (quick CI runs are too noisy to judge).
+    const OPS: usize = 4096;
+    let abort = Arc::new(AtomicBool::new(false));
+    let fifo = Fifo::new(
+        "bench.edge".into(),
+        StreamKind::Output,
+        64,
+        abort,
+        Duration::from_secs(10),
+    );
+    let mut tok: Box<[i32]> = vec![0i32; 4].into_boxed_slice();
+    let mut pingpong = || {
+        for _ in 0..OPS {
+            fifo.push(std::mem::replace(&mut tok, Box::new([]))).unwrap();
+            tok = fifo.pop().unwrap();
+        }
+    };
+    let was_enabled = resnet_hls::obs::enabled();
+    resnet_hls::obs::set_enabled(false);
+    let s_off = b.bench_items("fifo push+pop x4096 (obs off)", OPS as f64, &mut pingpong);
+    resnet_hls::obs::set_enabled(true);
+    let s_on = b.bench_items("fifo push+pop x4096 (obs on)", OPS as f64, &mut pingpong);
+    resnet_hls::obs::set_enabled(was_enabled);
+    let op_off = s_off.median_ns / OPS as f64;
+    let op_on = s_on.median_ns / OPS as f64;
+    let ratio = s_on.median_ns / s_off.median_ns;
+    println!(
+        "fifo op: {op_off:.1} ns (obs off) -> {op_on:.1} ns (obs on), {:.1}% overhead",
+        100.0 * (ratio - 1.0)
+    );
+    assert!(
+        quick || ratio < 1.5,
+        "obs probe too expensive on the FIFO hot path: {ratio:.2}x (must stay < 1.5x)"
+    );
+
+    // ---- machine-readable summary ----
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    o.insert("bench".into(), Json::Str("hotpath".into()));
+    o.insert("quick".into(), Json::Bool(quick));
+    o.insert("golden_resnet8_macs_per_sec".into(), Json::Float(s_golden.items_per_sec()));
+    o.insert("sim_resnet20_3f_median_ns".into(), Json::Float(s_sim.median_ns));
+    o.insert("batcher_plan_median_ns".into(), Json::Float(s_plan.median_ns));
+    o.insert("manifest_parse_median_ns".into(), Json::Float(s_json.median_ns));
+    o.insert("fit_to_board_median_ns".into(), Json::Float(s_fit.median_ns));
+    o.insert("ilp_solve_median_ns".into(), Json::Float(s_ilp.median_ns));
+    o.insert("fifo_op_ns_obs_off".into(), Json::Float(op_off));
+    o.insert("fifo_op_ns_obs_on".into(), Json::Float(op_on));
+    o.insert("obs_overhead_ratio".into(), Json::Float(ratio));
+    let j = Json::Object(o);
+    std::fs::write("BENCH_hotpath.json", format!("{j}\n")).expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json: {j}");
 }

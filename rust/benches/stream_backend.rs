@@ -9,17 +9,27 @@
 //! spawned once, frames pipelined through the FIFO chain) against the
 //! same 32 frames paying plan + thread spawn + pipeline fill per frame.
 //!
+//! The pool comparison doubles as the observability-overhead guard:
+//! the pooled backend is timed with the `obs` stall/occupancy probes
+//! disabled and then enabled (the shipping default), and the full run
+//! asserts the regression stays under 3%.  A machine-readable
+//! `BENCH_stream.json` summary — including the pool's per-stage stall
+//! attribution and bottleneck verdict — is written for CI tracking.
+//!
 //! Artifact-free.  Run: `cargo bench --bench stream_backend`
 //! (`REPRO_BENCH_QUICK=1` for a short CI-ish run.)
+
+use std::collections::BTreeMap;
 
 use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::hls::streams::StreamKind;
 use resnet_hls::models::{arch_by_name, build_optimized_graph, synthetic_weights};
 use resnet_hls::runtime::{GoldenBackend, InferenceBackend, StreamBackend};
 use resnet_hls::stream::{run_streaming, ElasticConfig, StreamConfig, WindowStorage};
-use resnet_hls::util::Bencher;
+use resnet_hls::util::{Bencher, Json};
 
 fn main() {
+    let quick = std::env::var("REPRO_BENCH_QUICK").ok().as_deref() == Some("1");
     let mut b = Bencher::new();
 
     // ---- single-batch: pipelined executor vs golden ----
@@ -138,12 +148,38 @@ fn main() {
         .map(|i| synth_batch(i as u64, 1, TEST_SEED).0)
         .collect();
 
-    let s_pool = b.bench_items(
-        "pool resnet8 32 frames (2 replicas, persistent)",
+    // Observability A/B on the same warm pool: probes disabled, then
+    // enabled (the shipping default).  The instrumentation must be
+    // cheap enough to leave on — the acceptance guard is < 3% — but a
+    // quick CI run's sample budget is too noisy to judge, so the
+    // assert is full-run only (the JSON records the ratio either way).
+    resnet_hls::obs::set_enabled(false);
+    let s_pool_off = b.bench_items(
+        "pool resnet8 32 frames (2 replicas, obs off)",
         frames as f64,
         &mut || {
             pooled.infer_batch(&input).unwrap();
         },
+    );
+    resnet_hls::obs::set_enabled(true);
+    let s_pool = b.bench_items(
+        "pool resnet8 32 frames (2 replicas, obs on)",
+        frames as f64,
+        &mut || {
+            pooled.infer_batch(&input).unwrap();
+        },
+    );
+    let obs_ratio = s_pool.median_ns / s_pool_off.median_ns;
+    println!(
+        "obs overhead on the persistent pool: {:+.2}% ({:.0} -> {:.0} frames/s)",
+        100.0 * (obs_ratio - 1.0),
+        s_pool_off.items_per_sec(),
+        s_pool.items_per_sec()
+    );
+    assert!(
+        quick || obs_ratio < 1.03,
+        "obs instrumentation costs {:.2}% pool throughput (must stay < 3%)",
+        100.0 * (obs_ratio - 1.0)
     );
     let s_once = b.bench_items(
         "one-shot run_streaming resnet8 32 x 1 frame",
@@ -214,4 +250,26 @@ fn main() {
         elastic.pool().replicas(),
         elastic.pool().peak_replicas()
     );
+
+    // ---- machine-readable summary ----
+    // The stall report rides along so CI trends don't just say "slower"
+    // but *which stage* went slower: per-stage busy/blocked fractions,
+    // per-FIFO blocked time and occupancy, and the bottleneck verdict.
+    let report = pooled.pool().stall_report();
+    let bottleneck = report.bottleneck();
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    o.insert("bench".into(), Json::Str("stream_backend".into()));
+    o.insert("quick".into(), Json::Bool(quick));
+    o.insert("frames_per_batch".into(), Json::Int(frames as i64));
+    o.insert("pool_fps_obs_off".into(), Json::Float(s_pool_off.items_per_sec()));
+    o.insert("pool_fps_obs_on".into(), Json::Float(s_pool.items_per_sec()));
+    o.insert("obs_overhead_ratio".into(), Json::Float(obs_ratio));
+    o.insert("pool_vs_oneshot_speedup".into(), Json::Float(speedup));
+    o.insert("oneshot_fps".into(), Json::Float(s_once.items_per_sec()));
+    o.insert("elastic_fps".into(), Json::Float(s_elastic.items_per_sec()));
+    o.insert("bottleneck".into(), Json::Str(bottleneck.to_string()));
+    o.insert("stalls".into(), report.to_json());
+    let j = Json::Object(o);
+    std::fs::write("BENCH_stream.json", format!("{j}\n")).expect("write BENCH_stream.json");
+    println!("wrote BENCH_stream.json");
 }

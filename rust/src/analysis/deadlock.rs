@@ -234,6 +234,7 @@ pub fn check(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::hls::window::{skip_buffer_naive, skip_buffer_optimized};

@@ -158,6 +158,7 @@ pub fn check(g: &Graph, acfg: &AcceleratorConfig) -> Result<Vec<Diagnostic>> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::models::{arch_by_name, build_optimized_graph, default_exps};

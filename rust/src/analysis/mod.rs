@@ -35,6 +35,11 @@
 //! thread exists.  `StreamConfig::static_checks` is the escape hatch
 //! the deadlock-regression tests use to reach the runtime watchdog.
 
+// Verifier results feed serving preflight; diagnostics must come back as
+// typed values, never a panic.  `clippy.toml` disallows Option/Result
+// unwrap+expect; test modules opt out locally.
+#![deny(clippy::disallowed_methods)]
+
 pub mod deadlock;
 pub mod feasibility;
 pub mod ranges;
@@ -308,6 +313,7 @@ pub fn preflight(g: &Graph, cfg: &StreamConfig, acfg: &AcceleratorConfig) -> Res
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

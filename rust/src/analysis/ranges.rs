@@ -250,6 +250,7 @@ pub fn check(g: &Graph, weights: Option<&ModelWeights>) -> Result<Vec<Diagnostic
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::graph::ConvAttrs;

@@ -2,11 +2,18 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, PoisonError};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+use crate::obs::StallReport;
 
 /// Histogram bucket upper bounds in microseconds.
-const BOUNDS_US: [u64; 12] =
+pub const BOUNDS_US: [u64; 12] =
     [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, u64::MAX];
+
+/// Minimum interval between two stall-report refreshes: the report walks
+/// every stage clock and FIFO probe of every replica, which is far too
+/// much to redo after each served batch.
+const STALL_REFRESH: Duration = Duration::from_millis(250);
 
 /// Thread-safe serving metrics.
 #[derive(Debug, Default)]
@@ -39,6 +46,13 @@ pub struct Metrics {
     /// Highest replica count ever reported — shows how far an elastic
     /// pool scaled even after it drained back.
     peak_replicas: AtomicU64,
+    /// `record_batch` calls whose `executed < real` — a caller
+    /// accounting bug.  The padded-frame delta saturates to zero instead
+    /// of wrapping; this counter makes the anomaly visible.
+    pub batch_underflows: AtomicU64,
+    /// Latest streaming-pool stall-attribution report plus when it was
+    /// taken (refreshed at most every [`STALL_REFRESH`]).
+    stalls: Mutex<Option<(StallReport, Instant)>>,
     latency: Mutex<Hist>,
 }
 
@@ -57,8 +71,38 @@ impl Metrics {
     pub fn record_batch(&self, real: usize, executed: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.frames.fetch_add(real as u64, Ordering::Relaxed);
+        // `executed < real` is a caller bug; an unchecked subtraction
+        // here once wrapped to ~2^64 padded frames and poisoned every
+        // padding-efficiency figure downstream.  Saturate and count.
+        if executed < real {
+            self.batch_underflows.fetch_add(1, Ordering::Relaxed);
+        }
         self.padded_frames
-            .fetch_add((executed - real) as u64, Ordering::Relaxed);
+            .fetch_add(executed.saturating_sub(real) as u64, Ordering::Relaxed);
+    }
+
+    /// Refresh the streaming-pool stall report, at most once per
+    /// [`STALL_REFRESH`].  `f` (typically
+    /// [`InferenceBackend::stall_report`](crate::runtime::InferenceBackend::stall_report))
+    /// is only invoked when the cached report is stale, so the serving
+    /// loop can call this after every batch.
+    pub fn record_stalls<F: FnOnce() -> Option<StallReport>>(&self, f: F) {
+        let mut slot = self.stalls.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some((_, at)) = slot.as_ref() {
+            if at.elapsed() < STALL_REFRESH {
+                return;
+            }
+        }
+        if let Some(rep) = f() {
+            *slot = Some((rep, Instant::now()));
+        }
+    }
+
+    /// Latest stall-attribution report recorded via [`Self::record_stalls`]
+    /// (`None` until a streaming backend has reported one).
+    pub fn stall_report(&self) -> Option<StallReport> {
+        let slot = self.stalls.lock().unwrap_or_else(PoisonError::into_inner);
+        slot.as_ref().map(|(r, _)| r.clone())
     }
 
     /// Record a streaming backend's buffering report (peak buffered
@@ -163,6 +207,15 @@ impl Metrics {
             },
             stream_replicas: self.replicas.load(Ordering::Relaxed),
             stream_peak_replicas: self.peak_replicas.load(Ordering::Relaxed),
+            batch_underflows: self.batch_underflows.load(Ordering::Relaxed),
+            bottleneck: {
+                let slot = self.stalls.lock().unwrap_or_else(PoisonError::into_inner);
+                slot.as_ref().and_then(|(r, _)| {
+                    let b = r.bottleneck();
+                    b.limiting.as_ref()?;
+                    Some(b.to_string())
+                })
+            },
         }
     }
 }
@@ -206,6 +259,12 @@ pub struct MetricsSnapshot {
     pub stream_replicas: u64,
     /// Highest replica count ever reported (0 when none reported).
     pub stream_peak_replicas: u64,
+    /// `record_batch` calls with `executed < real` (0 in a healthy run).
+    pub batch_underflows: u64,
+    /// Rendered [`crate::obs::BottleneckReport`] of the last recorded
+    /// stall report (`None` until a streaming backend reported stalls,
+    /// or when the report had no stage data).
+    pub bottleneck: Option<String>,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -240,6 +299,12 @@ impl std::fmt::Display for MetricsSnapshot {
         if self.stream_peak_replicas > 0 {
             write!(f, "  replicas {} (peak {})", self.stream_replicas, self.stream_peak_replicas)?;
         }
+        if self.batch_underflows > 0 {
+            write!(f, "  batch-underflows {}", self.batch_underflows)?;
+        }
+        if let Some(b) = &self.bottleneck {
+            write!(f, "  bottleneck: {b}")?;
+        }
         Ok(())
     }
 }
@@ -272,7 +337,58 @@ mod tests {
         assert_eq!(s.frames, 69);
         assert_eq!(s.padded_frames, 3);
         assert_eq!(s.batches, 2);
+        assert_eq!(s.batch_underflows, 0);
         assert!((s.padding_efficiency - 69.0 / 72.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_underflow_saturates_and_is_counted() {
+        // Regression: `executed < real` used to wrap `(executed - real)
+        // as u64` to ~2^64 padded frames, destroying padding efficiency.
+        let m = Metrics::new();
+        m.record_batch(8, 5);
+        m.record_batch(4, 4);
+        let s = m.snapshot();
+        assert_eq!(s.frames, 12);
+        assert_eq!(s.padded_frames, 0, "underflow must saturate, not wrap");
+        assert_eq!(s.batch_underflows, 1);
+        assert_eq!(s.padding_efficiency, 1.0);
+        assert!(format!("{s}").contains("batch-underflows 1"), "{s}");
+    }
+
+    #[test]
+    fn stall_reports_are_throttled_and_snapshotted() {
+        use crate::obs::{StageRole, StageStall, StallReport};
+        let stall = |busy_ns: u64, blocked: u64| StageStall {
+            stage: "s0b0c1".to_string(),
+            role: StageRole::Stage,
+            elapsed_ns: busy_ns + blocked,
+            blocked_push_ns: blocked,
+            blocked_pop_ns: 0,
+            frames: 4,
+            worst_push_edge: Some(("s0b0c1.out".to_string(), blocked)),
+            worst_pop_edge: None,
+        };
+        let m = Metrics::new();
+        assert!(m.stall_report().is_none());
+        assert!(m.snapshot().bottleneck.is_none());
+        let mut calls = 0u32;
+        m.record_stalls(|| {
+            calls += 1;
+            Some(StallReport { stages: vec![stall(900, 100)], ..Default::default() })
+        });
+        // A fresh report is cached: the producer must not run again
+        // within the refresh window.
+        m.record_stalls(|| {
+            calls += 1;
+            Some(StallReport::default())
+        });
+        assert_eq!(calls, 1, "second refresh inside the window must be skipped");
+        let rep = m.stall_report().expect("first report cached");
+        assert_eq!(rep.stages.len(), 1);
+        let b = m.snapshot().bottleneck.expect("bottleneck rendered");
+        assert!(b.contains("s0b0c1"), "{b}");
+        assert!(format!("{}", m.snapshot()).contains("bottleneck:"));
     }
 
     #[test]

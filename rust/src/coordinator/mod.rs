@@ -38,7 +38,7 @@ mod router;
 mod server;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, BOUNDS_US};
 pub use router::{Request, Response, Router, RouterConfig, RouterSnapshot};
 #[allow(deprecated)]
 pub use server::InferenceServer;

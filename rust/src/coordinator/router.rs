@@ -520,6 +520,11 @@ fn serve_queue(
                 if let Some(r) = backend.replica_count() {
                     pool_metrics.record_replicas(r as u64);
                 }
+                // Streaming pools: refresh the stall-attribution report.
+                // `record_stalls` throttles internally, so the full
+                // stage/edge walk runs at most a few times per second no
+                // matter the batch rate.  Per arch only, like replicas.
+                pool_metrics.record_stalls(|| backend.stall_report());
                 let c = logits.shape.c;
                 // Same class selection as the test oracle, so serving and
                 // golden can never drift on tie-breaking.

@@ -43,6 +43,7 @@ pub mod hls;
 pub mod ilp;
 pub mod models;
 pub mod net;
+pub mod obs;
 pub mod passes;
 pub mod quant;
 pub mod runtime;

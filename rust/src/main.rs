@@ -21,11 +21,23 @@
 //!                                streaming executor's measured peak occupancy
 //!   listen     [--host H] [--port P] [--backend ...] [--workers N]
 //!              [--queue-cap N] [--dispatchers N] [--deadline-ms D]
-//!              [--duration-s S] [serve's backend flags]
+//!              [--duration-s S] [--metrics-port P] [serve's backend flags]
 //!                                TCP ingress front-end ahead of the router:
 //!                                bounded admission, load-shedding with
 //!                                retry-after, deadlines enforced at admission
-//!                                and at dequeue (see README "Network ingress")
+//!                                and at dequeue (see README "Network ingress");
+//!                                --metrics-port adds the HTTP exposition
+//!                                endpoint (/metrics Prometheus, /stats.json)
+//!   stats      [--addr H:P | --model M [--frames N] [--replicas B]
+//!              [--ow-par N] [--window-storage rows|slices]] [--json]
+//!                                pipeline observability: with --addr, scrape a
+//!                                running `listen --metrics-port` endpoint
+//!                                (Prometheus text, or /stats.json with --json);
+//!                                otherwise profile a local stream pool on
+//!                                synthetic frames and print per-stage stall
+//!                                attribution, per-FIFO occupancy and the
+//!                                bottleneck verdict (see README
+//!                                "Observability")
 //!   client     [--addr H:P] [--model M] [--frames N] [--fps F]
 //!              [--deadline-ms D] [--window W]
 //!                                stream synthetic CIFAR frames at a target FPS;
@@ -56,7 +68,8 @@ use resnet_hls::models::{
 use resnet_hls::net::{drive, DriveConfig, IngressServer, ServerConfig};
 use resnet_hls::paths::artifacts_dir;
 use resnet_hls::runtime::{
-    Artifacts, BackendFactory, Engine, GoldenFactory, PjrtFactory, SimFactory, StreamFactory,
+    Artifacts, BackendFactory, Engine, GoldenFactory, InferenceBackend, PjrtFactory, SimFactory,
+    StreamBackend, StreamFactory,
 };
 use resnet_hls::sim::{build_network, golden, SimOptions};
 use resnet_hls::util::cli::Args;
@@ -68,7 +81,7 @@ fn main() {
             "model", "board", "frames", "n", "out", "skip-factor", "ow-par", "budget", "backend",
             "workers", "replicas", "min-replicas", "max-replicas", "window-storage", "host",
             "port", "queue-cap", "dispatchers", "deadline-ms", "duration-s", "addr", "fps",
-            "window", "qonnx", "skip-capacity",
+            "window", "qonnx", "skip-capacity", "metrics-port",
         ],
     );
     let result = match args.subcommand.as_deref() {
@@ -84,9 +97,10 @@ fn main() {
         Some("client") => cmd_client(&args),
         Some("buffers") => cmd_buffers(&args),
         Some("verify") => cmd_verify(&args),
+        Some("stats") => cmd_stats(&args),
         _ => {
             eprintln!(
-                "usage: repro <info|optimize|simulate|codegen|eval-tables|golden-eval|probe-check|serve|listen|client|buffers|verify> [options]"
+                "usage: repro <info|optimize|simulate|codegen|eval-tables|golden-eval|probe-check|serve|listen|client|buffers|verify|stats> [options]"
             );
             Ok(())
         }
@@ -435,12 +449,17 @@ fn cmd_listen(args: &Args) -> Result<()> {
         default_deadline: std::time::Duration::from_millis(
             args.opt_usize("deadline-ms", 500) as u64
         ),
+        // `--metrics-port 0` works like `--port 0`: the OS picks.
+        metrics_addr: args.opt("metrics-port").map(|p| format!("{host}:{p}")),
         ..Default::default()
     };
     let server = IngressServer::start(router.clone(), cfg)?;
-    // The CI smoke job greps this exact line for the ephemeral port
+    // The CI smoke job greps these exact lines for the ephemeral ports
     // (`--port 0` lets the OS pick one).
     println!("listening on {} — {} ({desc})", server.local_addr(), arch.name);
+    if let Some(m) = server.metrics_addr() {
+        println!("metrics listening on {m}");
+    }
     {
         use std::io::Write as _;
         let _ = std::io::stdout().flush();
@@ -580,6 +599,73 @@ fn cmd_verify(args: &Args) -> Result<()> {
         "static verification rejected the configuration ({} error(s))",
         report.errors().count()
     );
+    Ok(())
+}
+
+/// Pipeline observability front-end (`repro stats`).  Two modes:
+///
+/// * `--addr H:P` — scrape a running `repro listen --metrics-port`
+///   endpoint and print the body verbatim (Prometheus text by default,
+///   `/stats.json` with `--json`);
+/// * otherwise — profile a local streaming pool: run `--frames`
+///   synthetic frames through a [`StreamBackend`] and print the
+///   per-stage stall attribution (busy / blocked-on-push /
+///   blocked-on-pop), per-FIFO occupancy histograms and the bottleneck
+///   verdict that the pool's `obs` instrumentation recorded.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let as_json = args.has_flag("json");
+    if let Some(addr) = args.opt("addr") {
+        let path = if as_json { "/stats.json" } else { "/metrics" };
+        let body = resnet_hls::net::metrics::fetch(addr, path)
+            .map_err(|e| anyhow::anyhow!("fetch http://{addr}{path}: {e}"))?;
+        print!("{body}");
+        return Ok(());
+    }
+    let arch = arch_of(args)?;
+    let frames = args.opt_usize("frames", 64);
+    let cfg = resnet_hls::stream::StreamConfig {
+        replicas: args.opt_usize("replicas", 1),
+        ow_par: args.opt_usize("ow-par", 2),
+        window_storage: match args.opt_or("window-storage", "slices") {
+            "rows" => resnet_hls::stream::WindowStorage::Rows,
+            "slices" => resnet_hls::stream::WindowStorage::Slices,
+            other => anyhow::bail!("unknown window storage {other} (expected rows|slices)"),
+        },
+        ..Default::default()
+    };
+    let dir = artifacts_dir();
+    let backend = if dir.join("manifest.json").exists() {
+        StreamBackend::from_artifacts_with(&dir, &arch.name, &[], cfg)?
+    } else {
+        StreamBackend::synthetic_with(&arch.name, 7, &[], cfg)?
+    };
+    let (input, _) = synth_batch(0, frames, TEST_SEED);
+    let t0 = std::time::Instant::now();
+    backend.infer_batch(&input)?;
+    let dt = t0.elapsed();
+    let report = backend.pool().stall_report();
+    if as_json {
+        println!("{}", report.to_json());
+        return Ok(());
+    }
+    println!(
+        "== pipeline stall attribution: {} ({frames} frames in {:.1} ms -> {:.0} FPS) ==",
+        arch.name,
+        dt.as_secs_f64() * 1e3,
+        frames as f64 / dt.as_secs_f64()
+    );
+    println!("{report}");
+    let mut spans = backend.pool().recent_spans();
+    spans.sort_by_key(|s| s.frame);
+    if let Some(last) = spans.last() {
+        println!(
+            "spans retained: {} (latest frame {}: queued {} us, total {} us)",
+            spans.len(),
+            last.frame,
+            last.queued_us,
+            last.total_us
+        );
+    }
     Ok(())
 }
 

@@ -18,7 +18,12 @@
 //!   so stream pools grow replicas from socket backlog;
 //! * [`client`] — the blocking client plus the [`client::drive`]
 //!   traffic generator shared by the example, the `client` subcommand,
-//!   the soak bench and the integration tests.
+//!   the soak bench and the integration tests;
+//! * [`metrics`] — the HTTP exposition endpoint
+//!   ([`metrics::MetricsServer`], `repro listen --metrics-port`):
+//!   Prometheus text at `/metrics` and JSON at `/stats.json`, covering
+//!   serving counters, latency percentiles and the streaming pools'
+//!   [`StallReport`](crate::obs::StallReport) stall attribution.
 //!
 //! Everything is `std`-only: no async runtime, no wire-format crates.
 
@@ -30,10 +35,12 @@
 
 pub mod admission;
 pub mod client;
+pub mod metrics;
 pub mod protocol;
 pub mod server;
 
 pub use admission::{AdmissionConfig, AdmissionQueue, Offer, Pop, ShedReason};
 pub use client::{drive, Client, DriveConfig, DriveReport};
+pub use metrics::MetricsServer;
 pub use protocol::{ErrorCode, RequestFrame, ResponseFrame, WireError};
 pub use server::{IngressServer, IngressSnapshot, ServerConfig};

@@ -67,6 +67,9 @@ pub struct ServerConfig {
     /// Maximum concurrent connections; beyond it new sockets are
     /// dropped at accept (counted, never queued).
     pub max_conns: usize,
+    /// Bind address for the HTTP metrics exposition endpoint
+    /// ([`super::metrics::MetricsServer`]); `None` = no endpoint.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -79,6 +82,7 @@ impl Default for ServerConfig {
             max_deadline: Duration::from_secs(10),
             min_retry_after: Duration::from_millis(5),
             max_conns: 256,
+            metrics_addr: None,
         }
     }
 }
@@ -205,6 +209,9 @@ pub struct IngressServer {
     acceptor: Option<JoinHandle<()>>,
     dispatchers: Vec<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// The optional HTTP exposition endpoint (`metrics_addr`), stopped
+    /// with the server so its router `Arc` is released at shutdown.
+    metrics_srv: Option<super::metrics::MetricsServer>,
 }
 
 impl IngressServer {
@@ -221,6 +228,10 @@ impl IngressServer {
             .filter_map(|a| router.metrics(a).map(|m| (a.clone(), m)))
             .collect();
         let agg = router.aggregate();
+        let metrics_srv = match &cfg.metrics_addr {
+            Some(a) => Some(super::metrics::MetricsServer::start(router.clone(), a)?),
+            None => None,
+        };
         let queue = AdmissionQueue::new(AdmissionConfig {
             capacity: cfg.queue_capacity,
             dispatchers: cfg.dispatchers,
@@ -254,12 +265,25 @@ impl IngressServer {
                 accept_loop(&shared, &listener, &conns, &live_conns)
             })?
         };
-        Ok(IngressServer { addr, shared, acceptor: Some(acceptor), dispatchers, conns })
+        Ok(IngressServer {
+            addr,
+            shared,
+            acceptor: Some(acceptor),
+            dispatchers,
+            conns,
+            metrics_srv,
+        })
     }
 
     /// The bound address (resolves port 0 to the OS-chosen port).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The metrics endpoint's bound address (`None` when the config did
+    /// not request one).
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_srv.as_ref().map(|m| m.local_addr())
     }
 
     /// Live ingress counters and queue gauges.
@@ -277,6 +301,11 @@ impl IngressServer {
     }
 
     fn stop_and_join(&mut self) {
+        // Stop the exposition endpoint first: it holds its own router
+        // Arc, which callers expect released once shutdown returns.
+        if let Some(m) = self.metrics_srv.take() {
+            m.shutdown();
+        }
         self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.queue.close();
         if let Some(a) = self.acceptor.take() {

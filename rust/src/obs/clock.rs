@@ -1,0 +1,536 @@
+//! The instrumentation core: lock-free per-edge probes, per-stage
+//! clocks, and bounded frame-span rings.
+//!
+//! Everything here is written by exactly one pipeline thread (the FIFO's
+//! single producer, its single consumer, or the one stage/feeder/sink
+//! thread that owns a clock) and read by anyone, so plain relaxed
+//! atomics carry the counters and a seqlock-lite stamp guards the rings.
+//! Readers are best-effort by design: a span assembled while the pipeline
+//! is writing may skip a stage mark, never block a serving thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Buckets of the per-FIFO occupancy-fraction histogram: bucket `i`
+/// counts pushes that left occupancy in `(i/8, (i+1)/8]` of capacity
+/// (bucket 0 includes empty).
+pub const OCC_BUCKETS: usize = 8;
+
+/// Frames of history per replica in the span ring and in each stage's
+/// boundary-mark ring.
+pub const SPAN_RING: usize = 64;
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+/// Per-FIFO stall and occupancy counters, attached to every stream FIFO
+/// at construction and shared with the stage clocks of its producer and
+/// consumer.
+///
+/// The fast path of a FIFO transfer records exactly one relaxed
+/// increment (the occupancy histogram); blocked wall time is measured
+/// only once an operation actually waits.
+#[derive(Debug, Default)]
+pub struct FifoProbe {
+    blocked_push_ns: AtomicU64,
+    blocked_pop_ns: AtomicU64,
+    push_blocks: AtomicU64,
+    pop_blocks: AtomicU64,
+    occ_hist: [AtomicU64; OCC_BUCKETS],
+}
+
+impl FifoProbe {
+    pub fn new() -> Arc<FifoProbe> {
+        Arc::new(FifoProbe::default())
+    }
+
+    /// A push left the FIFO at `occupancy` of `capacity` elements.
+    #[inline]
+    pub fn observe_occupancy(&self, occupancy: usize, capacity: usize) {
+        let cap = capacity.max(1);
+        let bucket = (occupancy * OCC_BUCKETS / cap).min(OCC_BUCKETS - 1);
+        self.occ_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A producer finished a push that had to wait `blocked` first.
+    pub fn record_push_block(&self, blocked: Duration) {
+        self.blocked_push_ns.fetch_add(blocked.as_nanos() as u64, Ordering::Relaxed);
+        self.push_blocks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A consumer finished a pop that had to wait `blocked` first.
+    pub fn record_pop_block(&self, blocked: Duration) {
+        self.blocked_pop_ns.fetch_add(blocked.as_nanos() as u64, Ordering::Relaxed);
+        self.pop_blocks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn blocked_push_ns(&self) -> u64 {
+        self.blocked_push_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn blocked_pop_ns(&self) -> u64 {
+        self.blocked_pop_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn push_blocks(&self) -> u64 {
+        self.push_blocks.load(Ordering::Relaxed)
+    }
+
+    pub fn pop_blocks(&self) -> u64 {
+        self.pop_blocks.load(Ordering::Relaxed)
+    }
+
+    pub fn occ_hist(&self) -> [u64; OCC_BUCKETS] {
+        std::array::from_fn(|i| self.occ_hist[i].load(Ordering::Relaxed))
+    }
+}
+
+/// What kind of pipeline thread a clock instruments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageRole {
+    /// The replica feeder (claims work, streams pixels into the sources).
+    Feeder,
+    /// A layer stage thread (conv/pool/gap/linear/relu/add).
+    Stage,
+    /// The replica sink (pops classified frames, answers tickets).
+    Sink,
+}
+
+/// Wall-time accounting for one pipeline thread.
+///
+/// Each FIFO has exactly one producer and one consumer stage, so a
+/// stage's blocked-on-push time is the summed producer-side blocked time
+/// of its output probes, its blocked-on-pop time the summed
+/// consumer-side blocked time of its input probes, and busy time is
+/// whatever remains of the wall clock since the replica epoch.  The
+/// clock additionally counts completed frames and stamps each frame's
+/// completion time into a bounded ring ([`SPAN_RING`] entries), which is
+/// where [`FrameSpan`] stage-boundary timestamps come from.
+#[derive(Debug)]
+pub struct StageClock {
+    name: String,
+    role: StageRole,
+    epoch: Instant,
+    frames: AtomicU64,
+    /// Ring slot stamp: frame index + 1 (0 = never written).
+    mark_seq: [AtomicU64; SPAN_RING],
+    /// Nanoseconds since `epoch` at that frame's completion.
+    mark_ns: [AtomicU64; SPAN_RING],
+    inputs: Vec<(String, Arc<FifoProbe>)>,
+    outputs: Vec<(String, Arc<FifoProbe>)>,
+}
+
+impl StageClock {
+    pub fn new(
+        name: String,
+        role: StageRole,
+        epoch: Instant,
+        inputs: Vec<(String, Arc<FifoProbe>)>,
+        outputs: Vec<(String, Arc<FifoProbe>)>,
+    ) -> Arc<StageClock> {
+        Arc::new(StageClock {
+            name,
+            role,
+            epoch,
+            frames: AtomicU64::new(0),
+            mark_seq: [ZERO; SPAN_RING],
+            mark_ns: [ZERO; SPAN_RING],
+            inputs,
+            outputs,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn role(&self) -> StageRole {
+        self.role
+    }
+
+    /// Frame boundary hook, called by the owning thread once per
+    /// completed frame: stamp the completion time and advance the
+    /// counter.  Two relaxed loads, three stores — cheap enough for every
+    /// frame.
+    pub fn frame_done(&self) {
+        let n = self.frames.load(Ordering::Relaxed);
+        let slot = (n % SPAN_RING as u64) as usize;
+        let ns = self.epoch.elapsed().as_nanos() as u64;
+        self.mark_ns[slot].store(ns, Ordering::Relaxed);
+        self.mark_seq[slot].store(n + 1, Ordering::Release);
+        self.frames.store(n + 1, Ordering::Release);
+    }
+
+    /// Completed frames.
+    pub fn frames(&self) -> u64 {
+        self.frames.load(Ordering::Acquire)
+    }
+
+    /// Completion time (ns since the replica epoch) of frame `n`, if the
+    /// mark is still in the ring and not being overwritten right now.
+    pub fn mark(&self, n: u64) -> Option<u64> {
+        if self.frames() <= n {
+            return None;
+        }
+        let slot = (n % SPAN_RING as u64) as usize;
+        if self.mark_seq[slot].load(Ordering::Acquire) != n + 1 {
+            return None;
+        }
+        let ns = self.mark_ns[slot].load(Ordering::Relaxed);
+        // Seqlock-lite re-check: a concurrent overwrite of the slot
+        // invalidates the read (best effort; see module docs).
+        if self.mark_seq[slot].load(Ordering::Acquire) != n + 1 {
+            return None;
+        }
+        Some(ns)
+    }
+
+    /// Snapshot this thread's wall-time split.
+    pub fn stall(&self) -> StageStall {
+        let elapsed_ns = self.epoch.elapsed().as_nanos() as u64;
+        let blocked_push_ns: u64 = self.outputs.iter().map(|(_, p)| p.blocked_push_ns()).sum();
+        let blocked_pop_ns: u64 = self.inputs.iter().map(|(_, p)| p.blocked_pop_ns()).sum();
+        let worst = |ports: &[(String, Arc<FifoProbe>)], f: fn(&FifoProbe) -> u64| {
+            ports
+                .iter()
+                .map(|(n, p)| (n.clone(), f(p)))
+                .filter(|(_, ns)| *ns > 0)
+                .max_by_key(|(_, ns)| *ns)
+        };
+        StageStall {
+            stage: self.name.clone(),
+            role: self.role,
+            elapsed_ns,
+            blocked_push_ns,
+            blocked_pop_ns,
+            frames: self.frames(),
+            worst_push_edge: worst(&self.outputs, FifoProbe::blocked_push_ns),
+            worst_pop_edge: worst(&self.inputs, FifoProbe::blocked_pop_ns),
+        }
+    }
+}
+
+/// One pipeline thread's wall-time split (possibly aggregated across
+/// replicas — fractions are then time-weighted averages).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageStall {
+    pub stage: String,
+    pub role: StageRole,
+    /// Wall time since the replica epoch (summed when aggregated).
+    pub elapsed_ns: u64,
+    pub blocked_push_ns: u64,
+    pub blocked_pop_ns: u64,
+    pub frames: u64,
+    /// Output edge with the most producer-side blocked time, if any.
+    pub worst_push_edge: Option<(String, u64)>,
+    /// Input edge with the most consumer-side blocked time, if any.
+    pub worst_pop_edge: Option<(String, u64)>,
+}
+
+impl StageStall {
+    /// Wall time neither blocked pushing nor popping.
+    pub fn busy_ns(&self) -> u64 {
+        self.elapsed_ns.saturating_sub(self.blocked_push_ns + self.blocked_pop_ns)
+    }
+
+    pub fn busy_frac(&self) -> f64 {
+        frac(self.busy_ns(), self.elapsed_ns)
+    }
+
+    pub fn blocked_push_frac(&self) -> f64 {
+        frac(self.blocked_push_ns, self.elapsed_ns)
+    }
+
+    pub fn blocked_pop_frac(&self) -> f64 {
+        frac(self.blocked_pop_ns, self.elapsed_ns)
+    }
+
+    /// Fold another replica's clock for the same stage into this one.
+    pub fn merge(&mut self, other: &StageStall) {
+        self.elapsed_ns += other.elapsed_ns;
+        self.blocked_push_ns += other.blocked_push_ns;
+        self.blocked_pop_ns += other.blocked_pop_ns;
+        self.frames += other.frames;
+        merge_edge(&mut self.worst_push_edge, &other.worst_push_edge);
+        merge_edge(&mut self.worst_pop_edge, &other.worst_pop_edge);
+    }
+}
+
+/// Merge a worst-edge candidate: same base edge across replicas sums its
+/// blocked time (and normalizes to the untagged name); otherwise the
+/// edge with more blocked time wins.
+fn merge_edge(into: &mut Option<(String, u64)>, other: &Option<(String, u64)>) {
+    let Some((oname, ons)) = other else { return };
+    let oname = super::base_name(oname).to_string();
+    *into = match into.take() {
+        Some((cur, cur_ns)) if super::base_name(&cur) == oname => Some((oname, cur_ns + ons)),
+        Some((cur, cur_ns)) if cur_ns >= *ons => Some((cur, cur_ns)),
+        _ => Some((oname, *ons)),
+    };
+}
+
+fn frac(part: u64, whole: u64) -> f64 {
+    if whole == 0 {
+        return 0.0;
+    }
+    part as f64 / whole as f64
+}
+
+/// Bounded ring of delivered-frame spans, written by the replica sink.
+#[derive(Debug)]
+pub struct SpanRing {
+    /// Slot stamp: replica-local frame index + 1 (0 = never written).
+    seq: [AtomicU64; SPAN_RING],
+    queued_ns: [AtomicU64; SPAN_RING],
+    total_ns: [AtomicU64; SPAN_RING],
+}
+
+impl Default for SpanRing {
+    fn default() -> Self {
+        SpanRing { seq: [ZERO; SPAN_RING], queued_ns: [ZERO; SPAN_RING], total_ns: [ZERO; SPAN_RING] }
+    }
+}
+
+impl SpanRing {
+    pub fn new() -> Arc<SpanRing> {
+        Arc::new(SpanRing::default())
+    }
+
+    /// Record replica-local frame `n`: time queued before a feeder
+    /// claimed it, and total submit-to-delivery latency.
+    pub fn record(&self, n: u64, queued: Duration, total: Duration) {
+        let slot = (n % SPAN_RING as u64) as usize;
+        self.queued_ns[slot].store(queued.as_nanos() as u64, Ordering::Relaxed);
+        self.total_ns[slot].store(total.as_nanos() as u64, Ordering::Relaxed);
+        self.seq[slot].store(n + 1, Ordering::Release);
+    }
+
+    /// `(queued_ns, total_ns)` for frame `n`, if still in the ring.
+    pub fn get(&self, n: u64) -> Option<(u64, u64)> {
+        let slot = (n % SPAN_RING as u64) as usize;
+        if self.seq[slot].load(Ordering::Acquire) != n + 1 {
+            return None;
+        }
+        let out = (
+            self.queued_ns[slot].load(Ordering::Relaxed),
+            self.total_ns[slot].load(Ordering::Relaxed),
+        );
+        if self.seq[slot].load(Ordering::Acquire) != n + 1 {
+            return None;
+        }
+        Some(out)
+    }
+}
+
+/// One delivered frame's span, assembled from the sink ring and the
+/// stage completion marks.
+#[derive(Debug, Clone)]
+pub struct FrameSpan {
+    /// Replica-local frame index.
+    pub frame: u64,
+    /// Microseconds between pool submit and a feeder claiming the frame.
+    pub queued_us: u64,
+    /// Microseconds between pool submit and ticket delivery.
+    pub total_us: u64,
+    /// `(thread, us since the replica epoch)` at each boundary the rings
+    /// still hold, in pipeline order: feeder claim, each stage's frame
+    /// completion, sink delivery.
+    pub marks_us: Vec<(String, u64)>,
+}
+
+/// Per-replica observability bundle: the feeder/stage/sink clocks on one
+/// shared epoch, the feeder's wait-for-work probe, and the span ring.
+#[derive(Debug, Clone)]
+pub struct PipelineObs {
+    pub epoch: Instant,
+    pub feeder: Arc<StageClock>,
+    pub stages: Vec<Arc<StageClock>>,
+    pub sink: Arc<StageClock>,
+    /// Synthetic "edge" for the feeder's time waiting on the shared work
+    /// queue (not a FIFO, but blocked-on-pop all the same).
+    pub queue_probe: Arc<FifoProbe>,
+    pub spans: Arc<SpanRing>,
+}
+
+impl PipelineObs {
+    /// Build the bundle for one replica.  `stages` carries, per stage in
+    /// pipeline order: its (tagged) name, its input probes and its
+    /// output probes, each probe labeled with its FIFO name.
+    #[allow(clippy::type_complexity)]
+    pub fn new(
+        tag: &str,
+        stages: Vec<(String, Vec<(String, Arc<FifoProbe>)>, Vec<(String, Arc<FifoProbe>)>)>,
+        sources: Vec<(String, Arc<FifoProbe>)>,
+        sink: (String, Arc<FifoProbe>),
+    ) -> PipelineObs {
+        let epoch = Instant::now();
+        let queue_probe = FifoProbe::new();
+        let feeder = StageClock::new(
+            format!("{tag}feeder"),
+            StageRole::Feeder,
+            epoch,
+            vec![(format!("{tag}queue"), queue_probe.clone())],
+            sources,
+        );
+        let stages = stages
+            .into_iter()
+            .map(|(name, inputs, outputs)| {
+                StageClock::new(name, StageRole::Stage, epoch, inputs, outputs)
+            })
+            .collect();
+        let sink =
+            StageClock::new(format!("{tag}sink"), StageRole::Sink, epoch, vec![sink], Vec::new());
+        PipelineObs { epoch, feeder, stages, sink, queue_probe, spans: SpanRing::new() }
+    }
+
+    /// Stall snapshots for every thread of this replica, pipeline order.
+    pub fn stalls(&self) -> Vec<StageStall> {
+        let mut out = Vec::with_capacity(self.stages.len() + 2);
+        out.push(self.feeder.stall());
+        out.extend(self.stages.iter().map(|c| c.stall()));
+        out.push(self.sink.stall());
+        out
+    }
+
+    /// Spans of the most recently delivered frames still in the ring,
+    /// oldest first.  Best effort: a stage mark that was overwritten (or
+    /// is being written) between the sink stamp and this read is simply
+    /// absent from `marks_us`.
+    pub fn recent_spans(&self) -> Vec<FrameSpan> {
+        let done = self.sink.frames();
+        let lo = done.saturating_sub(SPAN_RING as u64);
+        let mut out = Vec::new();
+        for n in lo..done {
+            let Some((queued_ns, total_ns)) = self.spans.get(n) else { continue };
+            let mut marks_us = Vec::with_capacity(self.stages.len() + 2);
+            let clocks = std::iter::once(&self.feeder)
+                .chain(self.stages.iter())
+                .chain(std::iter::once(&self.sink));
+            for clock in clocks {
+                if let Some(ns) = clock.mark(n) {
+                    marks_us.push((clock.name().to_string(), ns / 1_000));
+                }
+            }
+            out.push(FrameSpan {
+                frame: n,
+                queued_us: queued_ns / 1_000,
+                total_us: total_ns / 1_000,
+                marks_us,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_accumulates_blocked_time_and_occupancy_buckets() {
+        let p = FifoProbe::new();
+        p.observe_occupancy(0, 16); // empty -> bucket 0
+        p.observe_occupancy(8, 16); // half -> bucket 4
+        p.observe_occupancy(16, 16); // full -> clamped to bucket 7
+        p.observe_occupancy(3, 0); // degenerate capacity is clamped, no panic
+        let h = p.occ_hist();
+        assert_eq!(h[0], 1);
+        assert_eq!(h[4], 1);
+        assert_eq!(h[7], 2);
+        p.record_push_block(Duration::from_micros(5));
+        p.record_push_block(Duration::from_micros(5));
+        p.record_pop_block(Duration::from_micros(3));
+        assert_eq!(p.blocked_push_ns(), 10_000);
+        assert_eq!(p.blocked_pop_ns(), 3_000);
+        assert_eq!(p.push_blocks(), 2);
+        assert_eq!(p.pop_blocks(), 1);
+    }
+
+    #[test]
+    fn stage_clock_splits_wall_time_and_names_worst_edges() {
+        let epoch = Instant::now();
+        let in_a = FifoProbe::new();
+        let out_a = FifoProbe::new();
+        let out_b = FifoProbe::new();
+        let clock = StageClock::new(
+            "s0".into(),
+            StageRole::Stage,
+            epoch,
+            vec![("s0.in".into(), in_a.clone())],
+            vec![("next.in".into(), out_a.clone()), ("next.skip".into(), out_b.clone())],
+        );
+        in_a.record_pop_block(Duration::from_millis(2));
+        out_a.record_push_block(Duration::from_millis(1));
+        out_b.record_push_block(Duration::from_millis(4));
+        let s = clock.stall();
+        assert_eq!(s.blocked_pop_ns, 2_000_000);
+        assert_eq!(s.blocked_push_ns, 5_000_000);
+        assert_eq!(s.worst_pop_edge, Some(("s0.in".into(), 2_000_000)));
+        assert_eq!(s.worst_push_edge, Some(("next.skip".into(), 4_000_000)));
+        assert!(s.elapsed_ns >= s.blocked_push_ns + s.blocked_pop_ns || s.busy_ns() == 0);
+        // Fractions are well-defined and sum to <= 1 (busy absorbs the rest).
+        assert!(s.busy_frac() >= 0.0 && s.busy_frac() <= 1.0);
+    }
+
+    #[test]
+    fn frame_marks_survive_in_the_ring_until_overwritten() {
+        let clock =
+            StageClock::new("s".into(), StageRole::Stage, Instant::now(), vec![], vec![]);
+        for _ in 0..(SPAN_RING + 3) {
+            clock.frame_done();
+        }
+        assert_eq!(clock.frames(), SPAN_RING as u64 + 3);
+        // The first three frames were overwritten by the wraparound.
+        assert!(clock.mark(0).is_none());
+        assert!(clock.mark(2).is_none());
+        assert!(clock.mark(3).is_some());
+        assert!(clock.mark(SPAN_RING as u64 + 2).is_some());
+        // Not-yet-completed frames have no mark.
+        assert!(clock.mark(SPAN_RING as u64 + 3).is_none());
+    }
+
+    #[test]
+    fn span_ring_returns_only_live_entries() {
+        let ring = SpanRing::new();
+        ring.record(0, Duration::from_micros(10), Duration::from_micros(50));
+        assert_eq!(ring.get(0), Some((10_000, 50_000)));
+        // Overwriting the slot invalidates the old frame.
+        ring.record(SPAN_RING as u64, Duration::from_micros(1), Duration::from_micros(2));
+        assert!(ring.get(0).is_none());
+        assert_eq!(ring.get(SPAN_RING as u64), Some((1_000, 2_000)));
+    }
+
+    #[test]
+    fn stall_merge_aggregates_replicas_time_weighted() {
+        let mut a = StageStall {
+            stage: "conv".into(),
+            role: StageRole::Stage,
+            elapsed_ns: 100,
+            blocked_push_ns: 10,
+            blocked_pop_ns: 20,
+            frames: 4,
+            worst_push_edge: Some(("r1/next.in".into(), 10)),
+            worst_pop_edge: None,
+        };
+        let b = StageStall {
+            stage: "conv".into(),
+            role: StageRole::Stage,
+            elapsed_ns: 300,
+            blocked_push_ns: 30,
+            blocked_pop_ns: 0,
+            frames: 6,
+            worst_push_edge: Some(("next.in".into(), 30)),
+            worst_pop_edge: Some(("conv.in".into(), 7)),
+        };
+        a.merge(&b);
+        assert_eq!(a.elapsed_ns, 400);
+        assert_eq!(a.blocked_push_ns, 40);
+        assert_eq!(a.frames, 10);
+        // Same base edge across replicas: blocked time sums, name untagged.
+        assert_eq!(a.worst_push_edge, Some(("next.in".into(), 40)));
+        assert_eq!(a.worst_pop_edge, Some(("conv.in".into(), 7)));
+        assert!((a.busy_frac() - 340.0 / 400.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,78 @@
+//! Pipeline observability: per-stage stall attribution, frame spans and
+//! bottleneck reports for the streaming executor.
+//!
+//! The paper's whole optimization story is about *balancing* the
+//! dataflow pipeline — FIFO depths from Eq. 21/22 and loop merging exist
+//! to keep every stage's initiation interval matched — yet aggregate
+//! counters and peak occupancy alone cannot say *which* stage or FIFO
+//! edge limits throughput when a configuration plateaus.  This module is
+//! the measurement layer that answers that question, cheaply enough to
+//! leave on in production:
+//!
+//! * [`FifoProbe`] — lock-free per-edge counters attached to every
+//!   [`Fifo`](crate::stream::Fifo): wall time a producer spent blocked
+//!   pushing, wall time a consumer spent blocked popping (both recorded
+//!   only on the slow path, so an uncontended transfer costs one relaxed
+//!   atomic increment for the occupancy histogram and nothing else), and
+//!   an 8-bucket occupancy-fraction histogram on top of the peak gauge;
+//! * [`StageClock`] — per stage thread: wall time since the replica
+//!   epoch split into busy / blocked-on-push / blocked-on-pop by summing
+//!   the stage's own side of its port probes (each FIFO has exactly one
+//!   producer and one consumer stage, so the topology *is* the
+//!   attribution), plus a frame counter and a bounded ring of per-frame
+//!   completion stamps (the "stage boundary" timestamps of a frame
+//!   span);
+//! * [`SpanRing`] / [`FrameSpan`] — frame-level spans: every ticket is
+//!   timestamped entering the pool, when a replica feeder claims it, at
+//!   every stage boundary (via the stage completion rings) and at
+//!   delivery, retained in a bounded ring per replica;
+//! * [`StallReport`] / [`BottleneckReport`] — the replica-aggregated
+//!   rollup and the verdict: which stage limits the pipeline (highest
+//!   busy fraction) and which FIFO edge the most-stalled stage starves
+//!   or backpressures, e.g. `s0b0c1: 71% blocked-on-push -> edge
+//!   s0b0c2.skip`.
+//!
+//! Surfaced three ways: the `--metrics-port` exposition endpoint
+//! ([`crate::net::metrics`], Prometheus text + JSON), the `repro stats`
+//! subcommand, and rollups recorded into [`coordinator::Metrics`]
+//! snapshots through the [`InferenceBackend::stall_report`] hook.
+//!
+//! Instrumentation can be globally disabled ([`set_enabled`]) — the
+//! benches use that to measure its own overhead (`BENCH_stream.json`
+//! records the on/off throughput pair; the `hotpath` bench guards the
+//! per-operation cost).
+//!
+//! [`coordinator::Metrics`]: crate::coordinator::Metrics
+//! [`InferenceBackend::stall_report`]: crate::runtime::InferenceBackend::stall_report
+
+// Panic-freedom gate: observability must never take a serving thread
+// down.  `clippy.toml` disallows Option/Result unwrap+expect; test
+// modules opt out locally.
+#![deny(clippy::disallowed_methods)]
+
+mod clock;
+mod report;
+
+pub use clock::{
+    FifoProbe, FrameSpan, PipelineObs, SpanRing, StageClock, StageRole, StageStall, OCC_BUCKETS,
+    SPAN_RING,
+};
+pub use report::{base_name, BlockOp, BottleneckReport, EdgeStat, StallReport};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Global instrumentation switch (default on).  The hot-path hooks load
+/// it relaxed; flipping it off zeroes the *recording* cost, which is how
+/// the benches measure the cost of leaving it on.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Is instrumentation recording?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Toggle instrumentation recording process-wide (bench/test hook).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}

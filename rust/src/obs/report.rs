@@ -1,0 +1,577 @@
+//! Replica-aggregated stall rollups and the bottleneck verdict.
+//!
+//! [`StallReport`] is the exportable form of the clocks and probes in
+//! [`super::clock`]: stage rows keyed by untagged stage name (replica
+//! tags `r{i}/` stripped, counters summed — fractions become
+//! time-weighted averages across replicas), edge rows likewise, plus the
+//! pool-level gauges (frames, replicas, elastic scale events).
+//! [`BottleneckReport`] is the derived verdict the paper's balancing
+//! story needs: the stage that limits the pipeline (highest busy
+//! fraction — everything else is waiting on it) and the FIFO edge the
+//! most-stalled stage starves (blocked-on-pop) or backpressures
+//! (blocked-on-push), which under Eq. 21/22 sizing is exactly the edge
+//! whose depth or producer rate to revisit.
+
+use std::fmt;
+
+use crate::hls::streams::StreamKind;
+use crate::util::Json;
+
+use super::{StageRole, StageStall, OCC_BUCKETS};
+
+/// Strip the replica tag (`r{i}/`) off a stage/FIFO name.
+pub fn base_name(name: &str) -> &str {
+    name.rsplit_once('/').map_or(name, |(_, b)| b)
+}
+
+/// One FIFO edge's full telemetry: the sizing/occupancy view of
+/// [`BufferStat`](crate::stream::BufferStat) plus the probe counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeStat {
+    pub name: String,
+    pub kind: StreamKind,
+    /// Capacity bound in activation elements (Eq. 21/22-derived for skip
+    /// edges).
+    pub capacity: usize,
+    pub peak: usize,
+    /// Wall time the producer stage spent blocked pushing into this edge.
+    pub blocked_push_ns: u64,
+    /// Wall time the consumer stage spent blocked popping from it.
+    pub blocked_pop_ns: u64,
+    pub push_blocks: u64,
+    pub pop_blocks: u64,
+    /// Occupancy-fraction histogram: bucket `i` counts pushes that left
+    /// occupancy in `(i/8, (i+1)/8]` of capacity.
+    pub occ_hist: [u64; OCC_BUCKETS],
+}
+
+impl EdgeStat {
+    /// Fold another replica's stats for the same base edge into this one.
+    pub fn merge(&mut self, other: &EdgeStat) {
+        self.peak = self.peak.max(other.peak);
+        self.blocked_push_ns += other.blocked_push_ns;
+        self.blocked_pop_ns += other.blocked_pop_ns;
+        self.push_blocks += other.push_blocks;
+        self.pop_blocks += other.pop_blocks;
+        for (a, b) in self.occ_hist.iter_mut().zip(other.occ_hist.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Total pushes observed by the occupancy histogram.
+    pub fn pushes(&self) -> u64 {
+        self.occ_hist.iter().sum()
+    }
+}
+
+/// Which side of a FIFO transfer a stage was blocked on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockOp {
+    Push,
+    Pop,
+}
+
+impl fmt::Display for BlockOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BlockOp::Push => "push",
+            BlockOp::Pop => "pop",
+        })
+    }
+}
+
+/// The most-stalled stage and the edge it waits on.
+#[derive(Debug, Clone)]
+pub struct Victim {
+    pub stage: String,
+    /// Fraction of its wall time blocked on `op`.
+    pub frac: f64,
+    pub op: BlockOp,
+    /// The edge carrying most of that blocked time, when attributable.
+    pub edge: Option<String>,
+}
+
+/// The pipeline-limiting verdict derived from a [`StallReport`].
+#[derive(Debug, Clone, Default)]
+pub struct BottleneckReport {
+    /// Stage with the highest busy fraction — the rate limiter every
+    /// other stage is ultimately waiting on.
+    pub limiting: Option<StageStall>,
+    /// Most-stalled stage and the edge it starves or backpressures.
+    pub victim: Option<Victim>,
+}
+
+impl fmt::Display for BottleneckReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let Some(lim) = &self.limiting else {
+            return f.write_str("no stall data recorded");
+        };
+        if let Some(v) = &self.victim {
+            write!(f, "{}: {:.0}% blocked-on-{}", v.stage, v.frac * 100.0, v.op)?;
+            if let Some(edge) = &v.edge {
+                write!(f, " -> edge {edge}")?;
+            }
+            write!(f, "; ")?;
+        }
+        write!(f, "limiting stage {} ({:.0}% busy)", lim.stage, lim.busy_frac() * 100.0)
+    }
+}
+
+/// Replica-aggregated pool telemetry: per-stage wall-time splits,
+/// per-edge stall/occupancy counters, and the pool gauges.
+#[derive(Debug, Clone, Default)]
+pub struct StallReport {
+    /// Feeder, layer stages and sink, pipeline order, untagged names,
+    /// counters summed across live replicas.
+    pub stages: Vec<StageStall>,
+    /// FIFO and window-gauge edges, untagged, merged across replicas.
+    pub edges: Vec<EdgeStat>,
+    /// Frames delivered by the pool since start.
+    pub frames: u64,
+    pub replicas: usize,
+    pub peak_replicas: usize,
+    /// Elastic controller scale events since pool start.
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+}
+
+impl StallReport {
+    /// Merge per-replica stall rows by (role, untagged stage name),
+    /// preserving first-seen (pipeline) order.
+    pub fn aggregate_stages(rows: impl IntoIterator<Item = StageStall>) -> Vec<StageStall> {
+        let mut out: Vec<StageStall> = Vec::new();
+        for row in rows {
+            let key = base_name(&row.stage).to_string();
+            match out.iter_mut().find(|s| s.role == row.role && s.stage == key) {
+                Some(cur) => cur.merge(&row),
+                None => {
+                    let mut row = row;
+                    row.stage = key;
+                    out.push(row);
+                }
+            }
+        }
+        out
+    }
+
+    /// Merge per-replica edge rows by untagged FIFO name, preserving
+    /// first-seen order.
+    pub fn aggregate_edges(rows: impl IntoIterator<Item = EdgeStat>) -> Vec<EdgeStat> {
+        let mut out: Vec<EdgeStat> = Vec::new();
+        for row in rows {
+            let key = base_name(&row.name).to_string();
+            match out.iter_mut().find(|e| e.name == key) {
+                Some(cur) => cur.merge(&row),
+                None => {
+                    let mut row = row;
+                    row.name = key;
+                    out.push(row);
+                }
+            }
+        }
+        out
+    }
+
+    /// Edge row by (untagged) name.
+    pub fn edge(&self, name: &str) -> Option<&EdgeStat> {
+        self.edges.iter().find(|e| e.name == name)
+    }
+
+    /// Stage row by (untagged) name.
+    pub fn stage(&self, name: &str) -> Option<&StageStall> {
+        self.stages.iter().find(|s| s.stage == name)
+    }
+
+    /// Derive the bottleneck verdict.  Only layer stages compete — the
+    /// feeder and sink are I/O pseudo-stages whose waiting is the normal
+    /// state — and stages that processed no frames yet are skipped.
+    pub fn bottleneck(&self) -> BottleneckReport {
+        let candidates: Vec<&StageStall> = self
+            .stages
+            .iter()
+            .filter(|s| s.role == StageRole::Stage && s.elapsed_ns > 0 && s.frames > 0)
+            .collect();
+        let limiting = candidates
+            .iter()
+            .max_by(|a, b| {
+                a.busy_frac().partial_cmp(&b.busy_frac()).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|s| (*s).clone());
+        let victim = candidates
+            .iter()
+            .map(|s| {
+                let (frac, op, edge) = if s.blocked_push_ns >= s.blocked_pop_ns {
+                    (
+                        s.blocked_push_frac(),
+                        BlockOp::Push,
+                        s.worst_push_edge.as_ref().map(|(n, _)| n.clone()),
+                    )
+                } else {
+                    (
+                        s.blocked_pop_frac(),
+                        BlockOp::Pop,
+                        s.worst_pop_edge.as_ref().map(|(n, _)| n.clone()),
+                    )
+                };
+                Victim { stage: s.stage.clone(), frac, op, edge }
+            })
+            .filter(|v| v.frac > 0.0)
+            .max_by(|a, b| a.frac.partial_cmp(&b.frac).unwrap_or(std::cmp::Ordering::Equal));
+        BottleneckReport { limiting, victim }
+    }
+
+    /// The machine-readable form served by the JSON endpoint and
+    /// `repro stats --json`.
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("frames".to_string(), Json::Int(self.frames as i64));
+        o.insert("replicas".to_string(), Json::Int(self.replicas as i64));
+        o.insert("peak_replicas".to_string(), Json::Int(self.peak_replicas as i64));
+        o.insert("scale_ups".to_string(), Json::Int(self.scale_ups as i64));
+        o.insert("scale_downs".to_string(), Json::Int(self.scale_downs as i64));
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("stage".to_string(), Json::Str(s.stage.clone()));
+                m.insert(
+                    "role".to_string(),
+                    Json::Str(
+                        match s.role {
+                            StageRole::Feeder => "feeder",
+                            StageRole::Stage => "stage",
+                            StageRole::Sink => "sink",
+                        }
+                        .to_string(),
+                    ),
+                );
+                m.insert("frames".to_string(), Json::Int(s.frames as i64));
+                m.insert("busy_frac".to_string(), Json::Float(s.busy_frac()));
+                m.insert("blocked_push_frac".to_string(), Json::Float(s.blocked_push_frac()));
+                m.insert("blocked_pop_frac".to_string(), Json::Float(s.blocked_pop_frac()));
+                if let Some((edge, ns)) = &s.worst_push_edge {
+                    m.insert("worst_push_edge".to_string(), Json::Str(edge.clone()));
+                    m.insert("worst_push_edge_ns".to_string(), Json::Int(*ns as i64));
+                }
+                if let Some((edge, ns)) = &s.worst_pop_edge {
+                    m.insert("worst_pop_edge".to_string(), Json::Str(edge.clone()));
+                    m.insert("worst_pop_edge_ns".to_string(), Json::Int(*ns as i64));
+                }
+                Json::Object(m)
+            })
+            .collect();
+        o.insert("stages".to_string(), Json::Array(stages));
+        let edges = self
+            .edges
+            .iter()
+            .map(|e| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("fifo".to_string(), Json::Str(e.name.clone()));
+                m.insert("kind".to_string(), Json::Str(kind_label(e.kind).to_string()));
+                m.insert("capacity".to_string(), Json::Int(e.capacity as i64));
+                m.insert("peak".to_string(), Json::Int(e.peak as i64));
+                m.insert("blocked_push_ns".to_string(), Json::Int(e.blocked_push_ns as i64));
+                m.insert("blocked_pop_ns".to_string(), Json::Int(e.blocked_pop_ns as i64));
+                m.insert("push_blocks".to_string(), Json::Int(e.push_blocks as i64));
+                m.insert("pop_blocks".to_string(), Json::Int(e.pop_blocks as i64));
+                m.insert(
+                    "occupancy_hist".to_string(),
+                    Json::Array(e.occ_hist.iter().map(|&c| Json::Int(c as i64)).collect()),
+                );
+                Json::Object(m)
+            })
+            .collect();
+        o.insert("edges".to_string(), Json::Array(edges));
+        o.insert("bottleneck".to_string(), Json::Str(self.bottleneck().to_string()));
+        Json::Object(o)
+    }
+
+    /// Append Prometheus sample lines (no `# TYPE` headers — the
+    /// endpoint emits those once) with `labels` spliced into every
+    /// series (e.g. `arch="resnet8"`).
+    pub fn prometheus_samples(&self, labels: &str, out: &mut String) {
+        use fmt::Write as _;
+        for s in &self.stages {
+            if s.role != StageRole::Stage {
+                continue;
+            }
+            let _ = writeln!(
+                out,
+                "repro_stage_busy_fraction{{{labels},stage=\"{}\"}} {:.6}",
+                s.stage,
+                s.busy_frac()
+            );
+            let _ = writeln!(
+                out,
+                "repro_stage_blocked_fraction{{{labels},stage=\"{}\",op=\"push\"}} {:.6}",
+                s.stage,
+                s.blocked_push_frac()
+            );
+            let _ = writeln!(
+                out,
+                "repro_stage_blocked_fraction{{{labels},stage=\"{}\",op=\"pop\"}} {:.6}",
+                s.stage,
+                s.blocked_pop_frac()
+            );
+            let _ = writeln!(
+                out,
+                "repro_stage_frames_total{{{labels},stage=\"{}\"}} {}",
+                s.stage, s.frames
+            );
+        }
+        for e in &self.edges {
+            let _ = writeln!(
+                out,
+                "repro_fifo_capacity_elems{{{labels},fifo=\"{}\",kind=\"{}\"}} {}",
+                e.name,
+                kind_label(e.kind),
+                e.capacity
+            );
+            let _ = writeln!(
+                out,
+                "repro_fifo_occupancy_peak_elems{{{labels},fifo=\"{}\",kind=\"{}\"}} {}",
+                e.name,
+                kind_label(e.kind),
+                e.peak
+            );
+            for (op, ns) in [("push", e.blocked_push_ns), ("pop", e.blocked_pop_ns)] {
+                let _ = writeln!(
+                    out,
+                    "repro_fifo_blocked_seconds_total{{{labels},fifo=\"{}\",op=\"{op}\"}} {:.6}",
+                    e.name,
+                    ns as f64 / 1e9
+                );
+            }
+            // Cumulative histogram over occupancy fraction, Prometheus
+            // `le` convention (the +Inf bucket equals total pushes).
+            let mut cum = 0u64;
+            for (i, c) in e.occ_hist.iter().enumerate() {
+                cum += c;
+                let le = (i + 1) as f64 / OCC_BUCKETS as f64;
+                let _ = writeln!(
+                    out,
+                    "repro_fifo_occupancy_bucket{{{labels},fifo=\"{}\",le=\"{le}\"}} {cum}",
+                    e.name
+                );
+            }
+            let _ = writeln!(
+                out,
+                "repro_fifo_occupancy_bucket{{{labels},fifo=\"{}\",le=\"+Inf\"}} {cum}",
+                e.name
+            );
+        }
+        let _ = writeln!(out, "repro_stream_replicas{{{labels}}} {}", self.replicas);
+        let _ = writeln!(out, "repro_stream_peak_replicas{{{labels}}} {}", self.peak_replicas);
+        for (dir, n) in [("up", self.scale_ups), ("down", self.scale_downs)] {
+            let _ = writeln!(
+                out,
+                "repro_stream_scale_events_total{{{labels},dir=\"{dir}\"}} {n}"
+            );
+        }
+        let _ = writeln!(out, "repro_stream_frames_total{{{labels}}} {}", self.frames);
+    }
+}
+
+/// Stable lowercase label for a stream kind.
+pub(crate) fn kind_label(kind: StreamKind) -> &'static str {
+    match kind {
+        StreamKind::Parameter => "parameter",
+        StreamKind::WindowSlice => "window",
+        StreamKind::Output => "output",
+        StreamKind::Skip => "skip",
+        StreamKind::Dma => "dma",
+    }
+}
+
+impl fmt::Display for StallReport {
+    /// The human table behind `repro stats`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{:<20} {:>8} {:>7} {:>9} {:>8}  worst edge",
+            "thread", "frames", "busy%", "blk-push%", "blk-pop%"
+        )?;
+        for s in &self.stages {
+            let edge = if s.blocked_push_ns >= s.blocked_pop_ns {
+                s.worst_push_edge.as_ref().map(|(n, _)| format!("{n} (push)"))
+            } else {
+                s.worst_pop_edge.as_ref().map(|(n, _)| format!("{n} (pop)"))
+            };
+            writeln!(
+                f,
+                "{:<20} {:>8} {:>7.1} {:>9.1} {:>8.1}  {}",
+                s.stage,
+                s.frames,
+                s.busy_frac() * 100.0,
+                s.blocked_push_frac() * 100.0,
+                s.blocked_pop_frac() * 100.0,
+                edge.unwrap_or_default()
+            )?;
+        }
+        writeln!(
+            f,
+            "{:<20} {:>8} {:>8} {:>12} {:>11}  occupancy (8 buckets)",
+            "fifo", "cap", "peak", "blk-push ms", "blk-pop ms"
+        )?;
+        for e in &self.edges {
+            let hist =
+                e.occ_hist.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(":");
+            writeln!(
+                f,
+                "{:<20} {:>8} {:>8} {:>12.1} {:>11.1}  {hist}",
+                e.name,
+                e.capacity,
+                e.peak,
+                e.blocked_push_ns as f64 / 1e6,
+                e.blocked_pop_ns as f64 / 1e6
+            )?;
+        }
+        writeln!(
+            f,
+            "frames {}  replicas {} (peak {})  scale up/down {}/{}",
+            self.frames, self.replicas, self.peak_replicas, self.scale_ups, self.scale_downs
+        )?;
+        write!(f, "bottleneck: {}", self.bottleneck())
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+
+    fn stall(name: &str, role: StageRole, busy: u64, push: u64, pop: u64) -> StageStall {
+        StageStall {
+            stage: name.to_string(),
+            role,
+            elapsed_ns: busy + push + pop,
+            blocked_push_ns: push,
+            blocked_pop_ns: pop,
+            frames: 10,
+            worst_push_edge: (push > 0).then(|| (format!("{name}.out"), push)),
+            worst_pop_edge: (pop > 0).then(|| (format!("{name}.in"), pop)),
+        }
+    }
+
+    #[test]
+    fn aggregation_strips_replica_tags_and_sums() {
+        let rows = vec![
+            stall("conv0", StageRole::Stage, 80, 10, 10),
+            stall("r1/conv0", StageRole::Stage, 40, 50, 10),
+            stall("linear", StageRole::Stage, 10, 0, 90),
+        ];
+        let agg = StallReport::aggregate_stages(rows);
+        assert_eq!(agg.len(), 2);
+        assert_eq!(agg[0].stage, "conv0");
+        assert_eq!(agg[0].elapsed_ns, 200);
+        assert_eq!(agg[0].blocked_push_ns, 60);
+        assert_eq!(agg[0].frames, 20);
+        assert_eq!(agg[1].stage, "linear");
+    }
+
+    #[test]
+    fn bottleneck_names_limiting_stage_and_victim_edge() {
+        let report = StallReport {
+            stages: vec![
+                stall("feeder", StageRole::Feeder, 1, 99, 0),
+                stall("s0b0c1", StageRole::Stage, 90, 5, 5),
+                stall("s0b0c2", StageRole::Stage, 20, 71, 9),
+                stall("sink", StageRole::Sink, 1, 0, 99),
+            ],
+            ..Default::default()
+        };
+        let b = report.bottleneck();
+        let lim = b.limiting.expect("limiting stage");
+        assert_eq!(lim.stage, "s0b0c1");
+        let v = b.victim.expect("victim stage");
+        assert_eq!(v.stage, "s0b0c2");
+        assert_eq!(v.op, BlockOp::Push);
+        assert_eq!(v.edge.as_deref(), Some("s0b0c2.out"));
+        let line = b.to_string();
+        assert!(line.contains("s0b0c2: 71% blocked-on-push -> edge s0b0c2.out"), "{line}");
+        assert!(line.contains("limiting stage s0b0c1 (90% busy)"), "{line}");
+    }
+
+    #[test]
+    fn bottleneck_ignores_pseudo_stages_and_empty_reports() {
+        let empty = StallReport::default();
+        assert!(empty.bottleneck().limiting.is_none());
+        assert_eq!(empty.bottleneck().to_string(), "no stall data recorded");
+        // Only feeder/sink rows: still no verdict.
+        let io_only = StallReport {
+            stages: vec![
+                stall("feeder", StageRole::Feeder, 1, 99, 0),
+                stall("sink", StageRole::Sink, 1, 0, 99),
+            ],
+            ..Default::default()
+        };
+        assert!(io_only.bottleneck().limiting.is_none());
+    }
+
+    #[test]
+    fn edge_aggregation_merges_histograms_and_peaks() {
+        let mk = |name: &str, peak: usize| EdgeStat {
+            name: name.to_string(),
+            kind: StreamKind::Skip,
+            capacity: 128,
+            peak,
+            blocked_push_ns: 5,
+            blocked_pop_ns: 7,
+            push_blocks: 1,
+            pop_blocks: 2,
+            occ_hist: [1; OCC_BUCKETS],
+        };
+        let agg = StallReport::aggregate_edges(vec![mk("a.skip", 10), mk("r1/a.skip", 60)]);
+        assert_eq!(agg.len(), 1);
+        assert_eq!(agg[0].name, "a.skip");
+        assert_eq!(agg[0].peak, 60);
+        assert_eq!(agg[0].blocked_push_ns, 10);
+        assert_eq!(agg[0].occ_hist, [2; OCC_BUCKETS]);
+        assert_eq!(agg[0].pushes(), 16);
+    }
+
+    #[test]
+    fn json_and_prometheus_expose_the_required_families() {
+        let report = StallReport {
+            stages: vec![stall("s0b0c1", StageRole::Stage, 90, 5, 5)],
+            edges: StallReport::aggregate_edges(vec![EdgeStat {
+                name: "s0b0c2.skip".to_string(),
+                kind: StreamKind::Skip,
+                capacity: 128,
+                peak: 64,
+                blocked_push_ns: 1_000_000,
+                blocked_pop_ns: 0,
+                push_blocks: 3,
+                pop_blocks: 0,
+                occ_hist: [4; OCC_BUCKETS],
+            }]),
+            frames: 32,
+            replicas: 2,
+            peak_replicas: 3,
+            scale_ups: 2,
+            scale_downs: 1,
+        };
+        let j = report.to_json();
+        assert_eq!(j.at("frames").and_then(|v| v.as_i64()), Some(32));
+        let stages = j.at("stages").and_then(|v| v.as_array()).expect("stages array");
+        assert_eq!(stages[0].get("stage").and_then(|v| v.as_str()), Some("s0b0c1"));
+        let edges = j.at("edges").and_then(|v| v.as_array()).expect("edges array");
+        assert_eq!(edges[0].get("kind").and_then(|v| v.as_str()), Some("skip"));
+        assert!(j.at("bottleneck").is_some());
+
+        let mut prom = String::new();
+        report.prometheus_samples("arch=\"resnet8\"", &mut prom);
+        for family in [
+            "repro_stage_busy_fraction{arch=\"resnet8\",stage=\"s0b0c1\"}",
+            "repro_stage_blocked_fraction{arch=\"resnet8\",stage=\"s0b0c1\",op=\"push\"}",
+            "repro_fifo_occupancy_peak_elems{arch=\"resnet8\",fifo=\"s0b0c2.skip\"",
+            "repro_fifo_blocked_seconds_total{arch=\"resnet8\",fifo=\"s0b0c2.skip\",op=\"push\"}",
+            "repro_fifo_occupancy_bucket{arch=\"resnet8\",fifo=\"s0b0c2.skip\",le=\"+Inf\"} 32",
+            "repro_stream_replicas{arch=\"resnet8\"} 2",
+            "repro_stream_scale_events_total{arch=\"resnet8\",dir=\"up\"} 2",
+        ] {
+            assert!(prom.contains(family), "missing {family} in:\n{prom}");
+        }
+    }
+}

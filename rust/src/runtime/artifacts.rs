@@ -116,6 +116,7 @@ impl Artifacts {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -86,6 +86,16 @@ pub trait InferenceBackend {
     fn replica_count(&self) -> Option<usize> {
         None
     }
+    /// Full per-stage stall-attribution report of a streaming pool
+    /// backend ([`crate::obs::StallReport`]): busy / blocked-on-push /
+    /// blocked-on-pop fractions per stage thread, per-FIFO occupancy
+    /// histograms and the derived bottleneck verdict.  Heavier than
+    /// [`Self::stream_gauges`] (clones stage and edge rows), so the
+    /// serving path throttles how often it asks.  `None` for backends
+    /// without a pipeline pool, and before the first served frame.
+    fn stall_report(&self) -> Option<crate::obs::StallReport> {
+        None
+    }
 }
 
 /// Constructs [`InferenceBackend`]s inside their executor thread.
@@ -395,7 +405,7 @@ impl SimFactory {
     }
 
     fn timing(&self) -> Result<(Duration, Duration)> {
-        let mut cached = self.timing.lock().unwrap();
+        let mut cached = self.timing.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(t) = *cached {
             return Ok(t);
         }
@@ -537,6 +547,13 @@ impl InferenceBackend for StreamBackend {
 
     fn replica_count(&self) -> Option<usize> {
         Some(self.pool.replicas())
+    }
+
+    fn stall_report(&self) -> Option<crate::obs::StallReport> {
+        if self.pool.frames() == 0 {
+            return None;
+        }
+        Some(self.pool.stall_report())
     }
 }
 
@@ -681,6 +698,7 @@ impl BackendFactory for PjrtFactory {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::data::{synth_batch, TEST_SEED};

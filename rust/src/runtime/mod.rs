@@ -13,6 +13,8 @@
 //! (see /opt/xla-example/README.md).  The golden and sim backends have no
 //! artifact dependency at all.
 
+#![deny(clippy::disallowed_methods)]
+
 mod artifacts;
 pub mod backend;
 mod engine;

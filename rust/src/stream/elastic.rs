@@ -176,10 +176,14 @@ pub(crate) fn controller_loop(inner: &PoolInner, cfg: &ElasticConfig, default_hi
             // fatal: the pool keeps serving at its current size and the
             // controller simply retries on a later sample.
             Some(ScaleAction::Up) => {
-                let _ = inner.add_replica();
+                if inner.add_replica().is_ok() {
+                    inner.scale_ups.fetch_add(1, Ordering::Relaxed);
+                }
             }
             Some(ScaleAction::Down) => {
-                inner.retire_one();
+                if inner.retire_one() {
+                    inner.scale_downs.fetch_add(1, Ordering::Relaxed);
+                }
             }
             None => {}
         }

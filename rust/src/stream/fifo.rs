@@ -20,6 +20,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::hls::streams::StreamKind;
+use crate::obs;
 
 /// How often a blocked stream operation re-checks the abort flag.
 const POLL: Duration = Duration::from_millis(20);
@@ -87,16 +88,42 @@ pub struct PeakGauge {
     kind: StreamKind,
     capacity: usize,
     peak: AtomicUsize,
+    probe: Arc<obs::FifoProbe>,
 }
 
 impl PeakGauge {
     pub fn new(name: String, kind: StreamKind, capacity: usize) -> Arc<PeakGauge> {
-        Arc::new(PeakGauge { name, kind, capacity, peak: AtomicUsize::new(0) })
+        Arc::new(PeakGauge {
+            name,
+            kind,
+            capacity,
+            peak: AtomicUsize::new(0),
+            probe: obs::FifoProbe::new(),
+        })
     }
 
     /// Record an observed occupancy (elements currently held).
     pub fn observe(&self, held: usize) {
         self.peak.fetch_max(held, Ordering::Relaxed);
+        if obs::enabled() {
+            self.probe.observe_occupancy(held, self.capacity);
+        }
+    }
+
+    /// Full edge telemetry (occupancy histogram; gauges never block, so
+    /// the stall counters stay zero).
+    pub fn edge_stat(&self) -> obs::EdgeStat {
+        obs::EdgeStat {
+            name: self.name.clone(),
+            kind: self.kind,
+            capacity: self.capacity,
+            peak: self.peak.load(Ordering::Relaxed),
+            blocked_push_ns: 0,
+            blocked_pop_ns: 0,
+            push_blocks: 0,
+            pop_blocks: 0,
+            occ_hist: self.probe.occ_hist(),
+        }
     }
 
     /// Peak elements observed (no allocation — for cheap serving gauges).
@@ -129,6 +156,9 @@ pub struct Fifo {
     abort: Arc<AtomicBool>,
     state: Mutex<FifoState>,
     cv: Condvar,
+    /// Stall/occupancy telemetry, shared with the producer's and
+    /// consumer's [`obs::StageClock`]s.
+    probe: Arc<obs::FifoProbe>,
 }
 
 impl Fifo {
@@ -156,6 +186,7 @@ impl Fifo {
             abort,
             state: Mutex::new(FifoState { queue: VecDeque::new(), occupancy: 0, peak: 0 }),
             cv: Condvar::new(),
+            probe: obs::FifoProbe::new(),
         })
     }
 
@@ -166,6 +197,10 @@ impl Fifo {
     /// this so shutdown can never itself deadlock.
     pub fn push(&self, token: Box<[i32]>) -> Result<(), StreamError> {
         let deadline = Instant::now() + self.timeout;
+        // Blocked wall time is measured only once the push actually has
+        // to wait; the uncontended path records one relaxed increment
+        // (the occupancy histogram) and nothing else.
+        let mut blocked_since: Option<Instant> = None;
         let mut st = self.locked()?;
         loop {
             if st.occupancy + token.len() <= self.capacity {
@@ -173,9 +208,29 @@ impl Fifo {
                 st.peak = st.peak.max(st.occupancy);
                 st.queue.push_back(token);
                 self.cv.notify_all();
+                if obs::enabled() {
+                    self.probe.observe_occupancy(st.occupancy, self.capacity);
+                    if let Some(t0) = blocked_since {
+                        self.probe.record_push_block(t0.elapsed());
+                    }
+                }
                 return Ok(());
             }
-            st = self.wait(st, deadline, "push")?;
+            if blocked_since.is_none() && obs::enabled() {
+                blocked_since = Some(Instant::now());
+            }
+            st = match self.wait(st, deadline, "push") {
+                Ok(g) => g,
+                Err(e) => {
+                    // Account the wait even when the push fails: a
+                    // stalled edge is exactly what the bottleneck report
+                    // must name.
+                    if let Some(t0) = blocked_since {
+                        self.probe.record_push_block(t0.elapsed());
+                    }
+                    return Err(e);
+                }
+            };
         }
     }
 
@@ -186,15 +241,22 @@ impl Fifo {
     /// deadlock cycle necessarily blocks some peer on a bounded push or
     /// mid-frame pop, so stall detection is not weakened.
     pub fn pop_idle(&self) -> Result<Box<[i32]>, StreamError> {
+        let mut blocked_since: Option<Instant> = None;
         let mut st = self.locked()?;
         loop {
             if let Some(tok) = st.queue.pop_front() {
                 st.occupancy -= tok.len();
                 self.cv.notify_all();
+                if let Some(t0) = blocked_since {
+                    self.probe.record_pop_block(t0.elapsed());
+                }
                 return Ok(tok);
             }
             if self.abort.load(Ordering::SeqCst) {
                 return Err(StreamError::Aborted);
+            }
+            if blocked_since.is_none() && obs::enabled() {
+                blocked_since = Some(Instant::now());
             }
             let (g, _) = self
                 .cv
@@ -207,14 +269,29 @@ impl Fifo {
     /// Pop the oldest token, blocking (bounded) until one is available.
     pub fn pop(&self) -> Result<Box<[i32]>, StreamError> {
         let deadline = Instant::now() + self.timeout;
+        let mut blocked_since: Option<Instant> = None;
         let mut st = self.locked()?;
         loop {
             if let Some(tok) = st.queue.pop_front() {
                 st.occupancy -= tok.len();
                 self.cv.notify_all();
+                if let Some(t0) = blocked_since {
+                    self.probe.record_pop_block(t0.elapsed());
+                }
                 return Ok(tok);
             }
-            st = self.wait(st, deadline, "pop")?;
+            if blocked_since.is_none() && obs::enabled() {
+                blocked_since = Some(Instant::now());
+            }
+            st = match self.wait(st, deadline, "pop") {
+                Ok(g) => g,
+                Err(e) => {
+                    if let Some(t0) = blocked_since {
+                        self.probe.record_pop_block(t0.elapsed());
+                    }
+                    return Err(e);
+                }
+            };
         }
     }
 
@@ -262,6 +339,28 @@ impl Fifo {
             kind: self.kind,
             capacity: self.capacity,
             peak: st.peak,
+        }
+    }
+
+    /// The stall/occupancy probe shared with this edge's producer and
+    /// consumer stage clocks.
+    pub fn probe(&self) -> Arc<obs::FifoProbe> {
+        self.probe.clone()
+    }
+
+    /// Full edge telemetry: sizing/peak plus the probe counters.
+    pub fn edge_stat(&self) -> obs::EdgeStat {
+        let stat = self.stat();
+        obs::EdgeStat {
+            name: stat.name,
+            kind: stat.kind,
+            capacity: stat.capacity,
+            peak: stat.peak,
+            blocked_push_ns: self.probe.blocked_push_ns(),
+            blocked_pop_ns: self.probe.blocked_pop_ns(),
+            push_blocks: self.probe.push_blocks(),
+            pop_blocks: self.probe.pop_blocks(),
+            occ_hist: self.probe.occ_hist(),
         }
     }
 }
@@ -335,6 +434,48 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         abort.store(true, Ordering::SeqCst);
         assert!(matches!(h.join().unwrap().unwrap_err(), StreamError::Aborted));
+    }
+
+    #[test]
+    fn probe_attributes_blocked_time_to_the_right_side() {
+        let f = fifo(3, 2_000);
+        f.push(vec![0; 3].into_boxed_slice()).unwrap();
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.push(vec![7; 3].into_boxed_slice()));
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(f.pop().unwrap().len(), 3);
+        h.join().unwrap().unwrap();
+        let e = f.edge_stat();
+        assert_eq!(e.push_blocks, 1, "exactly the second push waited");
+        assert!(e.blocked_push_ns >= 20_000_000, "waited ~40ms, got {}ns", e.blocked_push_ns);
+        assert_eq!(e.pop_blocks, 0, "the pop found a token immediately");
+        // Both pushes filled the FIFO to capacity -> top occupancy bucket.
+        assert_eq!(e.occ_hist[crate::obs::OCC_BUCKETS - 1], 2);
+        assert_eq!(e.peak, 3);
+        assert_eq!(e.capacity, 3);
+    }
+
+    #[test]
+    fn stalled_push_still_accounts_its_wait() {
+        let f = fifo(2, 60);
+        f.push(vec![1, 2].into_boxed_slice()).unwrap();
+        let err = f.push(vec![3, 4].into_boxed_slice()).unwrap_err();
+        assert!(matches!(err, StreamError::Stalled { .. }));
+        let e = f.edge_stat();
+        assert_eq!(e.push_blocks, 1);
+        assert!(e.blocked_push_ns >= 40_000_000, "got {}ns", e.blocked_push_ns);
+    }
+
+    #[test]
+    fn peak_gauge_histograms_observed_occupancy() {
+        let g = PeakGauge::new("lb".into(), StreamKind::WindowSlice, 64);
+        g.observe(8);
+        g.observe(60);
+        let e = g.edge_stat();
+        assert_eq!(e.peak, 60);
+        assert_eq!(e.blocked_push_ns, 0);
+        assert_eq!(e.occ_hist[1], 1); // 8/64 -> bucket 1
+        assert_eq!(e.occ_hist[7], 1); // 60/64 -> top bucket
     }
 
     #[test]

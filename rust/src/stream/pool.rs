@@ -46,7 +46,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -54,6 +54,7 @@ use crate::graph::{infer_shapes, Edge, Graph, Op};
 use crate::hls::config::{configure, AcceleratorConfig};
 use crate::ilp::{solve, LayerLoad};
 use crate::models::ModelWeights;
+use crate::obs::{self, FifoProbe, PipelineObs, SpanRing, StageClock};
 use crate::quant::{QTensor, Shape4};
 
 use super::elastic::{controller_loop, LoadSample};
@@ -67,7 +68,16 @@ use super::{StreamConfig, StreamStats};
 const POLL: Duration = Duration::from_millis(20);
 
 type FrameResult = Result<Vec<i32>, String>;
-type Pending = Arc<Mutex<VecDeque<mpsc::Sender<FrameResult>>>>;
+
+/// In-flight frame bookkeeping a feeder hands its replica's sink: the
+/// responder plus the span timestamps (submit instant, queue wait).
+struct PendingFrame {
+    resp: mpsc::Sender<FrameResult>,
+    submitted: Instant,
+    queued_ns: u64,
+}
+
+type Pending = Arc<Mutex<VecDeque<PendingFrame>>>;
 
 /// Recover the guard of a poisoned mutex: shutdown, poison and stats
 /// paths must always complete even if a stage thread panicked while
@@ -145,6 +155,8 @@ impl FrameTicket {
 struct Job {
     pixels: Box<[i32]>,
     resp: mpsc::Sender<FrameResult>,
+    /// When the frame entered the pool (frame-span origin).
+    submitted: Instant,
 }
 
 struct QueueState {
@@ -170,6 +182,8 @@ struct ReplicaHandle {
     /// feeder stops claiming frames (between frames, never mid-frame)
     /// and flows the end-of-stream sentinel.
     retire: Arc<AtomicBool>,
+    /// This replica's stall clocks and span ring.
+    obs: PipelineObs,
 }
 
 /// Everything the pool's threads (and the elastic controller) share.
@@ -192,6 +206,9 @@ pub(crate) struct PoolInner {
     /// Replica ids freed by retirement, reused before minting new ones.
     free_ids: Mutex<Vec<usize>>,
     next_replica: AtomicUsize,
+    /// Elastic scale events since pool start (controller-incremented).
+    pub(crate) scale_ups: std::sync::atomic::AtomicU64,
+    pub(crate) scale_downs: std::sync::atomic::AtomicU64,
     /// Stops the elastic controller (checked every sample).
     pub(crate) ctl_stop: AtomicBool,
     blueprint: PipelineBlueprint,
@@ -245,6 +262,21 @@ impl PoolInner {
         let plan = self.blueprint.instantiate(&abort, &tag);
         let fifos = plan.fifos.clone();
         let gauges = plan.gauges.clone();
+        // The replica's observability bundle is wired straight off the
+        // plan topology: each stage's clock shares the probes of its own
+        // FIFO ports, so stall time attributes itself.
+        let robs = PipelineObs::new(
+            &tag,
+            plan.stages
+                .iter()
+                .map(|st| {
+                    let (ins, outs) = st.ports();
+                    (st.name().to_string(), ins, outs)
+                })
+                .collect(),
+            plan.sources.iter().map(|f| (f.name().to_string(), f.probe())).collect(),
+            (plan.sink.name().to_string(), plan.sink.probe()),
+        );
         let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
         let handles = spawn_replica(
             &self.name,
@@ -257,6 +289,7 @@ impl PoolInner {
             retire.clone(),
             self.frames_done.clone(),
             self.blueprint.in_c,
+            &robs,
         )?;
         // The handles live in a cell the supervisor takes on startup: if
         // its spawn fails, they are still here to abort + join, so the
@@ -299,7 +332,7 @@ impl PoolInner {
             }
         };
         let mut reps = recover(&self.replicas);
-        reps.push(ReplicaHandle { id, supervisor: Some(sup), fifos, gauges, retire });
+        reps.push(ReplicaHandle { id, supervisor: Some(sup), fifos, gauges, retire, obs: robs });
         self.peak_replicas.fetch_max(reps.len(), Ordering::Relaxed);
         Ok(())
     }
@@ -394,6 +427,8 @@ impl StreamPool {
             peak_replicas: AtomicUsize::new(0),
             free_ids: Mutex::new(Vec::new()),
             next_replica: AtomicUsize::new(0),
+            scale_ups: std::sync::atomic::AtomicU64::new(0),
+            scale_downs: std::sync::atomic::AtomicU64::new(0),
             ctl_stop: AtomicBool::new(false),
             blueprint,
             weights,
@@ -441,7 +476,11 @@ impl StreamPool {
                 return Err(anyhow!("{p}"));
             }
             anyhow::ensure!(st.open, "stream pool stopped");
-            st.jobs.push_back(Job { pixels: Box::from(pixels), resp: tx });
+            st.jobs.push_back(Job {
+                pixels: Box::from(pixels),
+                resp: tx,
+                submitted: Instant::now(),
+            });
             self.inner.frames_submitted.fetch_add(1, Ordering::Relaxed);
         }
         self.inner.shared.cv.notify_one();
@@ -582,6 +621,47 @@ impl StreamPool {
         (peak, self.inner.blueprint.whole_tensor_elems * self.peak_replicas().max(1))
     }
 
+    /// Replica-aggregated stall/occupancy report: per-stage wall-time
+    /// splits (feeder + layer stages + sink, replica tags stripped and
+    /// counters summed), per-edge FIFO telemetry, and the pool gauges.
+    /// Readable while the pool runs — atomics and the bookkeeping locks
+    /// only, never a stage-thread join.
+    pub fn stall_report(&self) -> obs::StallReport {
+        let (stage_rows, edge_rows, replicas) = {
+            let reps = recover(&self.inner.replicas);
+            let mut stage_rows = Vec::new();
+            let mut edge_rows = Vec::new();
+            for r in reps.iter() {
+                stage_rows.extend(r.obs.stalls());
+                edge_rows.extend(r.fifos.iter().map(|f| f.edge_stat()));
+                edge_rows.extend(r.gauges.iter().map(|g| g.edge_stat()));
+            }
+            (stage_rows, edge_rows, reps.len())
+        };
+        obs::StallReport {
+            stages: obs::StallReport::aggregate_stages(stage_rows),
+            edges: obs::StallReport::aggregate_edges(edge_rows),
+            frames: self.frames() as u64,
+            replicas,
+            peak_replicas: self.peak_replicas(),
+            scale_ups: self.inner.scale_ups.load(Ordering::Relaxed),
+            scale_downs: self.inner.scale_downs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The pipeline-limiting verdict derived from the current stall
+    /// report.
+    pub fn bottleneck(&self) -> obs::BottleneckReport {
+        self.stall_report().bottleneck()
+    }
+
+    /// Frame spans still held in the replicas' bounded rings, oldest
+    /// first per replica (best effort — see [`obs::PipelineObs`]).
+    pub fn recent_spans(&self) -> Vec<obs::FrameSpan> {
+        let reps = recover(&self.inner.replicas);
+        reps.iter().flat_map(|r| r.obs.recent_spans()).collect()
+    }
+
     /// Graceful shutdown: stop accepting frames, drain everything
     /// in-flight (every accepted frame still gets its response), join all
     /// threads, and return the final buffering stats.
@@ -639,6 +719,7 @@ fn spawn_replica(
     retire: Arc<AtomicBool>,
     frames_done: Arc<AtomicUsize>,
     in_c: usize,
+    robs: &PipelineObs,
 ) -> Result<Vec<JoinHandle<Result<(), StreamError>>>> {
     let PipelinePlan { stages, sources, sink, .. } = plan;
     let mut handles: Vec<JoinHandle<Result<(), StreamError>>> = Vec::new();
@@ -647,18 +728,24 @@ fn spawn_replica(
             let shared = shared.clone();
             let abort = abort.clone();
             let pending = pending.clone();
-            move || feeder_loop(&shared, &abort, &retire, &sources, &pending, in_c)
+            let clock = robs.feeder.clone();
+            let queue_probe = robs.queue_probe.clone();
+            move || {
+                feeder_loop(&shared, &abort, &retire, &sources, &pending, in_c, &clock, &queue_probe)
+            }
         })?;
-        for st in stages {
+        for (st, clock) in stages.into_iter().zip(robs.stages.iter().cloned()) {
             let w = weights.clone();
             spawn_thread(format!("strm-{}", st.name()), &mut handles, &abort, move || {
-                run_stage(&st, &w)
+                run_stage(&st, &w, &clock)
             })?;
         }
         spawn_thread(format!("strm-{name}-r{r}-sink"), &mut handles, &abort, {
             let pending = pending.clone();
             let frames_done = frames_done.clone();
-            move || sink_loop(&sink, &pending, &frames_done)
+            let clock = robs.sink.clone();
+            let spans = robs.spans.clone();
+            move || sink_loop(&sink, &pending, &frames_done, &clock, &spans)
         })?;
         Ok(())
     })();
@@ -694,6 +781,7 @@ fn spawn_thread(
 /// request from the elastic controller, flow the end-of-stream sentinel
 /// so the replica drains and exits cleanly — retirement is only ever
 /// observed *between* frames, never mid-frame.
+#[allow(clippy::too_many_arguments)]
 fn feeder_loop(
     shared: &Shared,
     abort: &AtomicBool,
@@ -701,11 +789,17 @@ fn feeder_loop(
     sources: &[Arc<Fifo>],
     pending: &Pending,
     in_c: usize,
+    clock: &StageClock,
+    queue_probe: &FifoProbe,
 ) -> Result<(), StreamError> {
     loop {
         let job = {
+            // Time blocked waiting for work is the feeder's
+            // "blocked-on-pop" — recorded against its synthetic queue
+            // probe only once it actually waits.
+            let mut blocked_since: Option<Instant> = None;
             let mut st = locked(&shared.q, "work-queue lock poisoned")?;
-            loop {
+            let claimed = loop {
                 if abort.load(Ordering::SeqCst) {
                     return Err(StreamError::Aborted);
                 }
@@ -721,21 +815,35 @@ fn feeder_loop(
                 if !st.open {
                     break None;
                 }
+                if blocked_since.is_none() && obs::enabled() {
+                    blocked_since = Some(Instant::now());
+                }
                 let (g, _) = shared
                     .cv
                     .wait_timeout(st, POLL)
                     .map_err(|_| StreamError::Inconsistent { what: "work-queue lock poisoned" })?;
                 st = g;
+            };
+            drop(st);
+            if let (Some(t0), Some(_)) = (blocked_since, claimed.as_ref()) {
+                queue_probe.record_pop_block(t0.elapsed());
             }
+            claimed
         };
         match job {
             Some(job) => {
+                let queued_ns = job.submitted.elapsed().as_nanos() as u64;
                 // Register the responder *before* the first pixel: the
                 // sink pairs results with this queue in feed order.
-                locked(pending, "pending-responders lock poisoned")?.push_back(job.resp);
+                locked(pending, "pending-responders lock poisoned")?.push_back(PendingFrame {
+                    resp: job.resp,
+                    submitted: job.submitted,
+                    queued_ns,
+                });
                 for px in job.pixels.chunks_exact(in_c) {
                     push_all(sources, Box::from(px))?;
                 }
+                clock.frame_done();
             }
             None => {
                 for f in sources {
@@ -752,6 +860,8 @@ fn sink_loop(
     sink: &Fifo,
     pending: &Pending,
     frames_done: &AtomicUsize,
+    clock: &StageClock,
+    spans: &SpanRing,
 ) -> Result<(), StreamError> {
     loop {
         // Deadline-free: the sink legitimately idles while the pool has
@@ -766,12 +876,23 @@ fn sink_loop(
         // violated invariant degrades this replica into the supervisor's
         // typed error path (poisoning the pool) instead of aborting the
         // serving process.
-        let resp = locked(pending, "pending-responders lock poisoned")?
+        let pf = locked(pending, "pending-responders lock poisoned")?
             .pop_front()
             .ok_or(StreamError::Inconsistent {
                 what: "sink produced a frame with no pending submitter",
             })?;
-        let _ = resp.send(Ok(tok.to_vec()));
+        let _ = pf.resp.send(Ok(tok.to_vec()));
+        if obs::enabled() {
+            // Replica-local frame index = completed frames so far; the
+            // span must be in the ring before frame_done makes it
+            // visible to readers.
+            spans.record(
+                clock.frames(),
+                Duration::from_nanos(pf.queued_ns),
+                pf.submitted.elapsed(),
+            );
+        }
+        clock.frame_done();
         frames_done.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -831,8 +952,8 @@ fn fail_pool(shared: &Shared, pending: &Pending, error: &Mutex<Option<String>>, 
     for j in drained {
         let _ = j.resp.send(Err(msg.clone()));
     }
-    for tx in recover(pending).drain(..) {
-        let _ = tx.send(Err(msg.clone()));
+    for pf in recover(pending).drain(..) {
+        let _ = pf.resp.send(Err(msg.clone()));
     }
 }
 
@@ -841,6 +962,18 @@ fn fail_pool(shared: &Shared, pending: &Pending, error: &Mutex<Option<String>>, 
 mod tests {
     use super::*;
     use crate::hls::streams::StreamKind;
+    use crate::obs::StageRole;
+
+    fn sink_clock() -> (Arc<StageClock>, Arc<SpanRing>) {
+        (
+            StageClock::new("sink".into(), StageRole::Sink, Instant::now(), vec![], vec![]),
+            SpanRing::new(),
+        )
+    }
+
+    fn pending_frame(resp: mpsc::Sender<FrameResult>) -> PendingFrame {
+        PendingFrame { resp, submitted: Instant::now(), queued_ns: 0 }
+    }
 
     /// Regression (was `.expect("sink produced a frame with no pending
     /// submitter")`): an inconsistent pending queue must surface as the
@@ -858,7 +991,8 @@ mod tests {
         sink.push(vec![1, 2, 3].into_boxed_slice()).unwrap();
         let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
         let frames = AtomicUsize::new(0);
-        let err = sink_loop(&sink, &pending, &frames).unwrap_err();
+        let (clock, spans) = sink_clock();
+        let err = sink_loop(&sink, &pending, &frames, &clock, &spans).unwrap_err();
         assert!(
             matches!(err, StreamError::Inconsistent { .. }),
             "expected Inconsistent, got {err:?}"
@@ -882,10 +1016,10 @@ mod tests {
             .lock()
             .unwrap()
             .jobs
-            .push_back(Job { pixels: Box::from([0i32; 4]), resp: qtx });
+            .push_back(Job { pixels: Box::from([0i32; 4]), resp: qtx, submitted: Instant::now() });
         let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
         let (ptx, prx) = mpsc::channel();
-        pending.lock().unwrap().push_back(ptx);
+        pending.lock().unwrap().push_back(pending_frame(ptx));
         let error = Mutex::new(None);
         fail_pool(
             &shared,
@@ -927,7 +1061,11 @@ mod tests {
         let abort = AtomicBool::new(false);
         let retire = AtomicBool::new(false);
         let pending: Pending = Arc::new(Mutex::new(VecDeque::new()));
-        let err = feeder_loop(&shared, &abort, &retire, &[], &pending, 3).unwrap_err();
+        let clock =
+            StageClock::new("feeder".into(), StageRole::Feeder, Instant::now(), vec![], vec![]);
+        let probe = FifoProbe::new();
+        let err =
+            feeder_loop(&shared, &abort, &retire, &[], &pending, 3, &clock, &probe).unwrap_err();
         assert!(matches!(err, StreamError::Inconsistent { .. }), "{err}");
         assert!(format!("{err}").contains("lock poisoned"), "{err}");
         // fail_pool still completes on the poisoned lock (recovered
@@ -1002,7 +1140,8 @@ mod tests {
         );
         sink.push(vec![1].into_boxed_slice()).unwrap();
         let frames = AtomicUsize::new(0);
-        let err = sink_loop(&sink, &pending, &frames).unwrap_err();
+        let (clock, spans) = sink_clock();
+        let err = sink_loop(&sink, &pending, &frames, &clock, &spans).unwrap_err();
         assert!(matches!(err, StreamError::Inconsistent { .. }), "{err}");
         assert!(format!("{err}").contains("lock poisoned"), "{err}");
     }

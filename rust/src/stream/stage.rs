@@ -56,6 +56,7 @@ use crate::hls::config::AcceleratorConfig;
 use crate::hls::streams::{dma_stream, output_stream, StreamKind};
 use crate::hls::window::SlicePlan;
 use crate::models::{ConvWeights, ModelWeights};
+use crate::obs::StageClock;
 use crate::quant::{clip_i8, clip_i8_wide, requantize, round_shift, round_shift_i64};
 
 use super::fifo::{Fifo, PeakGauge, StreamError};
@@ -477,6 +478,43 @@ impl StagePlan<usize, BufferSpec> {
                 in_b: port(&p.in_b),
                 outs: ports(&p.outs),
             }),
+        }
+    }
+}
+
+/// FIFO probes of one side of a stage, labeled with their FIFO names.
+pub(crate) type PortProbes = Vec<(String, Arc<crate::obs::FifoProbe>)>;
+
+impl RunStagePlan {
+    /// The `(inputs, outputs)` FIFO probes of this stage's thread — the
+    /// topology its [`StageClock`] attributes stall time with.  Each FIFO
+    /// has exactly one producer and one consumer stage, and conv
+    /// channel/column workers talk to their host over mpsc channels,
+    /// never FIFOs, so every blocking op on these ports is by this
+    /// stage's own thread.
+    pub(crate) fn ports(&self) -> (PortProbes, PortProbes) {
+        let tap = |f: &Arc<Fifo>| (f.name().to_string(), f.probe());
+        let taps = |v: &[Arc<Fifo>]| v.iter().map(tap).collect::<Vec<_>>();
+        match self {
+            StagePlan::Conv(p) => {
+                let mut ins = vec![tap(&p.input)];
+                if let Some(sk) = &p.skip {
+                    ins.push(tap(&sk.fifo));
+                }
+                let mut outs = taps(&p.outs);
+                if let Some(fwd) = &p.forward {
+                    outs.extend(fwd.iter().map(tap));
+                }
+                if let Some(ds) = &p.ds {
+                    outs.extend(ds.outs.iter().map(tap));
+                }
+                (ins, outs)
+            }
+            StagePlan::Pool(p) => (vec![tap(&p.input)], taps(&p.outs)),
+            StagePlan::Gap(p) => (vec![tap(&p.input)], taps(&p.outs)),
+            StagePlan::Linear(p) => (vec![tap(&p.input)], taps(&p.outs)),
+            StagePlan::Relu(p) => (vec![tap(&p.input)], taps(&p.outs)),
+            StagePlan::Add(p) => (vec![tap(&p.in_a), tap(&p.in_b)], taps(&p.outs)),
         }
     }
 }
@@ -1434,14 +1472,22 @@ fn emit_ready_ds_rows(
 }
 
 /// Dispatch on the planned window-storage mode.
-fn run_conv(p: &RunConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+fn run_conv(
+    p: &RunConvPlan,
+    weights: &Arc<ModelWeights>,
+    clock: &StageClock,
+) -> Result<(), StreamError> {
     match p.storage {
-        WindowStorage::Rows => run_conv_rows(p, weights),
-        WindowStorage::Slices => run_conv_slices(p, weights),
+        WindowStorage::Rows => run_conv_rows(p, weights, clock),
+        WindowStorage::Slices => run_conv_slices(p, weights, clock),
     }
 }
 
-fn run_conv_rows(p: &RunConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+fn run_conv_rows(
+    p: &RunConvPlan,
+    weights: &Arc<ModelWeights>,
+    clock: &StageClock,
+) -> Result<(), StreamError> {
     let lw = stage_layer(weights, &p.layer, "conv stage weights missing after plan validation")?;
     let w = lw.w.data.as_slice();
     let bias = lw.b.data.as_slice();
@@ -1595,6 +1641,7 @@ fn run_conv_rows(p: &RunConvPlan, weights: &Arc<ModelWeights>) -> Result<(), Str
         if let Some(fwd) = &p.forward {
             forward_rows(fwd, &rest, p.ich)?;
         }
+        clock.frame_done();
     }
 }
 
@@ -1646,7 +1693,11 @@ fn emit_ready_ds_rows_slices(
 /// pixel) and evicting pixel-by-pixel in stream order behind the last
 /// window — host or pending merged downsample — that can still reach
 /// each pixel.  Evicted pixels are the temporal-reuse skip stream.
-fn run_conv_slices(p: &RunConvPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+fn run_conv_slices(
+    p: &RunConvPlan,
+    weights: &Arc<ModelWeights>,
+    clock: &StageClock,
+) -> Result<(), StreamError> {
     let lw = stage_layer(weights, &p.layer, "conv stage weights missing after plan validation")?;
     let w = lw.w.data.as_slice();
     let bias = lw.b.data.as_slice();
@@ -1875,10 +1926,11 @@ fn run_conv_slices(p: &RunConvPlan, weights: &Arc<ModelWeights>) -> Result<(), S
             unreached -= 1;
         }
         win.flush();
+        clock.frame_done();
     }
 }
 
-fn run_pool(p: &RunPoolPlan) -> Result<(), StreamError> {
+fn run_pool(p: &RunPoolPlan, clock: &StageClock) -> Result<(), StreamError> {
     let mut lb = LineBuffer::new(p.iw * p.c);
     loop {
         let mut head = match next_frame(&p.input)? {
@@ -1915,10 +1967,11 @@ fn run_pool(p: &RunPoolPlan) -> Result<(), StreamError> {
             p.gauge.observe(lb.held());
         }
         lb.flush();
+        clock.frame_done();
     }
 }
 
-fn run_gap(p: &RunGapPlan) -> Result<(), StreamError> {
+fn run_gap(p: &RunGapPlan, clock: &StageClock) -> Result<(), StreamError> {
     let hw = p.h * p.w;
     // Power-of-two validated at plan time.
     let shift = p.out_exp - p.in_exp + hw.trailing_zeros() as i32;
@@ -1942,10 +1995,15 @@ fn run_gap(p: &RunGapPlan) -> Result<(), StreamError> {
         }
         let tok: Box<[i32]> = acc.iter().map(|&v| clip_i8(round_shift(v, shift))).collect();
         push_all(&p.outs, tok)?;
+        clock.frame_done();
     }
 }
 
-fn run_linear(p: &RunLinearPlan, weights: &Arc<ModelWeights>) -> Result<(), StreamError> {
+fn run_linear(
+    p: &RunLinearPlan,
+    weights: &Arc<ModelWeights>,
+    clock: &StageClock,
+) -> Result<(), StreamError> {
     let lw =
         stage_layer(weights, &p.layer, "linear stage weights missing after plan validation")?;
     let w = lw.w.data.as_slice();
@@ -1973,10 +2031,11 @@ fn run_linear(p: &RunLinearPlan, weights: &Arc<ModelWeights>) -> Result<(), Stre
             *o = a;
         }
         push_all(&p.outs, out.into_boxed_slice())?;
+        clock.frame_done();
     }
 }
 
-fn run_relu(p: &RunReluPlan) -> Result<(), StreamError> {
+fn run_relu(p: &RunReluPlan, clock: &StageClock) -> Result<(), StreamError> {
     loop {
         let head = match next_frame(&p.input)? {
             Some(t) => t,
@@ -1993,10 +2052,11 @@ fn run_relu(p: &RunReluPlan) -> Result<(), StreamError> {
             let tok: Box<[i32]> = t.iter().map(|&v| v.max(0)).collect();
             push_all(&p.outs, tok)?;
         }
+        clock.frame_done();
     }
 }
 
-fn run_add(p: &RunAddPlan) -> Result<(), StreamError> {
+fn run_add(p: &RunAddPlan, clock: &StageClock) -> Result<(), StreamError> {
     loop {
         let mut a = match next_frame(&p.in_a)? {
             Some(t) => t,
@@ -2025,22 +2085,26 @@ fn run_add(p: &RunAddPlan) -> Result<(), StreamError> {
                 .collect();
             push_all(&p.outs, tok)?;
         }
+        clock.frame_done();
     }
 }
 
 /// Run one stage until end-of-stream (or error).  This is the body a
-/// pool thread executes for its whole lifetime.
+/// pool thread executes for its whole lifetime.  `clock` is the stage's
+/// observability clock; each loop stamps it once per completed frame
+/// (the frame-boundary flush of the span rings).
 pub(crate) fn run_stage(
     stage: &RunStagePlan,
     weights: &Arc<ModelWeights>,
+    clock: &StageClock,
 ) -> Result<(), StreamError> {
     match stage {
-        StagePlan::Conv(p) => run_conv(p, weights),
-        StagePlan::Pool(p) => run_pool(p),
-        StagePlan::Gap(p) => run_gap(p),
-        StagePlan::Linear(p) => run_linear(p, weights),
-        StagePlan::Relu(p) => run_relu(p),
-        StagePlan::Add(p) => run_add(p),
+        StagePlan::Conv(p) => run_conv(p, weights, clock),
+        StagePlan::Pool(p) => run_pool(p, clock),
+        StagePlan::Gap(p) => run_gap(p, clock),
+        StagePlan::Linear(p) => run_linear(p, weights, clock),
+        StagePlan::Relu(p) => run_relu(p, clock),
+        StagePlan::Add(p) => run_add(p, clock),
     }
 }
 
@@ -2097,9 +2161,55 @@ mod tests {
             p.layer = "no-such-layer".into();
         }
         let weights = Arc::new(weights);
-        let err = run_stage(&plan.stages[idx], &weights).unwrap_err();
+        let clock = test_clock();
+        let err = run_stage(&plan.stages[idx], &weights, &clock).unwrap_err();
         assert!(matches!(err, StreamError::Inconsistent { .. }), "{err}");
         assert!(format!("{err}").contains("weights missing"), "{err}");
+    }
+
+    fn test_clock() -> Arc<StageClock> {
+        StageClock::new(
+            "test".into(),
+            crate::obs::StageRole::Stage,
+            std::time::Instant::now(),
+            Vec::new(),
+            Vec::new(),
+        )
+    }
+
+    /// The stall-attribution topology: every FIFO appears on exactly one
+    /// stage's input side and (unless fed by the feeder or drained by the
+    /// sink) exactly one stage's output side.
+    #[test]
+    fn stage_ports_cover_every_fifo_exactly_once_per_side() {
+        let (bp, _) = blueprint();
+        let plan = bp.instantiate(&Arc::new(AtomicBool::new(false)), "");
+        let mut consumed: Vec<String> = Vec::new();
+        let mut produced: Vec<String> = Vec::new();
+        for st in &plan.stages {
+            let (ins, outs) = st.ports();
+            assert!(!ins.is_empty(), "{}: a stage always consumes", st.name());
+            consumed.extend(ins.into_iter().map(|(n, _)| n));
+            produced.extend(outs.into_iter().map(|(n, _)| n));
+        }
+        let all: Vec<&str> = plan.fifos.iter().map(|f| f.name()).collect();
+        for name in &all {
+            // The sink FIFO is drained by the sink pseudo-thread, every
+            // other FIFO by exactly one stage; source FIFOs are fed by
+            // the feeder pseudo-thread, every other FIFO by one stage.
+            let is_sink = plan.sink.name() == *name;
+            let is_source = plan.sources.iter().any(|f| f.name() == *name);
+            assert_eq!(
+                consumed.iter().filter(|n| n == name).count(),
+                if is_sink { 0 } else { 1 },
+                "{name}: exactly one consumer"
+            );
+            assert_eq!(
+                produced.iter().filter(|n| n == name).count(),
+                if is_source { 0 } else { 1 },
+                "{name}: exactly one producer"
+            );
+        }
     }
 
     /// Regression for the worker-thread lookup (was a worker panic that

@@ -1,7 +1,7 @@
 //! Property-based tests over the coordinator and substrate invariants
 //! (seeded deterministic cases via `util::prop::forall`).
 
-use resnet_hls::coordinator::{Batcher, BatcherConfig};
+use resnet_hls::coordinator::{Batcher, BatcherConfig, Metrics, BOUNDS_US};
 use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::graph::{infer_shapes, ConvAttrs, Edge, Graph, InputRole, Op};
 use resnet_hls::ilp::{brute_force, solve, LayerLoad};
@@ -367,6 +367,73 @@ fn batcher_plan_never_worse_than_pure_greedy() {
             "plan cost {cost} > greedy {greedy_cost} for q={q} buckets={:?}",
             cfg.buckets
         );
+    });
+}
+
+// ------------------------------------------------- latency histogram laws
+
+/// Upper bound of the histogram bucket a latency sample lands in.
+fn bucket_bound(us: u64) -> u64 {
+    BOUNDS_US[BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(BOUNDS_US.len() - 1)]
+}
+
+#[test]
+fn latency_percentiles_monotone_and_bucket_consistent() {
+    // The snapshot's percentile readbacks are histogram-bucket upper
+    // bounds, so for ANY sample set: p50 <= p95 <= p99 (monotone), each
+    // is a real bucket bound from BOUNDS_US, the whole run is bracketed
+    // by the min and max samples' buckets (p99 can legitimately exceed
+    // the exact max — its bucket bound rounds up), and mean/max are
+    // exact.  Degenerate shapes (empty, single sample) included.
+    forall("latency percentile laws", 400, |rng| {
+        let m = Metrics::new();
+        let n = rng.below(48) as usize; // 0 = empty histogram
+        let mut samples: Vec<u64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Spread across the full bucket range, log-ish: a uniform
+            // draw would almost never land in the sub-millisecond
+            // buckets that serving latencies actually occupy.
+            let exp = rng.below(7) as u32; // 10^0 .. 10^6 us
+            let base = 10u64.pow(exp);
+            let us = base + rng.range_i64(0, 9 * base as i64) as u64;
+            m.record_latency(std::time::Duration::from_micros(us));
+            samples.push(us);
+        }
+        let s = m.snapshot();
+        if samples.is_empty() {
+            assert_eq!((s.p50_le_us, s.p95_le_us, s.p99_le_us), (0, 0, 0));
+            assert_eq!(s.max_latency_us, 0);
+            assert_eq!(s.mean_latency_us, 0);
+            return;
+        }
+        let min = *samples.iter().min().unwrap();
+        let max = *samples.iter().max().unwrap();
+        assert!(s.p50_le_us <= s.p95_le_us, "p50 {} > p95 {}", s.p50_le_us, s.p95_le_us);
+        assert!(s.p95_le_us <= s.p99_le_us, "p95 {} > p99 {}", s.p95_le_us, s.p99_le_us);
+        for p in [s.p50_le_us, s.p95_le_us, s.p99_le_us] {
+            assert!(BOUNDS_US.contains(&p), "percentile {p} is not a bucket bound");
+        }
+        assert!(
+            s.p50_le_us >= bucket_bound(min),
+            "p50 {} below the smallest sample's bucket {}",
+            s.p50_le_us,
+            bucket_bound(min)
+        );
+        assert!(
+            s.p99_le_us <= bucket_bound(max),
+            "p99 {} beyond the largest sample's bucket {}",
+            s.p99_le_us,
+            bucket_bound(max)
+        );
+        assert_eq!(s.max_latency_us, max, "max must be exact, not bucketed");
+        let mean = samples.iter().sum::<u64>() / samples.len() as u64;
+        assert_eq!(s.mean_latency_us, mean, "integer mean must be exact");
+        assert!(s.mean_latency_us <= max && s.mean_latency_us >= min / samples.len() as u64);
+        if samples.len() == 1 {
+            assert_eq!(s.p50_le_us, bucket_bound(max));
+            assert_eq!(s.p99_le_us, bucket_bound(max));
+            assert_eq!(s.mean_latency_us, max);
+        }
     });
 }
 

@@ -6,7 +6,9 @@
 //! stream-buffering gauges, and the elastic replica band (burst-driven
 //! scale-up, idle drain to min, no-flap at the high-water mark, and
 //! band-max bucket sizing; CI reruns the burst + drain coverage as the
-//! STREAM_ELASTIC smoke).
+//! STREAM_ELASTIC smoke), plus the PR-8 observability layer: per-stage
+//! stall attribution naming the limiting conv on a deliberately
+//! serialized pool, and bounded frame-span recording.
 
 use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
@@ -710,6 +712,113 @@ fn elastic_buckets_size_to_band_max_capacity() {
     assert_eq!(e.pool().capacity(), f.pool().capacity());
     assert_eq!(e.buckets(), &[1, e.pool().capacity()]);
     assert_eq!(e.replica_count(), Some(1));
+}
+
+// ------------------------------------------ pipeline observability (PR 8)
+
+#[test]
+fn bottleneck_report_names_a_heavy_conv_on_a_serialized_pool() {
+    // The tentpole acceptance: with every parallelism knob forced to 1
+    // (inline channel/column workers, single window group, row-granular
+    // buffers) the pipeline is compute-bound on a residual-block 3x3
+    // conv — they carry >95% of the MACs, the stem/downsample/GAP/FC
+    // are an order of magnitude lighter — so the stall attribution must
+    // name one of them as the limiting stage, and any victim's starving
+    // edge must be a real pipeline edge from the same report.
+    with_watchdog(300, "bottleneck attribution", || {
+        let (g, weights) = model("resnet8", 7);
+        let frames = 48usize;
+        let (input, _) = synth_batch(0, frames, TEST_SEED);
+        let cfg = StreamConfig {
+            replicas: 1,
+            ow_par: 1,
+            och_worker_cap: 1,
+            ow_worker_cap: 1,
+            window_storage: WindowStorage::Rows,
+            ..Default::default()
+        };
+        let pool = StreamPool::new("resnet8", &g, Arc::new(weights), cfg).unwrap();
+        let tickets: Vec<_> = (0..frames)
+            .map(|i| pool.submit(&input.data[i * IMG_ELEMS..(i + 1) * IMG_ELEMS]).unwrap())
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let report = pool.stall_report();
+        assert_eq!(report.frames, frames as u64);
+        assert_eq!(report.replicas, 1);
+        assert!(!report.edges.is_empty(), "no edge telemetry recorded");
+        for s in &report.stages {
+            assert!(s.elapsed_ns > 0, "{}: clock never ran", s.stage);
+            assert!(
+                s.busy_frac() + s.blocked_push_frac() + s.blocked_pop_frac() <= 1.01,
+                "{}: time splits exceed wall time",
+                s.stage
+            );
+        }
+        let b = report.bottleneck();
+        let lim = b.limiting.as_ref().expect("48 frames must yield a limiting stage");
+        const CONVS: [&str; 6] = ["s0b0c0", "s0b0c1", "s1b0c0", "s1b0c1", "s2b0c0", "s2b0c1"];
+        assert!(
+            CONVS.contains(&lim.stage.as_str()),
+            "limiting stage {:?} is not a residual-block conv\n{report}",
+            lim.stage
+        );
+        // Limiting == busy-fraction argmax over the layer stages (the
+        // feeder and sink never compete).
+        for s in &report.stages {
+            if s.role == resnet_hls::obs::StageRole::Stage {
+                assert!(
+                    s.busy_frac() <= lim.busy_frac() + 1e-9,
+                    "{} busier than the named limiting stage {}",
+                    s.stage,
+                    lim.stage
+                );
+            }
+        }
+        if let Some(v) = &b.victim {
+            if let Some(edge) = &v.edge {
+                assert!(report.edge(edge).is_some(), "victim edge {edge} not in the report");
+            }
+        }
+        // The human verdict names the limiting stage.
+        assert!(b.to_string().contains(lim.stage.as_str()), "{b}");
+    });
+}
+
+#[test]
+fn frame_spans_are_recorded_with_ordered_marks() {
+    // Span rings hold one bounded entry per recent frame: delivery never
+    // precedes the feeder's claim, and the per-stage marks stamp in
+    // pipeline order (nondecreasing microseconds on one shared epoch).
+    let frames = 8usize;
+    let cfg = StreamConfig { replicas: 1, ..Default::default() };
+    let backend = StreamBackend::synthetic_with("resnet8", 7, &[frames], cfg).unwrap();
+    let (input, _) = synth_batch(0, frames, TEST_SEED);
+    backend.infer_batch(&input).unwrap();
+    let mut spans = backend.pool().recent_spans();
+    assert!(!spans.is_empty(), "span ring empty after {frames} frames");
+    assert!(spans.len() <= frames, "more spans than frames served");
+    spans.sort_by_key(|s| s.frame);
+    for s in &spans {
+        assert!(
+            s.total_us >= s.queued_us,
+            "frame {}: delivered ({} us) before it was claimed ({} us)",
+            s.frame,
+            s.total_us,
+            s.queued_us
+        );
+        assert!(!s.marks_us.is_empty(), "frame {}: no boundary marks", s.frame);
+        let mut prev = 0u64;
+        for (thread, us) in &s.marks_us {
+            assert!(
+                *us >= prev,
+                "frame {}: mark {thread} at {us} us precedes the previous boundary {prev}",
+                s.frame
+            );
+            prev = *us;
+        }
+    }
 }
 
 #[test]
