@@ -251,6 +251,66 @@ fn main() {
         elastic.pool().peak_replicas()
     );
 
+    // ---- shared worker budget: lease accounting must be free ----
+    // The same fixed 2-replica pool, now leasing its stage workers from
+    // a process-wide WorkerBudget (the multi-tenant substrate).  The
+    // budget sits on the replica *scaling* path, not the frame path —
+    // one mutex acquire per replica spawn/retire, nothing per frame —
+    // so serving throughput must stay within 3% of the unbudgeted pool.
+    // Quick CI runs are too noisy to judge; the assert is full-run only
+    // (the JSON records the ratio either way).
+    let budget = std::sync::Arc::new(resnet_hls::stream::WorkerBudget::new(1024));
+    let budgeted = StreamBackend::synthetic_with(
+        "resnet8",
+        7,
+        &[frames],
+        StreamConfig {
+            replicas: 2,
+            budget: Some(budget.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(budgeted.infer_batch(&input).unwrap().data, want.data);
+    let s_budgeted = b.bench_items(
+        "budgeted pool resnet8 32 frames (2 replicas, shared WorkerBudget)",
+        frames as f64,
+        &mut || {
+            budgeted.infer_batch(&input).unwrap();
+        },
+    );
+    let budget_ratio = s_budgeted.median_ns / s_pool.median_ns;
+    let bsnap = budget.snapshot();
+    println!(
+        "shared budget vs unbudgeted pool: {:+.2}% ({:.0} -> {:.0} frames/s); \
+         {} of {} workers leased ({:.0}% util)",
+        100.0 * (budget_ratio - 1.0),
+        s_pool.items_per_sec(),
+        s_budgeted.items_per_sec(),
+        bsnap.held,
+        bsnap.total,
+        100.0 * bsnap.utilization()
+    );
+    assert!(
+        quick || budget_ratio < 1.03,
+        "worker-budget leasing costs {:.2}% pool throughput (must stay < 3%)",
+        100.0 * (budget_ratio - 1.0)
+    );
+    {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("stream_backend_multitenant".into()));
+        o.insert("quick".into(), Json::Bool(quick));
+        o.insert("frames_per_batch".into(), Json::Int(frames as i64));
+        o.insert("pool_fps_unbudgeted".into(), Json::Float(s_pool.items_per_sec()));
+        o.insert("pool_fps_budgeted".into(), Json::Float(s_budgeted.items_per_sec()));
+        o.insert("budget_overhead_ratio".into(), Json::Float(budget_ratio));
+        o.insert("budget".into(), bsnap.to_json());
+        let j = Json::Object(o);
+        std::fs::write("BENCH_multitenant.json", format!("{j}\n"))
+            .expect("write BENCH_multitenant.json");
+        println!("wrote BENCH_multitenant.json");
+    }
+
     // ---- machine-readable summary ----
     // The stall report rides along so CI trends don't just say "slower"
     // but *which stage* went slower: per-stage busy/blocked fractions,

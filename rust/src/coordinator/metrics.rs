@@ -46,6 +46,14 @@ pub struct Metrics {
     /// Highest replica count ever reported — shows how far an elastic
     /// pool scaled even after it drained back.
     peak_replicas: AtomicU64,
+    /// Workers this arch's pool currently holds under the shared
+    /// [`WorkerBudget`](crate::stream::WorkerBudget) (0 when unbudgeted).
+    budget_held: AtomicU64,
+    /// Workers reserved for this arch's pool at registration
+    /// (`min_replicas x stages`; 0 when unbudgeted).
+    budget_reserved: AtomicU64,
+    /// Cumulative denied budget grants for this arch's pool.
+    budget_denied: AtomicU64,
     /// `record_batch` calls whose `executed < real` — a caller
     /// accounting bug.  The padded-frame delta saturates to zero instead
     /// of wrapping; this counter makes the anomaly visible.
@@ -131,6 +139,17 @@ impl Metrics {
         self.peak_replicas.fetch_max(n, Ordering::Relaxed);
     }
 
+    /// Record a streaming backend's shared-budget lease gauges: workers
+    /// held, workers reserved and cumulative denied grants for the
+    /// backing pool.  Last-writer-wins like [`Self::record_replicas`] —
+    /// the values come from one coherent budget read, so they are stored
+    /// together, not merged.
+    pub fn record_budget(&self, held: u64, reserved: u64, denied: u64) {
+        self.budget_held.store(held, Ordering::Relaxed);
+        self.budget_reserved.store(reserved, Ordering::Relaxed);
+        self.budget_denied.store(denied, Ordering::Relaxed);
+    }
+
     /// Count one load-shed admission refusal.
     pub fn record_shed(&self) {
         self.shed.fetch_add(1, Ordering::Relaxed);
@@ -207,6 +226,9 @@ impl Metrics {
             },
             stream_replicas: self.replicas.load(Ordering::Relaxed),
             stream_peak_replicas: self.peak_replicas.load(Ordering::Relaxed),
+            budget_workers_held: self.budget_held.load(Ordering::Relaxed),
+            budget_workers_reserved: self.budget_reserved.load(Ordering::Relaxed),
+            budget_denied: self.budget_denied.load(Ordering::Relaxed),
             batch_underflows: self.batch_underflows.load(Ordering::Relaxed),
             bottleneck: {
                 let slot = self.stalls.lock().unwrap_or_else(PoisonError::into_inner);
@@ -259,6 +281,13 @@ pub struct MetricsSnapshot {
     pub stream_replicas: u64,
     /// Highest replica count ever reported (0 when none reported).
     pub stream_peak_replicas: u64,
+    /// Workers held under the shared worker budget (0 when unbudgeted).
+    pub budget_workers_held: u64,
+    /// Workers reserved at budget registration (0 when unbudgeted; a
+    /// nonzero reservation is the "this pool is budgeted" marker).
+    pub budget_workers_reserved: u64,
+    /// Cumulative budget grants denied to this arch's pool.
+    pub budget_denied: u64,
     /// `record_batch` calls with `executed < real` (0 in a healthy run).
     pub batch_underflows: u64,
     /// Rendered [`crate::obs::BottleneckReport`] of the last recorded
@@ -298,6 +327,13 @@ impl std::fmt::Display for MetricsSnapshot {
         }
         if self.stream_peak_replicas > 0 {
             write!(f, "  replicas {} (peak {})", self.stream_replicas, self.stream_peak_replicas)?;
+        }
+        if self.budget_workers_reserved > 0 {
+            write!(
+                f,
+                "  budget holds {} of {} reserved (denied {})",
+                self.budget_workers_held, self.budget_workers_reserved, self.budget_denied
+            )?;
         }
         if self.batch_underflows > 0 {
             write!(f, "  batch-underflows {}", self.batch_underflows)?;

@@ -24,9 +24,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::data::{IMG_C, IMG_ELEMS, IMG_H, IMG_W, INPUT_EXP};
+use crate::obs::BudgetSnapshot;
 use crate::quant::{QTensor, Shape4};
 use crate::runtime::{BackendFactory, InferenceBackend};
 use crate::sim::golden;
+use crate::stream::WorkerBudget;
 
 use super::batcher::{BatchPlan, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
@@ -122,6 +124,9 @@ struct Pool {
 pub struct RouterSnapshot {
     pub per_arch: BTreeMap<String, MetricsSnapshot>,
     pub total: MetricsSnapshot,
+    /// Shared worker-budget state when the fleet serves under one
+    /// process-wide [`WorkerBudget`] (`None` for unbudgeted routers).
+    pub budget: Option<BudgetSnapshot>,
 }
 
 impl std::fmt::Display for RouterSnapshot {
@@ -129,6 +134,9 @@ impl std::fmt::Display for RouterSnapshot {
         write!(f, "total: {}", self.total)?;
         for (arch, snap) in &self.per_arch {
             write!(f, "\n  {arch}: {snap}")?;
+        }
+        if let Some(b) = &self.budget {
+            write!(f, "\n{b}")?;
         }
         Ok(())
     }
@@ -138,6 +146,10 @@ impl std::fmt::Display for RouterSnapshot {
 pub struct Router {
     pools: BTreeMap<String, Pool>,
     agg: Arc<Metrics>,
+    /// The process-wide worker budget the fleet's streaming pools lease
+    /// from, when serving multi-tenant (kept only for reporting — pools
+    /// hold their own registration handles).
+    budget: Option<Arc<WorkerBudget>>,
 }
 
 impl Router {
@@ -151,7 +163,7 @@ impl Router {
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         // Workers are registered on the router as they spawn, so any
         // early return below aborts + joins them through Drop.
-        let mut router = Router { pools: BTreeMap::new(), agg };
+        let mut router = Router { pools: BTreeMap::new(), agg, budget: None };
         let mut spawned = 0usize;
         for factory in factories {
             let arch = factory.arch().to_string();
@@ -274,6 +286,20 @@ impl Router {
         self.pools.get(arch).map(|p| p.metrics.clone())
     }
 
+    /// Attach the process-wide worker budget the fleet's streaming pools
+    /// were built against, so snapshots and `/metrics` can report lease
+    /// state.  Call once after [`Router::start`]; reporting-only — the
+    /// pools already hold their registrations through their factories.
+    pub fn set_budget(&mut self, budget: Arc<WorkerBudget>) {
+        self.budget = Some(budget);
+    }
+
+    /// Point-in-time state of the shared worker budget (`None` for
+    /// unbudgeted routers).
+    pub fn budget_snapshot(&self) -> Option<BudgetSnapshot> {
+        self.budget.as_ref().map(|b| b.snapshot())
+    }
+
     /// Aggregate metrics across every pool (exact — workers record into
     /// both their pool's and this histogram).
     pub fn aggregate(&self) -> Arc<Metrics> {
@@ -294,7 +320,11 @@ impl Router {
         let mut total = self.agg.snapshot();
         total.stream_replicas = per_arch.values().map(|m| m.stream_replicas).sum();
         total.stream_peak_replicas = per_arch.values().map(|m| m.stream_peak_replicas).sum();
-        RouterSnapshot { per_arch, total }
+        total.budget_workers_held = per_arch.values().map(|m| m.budget_workers_held).sum();
+        total.budget_workers_reserved =
+            per_arch.values().map(|m| m.budget_workers_reserved).sum();
+        total.budget_denied = per_arch.values().map(|m| m.budget_denied).sum();
+        RouterSnapshot { per_arch, total, budget: self.budget_snapshot() }
     }
 
     /// Graceful shutdown: stop accepting requests, let the workers drain
@@ -519,6 +549,11 @@ fn serve_queue(
                 // gauge would misreport multi-pool fleets).
                 if let Some(r) = backend.replica_count() {
                     pool_metrics.record_replicas(r as u64);
+                }
+                // Budgeted pools: export the lease gauges (workers held /
+                // reserved, denied grants) the same per-arch way.
+                if let Some((held, reserved, denied)) = backend.budget_gauges() {
+                    pool_metrics.record_budget(held, reserved, denied);
                 }
                 // Streaming pools: refresh the stall-attribution report.
                 // `record_stalls` throttles internally, so the full

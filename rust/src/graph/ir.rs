@@ -284,6 +284,7 @@ impl fmt::Display for Graph {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -7,6 +7,12 @@
 //! temporal reuse, add fusion) and tests can verify they arrive at the
 //! optimized dataflow that `models::resnet` builds directly.
 
+// Panic-freedom gate: graph construction and QONNX parsing run inside
+// serving-backend factories, so failures must be typed errors, never
+// unwinds.  `clippy.toml` disallows Option/Result unwrap+expect; test
+// modules opt out locally.
+#![deny(clippy::disallowed_methods)]
+
 mod ir;
 pub mod qonnx;
 mod shapes;

@@ -292,6 +292,7 @@ pub fn import(doc: &Json) -> Result<Graph> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::models::{

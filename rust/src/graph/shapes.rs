@@ -161,6 +161,7 @@ pub fn output_shape(g: &Graph, node: usize) -> Result<TensorShape, ShapeError> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::graph::ir::{ConvAttrs, Graph, Op};

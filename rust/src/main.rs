@@ -8,20 +8,24 @@
 //!   eval-tables                  Table 3 + Table 4 (modeled vs paper)
 //!   golden-eval [--model M] [--n N]               golden accuracy on synthetic test set
 //!   probe-check                  cross-language bit-equality (golden vs oracle vs PJRT)
-//!   serve      [--model M] [--frames N] [--backend pjrt|golden|sim|stream] [--workers N]
-//!              [--replicas B | --min-replicas A --max-replicas B] [--ow-par N]
-//!              [--window-storage rows|slices]
+//!   serve      [--model M[,M2...]] [--frames N] [--backend pjrt|golden|sim|stream]
+//!              [--workers N] [--replicas B | --min-replicas A --max-replicas B]
+//!              [--ow-par N] [--window-storage rows|slices] [--worker-budget W]
 //!                                route synthetic frames through the inference router
 //!                                (stream: B persistent pipeline replicas per worker —
 //!                                or an elastic A..=B band scaled under the router's
 //!                                queue-depth signal — ow_par window groups + column
 //!                                workers, slice-granular Eq. 16/17 window buffers by
-//!                                default)
+//!                                default); a comma-separated --model serves several
+//!                                arches behind one router, and --worker-budget caps
+//!                                total stage workers across all their stream pools
+//!                                (see README "Multi-tenant serving")
 //!   buffers    [--model M]       Eq. 21/22/23 per residual block, plus the
 //!                                streaming executor's measured peak occupancy
 //!   listen     [--host H] [--port P] [--backend ...] [--workers N]
 //!              [--queue-cap N] [--dispatchers N] [--deadline-ms D]
-//!              [--duration-s S] [--metrics-port P] [serve's backend flags]
+//!              [--duration-s S] [--metrics-port P] [serve's backend flags,
+//!              including --model M[,M2...] and --worker-budget W]
 //!                                TCP ingress front-end ahead of the router:
 //!                                bounded admission, load-shedding with
 //!                                retry-after, deadlines enforced at admission
@@ -81,7 +85,7 @@ fn main() {
             "model", "board", "frames", "n", "out", "skip-factor", "ow-par", "budget", "backend",
             "workers", "replicas", "min-replicas", "max-replicas", "window-storage", "host",
             "port", "queue-cap", "dispatchers", "deadline-ms", "duration-s", "addr", "fps",
-            "window", "qonnx", "skip-capacity", "metrics-port",
+            "window", "qonnx", "skip-capacity", "metrics-port", "worker-budget",
         ],
     );
     let result = match args.subcommand.as_deref() {
@@ -114,6 +118,41 @@ fn main() {
 fn arch_of(args: &Args) -> Result<resnet_hls::models::ArchSpec> {
     let name = args.opt_or("model", "resnet8");
     arch_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))
+}
+
+/// `serve`/`listen` accept a comma-separated `--model resnet8,resnet20`:
+/// every listed architecture gets its own worker pool behind one router.
+fn archs_of(args: &Args) -> Result<Vec<resnet_hls::models::ArchSpec>> {
+    let names = args.opt_or("model", "resnet8");
+    let mut archs = Vec::new();
+    for name in names.split(',').map(str::trim).filter(|n| !n.is_empty()) {
+        anyhow::ensure!(
+            archs.iter().all(|a: &resnet_hls::models::ArchSpec| a.name != name),
+            "--model lists {name} twice"
+        );
+        archs.push(arch_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?);
+    }
+    anyhow::ensure!(!archs.is_empty(), "--model lists no architecture");
+    Ok(archs)
+}
+
+/// `--worker-budget N`: one process-wide [`WorkerBudget`] shared by every
+/// stream pool behind the router (absent/0 = unbudgeted).  A budget that
+/// cannot cover the sum of the pools' `min_replicas x stages` reservations
+/// is rejected with the typed `BudgetError` when `Router::start` builds
+/// the pools.
+fn worker_budget_of(
+    args: &Args,
+) -> Result<Option<std::sync::Arc<resnet_hls::stream::WorkerBudget>>> {
+    let n = args.opt_usize("worker-budget", 0);
+    if n == 0 {
+        return Ok(None);
+    }
+    anyhow::ensure!(
+        args.opt_or("backend", "pjrt") == "stream",
+        "--worker-budget leases stream-pool stage workers; it requires --backend stream"
+    );
+    Ok(Some(std::sync::Arc::new(resnet_hls::stream::WorkerBudget::new(n))))
 }
 
 fn board_of(args: &Args) -> &'static resnet_hls::hls::Board {
@@ -327,11 +366,14 @@ fn cmd_probe_check() -> Result<()> {
 
 /// Build the backend factory from the shared `serve`/`listen` flags
 /// (`--backend`, `--replicas` / elastic band, `--ow-par`,
-/// `--window-storage`), plus a human description for the startup line.
+/// `--window-storage`, plus the shared `--worker-budget` handle when the
+/// fleet serves multi-tenant), plus a human description for the startup
+/// line.
 fn build_factory(
     args: &Args,
     arch_name: &str,
     workers: usize,
+    budget: Option<std::sync::Arc<resnet_hls::stream::WorkerBudget>>,
 ) -> Result<(std::sync::Arc<dyn BackendFactory>, String)> {
     let replicas = args.opt_usize("replicas", 1);
     // Elastic band: either flag opts the stream pool into queue-driven
@@ -376,6 +418,9 @@ fn build_factory(
             if let Some((min, max)) = elastic {
                 f = f.with_elastic(min, max);
             }
+            if let Some(b) = &budget {
+                f = f.with_budget(b.clone());
+            }
             std::sync::Arc::new(f)
         }
         other => anyhow::bail!("unknown backend {other} (expected pjrt|golden|sim|stream)"),
@@ -385,10 +430,14 @@ fn build_factory(
             Some((min, max)) => format!("elastic {min}..={max} replicas (queue-driven)"),
             None => format!("{replicas} pipeline replica(s)"),
         };
+        let shared = match &budget {
+            Some(b) => format!("; shared worker budget {}", b.total()),
+            None => String::new(),
+        };
         format!(
             "stream backend ({workers} worker(s), {band} each, persistent \
              frame-pipelined pool; ow_par={ow_par}, {storage:?} window storage; buckets sized \
-             to in-flight capacity)"
+             to in-flight capacity{shared})"
         )
     } else {
         format!("{backend} backend ({workers} worker(s))")
@@ -397,49 +446,71 @@ fn build_factory(
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let arch = arch_of(args)?;
+    let archs = archs_of(args)?;
     let frames = args.opt_usize("frames", 256);
     let workers = args.opt_usize("workers", 1);
-    let (factory, desc) = build_factory(args, &arch.name, workers)?;
-    let router = Router::start(
-        vec![factory],
-        RouterConfig { workers_per_arch: workers, ..Default::default() },
-    )?;
-    println!("serving {} on {desc}", arch.name);
+    let budget = worker_budget_of(args)?;
+    let mut factories = Vec::new();
+    for arch in &archs {
+        let (factory, desc) = build_factory(args, &arch.name, workers, budget.clone())?;
+        factories.push(factory);
+        println!("serving {} on {desc}", arch.name);
+    }
+    let mut router =
+        Router::start(factories, RouterConfig { workers_per_arch: workers, ..Default::default() })?;
+    if let Some(b) = &budget {
+        router.set_budget(b.clone());
+    }
     let (input, labels) = synth_batch(0, frames, TEST_SEED);
     let frame_elems = 32 * 32 * 3;
     let t0 = std::time::Instant::now();
+    // Interleave submissions across the arches so a multi-tenant fleet
+    // loads every pool concurrently, not one after the other.
     let mut pending = Vec::new();
     for i in 0..frames {
         let pixels = input.data[i * frame_elems..(i + 1) * frame_elems].to_vec();
-        pending.push(router.submit(&arch.name, pixels)?);
+        for arch in &archs {
+            pending.push(router.submit(&arch.name, pixels.clone())?);
+        }
     }
     let mut correct = 0usize;
-    for (rx, &label) in pending.iter().zip(&labels) {
-        let resp = rx.recv()??;
-        if resp.class == label as usize {
-            correct += 1;
+    for (chunk, &label) in pending.chunks(archs.len()).zip(&labels) {
+        for rx in chunk {
+            let resp = rx.recv()??;
+            if resp.class == label as usize {
+                correct += 1;
+            }
         }
     }
     let dt = t0.elapsed();
+    let total = frames * archs.len();
     println!(
-        "served {frames} frames in {:.1} ms -> {:.0} FPS; accuracy {:.3}",
+        "served {total} frames in {:.1} ms -> {:.0} FPS; accuracy {:.3}",
         dt.as_secs_f64() * 1e3,
-        frames as f64 / dt.as_secs_f64(),
-        correct as f64 / frames as f64
+        total as f64 / dt.as_secs_f64(),
+        correct as f64 / total as f64
     );
     println!("metrics {}", router.shutdown());
     Ok(())
 }
 
 fn cmd_listen(args: &Args) -> Result<()> {
-    let arch = arch_of(args)?;
+    let archs = archs_of(args)?;
     let workers = args.opt_usize("workers", 1);
-    let (factory, desc) = build_factory(args, &arch.name, workers)?;
-    let router = std::sync::Arc::new(Router::start(
-        vec![factory],
-        RouterConfig { workers_per_arch: workers, ..Default::default() },
-    )?);
+    let budget = worker_budget_of(args)?;
+    let mut factories = Vec::new();
+    let mut desc = String::new();
+    for arch in &archs {
+        let (factory, d) = build_factory(args, &arch.name, workers, budget.clone())?;
+        factories.push(factory);
+        desc = d; // identical flags -> identical description per arch
+    }
+    let mut router =
+        Router::start(factories, RouterConfig { workers_per_arch: workers, ..Default::default() })?;
+    if let Some(b) = &budget {
+        router.set_budget(b.clone());
+    }
+    let router = std::sync::Arc::new(router);
     let host = args.opt_or("host", "127.0.0.1");
     let port = args.opt_usize("port", 7433);
     let cfg = ServerConfig {
@@ -456,7 +527,8 @@ fn cmd_listen(args: &Args) -> Result<()> {
     let server = IngressServer::start(router.clone(), cfg)?;
     // The CI smoke job greps these exact lines for the ephemeral ports
     // (`--port 0` lets the OS pick one).
-    println!("listening on {} — {} ({desc})", server.local_addr(), arch.name);
+    let names: Vec<&str> = archs.iter().map(|a| a.name.as_str()).collect();
+    println!("listening on {} — {} ({desc})", server.local_addr(), names.join(","));
     if let Some(m) = server.metrics_addr() {
         println!("metrics listening on {m}");
     }

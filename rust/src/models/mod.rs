@@ -2,6 +2,12 @@
 //! architecture specs, graph builders (pre- and post-optimization forms),
 //! and the loader for the weights exported by `python/compile/aot.py`.
 
+// Panic-freedom gate: model/weight construction runs inside
+// serving-backend factories, so failures must be typed errors, never
+// unwinds.  `clippy.toml` disallows Option/Result unwrap+expect; test
+// modules opt out locally.
+#![deny(clippy::disallowed_methods)]
+
 mod resnet;
 mod weights;
 

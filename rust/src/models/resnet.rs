@@ -314,6 +314,7 @@ pub fn default_exps(arch: &ArchSpec) -> (ActExps, WExps) {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::graph::infer_shapes;

@@ -233,6 +233,7 @@ pub fn synthetic_weights(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::models::resnet8;

@@ -183,6 +183,12 @@ const FAMILIES: &[(&str, &str)] = &[
     ("repro_stream_peak_replicas", "gauge"),
     ("repro_stream_scale_events_total", "counter"),
     ("repro_stream_frames_total", "counter"),
+    ("repro_budget_total_workers", "gauge"),
+    ("repro_budget_utilization", "gauge"),
+    ("repro_budget_denied_total", "counter"),
+    ("repro_budget_held_workers", "gauge"),
+    ("repro_budget_reserved_workers", "gauge"),
+    ("repro_budget_denied_grants_total", "counter"),
 ];
 
 /// The full Prometheus text exposition for one scrape.
@@ -198,6 +204,13 @@ pub fn prometheus_text(router: &Router) -> String {
         if let Some(stalls) = m.stall_report() {
             stalls.prometheus_samples(&labels, &mut out);
         }
+    }
+    // Shared worker-budget families come from the router's one budget
+    // snapshot (per-arch lease rows carry their own `arch` labels) — not
+    // from the per-arch serving snapshots, which would emit duplicate
+    // series for the same lease.
+    if let Some(b) = router.budget_snapshot() {
+        b.prometheus_samples(&mut out);
     }
     out
 }
@@ -232,6 +245,13 @@ fn serving_samples(labels: &str, s: &MetricsSnapshot, out: &mut String) {
         "repro_stream_buffered_fraction{{{labels}}} {:.6}",
         s.stream_buffered_fraction
     );
+    // Replica gauges are emitted here, per arch, unconditionally (0 for
+    // non-streaming backends) — not from the stall report, whose samples
+    // only appear once a streaming pool has reported.  A dashboard can
+    // therefore always plot `repro_stream_replicas{arch=...}` per arch,
+    // and an idle arch is an explicit 0, not a missing series.
+    let _ = writeln!(out, "repro_stream_replicas{{{labels}}} {}", s.stream_replicas);
+    let _ = writeln!(out, "repro_stream_peak_replicas{{{labels}}} {}", s.stream_peak_replicas);
 }
 
 /// One arch's serving snapshot as a JSON object.
@@ -260,6 +280,12 @@ fn snapshot_json(s: &MetricsSnapshot) -> Json {
     o.insert("stream_buffered_fraction".to_string(), Json::Float(s.stream_buffered_fraction));
     o.insert("stream_replicas".to_string(), Json::Int(s.stream_replicas as i64));
     o.insert("stream_peak_replicas".to_string(), Json::Int(s.stream_peak_replicas as i64));
+    o.insert("budget_workers_held".to_string(), Json::Int(s.budget_workers_held as i64));
+    o.insert(
+        "budget_workers_reserved".to_string(),
+        Json::Int(s.budget_workers_reserved as i64),
+    );
+    o.insert("budget_denied".to_string(), Json::Int(s.budget_denied as i64));
     match &s.bottleneck {
         Some(b) => o.insert("bottleneck".to_string(), Json::Str(b.clone())),
         None => o.insert("bottleneck".to_string(), Json::Null),
@@ -285,6 +311,10 @@ pub fn stats_json(router: &Router) -> Json {
     let mut o = BTreeMap::new();
     o.insert("archs".to_string(), Json::Object(archs));
     o.insert("total".to_string(), snapshot_json(&snap.total));
+    o.insert(
+        "budget".to_string(),
+        snap.budget.as_ref().map_or(Json::Null, |b| b.to_json()),
+    );
     Json::Object(o)
 }
 
@@ -340,6 +370,10 @@ mod tests {
         assert!(prom.contains("# TYPE repro_stage_busy_fraction gauge"), "{prom}");
         assert!(prom.contains("repro_requests_total{arch=\"resnet8\"} 1"), "{prom}");
         assert!(prom.contains("repro_latency_us{arch=\"resnet8\",quantile=\"p99\"}"), "{prom}");
+        // Per-arch replica gauges are unconditional: a non-streaming
+        // backend exports an explicit 0, never a missing series.
+        assert!(prom.contains("repro_stream_replicas{arch=\"resnet8\"} 0"), "{prom}");
+        assert!(prom.contains("repro_stream_peak_replicas{arch=\"resnet8\"} 0"), "{prom}");
 
         let body = fetch(&addr, "/stats.json").unwrap();
         let j = Json::parse(&body).unwrap();
@@ -350,6 +384,8 @@ mod tests {
         // Golden backend: no streaming pool, so no stall report.
         assert_eq!(j.at("archs/resnet8/stalls"), Some(&Json::Null));
         assert_eq!(j.at("total/requests").and_then(|v| v.as_i64()), Some(1));
+        // No shared worker budget on this router: explicit null.
+        assert_eq!(j.at("budget"), Some(&Json::Null));
 
         // Root serves the same JSON; unknown paths 404 (surfaced as a
         // typed error by fetch).

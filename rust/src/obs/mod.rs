@@ -57,7 +57,9 @@ pub use clock::{
     FifoProbe, FrameSpan, PipelineObs, SpanRing, StageClock, StageRole, StageStall, OCC_BUCKETS,
     SPAN_RING,
 };
-pub use report::{base_name, BlockOp, BottleneckReport, EdgeStat, StallReport};
+pub use report::{
+    base_name, BlockOp, BottleneckReport, BudgetLease, BudgetSnapshot, EdgeStat, StallReport,
+};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 

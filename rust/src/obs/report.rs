@@ -117,6 +117,148 @@ impl fmt::Display for BottleneckReport {
     }
 }
 
+/// One registered pool's row in a [`BudgetSnapshot`]: its reservation
+/// floor, the workers it currently holds (above the reservation =
+/// borrowed headroom), how often its bids were denied, and whether a
+/// denied bid is still queued.
+#[derive(Debug, Clone, Default)]
+pub struct BudgetLease {
+    pub arch: String,
+    pub reserved: usize,
+    pub held: usize,
+    pub denied: u64,
+    pub waiting: bool,
+}
+
+/// Point-in-time view of the process-wide worker budget
+/// (`stream::WorkerBudget`): the cap, what is leased out, what the
+/// grant rule charges (`sum(max(held, reserved))`), and the per-pool
+/// ledger.  Plain data so every observability surface — `StallReport`,
+/// `/metrics`, `stats.json`, `RouterSnapshot` — renders the same view.
+#[derive(Debug, Clone, Default)]
+pub struct BudgetSnapshot {
+    /// Hard cap on leased stage workers across every pool.
+    pub total: usize,
+    /// Workers currently leased out.
+    pub held: usize,
+    /// `sum(max(held, reserved))` — reservations stay charged even
+    /// while unused, so they are always satisfiable.
+    pub committed: usize,
+    /// Denied grants across all pools since startup.
+    pub denied: u64,
+    /// One row per registered pool, registration order.
+    pub leases: Vec<BudgetLease>,
+}
+
+impl BudgetSnapshot {
+    /// Leased fraction of the cap, 0 when no budget is configured.
+    pub fn utilization(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.held as f64 / self.total as f64
+        }
+    }
+
+    /// Rows merged by arch label (an arch served by several router
+    /// workers registers one client per pool; Prometheus series must
+    /// not duplicate a label set).
+    pub fn per_arch(&self) -> Vec<BudgetLease> {
+        let mut out: Vec<BudgetLease> = Vec::new();
+        for l in &self.leases {
+            match out.iter_mut().find(|o| o.arch == l.arch) {
+                Some(o) => {
+                    o.reserved += l.reserved;
+                    o.held += l.held;
+                    o.denied += l.denied;
+                    o.waiting |= l.waiting;
+                }
+                None => out.push(l.clone()),
+            }
+        }
+        out
+    }
+
+    /// The machine-readable form used by `stats.json` and
+    /// `repro stats --json`.
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("total_workers".to_string(), Json::Int(self.total as i64));
+        o.insert("held_workers".to_string(), Json::Int(self.held as i64));
+        o.insert("committed_workers".to_string(), Json::Int(self.committed as i64));
+        o.insert("denied_total".to_string(), Json::Int(self.denied as i64));
+        o.insert("utilization".to_string(), Json::Float(self.utilization()));
+        let leases = self
+            .per_arch()
+            .into_iter()
+            .map(|l| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("arch".to_string(), Json::Str(l.arch));
+                m.insert("reserved_workers".to_string(), Json::Int(l.reserved as i64));
+                m.insert("held_workers".to_string(), Json::Int(l.held as i64));
+                m.insert("denied_total".to_string(), Json::Int(l.denied as i64));
+                m.insert("waiting".to_string(), Json::Bool(l.waiting));
+                Json::Object(m)
+            })
+            .collect();
+        o.insert("leases".to_string(), Json::Array(leases));
+        Json::Object(o)
+    }
+
+    /// Append the budget's Prometheus samples (no `# TYPE` headers —
+    /// the endpoint emits those once).  Process-level series carry no
+    /// labels; per-pool series are labelled by arch.
+    pub fn prometheus_samples(&self, out: &mut String) {
+        use fmt::Write as _;
+        let _ = writeln!(out, "repro_budget_total_workers {}", self.total);
+        let _ = writeln!(out, "repro_budget_utilization {:.6}", self.utilization());
+        let _ = writeln!(out, "repro_budget_denied_total {}", self.denied);
+        for l in self.per_arch() {
+            let _ = writeln!(
+                out,
+                "repro_budget_held_workers{{arch=\"{}\"}} {}",
+                l.arch, l.held
+            );
+            let _ = writeln!(
+                out,
+                "repro_budget_reserved_workers{{arch=\"{}\"}} {}",
+                l.arch, l.reserved
+            );
+            let _ = writeln!(
+                out,
+                "repro_budget_denied_grants_total{{arch=\"{}\"}} {}",
+                l.arch, l.denied
+            );
+        }
+    }
+}
+
+impl fmt::Display for BudgetSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "budget {}/{} workers leased ({:.0}% util, committed {}, denied {})",
+            self.held,
+            self.total,
+            self.utilization() * 100.0,
+            self.committed,
+            self.denied
+        )?;
+        for l in self.per_arch() {
+            write!(
+                f,
+                "\n  {:<12} holds {:>3} (reserved {:>3}, denied {}{})",
+                l.arch,
+                l.held,
+                l.reserved,
+                l.denied,
+                if l.waiting { ", bid queued" } else { "" }
+            )?;
+        }
+        Ok(())
+    }
+}
+
 /// Replica-aggregated pool telemetry: per-stage wall-time splits,
 /// per-edge stall/occupancy counters, and the pool gauges.
 #[derive(Debug, Clone, Default)]
@@ -133,6 +275,9 @@ pub struct StallReport {
     /// Elastic controller scale events since pool start.
     pub scale_ups: u64,
     pub scale_downs: u64,
+    /// Worker-budget view when the pool leases replicas from a shared
+    /// `stream::WorkerBudget`; `None` for standalone pools.
+    pub budget: Option<BudgetSnapshot>,
 }
 
 impl StallReport {
@@ -284,6 +429,9 @@ impl StallReport {
             .collect();
         o.insert("edges".to_string(), Json::Array(edges));
         o.insert("bottleneck".to_string(), Json::Str(self.bottleneck().to_string()));
+        if let Some(b) = &self.budget {
+            o.insert("budget".to_string(), b.to_json());
+        }
         Json::Object(o)
     }
 
@@ -361,8 +509,10 @@ impl StallReport {
                 e.name
             );
         }
-        let _ = writeln!(out, "repro_stream_replicas{{{labels}}} {}", self.replicas);
-        let _ = writeln!(out, "repro_stream_peak_replicas{{{labels}}} {}", self.peak_replicas);
+        // Replica gauges are NOT emitted here: `net::metrics` exports
+        // them per arch from the metrics snapshot unconditionally (they
+        // must not disappear whenever no stall report is cached, and a
+        // budget shift between arches must never be netted out).
         for (dir, n) in [("up", self.scale_ups), ("down", self.scale_downs)] {
             let _ = writeln!(
                 out,
@@ -432,6 +582,9 @@ impl fmt::Display for StallReport {
             "frames {}  replicas {} (peak {})  scale up/down {}/{}",
             self.frames, self.replicas, self.peak_replicas, self.scale_ups, self.scale_downs
         )?;
+        if let Some(b) = &self.budget {
+            writeln!(f, "{b}")?;
+        }
         write!(f, "bottleneck: {}", self.bottleneck())
     }
 }
@@ -551,9 +704,35 @@ mod tests {
             peak_replicas: 3,
             scale_ups: 2,
             scale_downs: 1,
+            budget: Some(BudgetSnapshot {
+                total: 24,
+                held: 18,
+                committed: 20,
+                denied: 3,
+                leases: vec![
+                    BudgetLease {
+                        arch: "resnet8".into(),
+                        reserved: 8,
+                        held: 16,
+                        denied: 1,
+                        waiting: false,
+                    },
+                    BudgetLease {
+                        arch: "resnet20".into(),
+                        reserved: 4,
+                        held: 2,
+                        denied: 2,
+                        waiting: true,
+                    },
+                ],
+            }),
         };
         let j = report.to_json();
         assert_eq!(j.at("frames").and_then(|v| v.as_i64()), Some(32));
+        assert_eq!(j.at("budget/total_workers").and_then(|v| v.as_i64()), Some(24));
+        let leases = j.at("budget/leases").and_then(|v| v.as_array()).expect("leases");
+        assert_eq!(leases.len(), 2);
+        assert_eq!(leases[1].get("waiting"), Some(&Json::Bool(true)));
         let stages = j.at("stages").and_then(|v| v.as_array()).expect("stages array");
         assert_eq!(stages[0].get("stage").and_then(|v| v.as_str()), Some("s0b0c1"));
         let edges = j.at("edges").and_then(|v| v.as_array()).expect("edges array");
@@ -568,10 +747,30 @@ mod tests {
             "repro_fifo_occupancy_peak_elems{arch=\"resnet8\",fifo=\"s0b0c2.skip\"",
             "repro_fifo_blocked_seconds_total{arch=\"resnet8\",fifo=\"s0b0c2.skip\",op=\"push\"}",
             "repro_fifo_occupancy_bucket{arch=\"resnet8\",fifo=\"s0b0c2.skip\",le=\"+Inf\"} 32",
-            "repro_stream_replicas{arch=\"resnet8\"} 2",
             "repro_stream_scale_events_total{arch=\"resnet8\",dir=\"up\"} 2",
         ] {
             assert!(prom.contains(family), "missing {family} in:\n{prom}");
         }
+        // Replica gauges moved to the per-arch serving samples so they
+        // survive stall-report gaps; the stall report must no longer
+        // emit a competing series.
+        assert!(!prom.contains("repro_stream_replicas"), "duplicate replica series:\n{prom}");
+
+        let mut bprom = String::new();
+        report.budget.as_ref().expect("budget section").prometheus_samples(&mut bprom);
+        for family in [
+            "repro_budget_total_workers 24",
+            "repro_budget_utilization 0.75",
+            "repro_budget_denied_total 3",
+            "repro_budget_held_workers{arch=\"resnet8\"} 16",
+            "repro_budget_reserved_workers{arch=\"resnet20\"} 4",
+            "repro_budget_denied_grants_total{arch=\"resnet20\"} 2",
+        ] {
+            assert!(bprom.contains(family), "missing {family} in:\n{bprom}");
+        }
+
+        let text = report.to_string();
+        assert!(text.contains("budget 18/24 workers leased"), "{text}");
+        assert!(text.contains("bid queued"), "{text}");
     }
 }

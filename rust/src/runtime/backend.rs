@@ -39,7 +39,7 @@ use crate::models::{
 };
 use crate::quant::{QTensor, Shape4};
 use crate::sim::{build_network, golden, SimOptions};
-use crate::stream::{ElasticConfig, StreamConfig, StreamPool, StreamStats};
+use crate::stream::{ElasticConfig, StreamConfig, StreamPool, StreamStats, WorkerBudget};
 
 /// Something that can run inference batches for one architecture.
 ///
@@ -94,6 +94,13 @@ pub trait InferenceBackend {
     /// serving path throttles how often it asks.  `None` for backends
     /// without a pipeline pool, and before the first served frame.
     fn stall_report(&self) -> Option<crate::obs::StallReport> {
+        None
+    }
+    /// This backend's row in the shared worker budget —
+    /// `(held, reserved, denied)` workers — exported to the per-arch
+    /// serving metrics as lease gauges.  `None` for backends outside a
+    /// [`crate::stream::WorkerBudget`].
+    fn budget_gauges(&self) -> Option<(u64, u64, u64)> {
         None
     }
 }
@@ -555,6 +562,12 @@ impl InferenceBackend for StreamBackend {
         }
         Some(self.pool.stall_report())
     }
+
+    fn budget_gauges(&self) -> Option<(u64, u64, u64)> {
+        self.pool
+            .budget_stat()
+            .map(|(held, reserved, denied)| (held as u64, reserved as u64, denied))
+    }
 }
 
 /// Factory for [`StreamBackend`]s (each router worker gets its own
@@ -637,6 +650,17 @@ impl StreamFactory {
     /// --window-storage rows|slices`; slice-granular by default).
     pub fn with_storage(mut self, storage: crate::stream::WindowStorage) -> StreamFactory {
         self.cfg.window_storage = storage;
+        self
+    }
+
+    /// Lease replicas from a process-wide worker budget
+    /// (`serve`/`listen --worker-budget N`): every pool this factory
+    /// creates registers a `min_replicas x stages` reservation against
+    /// the shared [`WorkerBudget`] and bids for a lease before each
+    /// scale-up — so all arches' pools draw from one thread cap and an
+    /// idle arch's headroom serves a bursting one.
+    pub fn with_budget(mut self, budget: Arc<WorkerBudget>) -> StreamFactory {
+        self.cfg.budget = Some(budget);
         self
     }
 

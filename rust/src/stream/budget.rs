@@ -1,0 +1,497 @@
+//! Process-wide worker budget: stage replicas as leases.
+//!
+//! Every arch behind the router used to own its replica band outright,
+//! so a ResNet8+ResNet20 fleet pinned `sum(arches x max_replicas x
+//! stages)` threads even when most pools idled.  A [`WorkerBudget`] is
+//! the shared substrate instead: one process-level cap on live stage
+//! workers, per-pool *reservations* (`min_replicas x stages`, so every
+//! arch can always field its floor), and everything above the
+//! reservations as *borrowable headroom* — an idle arch's unused share
+//! serves whichever pool is bursting.
+//!
+//! The lease lifecycle:
+//!
+//! ```text
+//!   StreamPool::new ──register(arch, min_replicas x stages)──▶ BudgetHandle
+//!        │                                                        │
+//!   add_replica ────acquire(stages)──▶ WorkerLease ──▶ stored in the
+//!        │              │ (denied: counted, queued)     ReplicaHandle
+//!   retire_one / drain / failed spawn ──drop(lease)──▶ workers returned
+//!        │
+//!   pool drop ──drop(handle)──▶ reservation released (deregistered)
+//! ```
+//!
+//! Grant rule — the budget charges each client `max(held, reserved)`,
+//! so reservations stay satisfiable no matter who is borrowing:
+//!
+//! * an acquire that keeps the client at or under its reservation
+//!   ALWAYS succeeds (the charge does not grow);
+//! * an acquire above the reservation (a borrow) succeeds only if the
+//!   total charge stays within the cap AND no *other* client is ahead
+//!   of it in the FIFO waiter queue — first denied, first served, so a
+//!   starved arch cannot be locked out by a faster-polling one;
+//! * a denied acquire enqueues the client and bumps the denial
+//!   counters; [`BudgetHandle::should_yield`] then hints current
+//!   borrowers to retire a replica voluntarily (the elastic
+//!   controller's preemption path — rebalancing never kills a replica
+//!   mid-frame from the outside).
+//!
+//! Everything here is bookkeeping under one mutex: poison-tolerant
+//! (`PoisonError::into_inner` — the state is plain counters, always
+//! consistent at rest), no locks held across thread operations, and no
+//! panicking calls (the module rides under `stream/`'s
+//! `deny(clippy::disallowed_methods)` gate).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use crate::obs::{BudgetLease as LeaseRow, BudgetSnapshot};
+
+/// Budget registration can fail in exactly one way: the cap cannot
+/// cover the sum of reservations, so some pool could never field its
+/// `min_replicas`.  Surfaced as a typed error from `StreamPool::new`
+/// (and from `serve`/`listen --worker-budget N` at startup).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BudgetError {
+    /// `required` = existing committed workers + the new reservation.
+    Insufficient { arch: String, required: usize, total: usize },
+}
+
+impl fmt::Display for BudgetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BudgetError::Insufficient { arch, required, total } => write!(
+                f,
+                "worker budget too small: registering {arch} needs {required} worker(s) \
+                 reserved but the budget caps at {total} (raise --worker-budget to at \
+                 least the sum of min_replicas x stages over all arches)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BudgetError {}
+
+#[derive(Debug)]
+struct Client {
+    arch: String,
+    reserved: usize,
+    held: usize,
+    denied: u64,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    clients: BTreeMap<u64, Client>,
+    next_id: u64,
+    /// FIFO of client ids with an outstanding denied borrow.
+    waiters: VecDeque<u64>,
+    denied_total: u64,
+}
+
+impl State {
+    /// What the grant rule charges: `sum(max(held, reserved))`.
+    fn committed(&self) -> usize {
+        self.clients.values().map(|c| c.held.max(c.reserved)).sum()
+    }
+
+    fn held(&self) -> usize {
+        self.clients.values().map(|c| c.held).sum()
+    }
+}
+
+/// The shared substrate: a hard cap on live stage workers plus the
+/// per-client ledger.  Construct once, share via `Arc` through
+/// `StreamConfig::budget` / `StreamFactory::with_budget`.
+#[derive(Debug)]
+pub struct WorkerBudget {
+    total: usize,
+    state: Mutex<State>,
+}
+
+/// Poison-tolerant lock: the ledger is plain counters, consistent at
+/// rest, so a panicked peer must not wedge scaling or shutdown.
+fn recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl WorkerBudget {
+    /// A budget capping live stage workers at `total` process-wide.
+    pub fn new(total: usize) -> Self {
+        WorkerBudget { total, state: Mutex::new(State::default()) }
+    }
+
+    /// The hard cap this budget was built with.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Register a pool: reserve `reserved` workers (its
+    /// `min_replicas x stages` floor) for as long as the returned
+    /// handle lives.  Fails with [`BudgetError::Insufficient`] when the
+    /// cap cannot cover every reservation — callers surface that at
+    /// startup rather than starving at runtime.
+    pub fn register(
+        self: &Arc<Self>,
+        arch: &str,
+        reserved: usize,
+    ) -> Result<BudgetHandle, BudgetError> {
+        let mut st = recover(&self.state);
+        let required = st.committed() + reserved;
+        if required > self.total {
+            return Err(BudgetError::Insufficient {
+                arch: arch.to_string(),
+                required,
+                total: self.total,
+            });
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.clients
+            .insert(id, Client { arch: arch.to_string(), reserved, held: 0, denied: 0 });
+        Ok(BudgetHandle { budget: Arc::clone(self), id })
+    }
+
+    /// Point-in-time view for reports, `/metrics` and `stats.json`.
+    pub fn snapshot(&self) -> BudgetSnapshot {
+        let st = recover(&self.state);
+        BudgetSnapshot {
+            total: self.total,
+            held: st.held(),
+            committed: st.committed(),
+            denied: st.denied_total,
+            leases: st
+                .clients
+                .iter()
+                .map(|(id, c)| LeaseRow {
+                    arch: c.arch.clone(),
+                    reserved: c.reserved,
+                    held: c.held,
+                    denied: c.denied,
+                    waiting: st.waiters.contains(id),
+                })
+                .collect(),
+        }
+    }
+
+    fn acquire(&self, id: u64, workers: usize) -> bool {
+        let mut st = recover(&self.state);
+        let committed_others: usize = st
+            .clients
+            .iter()
+            .filter(|(cid, _)| **cid != id)
+            .map(|(_, c)| c.held.max(c.reserved))
+            .sum();
+        let Some(client) = st.clients.get(&id) else { return false };
+        let within_reservation = client.held + workers <= client.reserved;
+        let fits = committed_others + (client.held + workers).max(client.reserved) <= self.total;
+        // Borrows defer to earlier-denied peers; reservation-backed
+        // grants never do (the invariant keeps them always satisfiable).
+        let cut_in_line = !within_reservation
+            && st.waiters.front().is_some_and(|front| *front != id);
+        if fits && !cut_in_line {
+            if let Some(c) = st.clients.get_mut(&id) {
+                c.held += workers;
+            }
+            st.waiters.retain(|w| *w != id);
+            true
+        } else {
+            st.denied_total += 1;
+            if let Some(c) = st.clients.get_mut(&id) {
+                c.denied += 1;
+            }
+            if !st.waiters.contains(&id) {
+                st.waiters.push_back(id);
+            }
+            false
+        }
+    }
+
+    fn release(&self, id: u64, workers: usize) {
+        let mut st = recover(&self.state);
+        if let Some(c) = st.clients.get_mut(&id) {
+            c.held = c.held.saturating_sub(workers);
+        }
+    }
+
+    fn deregister(&self, id: u64) {
+        let mut st = recover(&self.state);
+        st.clients.remove(&id);
+        st.waiters.retain(|w| *w != id);
+    }
+
+    fn cancel_bid(&self, id: u64) {
+        let mut st = recover(&self.state);
+        st.waiters.retain(|w| *w != id);
+    }
+
+    fn should_yield(&self, id: u64) -> bool {
+        let st = recover(&self.state);
+        let Some(client) = st.clients.get(&id) else { return false };
+        client.held > client.reserved && st.waiters.iter().any(|w| *w != id)
+    }
+
+    fn client_stat(&self, id: u64) -> Option<(usize, usize, u64)> {
+        let st = recover(&self.state);
+        st.clients.get(&id).map(|c| (c.held, c.reserved, c.denied))
+    }
+}
+
+/// One pool's registration: the door through which it bids for worker
+/// leases.  Dropping the handle releases the reservation.
+#[derive(Debug)]
+pub struct BudgetHandle {
+    budget: Arc<WorkerBudget>,
+    id: u64,
+}
+
+impl BudgetHandle {
+    /// Bid for `workers` more workers (one replica's stages).  `None`
+    /// means denied — non-fatal by design: the elastic controller just
+    /// retries at its next sample, and the denial is visible in the
+    /// gauges.  The grant, when it comes, is a [`WorkerLease`] that
+    /// returns the workers on drop, so no failure path can leak them.
+    pub fn acquire(&self, workers: usize) -> Option<WorkerLease> {
+        self.budget.acquire(self.id, workers).then(|| WorkerLease {
+            budget: Arc::clone(&self.budget),
+            id: self.id,
+            workers,
+        })
+    }
+
+    /// Preemption hint: true when this pool holds borrowed workers
+    /// (above its reservation) while some other pool's bid sits in the
+    /// waiter queue.  The elastic controller answers by retiring one
+    /// replica — cooperative rebalance, never a mid-frame kill.
+    pub fn should_yield(&self) -> bool {
+        self.budget.should_yield(self.id)
+    }
+
+    /// Withdraw an outstanding denied bid from the waiter queue.  A
+    /// queued client blocks every later borrow (FIFO fairness), so a
+    /// controller that no longer wants to grow MUST cancel — otherwise
+    /// a pool that was denied during a burst and then went idle would
+    /// freeze everyone else's headroom forever.
+    pub fn cancel_bid(&self) {
+        self.budget.cancel_bid(self.id);
+    }
+
+    /// This client's `(held, reserved, denied)` row, for per-arch
+    /// metrics gauges.
+    pub fn stat(&self) -> Option<(usize, usize, u64)> {
+        self.budget.client_stat(self.id)
+    }
+
+    /// Snapshot of the whole budget this handle belongs to.
+    pub fn budget_snapshot(&self) -> BudgetSnapshot {
+        self.budget.snapshot()
+    }
+}
+
+impl Drop for BudgetHandle {
+    fn drop(&mut self) {
+        self.budget.deregister(self.id);
+    }
+}
+
+/// A granted lease on `workers` workers.  Held inside the replica's
+/// `ReplicaHandle`; dropping it (retire, drain, or any failed-spawn
+/// path) returns the workers to the budget.
+#[derive(Debug)]
+pub struct WorkerLease {
+    budget: Arc<WorkerBudget>,
+    id: u64,
+    workers: usize,
+}
+
+impl WorkerLease {
+    /// Workers this lease covers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+impl Drop for WorkerLease {
+    fn drop(&mut self) {
+        self.budget.release(self.id, self.workers);
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn reservation_grants_always_succeed_and_cap_is_never_exceeded() {
+        let b = Arc::new(WorkerBudget::new(10));
+        let h8 = b.register("resnet8", 4).unwrap();
+        let h20 = b.register("resnet20", 4).unwrap();
+        // Within-reservation bids always land, even interleaved.
+        let l8 = h8.acquire(4).expect("reservation-backed grant");
+        let l20 = h20.acquire(4).expect("reservation-backed grant");
+        let snap = b.snapshot();
+        assert_eq!((snap.held, snap.committed, snap.total), (8, 8, 10));
+        // Borrow up to the cap, not past it.
+        let borrow = h8.acquire(2).expect("headroom borrow");
+        assert!(h8.acquire(1).is_none(), "cap must hold");
+        assert!(h20.acquire(1).is_none(), "cap must hold for the peer too");
+        assert_eq!(b.snapshot().held, 10);
+        drop(borrow);
+        assert_eq!(b.snapshot().held, 8);
+        drop((l8, l20));
+        assert_eq!(b.snapshot().held, 0);
+        // Reservations stay charged until the handles drop.
+        assert_eq!(b.snapshot().committed, 8);
+        drop((h8, h20));
+        assert_eq!(b.snapshot().committed, 0);
+    }
+
+    #[test]
+    fn registration_over_cap_is_a_typed_error() {
+        let b = Arc::new(WorkerBudget::new(6));
+        let _h = b.register("resnet8", 4).unwrap();
+        let err = b.register("resnet20", 4).unwrap_err();
+        assert_eq!(
+            err,
+            BudgetError::Insufficient { arch: "resnet20".into(), required: 8, total: 6 }
+        );
+        assert!(err.to_string().contains("--worker-budget"));
+    }
+
+    #[test]
+    fn denied_borrower_gets_freed_headroom_before_a_late_bidder() {
+        let b = Arc::new(WorkerBudget::new(6));
+        let first = b.register("resnet8", 2).unwrap();
+        let second = b.register("resnet20", 2).unwrap();
+        let _f = first.acquire(2).unwrap();
+        let s_extra = second.acquire(4).expect("borrow all headroom");
+        // `first` is denied a borrow and queues.
+        assert!(first.acquire(2).is_none());
+        assert!(b.snapshot().leases.iter().any(|l| l.arch == "resnet8" && l.waiting));
+        assert!(second.should_yield(), "borrower must see the starved peer");
+        assert!(!first.should_yield(), "non-borrower never yields");
+        drop(s_extra);
+        // Headroom is free again, but `second` now has to wait its
+        // turn: `first` queued earlier and takes the grant.
+        assert!(second.acquire(4).is_none(), "late bidder must not cut the queue");
+        let f2 = first.acquire(2).expect("queued client served first");
+        assert!(!b.snapshot().leases.iter().any(|l| l.arch == "resnet8" && l.waiting));
+        drop(f2);
+        let denied = b.snapshot().denied;
+        assert!(denied >= 2, "denials must be counted (got {denied})");
+    }
+
+    #[test]
+    fn handle_drop_releases_reservation_and_queued_slot() {
+        let b = Arc::new(WorkerBudget::new(4));
+        let h1 = b.register("resnet8", 2).unwrap();
+        let h2 = b.register("resnet20", 2).unwrap();
+        assert!(h1.acquire(3).is_none(), "borrow over cap denied");
+        drop(h2);
+        // The peer's reservation is gone: the same borrow now fits, and
+        // h1's queued slot does not block itself.
+        assert!(h1.acquire(3).is_some());
+        assert_eq!(b.snapshot().committed, 3);
+    }
+
+    /// Satellite: grant/release laws under an adversarial schedule.
+    /// A model executes random acquire/release/yield steps against the
+    /// real budget and checks after every step that (1) held and
+    /// committed never exceed the cap, (2) a reservation-backed bid is
+    /// never denied, (3) a denied client is granted once enough
+    /// borrowed headroom drains — no starvation.
+    #[test]
+    fn prop_budget_laws_hold_under_adversarial_schedules() {
+        forall("worker budget grant/release laws", 64, |rng| {
+            let total = rng.range_i64(4, 24) as usize;
+            let n_clients = rng.range_i64(2, 4) as usize;
+            let b = Arc::new(WorkerBudget::new(total));
+            let mut reserved = Vec::new();
+            let mut handles = Vec::new();
+            let mut left = total;
+            for i in 0..n_clients {
+                let r = rng.range_i64(1, 1 + (left / (n_clients - i)) as i64) as usize;
+                left -= r;
+                reserved.push(r);
+                handles.push(b.register(&format!("arch{i}"), r).expect("fits"));
+            }
+            let mut leases: Vec<Vec<WorkerLease>> = (0..n_clients).map(|_| Vec::new()).collect();
+            let held = |leases: &[Vec<WorkerLease>], i: usize| -> usize {
+                leases[i].iter().map(WorkerLease::workers).sum()
+            };
+            for _ in 0..200 {
+                let i = rng.range_i64(0, n_clients as i64 - 1) as usize;
+                match rng.range_i64(0, 3) {
+                    0 => {
+                        // Law 2: a bid within the reservation always lands.
+                        let h = held(&leases, i);
+                        if h < reserved[i] {
+                            let want = rng.range_i64(1, (reserved[i] - h) as i64) as usize;
+                            let lease = handles[i]
+                                .acquire(want)
+                                .expect("reservation-backed bid denied");
+                            leases[i].push(lease);
+                        }
+                    }
+                    1 => {
+                        // Adversarial borrow of arbitrary size.
+                        let want = rng.range_i64(1, 1 + total as i64) as usize;
+                        if let Some(lease) = handles[i].acquire(want) {
+                            leases[i].push(lease);
+                        }
+                    }
+                    2 => {
+                        if !leases[i].is_empty() {
+                            let k =
+                                rng.range_i64(0, leases[i].len() as i64 - 1) as usize;
+                            leases[i].swap_remove(k);
+                        }
+                    }
+                    _ => {
+                        // A borrower that sees the yield hint gives one
+                        // lease back (the controller's preemption).
+                        if handles[i].should_yield() && !leases[i].is_empty() {
+                            leases[i].pop();
+                        }
+                    }
+                }
+                // Law 1: the cap holds after every step.
+                let snap = b.snapshot();
+                assert!(
+                    snap.held <= total && snap.committed <= total,
+                    "cap breached: held {} committed {} total {total}",
+                    snap.held,
+                    snap.committed
+                );
+                let model_held: usize = (0..n_clients).map(|i| held(&leases, i)).sum();
+                assert_eq!(snap.held, model_held, "ledger drifted from the leases");
+            }
+            // Law 3 (no starvation / no leaked accounting): once every
+            // lease drains and stale bids are withdrawn, a single
+            // client must be grantable the ENTIRE remaining headroom —
+            // nothing the adversarial schedule did may leave workers
+            // stranded or a ghost waiter blocking the queue.
+            for l in &mut leases {
+                l.clear();
+            }
+            for h in &handles {
+                h.cancel_bid();
+            }
+            let sum_reserved: usize = reserved.iter().sum();
+            let i = rng.range_i64(0, n_clients as i64 - 1) as usize;
+            let all_headroom = total - sum_reserved + reserved[i];
+            if all_headroom > 0 {
+                let lease = handles[i].acquire(all_headroom);
+                assert!(
+                    lease.is_some(),
+                    "drained budget refused the full headroom: {:?}",
+                    b.snapshot()
+                );
+                assert_eq!(b.snapshot().committed, total, "full headroom = exactly the cap");
+            }
+        });
+    }
+}

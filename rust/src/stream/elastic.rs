@@ -171,21 +171,43 @@ pub(crate) fn controller_loop(inner: &PoolInner, cfg: &ElasticConfig, default_hi
             return;
         }
         let Some(s) = inner.sample() else { return };
+        // Preemption first: if this pool holds borrowed workers while a
+        // starved peer's bid waits in the shared budget's queue, give a
+        // replica back voluntarily (drained between frames, never a
+        // mid-frame kill) before judging our own load.  `retire_one`
+        // refuses below `min_replicas`, so the reservation floor holds.
+        if inner.should_yield() && inner.retire_one() {
+            inner.scale_downs.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
         match policy.observe(s.queue_depth, s.in_flight, inner.replica_count()) {
-            // A failed spawn (transient resource exhaustion) is not
-            // fatal: the pool keeps serving at its current size and the
-            // controller simply retries on a later sample.
+            // Scaling up is a BID, not a self-grant: under a shared
+            // budget `add_replica` first asks for a lease, and a denial
+            // (like a failed spawn under transient resource exhaustion)
+            // is not fatal — the pool keeps serving at its current
+            // size, the denial lands in the budget's counters/queue,
+            // and the controller retries on a later sample.
             Some(ScaleAction::Up) => {
                 if inner.add_replica().is_ok() {
                     inner.scale_ups.fetch_add(1, Ordering::Relaxed);
                 }
             }
             Some(ScaleAction::Down) => {
+                inner.cancel_bid();
                 if inner.retire_one() {
                     inner.scale_downs.fetch_add(1, Ordering::Relaxed);
                 }
             }
-            None => {}
+            // Steady state: once the queue is back at/under the mark,
+            // withdraw any stale queued bid — a pool that stopped
+            // wanting to grow must not block the other pools' borrows
+            // from the FIFO waiter queue.  (While pressure persists the
+            // bid stays queued, keeping its anti-starvation position.)
+            None => {
+                if s.queue_depth <= policy.high_water() {
+                    inner.cancel_bid();
+                }
+            }
         }
     }
 }

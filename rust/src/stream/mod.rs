@@ -67,6 +67,7 @@
 // disallows Option/Result unwrap+expect; test modules opt out locally.
 #![deny(clippy::disallowed_methods)]
 
+mod budget;
 mod elastic;
 mod executor;
 mod fifo;
@@ -74,6 +75,7 @@ mod line_buffer;
 mod pool;
 mod stage;
 
+pub use budget::{BudgetError, BudgetHandle, WorkerBudget, WorkerLease};
 pub use elastic::{ElasticConfig, ElasticPolicy, ScaleAction};
 pub use executor::run_streaming;
 pub use fifo::{BufferStat, Fifo, PeakGauge, StreamError};
@@ -149,6 +151,14 @@ pub struct StreamConfig {
     /// spawns (default).  The deadlock-regression tests set this to
     /// `false` to reach the runtime `Stalled` watchdog on purpose.
     pub static_checks: bool,
+    /// Process-wide worker budget for multi-tenant serving: when set,
+    /// the pool registers a `min_replicas x stages` reservation at
+    /// construction (failing with a typed [`BudgetError`] if the cap
+    /// cannot cover every pool's floor) and every replica beyond it is
+    /// leased — grown only when the shared budget grants the bid,
+    /// released on retire/drain/failed spawn.  `None` keeps the
+    /// pre-budget behavior: the pool owns its band outright.
+    pub budget: Option<std::sync::Arc<WorkerBudget>>,
 }
 
 impl Default for StreamConfig {
@@ -169,6 +179,7 @@ impl Default for StreamConfig {
             ow_worker_cap: 4,
             elastic: None,
             static_checks: true,
+            budget: None,
         }
     }
 }

@@ -57,6 +57,7 @@ use crate::models::ModelWeights;
 use crate::obs::{self, FifoProbe, PipelineObs, SpanRing, StageClock};
 use crate::quant::{QTensor, Shape4};
 
+use super::budget::{BudgetHandle, WorkerLease};
 use super::elastic::{controller_loop, LoadSample};
 use super::fifo::{BufferStat, Fifo, PeakGauge, StreamError};
 use super::stage::{
@@ -184,6 +185,12 @@ struct ReplicaHandle {
     retire: Arc<AtomicBool>,
     /// This replica's stall clocks and span ring.
     obs: PipelineObs,
+    /// The worker-budget lease backing this replica's stage threads
+    /// (`None` for pools outside a shared budget).  RAII: dropping the
+    /// handle — retire, drain, or any failed-spawn unwind in
+    /// `add_replica` — returns the workers to the budget, so no error
+    /// path can leak a lease.
+    _lease: Option<WorkerLease>,
 }
 
 /// Everything the pool's threads (and the elastic controller) share.
@@ -215,6 +222,16 @@ pub(crate) struct PoolInner {
     weights: Arc<ModelWeights>,
     min_replicas: usize,
     max_replicas: usize,
+    /// Registration against the process-wide [`super::WorkerBudget`]
+    /// (reservation = `min_replicas x stages`); every replica's stage
+    /// threads are leased through it.  Dropping the handle on pool
+    /// teardown releases the reservation.
+    budget: Option<BudgetHandle>,
+    /// Injection hook for the lease-leak audit: force the next
+    /// `add_replica` to fail after its lease is acquired, exercising
+    /// the error path a real spawn failure would take.
+    #[cfg(test)]
+    fail_next_spawn: AtomicBool,
 }
 
 impl PoolInner {
@@ -242,10 +259,53 @@ impl PoolInner {
         })
     }
 
+    /// Workers one replica costs against the budget: its stage-thread
+    /// count (the feeder/sink/supervisor service threads ride along
+    /// uncounted — one cheap, mostly-blocked trio per replica).
+    pub(crate) fn workers_per_replica(&self) -> usize {
+        self.blueprint.stages_per_replica().max(1)
+    }
+
+    /// Preemption hint from the shared budget: this pool holds borrowed
+    /// workers while another pool's bid is queued.
+    pub(crate) fn should_yield(&self) -> bool {
+        self.budget.as_ref().is_some_and(BudgetHandle::should_yield)
+    }
+
+    /// Withdraw any queued borrow bid (the controller stopped wanting
+    /// to grow); no-op without a budget or a queued bid.
+    pub(crate) fn cancel_bid(&self) {
+        if let Some(b) = &self.budget {
+            b.cancel_bid();
+        }
+    }
+
     /// Stamp and launch one replica from the shared blueprint.  Cheap
     /// (no re-planning); on a spawn failure the partial thread set is
-    /// aborted and joined before the error propagates.
+    /// aborted and joined before the error propagates.  Under a shared
+    /// worker budget the replica's stage threads are leased FIRST — a
+    /// denied bid fails here before any thread exists, and the lease is
+    /// an RAII guard local to this call until the replica joins the
+    /// live set, so every later error return releases it.
     pub(crate) fn add_replica(&self) -> Result<()> {
+        let lease: Option<WorkerLease> = match &self.budget {
+            Some(b) => {
+                let workers = self.workers_per_replica();
+                Some(b.acquire(workers).ok_or_else(|| {
+                    anyhow!(
+                        "worker budget denied {workers} worker(s) for {} (cap {}): \
+                         peers hold the headroom",
+                        self.name,
+                        b.budget_snapshot().total
+                    )
+                })?)
+            }
+            None => None,
+        };
+        #[cfg(test)]
+        if self.fail_next_spawn.swap(false, Ordering::SeqCst) {
+            return Err(anyhow!("injected replica spawn failure"));
+        }
         let id = match recover(&self.free_ids).pop() {
             Some(id) => id,
             None => self.next_replica.fetch_add(1, Ordering::SeqCst),
@@ -332,7 +392,15 @@ impl PoolInner {
             }
         };
         let mut reps = recover(&self.replicas);
-        reps.push(ReplicaHandle { id, supervisor: Some(sup), fifos, gauges, retire, obs: robs });
+        reps.push(ReplicaHandle {
+            id,
+            supervisor: Some(sup),
+            fifos,
+            gauges,
+            retire,
+            obs: robs,
+            _lease: lease,
+        });
         self.peak_replicas.fetch_max(reps.len(), Ordering::Relaxed);
         Ok(())
     }
@@ -412,6 +480,17 @@ impl StreamPool {
         };
         let acfg = planned_config(name, g, &cfg)?;
         let blueprint = plan_pipeline(g, &weights, &cfg, &acfg)?;
+        // Register against the shared worker budget before any replica
+        // spawns: the reservation (`min_replicas x stages`) guarantees
+        // the floor is always grantable, and an impossible cap is a
+        // typed startup error instead of runtime starvation.
+        let budget = match &cfg.budget {
+            Some(b) => {
+                let stages = blueprint.stages_per_replica().max(1);
+                Some(b.register(name, min_replicas.saturating_mul(stages))?)
+            }
+            None => None,
+        };
         let inner = Arc::new(PoolInner {
             name: name.to_string(),
             shared: Arc::new(Shared {
@@ -434,6 +513,9 @@ impl StreamPool {
             weights,
             min_replicas,
             max_replicas,
+            budget,
+            #[cfg(test)]
+            fail_next_spawn: AtomicBool::new(false),
         });
         let mut pool = StreamPool { inner: inner.clone(), controller: None };
         for _ in 0..initial {
@@ -551,6 +633,19 @@ impl StreamPool {
         (self.inner.blueprint.stages_per_replica() * self.inner.max_replicas).max(1)
     }
 
+    /// Stage workers one replica costs against a shared
+    /// [`super::WorkerBudget`] (the lease unit: `stages` threads — the
+    /// feeder/sink/supervisor service trio rides along uncounted).
+    pub fn workers_per_replica(&self) -> usize {
+        self.inner.workers_per_replica()
+    }
+
+    /// This pool's `(held, reserved, denied)` worker-budget row, `None`
+    /// without a shared budget.  Feeds the per-arch lease gauges.
+    pub fn budget_stat(&self) -> Option<(usize, usize, u64)> {
+        self.inner.budget.as_ref().and_then(BudgetHandle::stat)
+    }
+
     /// Logit classes per frame.
     pub fn classes(&self) -> usize {
         self.inner.blueprint.classes
@@ -646,6 +741,7 @@ impl StreamPool {
             peak_replicas: self.peak_replicas(),
             scale_ups: self.inner.scale_ups.load(Ordering::Relaxed),
             scale_downs: self.inner.scale_downs.load(Ordering::Relaxed),
+            budget: self.inner.budget.as_ref().map(BudgetHandle::budget_snapshot),
         }
     }
 
@@ -1119,6 +1215,58 @@ mod tests {
         // the worst pair recorded while it served).
         let (peak, _) = pool.buffered_gauges();
         assert_eq!(peak, 0, "idle live replica; retired peaks excluded");
+    }
+
+    /// Lease-leak audit: a scale-up that fails *after* its budget lease
+    /// was granted must return the lease.  The `fail_next_spawn` hook
+    /// injects the failure in the exact window a leak would hide in —
+    /// between lease acquisition and replica construction — and the
+    /// budget's held gauge must come back to its pre-call value, with
+    /// the headroom still grantable to a real grow afterwards.
+    #[test]
+    fn failed_scale_up_returns_its_budget_lease() {
+        use crate::models::{arch_by_name, build_optimized_graph, synthetic_weights};
+        use crate::stream::{ElasticConfig, WorkerBudget};
+
+        let arch = arch_by_name("resnet8").unwrap();
+        let weights = synthetic_weights(&arch, 7);
+        let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        // Generous cap: denial is not what this test exercises.
+        let budget = Arc::new(WorkerBudget::new(1024));
+        let cfg = StreamConfig {
+            elastic: Some(ElasticConfig {
+                min_replicas: 1,
+                max_replicas: 3,
+                // Passive controller: the test drives scaling by hand.
+                scale_down_samples: 1_000_000,
+                ..Default::default()
+            }),
+            budget: Some(budget.clone()),
+            ..Default::default()
+        };
+        let pool = StreamPool::new("resnet8", &g, Arc::new(weights), cfg).unwrap();
+        let per = pool.workers_per_replica();
+        assert!(per >= 1);
+        // The initial replica holds exactly the reservation.
+        let (held0, reserved, _) = pool.budget_stat().unwrap();
+        assert_eq!(held0, per);
+        assert_eq!(reserved, per);
+        assert_eq!(budget.snapshot().held, per);
+        // Inject: the next spawn fails after the lease is acquired.
+        pool.inner.fail_next_spawn.store(true, Ordering::SeqCst);
+        let err = pool.inner.add_replica().unwrap_err();
+        assert!(format!("{err}").contains("injected replica spawn failure"), "{err}");
+        assert_eq!(pool.replicas(), 1);
+        let (held1, _, _) = pool.budget_stat().unwrap();
+        assert_eq!(held1, held0, "failed scale-up leaked a worker lease");
+        assert_eq!(budget.snapshot().held, per);
+        // The returned headroom still grants: a real grow borrows it...
+        pool.inner.add_replica().unwrap();
+        assert_eq!(pool.replicas(), 2);
+        assert_eq!(budget.snapshot().held, 2 * per);
+        // ...and retiring returns it again.
+        assert!(pool.inner.retire_one());
+        assert_eq!(budget.snapshot().held, per);
     }
 
     /// Same audit for the sink's pending-responders lock.
