@@ -23,8 +23,9 @@ use std::collections::BTreeMap;
 
 use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::hls::streams::StreamKind;
-use resnet_hls::models::{arch_by_name, build_optimized_graph, synthetic_weights};
+use resnet_hls::models::{arch_by_name, build_optimized_graph, synthetic_weights, tiednet};
 use resnet_hls::runtime::{GoldenBackend, InferenceBackend, StreamBackend};
+use resnet_hls::sim::golden;
 use resnet_hls::stream::{run_streaming, ElasticConfig, StreamConfig, WindowStorage};
 use resnet_hls::util::{Bencher, Json};
 
@@ -309,6 +310,57 @@ fn main() {
         std::fs::write("BENCH_multitenant.json", format!("{j}\n"))
             .expect("write BENCH_multitenant.json");
         println!("wrote BENCH_multitenant.json");
+    }
+
+    // ---- weight-tied depth sweep: throughput vs N at constant params ----
+    // The ODE-style trade the ROADMAP names: tiednet(N) repeats one
+    // residual block N times around the same two parameter blobs, so
+    // depth costs pipeline stages (throughput), never memory.  Each
+    // depth is correctness-gated against golden before timing; the
+    // parameter footprint is asserted byte-identical across the sweep.
+    println!("\n== weight-tied repeated blocks (tiednet, shared blobs) ==");
+    let tie_frames = 2usize;
+    let (tie_input, _) = synth_batch(0, tie_frames, TEST_SEED);
+    let mut tie_fps: BTreeMap<String, Json> = BTreeMap::new();
+    let mut tie_bytes = None;
+    for n in [1usize, 2, 4] {
+        let arch = tiednet(n);
+        let w = synthetic_weights(&arch, 7);
+        match tie_bytes {
+            None => tie_bytes = Some(w.param_bytes()),
+            Some(b) => assert_eq!(
+                w.param_bytes(),
+                b,
+                "tiednet({n}): weight tying must hold param bytes constant"
+            ),
+        }
+        let g = build_optimized_graph(&arch, &w.act_exps, &w.w_exps);
+        let want = golden::run(&g, &w, &tie_input).unwrap();
+        let (out, _) = run_streaming(&g, &w, &tie_input, &StreamConfig::default()).unwrap();
+        assert_eq!(out.data, want.data, "tiednet({n}): stream must match golden");
+        let s = b.bench_items(
+            &format!("stream tiednet N={n} b{tie_frames}"),
+            tie_frames as f64,
+            &mut || {
+                run_streaming(&g, &w, &tie_input, &StreamConfig::default()).unwrap();
+            },
+        );
+        tie_fps.insert(format!("n{n}"), Json::Float(s.items_per_sec()));
+    }
+    {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("stream_weighttied".into()));
+        o.insert("quick".into(), Json::Bool(quick));
+        o.insert("frames_per_batch".into(), Json::Int(tie_frames as i64));
+        o.insert(
+            "param_bytes".into(),
+            Json::Int(tie_bytes.expect("sweep ran") as i64),
+        );
+        o.insert("fps".into(), Json::Object(tie_fps));
+        let j = Json::Object(o);
+        std::fs::write("BENCH_weighttied.json", format!("{j}\n"))
+            .expect("write BENCH_weighttied.json");
+        println!("wrote BENCH_weighttied.json");
     }
 
     // ---- machine-readable summary ----

@@ -27,7 +27,7 @@
 
 use anyhow::Result;
 
-use crate::graph::{infer_shapes, Graph, InputRole, Op};
+use crate::graph::{infer_shapes, Edge, Graph, InputRole, Op};
 use crate::hls::config::AcceleratorConfig;
 use crate::hls::window::{buffer_size, skip_buffer_naive};
 use crate::stream::StreamConfig;
@@ -145,53 +145,73 @@ pub fn check(
                     out.push(approved(&subject, declared, required, "Eq. 22"));
                 }
             }
-            // Naive skip: Eq. 21 — the two-conv branch's receptive field.
+            // Naive skip: one FIFO per skip operand.  Branch-local operands
+            // answer to Eq. 21 (the two-conv receptive field); long skips
+            // answer to the full-frame bound of the skip tensor (the long
+            // branch may hold back its first pop for the whole frame).
             Op::Add { .. } => {
-                let subject = format!("{}.skip", n.name);
-                let planned = acfg.adds.get(&n.id).map(|a| a.skip_fifo);
-                let Some(planned) = planned else {
-                    out.push(Diagnostic::new(
-                        Severity::Error,
-                        "fifo.config-missing",
-                        &subject,
-                        "the accelerator configuration has no Eq. 21 sizing for this add",
-                    ));
-                    continue;
-                };
-                // Re-derive Eq. 21 from the conv pair on the long branch,
-                // the same walk `hls::config::configure` performs.
-                let derived = (|| {
-                    let conv1 = g.nodes.get(n.inputs.first()?.0.node)?;
-                    let Op::Conv(a1) = &conv1.op else { return None };
-                    let conv0 = g.nodes.get(conv1.inputs.first()?.0.node)?;
-                    let Op::Conv(a0) = &conv0.op else { return None };
-                    let c0_in = shapes.get(&conv0.inputs.first()?.0)?;
-                    Some(skip_buffer_naive(a0.k, a0.k, c0_in.w, c0_in.c, a1.k, a1.k))
-                })();
-                let required = match derived {
-                    Some(r) => {
-                        if planned != r {
-                            out.push(mismatch(&subject, planned, r, "Eq. 21"));
-                        }
-                        r
-                    }
-                    None => {
+                for (i, (sk, _)) in n.inputs.iter().enumerate().skip(1) {
+                    let subject = if i == 1 {
+                        format!("{}.skip", n.name)
+                    } else {
+                        format!("{}.skip{i}", n.name)
+                    };
+                    let planned =
+                        acfg.adds.get(&n.id).and_then(|a| a.skips.get(i - 1)).copied();
+                    let Some(planned) = planned else {
                         out.push(Diagnostic::new(
-                            Severity::Warning,
-                            "fifo.topology",
+                            Severity::Error,
+                            "fifo.config-missing",
                             &subject,
-                            "the Eq. 21 bound cannot be re-derived (the add's long \
-                             branch is not a two-conv chain); trusting the planner's \
-                             sizing",
+                            "the accelerator configuration has no sizing for this \
+                             skip operand",
                         ));
-                        planned
+                        continue;
+                    };
+                    // Re-derive the bound from the graph — the same walk
+                    // `hls::config::configure` performs, duplicated here so a
+                    // planner bug cannot hide behind its own numbers.
+                    let local = (|| {
+                        let conv1 = g.nodes.get(n.inputs.first()?.0.node)?;
+                        let Op::Conv(a1) = &conv1.op else { return None };
+                        let conv0_id = conv1.inputs.first()?.0.node;
+                        let conv0 = g.nodes.get(conv0_id)?;
+                        let Op::Conv(a0) = &conv0.op else { return None };
+                        let c0_in_edge = conv0.inputs.first()?.0;
+                        let sibling = sk.port == 0
+                            && matches!(&g.node(sk.node).op, Op::Conv(_))
+                            && g.node(sk.node).inputs.first().map(|(e, _)| *e)
+                                == Some(c0_in_edge);
+                        if *sk != c0_in_edge && *sk != Edge::new(conv0_id, 1) && !sibling {
+                            return None;
+                        }
+                        let c0_in = shapes.get(&c0_in_edge)?;
+                        Some(skip_buffer_naive(a0.k, a0.k, c0_in.w, c0_in.c, a1.k, a1.k))
+                    })();
+                    let (required, law) = match local {
+                        Some(r) => (r, "Eq. 21"),
+                        None => {
+                            let Some(s) = shapes.get(sk) else {
+                                out.push(Diagnostic::new(
+                                    Severity::Error,
+                                    "fifo.unshaped",
+                                    &subject,
+                                    "the skip operand has no inferred shape",
+                                ));
+                                continue;
+                            };
+                            (s.h * s.w * s.c, "full-frame")
+                        }
+                    };
+                    if planned != required {
+                        out.push(mismatch(&subject, planned, required, law));
                     }
-                };
-                let declared = cfg.skip_capacity_override.unwrap_or(planned);
-                if declared < required {
-                    out.push(undersized(&subject, declared, required, "Eq. 21"));
-                } else {
-                    out.push(approved(&subject, declared, required, "Eq. 21"));
+                    let declared = cfg.skip_capacity_override.unwrap_or(planned);
+                    if declared < required {
+                        out.push(undersized(&subject, declared, required, law));
+                    } else {
+                        out.push(approved(&subject, declared, required, law));
+                    }
                 }
             }
             _ => {}
@@ -252,7 +272,7 @@ mod tests {
 
     #[test]
     fn stock_configs_have_no_errors() {
-        for name in ["resnet8", "resnet20"] {
+        for name in ["resnet8", "resnet20", "skipnet", "tiednet"] {
             let arch = arch_by_name(name).unwrap();
             let (act, w) = default_exps(&arch);
             let g = build_optimized_graph(&arch, &act, &w);
@@ -282,6 +302,33 @@ mod tests {
             .expect("undersized diagnostic for the first block");
         assert_eq!(d.min_safe_depth, Some(skip_buffer_naive(3, 3, 32, 16, 3, 3)));
         assert_eq!(d.measured, Some(skip_buffer_optimized(3, 3, 32, 16) as i64));
+    }
+
+    #[test]
+    fn undersized_long_skip_is_rejected_with_its_edge_named() {
+        // skipnet's r1 merge takes an identity skip (Eq. 21 bound) and a
+        // long skip back to the stem (full-frame bound).  The planner's
+        // own sizing passes; capping every skip at Eq. 21 starves exactly
+        // the long operand, and the diagnostic names it.
+        let arch = arch_by_name("skipnet").unwrap();
+        let (act, w) = default_exps(&arch);
+        let g = build_unoptimized_graph(&arch, &act, &w);
+        let mut cfg = StreamConfig { naive_add: true, ..StreamConfig::default() };
+        let acfg = planned_config("skipnet", &g, &cfg).unwrap();
+
+        let diags = check(&g, &cfg, &acfg).unwrap();
+        assert!(diags.iter().all(|d| d.severity != Severity::Error), "{diags:?}");
+        assert!(
+            diags.iter().any(|d| d.code == "fifo.ok" && d.subject == "r1_add.skip2"),
+            "the long skip gets its own verified subject: {diags:?}"
+        );
+
+        cfg.skip_capacity_override = Some(skip_buffer_naive(3, 3, 32, 16, 3, 3));
+        let diags = check(&g, &cfg, &acfg).unwrap();
+        let bad: Vec<_> = diags.iter().filter(|d| d.code == "fifo.undersized").collect();
+        assert_eq!(bad.len(), 1, "{diags:?}");
+        assert_eq!(bad[0].subject, "r1_add.skip2");
+        assert_eq!(bad[0].min_safe_depth, Some(32 * 32 * 16), "full-frame stem tensor");
     }
 
     #[test]

@@ -13,16 +13,18 @@ use crate::hls::window::{
 use crate::ilp::{loads_from_arch, solve};
 use crate::models::{arch_by_name, ArchSpec};
 
-/// Eq. 23 series: per residual block, (name, B_sc naive, B_sc optimized, R_sc).
+/// Eq. 23 series: per two-conv residual segment, (name, B_sc naive,
+/// B_sc optimized, R_sc).  Residuals with deeper bodies fall outside the
+/// paper's two-conv derivation and are skipped.
 pub fn skip_buffering_series(arch: &ArchSpec) -> Vec<(String, usize, usize, f64)> {
-    arch.blocks
-        .iter()
-        .map(|b| {
-            let c0 = &b.conv0;
-            let c1 = &b.conv1;
+    arch.residuals()
+        .filter(|r| r.body.len() == 2)
+        .map(|r| {
+            let c0 = &r.body[0];
+            let c1 = &r.body[1];
             let naive = skip_buffer_naive(c0.k, c0.k, c0.in_w, c0.cin, c1.k, c1.k);
             let opt = skip_buffer_optimized(c1.k, c1.k, c1.in_w, c1.cin);
-            (b.name.clone(), naive, opt, opt as f64 / naive as f64)
+            (r.name.clone(), naive, opt, opt as f64 / naive as f64)
         })
         .collect()
 }

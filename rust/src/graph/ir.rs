@@ -225,7 +225,10 @@ impl Graph {
                 Op::Input { .. } => arity == 0,
                 Op::Conv(_) => (1..=2).contains(&arity),
                 Op::BatchNorm(_) | Op::Relu | Op::MaxPool { .. } | Op::GlobalAvgPool { .. } => arity == 1,
-                Op::Add { .. } => arity == 2,
+                // Residual merges take the long branch plus >= 1 skip
+                // operand; multi-input adds (several skips converging on
+                // one merge) are general skip-graph topologies.
+                Op::Add { .. } => arity >= 2,
                 Op::Linear { .. } => arity == 1,
             };
             if !ok {

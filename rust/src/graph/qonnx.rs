@@ -199,6 +199,29 @@ pub fn import(doc: &Json) -> Result<Graph> {
             .ok_or_else(|| anyhow!("{name}: missing op_type"))?;
         let attrs = n.get("attributes").cloned().unwrap_or(Json::Object(BTreeMap::new()));
         let a = &attrs;
+        // Inputs are resolved before the op so any op-level rejection can
+        // name the edges feeding the offending node — in a 50-node file,
+        // "unsupported op_type X" without its wiring is undebuggable.
+        let mut inputs = Vec::new();
+        if let Some(arr) = n.get("inputs").and_then(|j| j.as_array()) {
+            for i in arr {
+                let src = i
+                    .get("node")
+                    .and_then(|j| j.as_str())
+                    .ok_or_else(|| anyhow!("{name}: input missing source node"))?;
+                let port_raw = opt_int(i, &name, "port")?.unwrap_or(0);
+                let port = u8::try_from(port_raw)
+                    .map_err(|_| anyhow!("{name}: input port {port_raw} out of range"))?;
+                let role = match i.get("role").and_then(|j| j.as_str()) {
+                    Some("skip_init") => InputRole::SkipInit,
+                    _ => InputRole::Data,
+                };
+                let src_id = *by_name
+                    .get(src)
+                    .ok_or_else(|| anyhow!("{name}: unknown input node {src}"))?;
+                inputs.push((Edge::new(src_id, port), role));
+            }
+        }
         let op = match op_type {
             "Input" => Op::Input {
                 h: dim(a, &name, "height", 1)?,
@@ -262,33 +285,34 @@ pub fn import(doc: &Json) -> Result<Graph> {
                 cout: dim(a, &name, "cout", 1)?,
                 w_exp: exp_or(a, &name, "weight_exp", 0)?,
             },
-            other => bail!("{name}: unsupported op_type {other}"),
+            other => bail!(
+                "{name}: unsupported op_type {other} (input edges: [{}])",
+                edge_list(&g, &inputs)
+            ),
         };
-        let mut inputs = Vec::new();
-        if let Some(arr) = n.get("inputs").and_then(|j| j.as_array()) {
-            for i in arr {
-                let src = i
-                    .get("node")
-                    .and_then(|j| j.as_str())
-                    .ok_or_else(|| anyhow!("{name}: input missing source node"))?;
-                let port_raw = opt_int(i, &name, "port")?.unwrap_or(0);
-                let port = u8::try_from(port_raw)
-                    .map_err(|_| anyhow!("{name}: input port {port_raw} out of range"))?;
-                let role = match i.get("role").and_then(|j| j.as_str()) {
-                    Some("skip_init") => InputRole::SkipInit,
-                    _ => InputRole::Data,
-                };
-                let src_id = *by_name
-                    .get(src)
-                    .ok_or_else(|| anyhow!("{name}: unknown input node {src}"))?;
-                inputs.push((Edge::new(src_id, port), role));
-            }
-        }
         let id = g.add(name.clone(), op, inputs);
         by_name.insert(name, id);
     }
-    g.validate().map_err(|e| anyhow!("{e}"))?;
+    // Structural rejection (arity, ports, topology) also names the
+    // failing node's input edges, not just the node.
+    g.validate().map_err(|e| {
+        let ctx = g
+            .live()
+            .find(|n| e.contains(&format!("node {}", n.name)))
+            .map(|n| format!(" (node {} input edges: [{}])", n.name, edge_list(&g, &n.inputs)))
+            .unwrap_or_default();
+        anyhow!("{e}{ctx}")
+    })?;
     Ok(g)
+}
+
+/// `producer.port` list of a node's input edges, for error context.
+fn edge_list(g: &Graph, inputs: &[(Edge, InputRole)]) -> String {
+    inputs
+        .iter()
+        .map(|(e, _)| format!("{}.{}", g.node(e.node).name, e.port))
+        .collect::<Vec<_>>()
+        .join(", ")
 }
 
 #[cfg(test)]
@@ -296,13 +320,14 @@ pub fn import(doc: &Json) -> Result<Graph> {
 mod tests {
     use super::*;
     use crate::models::{
-        build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8,
+        build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8, skipnet,
+        tiednet,
     };
     use crate::passes::equivalent;
 
     #[test]
     fn roundtrip_both_forms_both_archs() {
-        for arch in [resnet8(), resnet20()] {
+        for arch in [resnet8(), resnet20(), skipnet(), tiednet(3)] {
             let (act, w) = default_exps(&arch);
             for g in [
                 build_unoptimized_graph(&arch, &act, &w),
@@ -324,6 +349,59 @@ mod tests {
         )
         .unwrap();
         assert!(import(&doc).is_err());
+    }
+
+    /// Rejections carry wiring context: the failing node AND the edges
+    /// feeding it, for both unsupported ops and structural violations.
+    #[test]
+    fn rejections_name_the_node_and_its_input_edges() {
+        let doc = Json::parse(
+            r#"{"graph":{"nodes":[
+                {"name":"a","op_type":"Relu","inputs":[],"attributes":{}},
+                {"name":"b","op_type":"Relu","inputs":[],"attributes":{}},
+                {"name":"sm","op_type":"Softmax",
+                 "inputs":[{"node":"a","port":0},{"node":"b","port":0}],
+                 "attributes":{}}]}}"#,
+        )
+        .unwrap();
+        let msg = format!("{:#}", import(&doc).unwrap_err());
+        assert!(msg.contains("sm"), "{msg}");
+        assert!(msg.contains("unsupported op_type Softmax"), "{msg}");
+        assert!(msg.contains("a.0") && msg.contains("b.0"), "names the input edges: {msg}");
+
+        // Topology violation (an Add needs >= 2 operands): the validate
+        // error is enriched with the add's actual input edges.
+        let doc = Json::parse(
+            r#"{"graph":{"nodes":[
+                {"name":"in","op_type":"Input","inputs":[],
+                 "attributes":{"height":4,"width":4,"channels":2,"quant_exp":-7}},
+                {"name":"add","op_type":"Add",
+                 "inputs":[{"node":"in","port":0}],"attributes":{"out_exp":-5}}]}}"#,
+        )
+        .unwrap();
+        let msg = format!("{:#}", import(&doc).unwrap_err());
+        assert!(msg.contains("add"), "{msg}");
+        assert!(msg.contains("in.0"), "names the offending input edge: {msg}");
+    }
+
+    /// Multi-input merges (long skips converging on one Add) import as
+    /// first-class topology — arity is bounded only by validate's >= 2.
+    #[test]
+    fn imports_multi_input_adds() {
+        let doc = Json::parse(
+            r#"{"graph":{"nodes":[
+                {"name":"in","op_type":"Input","inputs":[],
+                 "attributes":{"height":4,"width":4,"channels":2,"quant_exp":-7}},
+                {"name":"r1","op_type":"Relu","inputs":[{"node":"in","port":0}],"attributes":{}},
+                {"name":"r2","op_type":"Relu","inputs":[{"node":"in","port":0}],"attributes":{}},
+                {"name":"add","op_type":"Add","attributes":{"out_exp":-5},
+                 "inputs":[{"node":"r1","port":0},{"node":"r2","port":0},{"node":"in","port":0}]}
+                ]}}"#,
+        )
+        .unwrap();
+        let g = import(&doc).unwrap();
+        let add = g.find("add").unwrap();
+        assert_eq!(g.node(add).inputs.len(), 3);
     }
 
     #[test]

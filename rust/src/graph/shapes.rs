@@ -107,12 +107,19 @@ pub fn infer_shapes(g: &Graph) -> Result<BTreeMap<Edge, TensorShape>, ShapeError
                 shapes.insert(Edge::new(n.id, 0), s);
             }
             Op::Add { out_exp } => {
+                // N-ary residual merge: every operand (the long branch plus
+                // one or more skips) must agree on the spatial shape.
                 let a = input_shape(0)?;
-                let b = input_shape(1)?;
-                if (a.h, a.w, a.c) != (b.h, b.w, b.c) {
-                    return Err(ShapeError(format!(
-                        "{}: add operands {:?} vs {:?}", n.name, (a.h, a.w, a.c), (b.h, b.w, b.c)
-                    )));
+                for i in 1..n.inputs.len() {
+                    let b = input_shape(i)?;
+                    if (a.h, a.w, a.c) != (b.h, b.w, b.c) {
+                        return Err(ShapeError(format!(
+                            "{}: add operand {i} {:?} vs {:?}",
+                            n.name,
+                            (b.h, b.w, b.c),
+                            (a.h, a.w, a.c)
+                        )));
+                    }
                 }
                 shapes.insert(Edge::new(n.id, 0), TensorShape { exp: *out_exp, ..a });
             }

@@ -77,9 +77,14 @@ pub struct MergedDsConfig {
 pub struct AddConfig {
     pub name: String,
     pub node: usize,
-    /// Skip FIFO capacity required to avoid deadlock (Eq. 21's
-    /// receptive-field bound in the naive dataflow).
+    /// First skip operand's FIFO capacity required to avoid deadlock
+    /// (Eq. 21's receptive-field bound when the operand is block-local).
     pub skip_fifo: usize,
+    /// Per-skip-operand FIFO capacities, one per add input port `1..N`
+    /// (`skips[0] == skip_fifo`).  Block-local operands get the Eq. 21
+    /// receptive-field bound; long skips (reaching past the two-conv
+    /// branch) get the sound full-frame bound of the skip tensor.
+    pub skips: Vec<usize>,
     pub elems: usize,
 }
 
@@ -125,7 +130,7 @@ impl AcceleratorConfig {
             .values()
             .filter_map(|c| c.skip_in.as_ref().map(|s| s.capacity()))
             .sum();
-        let naive: usize = self.adds.values().map(|a| a.skip_fifo).sum();
+        let naive: usize = self.adds.values().flat_map(|a| a.skips.iter()).sum();
         fused + naive
     }
 
@@ -240,28 +245,30 @@ pub fn configure(
                 );
             }
             Op::Add { .. } => {
-                // Naive dataflow: size the skip FIFO by the receptive-field
-                // bound (Eq. 21) using the producing/consuming conv pair.
-                let skip_edge = n.inputs[1].0;
-                let long_edge = n.inputs[0].0;
-                let conv1 = g.node(long_edge.node);
-                let (c1k, _c1pad) = match &conv1.op {
-                    Op::Conv(a) => (a.k, a.pad),
-                    _ => (3, 1),
-                };
-                let conv0 = g.node(conv1.inputs[0].0.node);
-                let (c0k, c0_in) = match &conv0.op {
-                    Op::Conv(a) => (a.k, shapes[&conv0.inputs[0].0]),
-                    _ => (3, shapes[&skip_edge]),
-                };
-                let skip_fifo = skip_buffer_naive(c0k, c0k, c0_in.w, c0_in.c, c1k, c1k);
+                // Naive dataflow: size each skip operand's FIFO.  Operands
+                // local to the two-conv long branch get the receptive-field
+                // bound (Eq. 21); long skips reaching past it get the
+                // full-frame bound of the skip tensor, the sound worst case
+                // (every element may arrive before the long branch drains).
+                let skips: Vec<usize> = n
+                    .inputs
+                    .iter()
+                    .skip(1)
+                    .map(|(sk, _)| {
+                        local_skip_bound(g, &shapes, n.inputs[0].0, *sk).unwrap_or_else(|| {
+                            let s = shapes[sk];
+                            s.h * s.w * s.c
+                        })
+                    })
+                    .collect();
                 let s: TensorShape = shapes[&Edge::new(n.id, 0)];
                 adds.insert(
                     n.id,
                     AddConfig {
                         name: n.name.clone(),
                         node: n.id,
-                        skip_fifo,
+                        skip_fifo: skips.first().copied().unwrap_or(0),
+                        skips,
                         elems: s.h * s.w * s.c,
                     },
                 );
@@ -279,6 +286,39 @@ pub fn configure(
         cycles_per_frame: bottleneck,
         dsps_used,
     })
+}
+
+/// Eq. 21 receptive-field bound for a skip operand that is local to the
+/// add's two-conv long branch, or `None` for anything else (a long skip),
+/// where only the full-frame bound is sound.  "Local" means the operand is
+/// conv0's own input tensor, conv0's forwarding port (temporal reuse), or
+/// the output of a sibling conv reading conv0's input (the downsample).
+fn local_skip_bound(
+    g: &Graph,
+    shapes: &BTreeMap<Edge, TensorShape>,
+    long_edge: Edge,
+    sk: Edge,
+) -> Option<usize> {
+    let conv1 = g.node(long_edge.node);
+    let c1k = match &conv1.op {
+        Op::Conv(a) => a.k,
+        _ => return None,
+    };
+    let conv0_id = conv1.inputs.first()?.0.node;
+    let conv0 = g.node(conv0_id);
+    let (c0k, c0_in_edge) = match &conv0.op {
+        Op::Conv(a) => (a.k, conv0.inputs.first()?.0),
+        _ => return None,
+    };
+    let sibling = sk.port == 0
+        && !g.node(sk.node).dead
+        && matches!(&g.node(sk.node).op, Op::Conv(_))
+        && g.node(sk.node).inputs.first().map(|(e, _)| *e) == Some(c0_in_edge);
+    if sk != c0_in_edge && sk != Edge::new(conv0_id, 1) && !sibling {
+        return None;
+    }
+    let c0_in = shapes[&c0_in_edge];
+    Some(skip_buffer_naive(c0k, c0k, c0_in.w, c0_in.c, c1k, c1k))
 }
 
 #[cfg(test)]

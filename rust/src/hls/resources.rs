@@ -138,7 +138,9 @@ pub fn estimate(cfg: &AcceleratorConfig) -> ResourceReport {
 
     // Naive-dataflow Add tasks: their (much larger) skip FIFOs.
     for a in cfg.adds.values() {
-        r.bram36 += a.skip_fifo.div_ceil(BRAM_BYTES).max(1) as u64;
+        for skip in &a.skips {
+            r.bram36 += skip.div_ceil(BRAM_BYTES).max(1) as u64;
+        }
         conv_tasks += 1; // an extra concurrent task with control logic
     }
 

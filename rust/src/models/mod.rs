@@ -8,12 +8,12 @@
 // modules opt out locally.
 #![deny(clippy::disallowed_methods)]
 
-mod resnet;
+pub mod resnet;
 mod weights;
 
 pub use resnet::{
-    build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8, ActExps,
-    ArchSpec, BlockSpec, ConvSpec, WExps,
+    build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8, skipnet,
+    tiednet, ActExps, ArchSpec, ConvSpec, ResidualSpec, Segment, SkipSpec, WExps,
 };
 pub use weights::{synthetic_weights, ConvWeights, ModelWeights, WeightTensor};
 
@@ -22,6 +22,10 @@ pub fn arch_by_name(name: &str) -> Option<ArchSpec> {
     match name {
         "resnet8" => Some(resnet8()),
         "resnet20" => Some(resnet20()),
+        "skipnet" => Some(skipnet()),
+        // Registry default for the weight-tied net; `tiednet(n)` is public
+        // for other depths.
+        "tiednet" => Some(tiednet(4)),
         _ => None,
     }
 }

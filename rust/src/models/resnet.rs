@@ -1,9 +1,19 @@
-//! ResNet8 / ResNet20 architecture specs and graph builders.
+//! Architecture specs and graph builders.
 //!
-//! Mirrors `python/compile/arch.py` exactly (layer names included) — the
-//! manifest's exponent tables are keyed by these names.
+//! The spec layer describes a network as a sequence of *segments*: plain
+//! convolutions and residual segments.  A residual segment carries a conv
+//! body plus any number of skip operands — the identity input, a projected
+//! (1x1 downsample) input, or a *long* skip reaching back to any earlier
+//! named segment — so non-ResNet skip topologies (multi-input adds, skips
+//! spanning several blocks) and weight-tied repeated blocks are expressible
+//! in the same vocabulary.  `resnet8()` / `resnet20()` remain thin presets
+//! that produce graphs bit-identical to the historical hardcoded builders
+//! (layer names included — the manifest's exponent tables are keyed by
+//! these names, mirroring `python/compile/arch.py`).
 
-use crate::graph::{ConvAttrs, Edge, Graph, InputRole, Op};
+use std::collections::BTreeMap;
+
+use crate::graph::{ConvAttrs, Edge, Graph, InputRole, NodeId, Op};
 
 /// One convolution layer (geometry only; exponents come from the manifest).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -39,44 +49,108 @@ impl ConvSpec {
     }
 }
 
-/// A residual block: conv0 -> conv1, skip = identity or 1x1 downsample.
+/// One skip operand of a residual segment.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct BlockSpec {
+pub struct SkipSpec {
+    /// Source of the skip: `None` = the residual segment's own input
+    /// (classic identity skip); `Some(name)` = the output of an earlier
+    /// named segment (a *long* skip spanning one or more segments).
+    pub from: Option<String>,
+    /// Optional projection conv applied to the source (the classic 1x1
+    /// strided downsample).
+    pub proj: Option<ConvSpec>,
+}
+
+impl SkipSpec {
+    /// Plain identity skip from the segment input.
+    pub fn identity() -> Self {
+        SkipSpec { from: None, proj: None }
+    }
+}
+
+/// A residual segment: a chain of body convs merged with >= 1 skip operand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResidualSpec {
     pub name: String,
-    pub conv0: ConvSpec,
-    pub conv1: ConvSpec,
-    pub downsample: Option<ConvSpec>,
+    /// Body convolutions, applied in order to the segment input.
+    pub body: Vec<ConvSpec>,
+    /// Skip operands summed into the merge (at least one).
+    pub skips: Vec<SkipSpec>,
+}
+
+impl ResidualSpec {
+    /// Whether the paper's fused dataflow (Fig. 12-13) applies: a two-conv
+    /// body with exactly one same-segment skip, either identity (temporal
+    /// reuse, Fig. 12a) or a pointwise projection (loop merge, Fig. 12b).
+    /// Everything else stays a naive Eq. 21 add.
+    pub fn fusable(&self) -> bool {
+        self.body.len() == 2
+            && self.skips.len() == 1
+            && self.skips[0].from.is_none()
+            && self.skips[0].proj.as_ref().is_none_or(|p| p.k == 1)
+    }
+}
+
+/// One element of an architecture: a plain conv or a residual segment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Segment {
+    Conv(ConvSpec),
+    Residual(ResidualSpec),
 }
 
 /// A full network architecture.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArchSpec {
     pub name: String,
-    pub stem: ConvSpec,
-    pub blocks: Vec<BlockSpec>,
+    pub segments: Vec<Segment>,
     pub fc_in: usize,
     pub fc_out: usize,
     pub in_h: usize,
     pub in_w: usize,
     pub in_c: usize,
+    /// Weight tying: layer name -> shared weight key.  Layers mapping to
+    /// the same key execute with one physical parameter blob (the
+    /// Neural-ODE-style repeated block); empty for the ResNet presets.
+    pub tied: BTreeMap<String, String>,
 }
 
 impl ArchSpec {
     /// All conv layers in execution order (ILP optimizes over these).
+    /// Within a residual segment, skip projections precede the body —
+    /// matching the historical stem, (ds), c0, c1 ordering.
     pub fn conv_layers(&self) -> Vec<&ConvSpec> {
-        let mut out = vec![&self.stem];
-        for b in &self.blocks {
-            if let Some(ds) = &b.downsample {
-                out.push(ds);
+        let mut out = Vec::new();
+        for s in &self.segments {
+            match s {
+                Segment::Conv(c) => out.push(c),
+                Segment::Residual(r) => {
+                    for sk in &r.skips {
+                        if let Some(p) = &sk.proj {
+                            out.push(p);
+                        }
+                    }
+                    out.extend(r.body.iter());
+                }
             }
-            out.push(&b.conv0);
-            out.push(&b.conv1);
         }
         out
     }
 
+    /// The residual segments, in order.
+    pub fn residuals(&self) -> impl Iterator<Item = &ResidualSpec> {
+        self.segments.iter().filter_map(|s| match s {
+            Segment::Residual(r) => Some(r),
+            Segment::Conv(_) => None,
+        })
+    }
+
     pub fn find_conv(&self, name: &str) -> Option<&ConvSpec> {
         self.conv_layers().into_iter().find(|c| c.name == name)
+    }
+
+    /// The weight-storage key for a layer (its own name unless tied).
+    pub fn weight_key<'a>(&'a self, name: &'a str) -> &'a str {
+        self.tied.get(name).map(String::as_str).unwrap_or(name)
     }
 
     /// Total multiply-accumulates per frame (conv + fc), for Gops/s.
@@ -84,14 +158,22 @@ impl ArchSpec {
         self.conv_layers().iter().map(|c| c.macs()).sum::<u64>() + (self.fc_in * self.fc_out) as u64
     }
 
+    /// Unique parameter-blob names, in first-use order (tied layers share
+    /// one entry under their key).
     pub fn param_names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.conv_layers().iter().map(|c| c.name.clone()).collect();
+        let mut v: Vec<String> = Vec::new();
+        for c in self.conv_layers() {
+            let key = self.weight_key(&c.name);
+            if !v.iter().any(|n| n == key) {
+                v.push(key.to_string());
+            }
+        }
         v.push("fc".into());
         v
     }
 }
 
-fn make_blocks(stages: &[usize], blocks_per_stage: usize) -> Vec<BlockSpec> {
+fn make_blocks(stages: &[usize], blocks_per_stage: usize) -> Vec<Segment> {
     let mut blocks = Vec::new();
     let (mut h, mut w, mut cin) = (32usize, 32usize, 16usize);
     for (si, &cout) in stages.iter().enumerate() {
@@ -112,7 +194,11 @@ fn make_blocks(stages: &[usize], blocks_per_stage: usize) -> Vec<BlockSpec> {
                 name: format!("{bname}ds"), cin, cout, k: 1, stride, pad: 0, relu: false,
                 in_h: h, in_w: w,
             });
-            blocks.push(BlockSpec { name: bname, conv0, conv1, downsample });
+            blocks.push(Segment::Residual(ResidualSpec {
+                name: bname,
+                body: vec![conv0, conv1],
+                skips: vec![SkipSpec { from: None, proj: downsample }],
+            }));
             cin = cout;
             h = oh;
             w = ow;
@@ -121,37 +207,109 @@ fn make_blocks(stages: &[usize], blocks_per_stage: usize) -> Vec<BlockSpec> {
     blocks
 }
 
-/// The classic CIFAR ResNet20 of He et al. (3 stages x 3 blocks).
-pub fn resnet20() -> ArchSpec {
+fn cifar_stem() -> ConvSpec {
+    ConvSpec {
+        name: "stem".into(), cin: 3, cout: 16, k: 3, stride: 1, pad: 1, relu: true,
+        in_h: 32, in_w: 32,
+    }
+}
+
+fn resnet_preset(name: &str, blocks_per_stage: usize) -> ArchSpec {
+    let mut segments = vec![Segment::Conv(cifar_stem())];
+    segments.extend(make_blocks(&[16, 32, 64], blocks_per_stage));
     ArchSpec {
-        name: "resnet20".into(),
-        stem: ConvSpec {
-            name: "stem".into(), cin: 3, cout: 16, k: 3, stride: 1, pad: 1, relu: true,
-            in_h: 32, in_w: 32,
-        },
-        blocks: make_blocks(&[16, 32, 64], 3),
+        name: name.into(),
+        segments,
         fc_in: 64,
         fc_out: 10,
         in_h: 32,
         in_w: 32,
         in_c: 3,
+        tied: BTreeMap::new(),
     }
+}
+
+/// The classic CIFAR ResNet20 of He et al. (3 stages x 3 blocks).
+pub fn resnet20() -> ArchSpec {
+    resnet_preset("resnet20", 3)
 }
 
 /// The MLPerf-Tiny-style ResNet8 (3 stages x 1 block).
 pub fn resnet8() -> ArchSpec {
+    resnet_preset("resnet8", 1)
+}
+
+/// A small non-ResNet skip topology exercising the general graph support:
+/// an identity residual, a *multi-input* residual whose merge also takes a
+/// long skip reaching back to the stem (3-operand add, kept as a naive
+/// Eq. 21 dataflow island), and a strided projection residual.
+pub fn skipnet() -> ArchSpec {
+    let conv = |name: &str, cin, cout, k, stride, in_hw| ConvSpec {
+        name: name.into(), cin, cout, k, stride, pad: if k == 1 { 0 } else { 1 },
+        relu: k != 1, in_h: in_hw, in_w: in_hw,
+    };
+    let segments = vec![
+        Segment::Conv(conv("stem", 3, 16, 3, 1, 32)),
+        Segment::Residual(ResidualSpec {
+            name: "r0".into(),
+            body: vec![conv("r0c0", 16, 16, 3, 1, 32), conv("r0c1", 16, 16, 3, 1, 32)],
+            skips: vec![SkipSpec::identity()],
+        }),
+        Segment::Residual(ResidualSpec {
+            name: "r1".into(),
+            body: vec![conv("r1c0", 16, 16, 3, 1, 32), conv("r1c1", 16, 16, 3, 1, 32)],
+            skips: vec![
+                SkipSpec::identity(),
+                SkipSpec { from: Some("stem".into()), proj: None },
+            ],
+        }),
+        Segment::Residual(ResidualSpec {
+            name: "r2".into(),
+            body: vec![conv("r2c0", 16, 32, 3, 2, 32), conv("r2c1", 32, 32, 3, 1, 16)],
+            skips: vec![SkipSpec { from: None, proj: Some(conv("r2ds", 16, 32, 1, 2, 32)) }],
+        }),
+    ];
     ArchSpec {
-        name: "resnet8".into(),
-        stem: ConvSpec {
-            name: "stem".into(), cin: 3, cout: 16, k: 3, stride: 1, pad: 1, relu: true,
-            in_h: 32, in_w: 32,
-        },
-        blocks: make_blocks(&[16, 32, 64], 1),
-        fc_in: 64,
+        name: "skipnet".into(),
+        segments,
+        fc_in: 32,
         fc_out: 10,
         in_h: 32,
         in_w: 32,
         in_c: 3,
+        tied: BTreeMap::new(),
+    }
+}
+
+/// A weight-tied ODE-style net: one identity residual block instantiated
+/// `n` times, every instance sharing the same two parameter blobs
+/// (`tie_c0` / `tie_c1`).  Depth scales with `n` at constant param bytes.
+pub fn tiednet(n: usize) -> ArchSpec {
+    let mut segments = vec![Segment::Conv(cifar_stem())];
+    let mut tied = BTreeMap::new();
+    for i in 0..n {
+        let c0 = ConvSpec {
+            name: format!("t{i}c0"), cin: 16, cout: 16, k: 3, stride: 1, pad: 1, relu: true,
+            in_h: 32, in_w: 32,
+        };
+        let c1 = ConvSpec { name: format!("t{i}c1"), ..c0.clone() };
+        tied.insert(c0.name.clone(), "tie_c0".into());
+        tied.insert(c1.name.clone(), "tie_c1".into());
+        segments.push(Segment::Residual(ResidualSpec {
+            name: format!("t{i}"),
+            body: vec![c0, c1],
+            skips: vec![SkipSpec::identity()],
+        }));
+    }
+    ArchSpec {
+        name: "tiednet".into(),
+        segments,
+        fc_in: 16,
+        fc_out: 10,
+        in_h: 32,
+        in_w: 32,
+        in_c: 3,
+        tied,
     }
 }
 
@@ -175,125 +333,175 @@ fn conv_attrs(spec: &ConvSpec, relu: bool, w_exps: &WExps, act_exps: &ActExps) -
     }
 }
 
+/// Resolve a skip operand's source node: the segment input for `from:
+/// None`, an earlier named segment's output otherwise.
+fn skip_source(sk: &SkipSpec, xin: NodeId, named: &BTreeMap<String, NodeId>) -> NodeId {
+    match &sk.from {
+        None => xin,
+        Some(nm) => named[nm.as_str()],
+    }
+}
+
+/// Emit a residual segment in its naive (Fig. 10) form: projection convs,
+/// body chain with the last conv streaming raw int32 accumulators, an
+/// explicit N-input Add at accumulator precision, and the post-add ReLU.
+fn emit_naive_residual(
+    g: &mut Graph,
+    r: &ResidualSpec,
+    xin: NodeId,
+    named: &BTreeMap<String, NodeId>,
+    act_exps: &ActExps,
+    w_exps: &WExps,
+) -> NodeId {
+    let mut skip_nodes = Vec::new();
+    for sk in &r.skips {
+        let src = skip_source(sk, xin, named);
+        skip_nodes.push(match &sk.proj {
+            Some(p) => g.add_simple(
+                &p.name,
+                Op::Conv(conv_attrs(p, false, w_exps, act_exps)),
+                &[Edge::new(src, 0)],
+            ),
+            None => src,
+        });
+    }
+    let last = r.body.len() - 1;
+    let mut cur = xin;
+    for (i, c) in r.body.iter().enumerate() {
+        let attrs = if i == last {
+            // The final body conv streams raw int32 accumulators: the naive
+            // dataflow performs the merge at accumulator precision and
+            // applies ReLU after the add (Fig. 10).
+            ConvAttrs { relu: false, raw_output: true, ..conv_attrs(c, false, w_exps, act_exps) }
+        } else {
+            conv_attrs(c, c.relu, w_exps, act_exps)
+        };
+        cur = g.add_simple(&c.name, Op::Conv(attrs), &[Edge::new(cur, 0)]);
+    }
+    let mut add_inputs = vec![Edge::new(cur, 0)];
+    add_inputs.extend(skip_nodes.iter().map(|&s| Edge::new(s, 0)));
+    let add = g.add_simple(
+        format!("{}_add", r.name),
+        Op::Add { out_exp: act_exps[&r.body[last].name] },
+        &add_inputs,
+    );
+    g.add_simple(format!("{}_relu", r.name), Op::Relu, &[Edge::new(add, 0)])
+}
+
+fn emit_tail(g: &mut Graph, arch: &ArchSpec, prev: NodeId, act_exps: &ActExps, w_exps: &WExps) {
+    let pool = g.add_simple("pool", Op::GlobalAvgPool { out_exp: act_exps["pool"] }, &[Edge::new(prev, 0)]);
+    g.add_simple(
+        "fc",
+        Op::Linear { cin: arch.fc_in, cout: arch.fc_out, w_exp: w_exps["fc"] },
+        &[Edge::new(pool, 0)],
+    );
+}
+
 /// Build the *pre-optimization* graph: explicit Add nodes for the residual
 /// merges, no loop merging, no input forwarding, ReLU folded into convs but
 /// the post-add ReLU explicit (paper Fig. 10 topology).  This is the input
 /// to the `passes` pipeline.
 pub fn build_unoptimized_graph(arch: &ArchSpec, act_exps: &ActExps, w_exps: &WExps) -> Graph {
     let mut g = Graph::new();
-    let input = g.add_simple(
+    let mut prev = g.add_simple(
         "input",
         Op::Input { h: arch.in_h, w: arch.in_w, c: arch.in_c, exp: act_exps["input"] },
         &[],
     );
-    let stem = g.add_simple(
-        "stem",
-        Op::Conv(conv_attrs(&arch.stem, true, w_exps, act_exps)),
-        &[Edge::new(input, 0)],
-    );
-    let mut prev = stem;
-    for blk in &arch.blocks {
-        let xin = prev;
-        let skip = match &blk.downsample {
-            Some(ds) => g.add_simple(
-                &ds.name,
-                Op::Conv(conv_attrs(ds, false, w_exps, act_exps)),
-                &[Edge::new(xin, 0)],
-            ),
-            None => xin,
+    let mut named: BTreeMap<String, NodeId> = BTreeMap::new();
+    for seg in &arch.segments {
+        prev = match seg {
+            Segment::Conv(c) => {
+                let id = g.add_simple(
+                    &c.name,
+                    Op::Conv(conv_attrs(c, c.relu, w_exps, act_exps)),
+                    &[Edge::new(prev, 0)],
+                );
+                named.insert(c.name.clone(), id);
+                id
+            }
+            Segment::Residual(r) => {
+                let id = emit_naive_residual(&mut g, r, prev, &named, act_exps, w_exps);
+                named.insert(r.name.clone(), id);
+                id
+            }
         };
-        let c0 = g.add_simple(
-            &blk.conv0.name,
-            Op::Conv(conv_attrs(&blk.conv0, true, w_exps, act_exps)),
-            &[Edge::new(xin, 0)],
-        );
-        // conv1 *without* fused relu, streaming raw int32 accumulators:
-        // the pre-optimization dataflow performs the residual merge at
-        // accumulator precision and applies ReLU after the add (Fig. 10).
-        let c1 = g.add_simple(
-            &blk.conv1.name,
-            Op::Conv(ConvAttrs {
-                relu: false,
-                raw_output: true,
-                ..conv_attrs(&blk.conv1, false, w_exps, act_exps)
-            }),
-            &[Edge::new(c0, 0)],
-        );
-        let add = g.add_simple(
-            format!("{}_add", blk.name),
-            Op::Add { out_exp: act_exps[&blk.conv1.name] },
-            &[Edge::new(c1, 0), Edge::new(skip, 0)],
-        );
-        prev = g.add_simple(format!("{}_relu", blk.name), Op::Relu, &[Edge::new(add, 0)]);
     }
-    let pool = g.add_simple("pool", Op::GlobalAvgPool { out_exp: act_exps["pool"] }, &[Edge::new(prev, 0)]);
-    g.add_simple(
-        "fc",
-        Op::Linear { cin: arch.fc_in, cout: arch.fc_out, w_exp: w_exps["fc"] },
-        &[Edge::new(pool, 0)],
-    );
+    emit_tail(&mut g, arch, prev, act_exps, w_exps);
     g
 }
 
 /// Build the *optimized* graph directly (paper Fig. 14): loop-merged
 /// downsamples, input forwarding on identity skips, adds fused into conv1
-/// accumulator initialization.  The passes pipeline must transform the
-/// unoptimized graph into exactly this dataflow (asserted in tests).
+/// accumulator initialization.  Residual segments where the fused pattern
+/// does not apply (multi-input merges, long skips, deep bodies) fall back
+/// to the naive Eq. 21 dataflow island.  The passes pipeline must transform
+/// the unoptimized graph into exactly this dataflow (asserted in tests).
 pub fn build_optimized_graph(arch: &ArchSpec, act_exps: &ActExps, w_exps: &WExps) -> Graph {
     let mut g = Graph::new();
-    let input = g.add_simple(
+    let mut prev = g.add_simple(
         "input",
         Op::Input { h: arch.in_h, w: arch.in_w, c: arch.in_c, exp: act_exps["input"] },
         &[],
     );
-    let stem = g.add_simple(
-        "stem",
-        Op::Conv(conv_attrs(&arch.stem, true, w_exps, act_exps)),
-        &[Edge::new(input, 0)],
-    );
-    let mut prev = stem;
-    for blk in &arch.blocks {
-        let xin = prev;
-        let (c0, skip_edge) = match &blk.downsample {
-            Some(ds) => {
-                // Loop merge: the downsample conv is computed inside conv0's
-                // task; its result appears on conv0's port 1.
-                let mut a0 = conv_attrs(&blk.conv0, true, w_exps, act_exps);
-                a0.merged_downsample = Some(crate::graph::MergedDownsample {
-                    name: ds.name.clone(),
-                    cout: ds.cout,
-                    k: ds.k,
-                    stride: ds.stride,
-                    pad: ds.pad,
-                    w_exp: w_exps[&ds.name],
-                    out_exp: act_exps[&ds.name],
-                });
-                let c0 = g.add_simple(&blk.conv0.name, Op::Conv(a0), &[Edge::new(xin, 0)]);
-                (c0, Edge::new(c0, 1))
+    let mut named: BTreeMap<String, NodeId> = BTreeMap::new();
+    for seg in &arch.segments {
+        prev = match seg {
+            Segment::Conv(c) => {
+                let id = g.add_simple(
+                    &c.name,
+                    Op::Conv(conv_attrs(c, c.relu, w_exps, act_exps)),
+                    &[Edge::new(prev, 0)],
+                );
+                named.insert(c.name.clone(), id);
+                id
             }
-            None => {
-                // Temporal reuse: conv0 forwards its input on port 1.
-                let mut a0 = conv_attrs(&blk.conv0, true, w_exps, act_exps);
-                a0.forwards_input = true;
-                let c0 = g.add_simple(&blk.conv0.name, Op::Conv(a0), &[Edge::new(xin, 0)]);
-                (c0, Edge::new(c0, 1))
+            Segment::Residual(r) if r.fusable() => {
+                let xin = prev;
+                let (conv0, conv1) = (&r.body[0], &r.body[1]);
+                let (c0, skip_edge) = match &r.skips[0].proj {
+                    Some(ds) => {
+                        // Loop merge: the downsample conv is computed inside
+                        // conv0's task; its result appears on conv0's port 1.
+                        let mut a0 = conv_attrs(conv0, true, w_exps, act_exps);
+                        a0.merged_downsample = Some(crate::graph::MergedDownsample {
+                            name: ds.name.clone(),
+                            cout: ds.cout,
+                            k: ds.k,
+                            stride: ds.stride,
+                            pad: ds.pad,
+                            w_exp: w_exps[&ds.name],
+                            out_exp: act_exps[&ds.name],
+                        });
+                        let c0 = g.add_simple(&conv0.name, Op::Conv(a0), &[Edge::new(xin, 0)]);
+                        (c0, Edge::new(c0, 1))
+                    }
+                    None => {
+                        // Temporal reuse: conv0 forwards its input on port 1.
+                        let mut a0 = conv_attrs(conv0, true, w_exps, act_exps);
+                        a0.forwards_input = true;
+                        let c0 = g.add_simple(&conv0.name, Op::Conv(a0), &[Edge::new(xin, 0)]);
+                        (c0, Edge::new(c0, 1))
+                    }
+                };
+                // Add fusion: conv1 takes the skip stream as a SkipInit
+                // input and fuses the post-add ReLU.
+                let c1 = g.add(
+                    &conv1.name,
+                    Op::Conv(conv_attrs(conv1, true, w_exps, act_exps)),
+                    vec![(Edge::new(c0, 0), InputRole::Data), (skip_edge, InputRole::SkipInit)],
+                );
+                named.insert(r.name.clone(), c1);
+                c1
+            }
+            Segment::Residual(r) => {
+                let id = emit_naive_residual(&mut g, r, prev, &named, act_exps, w_exps);
+                named.insert(r.name.clone(), id);
+                id
             }
         };
-        // Add fusion: conv1 takes the skip stream as a SkipInit input and
-        // fuses the post-add ReLU.
-        let c1 = g.add(
-            &blk.conv1.name,
-            Op::Conv(conv_attrs(&blk.conv1, true, w_exps, act_exps)),
-            vec![(Edge::new(c0, 0), InputRole::Data), (skip_edge, InputRole::SkipInit)],
-        );
-        prev = c1;
     }
-    let pool = g.add_simple("pool", Op::GlobalAvgPool { out_exp: act_exps["pool"] }, &[Edge::new(prev, 0)]);
-    g.add_simple(
-        "fc",
-        Op::Linear { cin: arch.fc_in, cout: arch.fc_out, w_exp: w_exps["fc"] },
-        &[Edge::new(pool, 0)],
-    );
+    emit_tail(&mut g, arch, prev, act_exps, w_exps);
     g
 }
 
@@ -307,9 +515,13 @@ pub fn default_exps(arch: &ArchSpec) -> (ActExps, WExps) {
         act.insert(c.name.clone(), -5);
     }
     let mut w = WExps::new();
-    for n in arch.param_names() {
-        w.insert(n, -8);
+    for c in arch.conv_layers() {
+        // Both the layer name and its shared weight key (for tied layers)
+        // resolve — builders look up by layer name, blobs by key.
+        w.insert(c.name.clone(), -8);
+        w.insert(arch.weight_key(&c.name).to_string(), -8);
     }
+    w.insert("fc".into(), -8);
     (act, w)
 }
 
@@ -322,7 +534,7 @@ mod tests {
     #[test]
     fn resnet20_has_expected_structure() {
         let a = resnet20();
-        assert_eq!(a.blocks.len(), 9);
+        assert_eq!(a.residuals().count(), 9);
         // 1 stem + 9*2 block convs + 2 downsamples = 21 convs
         assert_eq!(a.conv_layers().len(), 21);
         // ~40.5M MACs (He et al. report ~41M for CIFAR ResNet20)
@@ -333,7 +545,7 @@ mod tests {
     #[test]
     fn resnet8_has_expected_structure() {
         let a = resnet8();
-        assert_eq!(a.blocks.len(), 3);
+        assert_eq!(a.residuals().count(), 3);
         assert_eq!(a.conv_layers().len(), 9);
         // ~12.5M MACs (MLPerf Tiny ResNet8 class)
         let m = a.total_macs();
@@ -342,7 +554,7 @@ mod tests {
 
     #[test]
     fn both_graph_forms_validate_and_shape() {
-        for arch in [resnet8(), resnet20()] {
+        for arch in [resnet8(), resnet20(), skipnet(), tiednet(3)] {
             let (act, w) = default_exps(&arch);
             for g in [
                 build_unoptimized_graph(&arch, &act, &w),
@@ -380,5 +592,30 @@ mod tests {
         let g = build_unoptimized_graph(&arch, &act, &w);
         assert_eq!(g.count_kind("add"), 3);
         assert_eq!(g.count_kind("relu"), 3);
+    }
+
+    #[test]
+    fn skipnet_keeps_multi_input_add_in_optimized_form() {
+        let arch = skipnet();
+        let (act, w) = default_exps(&arch);
+        let g = build_optimized_graph(&arch, &act, &w);
+        // r0 / r2 fuse; r1 (3-operand merge with a long skip to the stem)
+        // stays a naive island.
+        assert_eq!(g.count_kind("add"), 1);
+        let add = g.node(g.find("r1_add").expect("r1_add"));
+        assert_eq!(add.inputs.len(), 3);
+        // The long-skip operand reads the stem's output edge directly.
+        let stem = g.find("stem").expect("stem");
+        assert!(add.inputs.iter().any(|(e, _)| e.node == stem));
+    }
+
+    #[test]
+    fn tiednet_shares_parameter_blobs() {
+        let a = tiednet(4);
+        assert_eq!(a.residuals().count(), 4);
+        // 8 tied body convs collapse to 2 keys; + stem + fc = 4 blobs.
+        assert_eq!(a.param_names(), vec!["stem", "tie_c0", "tie_c1", "fc"]);
+        assert_eq!(a.weight_key("t3c1"), "tie_c1");
+        assert_eq!(a.weight_key("stem"), "stem");
     }
 }

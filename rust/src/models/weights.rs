@@ -50,6 +50,10 @@ impl ConvWeights {
 pub struct ModelWeights {
     pub arch: String,
     pub layers: BTreeMap<String, ConvWeights>,
+    /// Weight tying: layer name -> key in `layers`.  Tied layers (the
+    /// ODE-style repeated block) resolve through here to one shared blob,
+    /// so `param_bytes` stays constant as the block is repeated.
+    pub aliases: BTreeMap<String, String>,
     pub act_exps: BTreeMap<String, i32>,
     pub w_exps: BTreeMap<String, i32>,
     /// "checkpoint" (trained) or "random" (deterministic init).
@@ -146,9 +150,20 @@ impl ModelWeights {
             layers.insert(name, ConvWeights { w, b });
         }
 
+        let aliases = entry
+            .get("aliases")
+            .and_then(|j| j.as_object())
+            .map(|obj| {
+                obj.iter()
+                    .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                    .collect()
+            })
+            .unwrap_or_default();
+
         Ok(ModelWeights {
             arch: arch.to_string(),
             layers,
+            aliases,
             act_exps,
             w_exps,
             source: entry.get("source").and_then(|j| j.as_str()).unwrap_or("?").to_string(),
@@ -156,7 +171,17 @@ impl ModelWeights {
     }
 
     pub fn layer(&self, name: &str) -> Result<&ConvWeights> {
-        self.layers.get(name).ok_or_else(|| anyhow!("no weights for layer {name}"))
+        if let Some(l) = self.layers.get(name) {
+            return Ok(l);
+        }
+        // One level of alias resolution (weight-tied layers).
+        if let Some(key) = self.aliases.get(name) {
+            return self
+                .layers
+                .get(key)
+                .ok_or_else(|| anyhow!("layer {name} aliases missing blob {key}"));
+        }
+        Err(anyhow!("no weights for layer {name}"))
     }
 
     /// Activation exponent for a named tensor.
@@ -188,20 +213,30 @@ pub fn synthetic_weights(
     let (act_exps, w_exps) = crate::models::resnet::default_exps(arch);
     let mut rng = Lcg64::new(seed);
     let mut layers = BTreeMap::new();
+    let mut aliases = BTreeMap::new();
     for c in arch.conv_layers() {
+        let key = arch.weight_key(&c.name);
+        if key != c.name {
+            aliases.insert(c.name.clone(), key.to_string());
+        }
+        if layers.contains_key(key) {
+            // Tied repeat: share the first instance's blob, drawing nothing
+            // from the RNG so param bytes stay constant with depth.
+            continue;
+        }
         let n = c.k * c.k * c.cin * c.cout;
         let w_data: Vec<i32> = (0..n).map(|_| rng.range_i64(-64, 64) as i32).collect();
         let b_data: Vec<i32> = (0..c.cout).map(|_| rng.range_i64(-512, 512) as i32).collect();
         let in_exp = act_exps.get(&c.name).copied().unwrap_or(-5);
         layers.insert(
-            c.name.clone(),
+            key.to_string(),
             ConvWeights {
                 w: WeightTensor {
-                    name: c.name.clone(), kind: "w".into(),
+                    name: key.to_string(), kind: "w".into(),
                     shape: vec![c.k, c.k, c.cin, c.cout], exp: w_exps[&c.name], data: w_data,
                 },
                 b: WeightTensor {
-                    name: c.name.clone(), kind: "b".into(),
+                    name: key.to_string(), kind: "b".into(),
                     shape: vec![c.cout], exp: in_exp + w_exps[&c.name] - 2, data: b_data,
                 },
             },
@@ -226,6 +261,7 @@ pub fn synthetic_weights(
     ModelWeights {
         arch: arch.name.clone(),
         layers,
+        aliases,
         act_exps,
         w_exps,
         source: "synthetic".into(),
@@ -248,5 +284,21 @@ mod tests {
             assert_eq!(l.b.data.len(), *l.b.shape.last().unwrap());
         }
         assert!(w.param_bytes() > 70_000, "resnet8 ~78k params");
+    }
+
+    #[test]
+    fn tied_weights_share_one_blob_at_constant_param_bytes() {
+        use crate::models::resnet::tiednet;
+        let w1 = synthetic_weights(&tiednet(1), 7);
+        let w4 = synthetic_weights(&tiednet(4), 7);
+        assert_eq!(w1.param_bytes(), w4.param_bytes(), "depth must not grow params");
+        // Every repeat resolves to the same physical blob.
+        let a = w4.layer("t0c0").unwrap();
+        let b = w4.layer("t3c0").unwrap();
+        assert_eq!(a.w.data, b.w.data);
+        assert_eq!(a.b.data, b.b.data);
+        // And the shared blob is stored once under its key.
+        assert!(w4.layers.contains_key("tie_c0"));
+        assert!(!w4.layers.contains_key("t0c0"));
     }
 }

@@ -25,38 +25,46 @@
 //! asserted against the Python oracle (`unoptimized_ref_forward`) through
 //! the probe artifacts, and locally by `sim::golden` tests.
 
-use crate::graph::{Graph, InputRole, Op};
+use crate::graph::{Graph, InputRole, NodeId, Op};
 
 use super::relu_merge::rewire;
+
+/// Whether `add_id` is a residual merge the fusion pipeline handles: a
+/// two-operand Add whose long branch is a single-consumer conv that does
+/// not already carry a skip input.  Multi-input adds (several skips
+/// converging on one merge) and shared long branches stay explicit naive
+/// Eq. 21 dataflow — the streaming planner uses this same predicate to
+/// accept them outside `naive_add` mode.
+pub fn is_fusable_residual(g: &Graph, add_id: NodeId) -> bool {
+    let n = g.node(add_id);
+    if n.dead || !matches!(n.op, Op::Add { .. }) || n.inputs.len() != 2 {
+        return false;
+    }
+    let long_edge = n.inputs[0].0;
+    let conv1 = long_edge.node;
+    long_edge.port == 0
+        && matches!(g.node(conv1).op, Op::Conv(_))
+        && g.consumers(long_edge).len() == 1
+        && g.node(conv1).inputs.len() == 1
+}
 
 /// Apply the pass; returns the number of Add nodes fused away.
 pub fn add_fusion(g: &mut Graph) -> usize {
     let mut fused = 0;
     let ids: Vec<usize> = g.live().map(|n| n.id).collect();
     for add_id in ids {
+        if !is_fusable_residual(g, add_id) {
+            continue;
+        }
         let (long_edge, skip_edge, add_out_exp) = {
             let n = g.node(add_id);
-            if n.dead {
-                continue;
-            }
             let out_exp = match n.op {
                 Op::Add { out_exp } => out_exp,
                 _ => continue,
             };
             (n.inputs[0].0, n.inputs[1].0, out_exp)
         };
-        // The long-branch producer must be a conv with a single consumer
-        // (the add) so the fusion is safe.
         let conv1 = long_edge.node;
-        if long_edge.port != 0 || !matches!(g.node(conv1).op, Op::Conv(_)) {
-            continue;
-        }
-        if g.consumers(long_edge).len() != 1 {
-            continue;
-        }
-        if g.node(conv1).inputs.len() != 1 {
-            continue; // already carries a skip input
-        }
 
         // Optional trailing ReLU (the paper's blocks always have one).
         let add_consumers = g.consumers(crate::graph::Edge::new(add_id, 0));

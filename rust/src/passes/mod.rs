@@ -27,7 +27,7 @@ mod loop_merge;
 mod relu_merge;
 mod temporal_reuse;
 
-pub use add_fusion::add_fusion;
+pub use add_fusion::{add_fusion, is_fusable_residual};
 pub use bn_fold::{bn_fold, FloatConvParams};
 pub use equivalence::equivalent;
 pub use loop_merge::loop_merge;
@@ -65,7 +65,10 @@ pub fn optimize(g: &mut Graph) -> PassStats {
 mod tests {
     use super::*;
     use crate::graph::infer_shapes;
-    use crate::models::{build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8};
+    use crate::models::{
+        build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8, skipnet,
+        tiednet,
+    };
 
     #[test]
     fn pipeline_reaches_optimized_form_resnet8() {
@@ -94,8 +97,33 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_reaches_optimized_form_on_general_topologies() {
+        // skipnet: the 3-operand merge (identity + long skip to the stem)
+        // must survive as a naive island while its neighbors fuse.
+        let arch = skipnet();
+        let (act, w) = default_exps(&arch);
+        let mut g = build_unoptimized_graph(&arch, &act, &w);
+        let stats = optimize(&mut g);
+        assert_eq!(stats.loops_merged, 1, "r2's projection merges");
+        assert_eq!(stats.reuses, 1, "r0's identity skip forwards");
+        assert_eq!(stats.adds_fused, 2, "r1's multi-input add must NOT fuse");
+        assert_eq!(g.count_kind("add"), 1);
+        let want = build_optimized_graph(&arch, &act, &w);
+        assert!(equivalent(&g, &want), "got:\n{g}\nwant:\n{want}");
+
+        // tiednet: every repeated block is a plain identity residual.
+        let arch = tiednet(4);
+        let (act, w) = default_exps(&arch);
+        let mut g = build_unoptimized_graph(&arch, &act, &w);
+        let stats = optimize(&mut g);
+        assert_eq!((stats.loops_merged, stats.reuses, stats.adds_fused), (0, 4, 4));
+        let want = build_optimized_graph(&arch, &act, &w);
+        assert!(equivalent(&g, &want), "got:\n{g}\nwant:\n{want}");
+    }
+
+    #[test]
     fn pipeline_preserves_output_shape() {
-        for arch in [resnet8(), resnet20()] {
+        for arch in [resnet8(), resnet20(), skipnet(), tiednet(2)] {
             let (act, w) = default_exps(&arch);
             let mut g = build_unoptimized_graph(&arch, &act, &w);
             let before = infer_shapes(&g).unwrap()[&crate::graph::Edge::new(g.output().unwrap(), 0)];

@@ -29,6 +29,12 @@ pub fn temporal_reuse(g: &mut Graph) -> usize {
             if n.dead || !matches!(n.op, Op::Add { .. }) {
                 continue;
             }
+            // Multi-input merges (extra long skips) stay naive: rewiring
+            // just one operand onto conv0's forwarding port would leave a
+            // hybrid the add-fusion pass cannot absorb.
+            if n.inputs.len() != 2 {
+                continue;
+            }
             (n.inputs[0].0, n.inputs[1].0)
         };
         // The long branch input must be a conv (conv1); walk back to conv0.

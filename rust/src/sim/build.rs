@@ -349,11 +349,20 @@ pub fn build_network(g: &Graph, cfg: &AcceleratorConfig, opts: &SimOptions) -> R
             Op::Add { .. } => {
                 let ac = &cfg.adds[&consumer];
                 let s = shapes[edge];
-                // Long branch (input 0) vs skip branch (input 1).
+                // Long branch (input 0) vs skip operands (inputs 1..N),
+                // each sized from its own planned bound.
                 if n.inputs[0].0 == *edge {
                     2 * s.c * 4
                 } else {
-                    ((ac.skip_fifo as f64 * opts.skip_factor) as usize).max(4) + 2 * s.c
+                    let planned = n
+                        .inputs
+                        .iter()
+                        .skip(1)
+                        .position(|(e, _)| e == edge)
+                        .and_then(|i| ac.skips.get(i))
+                        .copied()
+                        .unwrap_or(ac.skip_fifo);
+                    ((planned as f64 * opts.skip_factor) as usize).max(4) + 2 * s.c
                 }
             }
             Op::Relu | Op::GlobalAvgPool { .. } => {
@@ -484,8 +493,10 @@ pub fn build_network(g: &Graph, cfg: &AcceleratorConfig, opts: &SimOptions) -> R
             }
             Op::Add { .. } => {
                 let s = shapes[&Edge::new(n.id, 0)];
-                let long = in_fifo(n.inputs[0].0, n.id)?;
-                let skip = in_fifo(n.inputs[1].0, n.id)?;
+                let mut inputs = Vec::with_capacity(n.inputs.len());
+                for (e, _) in &n.inputs {
+                    inputs.push(in_fifo(*e, n.id)?);
+                }
                 let out = out_fifo(Edge::new(n.id, 0))
                     .ok_or_else(|| anyhow!("{} has no consumer", n.name))?;
                 // Consume at the long branch's production rate.
@@ -496,7 +507,7 @@ pub fn build_network(g: &Graph, cfg: &AcceleratorConfig, opts: &SimOptions) -> R
                     .unwrap_or(1);
                 net.add_task(Box::new(Elementwise {
                     name: n.name.clone(),
-                    inputs: vec![long, skip],
+                    inputs,
                     out,
                     chunk: s.c,
                     total: s.h * s.w * s.c,

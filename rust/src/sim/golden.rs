@@ -90,23 +90,25 @@ pub fn run(g: &Graph, weights: &ModelWeights, input: &QTensor) -> Result<QTensor
                 // sum is widened to i64: a raw int32 accumulator stream
                 // plus a shifted operand can exceed i32 (debug panic,
                 // release wraparound) at large exponent gaps.
-                let a = get(0, &values)?;
-                let b = get(1, &values)?;
-                let lo = a.exp.min(b.exp);
-                let sa = ((a.exp - lo) as u32).min(63);
-                let sb = ((b.exp - lo) as u32).min(63);
-                let data: Vec<i32> = a
-                    .data
-                    .iter()
-                    .zip(&b.data)
-                    .map(|(&x, &y)| {
-                        let s = ((x as i64) << sa) + ((y as i64) << sb);
+                let operands: Vec<QTensor> =
+                    (0..n.inputs.len()).map(|i| get(i, &values)).collect::<Result<_>>()?;
+                let lo = operands.iter().map(|t| t.exp).min().unwrap_or(*out_exp);
+                let shifts: Vec<u32> =
+                    operands.iter().map(|t| ((t.exp - lo) as u32).min(63)).collect();
+                let elems = operands[0].data.len();
+                let data: Vec<i32> = (0..elems)
+                    .map(|j| {
+                        let s: i64 = operands
+                            .iter()
+                            .zip(&shifts)
+                            .map(|(t, &sh)| (t.data[j] as i64) << sh)
+                            .sum();
                         clip_i8_wide(round_shift_i64(s, out_exp - lo))
                     })
                     .collect();
                 values.insert(
                     Edge::new(n.id, 0),
-                    QTensor { shape: a.shape, exp: *out_exp, data },
+                    QTensor { shape: operands[0].shape, exp: *out_exp, data },
                 );
             }
             Op::MaxPool { k, stride } => {
@@ -353,6 +355,7 @@ mod tests {
         ModelWeights {
             arch: "test".into(),
             layers: BTreeMap::new(),
+            aliases: BTreeMap::new(),
             act_exps: BTreeMap::new(),
             w_exps: BTreeMap::new(),
             source: "test".into(),

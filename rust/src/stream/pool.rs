@@ -349,6 +349,7 @@ impl PoolInner {
             retire.clone(),
             self.frames_done.clone(),
             self.blueprint.in_c,
+            self.blueprint.out_tokens,
             &robs,
         )?;
         // The handles live in a cell the supervisor takes on startup: if
@@ -815,6 +816,7 @@ fn spawn_replica(
     retire: Arc<AtomicBool>,
     frames_done: Arc<AtomicUsize>,
     in_c: usize,
+    out_tokens: usize,
     robs: &PipelineObs,
 ) -> Result<Vec<JoinHandle<Result<(), StreamError>>>> {
     let PipelinePlan { stages, sources, sink, .. } = plan;
@@ -841,7 +843,7 @@ fn spawn_replica(
             let frames_done = frames_done.clone();
             let clock = robs.sink.clone();
             let spans = robs.spans.clone();
-            move || sink_loop(&sink, &pending, &frames_done, &clock, &spans)
+            move || sink_loop(&sink, out_tokens, &pending, &frames_done, &clock, &spans)
         })?;
         Ok(())
     })();
@@ -951,9 +953,12 @@ fn feeder_loop(
     }
 }
 
-/// Pop one logits token per frame and answer the frame's responder.
+/// Pop one frame's worth of output tokens (one logits token for a
+/// classifier head, `out_tokens` pixel tokens for a spatial head) and
+/// answer the frame's responder with the concatenated values.
 fn sink_loop(
     sink: &Fifo,
+    out_tokens: usize,
     pending: &Pending,
     frames_done: &AtomicUsize,
     clock: &StageClock,
@@ -963,9 +968,12 @@ fn sink_loop(
         // Deadline-free: the sink legitimately idles while the pool has
         // no traffic (mid-frame stalls surface on the stages' bounded
         // pushes/pops and unblock this pop via the abort flag).
-        let tok = sink.pop_idle()?;
+        let mut tok = sink.pop_idle()?.to_vec();
         if tok.is_empty() {
             return Ok(());
+        }
+        for _ in 1..out_tokens {
+            tok.extend_from_slice(&sink.pop()?);
         }
         // Invariant: the feeder registered a responder before streaming
         // the frame, and this replica completes frames in feed order.  A
@@ -977,7 +985,7 @@ fn sink_loop(
             .ok_or(StreamError::Inconsistent {
                 what: "sink produced a frame with no pending submitter",
             })?;
-        let _ = pf.resp.send(Ok(tok.to_vec()));
+        let _ = pf.resp.send(Ok(tok));
         if obs::enabled() {
             // Replica-local frame index = completed frames so far; the
             // span must be in the ring before frame_done makes it

@@ -317,17 +317,22 @@ pub(crate) struct ReluPlan<P> {
     pub outs: Vec<P>,
 }
 
-/// Explicit residual-merge task (naive dataflow only): pops the long-path
-/// raw accumulator stream and the Eq. 21-buffered skip stream in
-/// lockstep, widens to i64, requantizes — golden's `Op::Add` semantics.
+/// Explicit residual-merge task (naive dataflow, or a non-fusable merge
+/// left as a naive island inside an optimized graph): pops the long-path
+/// raw accumulator stream and every buffered skip stream in lockstep,
+/// widens to i64, requantizes — golden's `Op::Add` semantics for any
+/// operand count.
 pub(crate) struct AddPlan<P> {
     pub name: String,
     pub tokens: usize,
+    /// Long-branch alignment shift (operand 0).
     pub sa: u32,
-    pub sb: u32,
+    /// Per-skip-operand alignment shifts (input ports `1..N`).
+    pub sb: Vec<u32>,
     pub shift: i32,
     pub in_a: P,
-    pub in_b: P,
+    /// Skip operand streams, input ports `1..N` (`len == sb.len()`).
+    pub in_b: Vec<P>,
     pub outs: Vec<P>,
 }
 
@@ -472,10 +477,10 @@ impl StagePlan<usize, BufferSpec> {
                 name: format!("{tag}{}", p.name),
                 tokens: p.tokens,
                 sa: p.sa,
-                sb: p.sb,
+                sb: p.sb.clone(),
                 shift: p.shift,
                 in_a: port(&p.in_a),
-                in_b: port(&p.in_b),
+                in_b: ports(&p.in_b),
                 outs: ports(&p.outs),
             }),
         }
@@ -514,7 +519,11 @@ impl RunStagePlan {
             StagePlan::Gap(p) => (vec![tap(&p.input)], taps(&p.outs)),
             StagePlan::Linear(p) => (vec![tap(&p.input)], taps(&p.outs)),
             StagePlan::Relu(p) => (vec![tap(&p.input)], taps(&p.outs)),
-            StagePlan::Add(p) => (vec![tap(&p.in_a), tap(&p.in_b)], taps(&p.outs)),
+            StagePlan::Add(p) => {
+                let mut ins = vec![tap(&p.in_a)];
+                ins.extend(p.in_b.iter().map(tap));
+                (ins, taps(&p.outs))
+            }
         }
     }
 }
@@ -528,10 +537,15 @@ pub(crate) struct PipelineBlueprint {
     /// Port indices of the network input node's consumer FIFO(s) (the
     /// feeder pushes each pixel to all of them — a tee in naive mode).
     source_ports: Vec<usize>,
-    /// The classifier output stream the sink pops one token per frame.
+    /// The output stream the sink pops `out_tokens` tokens per frame.
     sink_port: usize,
     timeout: Duration,
+    /// Total output values per frame (`c` for a classifier head,
+    /// `h*w*c` for a spatial head).
     pub classes: usize,
+    /// Tokens the sink pops per frame (1 for a classifier/GAP head,
+    /// `h*w` for a spatial head).
+    pub out_tokens: usize,
     pub in_h: usize,
     pub in_w: usize,
     pub in_c: usize,
@@ -605,8 +619,13 @@ pub(crate) fn plan_pipeline(
 
     // Pass 1: one FIFO spec per (consumed edge, consumer) pair — a
     // producer whose edge has several consumers pushes to each (tee).
+    // `edge_outs` accumulates each edge's consumer FIFO ports in the same
+    // pass (consumer order), so pass 2's fan-out lookups are O(1) instead
+    // of a scan over every (edge, consumer) pair per producer port.
     let mut fifo_specs: Vec<BufferSpec> = Vec::new();
     let mut fifo_of: std::collections::BTreeMap<(Edge, usize), usize> =
+        std::collections::BTreeMap::new();
+    let mut edge_outs: std::collections::BTreeMap<Edge, Vec<usize>> =
         std::collections::BTreeMap::new();
     for n in g.live() {
         for (i, (e, role)) in n.inputs.iter().enumerate() {
@@ -634,16 +653,25 @@ pub(crate) fn plan_pipeline(
                     if matches!(producer.op, Op::Input { .. }) {
                         let spec = dma_stream(es.w * es.c);
                         (format!("{}.in", n.name), StreamKind::Dma, spec.capacity())
-                    } else if matches!(n.op, Op::Add { .. }) && i == 1 {
-                        // Naive residual skip: the Eq. 21 receptive-field
-                        // bound from the configuration (paper Fig. 14).
+                    } else if matches!(n.op, Op::Add { .. }) && i >= 1 {
+                        // Naive residual skip: the per-operand bound from
+                        // the configuration — Eq. 21 for block-local skips,
+                        // full-frame for long skips (paper Fig. 14).
                         let bound = acfg
                             .adds
                             .get(&n.id)
-                            .map(|a| a.skip_fifo)
-                            .ok_or_else(|| anyhow!("{}: no Eq. 21 sizing for add", n.name))?;
+                            .and_then(|a| a.skips.get(i - 1))
+                            .copied()
+                            .ok_or_else(|| {
+                                anyhow!("{}: no skip sizing for add operand {i}", n.name)
+                            })?;
                         let cap = cfg.skip_capacity_override.unwrap_or(bound);
-                        (format!("{}.skip", n.name), StreamKind::Skip, cap)
+                        let name = if i == 1 {
+                            format!("{}.skip", n.name)
+                        } else {
+                            format!("{}.skip{i}", n.name)
+                        };
+                        (name, StreamKind::Skip, cap)
                     } else if matches!(producer.op, Op::Conv(_)) {
                         // The producing conv's configured output burst.
                         let lc = acfg
@@ -672,34 +700,29 @@ pub(crate) fn plan_pipeline(
             let idx = fifo_specs.len();
             fifo_specs.push(BufferSpec { name, kind, capacity: cap });
             fifo_of.insert((*e, n.id), idx);
+            edge_outs.entry(*e).or_default().push(idx);
         }
     }
 
-    // The network output: the unique sink node must be the classifier.
+    // The network output: any unique sink node works — a classifier
+    // drains one logits token per frame, a spatial head (conv/relu tail)
+    // drains one token per output pixel (`out_tokens`).
     let out_node = g
         .output()
         .ok_or_else(|| anyhow!("graph has no unique output node"))?;
-    anyhow::ensure!(
-        matches!(g.node(out_node).op, Op::Linear { .. }),
-        "graph has no linear output node"
-    );
     let out_shape = shapes[&Edge::new(out_node, 0)];
-    let classes = out_shape.c;
+    let out_tokens = (out_shape.h * out_shape.w).max(1);
+    let classes = out_shape.h * out_shape.w * out_shape.c;
     let sink_port = fifo_specs.len();
     fifo_specs.push(BufferSpec {
         name: format!("{}.out", g.node(out_node).name),
         kind: StreamKind::Dma,
-        capacity: dma_stream(classes).capacity(),
+        capacity: dma_stream(out_shape.c).capacity().max(out_tokens),
     });
 
-    // All consumer FIFO ports of an output port, in consumer order.
-    let outs_for = |e: Edge| -> Vec<usize> {
-        fifo_of
-            .iter()
-            .filter(|((ee, _), _)| *ee == e)
-            .map(|(_, &i)| i)
-            .collect()
-    };
+    // All consumer FIFO ports of an output port, in consumer order
+    // (precomputed in pass 1 — one map lookup per producer port).
+    let outs_for = |e: Edge| -> Vec<usize> { edge_outs.get(&e).cloned().unwrap_or_default() };
     let outs_for_node = |id: usize| -> Result<Vec<usize>> {
         if id == out_node {
             return Ok(vec![sink_port]);
@@ -721,8 +744,18 @@ pub(crate) fn plan_pipeline(
                 input_spec = Some((*h, *w, *c, *exp));
             }
             Op::Conv(a) => {
+                // A raw int32 accumulator stream is only plannable when
+                // every consumer is an Add stage this plan will also run:
+                // all of them in naive mode, only the non-fusable naive
+                // islands (multi-input / long-skip merges) otherwise.
+                let raw_ok = cfg.naive_add
+                    || !a.raw_output
+                    || g.consumers(Edge::new(n.id, 0)).iter().all(|&c| {
+                        matches!(g.node(c).op, Op::Add { .. })
+                            && !crate::passes::is_fusable_residual(g, c)
+                    });
                 anyhow::ensure!(
-                    cfg.naive_add || !a.raw_output,
+                    raw_ok,
                     "stream backend runs optimized graphs only unless naive_add is set \
                      ({}: raw int32 accumulator streams feed explicit Add nodes)",
                     n.name
@@ -926,10 +959,15 @@ pub(crate) fn plan_pipeline(
                 }));
             }
             Op::Add { out_exp } => {
+                // Fusable residual merges are the optimizer's job — refuse
+                // them outside naive mode so a half-optimized graph cannot
+                // silently run the slow dataflow.  Non-fusable merges
+                // (multi-input or shared long branches) have no fused form
+                // and are planned as naive islands in either mode.
                 anyhow::ensure!(
-                    cfg.naive_add,
+                    cfg.naive_add || !crate::passes::is_fusable_residual(g, n.id),
                     "stream backend runs optimized graphs only unless naive_add is set \
-                     ({} is an add node)",
+                     ({} is a fusable add node)",
                     n.name
                 );
                 let os = shapes[&Edge::new(n.id, 0)];
@@ -944,17 +982,20 @@ pub(crate) fn plan_pipeline(
                     }
                     Ok(shapes[e].exp)
                 };
-                let ea = exp_of(&n.inputs[0].0)?;
-                let eb = exp_of(&n.inputs[1].0)?;
-                let lo = ea.min(eb);
+                let exps: Vec<i32> =
+                    n.inputs.iter().map(|(e, _)| exp_of(e)).collect::<Result<_>>()?;
+                let lo = exps.iter().copied().min().unwrap_or(*out_exp);
                 stages.push(StagePlan::Add(AddPlan {
                     name: n.name.clone(),
                     tokens: os.h * os.w,
-                    sa: ((ea - lo) as u32).min(63),
-                    sb: ((eb - lo) as u32).min(63),
+                    sa: ((exps[0] - lo) as u32).min(63),
+                    sb: exps[1..].iter().map(|&e| ((e - lo) as u32).min(63)).collect(),
                     shift: out_exp - lo,
                     in_a: fifo_of[&(n.inputs[0].0, n.id)],
-                    in_b: fifo_of[&(n.inputs[1].0, n.id)],
+                    in_b: n.inputs[1..]
+                        .iter()
+                        .map(|(e, _)| fifo_of[&(*e, n.id)])
+                        .collect(),
                     outs: outs_for_node(n.id)?,
                 }));
             }
@@ -983,6 +1024,7 @@ pub(crate) fn plan_pipeline(
         sink_port,
         timeout,
         classes,
+        out_tokens,
         in_h,
         in_w,
         in_c,
@@ -2061,8 +2103,10 @@ fn run_add(p: &RunAddPlan, clock: &StageClock) -> Result<(), StreamError> {
         let mut a = match next_frame(&p.in_a)? {
             Some(t) => t,
             None => {
-                let t = p.in_b.pop()?;
-                debug_assert!(t.is_empty(), "skip stream out of frame sync");
+                for f in &p.in_b {
+                    let t = f.pop()?;
+                    debug_assert!(t.is_empty(), "skip stream out of frame sync");
+                }
                 push_eos(&p.outs)?;
                 return Ok(());
             }
@@ -2071,18 +2115,18 @@ fn run_add(p: &RunAddPlan, clock: &StageClock) -> Result<(), StreamError> {
             if i > 0 {
                 a = p.in_a.pop()?;
             }
-            let b = p.in_b.pop()?;
-            // Align at the finer exponent, widen to i64 (a raw int32
-            // accumulator plus a shifted operand can exceed i32), then
-            // requantize — bit-identical to golden's Op::Add.
-            let tok: Box<[i32]> = a
-                .iter()
-                .zip(b.iter())
-                .map(|(&x, &y)| {
-                    let s = ((x as i64) << p.sa) + ((y as i64) << p.sb);
-                    clip_i8_wide(round_shift_i64(s, p.shift))
-                })
-                .collect();
+            // Align every operand at the finest exponent, widen to i64 (a
+            // raw int32 accumulator plus shifted operands can exceed i32),
+            // then requantize once — bit-identical to golden's Op::Add.
+            let mut sum: Vec<i64> = a.iter().map(|&x| (x as i64) << p.sa).collect();
+            for (f, &sb) in p.in_b.iter().zip(&p.sb) {
+                let b = f.pop()?;
+                for (s, &y) in sum.iter_mut().zip(b.iter()) {
+                    *s += (y as i64) << sb;
+                }
+            }
+            let tok: Box<[i32]> =
+                sum.iter().map(|&s| clip_i8_wide(round_shift_i64(s, p.shift))).collect();
             push_all(&p.outs, tok)?;
         }
         clock.frame_done();

@@ -9,8 +9,10 @@ use std::sync::Arc;
 use resnet_hls::coordinator::{BatcherConfig, Router, RouterConfig};
 use resnet_hls::graph::{infer_shapes, Edge, InputRole, Op};
 use resnet_hls::runtime::{
-    BackendFactory, GoldenBackend, GoldenFactory, InferenceBackend, StreamBackend, StreamFactory,
+    BackendFactory, GoldenBackend, GoldenFactory, InferenceBackend, SimBackend, StreamBackend,
+    StreamFactory,
 };
+use resnet_hls::stream::{run_streaming, StreamConfig};
 use resnet_hls::hls::boards::{BOARDS, KV260, ULTRA96};
 use resnet_hls::hls::streams::skip_stream;
 use resnet_hls::hls::window::buffer_size;
@@ -276,7 +278,11 @@ fn stream_backend_bit_exact_with_eq22_buffering() {
                 }
             }
         }
-        assert_eq!(skip_fifos, arch.blocks.len(), "{arch_name}: one skip FIFO per block");
+        assert_eq!(
+            skip_fifos,
+            arch.residuals().count(),
+            "{arch_name}: one skip FIFO per residual segment"
+        );
     }
 }
 
@@ -303,6 +309,130 @@ fn router_serves_on_stream_backend() {
         assert_eq!(resp.class, want);
     }
     router.shutdown();
+}
+
+// ---------------------------- general topologies (skip graphs, weight tying)
+
+#[test]
+fn general_topologies_bit_exact_across_backends() {
+    // The scenario-diversity acceptance: a long-skip/multi-add net and a
+    // weight-tied ODE-style net run through every artifact-free backend
+    // bit-identically — golden (reference), sim (golden numerics paced by
+    // the cycle model, so its construction exercises ILP + resource
+    // closure + the discrete-event network on the new shapes), the
+    // pipelined stream pool, and the naive Eq. 21 dataflow.
+    for arch_name in ["skipnet", "tiednet"] {
+        let golden_b = GoldenBackend::synthetic(arch_name, 7, &[1, 2]).unwrap();
+        let stream_b = StreamBackend::synthetic(arch_name, 7, &[1, 2]).unwrap();
+        let sim_b = SimBackend::synthetic(arch_name, 7, &[1, 2], &KV260).unwrap();
+        let (input, _) = resnet_hls::data::synth_batch(0, 2, resnet_hls::data::TEST_SEED);
+        let want = golden_b.infer_batch(&input).unwrap();
+        assert_eq!(
+            stream_b.infer_batch(&input).unwrap().data,
+            want.data,
+            "{arch_name}: stream vs golden"
+        );
+        assert_eq!(
+            sim_b.infer_batch(&input).unwrap().data,
+            want.data,
+            "{arch_name}: sim vs golden"
+        );
+
+        // Fourth form: the unoptimized graph under the naive Eq. 21
+        // dataflow — multi-input adds as explicit stream stages.
+        let arch = arch_by_name(arch_name).unwrap();
+        let weights = synthetic_weights(&arch, 7);
+        let gn = build_unoptimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let naive = golden::run(&gn, &weights, &input).unwrap();
+        assert_eq!(naive.data, want.data, "{arch_name}: naive graph numerics");
+        let cfg = StreamConfig { naive_add: true, ..StreamConfig::default() };
+        let (got, _) = run_streaming(&gn, &weights, &input, &cfg).unwrap();
+        assert_eq!(got.data, naive.data, "{arch_name}: naive stream vs golden");
+    }
+}
+
+#[test]
+fn general_topologies_full_design_flow() {
+    // The published flow end to end on the non-ResNet shapes: passes
+    // reach the hand-optimized form, the design closes on a board, the
+    // cycle simulator runs deadlock-free, and codegen emits the general
+    // add tasks (one skip FIFO per extra operand).
+    for arch_name in ["skipnet", "tiednet"] {
+        let arch = arch_by_name(arch_name).unwrap();
+        let (act, w) = default_exps(&arch);
+        let mut g = build_unoptimized_graph(&arch, &act, &w);
+        let stats = passes::optimize(&mut g);
+        assert!(stats.adds_fused > 0, "{arch_name}: fusable residuals must fuse");
+        assert!(passes::equivalent(&g, &build_optimized_graph(&arch, &act, &w)));
+
+        let loads = loads_from_arch(&arch, 2);
+        let (alloc, cfg, report) =
+            fit_to_board(&arch.name, &g, &loads, &KV260, 2).expect("design fits");
+        assert!(report.fits(&KV260), "{arch_name}@KV260");
+        assert!(alloc.dsps_used <= KV260.n_par() as u64);
+
+        let mut net =
+            build_network(&g, &cfg, &SimOptions { frames: 2, ..Default::default() }).unwrap();
+        let rep = net.run(2);
+        assert!(!rep.deadlocked, "{arch_name}@KV260 deadlocked");
+
+        let cpp = emit_top(&cfg);
+        assert!(cpp.contains("#pragma HLS dataflow"));
+        if arch_name == "skipnet" {
+            // The 3-operand naive island survives as an add task with a
+            // second, independently sized skip FIFO.
+            assert!(cpp.contains("skipfifo_r1_add_2"), "second skip FIFO declared:\n{cpp}");
+        }
+    }
+}
+
+#[test]
+fn router_serves_mixed_classic_and_general_fleet_on_stream_backend() {
+    // The ISSUE 10 integration scenario: one router serving the classic
+    // ResNet preset alongside both new general-topology architectures,
+    // every arch on the streaming pool, classes bit-equal to sim::golden,
+    // and the per-arch accounting visible in the shutdown snapshot.
+    let seed = 7u64;
+    let counts = [("resnet8", 3usize), ("skipnet", 3), ("tiednet", 2)];
+    let factories: Vec<Arc<dyn BackendFactory>> = counts
+        .iter()
+        .map(|(a, _)| {
+            Arc::new(StreamFactory::synthetic(a, seed).with_buckets(&[1, 2]))
+                as Arc<dyn BackendFactory>
+        })
+        .collect();
+    let router = Router::start(
+        factories,
+        RouterConfig { workers_per_arch: 1, batcher: BatcherConfig::default() },
+    )
+    .unwrap();
+
+    let frame = resnet_hls::data::IMG_ELEMS;
+    let max_frames = counts.iter().map(|&(_, n)| n).max().unwrap();
+    let (input, _) = resnet_hls::data::synth_batch(0, max_frames, resnet_hls::data::TEST_SEED);
+    let mut pending = Vec::new();
+    for i in 0..max_frames {
+        for &(arch, n) in &counts {
+            if i < n {
+                let pixels = input.data[i * frame..(i + 1) * frame].to_vec();
+                pending.push((arch, i, router.submit(arch, pixels).unwrap()));
+            }
+        }
+    }
+
+    let expected: Vec<(&str, Vec<usize>)> =
+        counts.iter().map(|&(a, n)| (a, golden_classes(a, seed, n))).collect();
+    for (arch, i, rx) in pending {
+        let expect = expected.iter().find(|(a, _)| *a == arch).unwrap().1[i];
+        let resp = rx.recv().expect("response channel alive").expect("inference ok");
+        assert_eq!(resp.class, expect, "{arch} frame {i}");
+    }
+
+    let snap = router.shutdown();
+    assert_eq!(snap.total.errors, 0);
+    for &(arch, n) in &counts {
+        assert_eq!(snap.per_arch[arch].frames, n as u64, "{arch} frame count");
+    }
 }
 
 // ------------------------------------------------- serving path (golden)

@@ -1,6 +1,7 @@
 //! Property-based tests over the coordinator and substrate invariants
 //! (seeded deterministic cases via `util::prop::forall`).
 
+use resnet_hls::analysis::{self, AnalysisError};
 use resnet_hls::coordinator::{Batcher, BatcherConfig, Metrics, BOUNDS_US};
 use resnet_hls::data::{synth_batch, TEST_SEED};
 use resnet_hls::graph::{infer_shapes, ConvAttrs, Edge, Graph, InputRole, Op};
@@ -9,7 +10,7 @@ use resnet_hls::models::{arch_by_name, build_optimized_graph, synthetic_weights}
 use resnet_hls::passes;
 use resnet_hls::quant::{clip_i8, requantize, round_shift};
 use resnet_hls::sim::golden;
-use resnet_hls::stream::{run_streaming, StreamConfig};
+use resnet_hls::stream::{planned_config, run_streaming, StreamConfig};
 use resnet_hls::util::prop::forall;
 use resnet_hls::util::Json;
 use resnet_hls::util::Lcg64;
@@ -236,6 +237,7 @@ fn weights_for_graph(g: &Graph, seed: u64) -> resnet_hls::models::ModelWeights {
     resnet_hls::models::ModelWeights {
         arch: "random".into(),
         layers,
+        aliases: BTreeMap::new(),
         act_exps,
         w_exps,
         source: "prop".into(),
@@ -249,7 +251,9 @@ fn stream_executor_bit_identical_to_golden_on_random_models() {
     // The tentpole invariant: the pipelined line-buffer executor produces
     // the exact golden bits for arbitrary synthetic weights and inputs on
     // both paper architectures' optimized graphs.
-    for (arch_name, cases, frames) in [("resnet8", 4u64, 2usize), ("resnet20", 1, 1)] {
+    for (arch_name, cases, frames) in
+        [("resnet8", 4u64, 2usize), ("resnet20", 1, 1), ("skipnet", 2, 1), ("tiednet", 2, 1)]
+    {
         forall(&format!("stream == golden ({arch_name})"), cases, |rng| {
             let arch = arch_by_name(arch_name).unwrap();
             let weights = synthetic_weights(&arch, rng.next_u64());
@@ -302,6 +306,113 @@ fn stream_executor_bounded_wait_instead_of_deadlock() {
         t0.elapsed() < std::time::Duration::from_secs(30),
         "stall detection must be bounded, not a hang"
     );
+}
+
+// ------------------------------------------- general skip DAGs (naive mode)
+
+/// Build a random *valid* skip-connection DAG in its naive dataflow form:
+/// a chain of residual bodies whose merge nodes take 2 or 3 operands, the
+/// third reaching back to a uniformly random earlier same-shape tensor
+/// (a long skip).  Constant spatial size and channel count keep every
+/// earlier tensor shape-compatible with every merge.
+fn random_skip_dag(rng: &mut Lcg64) -> Graph {
+    let mut g = Graph::new();
+    let c = [4usize, 8][rng.below(2) as usize];
+    let h = 16usize;
+    let input = g.add_simple("input", Op::Input { h, w: h, c, exp: -7 }, &[]);
+    let conv = |relu: bool, raw: bool| {
+        Op::Conv(ConvAttrs {
+            cin: c, cout: c, k: 3, stride: 1, pad: 1, relu,
+            w_exp: -8, out_exp: -5, merged_downsample: None, forwards_input: false,
+            raw_output: raw,
+        })
+    };
+    let mut prev = g.add_simple("stem", conv(true, false), &[Edge::new(input, 0)]);
+    // Same-shape tensors a later merge may legally reach back to.
+    let mut history = vec![prev];
+    let blocks = 1 + rng.below(3) as usize;
+    for b in 0..blocks {
+        let c0 = g.add_simple(format!("b{b}c0"), conv(true, false), &[Edge::new(prev, 0)]);
+        let c1 = g.add_simple(format!("b{b}c1"), conv(false, true), &[Edge::new(c0, 0)]);
+        let mut inputs =
+            vec![(Edge::new(c1, 0), InputRole::Data), (Edge::new(prev, 0), InputRole::Data)];
+        if rng.below(2) == 0 {
+            let far = history[rng.below(history.len() as u64) as usize];
+            if far != prev {
+                inputs.push((Edge::new(far, 0), InputRole::Data));
+            }
+        }
+        let add = g.add(format!("b{b}_add"), Op::Add { out_exp: -5 }, inputs);
+        prev = g.add_simple(format!("b{b}_relu"), Op::Relu, &[Edge::new(add, 0)]);
+        history.push(prev);
+    }
+    let pool = g.add_simple("pool", Op::GlobalAvgPool { out_exp: -5 }, &[Edge::new(prev, 0)]);
+    g.add_simple("fc", Op::Linear { cin: c, cout: 10, w_exp: -8 }, &[Edge::new(pool, 0)]);
+    g
+}
+
+#[test]
+fn random_skip_dags_plan_and_preflight_agree() {
+    // The planner/verifier agreement property on arbitrary valid skip
+    // DAGs: a config `preflight` approves really runs — stall-free and
+    // bit-exact vs the golden model — and a config it rejects carries a
+    // typed diagnostic naming a skip edge that actually exists in the
+    // graph, with its minimum safe depth.
+    forall("random skip DAGs: plan/preflight agreement", 10, |rng| {
+        let g = random_skip_dag(rng);
+        g.validate().unwrap();
+        let weights = weights_for_graph(&g, rng.next_u64());
+        let mut cfg = StreamConfig { naive_add: true, ..StreamConfig::default() };
+        if rng.below(3) == 0 {
+            // An always-undersized override (every Eq. 21 / full-frame
+            // bound at h=16 exceeds it) to exercise the flag direction.
+            cfg.skip_capacity_override = Some(8 + rng.below(64) as usize);
+            cfg.progress_timeout = std::time::Duration::from_millis(300);
+        }
+        let acfg = planned_config("random-skip-dag", &g, &cfg).unwrap();
+        match analysis::preflight(&g, &cfg, &acfg) {
+            Ok(()) => {
+                let in_node = g.node(g.find("input").unwrap());
+                let (h, c) = match in_node.op {
+                    Op::Input { h, c, .. } => (h, c),
+                    _ => unreachable!(),
+                };
+                let mut r2 = Lcg64::new(rng.next_u64());
+                let data: Vec<i32> =
+                    (0..h * h * c).map(|_| r2.range_i64(-128, 127) as i32).collect();
+                let input = resnet_hls::quant::QTensor::from_vec(
+                    resnet_hls::quant::Shape4::new(1, h, h, c),
+                    -7,
+                    data,
+                );
+                let want = golden::run(&g, &weights, &input).unwrap();
+                let (got, _) = run_streaming(&g, &weights, &input, &cfg).unwrap();
+                assert_eq!(got.data, want.data, "approved DAG diverged:\n{g}");
+            }
+            Err(e) => {
+                let ae = e
+                    .downcast_ref::<AnalysisError>()
+                    .unwrap_or_else(|| panic!("untyped rejection: {e:#}"));
+                let fifo: Vec<_> =
+                    ae.diagnostics.iter().filter(|d| d.code.starts_with("fifo.")).collect();
+                assert!(!fifo.is_empty(), "rejection without a FIFO finding: {ae}");
+                for d in fifo {
+                    let (node, port) = d
+                        .subject
+                        .rsplit_once('.')
+                        .unwrap_or_else(|| panic!("subject without edge: {}", d.subject));
+                    assert!(
+                        g.find(node).is_some(),
+                        "diagnostic names a nonexistent node {node}:\n{g}"
+                    );
+                    assert!(port.starts_with("skip"), "not a skip edge: {}", d.subject);
+                    if d.code == "fifo.undersized" {
+                        assert!(d.min_safe_depth.is_some(), "{}: no safe depth", d.subject);
+                    }
+                }
+            }
+        }
+    });
 }
 
 // --------------------------------------------------------------- batcher

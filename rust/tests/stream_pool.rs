@@ -20,7 +20,7 @@ use resnet_hls::hls::streams::StreamKind;
 use resnet_hls::hls::window::{skip_buffer_naive, skip_buffer_optimized};
 use resnet_hls::models::{
     arch_by_name, build_optimized_graph, build_unoptimized_graph, synthetic_weights, ArchSpec,
-    BlockSpec, ConvSpec,
+    ConvSpec, ResidualSpec, Segment, SkipSpec,
 };
 use resnet_hls::quant::{QTensor, Shape4};
 use resnet_hls::runtime::{
@@ -205,7 +205,7 @@ fn naive_add_mode_matches_golden_with_eq21_fifos() {
     // One explicit Add skip FIFO per residual block, at exactly the
     // Eq. 21 receptive-field depth the configuration assigns.
     let acfg = planned_config("resnet8", &g, &cfg).unwrap();
-    assert_eq!(acfg.adds.len(), arch.blocks.len());
+    assert_eq!(acfg.adds.len(), arch.residuals().count());
     for a in acfg.adds.values() {
         let buf = stats
             .buffer(&format!("{}.skip", a.name))
@@ -493,36 +493,38 @@ fn odd_arch() -> ArchSpec {
     };
     ArchSpec {
         name: "odd7".into(),
-        stem: conv("stem", 3, 8, 1, true, 7),
-        blocks: vec![
-            BlockSpec {
+        segments: vec![
+            Segment::Conv(conv("stem", 3, 8, 1, true, 7)),
+            Segment::Residual(ResidualSpec {
                 name: "s0b0".into(),
-                conv0: conv("s0b0c0", 8, 8, 1, true, 7),
-                conv1: conv("s0b0c1", 8, 8, 1, true, 7),
-                downsample: None,
-            },
-            BlockSpec {
+                body: vec![conv("s0b0c0", 8, 8, 1, true, 7), conv("s0b0c1", 8, 8, 1, true, 7)],
+                skips: vec![SkipSpec::identity()],
+            }),
+            Segment::Residual(ResidualSpec {
                 name: "s1b0".into(),
-                conv0: conv("s1b0c0", 8, 16, 2, true, 7),
-                conv1: conv("s1b0c1", 16, 16, 1, true, 4),
-                downsample: Some(ConvSpec {
-                    name: "s1b0ds".into(),
-                    cin: 8,
-                    cout: 16,
-                    k: 1,
-                    stride: 2,
-                    pad: 0,
-                    relu: false,
-                    in_h: 7,
-                    in_w: 7,
-                }),
-            },
+                body: vec![conv("s1b0c0", 8, 16, 2, true, 7), conv("s1b0c1", 16, 16, 1, true, 4)],
+                skips: vec![SkipSpec {
+                    from: None,
+                    proj: Some(ConvSpec {
+                        name: "s1b0ds".into(),
+                        cin: 8,
+                        cout: 16,
+                        k: 1,
+                        stride: 2,
+                        pad: 0,
+                        relu: false,
+                        in_h: 7,
+                        in_w: 7,
+                    }),
+                }],
+            }),
         ],
         fc_in: 16,
         fc_out: 10,
         in_h: 7,
         in_w: 7,
         in_c: 3,
+        tied: std::collections::BTreeMap::new(),
     }
 }
 

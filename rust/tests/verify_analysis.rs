@@ -83,6 +83,75 @@ fn stock_configs_are_approved_and_run_bit_exact() {
 }
 
 #[test]
+fn general_topology_stock_configs_verify_and_run() {
+    // ISSUE 10 acceptance: the long-skip/multi-add net and the
+    // weight-tied net go through `repro verify`'s exact call sequence —
+    // planned config, full report — and the approved configs execute
+    // bit-exact, including skipnet's optimized form (which keeps its
+    // 3-operand add as a naive Eq. 21 island).
+    for arch_name in ["skipnet", "tiednet"] {
+        let arch = arch_by_name(arch_name).unwrap();
+        let weights = synthetic_weights(&arch, 7);
+        let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+        let cfg = StreamConfig::default();
+        let acfg = planned_config(arch_name, &g, &cfg).unwrap();
+
+        let report = analysis::verify(&g, Some(&weights), &cfg, &acfg).unwrap();
+        assert!(report.ok(), "{arch_name}: stock config rejected:\n{report}");
+        assert_eq!(report.count(Severity::Error), 0);
+
+        let (input, _) = synth_batch(0, 1, TEST_SEED);
+        let want = golden::run(&g, &weights, &input).unwrap();
+        let (got, _) = run_streaming(&g, &weights, &input, &cfg).unwrap();
+        assert_eq!(got.data, want.data, "{arch_name}: approved config diverged from golden");
+    }
+}
+
+#[test]
+fn undersized_long_skip_is_rejected_with_the_edge_named() {
+    // The long-skip acceptance criterion: skipnet's r1 merge takes a
+    // skip reaching back to the stem, whose sound capacity is the full
+    // 32x32x16 frame (Eq. 21 only bounds block-local skips).  Forcing
+    // every skip FIFO to the block-local Eq. 21 depth starves exactly
+    // that edge; the verifier must name it, with the full-frame bound
+    // as the minimum safe depth, and `plan_pipeline` must refuse the
+    // config with the same typed diagnostic before any thread spawns.
+    let arch = arch_by_name("skipnet").unwrap();
+    let weights = synthetic_weights(&arch, 7);
+    let g = build_unoptimized_graph(&arch, &weights.act_exps, &weights.w_exps);
+    let cfg = StreamConfig {
+        naive_add: true,
+        skip_capacity_override: Some(skip_buffer_naive(3, 3, 32, 16, 3, 3)),
+        progress_timeout: Duration::from_millis(400),
+        ..Default::default()
+    };
+    let acfg = planned_config("skipnet", &g, &cfg).unwrap();
+
+    let report = analysis::verify(&g, Some(&weights), &cfg, &acfg).unwrap();
+    assert!(!report.ok(), "undersized long skip must be rejected:\n{report}");
+    let d = report
+        .find("fifo.undersized", "r1_add.skip2")
+        .expect("the starved long-skip edge must be named exactly");
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.min_safe_depth, Some(32 * 32 * 16), "full-frame bound for a non-local skip");
+    // The block-local operands at the same depth stay approved — the
+    // rejection is per-edge, not per-node.
+    assert!(report.find("fifo.undersized", "r1_add.skip").is_none());
+
+    let (input, _) = synth_batch(0, 1, TEST_SEED);
+    let t0 = Instant::now();
+    let err = run_streaming(&g, &weights, &input, &cfg).unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(5), "rejection must be static, not a stall");
+    let analysis_err = err
+        .downcast_ref::<AnalysisError>()
+        .unwrap_or_else(|| panic!("expected AnalysisError, got: {err:#}"));
+    assert!(
+        analysis_err.diagnostics.iter().any(|d| d.subject == "r1_add.skip2"),
+        "rejection must carry the starved edge: {analysis_err}"
+    );
+}
+
+#[test]
 fn fig14_config_is_flagged_with_edge_name_and_min_safe_depth() {
     let arch = arch_by_name("resnet8").unwrap();
     let weights = synthetic_weights(&arch, 7);
