@@ -29,7 +29,7 @@ use anyhow::Result;
 
 use crate::graph::{infer_shapes, Edge, Graph, InputRole, Op};
 use crate::hls::config::AcceleratorConfig;
-use crate::hls::window::{buffer_size, skip_buffer_naive};
+use crate::hls::window::buffer_size;
 use crate::stream::StreamConfig;
 
 use super::{Diagnostic, Severity};
@@ -93,10 +93,25 @@ pub fn check(
         match &n.op {
             // Fused skip: Eq. 22 — the consumer's own ow_par=1 window span.
             Op::Conv(a) => {
-                if !n.inputs.iter().any(|(_, r)| *r == InputRole::SkipInit) {
+                let sk = n.inputs.iter().find(|(_, r)| *r == InputRole::SkipInit).map(|(e, _)| *e);
+                let Some(sk) = sk else { continue };
+                let subject = format!("{}.skip", n.name);
+                // Eq. 22 is only sound for block-local skew.  A long skip
+                // arriving pre-fused (the optimizer never emits one, but an
+                // imported graph can) has no bounded-skew law at all: reject
+                // it outright rather than bless an Eq. 22 FIFO (Fig. 14).
+                if !crate::hls::config::skip_is_block_local(g, Edge::new(n.id, 0), sk) {
+                    out.push(Diagnostic::new(
+                        Severity::Error,
+                        "fifo.nonlocal-fused-skip",
+                        &subject,
+                        "the fused SkipInit stream consumes a skip that is not \
+                         local to the two-conv branch; Eq. 22 sizing is unsound \
+                         for its skew — this merge must stay a naive Add with a \
+                         full-frame FIFO",
+                    ));
                     continue;
                 }
-                let subject = format!("{}.skip", n.name);
                 let in_shape = match n.inputs.first().and_then(|(e, _)| shapes.get(e)) {
                     Some(s) => *s,
                     None => {
@@ -168,26 +183,16 @@ pub fn check(
                         ));
                         continue;
                     };
-                    // Re-derive the bound from the graph — the same walk
-                    // `hls::config::configure` performs, duplicated here so a
-                    // planner bug cannot hide behind its own numbers.
-                    let local = (|| {
-                        let conv1 = g.nodes.get(n.inputs.first()?.0.node)?;
-                        let Op::Conv(a1) = &conv1.op else { return None };
-                        let conv0_id = conv1.inputs.first()?.0.node;
-                        let conv0 = g.nodes.get(conv0_id)?;
-                        let Op::Conv(a0) = &conv0.op else { return None };
-                        let c0_in_edge = conv0.inputs.first()?.0;
-                        let sibling = sk.port == 0
-                            && matches!(&g.node(sk.node).op, Op::Conv(_))
-                            && g.node(sk.node).inputs.first().map(|(e, _)| *e)
-                                == Some(c0_in_edge);
-                        if *sk != c0_in_edge && *sk != Edge::new(conv0_id, 1) && !sibling {
-                            return None;
-                        }
-                        let c0_in = shapes.get(&c0_in_edge)?;
-                        Some(skip_buffer_naive(a0.k, a0.k, c0_in.w, c0_in.c, a1.k, a1.k))
-                    })();
+                    // Re-derive the bound from the graph rather than trusting
+                    // the planner's stored numbers — via the same shared
+                    // `local_skip_bound` walk `hls::config::configure` uses,
+                    // so the locality predicate cannot drift between the two.
+                    let local = crate::hls::config::local_skip_bound(
+                        g,
+                        &shapes,
+                        n.inputs[0].0,
+                        *sk,
+                    );
                     let (required, law) = match local {
                         Some(r) => (r, "Eq. 21"),
                         None => {
@@ -272,7 +277,7 @@ mod tests {
 
     #[test]
     fn stock_configs_have_no_errors() {
-        for name in ["resnet8", "resnet20", "skipnet", "tiednet"] {
+        for name in ["resnet8", "resnet20", "skipnet", "longskipnet", "tiednet"] {
             let arch = arch_by_name(name).unwrap();
             let (act, w) = default_exps(&arch);
             let g = build_optimized_graph(&arch, &act, &w);
@@ -329,6 +334,70 @@ mod tests {
         assert_eq!(bad.len(), 1, "{diags:?}");
         assert_eq!(bad[0].subject, "r1_add.skip2");
         assert_eq!(bad[0].min_safe_depth, Some(32 * 32 * 16), "full-frame stem tensor");
+    }
+
+    #[test]
+    fn two_operand_long_skip_stays_naive_and_answers_to_full_frame() {
+        // longskipnet's r1 merge has the fusable *shape* (2 operands, one
+        // skip) but its skip is a long skip to the stem: the optimizer must
+        // keep it a naive island, the planner must size it full-frame, and
+        // an Eq. 21-sized override must be rejected naming exactly that
+        // edge — the static gate the fused form would have bypassed.
+        let arch = arch_by_name("longskipnet").unwrap();
+        let (act, w) = default_exps(&arch);
+        let g = build_optimized_graph(&arch, &act, &w);
+        let mut cfg = StreamConfig::default();
+        let acfg = planned_config("longskipnet", &g, &cfg).unwrap();
+
+        let diags = check(&g, &cfg, &acfg).unwrap();
+        assert!(diags.iter().all(|d| d.severity != Severity::Error), "{diags:?}");
+        assert!(
+            diags.iter().any(|d| d.code == "fifo.ok" && d.subject == "r1_add.skip"),
+            "the surviving naive island is individually verified: {diags:?}"
+        );
+
+        cfg.skip_capacity_override = Some(skip_buffer_naive(3, 3, 32, 16, 3, 3));
+        let diags = check(&g, &cfg, &acfg).unwrap();
+        let bad: Vec<_> = diags.iter().filter(|d| d.code == "fifo.undersized").collect();
+        assert_eq!(bad.len(), 1, "{diags:?}");
+        assert_eq!(bad[0].subject, "r1_add.skip");
+        assert_eq!(bad[0].min_safe_depth, Some(32 * 32 * 16), "full-frame stem tensor");
+    }
+
+    #[test]
+    fn pre_fused_long_skip_is_rejected_outright() {
+        // The optimizer never emits a SkipInit on a non-local skip, but an
+        // imported graph can arrive that way.  Eq. 22 has no sound bound
+        // for it, so the verifier must error instead of approving.
+        use crate::graph::{ConvAttrs, Edge, InputRole};
+        let attrs = || ConvAttrs {
+            cin: 8, cout: 8, k: 3, stride: 1, pad: 1, relu: false,
+            w_exp: -8, out_exp: -5, merged_downsample: None,
+            forwards_input: false, raw_output: false,
+        };
+        let mut g = Graph::new();
+        let i = g.add_simple("input", Op::Input { h: 16, w: 16, c: 8, exp: -7 }, &[]);
+        let s = g.add_simple("s", Op::Conv(attrs()), &[Edge::new(i, 0)]);
+        let m = g.add_simple("m", Op::Conv(attrs()), &[Edge::new(s, 0)]);
+        let c0 = g.add_simple("c0", Op::Conv(attrs()), &[Edge::new(m, 0)]);
+        let c1 = g.add(
+            "c1",
+            Op::Conv(attrs()),
+            vec![(Edge::new(c0, 0), InputRole::Data), (Edge::new(s, 0), InputRole::SkipInit)],
+        );
+        let pool = g.add_simple("pool", Op::GlobalAvgPool { out_exp: -5 }, &[Edge::new(c1, 0)]);
+        g.add_simple("fc", Op::Linear { cin: 8, cout: 10, w_exp: -8 }, &[Edge::new(pool, 0)]);
+        g.validate().unwrap();
+
+        let cfg = StreamConfig::default();
+        let acfg = planned_config("prefused", &g, &cfg).unwrap();
+        let diags = check(&g, &cfg, &acfg).unwrap();
+        let d = diags
+            .iter()
+            .find(|d| d.code == "fifo.nonlocal-fused-skip")
+            .expect("nonlocal fused skip must be an error");
+        assert_eq!(d.severity, Severity::Error);
+        assert_eq!(d.subject, "c1.skip");
     }
 
     #[test]

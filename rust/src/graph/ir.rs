@@ -220,6 +220,22 @@ impl Graph {
                     return Err(format!("node {} reads port {} of {}", n.name, e.port, src.name));
                 }
             }
+            // Two operands on the same producer edge would collide in the
+            // streaming planner's per-(edge, consumer) FIFO map: both
+            // operands resolve to one FIFO, which is then popped twice
+            // while a second, never-drained FIFO fills — a guaranteed
+            // runtime stall.  Reject statically; a doubled tensor belongs
+            // upstream (scale it), not as duplicate merge operands.
+            for (i, (ea, _)) in n.inputs.iter().enumerate() {
+                for (eb, _) in &n.inputs[i + 1..] {
+                    if ea == eb {
+                        return Err(format!(
+                            "node {} ({}) reads duplicate input edge {}:{}",
+                            n.name, n.op.kind(), self.nodes[ea.node].name, ea.port
+                        ));
+                    }
+                }
+            }
             let arity = n.inputs.len();
             let ok = match &n.op {
                 Op::Input { .. } => arity == 0,
@@ -334,5 +350,27 @@ mod tests {
         let relu = g.find("relu").unwrap();
         g.node_mut(relu).inputs.clear();
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_duplicate_add_operands() {
+        // An add summing the same edge twice (e.g. an identity skip plus a
+        // long skip that resolves to the immediately preceding segment)
+        // must be rejected statically — the stream planner keys FIFOs by
+        // (edge, consumer), so duplicates would stall at runtime.
+        let mut g = tiny();
+        let conv = g.find("conv").unwrap();
+        let relu = g.find("relu").unwrap();
+        let add = g.add_simple(
+            "add",
+            Op::Add { out_exp: -5 },
+            &[Edge::new(relu, 0), Edge::new(conv, 0), Edge::new(conv, 0)],
+        );
+        let err = g.validate().unwrap_err();
+        assert!(err.contains("duplicate input edge"), "{err}");
+        assert!(err.contains("conv"), "names the duplicated producer: {err}");
+        // De-duplicated, the same merge is fine.
+        g.node_mut(add).inputs.truncate(2);
+        assert!(g.validate().is_ok());
     }
 }

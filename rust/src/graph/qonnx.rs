@@ -320,14 +320,14 @@ fn edge_list(g: &Graph, inputs: &[(Edge, InputRole)]) -> String {
 mod tests {
     use super::*;
     use crate::models::{
-        build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8, skipnet,
-        tiednet,
+        build_optimized_graph, build_unoptimized_graph, default_exps, longskipnet, resnet20,
+        resnet8, skipnet, tiednet,
     };
     use crate::passes::equivalent;
 
     #[test]
     fn roundtrip_both_forms_both_archs() {
-        for arch in [resnet8(), resnet20(), skipnet(), tiednet(3)] {
+        for arch in [resnet8(), resnet20(), skipnet(), longskipnet(), tiednet(3)] {
             let (act, w) = default_exps(&arch);
             for g in [
                 build_unoptimized_graph(&arch, &act, &w),

@@ -288,17 +288,13 @@ pub fn configure(
     })
 }
 
-/// Eq. 21 receptive-field bound for a skip operand that is local to the
-/// add's two-conv long branch, or `None` for anything else (a long skip),
-/// where only the full-frame bound is sound.  "Local" means the operand is
-/// conv0's own input tensor, conv0's forwarding port (temporal reuse), or
-/// the output of a sibling conv reading conv0's input (the downsample).
-fn local_skip_bound(
-    g: &Graph,
-    shapes: &BTreeMap<Edge, TensorShape>,
-    long_edge: Edge,
-    sk: Edge,
-) -> Option<usize> {
+/// Walk the add's two-conv long branch and decide whether skip operand
+/// `sk` is local to it.  "Local" means the operand is conv0's own input
+/// tensor, conv0's forwarding port (temporal reuse), or the output of a
+/// sibling conv reading conv0's input (the downsample).  Returns the
+/// geometry needed for the Eq. 21 bound (conv0's kernel + input edge,
+/// conv1's kernel), or `None` for anything else — a long skip.
+fn block_local_geometry(g: &Graph, long_edge: Edge, sk: Edge) -> Option<(usize, Edge, usize)> {
     let conv1 = g.node(long_edge.node);
     let c1k = match &conv1.op {
         Op::Conv(a) => a.k,
@@ -317,7 +313,31 @@ fn local_skip_bound(
     if sk != c0_in_edge && sk != Edge::new(conv0_id, 1) && !sibling {
         return None;
     }
-    let c0_in = shapes[&c0_in_edge];
+    Some((c0k, c0_in_edge, c1k))
+}
+
+/// Whether skip operand `sk` of a merge whose long branch is `long_edge`
+/// is block-local — the precondition for every bounded-skew skip form:
+/// the Eq. 21 naive bound *and* the Eq. 22 fused `SkipInit` stream.  A
+/// long skip (reaching past the two-conv branch) may hold its first pop
+/// back for the whole frame, so only the full-frame FIFO is sound and
+/// add fusion must not apply.
+pub(crate) fn skip_is_block_local(g: &Graph, long_edge: Edge, sk: Edge) -> bool {
+    block_local_geometry(g, long_edge, sk).is_some()
+}
+
+/// Eq. 21 receptive-field bound for a skip operand that is local to the
+/// add's two-conv long branch, or `None` for anything else (a long skip),
+/// where only the full-frame bound is sound.  Shared by `configure` and
+/// the deadlock verifier so the two derivations cannot drift.
+pub(crate) fn local_skip_bound(
+    g: &Graph,
+    shapes: &BTreeMap<Edge, TensorShape>,
+    long_edge: Edge,
+    sk: Edge,
+) -> Option<usize> {
+    let (c0k, c0_in_edge, c1k) = block_local_geometry(g, long_edge, sk)?;
+    let c0_in = *shapes.get(&c0_in_edge)?;
     Some(skip_buffer_naive(c0k, c0k, c0_in.w, c0_in.c, c1k, c1k))
 }
 

@@ -12,8 +12,8 @@ pub mod resnet;
 mod weights;
 
 pub use resnet::{
-    build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8, skipnet,
-    tiednet, ActExps, ArchSpec, ConvSpec, ResidualSpec, Segment, SkipSpec, WExps,
+    build_optimized_graph, build_unoptimized_graph, default_exps, longskipnet, resnet20, resnet8,
+    skipnet, tiednet, ActExps, ArchSpec, ConvSpec, ResidualSpec, Segment, SkipSpec, WExps,
 };
 pub use weights::{synthetic_weights, ConvWeights, ModelWeights, WeightTensor};
 
@@ -23,6 +23,7 @@ pub fn arch_by_name(name: &str) -> Option<ArchSpec> {
         "resnet8" => Some(resnet8()),
         "resnet20" => Some(resnet20()),
         "skipnet" => Some(skipnet()),
+        "longskipnet" => Some(longskipnet()),
         // Registry default for the weight-tied net; `tiednet(n)` is public
         // for other depths.
         "tiednet" => Some(tiednet(4)),

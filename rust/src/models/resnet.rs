@@ -281,6 +281,42 @@ pub fn skipnet() -> ArchSpec {
     }
 }
 
+/// The minimal 2-operand long-skip topology: an ordinary identity residual
+/// followed by a residual whose *only* skip reaches back to the stem.  The
+/// second merge has exactly the two-operand/single-skip shape the fused
+/// dataflow matches structurally — but the skip is not block-local, so add
+/// fusion must leave it a naive island sized at the full-frame bound
+/// (regression arch for the Eq. 22-vs-long-skip soundness gate).
+pub fn longskipnet() -> ArchSpec {
+    let conv = |name: &str, relu| ConvSpec {
+        name: name.into(), cin: 16, cout: 16, k: 3, stride: 1, pad: 1, relu,
+        in_h: 32, in_w: 32,
+    };
+    let segments = vec![
+        Segment::Conv(cifar_stem()),
+        Segment::Residual(ResidualSpec {
+            name: "r0".into(),
+            body: vec![conv("r0c0", true), conv("r0c1", true)],
+            skips: vec![SkipSpec::identity()],
+        }),
+        Segment::Residual(ResidualSpec {
+            name: "r1".into(),
+            body: vec![conv("r1c0", true), conv("r1c1", true)],
+            skips: vec![SkipSpec { from: Some("stem".into()), proj: None }],
+        }),
+    ];
+    ArchSpec {
+        name: "longskipnet".into(),
+        segments,
+        fc_in: 16,
+        fc_out: 10,
+        in_h: 32,
+        in_w: 32,
+        in_c: 3,
+        tied: BTreeMap::new(),
+    }
+}
+
 /// A weight-tied ODE-style net: one identity residual block instantiated
 /// `n` times, every instance sharing the same two parameter blobs
 /// (`tie_c0` / `tie_c1`).  Depth scales with `n` at constant param bytes.
@@ -554,7 +590,7 @@ mod tests {
 
     #[test]
     fn both_graph_forms_validate_and_shape() {
-        for arch in [resnet8(), resnet20(), skipnet(), tiednet(3)] {
+        for arch in [resnet8(), resnet20(), skipnet(), longskipnet(), tiednet(3)] {
             let (act, w) = default_exps(&arch);
             for g in [
                 build_unoptimized_graph(&arch, &act, &w),

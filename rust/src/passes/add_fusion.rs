@@ -31,10 +31,16 @@ use super::relu_merge::rewire;
 
 /// Whether `add_id` is a residual merge the fusion pipeline handles: a
 /// two-operand Add whose long branch is a single-consumer conv that does
-/// not already carry a skip input.  Multi-input adds (several skips
-/// converging on one merge) and shared long branches stay explicit naive
-/// Eq. 21 dataflow — the streaming planner uses this same predicate to
-/// accept them outside `naive_add` mode.
+/// not already carry a skip input, and whose skip operand is *block-local*
+/// (conv0's input, conv0's forwarding port, or a sibling downsample — the
+/// same predicate `hls::config` uses for the Eq. 21 bound).  Multi-input
+/// adds, shared long branches and long skips (reaching past the two-conv
+/// branch) stay explicit naive dataflow: a fused `SkipInit` stream is
+/// sized by Eq. 22, which is only sound for block-local skew — a long
+/// skip needs the full-frame FIFO and must keep its Add node.  This
+/// mirrors `ResidualSpec::fusable` (`from.is_none()`), and the streaming
+/// planner uses this same predicate to accept naive islands outside
+/// `naive_add` mode.
 pub fn is_fusable_residual(g: &Graph, add_id: NodeId) -> bool {
     let n = g.node(add_id);
     if n.dead || !matches!(n.op, Op::Add { .. }) || n.inputs.len() != 2 {
@@ -46,6 +52,7 @@ pub fn is_fusable_residual(g: &Graph, add_id: NodeId) -> bool {
         && matches!(g.node(conv1).op, Op::Conv(_))
         && g.consumers(long_edge).len() == 1
         && g.node(conv1).inputs.len() == 1
+        && crate::hls::config::skip_is_block_local(g, long_edge, n.inputs[1].0)
 }
 
 /// Apply the pass; returns the number of Add nodes fused away.
@@ -137,6 +144,25 @@ mod tests {
         }
         let pool = g.find("pool").unwrap();
         assert_eq!(g.node(pool).inputs[0].0.node, c1);
+    }
+
+    #[test]
+    fn skips_two_operand_long_skip() {
+        // A 2-operand merge whose single skip reaches past the two-conv
+        // branch (back to the stem's *input*): fusing it would pair an
+        // Eq. 22-sized SkipInit FIFO with full-frame skew — the Fig. 14
+        // deadlock — so the Add must survive as a naive island.
+        let mut g = Graph::new();
+        let i = g.add_simple("in", Op::Input { h: 8, w: 8, c: 4, exp: -7 }, &[]);
+        let stem = g.add_simple("stem", Op::Conv(attrs(4)), &[Edge::new(i, 0)]);
+        let c0 = g.add_simple("c0", Op::Conv(attrs(4)), &[Edge::new(stem, 0)]);
+        let c1 = g.add_simple("c1", Op::Conv(attrs(4)), &[Edge::new(c0, 0)]);
+        let add =
+            g.add_simple("add", Op::Add { out_exp: -4 }, &[Edge::new(c1, 0), Edge::new(i, 0)]);
+        g.add_simple("pool", Op::GlobalAvgPool { out_exp: -5 }, &[Edge::new(add, 0)]);
+        assert!(!is_fusable_residual(&g, add));
+        assert_eq!(add_fusion(&mut g), 0);
+        assert_eq!(g.count_kind("add"), 1);
     }
 
     #[test]

@@ -66,8 +66,8 @@ mod tests {
     use super::*;
     use crate::graph::infer_shapes;
     use crate::models::{
-        build_optimized_graph, build_unoptimized_graph, default_exps, resnet20, resnet8, skipnet,
-        tiednet,
+        build_optimized_graph, build_unoptimized_graph, default_exps, longskipnet, resnet20,
+        resnet8, skipnet, tiednet,
     };
 
     #[test]
@@ -111,6 +111,21 @@ mod tests {
         let want = build_optimized_graph(&arch, &act, &w);
         assert!(equivalent(&g, &want), "got:\n{g}\nwant:\n{want}");
 
+        // longskipnet: r1's merge has the two-operand single-skip *shape*
+        // the fused dataflow matches, but its skip is a long skip back to
+        // the stem — fusing it would pair an Eq. 22 SkipInit FIFO with
+        // full-frame skew, so it must survive as a naive island.
+        let arch = longskipnet();
+        let (act, w) = default_exps(&arch);
+        let mut g = build_unoptimized_graph(&arch, &act, &w);
+        let stats = optimize(&mut g);
+        assert_eq!((stats.loops_merged, stats.reuses, stats.adds_fused), (0, 1, 1));
+        assert_eq!(g.count_kind("add"), 1);
+        let surviving = g.node(g.find("r1_add").expect("r1_add survives"));
+        assert_eq!(surviving.inputs.len(), 2, "2-operand long-skip merge kept naive");
+        let want = build_optimized_graph(&arch, &act, &w);
+        assert!(equivalent(&g, &want), "got:\n{g}\nwant:\n{want}");
+
         // tiednet: every repeated block is a plain identity residual.
         let arch = tiednet(4);
         let (act, w) = default_exps(&arch);
@@ -123,7 +138,7 @@ mod tests {
 
     #[test]
     fn pipeline_preserves_output_shape() {
-        for arch in [resnet8(), resnet20(), skipnet(), tiednet(2)] {
+        for arch in [resnet8(), resnet20(), skipnet(), longskipnet(), tiednet(2)] {
             let (act, w) = default_exps(&arch);
             let mut g = build_unoptimized_graph(&arch, &act, &w);
             let before = infer_shapes(&g).unwrap()[&crate::graph::Edge::new(g.output().unwrap(), 0)];

@@ -321,7 +321,7 @@ fn general_topologies_bit_exact_across_backends() {
     // the cycle model, so its construction exercises ILP + resource
     // closure + the discrete-event network on the new shapes), the
     // pipelined stream pool, and the naive Eq. 21 dataflow.
-    for arch_name in ["skipnet", "tiednet"] {
+    for arch_name in ["skipnet", "longskipnet", "tiednet"] {
         let golden_b = GoldenBackend::synthetic(arch_name, 7, &[1, 2]).unwrap();
         let stream_b = StreamBackend::synthetic(arch_name, 7, &[1, 2]).unwrap();
         let sim_b = SimBackend::synthetic(arch_name, 7, &[1, 2], &KV260).unwrap();
@@ -357,7 +357,7 @@ fn general_topologies_full_design_flow() {
     // reach the hand-optimized form, the design closes on a board, the
     // cycle simulator runs deadlock-free, and codegen emits the general
     // add tasks (one skip FIFO per extra operand).
-    for arch_name in ["skipnet", "tiednet"] {
+    for arch_name in ["skipnet", "longskipnet", "tiednet"] {
         let arch = arch_by_name(arch_name).unwrap();
         let (act, w) = default_exps(&arch);
         let mut g = build_unoptimized_graph(&arch, &act, &w);

@@ -252,7 +252,13 @@ fn stream_executor_bit_identical_to_golden_on_random_models() {
     // the exact golden bits for arbitrary synthetic weights and inputs on
     // both paper architectures' optimized graphs.
     for (arch_name, cases, frames) in
-        [("resnet8", 4u64, 2usize), ("resnet20", 1, 1), ("skipnet", 2, 1), ("tiednet", 2, 1)]
+        [
+            ("resnet8", 4u64, 2usize),
+            ("resnet20", 1, 1),
+            ("skipnet", 2, 1),
+            ("longskipnet", 2, 1),
+            ("tiednet", 2, 1),
+        ]
     {
         forall(&format!("stream == golden ({arch_name})"), cases, |rng| {
             let arch = arch_by_name(arch_name).unwrap();
@@ -310,11 +316,14 @@ fn stream_executor_bounded_wait_instead_of_deadlock() {
 
 // ------------------------------------------- general skip DAGs (naive mode)
 
-/// Build a random *valid* skip-connection DAG in its naive dataflow form:
-/// a chain of residual bodies whose merge nodes take 2 or 3 operands, the
-/// third reaching back to a uniformly random earlier same-shape tensor
-/// (a long skip).  Constant spatial size and channel count keep every
-/// earlier tensor shape-compatible with every merge.
+/// Build a random skip-connection DAG in its naive dataflow form: a chain
+/// of residual bodies whose merge nodes take 2 or 3 operands, the third
+/// reaching back to a uniformly random earlier same-shape tensor (a long
+/// skip).  Constant spatial size and channel count keep every earlier
+/// tensor shape-compatible with every merge.  The long skip may land on
+/// the immediately preceding segment — duplicating the identity operand's
+/// edge — which `Graph::validate` must reject statically (the planner's
+/// per-(edge, consumer) FIFO map cannot express it).
 fn random_skip_dag(rng: &mut Lcg64) -> Graph {
     let mut g = Graph::new();
     let c = [4usize, 8][rng.below(2) as usize];
@@ -338,9 +347,7 @@ fn random_skip_dag(rng: &mut Lcg64) -> Graph {
             vec![(Edge::new(c1, 0), InputRole::Data), (Edge::new(prev, 0), InputRole::Data)];
         if rng.below(2) == 0 {
             let far = history[rng.below(history.len() as u64) as usize];
-            if far != prev {
-                inputs.push((Edge::new(far, 0), InputRole::Data));
-            }
+            inputs.push((Edge::new(far, 0), InputRole::Data));
         }
         let add = g.add(format!("b{b}_add"), Op::Add { out_exp: -5 }, inputs);
         prev = g.add_simple(format!("b{b}_relu"), Op::Relu, &[Edge::new(add, 0)]);
@@ -360,7 +367,13 @@ fn random_skip_dags_plan_and_preflight_agree() {
     // graph, with its minimum safe depth.
     forall("random skip DAGs: plan/preflight agreement", 10, |rng| {
         let g = random_skip_dag(rng);
-        g.validate().unwrap();
+        if let Err(e) = g.validate() {
+            // The only invalid shape the generator produces: a long skip
+            // that drew the identity operand's own edge.  Validation must
+            // reject it by name instead of letting the planner stall.
+            assert!(e.contains("duplicate input edge"), "unexpected invalid DAG: {e}\n{g}");
+            return;
+        }
         let weights = weights_for_graph(&g, rng.next_u64());
         let mut cfg = StreamConfig { naive_add: true, ..StreamConfig::default() };
         if rng.below(3) == 0 {

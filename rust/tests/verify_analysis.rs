@@ -88,8 +88,10 @@ fn general_topology_stock_configs_verify_and_run() {
     // weight-tied net go through `repro verify`'s exact call sequence —
     // planned config, full report — and the approved configs execute
     // bit-exact, including skipnet's optimized form (which keeps its
-    // 3-operand add as a naive Eq. 21 island).
-    for arch_name in ["skipnet", "tiednet"] {
+    // 3-operand add as a naive Eq. 21 island) and longskipnet's
+    // 2-operand long-skip merge (naive island at the full-frame bound —
+    // the shape add fusion must refuse).
+    for arch_name in ["skipnet", "longskipnet", "tiednet"] {
         let arch = arch_by_name(arch_name).unwrap();
         let weights = synthetic_weights(&arch, 7);
         let g = build_optimized_graph(&arch, &weights.act_exps, &weights.w_exps);
